@@ -1,0 +1,35 @@
+//! Figure 8, live: run the same optimization under the three feedback
+//! configurations and watch the trajectories separate.
+//!
+//! Run: `cargo run --release --example feedback_ablation [bench] [runs]`
+
+use mapperopt::apps;
+use mapperopt::coordinator::{Coordinator, SearchAlgo};
+use mapperopt::feedback::FeedbackConfig;
+use mapperopt::machine::MachineSpec;
+use mapperopt::mapping::expert_dsl;
+use mapperopt::util::stats;
+
+fn main() {
+    let bench = std::env::args().nth(1).unwrap_or_else(|| "circuit".into());
+    let runs: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(5);
+    let app = apps::by_name(&bench).unwrap_or_else(|| {
+        eprintln!("unknown benchmark '{bench}'");
+        std::process::exit(2);
+    });
+    let coord = Coordinator::new(MachineSpec::p100_cluster());
+    let expert = coord.throughput(&app, expert_dsl(&bench).unwrap());
+    println!("{bench}: expert = {expert:.1} ({runs} runs x 10 iters per config)\n");
+
+    for cfg in [FeedbackConfig::SYSTEM, FeedbackConfig::EXPLAIN, FeedbackConfig::FULL] {
+        let rs = coord.run_many(&bench, SearchAlgo::Trace, cfg, 0xF168u64, runs, 10);
+        let trajs: Vec<Vec<f64>> = rs.iter().map(|r| r.trajectory()).collect();
+        let mean: Vec<f64> = stats::mean_trajectory(&trajs)
+            .into_iter()
+            .map(|x| x / expert)
+            .collect();
+        let series: Vec<String> = mean.iter().map(|x| format!("{x:.2}")).collect();
+        println!("{:24} {}", cfg.label(), series.join(" "));
+    }
+    println!("\nexpected ordering (paper Fig. 8): System <= +Explain <= +Explain+Suggest");
+}

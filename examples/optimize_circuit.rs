@@ -1,0 +1,65 @@
+//! Figure 1, live: the agent starts from a poor mapping (everything on
+//! CPU / system memory), receives performance feedback, moves compute to
+//! the GPU, and finally tunes the ghost-region placement — reproducing the
+//! paper's motivating walkthrough on the circuit benchmark.
+//!
+//! Run: `cargo run --release --example optimize_circuit [seed]`
+
+use mapperopt::apps;
+use mapperopt::coordinator::Coordinator;
+use mapperopt::feedback::{enhance, FeedbackConfig, SystemFeedback};
+use mapperopt::machine::MachineSpec;
+use mapperopt::mapping::expert_dsl;
+use mapperopt::optimizer::{AgentGenome, AppInfo, MockLlm};
+use mapperopt::machine::{MemKind, ProcKind};
+use mapperopt::util::rng::Rng;
+
+fn main() {
+    let seed = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1u64);
+    let app = apps::circuit(apps::CircuitConfig::default());
+    let spec = MachineSpec::p100_cluster();
+    let coord = Coordinator::new(spec);
+    let info = AppInfo::from_app(&app);
+    let expert = coord.throughput(&app, expert_dsl("circuit").unwrap());
+    println!("expert mapper: {expert:.1} steps/s (normalized 1.00)\n");
+
+    // Stage 0 (Figure 1 left): all tasks on CPU, data in system memory
+    let mut genome = AgentGenome::sane_default(&info);
+    for procs in genome.task_procs.values_mut() {
+        *procs = vec![ProcKind::Cpu];
+    }
+
+    let llm = MockLlm::default();
+    let mut rng = Rng::new(seed);
+    let mut best: f64 = 0.0;
+    for iter in 1..=12 {
+        let dsl = genome.render();
+        let sys: SystemFeedback = coord.evaluate(&app, &dsl);
+        let fb = enhance(&sys, FeedbackConfig::FULL);
+        let score = sys.score();
+        best = best.max(score);
+        let gpu_tasks = genome
+            .task_procs
+            .values()
+            .filter(|p| p.first() == Some(&ProcKind::Gpu))
+            .count();
+        let zc_regions = genome
+            .region_mems
+            .values()
+            .filter(|m| **m == MemKind::ZcMem)
+            .count();
+        println!(
+            "iter {iter:2}: norm {:.2} (best {:.2}) | {gpu_tasks}/3 tasks on GPU, \
+             {zc_regions} regions in ZCMEM\n         {}",
+            score / expert,
+            best / expert,
+            fb.text().replace('\n', "\n         ")
+        );
+        llm.update(&mut genome, &info, &fb.text(), &mut rng);
+    }
+    println!(
+        "\nfinal best {:.2}x the expert mapper{}",
+        best / expert,
+        if best > expert { " — beat the expert, as in the paper" } else { "" }
+    );
+}

@@ -1,0 +1,48 @@
+//! Section 5.3, live: optimize the index mapping of a parallel matmul
+//! algorithm.  Shows, per iteration, the mapping function the agent chose
+//! and the achieved GFLOPS, ending with the paper-style expert comparison.
+//!
+//! Run: `cargo run --release --example optimize_matmul [algorithm] [seed]`
+//! Algorithms: cannon summa pumma johnson solomonik cosma
+
+use mapperopt::apps::{self, Algorithm, MatmulConfig};
+use mapperopt::coordinator::{Coordinator, SearchAlgo};
+use mapperopt::feedback::FeedbackConfig;
+use mapperopt::machine::MachineSpec;
+use mapperopt::mapping::expert_dsl;
+
+fn main() {
+    let algo_name = std::env::args().nth(1).unwrap_or_else(|| "cannon".into());
+    let seed = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(3u64);
+    let Some(algo) = Algorithm::parse(&algo_name) else {
+        eprintln!("unknown algorithm '{algo_name}'");
+        std::process::exit(2);
+    };
+    let app = apps::matmul(algo, MatmulConfig::default());
+    let coord = Coordinator::new(MachineSpec::p100_cluster());
+    let expert = coord.throughput(&app, expert_dsl(algo.name()).unwrap());
+    println!(
+        "{}: N=8192 on 2 nodes x 4 P100; expert mapper {expert:.0} GFLOPS\n",
+        algo.name()
+    );
+
+    let run = coord.run_optimizer(&app, SearchAlgo::Trace, FeedbackConfig::FULL, seed, 10);
+    for r in &run.records {
+        // show which IndexTaskMap the candidate used
+        let map_line = r
+            .dsl
+            .lines()
+            .find(|l| l.starts_with("IndexTaskMap dgemm"))
+            .unwrap_or("IndexTaskMap <none>");
+        println!(
+            "iter {:2}: {:8.0} GFLOPS (best {:8.0})  {map_line}",
+            r.iter, r.score, r.best_so_far
+        );
+    }
+    if let Some((dsl, score)) = run.best {
+        println!(
+            "\nbest found: {score:.0} GFLOPS = {:.2}x expert\n--- best mapper ---\n{dsl}",
+            score / expert
+        );
+    }
+}

@@ -1,0 +1,74 @@
+"""AOT compile path: lower every L2 entry point to HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly.  Lowered with return_tuple=True so the rust side unwraps with
+`to_tuple()`.
+
+Run via `make artifacts`:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Also writes artifacts/manifest.txt:
+    <name> <n_outputs> <in_spec>[,<in_spec>...]     in_spec = dtype:dxd...
+so the rust loader can sanity-check argument shapes without parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_str(s) -> str:
+    dims = "x".join(str(d) for d in s.shape) if s.shape else "scalar"
+    return f"{s.dtype}:{dims}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = list(model.ENTRY_POINTS)
+    if args.only:
+        names = [n for n in names if n in set(args.only.split(","))]
+
+    manifest_lines = []
+    for name in names:
+        fn, spec_fn = model.ENTRY_POINTS[name]
+        spec = spec_fn()
+        lowered = jax.jit(fn).lower(*spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        n_out = len(fn(*[jax.numpy.zeros(s.shape, s.dtype) for s in spec]))
+        manifest_lines.append(
+            f"{name} {n_out} {','.join(spec_str(s) for s in spec)}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest for {len(names)} entry points")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Pallas kernels (L1) + pure-jnp oracle (ref)."""
+
+from . import circuit, hydro, matmul, ref, stencil  # noqa: F401

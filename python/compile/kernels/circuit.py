@@ -1,0 +1,83 @@
+"""L1: circuit-simulation Pallas kernels (Legion circuit benchmark tasks).
+
+The three Legion tasks — calculate_new_currents (CNC), distribute_charge
+(DC), update_voltages (UV) — over a dense-array graph encoding: node state
+vectors [n], wire state vectors [w], wire endpoints as int32 index vectors.
+
+Hardware adaptation: the gather (CNC) and scatter-add (DC) are irregular on
+any backend; on TPU the gathers lower to dynamic-slice batches, so the
+Pallas kernels keep the *regular* arithmetic in VMEM-tiled kernels and let
+XLA's gather/scatter handle the indirection at L2 — the same split the
+Legion GPU implementation uses (CUB gather + elementwise kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cnc_kernel(dv_ref, ind_ref, res_ref, cur_ref, o_ref, *, dt):
+    """i' = i + dt/L * (dV - R*i) — the regular part of CNC."""
+    o_ref[...] = cur_ref[...] + (dt / ind_ref[...]) * (
+        dv_ref[...] - res_ref[...] * cur_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("dt",))
+def calculate_new_currents(
+    voltage: jnp.ndarray,
+    wire_in: jnp.ndarray,
+    wire_out: jnp.ndarray,
+    inductance: jnp.ndarray,
+    resistance: jnp.ndarray,
+    current: jnp.ndarray,
+    dt: float = 1e-6,
+) -> jnp.ndarray:
+    dv = voltage[wire_in] - voltage[wire_out]       # L2 gather
+    (w,) = current.shape
+    return pl.pallas_call(
+        functools.partial(_cnc_kernel, dt=dt),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.float32),
+        interpret=True,
+    )(dv, inductance, resistance, current)
+
+
+@functools.partial(jax.jit, static_argnames=("dt",))
+def distribute_charge(
+    charge: jnp.ndarray,
+    wire_in: jnp.ndarray,
+    wire_out: jnp.ndarray,
+    current: jnp.ndarray,
+    dt: float = 1e-6,
+) -> jnp.ndarray:
+    """Scatter-add of +-dt*i onto wire endpoints (pure L2: scatter)."""
+    dq = dt * current
+    charge = charge.at[wire_in].add(-dq)
+    return charge.at[wire_out].add(dq)
+
+
+def _uv_kernel(v_ref, q_ref, c_ref, l_ref, vo_ref, qo_ref):
+    vo_ref[...] = (v_ref[...] + q_ref[...] / c_ref[...]) * (1.0 - l_ref[...])
+    qo_ref[...] = jnp.zeros_like(q_ref[...])
+
+
+@jax.jit
+def update_voltages(
+    voltage: jnp.ndarray,
+    charge: jnp.ndarray,
+    capacitance: jnp.ndarray,
+    leakage: jnp.ndarray,
+):
+    (n,) = voltage.shape
+    return pl.pallas_call(
+        _uv_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=True,
+    )(voltage, charge, capacitance, leakage)

@@ -1,0 +1,47 @@
+"""L1: pennant-like hydro zone-update Pallas kernel.
+
+Simplified Lagrangian staggered-grid step (polytropic gas): per-zone
+density / internal-energy / pressure update under a prescribed volume
+change.  Stands in for Pennant's calcrho/calcwork/calceos zone kernels;
+purely elementwise, so the Pallas kernel is a single VMEM-tiled VPU sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hydro_kernel(rho_ref, e_ref, vol_ref, dvol_ref,
+                  rho_o, e_o, p_o, *, gamma):
+    rho = rho_ref[...]
+    e = e_ref[...]
+    vol = vol_ref[...]
+    dvol = dvol_ref[...]
+    p = (gamma - 1.0) * rho * e
+    new_vol = vol + dvol
+    new_rho = rho * vol / new_vol
+    new_e = e - p * dvol / (rho * vol)
+    rho_o[...] = new_rho
+    e_o[...] = new_e
+    p_o[...] = (gamma - 1.0) * new_rho * new_e
+
+
+@functools.partial(jax.jit, static_argnames=("gamma",))
+def hydro_zone_update(
+    rho: jnp.ndarray,
+    e: jnp.ndarray,
+    vol: jnp.ndarray,
+    dvol: jnp.ndarray,
+    gamma: float = 5.0 / 3.0,
+):
+    (z,) = rho.shape
+    shp = jax.ShapeDtypeStruct((z,), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_hydro_kernel, gamma=gamma),
+        out_shape=(shp, shp, shp),
+        interpret=True,
+    )(rho, e, vol, dvol)

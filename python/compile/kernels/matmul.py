@@ -1,0 +1,116 @@
+"""L1: blocked-GEMM Pallas kernel — the compute hot-spot of the matmul apps.
+
+Hardware adaptation (paper targets P100 CUDA; we think TPU/Pallas):
+the CUDA version would stage A/B tiles through shared memory with a
+threadblock per C tile.  Here BlockSpec expresses the same HBM->VMEM
+schedule declaratively: the grid is (m/bm, n/bn, k/bk); each grid step
+holds an (bm, bk) A tile, a (bk, bn) B tile and the (bm, bn) C
+accumulator in VMEM, and the MXU-shaped `jnp.dot` accumulates over the
+k axis of the grid.  Block sizes default to MXU-friendly 128 multiples
+for the (estimated) TPU configuration; tests/AOT use smaller blocks so
+interpret-mode stays fast.
+
+interpret=True is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Grid point (i, j, k): o[i,j] (+)= a[i,k] @ b[k,j].
+
+    The k axis is the innermost ("arbitrary"-order) grid dimension, so the
+    accumulator tile stays resident in VMEM across the whole k sweep — the
+    Pallas analogue of the CUDA register-tile accumulation loop.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jnp.ndarray:
+    """Blocked C = A @ B with (bm, bn, bk) VMEM tiles.
+
+    Shapes must tile exactly: m % bm == n % bn == k % bk == 0 (the
+    distributed algorithms always hand us exact tiles).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) does not tile by ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _matmul_acc_kernel(a_ref, b_ref, c_ref, o_ref):
+    o_ref[...] = c_ref[...] + jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@jax.jit
+def matmul_acc(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Single-tile C + A @ B — the leaf-task body the rust runtime executes.
+
+    One distributed-matmul index task == one call of this kernel on the
+    (bm, bk) x (bk, bn) tiles that the mapper routed to its processor.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    return pl.pallas_call(
+        _matmul_acc_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b, c)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step (A tile + B tile + C accumulator).
+
+    Used by the §Perf pass: must stay under ~16 MiB/core on TPU.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU work that is 128-aligned (model for §Perf).
+
+    The 128x128 systolic array pads each dim up to a multiple of 128; the
+    useful fraction is prod(dim / ceil128(dim)).
+    """
+    def frac(d: int) -> float:
+        padded = -(-d // 128) * 128
+        return d / padded
+
+    return frac(bm) * frac(bn) * frac(bk)

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the *definition of correctness* for the matching
+kernel in matmul.py / stencil.py / circuit.py / hydro.py.  The pytest suite
+(and the hypothesis sweeps) assert `assert_allclose(kernel(...), ref(...))`.
+
+These are also the L2 building blocks for the paper's leaf tasks:
+
+  * tile GEMM with accumulation  — the inner step of every distributed
+    matmul algorithm (Cannon / SUMMA / PUMMA / Johnson / Solomonik / COSMA):
+    each index-task owns a (bm, bn) tile of C and repeatedly accumulates
+    A_tile @ B_tile contributions routed to it by the mapping.
+  * 2D star stencil              — the PRK Stencil benchmark's task body.
+  * circuit CNC / DC / UV        — the three Legion circuit-simulation
+    tasks (calculate_new_currents, distribute_charge, update_voltages).
+  * pennant hydro zone update    — simplified Lagrangian staggered-grid
+    polytropic-gas step standing in for Pennant's zone kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# tile GEMM
+# ---------------------------------------------------------------------------
+
+def matmul_acc(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """C += A @ B for one (bm, bk) x (bk, bn) tile pair."""
+    return c + jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Full GEMM oracle used to check the blocked Pallas kernel end to end."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# PRK-style 2D star stencil (radius 1, 5 points)
+# ---------------------------------------------------------------------------
+
+def stencil2d(grid: jnp.ndarray, wc: float = 0.5, wn: float = 0.125) -> jnp.ndarray:
+    """One update of the interior; boundary rows/cols pass through."""
+    c = grid[1:-1, 1:-1]
+    n = grid[:-2, 1:-1]
+    s = grid[2:, 1:-1]
+    w = grid[1:-1, :-2]
+    e = grid[1:-1, 2:]
+    interior = wc * c + wn * (n + s + w + e)
+    return grid.at[1:-1, 1:-1].set(interior)
+
+
+# ---------------------------------------------------------------------------
+# circuit simulation (dense-graph form of the Legion circuit benchmark)
+# ---------------------------------------------------------------------------
+# Nodes carry voltage/charge/capacitance/leakage; wires carry (inductance,
+# resistance) and connect in_node -> out_node.  The three tasks:
+
+def calculate_new_currents(
+    voltage: jnp.ndarray,       # [n]
+    wire_in: jnp.ndarray,       # [w] int32 node index
+    wire_out: jnp.ndarray,      # [w] int32 node index
+    inductance: jnp.ndarray,    # [w]
+    resistance: jnp.ndarray,    # [w]
+    current: jnp.ndarray,       # [w] previous current
+    dt: float = 1e-6,
+) -> jnp.ndarray:
+    """RL-wire current update: i' = i + dt/L * (dV - R*i)."""
+    dv = voltage[wire_in] - voltage[wire_out]
+    return current + (dt / inductance) * (dv - resistance * current)
+
+
+def distribute_charge(
+    charge: jnp.ndarray,        # [n]
+    wire_in: jnp.ndarray,       # [w]
+    wire_out: jnp.ndarray,      # [w]
+    current: jnp.ndarray,       # [w]
+    dt: float = 1e-6,
+) -> jnp.ndarray:
+    """Scatter-add +-dt*i onto the endpoints of every wire."""
+    dq = dt * current
+    charge = charge.at[wire_in].add(-dq)
+    charge = charge.at[wire_out].add(dq)
+    return charge
+
+
+def update_voltages(
+    voltage: jnp.ndarray,       # [n]
+    charge: jnp.ndarray,        # [n]
+    capacitance: jnp.ndarray,   # [n]
+    leakage: jnp.ndarray,       # [n]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """v' = (v + q/C) * (1 - leakage); charge resets to zero."""
+    v = (voltage + charge / capacitance) * (1.0 - leakage)
+    return v, jnp.zeros_like(charge)
+
+
+# ---------------------------------------------------------------------------
+# pennant-like hydro zone update (polytropic gas, gamma-law EOS)
+# ---------------------------------------------------------------------------
+
+def hydro_zone_update(
+    rho: jnp.ndarray,           # [z] zone density
+    e: jnp.ndarray,             # [z] zone specific internal energy
+    vol: jnp.ndarray,           # [z] zone volume
+    dvol: jnp.ndarray,          # [z] volume change this step
+    gamma: float = 5.0 / 3.0,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Return (rho', e', p') after a compressible volume change.
+
+    Mass conservation: rho' = rho * vol / vol'.
+    PdV work:          e'   = e - p * dvol / (rho * vol)     (per unit mass)
+    EOS:               p'   = (gamma - 1) * rho' * e'
+    """
+    new_vol = vol + dvol
+    p = (gamma - 1.0) * rho * e
+    new_rho = rho * vol / new_vol
+    new_e = e - p * dvol / (rho * vol)
+    new_p = (gamma - 1.0) * new_rho * new_e
+    return new_rho, new_e, new_p

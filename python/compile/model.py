@@ -1,0 +1,128 @@
+"""L2: the leaf-task compute graphs, built on the L1 Pallas kernels.
+
+Each entry point below is one *task body* in the paper's task-based
+programming model: the rust coordinator (L3) decides *where* a task runs
+and *where its data lives* (the mapper's job); the task body itself — the
+thing that actually touches floats — is a jax function that calls into the
+Pallas kernels and is AOT-lowered by aot.py into artifacts/*.hlo.txt for
+the rust PJRT runtime to execute.
+
+AOT instance sizes are deliberately small (interpret-mode Pallas runs on
+CPU-numpy speeds); the rust side treats the artifact's shapes as the task's
+tile size and scales the *timing* via the machine cost model, while the
+*numerics* flow through these graphs unmodified.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import circuit, hydro, matmul, stencil
+
+# ---------------------------------------------------------------------------
+# AOT instance sizes (kept in sync with rust/src/runtime/artifacts.rs)
+# ---------------------------------------------------------------------------
+
+GEMM_TILE = 64          # (64, 64) C tile; bm = bn = bk = 32 blocking
+GEMM_BLOCK = 32
+STENCIL_ROWS = 34       # 32-row interior + 2 halo rows
+STENCIL_COLS = 34
+CIRCUIT_NODES = 64
+CIRCUIT_WIRES = 128
+HYDRO_ZONES = 128
+
+
+# ---- distributed matmul leaf: one C-tile accumulation step -----------------
+
+def gemm_tile_step(a, b, c):
+    """C_tile += A_tile @ B_tile (blocked Pallas GEMM inside)."""
+    prod = matmul.matmul(a, b, bm=GEMM_BLOCK, bn=GEMM_BLOCK, bk=GEMM_BLOCK)
+    return (c + prod,)
+
+
+def gemm_tile_step_spec():
+    t = jax.ShapeDtypeStruct((GEMM_TILE, GEMM_TILE), jnp.float32)
+    return (t, t, t)
+
+
+# ---- stencil leaf: one slab sweep ------------------------------------------
+
+def stencil_step(grid):
+    return (stencil.stencil2d(grid, block_rows=STENCIL_ROWS - 2),)
+
+
+def stencil_step_spec():
+    return (jax.ShapeDtypeStruct((STENCIL_ROWS, STENCIL_COLS), jnp.float32),)
+
+
+# ---- circuit leaves: the three Legion circuit tasks -------------------------
+
+def circuit_cnc(voltage, wire_in, wire_out, inductance, resistance, current):
+    return (
+        circuit.calculate_new_currents(
+            voltage, wire_in, wire_out, inductance, resistance, current
+        ),
+    )
+
+
+def circuit_cnc_spec():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((CIRCUIT_NODES,), f32),
+        jax.ShapeDtypeStruct((CIRCUIT_WIRES,), jnp.int32),
+        jax.ShapeDtypeStruct((CIRCUIT_WIRES,), jnp.int32),
+        jax.ShapeDtypeStruct((CIRCUIT_WIRES,), f32),
+        jax.ShapeDtypeStruct((CIRCUIT_WIRES,), f32),
+        jax.ShapeDtypeStruct((CIRCUIT_WIRES,), f32),
+    )
+
+
+def circuit_dc(charge, wire_in, wire_out, current):
+    return (circuit.distribute_charge(charge, wire_in, wire_out, current),)
+
+
+def circuit_dc_spec():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((CIRCUIT_NODES,), f32),
+        jax.ShapeDtypeStruct((CIRCUIT_WIRES,), jnp.int32),
+        jax.ShapeDtypeStruct((CIRCUIT_WIRES,), jnp.int32),
+        jax.ShapeDtypeStruct((CIRCUIT_WIRES,), f32),
+    )
+
+
+def circuit_uv(voltage, charge, capacitance, leakage):
+    v, q = circuit.update_voltages(voltage, charge, capacitance, leakage)
+    return (v, q)
+
+
+def circuit_uv_spec():
+    f32 = jnp.float32
+    n = jax.ShapeDtypeStruct((CIRCUIT_NODES,), f32)
+    return (n, n, n, n)
+
+
+# ---- pennant leaf: hydro zone update ----------------------------------------
+
+def pennant_hydro(rho, e, vol, dvol):
+    return hydro.hydro_zone_update(rho, e, vol, dvol)
+
+
+def pennant_hydro_spec():
+    z = jax.ShapeDtypeStruct((HYDRO_ZONES,), jnp.float32)
+    return (z, z, z, z)
+
+
+# ---------------------------------------------------------------------------
+# Registry consumed by aot.py — name -> (fn, spec_fn)
+# ---------------------------------------------------------------------------
+
+ENTRY_POINTS = {
+    "gemm_tile_step": (gemm_tile_step, gemm_tile_step_spec),
+    "stencil_step": (stencil_step, stencil_step_spec),
+    "circuit_cnc": (circuit_cnc, circuit_cnc_spec),
+    "circuit_dc": (circuit_dc, circuit_dc_spec),
+    "circuit_uv": (circuit_uv, circuit_uv_spec),
+    "pennant_hydro": (pennant_hydro, pennant_hydro_spec),
+}

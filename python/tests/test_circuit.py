@@ -1,0 +1,91 @@
+"""Circuit kernels (CNC / DC / UV) vs pure-jnp oracle + physics invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import circuit, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_circuit(seed, n=64, w=128):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 8)
+    voltage = jax.random.normal(ks[0], (n,), dtype=jnp.float32)
+    charge = jax.random.normal(ks[1], (n,), dtype=jnp.float32) * 0.1
+    cap = jax.random.uniform(ks[2], (n,), dtype=jnp.float32, minval=0.5, maxval=2.0)
+    leak = jax.random.uniform(ks[3], (n,), dtype=jnp.float32, minval=0.0, maxval=0.1)
+    wire_in = jax.random.randint(ks[4], (w,), 0, n, dtype=jnp.int32)
+    wire_out = (wire_in + 1 + jax.random.randint(ks[5], (w,), 0, n - 1, dtype=jnp.int32)) % n
+    ind = jax.random.uniform(ks[6], (w,), dtype=jnp.float32, minval=1e-4, maxval=1e-3)
+    res = jax.random.uniform(ks[7], (w,), dtype=jnp.float32, minval=0.1, maxval=10.0)
+    current = jnp.zeros((w,), jnp.float32)
+    return voltage, charge, cap, leak, wire_in, wire_out, ind, res, current
+
+
+def test_cnc_matches_ref():
+    v, q, c, l, wi, wo, ind, res, cur = make_circuit(0)
+    got = circuit.calculate_new_currents(v, wi, wo, ind, res, cur)
+    want = ref.calculate_new_currents(v, wi, wo, ind, res, cur)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_dc_matches_ref():
+    v, q, c, l, wi, wo, ind, res, cur = make_circuit(1)
+    cur = circuit.calculate_new_currents(v, wi, wo, ind, res, cur)
+    got = circuit.distribute_charge(q, wi, wo, cur)
+    want = ref.distribute_charge(q, wi, wo, cur)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_uv_matches_ref():
+    v, q, c, l, *_ = make_circuit(2)
+    gv, gq = circuit.update_voltages(v, q, c, l)
+    wv, wq = ref.update_voltages(v, q, c, l)
+    np.testing.assert_allclose(gv, wv, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(gq, wq)
+
+
+def test_dc_conserves_total_charge():
+    # distribute_charge only moves charge between endpoints
+    v, q, c, l, wi, wo, ind, res, cur = make_circuit(3)
+    cur = cur + 1.0  # nonzero currents
+    q2 = circuit.distribute_charge(q, wi, wo, cur)
+    np.testing.assert_allclose(jnp.sum(q2), jnp.sum(q), rtol=1e-4, atol=1e-4)
+
+
+def test_cnc_zero_dv_decays_current():
+    # equal endpoint voltages: |i'| < |i| for dt*R/L < 2
+    n, w = 16, 32
+    v = jnp.ones((n,), jnp.float32)
+    wi = jnp.arange(w, dtype=jnp.int32) % n
+    wo = (wi + 3) % n
+    ind = jnp.full((w,), 1e-4, jnp.float32)
+    res = jnp.full((w,), 5.0, jnp.float32)
+    cur = jnp.ones((w,), jnp.float32)
+    out = circuit.calculate_new_currents(v, wi, wo, ind, res, cur)
+    assert bool(jnp.all(jnp.abs(out) < jnp.abs(cur)))
+
+
+def test_uv_resets_charge():
+    v, q, c, l, *_ = make_circuit(4)
+    _, q2 = circuit.update_voltages(v, q, c, l)
+    np.testing.assert_array_equal(np.asarray(q2), 0.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 4))
+def test_full_timestep_loop_matches_ref(seed, steps):
+    v, q, c, l, wi, wo, ind, res, cur = make_circuit(seed, n=32, w=64)
+    rv, rq, rcur = v, q, cur
+    for _ in range(steps):
+        cur = circuit.calculate_new_currents(v, wi, wo, ind, res, cur)
+        q = circuit.distribute_charge(q, wi, wo, cur)
+        v, q = circuit.update_voltages(v, q, c, l)
+        rcur = ref.calculate_new_currents(rv, wi, wo, ind, res, rcur)
+        rq = ref.distribute_charge(rq, wi, wo, rcur)
+        rv, rq = ref.update_voltages(rv, rq, c, l)
+    np.testing.assert_allclose(v, rv, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(cur, rcur, rtol=1e-4, atol=1e-5)

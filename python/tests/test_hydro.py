@@ -1,0 +1,62 @@
+"""Pennant-like hydro kernel vs oracle + physical invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hydro, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_state(seed, z=128):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    rho = jax.random.uniform(ks[0], (z,), dtype=jnp.float32, minval=0.5, maxval=2.0)
+    e = jax.random.uniform(ks[1], (z,), dtype=jnp.float32, minval=0.5, maxval=2.0)
+    vol = jax.random.uniform(ks[2], (z,), dtype=jnp.float32, minval=1.0, maxval=2.0)
+    dvol = jax.random.uniform(ks[3], (z,), dtype=jnp.float32, minval=-0.05, maxval=0.05)
+    return rho, e, vol, dvol
+
+
+def test_hydro_matches_ref():
+    rho, e, vol, dvol = make_state(0)
+    got = hydro.hydro_zone_update(rho, e, vol, dvol)
+    want = ref.hydro_zone_update(rho, e, vol, dvol)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+
+def test_hydro_mass_conservation():
+    rho, e, vol, dvol = make_state(1)
+    new_rho, _, _ = hydro.hydro_zone_update(rho, e, vol, dvol)
+    np.testing.assert_allclose(new_rho * (vol + dvol), rho * vol, rtol=1e-5)
+
+
+def test_hydro_compression_heats():
+    # dvol < 0 (compression) must raise both density and internal energy
+    rho, e, vol, _ = make_state(2)
+    dvol = jnp.full_like(vol, -0.05)
+    new_rho, new_e, _ = hydro.hydro_zone_update(rho, e, vol, dvol)
+    assert bool(jnp.all(new_rho > rho))
+    assert bool(jnp.all(new_e > e))
+
+
+def test_hydro_no_volume_change_is_identity():
+    rho, e, vol, _ = make_state(3)
+    dvol = jnp.zeros_like(vol)
+    new_rho, new_e, new_p = hydro.hydro_zone_update(rho, e, vol, dvol)
+    np.testing.assert_allclose(new_rho, rho, rtol=1e-6)
+    np.testing.assert_allclose(new_e, e, rtol=1e-6)
+    np.testing.assert_allclose(new_p, (5.0 / 3.0 - 1.0) * rho * e, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), z=st.sampled_from([8, 64, 256]))
+def test_hydro_hypothesis_sweep(seed, z):
+    rho, e, vol, dvol = make_state(seed, z=z)
+    got = hydro.hydro_zone_update(rho, e, vol, dvol)
+    want = ref.hydro_zone_update(rho, e, vol, dvol)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)

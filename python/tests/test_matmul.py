@@ -1,0 +1,96 @@
+"""Pallas blocked GEMM vs pure-jnp oracle (the core L1 correctness signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "m,n,k,bm,bn,bk",
+    [
+        (32, 32, 32, 32, 32, 32),      # single block
+        (64, 64, 64, 32, 32, 32),      # 2x2x2 grid
+        (64, 32, 96, 32, 32, 32),      # rectangular, k-sweep of 3
+        (128, 64, 32, 64, 32, 32),     # wide blocks
+        (32, 64, 64, 16, 16, 16),      # small blocks, deep grid
+    ],
+)
+def test_matmul_blocked_matches_ref(m, n, k, bm, bn, bk):
+    a = rand(0, m, k)
+    b = rand(1, k, n)
+    got = matmul.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_acc_matches_ref():
+    a = rand(2, 48, 24)
+    b = rand(3, 24, 40)
+    c = rand(4, 48, 40)
+    got = matmul.matmul_acc(a, b, c)
+    want = ref.matmul_acc(a, b, c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_non_tiling_shapes():
+    a = rand(5, 33, 32)
+    b = rand(6, 32, 32)
+    with pytest.raises(AssertionError):
+        matmul.matmul(a, b, bm=32, bn=32, bk=32)
+
+
+def test_matmul_identity():
+    a = rand(7, 32, 32)
+    eye = jnp.eye(32, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        matmul.matmul(a, eye, bm=16, bn=16, bk=16), a, rtol=1e-6, atol=1e-6
+    )
+
+
+def test_matmul_zero():
+    a = rand(8, 32, 64)
+    z = jnp.zeros((64, 32), jnp.float32)
+    np.testing.assert_allclose(matmul.matmul(a, z, bm=16, bn=16, bk=16), 0.0)
+
+
+# hypothesis sweep: shapes/dtypes and block factors, always exact-tiling
+@settings(max_examples=20, deadline=None)
+@given(
+    mi=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    ki=st.integers(1, 3),
+    blk=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_sweep(mi, ni, ki, blk, seed):
+    m, n, k = mi * blk, ni * blk, ki * blk
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.uniform(k1, (m, k), dtype=jnp.float32, minval=-2, maxval=2)
+    b = jax.random.uniform(k2, (k, n), dtype=jnp.float32, minval=-2, maxval=2)
+    got = matmul.matmul(a, b, bm=blk, bn=blk, bk=blk)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_accounting():
+    # (128,128,128) f32 blocking: 3 tiles * 64 KiB = 192 KiB
+    assert matmul.vmem_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+    assert matmul.vmem_bytes(128, 128, 128) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_model():
+    assert matmul.mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert matmul.mxu_utilization_estimate(64, 128, 128) == 0.5
+    # padding 130 -> 256
+    est = matmul.mxu_utilization_estimate(130, 128, 128)
+    assert abs(est - 130 / 256) < 1e-9

@@ -1,0 +1,78 @@
+"""Pallas stencil kernel vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stencil
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def grid_of(seed, m, n):
+    return jax.random.normal(jax.random.PRNGKey(seed), (m, n), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "m,n,br",
+    [
+        (34, 34, 32),
+        (34, 18, 16),
+        (66, 34, 32),
+        (18, 66, 8),
+        (10, 10, 4),
+    ],
+)
+def test_stencil_matches_ref(m, n, br):
+    g = grid_of(0, m, n)
+    got = stencil.stencil2d(g, block_rows=br)
+    want = ref.stencil2d(g)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_stencil_boundary_passthrough():
+    g = grid_of(1, 18, 18)
+    out = stencil.stencil2d(g, block_rows=16)
+    np.testing.assert_array_equal(out[0, :], g[0, :])
+    np.testing.assert_array_equal(out[-1, :], g[-1, :])
+    np.testing.assert_array_equal(out[:, 0], g[:, 0])
+    np.testing.assert_array_equal(out[:, -1], g[:, -1])
+
+
+def test_stencil_constant_field_is_fixed_point():
+    # wc + 4*wn = 1.0, so a constant field is invariant
+    g = jnp.full((18, 18), 3.25, jnp.float32)
+    out = stencil.stencil2d(g, block_rows=16)
+    np.testing.assert_allclose(out, g, rtol=1e-6)
+
+
+def test_stencil_rejects_bad_blocking():
+    g = grid_of(2, 35, 34)   # 33 interior rows, not divisible by 16
+    with pytest.raises(AssertionError):
+        stencil.stencil2d(g, block_rows=16)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(1, 3),
+    br=st.sampled_from([4, 8]),
+    n=st.integers(6, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stencil_hypothesis_sweep(blocks, br, n, seed):
+    m = blocks * br + 2
+    g = grid_of(seed, m, n)
+    got = stencil.stencil2d(g, block_rows=br)
+    np.testing.assert_allclose(got, ref.stencil2d(g), rtol=1e-4, atol=1e-5)
+
+
+def test_iterated_sweeps_converge_toward_interior_smoothing():
+    # repeated application damps high-frequency noise: interior variance falls
+    g = grid_of(3, 34, 34)
+    v0 = float(jnp.var(g[1:-1, 1:-1]))
+    for _ in range(10):
+        g = stencil.stencil2d(g, block_rows=32)
+    v1 = float(jnp.var(g[1:-1, 1:-1]))
+    assert v1 < v0

@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Figure 6 at full parameters (10 iters x 5 runs,
+//! 10 random mappers) and report the wall-clock of the whole campaign.
+use mapperopt::coordinator::Coordinator;
+use mapperopt::harness::{fig6, ExpParams};
+use mapperopt::machine::MachineSpec;
+use mapperopt::util::benchkit::time_once;
+
+fn main() {
+    let coord = Coordinator::new(MachineSpec::p100_cluster());
+    let results = time_once("fig6 (3 apps x (trace+opro) x 5 runs x 10 iters)", || {
+        fig6(&coord, ExpParams::default())
+    });
+    for r in &results {
+        println!(
+            "  {:8} expert=1.00 random={:.2} trace-best={:.2}",
+            r.bench, r.random_norm, r.trace_best_norm
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Figure 7 at full parameters.
+use mapperopt::coordinator::Coordinator;
+use mapperopt::harness::{fig7, ExpParams};
+use mapperopt::machine::MachineSpec;
+use mapperopt::util::benchkit::time_once;
+
+fn main() {
+    let coord = Coordinator::new(MachineSpec::p100_cluster());
+    let results = time_once("fig7 (6 algos x (trace+opro) x 5 runs x 10 iters)", || {
+        fig7(&coord, ExpParams::default())
+    });
+    for r in &results {
+        println!(
+            "  {:10} expert=1.00 random={:.2} trace-best={:.2}",
+            r.bench, r.random_norm, r.trace_best_norm
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Figure 8 (feedback ablation) at full parameters.
+use mapperopt::coordinator::Coordinator;
+use mapperopt::harness::{fig8, ExpParams};
+use mapperopt::machine::MachineSpec;
+use mapperopt::util::benchkit::time_once;
+
+fn main() {
+    let coord = Coordinator::new(MachineSpec::p100_cluster());
+    let results = time_once("fig8 (3 benches x 3 configs x 5 runs x 10 iters)", || {
+        fig8(&coord, ExpParams::default())
+    });
+    for r in &results {
+        println!("  {:8} {:24} final={:.2}", r.bench, r.config, r.final_norm);
+    }
+}

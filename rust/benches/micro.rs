@@ -1,0 +1,68 @@
+//! Microbenchmarks over the hot paths the §Perf pass optimizes:
+//! DSL lexing/parsing/compilation, mapping-function evaluation,
+//! processor-space resolution, the simulator's end-to-end step loop,
+//! agent rendering, and the coordinator's cached evaluation path.
+use mapperopt::apps;
+use mapperopt::coordinator::Coordinator;
+use mapperopt::dsl::{self, MappingPolicy, TaskCtx};
+use mapperopt::machine::{MachineSpec, ProcKind, ProcSpace};
+use mapperopt::mapping::expert_dsl;
+use mapperopt::optimizer::{AgentGenome, AppInfo};
+use mapperopt::sim::Executor;
+use mapperopt::util::benchkit::bench;
+use mapperopt::util::rng::Rng;
+
+fn main() {
+    let spec = MachineSpec::p100_cluster();
+    let circuit_dsl = expert_dsl("circuit").unwrap();
+    let cannon_dsl = expert_dsl("cannon").unwrap();
+
+    bench("dsl::parse (circuit expert)", 2000, || {
+        std::hint::black_box(dsl::parse(circuit_dsl).unwrap());
+    });
+    bench("dsl::compile (circuit expert)", 2000, || {
+        std::hint::black_box(MappingPolicy::compile(circuit_dsl, &spec).unwrap());
+    });
+
+    let policy = MappingPolicy::compile(cannon_dsl, &spec).unwrap();
+    let ctx = TaskCtx { ipoint: vec![2, 3], ispace: vec![4, 4], parent_proc: None };
+    bench("policy::select_processor (map func eval)", 5000, || {
+        std::hint::black_box(
+            policy
+                .select_processor("dgemm", &ctx, &[ProcKind::Gpu], &spec)
+                .unwrap(),
+        );
+    });
+
+    let space = ProcSpace::machine(&spec, ProcKind::Gpu)
+        .split(1, 2)
+        .unwrap()
+        .merge(0, 1)
+        .unwrap();
+    bench("procspace::resolve (split+merge chain)", 5000, || {
+        std::hint::black_box(space.resolve(&[3, 1]).unwrap());
+    });
+
+    let app = apps::by_name("circuit").unwrap();
+    let cpolicy = MappingPolicy::compile(circuit_dsl, &spec).unwrap();
+    let ex = Executor::new(&spec);
+    bench("sim::execute (circuit, 10 steps)", 200, || {
+        std::hint::black_box(ex.execute(&app, &cpolicy).unwrap());
+    });
+    let mm = apps::by_name("cannon").unwrap();
+    let mpolicy = MappingPolicy::compile(cannon_dsl, &spec).unwrap();
+    bench("sim::execute (cannon, 4 steps)", 200, || {
+        std::hint::black_box(ex.execute(&mm, &mpolicy).unwrap());
+    });
+
+    let info = AppInfo::from_app(&app);
+    let genome = AgentGenome::random(&info, &mut Rng::new(1));
+    bench("agent::render", 5000, || {
+        std::hint::black_box(genome.render());
+    });
+
+    let coord = Coordinator::new(spec.clone());
+    bench("coordinator::evaluate (cache hit path)", 2000, || {
+        std::hint::black_box(coord.evaluate(&app, circuit_dsl));
+    });
+}

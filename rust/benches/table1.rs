@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Table 1 (mapper LoC) and time the DSL compiler
+//! over all nine expert mappers.
+use mapperopt::dsl::MappingPolicy;
+use mapperopt::harness;
+use mapperopt::machine::MachineSpec;
+use mapperopt::mapping::all_experts;
+use mapperopt::util::benchkit::{bench, time_once};
+
+fn main() {
+    time_once("table1 (full regeneration)", harness::table1);
+    let spec = MachineSpec::p100_cluster();
+    bench("compile all 9 expert mappers", 50, || {
+        for (_, dsl) in all_experts() {
+            std::hint::black_box(MappingPolicy::compile(dsl, &spec).unwrap());
+        }
+    });
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Table 3 (strategy -> code generation) and time
+//! the generation + compile + check pipeline.
+use mapperopt::harness::strategies::{generate_dsl, judge_dsl, strategies, table3};
+use mapperopt::machine::MachineSpec;
+use mapperopt::util::benchkit::{bench, time_once};
+
+fn main() {
+    let spec = MachineSpec::p100_cluster();
+    time_once("table3 (full regeneration)", || table3(&spec));
+    let strats = strategies();
+    bench("generate+compile+check all 10 strategies", 50, || {
+        for s in &strats {
+            let src = generate_dsl(s);
+            std::hint::black_box(judge_dsl(s, &src, &spec));
+        }
+    });
+}

@@ -1,0 +1,195 @@
+//! Circuit simulation benchmark (Bauer et al. 2012): currents and voltages
+//! over an unstructured circuit graph, partitioned into pieces with
+//! private / shared node collections — the Legion benchmark whose expert
+//! mapper the paper's search beats by 1.34x via ZCMEM->FBMEM flips on the
+//! shared/ghost collections.
+//!
+//! Ghosting: each piece's `rp_ghost` argument is a *view* of the
+//! neighbouring piece's `rp_shared` tile (RegionReq alias).  The expert
+//! mapper places both in ZCMEM — node-shared host memory, so the exchange
+//! costs nothing but every access crawls over PCIe.  The better mapper the
+//! paper's search finds puts them in FBMEM: fast access, paid for with an
+//! explicit inter-GPU copy whenever the neighbour's shared tile changed.
+//!
+//! Tasks (one launch point per piece, every step):
+//!   calculate_new_currents (CNC): wire sweep reading node voltages
+//!       (private + shared + ghost), updating wire currents.
+//!   distribute_charge (DC): scatter charge from wires onto private +
+//!       shared + ghost nodes (reductions on the shared collections).
+//!   update_voltages (UV): node sweep refreshing voltages; rewrites the
+//!       shared tiles, invalidating the neighbours' ghost copies.
+
+use super::taskgraph::{Access, App, Launch, Metric, RegionDecl, RegionReq, TaskDecl};
+use crate::machine::ProcKind;
+
+/// Problem scale; default reproduces the paper-shaped workload.
+#[derive(Debug, Clone, Copy)]
+pub struct CircuitConfig {
+    pub pieces: i64,
+    /// Wires per piece.
+    pub wires: u64,
+    /// Private nodes per piece.
+    pub private_nodes: u64,
+    /// Shared nodes per piece (ghosted to the neighbour).
+    pub shared_nodes: u64,
+    pub steps: usize,
+}
+
+impl Default for CircuitConfig {
+    fn default() -> Self {
+        // 8 pieces (one per GPU on the 2x4 P100 machine); wire-dominated.
+        CircuitConfig {
+            pieces: 8,
+            wires: 2 << 20,
+            private_nodes: 1 << 18,
+            shared_nodes: 1 << 13,
+            steps: 10,
+        }
+    }
+}
+
+pub const WIRES: usize = 0;
+pub const PRIVATE: usize = 1;
+pub const SHARED: usize = 2;
+
+pub fn circuit(cfg: CircuitConfig) -> App {
+    let f = 4u64;
+    let wire_fields = 8; // endpoints, inductance, resistance, current, ...
+    let node_fields = 4; // voltage, charge, capacitance, leakage
+
+    let regions = vec![
+        RegionDecl {
+            name: "rp_wires".into(),
+            tile_bytes: cfg.wires * f * wire_fields as u64,
+            fields: wire_fields,
+            tiles: vec![cfg.pieces],
+        },
+        RegionDecl {
+            name: "rp_private".into(),
+            tile_bytes: cfg.private_nodes * f * node_fields as u64,
+            fields: node_fields,
+            tiles: vec![cfg.pieces],
+        },
+        RegionDecl {
+            name: "rp_shared".into(),
+            tile_bytes: cfg.shared_nodes * f * node_fields as u64,
+            fields: node_fields,
+            tiles: vec![cfg.pieces],
+        },
+    ];
+
+    let all = vec![ProcKind::Gpu, ProcKind::Omp, ProcKind::Cpu];
+    let tasks = vec![
+        TaskDecl {
+            name: "calculate_new_currents".into(),
+            variants: all.clone(),
+            flops_per_point: cfg.wires as f64 * 12.0,
+            artifact: Some("circuit_cnc"),
+            layout_reqs: vec![],
+        },
+        TaskDecl {
+            name: "distribute_charge".into(),
+            variants: all.clone(),
+            flops_per_point: cfg.wires as f64 * 4.0,
+            artifact: Some("circuit_dc"),
+            layout_reqs: vec![],
+        },
+        TaskDecl {
+            name: "update_voltages".into(),
+            variants: all,
+            flops_per_point: (cfg.private_nodes + cfg.shared_nodes) as f64 * 4.0,
+            artifact: Some("circuit_uv"),
+            layout_reqs: vec![],
+        },
+    ];
+
+    let pieces = cfg.pieces;
+
+    App::new(
+        "circuit",
+        tasks,
+        regions,
+        cfg.steps,
+        Metric::StepsPerSecond,
+        move |_step| {
+            let ghost = move |p: &[i64]| vec![(p[0] + 1) % pieces];
+            vec![
+                // CNC: wires streamed once; node voltages read with fan-out
+                // (each shared/ghost node feeds many boundary wires).
+                Launch {
+                    task: 0,
+                    ispace: vec![pieces],
+                    regions: vec![
+                        RegionReq::own(WIRES, Access::ReadWrite, 1.0),
+                        RegionReq::own(PRIVATE, Access::Read, 1.0),
+                        RegionReq::own(SHARED, Access::Read, 2.0),
+                        RegionReq::new(SHARED, Access::Read, 2.0, ghost)
+                            .aliased("rp_ghost"),
+                    ],
+                },
+                // DC: charge scatter; reductions on the shared collections
+                Launch {
+                    task: 1,
+                    ispace: vec![pieces],
+                    regions: vec![
+                        RegionReq::own(WIRES, Access::Read, 0.5),
+                        RegionReq::own(PRIVATE, Access::ReadWrite, 1.0),
+                        RegionReq::own(SHARED, Access::Reduce, 2.0),
+                        RegionReq::new(SHARED, Access::Reduce, 2.0, ghost)
+                            .aliased("rp_ghost"),
+                    ],
+                },
+                // UV: node sweep; rewriting shared invalidates ghosts
+                Launch {
+                    task: 2,
+                    ispace: vec![pieces],
+                    regions: vec![
+                        RegionReq::own(PRIVATE, Access::ReadWrite, 1.0),
+                        RegionReq::own(SHARED, Access::Write, 1.0),
+                    ],
+                },
+            ]
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper_description() {
+        let app = circuit(CircuitConfig::default());
+        assert_eq!(app.tasks.len(), 3);
+        assert_eq!(app.regions.len(), 3);
+        let launches = app.launches(0);
+        assert_eq!(launches.len(), 3);
+        assert_eq!(app.data_arguments(), 10);
+    }
+
+    #[test]
+    fn ghost_aliases_neighbour_shared() {
+        let app = circuit(CircuitConfig::default());
+        let launches = app.launches(0);
+        let ghost = &launches[0].regions[3];
+        assert_eq!(ghost.region, SHARED);
+        assert_eq!(ghost.alias.as_deref(), Some("rp_ghost"));
+        assert_eq!((ghost.tile_of)(&[7]), vec![0]); // wraps around
+        assert_eq!((ghost.tile_of)(&[2]), vec![3]);
+    }
+
+    #[test]
+    fn wires_dominate_bytes() {
+        let app = circuit(CircuitConfig::default());
+        assert!(app.regions[WIRES].tile_bytes > 20 * app.regions[SHARED].tile_bytes);
+    }
+
+    #[test]
+    fn mapped_names_distinguish_views() {
+        let app = circuit(CircuitConfig::default());
+        let launches = app.launches(0);
+        let cnc = &launches[0];
+        assert_eq!(cnc.regions[2].mapped_name(&app.regions), "rp_shared");
+        assert_eq!(cnc.regions[3].mapped_name(&app.regions), "rp_ghost");
+    }
+}

@@ -1,0 +1,436 @@
+//! The six distributed matrix-multiplication algorithms of Section 5.3:
+//! Cannon's, SUMMA, PUMMA, Johnson's 3D, Solomonik's 2.5D, and COSMA.
+//!
+//! All compute C = A @ B for N x N f32 matrices, but decompose the
+//! iteration space differently — which makes *index mapping* (which GPU
+//! runs which tile-task) the performance-critical mapper decision: it
+//! determines how many A/B tiles each GPU must fetch from remote
+//! framebuffers across the algorithm's steps.
+//!
+//! Tile requirements per algorithm (grid p=4 for 2D, q=2 for 3D, N=8192):
+//!   Cannon  step s, task (i,j):  A(i, (i+j+s)%p), B((i+j+s)%p, j)
+//!   SUMMA   step k, task (i,j):  A(i, k),         B(k, j)
+//!   PUMMA   step k, task (i,j):  A(i, (j+k)%p),   B((i+k)%p, j)
+//!   Johnson single step, task (i,j,k): A(i,k), B(k,j) -> Cpart(i,j,k),
+//!           then reduce_c over (i,j) combines the k partials.
+//!   Solomonik steps s in 0..p/c, task (i,j,l): A(i, l*S+s), B(l*S+s, j)
+//!           -> Cpart(i,j,l), then reduce_c combines the c layers.
+//!   COSMA   single step, task (i,j) on a (4, 2) grid: row-panel A(i),
+//!           col-panel B(j) -> C(i,j)  (comm-optimal panel decomposition).
+
+use super::taskgraph::{
+    Access, App, InitialDist, Launch, LayoutReq, Metric, RegionDecl, RegionReq,
+    TaskDecl,
+};
+use crate::machine::ProcKind;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    Cannon,
+    Summa,
+    Pumma,
+    Johnson,
+    Solomonik,
+    Cosma,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 6] = [
+        Algorithm::Cannon,
+        Algorithm::Summa,
+        Algorithm::Pumma,
+        Algorithm::Johnson,
+        Algorithm::Solomonik,
+        Algorithm::Cosma,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Cannon => "cannon",
+            Algorithm::Summa => "summa",
+            Algorithm::Pumma => "pumma",
+            Algorithm::Johnson => "johnson",
+            Algorithm::Solomonik => "solomonik",
+            Algorithm::Cosma => "cosma",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        Self::ALL.into_iter().find(|a| a.name() == s)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct MatmulConfig {
+    /// Matrix side length (elements).
+    pub n: u64,
+    /// 2D algorithms use a p x p tile grid.
+    pub p: i64,
+    /// 3D algorithms use a q x q x q grid.
+    pub q: i64,
+}
+
+impl Default for MatmulConfig {
+    fn default() -> Self {
+        MatmulConfig { n: 8192, p: 4, q: 2 }
+    }
+}
+
+fn region(name: &str, tile_bytes: u64, tiles: Vec<i64>) -> RegionDecl {
+    RegionDecl { name: name.into(), tile_bytes, fields: 1, tiles }
+}
+
+fn dgemm_task(name: &str, flops: f64) -> TaskDecl {
+    TaskDecl {
+        name: name.into(),
+        variants: vec![ProcKind::Gpu, ProcKind::Omp, ProcKind::Cpu],
+        flops_per_point: flops,
+        artifact: Some("gemm_tile_step"),
+        // the CPU/OMP variants call BLAS DGEMM compiled for Fortran order:
+        // mapping them with C_order raises "DGEMM parameter number 8 had
+        // an illegal value"
+        layout_reqs: vec![
+            (ProcKind::Cpu, LayoutReq { requires_soa: false, requires_f_order: true }),
+            (ProcKind::Omp, LayoutReq { requires_soa: false, requires_f_order: true }),
+        ],
+    }
+}
+
+/// Build the App for one algorithm.
+pub fn matmul(algo: Algorithm, cfg: MatmulConfig) -> App {
+    let n = cfg.n;
+    let total_flops = 2.0 * (n as f64).powi(3);
+    let metric = Metric::Gflops { total_flops };
+    match algo {
+        Algorithm::Cannon | Algorithm::Summa | Algorithm::Pumma => {
+            let p = cfg.p;
+            let tb = (n / p as u64) * (n / p as u64) * 4;
+            let tile_flops = 2.0 * ((n / p as u64) as f64).powi(3);
+            let regions = vec![
+                region("mat_a", tb, vec![p, p]),
+                region("mat_b", tb, vec![p, p]),
+                region("mat_c", tb, vec![p, p]),
+            ];
+            let tasks = vec![dgemm_task("dgemm", tile_flops)];
+            App::new(
+                algo.name(),
+                tasks,
+                regions,
+                p as usize, // p k-steps complete the multiply
+                metric,
+                move |step| {
+                    let s = step as i64;
+                    let (a_of, b_of): (
+                        Box<dyn Fn(&[i64]) -> Vec<i64> + Send + Sync>,
+                        Box<dyn Fn(&[i64]) -> Vec<i64> + Send + Sync>,
+                    ) = match algo {
+                        Algorithm::Cannon => (
+                            Box::new(move |pt: &[i64]| {
+                                vec![pt[0], (pt[0] + pt[1] + s) % p]
+                            }),
+                            Box::new(move |pt: &[i64]| {
+                                vec![(pt[0] + pt[1] + s) % p, pt[1]]
+                            }),
+                        ),
+                        Algorithm::Summa => (
+                            Box::new(move |pt: &[i64]| vec![pt[0], s % p]),
+                            Box::new(move |pt: &[i64]| vec![s % p, pt[1]]),
+                        ),
+                        _ => (
+                            Box::new(move |pt: &[i64]| {
+                                vec![pt[0], (pt[1] + s) % p]
+                            }),
+                            Box::new(move |pt: &[i64]| {
+                                vec![(pt[0] + s) % p, pt[1]]
+                            }),
+                        ),
+                    };
+                    vec![Launch {
+                        task: 0,
+                        ispace: vec![p, p],
+                        regions: vec![
+                            RegionReq {
+                                region: 0,
+                                access: Access::Read,
+                                reuse: 1.0,
+                                tile_of: a_of,
+                                alias: None,
+                                bytes_override: None,
+                            },
+                            RegionReq {
+                                region: 1,
+                                access: Access::Read,
+                                reuse: 1.0,
+                                tile_of: b_of,
+                                alias: None,
+                                bytes_override: None,
+                            },
+                            RegionReq::own(2, Access::ReadWrite, 1.0),
+                        ],
+                    }]
+                },
+            )
+            .with_initial_dist(InitialDist::BlockOverGpus)
+        }
+
+        Algorithm::Johnson => {
+            let q = cfg.q;
+            let t = n / q as u64;
+            let tb = t * t * 4;
+            let tile_flops = 2.0 * (t as f64).powi(3);
+            let regions = vec![
+                region("mat_a", tb, vec![q, q]),
+                region("mat_b", tb, vec![q, q]),
+                region("mat_c_part", tb, vec![q, q, q]),
+                region("mat_c", tb, vec![q, q]),
+            ];
+            let tasks = vec![
+                dgemm_task("dgemm", tile_flops),
+                TaskDecl {
+                    name: "reduce_c".into(),
+                    variants: vec![ProcKind::Gpu, ProcKind::Cpu],
+                    flops_per_point: (t * t) as f64 * q as f64,
+                    artifact: None,
+                    layout_reqs: vec![],
+                },
+            ];
+            App::new(
+                algo.name(),
+                tasks,
+                regions,
+                1,
+                metric,
+                move |_step| {
+                    let mut launches = vec![Launch {
+                        task: 0,
+                        ispace: vec![q, q, q],
+                        regions: vec![
+                            RegionReq::new(0, Access::Read, 1.0, |pt: &[i64]| {
+                                vec![pt[0], pt[2]]
+                            }),
+                            RegionReq::new(1, Access::Read, 1.0, |pt: &[i64]| {
+                                vec![pt[2], pt[1]]
+                            }),
+                            RegionReq::own(2, Access::Write, 1.0),
+                        ],
+                    }];
+                    // reduction: C(i,j) <- sum_k Cpart(i,j,k)
+                    let mut reduce_regions: Vec<RegionReq> = (0..q)
+                        .map(|k| {
+                            RegionReq::new(2, Access::Read, 1.0, move |pt: &[i64]| {
+                                vec![pt[0], pt[1], k]
+                            })
+                        })
+                        .collect();
+                    reduce_regions.push(RegionReq::own(3, Access::Write, 1.0));
+                    launches.push(Launch {
+                        task: 1,
+                        ispace: vec![q, q],
+                        regions: reduce_regions,
+                    });
+                    launches
+                },
+            )
+            .with_initial_dist(InitialDist::BlockOverGpus)
+        }
+
+        Algorithm::Solomonik => {
+            // 2.5D: c = q replication layers; k split into p = q*c chunks,
+            // S = p / c sequential steps per layer.
+            let q = cfg.q;
+            let c = cfg.q;
+            let steps = 2usize; // p/c with p = 4, c = 2
+            let kchunks = steps as i64 * c;
+            let tm = n / q as u64; // C tile side
+            let tk = n / kchunks as u64; // k-chunk depth
+            let ab_bytes = tm * tk * 4;
+            let c_bytes = tm * tm * 4;
+            let tile_flops = 2.0 * tm as f64 * tm as f64 * tk as f64;
+            let regions = vec![
+                region("mat_a", ab_bytes, vec![q, kchunks]),
+                region("mat_b", ab_bytes, vec![kchunks, q]),
+                region("mat_c_part", c_bytes, vec![q, q, c]),
+                region("mat_c", c_bytes, vec![q, q]),
+            ];
+            let tasks = vec![
+                dgemm_task("dgemm", tile_flops),
+                TaskDecl {
+                    name: "reduce_c".into(),
+                    variants: vec![ProcKind::Gpu, ProcKind::Cpu],
+                    flops_per_point: (tm * tm) as f64 * c as f64,
+                    artifact: None,
+                    layout_reqs: vec![],
+                },
+            ];
+            App::new(
+                algo.name(),
+                tasks,
+                regions,
+                steps,
+                metric,
+                move |step| {
+                    let s = step as i64;
+                    let last = step + 1 == steps;
+                    let mut launches = vec![Launch {
+                        task: 0,
+                        ispace: vec![q, q, c],
+                        regions: vec![
+                            RegionReq::new(0, Access::Read, 1.0, move |pt: &[i64]| {
+                                vec![pt[0], pt[2] * 2 + s]
+                            }),
+                            RegionReq::new(1, Access::Read, 1.0, move |pt: &[i64]| {
+                                vec![pt[2] * 2 + s, pt[1]]
+                            }),
+                            RegionReq::own(2, Access::ReadWrite, 1.0),
+                        ],
+                    }];
+                    if last {
+                        let mut rr: Vec<RegionReq> = (0..c)
+                            .map(|l| {
+                                RegionReq::new(2, Access::Read, 1.0, move |pt: &[i64]| {
+                                    vec![pt[0], pt[1], l]
+                                })
+                            })
+                            .collect();
+                        rr.push(RegionReq::own(3, Access::Write, 1.0));
+                        launches.push(Launch { task: 1, ispace: vec![q, q], regions: rr });
+                    }
+                    launches
+                },
+            )
+            .with_initial_dist(InitialDist::BlockOverGpus)
+        }
+
+        Algorithm::Cosma => {
+            // comm-optimal panel split for 8 processors: 4 row-panels of A
+            // times 2 col-panels of B, one task per C panel-block.
+            let (pm, pn) = (4i64, 2i64);
+            let a_bytes = (n / pm as u64) * n * 4;
+            let b_bytes = n * (n / pn as u64) * 4;
+            let c_bytes = (n / pm as u64) * (n / pn as u64) * 4;
+            let tile_flops = 2.0 * (n / pm as u64) as f64 * (n / pn as u64) as f64 * n as f64;
+            let regions = vec![
+                region("mat_a", a_bytes, vec![pm, 1]),
+                region("mat_b", b_bytes, vec![1, pn]),
+                region("mat_c", c_bytes, vec![pm, pn]),
+            ];
+            let tasks = vec![dgemm_task("dgemm", tile_flops)];
+            App::new(
+                algo.name(),
+                tasks,
+                regions,
+                1,
+                metric,
+                move |_step| {
+                    vec![Launch {
+                        task: 0,
+                        ispace: vec![pm, pn],
+                        regions: vec![
+                            RegionReq::new(0, Access::Read, 1.0, |pt: &[i64]| {
+                                vec![pt[0], 0]
+                            }),
+                            RegionReq::new(1, Access::Read, 1.0, |pt: &[i64]| {
+                                vec![0, pt[1]]
+                            }),
+                            RegionReq::own(2, Access::Write, 1.0),
+                        ],
+                    }]
+                },
+            )
+            .with_initial_dist(InitialDist::BlockOverGpus)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_algorithms_build() {
+        for algo in Algorithm::ALL {
+            let app = matmul(algo, MatmulConfig::default());
+            assert!(!app.launches(0).is_empty(), "{}", app.name);
+            assert_eq!(app.initial_dist, InitialDist::BlockOverGpus);
+        }
+    }
+
+    #[test]
+    fn flops_sum_to_2n3() {
+        // the dgemm launches of every algorithm perform exactly 2N^3 flops
+        for algo in Algorithm::ALL {
+            let app = matmul(algo, MatmulConfig::default());
+            let n = 8192f64;
+            let dgemm = app.task_index("dgemm").unwrap();
+            let mut flops = 0.0;
+            for s in 0..app.steps {
+                for l in app.launches(s) {
+                    if l.task == dgemm {
+                        flops += app.tasks[l.task].flops_per_point * l.num_points() as f64;
+                    }
+                }
+            }
+            let expect = 2.0 * n.powi(3);
+            assert!(
+                (flops - expect).abs() / expect < 1e-9,
+                "{}: {flops} vs {expect}",
+                algo.name()
+            );
+        }
+    }
+
+    #[test]
+    fn cannon_systolic_shift() {
+        let app = matmul(Algorithm::Cannon, MatmulConfig::default());
+        let l0 = app.launches(0);
+        let l1 = app.launches(1);
+        let a0 = (l0[0].regions[0].tile_of)(&[1, 2]);
+        let a1 = (l1[0].regions[0].tile_of)(&[1, 2]);
+        assert_eq!(a0, vec![1, 3]); // (1+2+0) % 4
+        assert_eq!(a1, vec![1, 0]); // (1+2+1) % 4
+    }
+
+    #[test]
+    fn summa_broadcasts_k_panel() {
+        let app = matmul(Algorithm::Summa, MatmulConfig::default());
+        let l2 = app.launches(2);
+        // every task reads the same A column k=2
+        assert_eq!((l2[0].regions[0].tile_of)(&[0, 0]), vec![0, 2]);
+        assert_eq!((l2[0].regions[0].tile_of)(&[3, 1]), vec![3, 2]);
+        assert_eq!((l2[0].regions[1].tile_of)(&[3, 1]), vec![2, 1]);
+    }
+
+    #[test]
+    fn johnson_reduction_reads_all_layers() {
+        let app = matmul(Algorithm::Johnson, MatmulConfig::default());
+        let launches = app.launches(0);
+        assert_eq!(launches.len(), 2);
+        let reduce = &launches[1];
+        assert_eq!(reduce.regions.len(), 3); // q=2 partials + output
+        assert_eq!((reduce.regions[0].tile_of)(&[1, 0]), vec![1, 0, 0]);
+        assert_eq!((reduce.regions[1].tile_of)(&[1, 0]), vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn solomonik_reduces_only_at_last_step() {
+        let app = matmul(Algorithm::Solomonik, MatmulConfig::default());
+        assert_eq!(app.launches(0).len(), 1);
+        assert_eq!(app.launches(1).len(), 2);
+    }
+
+    #[test]
+    fn cpu_variant_requires_fortran_order() {
+        let app = matmul(Algorithm::Summa, MatmulConfig::default());
+        let dgemm = &app.tasks[0];
+        assert!(dgemm.layout_req(ProcKind::Cpu).requires_f_order);
+        assert!(!dgemm.layout_req(ProcKind::Gpu).requires_f_order);
+    }
+
+    #[test]
+    fn algorithm_name_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+}

@@ -1,0 +1,58 @@
+//! Benchmark applications (substrate S5): the three scientific apps of
+//! Section 5.2 and the six matmul algorithms of Section 5.3, over the
+//! Legion-like task-graph IR in [`taskgraph`].
+
+pub mod circuit;
+pub mod matmul;
+pub mod pennant;
+pub mod stencil;
+pub mod taskgraph;
+
+pub use circuit::{circuit, CircuitConfig};
+pub use matmul::{matmul, Algorithm, MatmulConfig};
+pub use pennant::{pennant, PennantConfig};
+pub use stencil::{stencil, StencilConfig};
+pub use taskgraph::{
+    Access, App, InitialDist, Launch, LayoutReq, Metric, RegionDecl, RegionReq,
+    TaskDecl,
+};
+
+/// Build any benchmark by name (CLI / harness convenience).
+pub fn by_name(name: &str) -> Option<App> {
+    match name {
+        "circuit" => Some(circuit(CircuitConfig::default())),
+        "stencil" => Some(stencil(StencilConfig::default())),
+        "pennant" => Some(pennant(PennantConfig::default())),
+        other => matmul::Algorithm::parse(other)
+            .map(|a| matmul(a, MatmulConfig::default())),
+    }
+}
+
+/// All nine benchmark names (Table 1's "9 applications").
+pub const ALL_BENCHMARKS: [&str; 9] = [
+    "circuit",
+    "stencil",
+    "pennant",
+    "cannon",
+    "summa",
+    "pumma",
+    "johnson",
+    "solomonik",
+    "cosma",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_nine_benchmarks_build() {
+        for name in ALL_BENCHMARKS {
+            let app = by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(app.name, name);
+            assert!(app.steps >= 1);
+            assert!(!app.tasks.is_empty());
+        }
+        assert!(by_name("unknown").is_none());
+    }
+}

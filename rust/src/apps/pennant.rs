@@ -1,0 +1,205 @@
+//! Pennant benchmark (Ferenbaugh 2015): unstructured-mesh Lagrangian
+//! staggered-grid hydrodynamics for compressible flow, partitioned into
+//! mesh pieces with private / master (shared) / slave (ghost) point
+//! collections — the third scientific application of Section 5.2.
+//!
+//! `points_slave` arguments are views of the neighbouring piece's
+//! `points_master` tile (same ghosting mechanism as circuit).  The GPU
+//! variant of the corner-force kernel was compiled for SOA point
+//! instances: forcing AOS on it reproduces the paper's "stride does not
+//! match expected value" execution error.
+//!
+//! Task pipeline per cycle (the four dominant kernels):
+//!   adv_pos_half, calc_crnr_force, sum_crnr_force, calc_eos_work.
+
+use super::taskgraph::{
+    Access, App, Launch, LayoutReq, Metric, RegionDecl, RegionReq, TaskDecl,
+};
+use crate::machine::ProcKind;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PennantConfig {
+    pub pieces: i64,
+    pub zones: u64,
+    pub points_private: u64,
+    pub points_shared: u64,
+    pub steps: usize,
+}
+
+impl Default for PennantConfig {
+    fn default() -> Self {
+        PennantConfig {
+            pieces: 8,
+            zones: 1 << 19,
+            points_private: 1 << 19,
+            points_shared: 1 << 10,
+            steps: 10,
+        }
+    }
+}
+
+pub const ZONES: usize = 0;
+pub const SIDES: usize = 1;
+pub const PPRIV: usize = 2;
+pub const PMASTER: usize = 3;
+
+pub fn pennant(cfg: PennantConfig) -> App {
+    let f = 4u64;
+    let zone_fields = 6; // rho, e, p, vol, mass, work
+    let side_fields = 4; // corner force x/y, side area, mass flux
+    let point_fields = 6; // pos x/y, vel x/y, force x/y
+
+    let regions = vec![
+        RegionDecl {
+            name: "zones".into(),
+            tile_bytes: cfg.zones * f * zone_fields as u64,
+            fields: zone_fields,
+            tiles: vec![cfg.pieces],
+        },
+        RegionDecl {
+            name: "sides".into(),
+            tile_bytes: cfg.zones * 4 * f * side_fields as u64, // ~4 sides/zone
+            fields: side_fields,
+            tiles: vec![cfg.pieces],
+        },
+        RegionDecl {
+            name: "points_private".into(),
+            tile_bytes: cfg.points_private * f * point_fields as u64,
+            fields: point_fields,
+            tiles: vec![cfg.pieces],
+        },
+        RegionDecl {
+            name: "points_master".into(),
+            tile_bytes: cfg.points_shared * f * point_fields as u64,
+            fields: point_fields,
+            tiles: vec![cfg.pieces],
+        },
+    ];
+
+    let all = vec![ProcKind::Gpu, ProcKind::Omp, ProcKind::Cpu];
+    // GPU point kernels were compiled against SOA instances
+    let gpu_soa = vec![(
+        ProcKind::Gpu,
+        LayoutReq { requires_soa: true, requires_f_order: false },
+    )];
+    let tasks = vec![
+        TaskDecl {
+            name: "adv_pos_half".into(),
+            variants: all.clone(),
+            flops_per_point: (cfg.points_private + cfg.points_shared) as f64 * 8.0,
+            artifact: None,
+            layout_reqs: gpu_soa.clone(),
+        },
+        TaskDecl {
+            name: "calc_crnr_force".into(),
+            variants: all.clone(),
+            flops_per_point: cfg.zones as f64 * 4.0 * 22.0,
+            artifact: None,
+            layout_reqs: gpu_soa.clone(),
+        },
+        TaskDecl {
+            name: "sum_crnr_force".into(),
+            variants: all.clone(),
+            flops_per_point: (cfg.points_private + 2 * cfg.points_shared) as f64 * 6.0,
+            artifact: None,
+            layout_reqs: gpu_soa,
+        },
+        TaskDecl {
+            name: "calc_eos_work".into(),
+            variants: all,
+            flops_per_point: cfg.zones as f64 * 14.0,
+            artifact: Some("pennant_hydro"),
+            layout_reqs: vec![],
+        },
+    ];
+
+    let pieces = cfg.pieces;
+    App::new(
+        "pennant",
+        tasks,
+        regions,
+        cfg.steps,
+        Metric::StepsPerSecond,
+        move |_step| {
+            let slave = move |p: &[i64]| vec![(p[0] + 1) % pieces];
+            vec![
+                Launch {
+                    task: 0,
+                    ispace: vec![pieces],
+                    regions: vec![
+                        RegionReq::own(PPRIV, Access::ReadWrite, 1.0),
+                        RegionReq::own(PMASTER, Access::ReadWrite, 1.0),
+                    ],
+                },
+                Launch {
+                    task: 1,
+                    ispace: vec![pieces],
+                    regions: vec![
+                        RegionReq::own(ZONES, Access::Read, 1.0),
+                        RegionReq::own(SIDES, Access::ReadWrite, 1.0),
+                        RegionReq::own(PPRIV, Access::Read, 2.0),
+                        RegionReq::new(PMASTER, Access::Read, 2.0, slave)
+                            .aliased("points_slave"),
+                    ],
+                },
+                Launch {
+                    task: 2,
+                    ispace: vec![pieces],
+                    regions: vec![
+                        RegionReq::own(SIDES, Access::Read, 1.0),
+                        RegionReq::own(PPRIV, Access::ReadWrite, 1.0),
+                        RegionReq::own(PMASTER, Access::Reduce, 2.0),
+                        RegionReq::new(PMASTER, Access::Reduce, 2.0, slave)
+                            .aliased("points_slave"),
+                    ],
+                },
+                Launch {
+                    task: 3,
+                    ispace: vec![pieces],
+                    regions: vec![
+                        RegionReq::own(ZONES, Access::ReadWrite, 1.0),
+                        RegionReq::own(SIDES, Access::Read, 0.5),
+                    ],
+                },
+            ]
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_task_pipeline() {
+        let app = pennant(PennantConfig::default());
+        assert_eq!(app.tasks.len(), 4);
+        assert_eq!(app.launches(0).len(), 4);
+        assert_eq!(app.regions.len(), 4);
+        assert_eq!(app.data_arguments(), 12);
+    }
+
+    #[test]
+    fn slave_points_alias_neighbour_master() {
+        let app = pennant(PennantConfig::default());
+        let l = app.launches(0);
+        let slave = &l[1].regions[3];
+        assert_eq!(slave.region, PMASTER);
+        assert_eq!(slave.mapped_name(&app.regions), "points_slave");
+        assert_eq!((slave.tile_of)(&[7]), vec![0]);
+    }
+
+    #[test]
+    fn gpu_kernels_require_soa() {
+        let app = pennant(PennantConfig::default());
+        assert!(app.tasks[1].layout_req(ProcKind::Gpu).requires_soa);
+        assert!(!app.tasks[1].layout_req(ProcKind::Cpu).requires_soa);
+        assert!(!app.tasks[3].layout_req(ProcKind::Gpu).requires_soa);
+    }
+
+    #[test]
+    fn zone_work_dominates_flops() {
+        let app = pennant(PennantConfig::default());
+        assert!(app.tasks[1].flops_per_point > app.tasks[0].flops_per_point);
+    }
+}

@@ -1,0 +1,161 @@
+//! PRK Stencil benchmark (Van der Wijngaart & Mattson 2014): 2D star
+//! stencil over a block-partitioned grid — the paper's smallest search
+//! space ("2 tasks and 12 data arguments", 2^38 configurations).
+//!
+//! Halos are views: the four `halo_*` arguments of the stencil task alias
+//! the neighbouring blocks' `grid_in` tiles but touch only one edge strip
+//! (bytes_override), so placing them in ZCMEM vs FBMEM trades PCIe-speed
+//! access against explicit strip copies, exactly like circuit's ghosts.
+//!
+//! Tasks per step:
+//!   stencil:   in block + 4 halo strips + weights -> out block (7 args).
+//!   increment: in += out + coefficient arrays (5 args).
+
+use super::taskgraph::{Access, App, Launch, Metric, RegionDecl, RegionReq, TaskDecl};
+use crate::machine::ProcKind;
+
+#[derive(Debug, Clone, Copy)]
+pub struct StencilConfig {
+    /// Piece grid is px x py.
+    pub px: i64,
+    pub py: i64,
+    /// Block side length (elements).
+    pub block: u64,
+    pub steps: usize,
+}
+
+impl Default for StencilConfig {
+    fn default() -> Self {
+        // 4x2 = 8 blocks (one per GPU), 4096^2 elements per block
+        StencilConfig { px: 4, py: 2, block: 4096, steps: 10 }
+    }
+}
+
+pub const GIN: usize = 0;
+pub const GOUT: usize = 1;
+pub const WEIGHTS: usize = 2;
+pub const COEFF_A: usize = 3;
+pub const COEFF_B: usize = 4;
+
+pub fn stencil(cfg: StencilConfig) -> App {
+    let f = 4u64;
+    let block_bytes = cfg.block * cfg.block * f;
+    let halo_bytes = cfg.block * f;
+
+    let regions = vec![
+        RegionDecl { name: "grid_in".into(), tile_bytes: block_bytes, fields: 1, tiles: vec![cfg.px, cfg.py] },
+        RegionDecl { name: "grid_out".into(), tile_bytes: block_bytes, fields: 1, tiles: vec![cfg.px, cfg.py] },
+        RegionDecl { name: "weights".into(), tile_bytes: 5 * 5 * f, fields: 1, tiles: vec![cfg.px, cfg.py] },
+        RegionDecl { name: "coeff_a".into(), tile_bytes: block_bytes, fields: 1, tiles: vec![cfg.px, cfg.py] },
+        RegionDecl { name: "coeff_b".into(), tile_bytes: block_bytes, fields: 1, tiles: vec![cfg.px, cfg.py] },
+    ];
+
+    let tasks = vec![
+        TaskDecl {
+            name: "stencil".into(),
+            variants: vec![ProcKind::Gpu, ProcKind::Omp, ProcKind::Cpu],
+            flops_per_point: (cfg.block * cfg.block) as f64 * 9.0,
+            artifact: Some("stencil_step"),
+            layout_reqs: vec![],
+        },
+        TaskDecl {
+            name: "increment".into(),
+            variants: vec![ProcKind::Gpu, ProcKind::Omp, ProcKind::Cpu],
+            flops_per_point: (cfg.block * cfg.block) as f64 * 2.0,
+            artifact: None,
+            layout_reqs: vec![],
+        },
+    ];
+
+    let (px, py) = (cfg.px, cfg.py);
+    App::new(
+        "stencil",
+        tasks,
+        regions,
+        cfg.steps,
+        Metric::StepsPerSecond,
+        move |_step| {
+            let xp = move |p: &[i64]| vec![(p[0] + 1) % px, p[1]];
+            let xm = move |p: &[i64]| vec![(p[0] - 1).rem_euclid(px), p[1]];
+            let yp = move |p: &[i64]| vec![p[0], (p[1] + 1) % py];
+            let ym = move |p: &[i64]| vec![p[0], (p[1] - 1).rem_euclid(py)];
+            vec![
+                Launch {
+                    task: 0,
+                    ispace: vec![px, py],
+                    regions: vec![
+                        RegionReq::own(GIN, Access::Read, 5.0), // 5-point reuse
+                        RegionReq::own(GOUT, Access::Write, 1.0),
+                        RegionReq::new(GIN, Access::Read, 2.0, xp)
+                            .aliased("halo_xp")
+                            .bytes(halo_bytes),
+                        RegionReq::new(GIN, Access::Read, 2.0, xm)
+                            .aliased("halo_xm")
+                            .bytes(halo_bytes),
+                        RegionReq::new(GIN, Access::Read, 2.0, yp)
+                            .aliased("halo_yp")
+                            .bytes(halo_bytes),
+                        RegionReq::new(GIN, Access::Read, 2.0, ym)
+                            .aliased("halo_ym")
+                            .bytes(halo_bytes),
+                        RegionReq::own(WEIGHTS, Access::Read, 1.0),
+                    ],
+                },
+                Launch {
+                    task: 1,
+                    ispace: vec![px, py],
+                    regions: vec![
+                        RegionReq::own(GIN, Access::ReadWrite, 1.0),
+                        RegionReq::own(GOUT, Access::Read, 1.0),
+                        RegionReq::own(COEFF_A, Access::Read, 1.0),
+                        RegionReq::own(COEFF_B, Access::Read, 1.0),
+                        RegionReq::own(WEIGHTS, Access::Read, 1.0),
+                    ],
+                },
+            ]
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_search_space_shape() {
+        // "2 tasks and 12 data arguments" -> 2 + 12 + 2*12 = 38 bits
+        let app = stencil(StencilConfig::default());
+        assert_eq!(app.tasks.len(), 2);
+        assert_eq!(app.data_arguments(), 12);
+        let bits = app.tasks.len() + app.data_arguments() + 2 * app.data_arguments();
+        assert_eq!(bits, 38);
+    }
+
+    #[test]
+    fn halo_wraps_torus_and_is_thin() {
+        let app = stencil(StencilConfig::default());
+        let l = app.launches(0);
+        let xm = &l[0].regions[3];
+        assert_eq!((xm.tile_of)(&[0, 1]), vec![3, 1]);
+        assert!(xm.touched_bytes(&app.regions) < app.regions[GIN].tile_bytes / 100);
+    }
+
+    #[test]
+    fn eight_blocks_default() {
+        let app = stencil(StencilConfig::default());
+        assert_eq!(app.launches(0)[0].num_points(), 8);
+    }
+
+    #[test]
+    fn halo_alias_names_visible_to_mapper() {
+        let app = stencil(StencilConfig::default());
+        let l = app.launches(0);
+        let names: Vec<&str> = l[0]
+            .regions
+            .iter()
+            .map(|r| r.mapped_name(&app.regions))
+            .collect();
+        assert!(names.contains(&"halo_xp"));
+        assert!(names.contains(&"grid_in"));
+    }
+}

@@ -1,0 +1,380 @@
+//! Legion-like task-graph IR (substrate S4).
+//!
+//! An [`App`] is a sequence of *index-task launches* per timestep over
+//! logical *regions* partitioned into tiles.  The mapper (a compiled
+//! [`crate::dsl::MappingPolicy`]) decides, per launch point: which
+//! processor runs it, which memory each region argument lives in, and what
+//! layout the instance uses.  The executor ([`crate::sim`]) charges
+//! compute, memory-access, and transfer costs accordingly.
+
+use crate::machine::ProcKind;
+
+/// Access mode of a region argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Read,
+    Write,
+    ReadWrite,
+    /// Reduction (associative accumulate; transfers can combine).
+    Reduce,
+}
+
+/// A logical region partitioned into tiles (one tile per launch point of
+/// the producing launch, or an explicit tile grid).
+#[derive(Debug, Clone)]
+pub struct RegionDecl {
+    pub name: String,
+    /// Bytes of one tile.
+    pub tile_bytes: u64,
+    /// Number of struct fields (AOS/SOA distinction matters above 1).
+    pub fields: usize,
+    /// Tile-grid extents (dimensionality = coordinate arity).
+    pub tiles: Vec<i64>,
+}
+
+impl RegionDecl {
+    pub fn tile_dims(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn num_tiles(&self) -> i64 {
+        self.tiles.iter().product()
+    }
+
+    /// Row-major linearization of a tile coordinate.
+    pub fn tile_lin(&self, tile: &[i64]) -> i64 {
+        let mut lin = 0;
+        for (t, e) in tile.iter().zip(&self.tiles) {
+            lin = lin * e + t;
+        }
+        lin
+    }
+}
+
+/// Layout requirements of a task variant's precompiled kernel.  Violating
+/// one produces the paper's execution errors instead of a silent remap.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayoutReq {
+    /// Kernel was compiled for SOA instances (GPU coalescing); an AOS
+    /// instance trips "Assertion failed: stride does not match expected
+    /// value."
+    pub requires_soa: bool,
+    /// BLAS-backed variant requires Fortran order; C order trips
+    /// "DGEMM parameter number 8 had an illegal value".
+    pub requires_f_order: bool,
+}
+
+/// A task declaration: variants + cost + optional AOT artifact.
+#[derive(Debug, Clone)]
+pub struct TaskDecl {
+    pub name: String,
+    /// Processor kinds with compiled variants.
+    pub variants: Vec<ProcKind>,
+    /// FLOPs one launch point executes.
+    pub flops_per_point: f64,
+    /// Bytes the point touches per region argument are in RegionReq.
+    /// Name of the AOT artifact implementing the task body (numeric mode).
+    pub artifact: Option<&'static str>,
+    /// Per-kind layout requirements: (kind, requirement).
+    pub layout_reqs: Vec<(ProcKind, LayoutReq)>,
+}
+
+impl TaskDecl {
+    pub fn layout_req(&self, kind: ProcKind) -> LayoutReq {
+        self.layout_reqs
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, r)| *r)
+            .unwrap_or_default()
+    }
+}
+
+/// One region argument of a launch: which tile each launch point touches.
+pub struct RegionReq {
+    /// Index into `App::regions`.
+    pub region: usize,
+    pub access: Access,
+    /// Reuse factor: how many times the tile's bytes are effectively
+    /// streamed from memory during the task (arithmetic-intensity model).
+    pub reuse: f64,
+    /// Tile coordinate touched by a launch point (step-specific closures —
+    /// e.g. Cannon's systolic shift bakes the step into this function).
+    pub tile_of: Box<dyn Fn(&[i64]) -> Vec<i64> + Send + Sync>,
+    /// Name this argument exposes to `Region`/`Layout` DSL statements.
+    /// Legion's ghost partitions are *views* of another logical region:
+    /// e.g. the circuit's `rp_ghost` argument aliases the neighbour's
+    /// `rp_shared` tile but is mapped under its own name.  None = the
+    /// region's own name.
+    pub alias: Option<String>,
+    /// Bytes actually touched, when less than the whole tile (halo strips).
+    pub bytes_override: Option<u64>,
+}
+
+impl RegionReq {
+    pub fn new(
+        region: usize,
+        access: Access,
+        reuse: f64,
+        tile_of: impl Fn(&[i64]) -> Vec<i64> + Send + Sync + 'static,
+    ) -> Self {
+        RegionReq {
+            region,
+            access,
+            reuse,
+            tile_of: Box::new(tile_of),
+            alias: None,
+            bytes_override: None,
+        }
+    }
+
+    /// Identity tiling: launch point (i, ..) touches tile (i, ..).
+    pub fn own(region: usize, access: Access, reuse: f64) -> Self {
+        Self::new(region, access, reuse, |p: &[i64]| p.to_vec())
+    }
+
+    /// Expose this argument to the mapper under a different name.
+    pub fn aliased(mut self, name: impl Into<String>) -> Self {
+        self.alias = Some(name.into());
+        self
+    }
+
+    /// Touch only `bytes` of the tile (halo strips etc.).
+    pub fn bytes(mut self, bytes: u64) -> Self {
+        self.bytes_override = Some(bytes);
+        self
+    }
+
+    /// The name the mapper sees for this argument.
+    pub fn mapped_name<'a>(&'a self, regions: &'a [RegionDecl]) -> &'a str {
+        self.alias.as_deref().unwrap_or(&regions[self.region].name)
+    }
+
+    /// Bytes this argument touches.
+    pub fn touched_bytes(&self, regions: &[RegionDecl]) -> u64 {
+        self.bytes_override.unwrap_or(regions[self.region].tile_bytes)
+    }
+}
+
+impl std::fmt::Debug for RegionReq {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RegionReq")
+            .field("region", &self.region)
+            .field("access", &self.access)
+            .field("reuse", &self.reuse)
+            .field("alias", &self.alias)
+            .finish()
+    }
+}
+
+/// One index-task launch.
+#[derive(Debug)]
+pub struct Launch {
+    /// Index into `App::tasks`.
+    pub task: usize,
+    /// Launch-domain extents (e.g. [4, 4] for a 4x4 grid of points).
+    pub ispace: Vec<i64>,
+    pub regions: Vec<RegionReq>,
+}
+
+impl Launch {
+    pub fn points(&self) -> impl Iterator<Item = Vec<i64>> + '_ {
+        let dims = self.ispace.clone();
+        let total: i64 = dims.iter().product();
+        (0..total).map(move |lin| {
+            let mut rem = lin;
+            let mut p = vec![0i64; dims.len()];
+            for d in (0..dims.len()).rev() {
+                p[d] = rem % dims[d];
+                rem /= dims[d];
+            }
+            p
+        })
+    }
+
+    pub fn num_points(&self) -> i64 {
+        self.ispace.iter().product()
+    }
+}
+
+/// How the app's headline metric is computed from elapsed time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Metric {
+    /// GFLOP/s over the whole run (matmul algorithms).
+    Gflops { total_flops: f64 },
+    /// Timesteps per second (scientific apps).
+    StepsPerSecond,
+}
+
+/// Where region tiles live before the first step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitialDist {
+    /// Tiles materialize at their first user's chosen memory (no initial
+    /// transfer charged) — scientific apps whose init tasks we elide.
+    FirstUse,
+    /// Tiles are pre-distributed block-wise over the GPUs' framebuffers
+    /// (matmul inputs arrive distributed; fetching them is part of the
+    /// algorithm's communication volume).
+    BlockOverGpus,
+}
+
+/// A complete application: declarations + per-step launch generator.
+pub struct App {
+    pub name: String,
+    pub tasks: Vec<TaskDecl>,
+    pub regions: Vec<RegionDecl>,
+    pub steps: usize,
+    pub metric: Metric,
+    pub initial_dist: InitialDist,
+    /// Launches of one timestep (step index lets systolic algorithms vary
+    /// their communication pattern per step).
+    launch_fn: Box<dyn Fn(usize) -> Vec<Launch> + Send + Sync>,
+}
+
+impl App {
+    pub fn new(
+        name: impl Into<String>,
+        tasks: Vec<TaskDecl>,
+        regions: Vec<RegionDecl>,
+        steps: usize,
+        metric: Metric,
+        launch_fn: impl Fn(usize) -> Vec<Launch> + Send + Sync + 'static,
+    ) -> App {
+        App {
+            name: name.into(),
+            tasks,
+            regions,
+            steps,
+            metric,
+            initial_dist: InitialDist::FirstUse,
+            launch_fn: Box::new(launch_fn),
+        }
+    }
+
+    pub fn with_initial_dist(mut self, dist: InitialDist) -> App {
+        self.initial_dist = dist;
+        self
+    }
+
+    pub fn launches(&self, step: usize) -> Vec<Launch> {
+        (self.launch_fn)(step)
+    }
+
+    pub fn task_index(&self, name: &str) -> Option<usize> {
+        self.tasks.iter().position(|t| t.name == name)
+    }
+
+    pub fn region_index(&self, name: &str) -> Option<usize> {
+        self.regions.iter().position(|r| r.name == name)
+    }
+
+    /// Total FLOPs across all steps (for the Gflops metric + sanity).
+    pub fn total_flops(&self) -> f64 {
+        (0..self.steps)
+            .map(|s| {
+                self.launches(s)
+                    .iter()
+                    .map(|l| self.tasks[l.task].flops_per_point * l.num_points() as f64)
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+
+    /// Number of distinct (task, region-argument) slots — the paper's
+    /// "data arguments" count that sizes the search space.
+    pub fn data_arguments(&self) -> usize {
+        self.launches(0).iter().map(|l| l.regions.len()).sum()
+    }
+}
+
+impl std::fmt::Debug for App {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("App")
+            .field("name", &self.name)
+            .field("tasks", &self.tasks.len())
+            .field("regions", &self.regions.len())
+            .field("steps", &self.steps)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_app() -> App {
+        App::new(
+            "tiny",
+            vec![TaskDecl {
+                name: "work".into(),
+                variants: vec![ProcKind::Gpu, ProcKind::Cpu],
+                flops_per_point: 100.0,
+                artifact: None,
+                layout_reqs: vec![],
+            }],
+            vec![RegionDecl {
+                name: "data".into(),
+                tile_bytes: 1024,
+                fields: 1,
+                tiles: vec![4],
+            }],
+            3,
+            Metric::StepsPerSecond,
+            |_step| {
+                vec![Launch {
+                    task: 0,
+                    ispace: vec![4],
+                    regions: vec![RegionReq::own(0, Access::ReadWrite, 1.0)],
+                }]
+            },
+        )
+    }
+
+    #[test]
+    fn launch_point_enumeration_row_major() {
+        let l = Launch { task: 0, ispace: vec![2, 3], regions: vec![] };
+        let pts: Vec<Vec<i64>> = l.points().collect();
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts[0], vec![0, 0]);
+        assert_eq!(pts[1], vec![0, 1]);
+        assert_eq!(pts[5], vec![1, 2]);
+    }
+
+    #[test]
+    fn total_flops_accumulates_over_steps() {
+        let app = tiny_app();
+        assert_eq!(app.total_flops(), 3.0 * 4.0 * 100.0);
+    }
+
+    #[test]
+    fn indices_resolve() {
+        let app = tiny_app();
+        assert_eq!(app.task_index("work"), Some(0));
+        assert_eq!(app.region_index("data"), Some(0));
+        assert_eq!(app.task_index("nope"), None);
+        assert_eq!(app.data_arguments(), 1);
+    }
+
+    #[test]
+    fn layout_req_lookup_defaults() {
+        let t = TaskDecl {
+            name: "t".into(),
+            variants: vec![ProcKind::Gpu],
+            flops_per_point: 1.0,
+            artifact: None,
+            layout_reqs: vec![(
+                ProcKind::Gpu,
+                LayoutReq { requires_soa: true, requires_f_order: false },
+            )],
+        };
+        assert!(t.layout_req(ProcKind::Gpu).requires_soa);
+        assert!(!t.layout_req(ProcKind::Cpu).requires_soa);
+    }
+
+    #[test]
+    fn region_req_custom_tiling() {
+        let r = RegionReq::new(0, Access::Read, 1.0, |p: &[i64]| {
+            vec![(p[0] + 1) % 4, p[1]]
+        });
+        assert_eq!((r.tile_of)(&[3, 2]), vec![0, 2]);
+    }
+}

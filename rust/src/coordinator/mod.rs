@@ -1,0 +1,228 @@
+//! L3 coordinator (S9): the optimization service.
+//!
+//! Owns the machine spec, evaluates candidate mappers (compile -> execute
+//! -> classify into system feedback) behind a content-addressed cache, and
+//! orchestrates multi-run optimization campaigns across worker threads —
+//! the "leader" of the three-layer architecture.  The CLI and the
+//! experiment harness drive everything through this type.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::apps::{self, App};
+use crate::feedback::{FeedbackConfig, SystemFeedback};
+use crate::machine::MachineSpec;
+use crate::optimizer::{
+    AppInfo, IterationRecord, Optimizer, OproOptimizer, TraceOptimizer,
+};
+use crate::sim::run_mapper;
+
+/// Which search algorithm to run (Section 5's two optimizers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchAlgo {
+    Trace,
+    Opro,
+}
+
+impl SearchAlgo {
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchAlgo::Trace => "trace",
+            SearchAlgo::Opro => "opro",
+        }
+    }
+}
+
+/// One complete optimization run (10 iterations in the paper).
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub algo: &'static str,
+    pub seed: u64,
+    pub records: Vec<IterationRecord>,
+    /// Best (dsl, throughput) found.
+    pub best: Option<(String, f64)>,
+}
+
+impl RunResult {
+    /// Best-so-far trajectory (what Fig. 6/7 plot per iteration).
+    pub fn trajectory(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.best_so_far).collect()
+    }
+}
+
+#[derive(Default)]
+pub struct CoordinatorStats {
+    pub evals: AtomicUsize,
+    pub cache_hits: AtomicUsize,
+}
+
+/// The optimization service.
+pub struct Coordinator {
+    pub spec: MachineSpec,
+    cache: Mutex<HashMap<u64, SystemFeedback>>,
+    pub stats: CoordinatorStats,
+}
+
+impl Coordinator {
+    pub fn new(spec: MachineSpec) -> Coordinator {
+        Coordinator {
+            spec,
+            cache: Mutex::new(HashMap::new()),
+            stats: CoordinatorStats::default(),
+        }
+    }
+
+    /// Evaluate one DSL mapper against an app (cached by content hash).
+    pub fn evaluate(&self, app: &App, dsl: &str) -> SystemFeedback {
+        let key = fnv1a(app.name.as_bytes(), dsl.as_bytes());
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        self.stats.evals.fetch_add(1, Ordering::Relaxed);
+        let fb = match run_mapper(app, dsl, &self.spec) {
+            Err(ce) => SystemFeedback::CompileError(ce.to_string()),
+            Ok(Err(xe)) => SystemFeedback::ExecutionError(xe.to_string()),
+            Ok(Ok(m)) => SystemFeedback::from_metrics(&m),
+        };
+        self.cache.lock().unwrap().insert(key, fb.clone());
+        fb
+    }
+
+    /// Throughput of one mapper, or 0.0 on any error.
+    pub fn throughput(&self, app: &App, dsl: &str) -> f64 {
+        self.evaluate(app, dsl).score()
+    }
+
+    /// Run one optimizer for `iters` iterations.
+    pub fn run_optimizer(
+        &self,
+        app: &App,
+        algo: SearchAlgo,
+        cfg: FeedbackConfig,
+        seed: u64,
+        iters: usize,
+    ) -> RunResult {
+        let info = AppInfo::from_app(app);
+        let eval = |src: &str| self.evaluate(app, src);
+        let mut records = Vec::with_capacity(iters);
+        let best;
+        match algo {
+            SearchAlgo::Trace => {
+                let mut opt = TraceOptimizer::new(info, cfg, seed);
+                for _ in 0..iters {
+                    records.push(opt.step(&eval));
+                }
+                best = opt.best_dsl();
+            }
+            SearchAlgo::Opro => {
+                let mut opt = OproOptimizer::new(info, seed);
+                for _ in 0..iters {
+                    records.push(opt.step(&eval));
+                }
+                best = opt.best_dsl();
+            }
+        }
+        RunResult { algo: algo.name(), seed, records, best }
+    }
+
+    /// Run `runs` seeded campaigns in parallel worker threads (the paper
+    /// repeats each optimization 5 times and averages).
+    pub fn run_many(
+        &self,
+        app_name: &str,
+        algo: SearchAlgo,
+        cfg: FeedbackConfig,
+        base_seed: u64,
+        runs: usize,
+        iters: usize,
+    ) -> Vec<RunResult> {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..runs)
+                .map(|r| {
+                    let seed = base_seed.wrapping_add(1000 * r as u64 + 17);
+                    scope.spawn(move || {
+                        let app = apps::by_name(app_name)
+                            .unwrap_or_else(|| panic!("unknown app {app_name}"));
+                        self.run_optimizer(&app, algo, cfg, seed, iters)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Throughputs of `n` random mappers (errors count as 0 — the
+    /// paper's random baseline).
+    pub fn random_baseline(&self, app: &App, n: usize, seed: u64) -> Vec<f64> {
+        crate::mapping::random_mappers(app, n, seed)
+            .iter()
+            .map(|src| self.throughput(app, src))
+            .collect()
+    }
+}
+
+/// FNV-1a over two byte strings (cache key).
+fn fnv1a(a: &[u8], b: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &byte in a.iter().chain(b) {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::expert_dsl;
+
+    fn coord() -> Coordinator {
+        Coordinator::new(MachineSpec::p100_cluster())
+    }
+
+    #[test]
+    fn evaluate_caches() {
+        let c = coord();
+        let app = apps::by_name("circuit").unwrap();
+        let dsl = expert_dsl("circuit").unwrap();
+        let a = c.evaluate(&app, dsl);
+        let b = c.evaluate(&app, dsl);
+        assert_eq!(a, b);
+        assert_eq!(c.stats.evals.load(Ordering::Relaxed), 1);
+        assert_eq!(c.stats.cache_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn run_many_parallel_and_deterministic() {
+        let c = coord();
+        let runs = c.run_many("stencil", SearchAlgo::Trace, FeedbackConfig::FULL, 1, 3, 4);
+        assert_eq!(runs.len(), 3);
+        let again = c.run_many("stencil", SearchAlgo::Trace, FeedbackConfig::FULL, 1, 3, 4);
+        for (a, b) in runs.iter().zip(&again) {
+            assert_eq!(a.trajectory(), b.trajectory());
+        }
+    }
+
+    #[test]
+    fn random_baseline_scores() {
+        let c = coord();
+        let app = apps::by_name("cannon").unwrap();
+        let scores = c.random_baseline(&app, 10, 3);
+        assert_eq!(scores.len(), 10);
+        assert!(scores.iter().any(|&s| s > 0.0), "some random mapper must run");
+    }
+
+    #[test]
+    fn opro_runs_too() {
+        let c = coord();
+        let app = apps::by_name("summa").unwrap();
+        let r = c.run_optimizer(&app, SearchAlgo::Opro, FeedbackConfig::SYSTEM, 5, 5);
+        assert_eq!(r.records.len(), 5);
+        assert_eq!(r.algo, "opro");
+    }
+}

@@ -1,0 +1,188 @@
+//! AST for the mapping DSL (paper Appendix A.1).
+
+use crate::machine::{MemKind, ProcKind};
+
+/// Task / region name pattern: `*` or a concrete name; regions can also be
+/// referenced by positional argument index (used by e.g. "map the second
+/// region argument of task distribute_charge").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Pat {
+    Any,
+    Name(String),
+    /// 0-based region argument index.
+    Index(usize),
+}
+
+impl Pat {
+    pub fn matches_name(&self, name: &str) -> bool {
+        match self {
+            Pat::Any => true,
+            Pat::Name(n) => n == name,
+            Pat::Index(_) => false,
+        }
+    }
+
+    /// Match against a region identified by both name and position.
+    pub fn matches_region(&self, name: &str, position: usize) -> bool {
+        match self {
+            Pat::Any => true,
+            Pat::Name(n) => n == name,
+            Pat::Index(i) => *i == position,
+        }
+    }
+
+    /// Specificity for precedence: concrete > positional > wildcard.
+    pub fn specificity(&self) -> u8 {
+        match self {
+            Pat::Any => 0,
+            Pat::Index(_) => 1,
+            Pat::Name(_) => 2,
+        }
+    }
+}
+
+/// Processor pattern in Region/Layout statements: `*` or a kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProcPat {
+    Any,
+    Kind(ProcKind),
+}
+
+impl ProcPat {
+    pub fn matches(&self, kind: ProcKind) -> bool {
+        match self {
+            ProcPat::Any => true,
+            ProcPat::Kind(k) => *k == kind,
+        }
+    }
+}
+
+/// Layout constraints (`Constraint ::= SOA | AOS | C_order | F_order |
+/// Align == int`; `No_Align` appears in the paper's generated mappers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Constraint {
+    Soa,
+    Aos,
+    COrder,
+    FOrder,
+    Align(u64),
+    NoAlign,
+}
+
+/// Top-level statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `Task <pat> <proc>(,<proc>)*;` — processor preference list.
+    Task { task: Pat, procs: Vec<ProcKind> },
+    /// `Region <task> <region> <proc> <mem>(,<mem>)*;` — memory preference
+    /// list for region arguments when mapped to a processor kind.
+    Region { task: Pat, region: Pat, proc: ProcPat, mems: Vec<MemKind> },
+    /// `Layout <task> <region> <proc> <constraint>+;`
+    Layout { task: Pat, region: Pat, proc: ProcPat, constraints: Vec<Constraint> },
+    /// `IndexTaskMap <task> <func>;`
+    IndexTaskMap { task: Pat, func: String },
+    /// `SingleTaskMap <task> <func>;`
+    SingleTaskMap { task: Pat, func: String },
+    /// `InstanceLimit <task> <n>;`
+    InstanceLimit { task: Pat, limit: i64 },
+    /// `CollectMemory <task> <region>;` (alias: GarbageCollect)
+    CollectMemory { task: Pat, region: Pat },
+    /// Top-level `name = expr;` (e.g. `mgpu = Machine(GPU);`).
+    Assign { name: String, expr: Expr },
+    /// `def name(params) { body }`
+    FuncDef(FuncDef),
+}
+
+#[derive(Debug, Clone)]
+pub struct FuncDef {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Vec<FuncStmt>,
+    /// Source line (diagnostics only; ignored by equality).
+    pub line: usize,
+}
+
+impl PartialEq for FuncDef {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+            && self.params == other.params
+            && self.body == other.body
+    }
+}
+
+/// Parameter with an optional declared type (`Task t`, `Tuple p`, `int d`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Param {
+    pub name: String,
+    pub ty: ParamTy,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamTy {
+    Task,
+    Tuple,
+    Int,
+    Untyped,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum FuncStmt {
+    Assign(String, Expr),
+    Return(Expr),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Int(i64),
+    Var(String),
+    /// `Machine(GPU)`
+    Machine(ProcKind),
+    /// `e.attr` — `.size`, `.ipoint`, `.parent`, ...
+    Attr(Box<Expr>, String),
+    /// `f(args)` where callee is a Var (user function) or Attr (method).
+    Call(Box<Expr>, Vec<Expr>),
+    /// `e[i, j, ...]` — tuple / space indexing; args may contain Splat.
+    Index(Box<Expr>, Vec<Expr>),
+    /// `*e` — splat a tuple into surrounding index/call arguments.
+    Splat(Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    /// `c ? t : f`
+    Ternary(Box<Expr>, Box<Expr>, Box<Expr>),
+    /// `(a, b, ...)` tuple literal (also used for 1-tuples written `(a,)`).
+    Tuple(Vec<Expr>),
+    Neg(Box<Expr>),
+}
+
+/// A whole DSL program.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Program {
+    pub stmts: Vec<Stmt>,
+}
+
+impl Program {
+    pub fn funcs(&self) -> impl Iterator<Item = &FuncDef> {
+        self.stmts.iter().filter_map(|s| match s {
+            Stmt::FuncDef(f) => Some(f),
+            _ => None,
+        })
+    }
+
+    pub fn func(&self, name: &str) -> Option<&FuncDef> {
+        self.funcs().find(|f| f.name == name)
+    }
+}

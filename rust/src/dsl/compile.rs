@@ -1,0 +1,504 @@
+//! DSL -> `MappingPolicy` compilation.
+//!
+//! This is the stand-in for the paper's DSL->C++ mapper compiler: instead of
+//! emitting Legion C++ mapping callbacks, we compile to a policy object the
+//! distributed executor consults for every mapping decision — processor
+//! selection, memory placement, layout, and index-task mapping.
+
+
+
+use super::ast::{Constraint, Program, Stmt};
+use super::error::{CompileError, EvalError};
+use super::eval::{Env, TaskCtx, Value};
+use super::parser::parse;
+use super::sema::analyze;
+use crate::machine::{MachineSpec, MemKind, ProcId, ProcKind};
+
+/// Resolved layout for one (task, region, processor) combination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Layout {
+    /// Array-of-structs (true) vs struct-of-arrays (false, default).
+    pub aos: bool,
+    /// Fortran order (true) vs C order (false, default).
+    pub f_order: bool,
+    /// Byte alignment, if constrained.
+    pub align: Option<u64>,
+}
+
+impl Default for Layout {
+    fn default() -> Self {
+        Layout { aos: false, f_order: false, align: None }
+    }
+}
+
+impl Layout {
+    fn apply(&mut self, c: Constraint) {
+        match c {
+            Constraint::Soa => self.aos = false,
+            Constraint::Aos => self.aos = true,
+            Constraint::COrder => self.f_order = false,
+            Constraint::FOrder => self.f_order = true,
+            Constraint::Align(v) => self.align = Some(v),
+            Constraint::NoAlign => self.align = None,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} {}{}",
+            if self.aos { "AOS" } else { "SOA" },
+            if self.f_order { "F_order" } else { "C_order" },
+            match self.align {
+                Some(a) => format!(" Align=={a}"),
+                None => String::new(),
+            }
+        )
+    }
+}
+
+/// A compiled mapper: the full set of mapping decisions for an application.
+#[derive(Debug, Clone)]
+pub struct MappingPolicy {
+    /// Original DSL source (cache key, LoC accounting, reporting).
+    pub source: String,
+    program: Program,
+    pub env: Env,
+}
+
+impl MappingPolicy {
+    /// Parse, analyze, and compile DSL source against a machine.
+    pub fn compile(src: &str, spec: &MachineSpec) -> Result<MappingPolicy, CompileError> {
+        let program = parse(src)?;
+        analyze(&program)?;
+        let mut env = Env::default();
+        for stmt in &program.stmts {
+            match stmt {
+                Stmt::FuncDef(f) => {
+                    env.funcs.insert(f.name.clone(), f.clone());
+                }
+                Stmt::Assign { name, expr } => {
+                    let v = env.eval_global(expr, spec).map_err(|e| match e {
+                        EvalError::NameNotFound(n) => CompileError::NameNotFound(n),
+                        other => CompileError::Other(other.to_string()),
+                    })?;
+                    env.globals.insert(name.clone(), v);
+                }
+                _ => {}
+            }
+        }
+        Ok(MappingPolicy { source: src.to_string(), program, env })
+    }
+
+    /// Lines of code of the mapper source (Table 1 accounting): non-empty,
+    /// non-comment lines.
+    pub fn loc(&self) -> usize {
+        count_loc(&self.source)
+    }
+
+    // ---- decision queries (last matching statement wins) -----------------
+
+    /// Processor-kind preference list for a task (default: CPU only).
+    pub fn proc_preference(&self, task: &str) -> Vec<ProcKind> {
+        let mut out = vec![ProcKind::Cpu];
+        for stmt in &self.program.stmts {
+            if let Stmt::Task { task: pat, procs } = stmt {
+                if pat.matches_name(task) {
+                    out = procs.clone();
+                }
+            }
+        }
+        out
+    }
+
+    /// Memory preference list for (task, region-name, region-position)
+    /// when the task runs on `kind`.  Default: the processor's natural
+    /// memory (FBMEM for GPU, SYSMEM otherwise).
+    pub fn memories(
+        &self,
+        task: &str,
+        region: &str,
+        position: usize,
+        kind: ProcKind,
+        spec: &MachineSpec,
+    ) -> Vec<MemKind> {
+        let mut out = vec![spec.default_memory(kind)];
+        let mut best_spec = (0u8, 0u8); // (task specificity, region specificity)
+        let mut seen_any = false;
+        for stmt in &self.program.stmts {
+            if let Stmt::Region { task: tp, region: rp, proc, mems } = stmt {
+                if tp.matches_name(task)
+                    && rp.matches_region(region, position)
+                    && proc.matches(kind)
+                {
+                    let s = (tp.specificity(), rp.specificity());
+                    // more specific wins; equal specificity -> later wins
+                    if !seen_any || s >= best_spec {
+                        out = mems.clone();
+                        best_spec = s;
+                        seen_any = true;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Layout for (task, region, processor kind); constraints from every
+    /// matching statement apply in order (later overrides per-field).
+    pub fn layout(
+        &self,
+        task: &str,
+        region: &str,
+        position: usize,
+        kind: ProcKind,
+    ) -> Layout {
+        let mut layout = Layout::default();
+        for stmt in &self.program.stmts {
+            if let Stmt::Layout { task: tp, region: rp, proc, constraints } = stmt {
+                if tp.matches_name(task)
+                    && rp.matches_region(region, position)
+                    && proc.matches(kind)
+                {
+                    for &c in constraints {
+                        layout.apply(c);
+                    }
+                }
+            }
+        }
+        layout
+    }
+
+    /// Index-task mapping function name, if any (last match wins —
+    /// Figure A10 relies on this: it lists five IndexTaskMap statements
+    /// per task and the final one takes effect).
+    pub fn index_map(&self, task: &str) -> Option<&str> {
+        let mut out = None;
+        for stmt in &self.program.stmts {
+            if let Stmt::IndexTaskMap { task: tp, func } = stmt {
+                if tp.matches_name(task) {
+                    out = Some(func.as_str());
+                }
+            }
+        }
+        out
+    }
+
+    /// Single-task mapping function name, if any.
+    pub fn single_map(&self, task: &str) -> Option<&str> {
+        let mut out = None;
+        for stmt in &self.program.stmts {
+            if let Stmt::SingleTaskMap { task: tp, func } = stmt {
+                if tp.matches_name(task) {
+                    out = Some(func.as_str());
+                }
+            }
+        }
+        out
+    }
+
+    /// Maximum concurrent instances of a task, if limited.
+    pub fn instance_limit(&self, task: &str) -> Option<i64> {
+        let mut out = None;
+        for stmt in &self.program.stmts {
+            if let Stmt::InstanceLimit { task: tp, limit } = stmt {
+                if tp.matches_name(task) {
+                    out = Some(*limit);
+                }
+            }
+        }
+        out
+    }
+
+    /// Whether a (task, region) pair is marked for eager collection.
+    pub fn collect_memory(&self, task: &str, region: &str, position: usize) -> bool {
+        self.program.stmts.iter().any(|s| {
+            matches!(s, Stmt::CollectMemory { task: tp, region: rp }
+                if tp.matches_name(task) && rp.matches_region(region, position))
+        })
+    }
+
+    /// All `InstanceLimit` statements present? (feedback engine uses this)
+    pub fn has_instance_limits(&self) -> bool {
+        self.program
+            .stmts
+            .iter()
+            .any(|s| matches!(s, Stmt::InstanceLimit { .. }))
+    }
+
+    /// Resolve the launch-invariant part of processor selection: the
+    /// processor kind and the mapping function (§Perf: hoisted out of the
+    /// per-point loop — both require statement-list scans).
+    pub fn resolve_task(
+        &self,
+        task: &str,
+        variants: &[ProcKind],
+        index_launch: bool,
+    ) -> Result<TaskResolution<'_>, EvalError> {
+        let kind = self
+            .proc_preference(task)
+            .into_iter()
+            .find(|k| variants.contains(k))
+            .or_else(|| variants.first().copied())
+            .ok_or_else(|| {
+                EvalError::TypeError(format!("task '{task}' has no variants"))
+            })?;
+        let func = if index_launch {
+            self.index_map(task)
+        } else {
+            self.single_map(task).or_else(|| self.index_map(task))
+        };
+        Ok(TaskResolution { kind, func })
+    }
+
+    /// Map one launch point under a hoisted [`TaskResolution`].
+    pub fn map_point(
+        &self,
+        res: &TaskResolution<'_>,
+        ctx: &TaskCtx,
+        spec: &MachineSpec,
+    ) -> Result<ProcId, EvalError> {
+        let kind = res.kind;
+        if let Some(fname) = res.func {
+            let p = self.env.call_map_func(fname, ctx, spec)?;
+            // mapping functions are written against a specific Machine(K);
+            // if the task cannot run there, fall back to the same slot in
+            // the chosen kind's grid (Legion remaps variants similarly).
+            if p.kind == kind {
+                return Ok(p);
+            }
+            let per = spec.per_node(kind);
+            return Ok(ProcId { node: p.node, kind, index: p.index % per });
+        }
+        // Default distribution: block-map the linearized index point over
+        // the chosen kind's processors (Legion default mapper behaviour).
+        let total: i64 = ctx.ispace.iter().product::<i64>().max(1);
+        let lin = linearize(&ctx.ipoint, &ctx.ispace);
+        let nprocs = spec.count(kind) as i64;
+        let idx = (lin * nprocs / total).clamp(0, nprocs - 1) as usize;
+        let per = spec.per_node(kind);
+        Ok(ProcId { node: idx / per, kind, index: idx % per })
+    }
+
+    /// Resolve the processor for one point of an index launch.
+    /// (Convenience wrapper over [`Self::resolve_task`] + [`Self::map_point`].)
+    pub fn select_processor(
+        &self,
+        task: &str,
+        ctx: &TaskCtx,
+        variants: &[ProcKind],
+        spec: &MachineSpec,
+    ) -> Result<ProcId, EvalError> {
+        let res =
+            self.resolve_task(task, variants, ctx.ispace.iter().product::<i64>() > 1)?;
+        self.map_point(&res, ctx, spec)
+    }
+
+    /// Choose the memory kind for a region argument given the processor,
+    /// respecting reachability (first preference the processor can use).
+    pub fn select_memory(
+        &self,
+        task: &str,
+        region: &str,
+        position: usize,
+        proc: ProcId,
+        spec: &MachineSpec,
+    ) -> MemKind {
+        let prefs = self.memories(task, region, position, proc.kind, spec);
+        for m in &prefs {
+            let mem = spec.mem_for(proc, *m);
+            if spec.access_bw(proc, mem).is_some() {
+                return *m;
+            }
+        }
+        spec.default_memory(proc.kind)
+    }
+
+    /// Expose a global (tests / diagnostics).
+    pub fn global(&self, name: &str) -> Option<&Value> {
+        self.env.globals.get(name)
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+}
+
+/// Launch-invariant processor-selection decision (see
+/// [`MappingPolicy::resolve_task`]).
+#[derive(Debug, Clone, Copy)]
+pub struct TaskResolution<'a> {
+    pub kind: ProcKind,
+    pub func: Option<&'a str>,
+}
+
+/// Row-major linearization of a point in its extent box.
+pub fn linearize(point: &[i64], extent: &[i64]) -> i64 {
+    let mut lin = 0i64;
+    for (p, e) in point.iter().zip(extent) {
+        lin = lin * e + p;
+    }
+    lin
+}
+
+/// Count non-empty, non-comment lines (Table 1 LoC accounting).
+pub fn count_loc(src: &str) -> usize {
+    src.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#') && !l.starts_with("//"))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> MachineSpec {
+        MachineSpec::p100_cluster()
+    }
+
+    fn compile(src: &str) -> MappingPolicy {
+        MappingPolicy::compile(src, &spec()).unwrap()
+    }
+
+    const BASE: &str = "Task * GPU,CPU;\n\
+                        Region * * GPU FBMEM;\n\
+                        Region * * CPU SYSMEM;\n\
+                        Layout * * * SOA C_order;\n";
+
+    #[test]
+    fn compiles_strategy_2_style_mapper() {
+        let p = compile(&format!(
+            "{BASE}Region * rp_shared GPU ZCMEM;\nRegion * rp_ghost GPU ZCMEM;"
+        ));
+        assert_eq!(
+            p.memories("t", "rp_shared", 0, ProcKind::Gpu, &spec()),
+            vec![MemKind::ZcMem]
+        );
+        assert_eq!(
+            p.memories("t", "other", 0, ProcKind::Gpu, &spec()),
+            vec![MemKind::FbMem]
+        );
+    }
+
+    #[test]
+    fn specific_task_overrides_wildcard() {
+        let p = compile("Task * GPU,CPU;\nTask calculate_new_currents CPU;");
+        assert_eq!(
+            p.proc_preference("calculate_new_currents"),
+            vec![ProcKind::Cpu]
+        );
+        assert_eq!(p.proc_preference("other"), vec![ProcKind::Gpu, ProcKind::Cpu]);
+    }
+
+    #[test]
+    fn layout_constraints_merge_in_order() {
+        let p = compile(
+            "Layout * * * SOA C_order;\nLayout * r GPU AOS Align==128;",
+        );
+        let l = p.layout("t", "r", 0, ProcKind::Gpu);
+        assert!(l.aos);
+        assert!(!l.f_order); // inherited from first statement
+        assert_eq!(l.align, Some(128));
+        let l2 = p.layout("t", "r", 0, ProcKind::Cpu);
+        assert!(!l2.aos);
+    }
+
+    #[test]
+    fn default_layout_is_soa_c_order() {
+        let p = compile("Task * GPU;");
+        assert_eq!(p.layout("t", "r", 0, ProcKind::Gpu), Layout::default());
+    }
+
+    #[test]
+    fn region_position_pattern() {
+        let p = compile(&format!("{BASE}Region distribute_charge 1 GPU ZCMEM;"));
+        assert_eq!(
+            p.memories("distribute_charge", "whatever", 1, ProcKind::Gpu, &spec()),
+            vec![MemKind::ZcMem]
+        );
+        assert_eq!(
+            p.memories("distribute_charge", "whatever", 0, ProcKind::Gpu, &spec()),
+            vec![MemKind::FbMem]
+        );
+    }
+
+    #[test]
+    fn index_task_map_last_wins() {
+        let p = compile(
+            "m = Machine(GPU);\n\
+             def a(Task t) { return m[0, 0]; }\n\
+             def b(Task t) { return m[0, 1]; }\n\
+             IndexTaskMap t1 a;\n\
+             IndexTaskMap t1 b;",
+        );
+        assert_eq!(p.index_map("t1"), Some("b"));
+    }
+
+    #[test]
+    fn select_processor_via_map_func() {
+        let p = compile(
+            "Task * GPU;\n\
+             mgpu = Machine(GPU);\n\
+             def cyc(Task task) {\n\
+               ip = task.ipoint;\n\
+               return mgpu[ip[0] % mgpu.size[0], ip[0] % mgpu.size[1]];\n\
+             }\n\
+             IndexTaskMap work cyc;",
+        );
+        let ctx = TaskCtx { ipoint: vec![6], ispace: vec![8], parent_proc: None };
+        let proc = p
+            .select_processor("work", &ctx, &[ProcKind::Gpu], &spec())
+            .unwrap();
+        assert_eq!((proc.node, proc.index), (0, 2));
+    }
+
+    #[test]
+    fn select_processor_default_block() {
+        let p = compile("Task * GPU;");
+        let s = spec();
+        // 16 points onto 8 GPUs: point 0 -> gpu 0, point 15 -> gpu 7
+        let mk = |i: i64| TaskCtx { ipoint: vec![i], ispace: vec![16], parent_proc: None };
+        let p0 = p.select_processor("t", &mk(0), &[ProcKind::Gpu], &s).unwrap();
+        let p15 = p.select_processor("t", &mk(15), &[ProcKind::Gpu], &s).unwrap();
+        assert_eq!((p0.node, p0.index), (0, 0));
+        assert_eq!((p15.node, p15.index), (1, 3));
+    }
+
+    #[test]
+    fn variant_fallback_when_preference_unavailable() {
+        let p = compile("Task * GPU,CPU;");
+        let ctx = TaskCtx { ipoint: vec![0], ispace: vec![1], parent_proc: None };
+        // task only has a CPU variant -> lands on CPU despite GPU preference
+        let proc = p.select_processor("t", &ctx, &[ProcKind::Cpu], &spec()).unwrap();
+        assert_eq!(proc.kind, ProcKind::Cpu);
+    }
+
+    #[test]
+    fn select_memory_respects_reachability() {
+        // SYSMEM preference for a GPU task is unreachable -> default FBMEM
+        let p = compile("Task * GPU;\nRegion * * GPU SYSMEM;");
+        let s = spec();
+        let g = ProcId { node: 0, kind: ProcKind::Gpu, index: 0 };
+        assert_eq!(p.select_memory("t", "r", 0, g, &s), MemKind::FbMem);
+    }
+
+    #[test]
+    fn loc_counts_code_lines_only() {
+        assert_eq!(count_loc("# comment\n\nTask * GPU;\n  \nRegion * * GPU FBMEM;"), 2);
+    }
+
+    #[test]
+    fn instance_limit_and_collect() {
+        let p = compile("InstanceLimit cnc 4;\nCollectMemory cnc *;");
+        assert_eq!(p.instance_limit("cnc"), Some(4));
+        assert!(p.collect_memory("cnc", "anything", 3));
+        assert!(!p.collect_memory("other", "r", 0));
+        assert!(p.has_instance_limits());
+    }
+
+    #[test]
+    fn compile_error_propagates_from_globals() {
+        let err = MappingPolicy::compile("m = nope;", &spec()).unwrap_err();
+        assert_eq!(err.to_string(), "nope not found");
+    }
+}

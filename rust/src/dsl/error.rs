@@ -1,0 +1,95 @@
+//! DSL error types.  Message text matters here: the feedback engine
+//! (Table 2 / A1 of the paper) keyword-matches these exact phrasings to
+//! produce explanations and suggestions for the LLM optimizer.
+
+use thiserror::Error;
+
+/// Compile-time errors (lexing, parsing, semantic analysis).
+#[derive(Debug, Clone, PartialEq, Eq, Error)]
+pub enum CompileError {
+    /// The paper's canonical syntax-error feedback: a python-style colon in
+    /// a function definition ("Syntax error, unexpected :, expecting {").
+    #[error("Syntax error, unexpected {found}, expecting {expected}")]
+    Syntax { found: String, expected: String, line: usize },
+
+    #[error("Unknown token '{0}' at line {1}")]
+    UnknownToken(String, usize),
+
+    #[error("IndexTaskMap's function undefined: {0}")]
+    IndexMapFuncUndefined(String),
+
+    #[error("SingleTaskMap's function undefined: {0}")]
+    SingleMapFuncUndefined(String),
+
+    /// Unresolved identifier in a mapping function ("mgpu not found").
+    #[error("{0} not found")]
+    NameNotFound(String),
+
+    #[error("Unknown processor kind '{0}' at line {1}")]
+    UnknownProc(String, usize),
+
+    #[error("Unknown memory kind '{0}' at line {1}")]
+    UnknownMemory(String, usize),
+
+    #[error("Unknown layout constraint '{0}' at line {1}")]
+    UnknownConstraint(String, usize),
+
+    #[error("Duplicate function definition '{0}'")]
+    DuplicateFunc(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl CompileError {
+    pub fn syntax(found: impl Into<String>, expected: impl Into<String>, line: usize) -> Self {
+        CompileError::Syntax { found: found.into(), expected: expected.into(), line }
+    }
+}
+
+/// Runtime errors raised while *evaluating* a mapping function or applying
+/// the policy during execution.  These surface as Execution Errors in the
+/// paper's feedback taxonomy.
+#[derive(Debug, Clone, PartialEq, Eq, Error)]
+pub enum EvalError {
+    #[error("Slice processor index out of bound")]
+    IndexOutOfBound,
+
+    #[error("{0} not found")]
+    NameNotFound(String),
+
+    #[error("type error: {0}")]
+    TypeError(String),
+
+    #[error("division by zero in mapping function")]
+    DivByZero,
+
+    #[error("mapping function '{0}' did not return a processor")]
+    NoProcessor(String),
+
+    #[error("transformation error: {0}")]
+    BadTransform(String),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn colon_error_message_matches_paper() {
+        let e = CompileError::syntax(":", "{", 7);
+        assert_eq!(e.to_string(), "Syntax error, unexpected :, expecting {");
+    }
+
+    #[test]
+    fn name_not_found_matches_paper() {
+        let e = CompileError::NameNotFound("mgpu".into());
+        assert_eq!(e.to_string(), "mgpu not found");
+    }
+
+    #[test]
+    fn oob_matches_paper() {
+        let e = EvalError::IndexOutOfBound;
+        assert_eq!(e.to_string(), "Slice processor index out of bound");
+    }
+}

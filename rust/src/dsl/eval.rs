@@ -1,0 +1,715 @@
+//! Interpreter for DSL mapping functions (`FuncDef` bodies).
+//!
+//! Mapping functions compute *where an index-task point runs*: they take a
+//! task (or its `ipoint` / `ispace` tuples), reshape processor spaces with
+//! the A.2 transformation primitives, and return a concrete processor by
+//! indexing a space.  Integer division truncates toward zero, exactly as the
+//! paper specifies when proving split/merge invertibility.
+
+use std::collections::HashMap;
+
+use super::ast::{BinOp, Expr, FuncDef, FuncStmt, ParamTy};
+
+/// Small vector-backed variable scope (§Perf: mapping functions have a
+/// handful of locals; linear lookup beats a per-call HashMap by ~2x on
+/// the select_processor hot path).
+#[derive(Debug, Default)]
+pub struct Scope {
+    vars: Vec<(String, Value)>,
+}
+
+impl Scope {
+    pub fn with_capacity(n: usize) -> Scope {
+        Scope { vars: Vec::with_capacity(n) }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.vars.iter().rev().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    pub fn set(&mut self, name: &str, value: Value) {
+        if let Some(slot) = self.vars.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = value;
+        } else {
+            self.vars.push((name.to_string(), value));
+        }
+    }
+}
+use super::error::EvalError;
+use crate::machine::{MachineSpec, ProcId, ProcSpace, SpaceError};
+
+/// Runtime values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Tuple(Vec<i64>),
+    Space(ProcSpace),
+    Proc(ProcId),
+    Task(TaskCtx),
+    /// `task.parent` — handle that only supports `.processor(space)`.
+    Parent(Option<ProcId>),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Int(_) => "int",
+            Value::Tuple(_) => "Tuple",
+            Value::Space(_) => "Machine",
+            Value::Proc(_) => "Processor",
+            Value::Task(_) => "Task",
+            Value::Parent(_) => "Parent",
+        }
+    }
+
+    fn as_int(&self) -> Result<i64, EvalError> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            other => Err(EvalError::TypeError(format!(
+                "expected int, got {}",
+                other.type_name()
+            ))),
+        }
+    }
+}
+
+/// The task handle a mapping function sees.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TaskCtx {
+    /// The task's point in the launch domain.
+    pub ipoint: Vec<i64>,
+    /// The launch domain extents.
+    pub ispace: Vec<i64>,
+    /// Processor the parent task ran on (for `SingleTaskMap same_point`).
+    pub parent_proc: Option<ProcId>,
+}
+
+/// Evaluation environment shared by all function invocations of a policy:
+/// compile-time globals (e.g. `mgpu = Machine(GPU)`) plus function defs.
+#[derive(Debug, Clone, Default)]
+pub struct Env {
+    pub globals: HashMap<String, Value>,
+    pub funcs: HashMap<String, FuncDef>,
+}
+
+const MAX_CALL_DEPTH: usize = 16;
+
+impl Env {
+    /// Evaluate a top-level assignment expression (no task in scope).
+    pub fn eval_global(
+        &self,
+        expr: &Expr,
+        spec: &MachineSpec,
+    ) -> Result<Value, EvalError> {
+        let locals = Scope::default();
+        self.eval(expr, &locals, spec, 0)
+    }
+
+    /// Invoke a mapping function on a task context; must yield a processor.
+    pub fn call_map_func(
+        &self,
+        name: &str,
+        task: &TaskCtx,
+        spec: &MachineSpec,
+    ) -> Result<ProcId, EvalError> {
+        let f = self
+            .funcs
+            .get(name)
+            .ok_or_else(|| EvalError::NameNotFound(name.to_string()))?;
+        let mut locals = Scope::with_capacity(8);
+        // Bind by signature shape: (Task t) | (Tuple ipoint, Tuple ispace)
+        match f.params.len() {
+            1 => {
+                locals.set(&f.params[0].name, Value::Task(task.clone()));
+            }
+            2 => {
+                locals.set(&f.params[0].name, Value::Tuple(task.ipoint.clone()));
+                locals.set(&f.params[1].name, Value::Tuple(task.ispace.clone()));
+            }
+            n => {
+                return Err(EvalError::TypeError(format!(
+                    "mapping function '{name}' takes {n} parameters; expected 1 or 2"
+                )))
+            }
+        }
+        match self.run_body(&f.body, locals, spec, 0)? {
+            Value::Proc(p) => Ok(p),
+            _ => Err(EvalError::NoProcessor(name.to_string())),
+        }
+    }
+
+    fn run_body(
+        &self,
+        body: &[FuncStmt],
+        mut locals: Scope,
+        spec: &MachineSpec,
+        depth: usize,
+    ) -> Result<Value, EvalError> {
+        for stmt in body {
+            match stmt {
+                FuncStmt::Assign(name, e) => {
+                    let v = self.eval(e, &locals, spec, depth)?;
+                    locals.set(name, v);
+                }
+                FuncStmt::Return(e) => return self.eval(e, &locals, spec, depth),
+            }
+        }
+        Err(EvalError::TypeError("function body has no return".into()))
+    }
+
+    fn eval(
+        &self,
+        expr: &Expr,
+        locals: &Scope,
+        spec: &MachineSpec,
+        depth: usize,
+    ) -> Result<Value, EvalError> {
+        match expr {
+            Expr::Int(v) => Ok(Value::Int(*v)),
+            Expr::Var(name) => locals
+                .get(name)
+                .or_else(|| self.globals.get(name))
+                .cloned()
+                .ok_or_else(|| EvalError::NameNotFound(name.clone())),
+            Expr::Machine(kind) => Ok(Value::Space(ProcSpace::machine(spec, *kind))),
+            Expr::Neg(e) => {
+                match self.eval(e, locals, spec, depth)? {
+                    Value::Int(v) => Ok(Value::Int(-v)),
+                    Value::Tuple(t) => Ok(Value::Tuple(t.into_iter().map(|v| -v).collect())),
+                    other => Err(EvalError::TypeError(format!(
+                        "cannot negate {}",
+                        other.type_name()
+                    ))),
+                }
+            }
+            Expr::Splat(_) => Err(EvalError::TypeError(
+                "splat (*) only valid inside index/call arguments".into(),
+            )),
+            Expr::Tuple(items) => {
+                let mut out = Vec::with_capacity(items.len());
+                for it in items {
+                    out.push(self.eval(it, locals, spec, depth)?.as_int()?);
+                }
+                Ok(Value::Tuple(out))
+            }
+            Expr::Attr(base, attr) => {
+                let b = self.eval(base, locals, spec, depth)?;
+                self.attr(b, attr)
+            }
+            Expr::Binary(op, lhs, rhs) => {
+                let l = self.eval(lhs, locals, spec, depth)?;
+                let r = self.eval(rhs, locals, spec, depth)?;
+                binary(*op, l, r)
+            }
+            Expr::Ternary(c, t, f) => {
+                let cond = self.eval(c, locals, spec, depth)?.as_int()?;
+                if cond != 0 {
+                    self.eval(t, locals, spec, depth)
+                } else {
+                    self.eval(f, locals, spec, depth)
+                }
+            }
+            Expr::Index(base, args) => {
+                let b = self.eval(base, locals, spec, depth)?;
+                let idx = self.flatten_args(args, locals, spec, depth)?;
+                match b {
+                    Value::Space(sp) => {
+                        let p = sp.proc_at(&idx).map_err(space_err)?;
+                        Ok(Value::Proc(p))
+                    }
+                    Value::Tuple(t) => {
+                        if idx.len() != 1 {
+                            return Err(EvalError::TypeError(
+                                "tuple index takes one subscript".into(),
+                            ));
+                        }
+                        let i = idx[0];
+                        let i = if i < 0 { t.len() as i64 + i } else { i };
+                        t.get(i as usize)
+                            .copied()
+                            .map(Value::Int)
+                            .ok_or(EvalError::IndexOutOfBound)
+                    }
+                    other => Err(EvalError::TypeError(format!(
+                        "cannot index {}",
+                        other.type_name()
+                    ))),
+                }
+            }
+            Expr::Call(callee, args) => self.call(callee, args, locals, spec, depth),
+        }
+    }
+
+    /// Flatten index/call arguments, expanding `*tuple` splats.
+    fn flatten_args(
+        &self,
+        args: &[Expr],
+        locals: &Scope,
+        spec: &MachineSpec,
+        depth: usize,
+    ) -> Result<Vec<i64>, EvalError> {
+        let mut out = Vec::new();
+        for a in args {
+            match a {
+                Expr::Splat(inner) => match self.eval(inner, locals, spec, depth)? {
+                    Value::Tuple(t) => out.extend(t),
+                    other => {
+                        return Err(EvalError::TypeError(format!(
+                            "cannot splat {}",
+                            other.type_name()
+                        )))
+                    }
+                },
+                _ => out.push(self.eval(a, locals, spec, depth)?.as_int()?),
+            }
+        }
+        Ok(out)
+    }
+
+    fn attr(&self, base: Value, attr: &str) -> Result<Value, EvalError> {
+        match (base, attr) {
+            (Value::Space(sp), "size") => Ok(Value::Tuple(
+                sp.dims().iter().map(|&d| d as i64).collect(),
+            )),
+            (Value::Task(t), "ipoint") => Ok(Value::Tuple(t.ipoint)),
+            (Value::Task(t), "ispace") => Ok(Value::Tuple(t.ispace)),
+            (Value::Task(t), "parent") => Ok(Value::Parent(t.parent_proc)),
+            (Value::Tuple(t), "size") => Ok(Value::Int(t.len() as i64)),
+            (b, a) => Err(EvalError::TypeError(format!(
+                "{} has no attribute '{a}'",
+                b.type_name()
+            ))),
+        }
+    }
+
+    fn call(
+        &self,
+        callee: &Expr,
+        args: &[Expr],
+        locals: &Scope,
+        spec: &MachineSpec,
+        depth: usize,
+    ) -> Result<Value, EvalError> {
+        if depth > MAX_CALL_DEPTH {
+            return Err(EvalError::TypeError("call depth limit exceeded".into()));
+        }
+        match callee {
+            // method call: space.split(...) / task.parent.processor(m)
+            Expr::Attr(base, method) => {
+                let b = self.eval(base, locals, spec, depth)?;
+                match b {
+                    Value::Space(sp) => {
+                        self.space_method(&sp, method, args, locals, spec, depth)
+                    }
+                    Value::Parent(p) => {
+                        if method != "processor" {
+                            return Err(EvalError::TypeError(format!(
+                                "Parent has no method '{method}'"
+                            )));
+                        }
+                        // parent.processor(m): the parent's index in m's
+                        // base (node, proc) coordinates
+                        let p = p.ok_or_else(|| {
+                            EvalError::TypeError("task has no parent".into())
+                        })?;
+                        Ok(Value::Tuple(vec![p.node as i64, p.index as i64]))
+                    }
+                    other => Err(EvalError::TypeError(format!(
+                        "{} has no method '{method}'",
+                        other.type_name()
+                    ))),
+                }
+            }
+            // user function call
+            Expr::Var(fname) => {
+                let f = self
+                    .funcs
+                    .get(fname)
+                    .ok_or_else(|| EvalError::NameNotFound(fname.clone()))?;
+                if f.params.len() != args.len() {
+                    return Err(EvalError::TypeError(format!(
+                        "'{fname}' takes {} args, got {}",
+                        f.params.len(),
+                        args.len()
+                    )));
+                }
+                let mut inner = Scope::with_capacity(f.params.len() + 4);
+                for (p, a) in f.params.iter().zip(args) {
+                    let v = self.eval(a, locals, spec, depth)?;
+                    // best-effort type check against declared param types
+                    let ok = match (p.ty, &v) {
+                        (ParamTy::Int, Value::Int(_)) => true,
+                        (ParamTy::Tuple, Value::Tuple(_)) => true,
+                        (ParamTy::Task, Value::Task(_)) => true,
+                        (ParamTy::Untyped, _) => true,
+                        _ => false,
+                    };
+                    if !ok {
+                        return Err(EvalError::TypeError(format!(
+                            "'{fname}' parameter '{}' expects {:?}, got {}",
+                            p.name,
+                            p.ty,
+                            v.type_name()
+                        )));
+                    }
+                    inner.set(&p.name, v);
+                }
+                self.run_body(&f.body, inner, spec, depth + 1)
+            }
+            other => Err(EvalError::TypeError(format!(
+                "expression {other:?} is not callable"
+            ))),
+        }
+    }
+
+    fn space_method(
+        &self,
+        sp: &ProcSpace,
+        method: &str,
+        args: &[Expr],
+        locals: &Scope,
+        spec: &MachineSpec,
+        depth: usize,
+    ) -> Result<Value, EvalError> {
+        let int_arg = |i: usize| -> Result<i64, EvalError> {
+            self.eval(&args[i], locals, spec, depth)?.as_int()
+        };
+        let need = |n: usize| -> Result<(), EvalError> {
+            if args.len() != n {
+                Err(EvalError::TypeError(format!(
+                    "{method} takes {n} arguments, got {}",
+                    args.len()
+                )))
+            } else {
+                Ok(())
+            }
+        };
+        let result = match method {
+            "split" => {
+                need(2)?;
+                sp.split(int_arg(0)? as usize, int_arg(1)? as usize)
+            }
+            "merge" => {
+                need(2)?;
+                sp.merge(int_arg(0)? as usize, int_arg(1)? as usize)
+            }
+            "swap" => {
+                need(2)?;
+                sp.swap(int_arg(0)? as usize, int_arg(1)? as usize)
+            }
+            "slice" => {
+                need(3)?;
+                sp.slice(
+                    int_arg(0)? as usize,
+                    int_arg(1)? as usize,
+                    int_arg(2)? as usize,
+                )
+            }
+            // decompose(dim, n) or decompose(dim, tuple) — tuple arity
+            // gives the part count (paper A.5/A.6 passes the iteration
+            // space to mean "match its dimensionality")
+            "decompose" => {
+                need(2)?;
+                let dim = int_arg(0)? as usize;
+                let nparts = match self.eval(&args[1], locals, spec, depth)? {
+                    Value::Int(v) => v as usize,
+                    Value::Tuple(t) => t.len(),
+                    other => {
+                        return Err(EvalError::TypeError(format!(
+                            "decompose expects int or Tuple, got {}",
+                            other.type_name()
+                        )))
+                    }
+                };
+                sp.decompose(dim, nparts)
+            }
+            _ => {
+                return Err(EvalError::TypeError(format!(
+                    "Machine has no method '{method}'"
+                )))
+            }
+        };
+        result.map(Value::Space).map_err(space_err)
+    }
+}
+
+fn space_err(e: SpaceError) -> EvalError {
+    match e {
+        SpaceError::IndexOutOfBound => EvalError::IndexOutOfBound,
+        SpaceError::BadTransform(m) => EvalError::BadTransform(m),
+    }
+}
+
+/// Binary operators over ints and elementwise tuples (int broadcasts).
+fn binary(op: BinOp, l: Value, r: Value) -> Result<Value, EvalError> {
+    use Value::*;
+    match (l, r) {
+        (Int(a), Int(b)) => scalar(op, a, b).map(Int),
+        (Tuple(a), Tuple(b)) => {
+            if a.len() != b.len() {
+                return Err(EvalError::TypeError(format!(
+                    "tuple length mismatch: {} vs {}",
+                    a.len(),
+                    b.len()
+                )));
+            }
+            a.iter()
+                .zip(&b)
+                .map(|(&x, &y)| scalar(op, x, y))
+                .collect::<Result<Vec<_>, _>>()
+                .map(Tuple)
+        }
+        (Tuple(a), Int(b)) => a
+            .iter()
+            .map(|&x| scalar(op, x, b))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Tuple),
+        (Int(a), Tuple(b)) => b
+            .iter()
+            .map(|&y| scalar(op, a, y))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Tuple),
+        (l, r) => Err(EvalError::TypeError(format!(
+            "cannot apply {op:?} to {} and {}",
+            l.type_name(),
+            r.type_name()
+        ))),
+    }
+}
+
+fn scalar(op: BinOp, a: i64, b: i64) -> Result<i64, EvalError> {
+    Ok(match op {
+        BinOp::Add => a.wrapping_add(b),
+        BinOp::Sub => a.wrapping_sub(b),
+        BinOp::Mul => a.wrapping_mul(b),
+        BinOp::Div => {
+            if b == 0 {
+                return Err(EvalError::DivByZero);
+            }
+            a / b // trunc toward zero, per the paper's invertibility proof
+        }
+        BinOp::Mod => {
+            if b == 0 {
+                return Err(EvalError::DivByZero);
+            }
+            a % b
+        }
+        BinOp::Eq => (a == b) as i64,
+        BinOp::Ne => (a != b) as i64,
+        BinOp::Lt => (a < b) as i64,
+        BinOp::Gt => (a > b) as i64,
+        BinOp::Le => (a <= b) as i64,
+        BinOp::Ge => (a >= b) as i64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse;
+    use crate::machine::ProcKind;
+
+    fn env_of(src: &str) -> (Env, MachineSpec) {
+        let spec = MachineSpec::p100_cluster();
+        let prog = parse(src).unwrap();
+        let mut env = Env::default();
+        for stmt in &prog.stmts {
+            match stmt {
+                crate::dsl::ast::Stmt::FuncDef(f) => {
+                    env.funcs.insert(f.name.clone(), f.clone());
+                }
+                crate::dsl::ast::Stmt::Assign { name, expr } => {
+                    let v = env.eval_global(expr, &spec).unwrap();
+                    env.globals.insert(name.clone(), v);
+                }
+                _ => {}
+            }
+        }
+        (env, spec)
+    }
+
+    fn task(ipoint: &[i64], ispace: &[i64]) -> TaskCtx {
+        TaskCtx {
+            ipoint: ipoint.to_vec(),
+            ispace: ispace.to_vec(),
+            parent_proc: None,
+        }
+    }
+
+    #[test]
+    fn block1d_from_figure_a9() {
+        let (env, spec) = env_of(
+            "mgpu = Machine(GPU);\n\
+             def block1d(Task task) {\n\
+               ip = task.ipoint;\n\
+               return mgpu[ip[0] % mgpu.size[0], ip[0] % mgpu.size[1]];\n\
+             }",
+        );
+        let p = env.call_map_func("block1d", &task(&[5], &[8]), &spec).unwrap();
+        // 5 % 2 = 1 (node), 5 % 4 = 1 (gpu)
+        assert_eq!((p.node, p.index), (1, 1));
+        assert_eq!(p.kind, ProcKind::Gpu);
+    }
+
+    #[test]
+    fn block2d_common_mapping_function() {
+        // A.3 block2D: idx = ipoint * m.size / ispace
+        let (env, spec) = env_of(
+            "m = Machine(GPU);\n\
+             def block2d(Tuple ipoint, Tuple ispace) {\n\
+               idx = ipoint * m.size / ispace;\n\
+               return m[*idx];\n\
+             }",
+        );
+        // ispace (4,8) onto (2,4): point (3,7) -> (3*2/4, 7*4/8) = (1,3)
+        let p = env.call_map_func("block2d", &task(&[3, 7], &[4, 8]), &spec).unwrap();
+        assert_eq!((p.node, p.index), (1, 3));
+    }
+
+    #[test]
+    fn cyclic2d_wraps() {
+        let (env, spec) = env_of(
+            "m = Machine(GPU);\n\
+             def cyclic2d(Tuple ipoint, Tuple ispace) {\n\
+               idx = ipoint % m.size;\n\
+               return m[*idx];\n\
+             }",
+        );
+        let p = env.call_map_func("cyclic2d", &task(&[5, 9], &[16, 16]), &spec).unwrap();
+        assert_eq!((p.node, p.index), (1, 1));
+    }
+
+    #[test]
+    fn out_of_bound_index_is_execution_error() {
+        let (env, spec) = env_of(
+            "m = Machine(GPU);\n\
+             def bad(Task task) {\n\
+               ip = task.ipoint;\n\
+               return m[ip[0], 0];\n\
+             }",
+        );
+        let err = env.call_map_func("bad", &task(&[7], &[8]), &spec).unwrap_err();
+        assert_eq!(err, EvalError::IndexOutOfBound);
+        assert_eq!(err.to_string(), "Slice processor index out of bound");
+    }
+
+    #[test]
+    fn undefined_global_reported_by_name() {
+        let (env, spec) = env_of(
+            "def f(Task task) {\n\
+               return mgpu[0, 0];\n\
+             }",
+        );
+        let err = env.call_map_func("f", &task(&[0], &[1]), &spec).unwrap_err();
+        assert_eq!(err.to_string(), "mgpu not found");
+    }
+
+    #[test]
+    fn merge_split_chain_in_dsl() {
+        // linearize 2D (2,4) into 1D of 8 then block over it
+        let (env, spec) = env_of(
+            "m = Machine(GPU);\n\
+             m1 = m.merge(0, 1);\n\
+             def lin(Task task) {\n\
+               ip = task.ipoint;\n\
+               return m1[ip[0] % m1.size[0]];\n\
+             }",
+        );
+        // merged index 5 -> (5 % 2, 5 / 2) = (1, 2)
+        let p = env.call_map_func("lin", &task(&[5], &[8]), &spec).unwrap();
+        assert_eq!((p.node, p.index), (1, 2));
+    }
+
+    #[test]
+    fn ternary_and_comparison() {
+        let (env, spec) = env_of(
+            "m = Machine(GPU);\n\
+             def g(Tuple ipoint, Tuple ispace) {\n\
+               grid = ispace[0] > ispace[2] ? ispace[0] : ispace[2];\n\
+               lin = ipoint[0] + ipoint[1] * grid + ipoint[2] * grid * grid;\n\
+               return m[lin % m.size[0], (lin / m.size[0]) % m.size[1]];\n\
+             }",
+        );
+        let p = env
+            .call_map_func("g", &task(&[1, 0, 2], &[2, 2, 4]), &spec)
+            .unwrap();
+        // grid = max(2,4)=4, lin = 1 + 0 + 2*16 = 33; node=33%2=1, gpu=(33/2)%4=0
+        assert_eq!((p.node, p.index), (1, 0));
+    }
+
+    #[test]
+    fn helper_function_call() {
+        let (env, spec) = env_of(
+            "m = Machine(GPU);\n\
+             def blockp(Tuple ipoint, Tuple ispace, int dim) {\n\
+               return ipoint[dim] * m.size[dim] / ispace[dim];\n\
+             }\n\
+             def f(Tuple ipoint, Tuple ispace) {\n\
+               return m[blockp(ipoint, ispace, 0), blockp(ipoint, ispace, 1)];\n\
+             }",
+        );
+        let p = env.call_map_func("f", &task(&[1, 6], &[2, 8]), &spec).unwrap();
+        assert_eq!((p.node, p.index), (1, 3));
+    }
+
+    #[test]
+    fn parent_processor_same_point() {
+        let (env, spec) = env_of(
+            "m_2d = Machine(GPU);\n\
+             def same_point(Task task) {\n\
+               return m_2d[*task.parent.processor(m_2d)];\n\
+             }",
+        );
+        let mut t = task(&[0], &[1]);
+        t.parent_proc = Some(ProcId { node: 1, kind: ProcKind::Gpu, index: 3 });
+        let p = env.call_map_func("same_point", &t, &spec).unwrap();
+        assert_eq!((p.node, p.index), (1, 3));
+    }
+
+    #[test]
+    fn division_truncates_toward_zero() {
+        assert_eq!(scalar(BinOp::Div, 7, 2).unwrap(), 3);
+        assert_eq!(scalar(BinOp::Div, -7, 2).unwrap(), -3);
+    }
+
+    #[test]
+    fn div_by_zero_caught() {
+        let (env, spec) = env_of(
+            "m = Machine(GPU);\n\
+             def f(Tuple ipoint, Tuple ispace) {\n\
+               return m[ipoint[0] / 0, 0];\n\
+             }",
+        );
+        assert_eq!(
+            env.call_map_func("f", &task(&[1, 1], &[2, 2]), &spec).unwrap_err(),
+            EvalError::DivByZero
+        );
+    }
+
+    #[test]
+    fn decompose_with_tuple_arity() {
+        let (env, spec) = env_of(
+            "m = Machine(GPU);\n\
+             def f(Tuple ipoint, Tuple ispace) {\n\
+               m6 = m.decompose(0, ispace);\n\
+               return m6[0, 0, 0, ipoint[0] % m6.size[3]];\n\
+             }",
+        );
+        // decompose node-dim (2) into 3 parts -> dims like (2,1,1,4)
+        let p = env.call_map_func("f", &task(&[3, 0, 0], &[4, 4, 4]), &spec).unwrap();
+        assert_eq!(p.node, 0); // index (0,0,0) in node part -> node 0
+        assert!(p.index < 4);
+    }
+
+    #[test]
+    fn tuple_negative_index() {
+        let (env, spec) = env_of(
+            "m = Machine(GPU);\n\
+             def f(Tuple ipoint, Tuple ispace) {\n\
+               return m[0, ipoint[-1] % m.size[1]];\n\
+             }",
+        );
+        let p = env.call_map_func("f", &task(&[9, 6], &[16, 16]), &spec).unwrap();
+        assert_eq!(p.index, 2);
+    }
+}

@@ -1,0 +1,217 @@
+//! Lexer for the mapping DSL. `#` starts a line comment (the paper's
+//! examples use `#`; we also accept `//` since Figure A7-A10 mix styles).
+
+use super::error::CompileError;
+use super::token::{Spanned, Tok};
+
+pub fn lex(src: &str) -> Result<Vec<Spanned>, CompileError> {
+    let mut out = Vec::new();
+    let bytes: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    let mut line = 1;
+    let n = bytes.len();
+
+    while i < n {
+        let c = bytes[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '#' => {
+                while i < n && bytes[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < n && bytes[i + 1] == '/' => {
+                while i < n && bytes[i] != '\n' {
+                    i += 1;
+                }
+            }
+            ';' => { out.push(sp(Tok::Semi, line)); i += 1; }
+            ',' => { out.push(sp(Tok::Comma, line)); i += 1; }
+            '(' => { out.push(sp(Tok::LParen, line)); i += 1; }
+            ')' => { out.push(sp(Tok::RParen, line)); i += 1; }
+            '[' => { out.push(sp(Tok::LBracket, line)); i += 1; }
+            ']' => { out.push(sp(Tok::RBracket, line)); i += 1; }
+            '{' => { out.push(sp(Tok::LBrace, line)); i += 1; }
+            '}' => { out.push(sp(Tok::RBrace, line)); i += 1; }
+            '*' => { out.push(sp(Tok::Star, line)); i += 1; }
+            '+' => { out.push(sp(Tok::Plus, line)); i += 1; }
+            '-' => { out.push(sp(Tok::Minus, line)); i += 1; }
+            '/' => { out.push(sp(Tok::Slash, line)); i += 1; }
+            '%' => { out.push(sp(Tok::Percent, line)); i += 1; }
+            '.' => { out.push(sp(Tok::Dot, line)); i += 1; }
+            '?' => { out.push(sp(Tok::Question, line)); i += 1; }
+            ':' => { out.push(sp(Tok::Colon, line)); i += 1; }
+            '=' => {
+                if i + 1 < n && bytes[i + 1] == '=' {
+                    out.push(sp(Tok::EqEq, line));
+                    i += 2;
+                } else {
+                    out.push(sp(Tok::Assign, line));
+                    i += 1;
+                }
+            }
+            '!' => {
+                if i + 1 < n && bytes[i + 1] == '=' {
+                    out.push(sp(Tok::NotEq, line));
+                    i += 2;
+                } else {
+                    return Err(CompileError::UnknownToken("!".into(), line));
+                }
+            }
+            '<' => {
+                if i + 1 < n && bytes[i + 1] == '=' {
+                    out.push(sp(Tok::Le, line));
+                    i += 2;
+                } else {
+                    out.push(sp(Tok::Lt, line));
+                    i += 1;
+                }
+            }
+            '>' => {
+                if i + 1 < n && bytes[i + 1] == '=' {
+                    out.push(sp(Tok::Ge, line));
+                    i += 2;
+                } else {
+                    out.push(sp(Tok::Gt, line));
+                    i += 1;
+                }
+            }
+            _ if c.is_ascii_digit() => {
+                let start = i;
+                while i < n && bytes[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let text: String = bytes[start..i].iter().collect();
+                let v = text
+                    .parse::<i64>()
+                    .map_err(|_| CompileError::UnknownToken(text.clone(), line))?;
+                out.push(sp(Tok::Int(v), line));
+            }
+            _ if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < n && (bytes[i].is_ascii_alphanumeric() || bytes[i] == '_') {
+                    i += 1;
+                }
+                let word: String = bytes[start..i].iter().collect();
+                out.push(sp(keyword_or_ident(word), line));
+            }
+            _ => return Err(CompileError::UnknownToken(c.to_string(), line)),
+        }
+    }
+    out.push(sp(Tok::Eof, line));
+    Ok(out)
+}
+
+fn keyword_or_ident(word: String) -> Tok {
+    match word.as_str() {
+        "Task" => Tok::KwTask,
+        "Region" => Tok::KwRegion,
+        "Layout" => Tok::KwLayout,
+        "IndexTaskMap" => Tok::KwIndexTaskMap,
+        "SingleTaskMap" => Tok::KwSingleTaskMap,
+        "InstanceLimit" => Tok::KwInstanceLimit,
+        "CollectMemory" => Tok::KwCollectMemory,
+        "GarbageCollect" => Tok::KwGarbageCollect,
+        "def" => Tok::KwDef,
+        "return" => Tok::KwReturn,
+        "Machine" => Tok::KwMachine,
+        _ => Tok::Ident(word),
+    }
+}
+
+fn sp(tok: Tok, line: usize) -> Spanned {
+    Spanned { tok, line }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|s| s.tok).collect()
+    }
+
+    #[test]
+    fn lexes_task_statement() {
+        assert_eq!(
+            toks("Task task0 GPU;"),
+            vec![
+                Tok::KwTask,
+                Tok::Ident("task0".into()),
+                Tok::Ident("GPU".into()),
+                Tok::Semi,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_wildcards_and_lists() {
+        assert_eq!(
+            toks("Region * * GPU FBMEM;"),
+            vec![
+                Tok::KwRegion,
+                Tok::Star,
+                Tok::Star,
+                Tok::Ident("GPU".into()),
+                Tok::Ident("FBMEM".into()),
+                Tok::Semi,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_stripped() {
+        assert_eq!(toks("# a comment\nTask t CPU; // more"), toks("Task t CPU;"));
+    }
+
+    #[test]
+    fn eqeq_vs_assign() {
+        assert_eq!(
+            toks("Align==64 x = 1"),
+            vec![
+                Tok::Ident("Align".into()),
+                Tok::EqEq,
+                Tok::Int(64),
+                Tok::Ident("x".into()),
+                Tok::Assign,
+                Tok::Int(1),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn line_numbers_tracked() {
+        let ts = lex("Task a GPU;\n\ndef f(Task t) {\n}").unwrap();
+        let def = ts.iter().find(|s| s.tok == Tok::KwDef).unwrap();
+        assert_eq!(def.line, 3);
+    }
+
+    #[test]
+    fn comparison_operators() {
+        assert_eq!(
+            toks("a >= b < c != d"),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Ge,
+                Tok::Ident("b".into()),
+                Tok::Lt,
+                Tok::Ident("c".into()),
+                Tok::NotEq,
+                Tok::Ident("d".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_unknown_char() {
+        assert!(lex("Task @ GPU;").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! The mapping DSL (paper Section 4.1, grammar in Appendix A.1):
+//! lexer -> parser -> semantic analysis -> compiled [`MappingPolicy`],
+//! plus the interpreter for user-defined index-mapping functions and the
+//! A.3/A.5 standard function library.
+
+pub mod ast;
+pub mod compile;
+pub mod error;
+pub mod eval;
+pub mod lexer;
+pub mod parser;
+pub mod pretty;
+pub mod sema;
+pub mod stdlib;
+pub mod token;
+
+pub use compile::{count_loc, linearize, Layout, MappingPolicy, TaskResolution};
+pub use error::{CompileError, EvalError};
+pub use eval::{Env, TaskCtx, Value};
+pub use parser::parse;
+pub use pretty::{print_expr, print_program, print_stmt};

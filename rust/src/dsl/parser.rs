@@ -1,0 +1,701 @@
+//! Recursive-descent parser for the mapping DSL (grammar: Appendix A.1).
+//!
+//! Deliberate fidelity detail: a python-style `def f(...):` raises exactly
+//! `Syntax error, unexpected :, expecting {` — the canonical compile-error
+//! feedback from Table 2 of the paper.
+
+use super::ast::*;
+use super::error::CompileError;
+use super::lexer::lex;
+use super::token::{Spanned, Tok};
+use crate::machine::{MemKind, ProcKind};
+
+pub fn parse(src: &str) -> Result<Program, CompileError> {
+    let toks = lex(src)?;
+    Parser { toks, pos: 0 }.program()
+}
+
+struct Parser {
+    toks: Vec<Spanned>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn line(&self) -> usize {
+        self.toks[self.pos].line
+    }
+
+    fn next(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: &Tok) -> Result<(), CompileError> {
+        if self.peek() == want {
+            self.next();
+            Ok(())
+        } else {
+            Err(CompileError::syntax(
+                self.peek().show(),
+                want.show(),
+                self.line(),
+            ))
+        }
+    }
+
+    fn ident(&mut self, what: &str) -> Result<String, CompileError> {
+        match self.peek().clone() {
+            Tok::Ident(s) => {
+                self.next();
+                Ok(s)
+            }
+            other => Err(CompileError::syntax(other.show(), what, self.line())),
+        }
+    }
+
+    fn program(&mut self) -> Result<Program, CompileError> {
+        let mut stmts = Vec::new();
+        loop {
+            match self.peek() {
+                Tok::Eof => break,
+                Tok::Semi => {
+                    self.next();
+                }
+                _ => stmts.push(self.stmt()?),
+            }
+        }
+        Ok(Program { stmts })
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, CompileError> {
+        match self.peek().clone() {
+            Tok::KwTask => self.task_stmt(),
+            Tok::KwRegion => self.region_stmt(),
+            Tok::KwLayout => self.layout_stmt(),
+            Tok::KwIndexTaskMap => self.map_stmt(true),
+            Tok::KwSingleTaskMap => self.map_stmt(false),
+            Tok::KwInstanceLimit => self.instance_limit_stmt(),
+            Tok::KwCollectMemory | Tok::KwGarbageCollect => self.collect_stmt(),
+            Tok::KwDef => self.func_def(),
+            Tok::Ident(name) => {
+                // global assignment `name = expr;`
+                self.next();
+                self.expect(&Tok::Assign)?;
+                let expr = self.expr()?;
+                self.expect(&Tok::Semi)?;
+                Ok(Stmt::Assign { name, expr })
+            }
+            other => Err(CompileError::syntax(
+                other.show(),
+                "statement keyword",
+                self.line(),
+            )),
+        }
+    }
+
+    fn pat(&mut self) -> Result<Pat, CompileError> {
+        match self.peek().clone() {
+            Tok::Star => {
+                self.next();
+                Ok(Pat::Any)
+            }
+            Tok::Ident(s) => {
+                self.next();
+                Ok(Pat::Name(s))
+            }
+            Tok::Int(v) if v >= 0 => {
+                self.next();
+                Ok(Pat::Index(v as usize))
+            }
+            other => Err(CompileError::syntax(
+                other.show(),
+                "task/region name or *",
+                self.line(),
+            )),
+        }
+    }
+
+    fn proc_kind(&mut self) -> Result<ProcKind, CompileError> {
+        let line = self.line();
+        let name = self.ident("processor kind")?;
+        ProcKind::parse(&name).ok_or(CompileError::UnknownProc(name, line))
+    }
+
+    fn task_stmt(&mut self) -> Result<Stmt, CompileError> {
+        self.next(); // Task
+        let task = self.pat()?;
+        let mut procs = vec![self.proc_kind()?];
+        while self.peek() == &Tok::Comma {
+            self.next();
+            procs.push(self.proc_kind()?);
+        }
+        self.expect(&Tok::Semi)?;
+        Ok(Stmt::Task { task, procs })
+    }
+
+    fn region_stmt(&mut self) -> Result<Stmt, CompileError> {
+        self.next(); // Region
+        let task = self.pat()?;
+        let region = self.pat()?;
+        // Third slot: `*` (any proc), a proc kind, or — if it is already a
+        // memory kind — an omitted proc pattern.
+        let proc = match self.peek().clone() {
+            Tok::Star => {
+                self.next();
+                ProcPat::Any
+            }
+            Tok::Ident(s) => {
+                if let Some(k) = ProcKind::parse(&s) {
+                    self.next();
+                    ProcPat::Kind(k)
+                } else if MemKind::parse(&s).is_some() {
+                    ProcPat::Any // memory list starts here
+                } else {
+                    let line = self.line();
+                    return Err(CompileError::UnknownProc(s, line));
+                }
+            }
+            other => {
+                return Err(CompileError::syntax(
+                    other.show(),
+                    "processor kind, memory kind, or *",
+                    self.line(),
+                ))
+            }
+        };
+        let mut mems = vec![self.mem_kind()?];
+        while self.peek() == &Tok::Comma {
+            self.next();
+            mems.push(self.mem_kind()?);
+        }
+        self.expect(&Tok::Semi)?;
+        Ok(Stmt::Region { task, region, proc, mems })
+    }
+
+    fn mem_kind(&mut self) -> Result<MemKind, CompileError> {
+        let line = self.line();
+        let name = self.ident("memory kind")?;
+        MemKind::parse(&name).ok_or(CompileError::UnknownMemory(name, line))
+    }
+
+    fn layout_stmt(&mut self) -> Result<Stmt, CompileError> {
+        self.next(); // Layout
+        let task = self.pat()?;
+        let region = self.pat()?;
+        let proc = match self.peek().clone() {
+            Tok::Star => {
+                self.next();
+                ProcPat::Any
+            }
+            Tok::Ident(s) if ProcKind::parse(&s).is_some() => {
+                self.next();
+                ProcPat::Kind(ProcKind::parse(&s).unwrap())
+            }
+            _ => ProcPat::Any,
+        };
+        let mut constraints = Vec::new();
+        loop {
+            match self.peek().clone() {
+                Tok::Ident(s) => {
+                    let line = self.line();
+                    self.next();
+                    let c = match s.as_str() {
+                        "SOA" => Constraint::Soa,
+                        "AOS" => Constraint::Aos,
+                        "C_order" => Constraint::COrder,
+                        "F_order" => Constraint::FOrder,
+                        "No_Align" => Constraint::NoAlign,
+                        "Align" => {
+                            self.expect(&Tok::EqEq)?;
+                            match self.next() {
+                                Tok::Int(v) if v > 0 => Constraint::Align(v as u64),
+                                other => {
+                                    return Err(CompileError::syntax(
+                                        other.show(),
+                                        "alignment value",
+                                        line,
+                                    ))
+                                }
+                            }
+                        }
+                        _ => return Err(CompileError::UnknownConstraint(s, line)),
+                    };
+                    constraints.push(c);
+                }
+                Tok::Semi => break,
+                other => {
+                    return Err(CompileError::syntax(
+                        other.show(),
+                        "layout constraint or ;",
+                        self.line(),
+                    ))
+                }
+            }
+        }
+        if constraints.is_empty() {
+            return Err(CompileError::syntax(
+                ";",
+                "layout constraint",
+                self.line(),
+            ));
+        }
+        self.expect(&Tok::Semi)?;
+        Ok(Stmt::Layout { task, region, proc, constraints })
+    }
+
+    fn map_stmt(&mut self, index: bool) -> Result<Stmt, CompileError> {
+        self.next(); // IndexTaskMap | SingleTaskMap
+        let task = self.pat()?;
+        let func = self.ident("mapping function name")?;
+        self.expect(&Tok::Semi)?;
+        Ok(if index {
+            Stmt::IndexTaskMap { task, func }
+        } else {
+            Stmt::SingleTaskMap { task, func }
+        })
+    }
+
+    fn instance_limit_stmt(&mut self) -> Result<Stmt, CompileError> {
+        self.next();
+        let task = self.pat()?;
+        let limit = match self.next() {
+            Tok::Int(v) => v,
+            other => {
+                return Err(CompileError::syntax(
+                    other.show(),
+                    "instance limit",
+                    self.line(),
+                ))
+            }
+        };
+        self.expect(&Tok::Semi)?;
+        Ok(Stmt::InstanceLimit { task, limit })
+    }
+
+    fn collect_stmt(&mut self) -> Result<Stmt, CompileError> {
+        self.next(); // CollectMemory | GarbageCollect
+        let task = self.pat()?;
+        let region = self.pat()?;
+        self.expect(&Tok::Semi)?;
+        Ok(Stmt::CollectMemory { task, region })
+    }
+
+    fn func_def(&mut self) -> Result<Stmt, CompileError> {
+        let line = self.line();
+        self.next(); // def
+        let name = self.ident("function name")?;
+        self.expect(&Tok::LParen)?;
+        let mut params = Vec::new();
+        if self.peek() != &Tok::RParen {
+            loop {
+                params.push(self.param()?);
+                if self.peek() == &Tok::Comma {
+                    self.next();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect(&Tok::RParen)?;
+        // The paper's canonical syntax error: python-style colon here.
+        if self.peek() == &Tok::Colon {
+            return Err(CompileError::syntax(":", "{", self.line()));
+        }
+        self.expect(&Tok::LBrace)?;
+        let mut body = Vec::new();
+        while self.peek() != &Tok::RBrace {
+            body.push(self.func_stmt()?);
+        }
+        self.expect(&Tok::RBrace)?;
+        Ok(Stmt::FuncDef(FuncDef { name, params, body, line }))
+    }
+
+    fn param(&mut self) -> Result<Param, CompileError> {
+        // `Task` lexes as a keyword but is also a parameter type name
+        let first = if self.peek() == &Tok::KwTask {
+            self.next();
+            "Task".to_string()
+        } else {
+            self.ident("parameter")?
+        };
+        // `Task t` / `Tuple p` / `int d` — typed if two idents in a row
+        if let Tok::Ident(second) = self.peek().clone() {
+            let ty = match first.as_str() {
+                "Task" => ParamTy::Task,
+                "Tuple" => ParamTy::Tuple,
+                "int" => ParamTy::Int,
+                _ => {
+                    return Err(CompileError::syntax(
+                        second,
+                        ", or )",
+                        self.line(),
+                    ))
+                }
+            };
+            self.next();
+            Ok(Param { name: second, ty })
+        } else {
+            Ok(Param { name: first, ty: ParamTy::Untyped })
+        }
+    }
+
+    fn func_stmt(&mut self) -> Result<FuncStmt, CompileError> {
+        match self.peek().clone() {
+            Tok::KwReturn => {
+                self.next();
+                let e = self.expr()?;
+                self.expect(&Tok::Semi)?;
+                Ok(FuncStmt::Return(e))
+            }
+            Tok::Ident(name) => {
+                self.next();
+                self.expect(&Tok::Assign)?;
+                let e = self.expr()?;
+                self.expect(&Tok::Semi)?;
+                Ok(FuncStmt::Assign(name, e))
+            }
+            other => Err(CompileError::syntax(
+                other.show(),
+                "return or assignment",
+                self.line(),
+            )),
+        }
+    }
+
+    // ---- expressions --------------------------------------------------
+
+    pub(crate) fn expr(&mut self) -> Result<Expr, CompileError> {
+        self.ternary()
+    }
+
+    fn ternary(&mut self) -> Result<Expr, CompileError> {
+        let cond = self.comparison()?;
+        if self.peek() == &Tok::Question {
+            self.next();
+            let t = self.expr()?;
+            self.expect(&Tok::Colon)?;
+            let f = self.expr()?;
+            Ok(Expr::Ternary(Box::new(cond), Box::new(t), Box::new(f)))
+        } else {
+            Ok(cond)
+        }
+    }
+
+    fn comparison(&mut self) -> Result<Expr, CompileError> {
+        let lhs = self.additive()?;
+        let op = match self.peek() {
+            Tok::EqEq => BinOp::Eq,
+            Tok::NotEq => BinOp::Ne,
+            Tok::Lt => BinOp::Lt,
+            Tok::Gt => BinOp::Gt,
+            Tok::Le => BinOp::Le,
+            Tok::Ge => BinOp::Ge,
+            _ => return Ok(lhs),
+        };
+        self.next();
+        let rhs = self.additive()?;
+        Ok(Expr::Binary(op, Box::new(lhs), Box::new(rhs)))
+    }
+
+    fn additive(&mut self) -> Result<Expr, CompileError> {
+        let mut lhs = self.multiplicative()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.next();
+            let rhs = self.multiplicative()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn multiplicative(&mut self) -> Result<Expr, CompileError> {
+        let mut lhs = self.unary()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::Percent => BinOp::Mod,
+                _ => break,
+            };
+            self.next();
+            let rhs = self.unary()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> Result<Expr, CompileError> {
+        match self.peek() {
+            Tok::Minus => {
+                self.next();
+                Ok(Expr::Neg(Box::new(self.unary()?)))
+            }
+            Tok::Star => {
+                self.next();
+                Ok(Expr::Splat(Box::new(self.unary()?)))
+            }
+            _ => self.postfix(),
+        }
+    }
+
+    fn postfix(&mut self) -> Result<Expr, CompileError> {
+        let mut e = self.primary()?;
+        loop {
+            match self.peek() {
+                Tok::Dot => {
+                    self.next();
+                    let attr = self.ident("attribute name")?;
+                    if self.peek() == &Tok::LParen {
+                        let args = self.call_args()?;
+                        e = Expr::Call(Box::new(Expr::Attr(Box::new(e), attr)), args);
+                    } else {
+                        e = Expr::Attr(Box::new(e), attr);
+                    }
+                }
+                Tok::LBracket => {
+                    self.next();
+                    let mut args = Vec::new();
+                    if self.peek() != &Tok::RBracket {
+                        loop {
+                            args.push(self.expr()?);
+                            if self.peek() == &Tok::Comma {
+                                self.next();
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(&Tok::RBracket)?;
+                    e = Expr::Index(Box::new(e), args);
+                }
+                Tok::LParen => {
+                    let args = self.call_args()?;
+                    e = Expr::Call(Box::new(e), args);
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    fn call_args(&mut self) -> Result<Vec<Expr>, CompileError> {
+        self.expect(&Tok::LParen)?;
+        let mut args = Vec::new();
+        if self.peek() != &Tok::RParen {
+            loop {
+                args.push(self.expr()?);
+                if self.peek() == &Tok::Comma {
+                    self.next();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect(&Tok::RParen)?;
+        Ok(args)
+    }
+
+    fn primary(&mut self) -> Result<Expr, CompileError> {
+        match self.peek().clone() {
+            Tok::Int(v) => {
+                self.next();
+                Ok(Expr::Int(v))
+            }
+            Tok::KwMachine => {
+                self.next();
+                self.expect(&Tok::LParen)?;
+                let kind = self.proc_kind()?;
+                self.expect(&Tok::RParen)?;
+                Ok(Expr::Machine(kind))
+            }
+            Tok::Ident(name) => {
+                self.next();
+                Ok(Expr::Var(name))
+            }
+            Tok::LParen => {
+                self.next();
+                let first = self.expr()?;
+                if self.peek() == &Tok::Comma {
+                    let mut items = vec![first];
+                    while self.peek() == &Tok::Comma {
+                        self.next();
+                        if self.peek() == &Tok::RParen {
+                            break; // trailing comma: 1-tuple
+                        }
+                        items.push(self.expr()?);
+                    }
+                    self.expect(&Tok::RParen)?;
+                    Ok(Expr::Tuple(items))
+                } else {
+                    self.expect(&Tok::RParen)?;
+                    Ok(first)
+                }
+            }
+            other => Err(CompileError::syntax(
+                other.show(),
+                "expression",
+                self.line(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_task_with_preference_list() {
+        let p = parse("Task * GPU,OMP,CPU;").unwrap();
+        assert_eq!(
+            p.stmts[0],
+            Stmt::Task {
+                task: Pat::Any,
+                procs: vec![ProcKind::Gpu, ProcKind::Omp, ProcKind::Cpu]
+            }
+        );
+    }
+
+    #[test]
+    fn parses_region_forms() {
+        let p = parse(
+            "Region * * GPU FBMEM;\n\
+             Region * * * SOCKMEM,SYSMEM;\n\
+             Region * rp_shared GPU ZCMEM;",
+        )
+        .unwrap();
+        assert_eq!(p.stmts.len(), 3);
+        match &p.stmts[1] {
+            Stmt::Region { proc, mems, .. } => {
+                assert_eq!(*proc, ProcPat::Any);
+                assert_eq!(mems, &vec![MemKind::SockMem, MemKind::SysMem]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_layout_with_alignment() {
+        let p = parse("Layout * * * C_order AOS Align==128;").unwrap();
+        match &p.stmts[0] {
+            Stmt::Layout { constraints, .. } => {
+                assert_eq!(
+                    constraints,
+                    &vec![Constraint::COrder, Constraint::Aos, Constraint::Align(128)]
+                );
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn colon_def_gives_paper_error() {
+        let err = parse("def cyclic(Task task):\n  return 0;\n").unwrap_err();
+        assert_eq!(err.to_string(), "Syntax error, unexpected :, expecting {");
+    }
+
+    #[test]
+    fn parses_block1d_from_figure_a9() {
+        let src = "mgpu = Machine(GPU);\n\
+                   def block1d(Task task) {\n\
+                     ip = task.ipoint;\n\
+                     return mgpu[ip[0] % mgpu.size[0], ip[0] % mgpu.size[1]];\n\
+                   }\n\
+                   IndexTaskMap task_2 block1d;";
+        let p = parse(src).unwrap();
+        assert_eq!(p.stmts.len(), 3);
+        let f = p.func("block1d").unwrap();
+        assert_eq!(f.params, vec![Param { name: "task".into(), ty: ParamTy::Task }]);
+        assert_eq!(f.body.len(), 2);
+    }
+
+    #[test]
+    fn parses_splat_indexing() {
+        let src = "def f(Tuple ipoint, Tuple ispace) {\n\
+                     idx = ipoint * m.size / ispace;\n\
+                     return m[*idx];\n\
+                   }";
+        let p = parse(src).unwrap();
+        let f = p.func("f").unwrap();
+        match &f.body[1] {
+            FuncStmt::Return(Expr::Index(_, args)) => {
+                assert!(matches!(args[0], Expr::Splat(_)));
+            }
+            other => panic!("unexpected body: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_ternary_from_johnsons_mapper() {
+        let src = "def g(Tuple ipoint, Tuple ispace) {\n\
+                     grid_size = ispace[0] > ispace[2] ? ispace[0] : ispace[2];\n\
+                     return m[grid_size % m.size[0], 0];\n\
+                   }";
+        let p = parse(src).unwrap();
+        let f = p.func("g").unwrap();
+        assert!(matches!(&f.body[0], FuncStmt::Assign(_, Expr::Ternary(..))));
+    }
+
+    #[test]
+    fn parses_method_chain() {
+        let p = parse("m1 = m.merge(0, 1).split(0, 4);").unwrap();
+        match &p.stmts[0] {
+            Stmt::Assign { expr, .. } => {
+                assert!(matches!(expr, Expr::Call(..)));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_parent_processor() {
+        let src = "def same_point(Task task) {\n\
+                     return m_2d[*task.parent.processor(m_2d)];\n\
+                   }";
+        assert!(parse(src).is_ok());
+    }
+
+    #[test]
+    fn parses_instance_limit_and_collect() {
+        let p = parse(
+            "InstanceLimit calculate_new_currents 4;\n\
+             CollectMemory calculate_new_currents *;",
+        )
+        .unwrap();
+        assert_eq!(p.stmts.len(), 2);
+    }
+
+    #[test]
+    fn region_by_position() {
+        let p = parse("Region distribute_charge 1 GPU ZCMEM;").unwrap();
+        match &p.stmts[0] {
+            Stmt::Region { region, .. } => assert_eq!(*region, Pat::Index(1)),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn unknown_memory_rejected() {
+        assert!(matches!(
+            parse("Region * * GPU WRONGMEM;").unwrap_err(),
+            CompileError::UnknownMemory(..)
+        ));
+    }
+
+    #[test]
+    fn garbage_collect_alias() {
+        let p = parse("GarbageCollect t r;").unwrap();
+        assert!(matches!(p.stmts[0], Stmt::CollectMemory { .. }));
+    }
+}

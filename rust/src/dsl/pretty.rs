@@ -1,0 +1,229 @@
+//! DSL pretty-printer: AST -> canonical source text.
+//!
+//! Used for reporting found mappers and for the parse -> print -> parse
+//! round-trip property tests that pin the grammar down.
+
+use super::ast::*;
+use crate::machine::{MemKind, ProcKind};
+
+pub fn print_program(p: &Program) -> String {
+    let mut out = String::new();
+    for stmt in &p.stmts {
+        out.push_str(&print_stmt(stmt));
+    }
+    out
+}
+
+fn pat(p: &Pat) -> String {
+    match p {
+        Pat::Any => "*".into(),
+        Pat::Name(n) => n.clone(),
+        Pat::Index(i) => i.to_string(),
+    }
+}
+
+fn proc_pat(p: &ProcPat) -> String {
+    match p {
+        ProcPat::Any => "*".into(),
+        ProcPat::Kind(k) => k.name().into(),
+    }
+}
+
+fn procs(ps: &[ProcKind]) -> String {
+    ps.iter().map(|p| p.name()).collect::<Vec<_>>().join(",")
+}
+
+fn mems(ms: &[MemKind]) -> String {
+    ms.iter().map(|m| m.name()).collect::<Vec<_>>().join(",")
+}
+
+fn constraint(c: &Constraint) -> String {
+    match c {
+        Constraint::Soa => "SOA".into(),
+        Constraint::Aos => "AOS".into(),
+        Constraint::COrder => "C_order".into(),
+        Constraint::FOrder => "F_order".into(),
+        Constraint::Align(v) => format!("Align=={v}"),
+        Constraint::NoAlign => "No_Align".into(),
+    }
+}
+
+pub fn print_stmt(s: &Stmt) -> String {
+    match s {
+        Stmt::Task { task, procs: ps } => {
+            format!("Task {} {};\n", pat(task), procs(ps))
+        }
+        Stmt::Region { task, region, proc, mems: ms } => {
+            format!(
+                "Region {} {} {} {};\n",
+                pat(task),
+                pat(region),
+                proc_pat(proc),
+                mems(ms)
+            )
+        }
+        Stmt::Layout { task, region, proc, constraints } => {
+            let cs: Vec<String> = constraints.iter().map(constraint).collect();
+            format!(
+                "Layout {} {} {} {};\n",
+                pat(task),
+                pat(region),
+                proc_pat(proc),
+                cs.join(" ")
+            )
+        }
+        Stmt::IndexTaskMap { task, func } => {
+            format!("IndexTaskMap {} {func};\n", pat(task))
+        }
+        Stmt::SingleTaskMap { task, func } => {
+            format!("SingleTaskMap {} {func};\n", pat(task))
+        }
+        Stmt::InstanceLimit { task, limit } => {
+            format!("InstanceLimit {} {limit};\n", pat(task))
+        }
+        Stmt::CollectMemory { task, region } => {
+            format!("CollectMemory {} {};\n", pat(task), pat(region))
+        }
+        Stmt::Assign { name, expr } => format!("{name} = {};\n", print_expr(expr)),
+        Stmt::FuncDef(f) => {
+            let params: Vec<String> = f
+                .params
+                .iter()
+                .map(|p| match p.ty {
+                    ParamTy::Task => format!("Task {}", p.name),
+                    ParamTy::Tuple => format!("Tuple {}", p.name),
+                    ParamTy::Int => format!("int {}", p.name),
+                    ParamTy::Untyped => p.name.clone(),
+                })
+                .collect();
+            let mut out = format!("def {}({}) {{\n", f.name, params.join(", "));
+            for st in &f.body {
+                match st {
+                    FuncStmt::Assign(n, e) => {
+                        out.push_str(&format!("  {n} = {};\n", print_expr(e)))
+                    }
+                    FuncStmt::Return(e) => {
+                        out.push_str(&format!("  return {};\n", print_expr(e)))
+                    }
+                }
+            }
+            out.push_str("}\n");
+            out
+        }
+    }
+}
+
+fn binop(op: BinOp) -> &'static str {
+    match op {
+        BinOp::Add => "+",
+        BinOp::Sub => "-",
+        BinOp::Mul => "*",
+        BinOp::Div => "/",
+        BinOp::Mod => "%",
+        BinOp::Eq => "==",
+        BinOp::Ne => "!=",
+        BinOp::Lt => "<",
+        BinOp::Gt => ">",
+        BinOp::Le => "<=",
+        BinOp::Ge => ">=",
+    }
+}
+
+/// Fully-parenthesized expression printing (round-trip safe without a
+/// precedence reconstruction).
+pub fn print_expr(e: &Expr) -> String {
+    match e {
+        Expr::Int(v) => v.to_string(),
+        Expr::Var(n) => n.clone(),
+        Expr::Machine(k) => format!("Machine({})", k.name()),
+        Expr::Attr(b, a) => format!("{}.{a}", print_expr(b)),
+        Expr::Call(callee, args) => {
+            let a: Vec<String> = args.iter().map(print_expr).collect();
+            format!("{}({})", print_expr(callee), a.join(", "))
+        }
+        Expr::Index(b, args) => {
+            let a: Vec<String> = args.iter().map(print_expr).collect();
+            format!("{}[{}]", print_expr(b), a.join(", "))
+        }
+        Expr::Splat(b) => format!("*{}", print_expr(b)),
+        Expr::Binary(op, l, r) => {
+            format!("({} {} {})", print_expr(l), binop(*op), print_expr(r))
+        }
+        Expr::Ternary(c, t, f) => format!(
+            "({} ? {} : {})",
+            print_expr(c),
+            print_expr(t),
+            print_expr(f)
+        ),
+        Expr::Tuple(items) => {
+            let a: Vec<String> = items.iter().map(print_expr).collect();
+            if a.len() == 1 {
+                format!("({},)", a[0])
+            } else {
+                format!("({})", a.join(", "))
+            }
+        }
+        Expr::Neg(b) => format!("(-{})", print_expr(b)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse;
+    use crate::mapping::all_experts;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    /// parse -> print -> parse must be a fixed point (AST equality).
+    fn roundtrip(src: &str) {
+        let p1 = parse(src).unwrap_or_else(|e| panic!("parse 1: {e}\n{src}"));
+        let printed = print_program(&p1);
+        let p2 = parse(&printed)
+            .unwrap_or_else(|e| panic!("parse 2: {e}\n{printed}"));
+        assert_eq!(p1, p2, "round trip changed the AST:\n{src}\n-- vs --\n{printed}");
+    }
+
+    #[test]
+    fn roundtrips_all_expert_mappers() {
+        for (bench, dsl) in all_experts() {
+            let _ = bench;
+            roundtrip(dsl);
+        }
+    }
+
+    #[test]
+    fn roundtrips_stdlib() {
+        for f in crate::dsl::stdlib::LIBRARY {
+            roundtrip(&format!("mgpu = Machine(GPU);\n{}", f.source));
+        }
+    }
+
+    #[test]
+    fn roundtrips_grammar_corners() {
+        roundtrip("Region distribute_charge 1 GPU ZCMEM;");
+        roundtrip("Layout * r CPU AOS F_order No_Align Align==128;");
+        roundtrip("def f(Tuple a, int b, Task c, d) { return b; }");
+        roundtrip(
+            "m = Machine(GPU);\n\
+             def f(Tuple p, Tuple s) {\n\
+               x = s[0] > s[1] ? -p[0] : p[1] * 2 % 3 - 1;\n\
+               y = m.split(0, 1).merge(0, 1).swap(0, 1);\n\
+               return m[*p];\n\
+             }",
+        );
+    }
+
+    /// Property: random agent genomes render to DSL that round-trips.
+    #[test]
+    fn property_random_genomes_roundtrip() {
+        let app = crate::apps::by_name("cannon").unwrap();
+        let info = crate::optimizer::AppInfo::from_app(&app);
+        check(0x9A11, 60, |rng: &mut Rng| {
+            let g = crate::optimizer::AgentGenome::random(&info, rng);
+            if !g.syntax_slip && !g.missing_machine {
+                roundtrip(&g.render());
+            }
+        });
+    }
+}

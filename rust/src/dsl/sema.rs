@@ -1,0 +1,198 @@
+//! Semantic analysis: name resolution and map-function checks.
+//!
+//! Catches, at compile time, the errors the paper's Table A1 lists as
+//! compile errors: undefined IndexTaskMap functions ("IndexTaskMap's
+//! function undefined") and unresolved identifiers ("mgpu not found").
+
+use std::collections::HashSet;
+
+use super::ast::{Expr, FuncStmt, Program, Stmt};
+use super::error::CompileError;
+
+pub fn analyze(prog: &Program) -> Result<(), CompileError> {
+    // collect globals and functions in declaration order
+    let mut funcs: HashSet<&str> = HashSet::new();
+    for f in prog.funcs() {
+        if !funcs.insert(&f.name) {
+            return Err(CompileError::DuplicateFunc(f.name.clone()));
+        }
+    }
+
+    let mut globals: HashSet<&str> = HashSet::new();
+    for stmt in &prog.stmts {
+        match stmt {
+            Stmt::Assign { name, expr } => {
+                check_expr(expr, &globals, &funcs, &HashSet::new())?;
+                globals.insert(name);
+            }
+            Stmt::FuncDef(f) => {
+                let mut scope: HashSet<&str> =
+                    f.params.iter().map(|p| p.name.as_str()).collect();
+                for s in &f.body {
+                    match s {
+                        FuncStmt::Assign(name, e) => {
+                            check_expr(e, &globals, &funcs, &scope)?;
+                            scope.insert(name);
+                        }
+                        FuncStmt::Return(e) => {
+                            check_expr(e, &globals, &funcs, &scope)?;
+                        }
+                    }
+                }
+            }
+            Stmt::IndexTaskMap { func, .. } => {
+                if !funcs.contains(func.as_str()) {
+                    return Err(CompileError::IndexMapFuncUndefined(func.clone()));
+                }
+            }
+            Stmt::SingleTaskMap { func, .. } => {
+                if !funcs.contains(func.as_str()) {
+                    return Err(CompileError::SingleMapFuncUndefined(func.clone()));
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+fn check_expr(
+    expr: &Expr,
+    globals: &HashSet<&str>,
+    funcs: &HashSet<&str>,
+    scope: &HashSet<&str>,
+) -> Result<(), CompileError> {
+    match expr {
+        Expr::Int(_) | Expr::Machine(_) => Ok(()),
+        Expr::Var(name) => {
+            if scope.contains(name.as_str())
+                || globals.contains(name.as_str())
+                || funcs.contains(name.as_str())
+            {
+                Ok(())
+            } else {
+                Err(CompileError::NameNotFound(name.clone()))
+            }
+        }
+        Expr::Attr(b, _) | Expr::Splat(b) | Expr::Neg(b) => {
+            check_expr(b, globals, funcs, scope)
+        }
+        Expr::Call(callee, args) => {
+            // a bare-variable callee must be a function name
+            if let Expr::Var(name) = callee.as_ref() {
+                if !funcs.contains(name.as_str()) {
+                    return Err(CompileError::NameNotFound(name.clone()));
+                }
+            } else {
+                check_expr(callee, globals, funcs, scope)?;
+            }
+            for a in args {
+                check_expr(a, globals, funcs, scope)?;
+            }
+            Ok(())
+        }
+        Expr::Index(b, args) => {
+            check_expr(b, globals, funcs, scope)?;
+            for a in args {
+                check_expr(a, globals, funcs, scope)?;
+            }
+            Ok(())
+        }
+        Expr::Binary(_, l, r) => {
+            check_expr(l, globals, funcs, scope)?;
+            check_expr(r, globals, funcs, scope)
+        }
+        Expr::Ternary(c, t, f) => {
+            check_expr(c, globals, funcs, scope)?;
+            check_expr(t, globals, funcs, scope)?;
+            check_expr(f, globals, funcs, scope)
+        }
+        Expr::Tuple(items) => {
+            for i in items {
+                check_expr(i, globals, funcs, scope)?;
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse;
+
+    #[test]
+    fn undefined_index_map_func() {
+        let p = parse("IndexTaskMap t cyclic;").unwrap();
+        let err = analyze(&p).unwrap_err();
+        assert!(err.to_string().contains("IndexTaskMap's function undefined"));
+    }
+
+    #[test]
+    fn func_defined_after_use_still_ok() {
+        // sema collects all funcs first, so order doesn't matter
+        let p = parse(
+            "IndexTaskMap t f;\n\
+             def f(Task task) { return m[0,0]; }\n\
+             m = Machine(GPU);",
+        )
+        .unwrap();
+        // but `m` is defined after `f` uses it at *global scan* time...
+        // globals are collected in order, so this should fail on m.
+        assert!(analyze(&p).is_err());
+    }
+
+    #[test]
+    fn mgpu_not_found() {
+        let p = parse("def f(Task t) { return mgpu[0, 0]; }").unwrap();
+        let err = analyze(&p).unwrap_err();
+        assert_eq!(err.to_string(), "mgpu not found");
+    }
+
+    #[test]
+    fn clean_program_passes() {
+        let p = parse(
+            "mgpu = Machine(GPU);\n\
+             def block1d(Task task) {\n\
+               ip = task.ipoint;\n\
+               return mgpu[ip[0] % mgpu.size[0], ip[0] % mgpu.size[1]];\n\
+             }\n\
+             IndexTaskMap t block1d;",
+        )
+        .unwrap();
+        analyze(&p).unwrap();
+    }
+
+    #[test]
+    fn local_before_use_required() {
+        let p = parse("def f(Task t) { return x + 1; }").unwrap();
+        assert_eq!(analyze(&p).unwrap_err().to_string(), "x not found");
+    }
+
+    #[test]
+    fn duplicate_function_rejected() {
+        let p = parse(
+            "def f(Task t) { return 1; }\n\
+             def f(Task t) { return 2; }",
+        )
+        .unwrap();
+        assert!(matches!(analyze(&p).unwrap_err(), CompileError::DuplicateFunc(_)));
+    }
+
+    #[test]
+    fn helper_call_resolved() {
+        let p = parse(
+            "m = Machine(GPU);\n\
+             def h(int d) { return d + 1; }\n\
+             def f(Task t) { return m[h(0), 0]; }",
+        )
+        .unwrap();
+        analyze(&p).unwrap();
+    }
+
+    #[test]
+    fn unknown_call_target() {
+        let p = parse("def f(Task t) { return nosuch(1); }").unwrap();
+        assert_eq!(analyze(&p).unwrap_err().to_string(), "nosuch not found");
+    }
+}

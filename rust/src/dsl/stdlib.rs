@@ -1,0 +1,267 @@
+//! Standard mapping-function library (paper Appendix A.3 / A.5).
+//!
+//! These are the "commonly-used index mapping functions" as DSL source
+//! fragments: the agent's index-map decision block composes mappers by
+//! picking from (and mutating) this library, exactly as the paper's agent
+//! samples from the function space the DSL opens up.
+
+/// The machine preamble every mapper needs.
+pub const MACHINE_PREAMBLE: &str = "mgpu = Machine(GPU);\nmcpu = Machine(CPU);\n";
+
+/// Launch-domain dimensionality a mapping function supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dims {
+    /// Works for any dimensionality (uses only ipoint[0] or linearizes).
+    Any,
+    /// Requires exactly this many dimensions (whole-tuple arithmetic).
+    Exact(usize),
+    /// Requires at least this many dimensions (explicit subscripts).
+    AtLeast(usize),
+}
+
+impl Dims {
+    pub fn accepts(self, n: usize) -> bool {
+        match self {
+            Dims::Any => true,
+            Dims::Exact(d) => n == d,
+            Dims::AtLeast(d) => n >= d,
+        }
+    }
+}
+
+/// A named index-mapping function: DSL source for a `def`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MapFn {
+    pub name: &'static str,
+    pub source: &'static str,
+    /// Which launch dimensionalities the function can map.
+    pub dims: Dims,
+}
+
+/// block2D (A.3): scale the index point into the 2D processor grid.
+pub const BLOCK2D: MapFn = MapFn {
+    name: "block2d",
+    source: "def block2d(Tuple ipoint, Tuple ispace) {\n  idx = ipoint * mgpu.size / ispace;\n  return mgpu[*idx];\n}\n",
+    dims: Dims::Exact(2),
+};
+
+/// block1D over x: linearize the grid into 1 node-row then block map.
+pub const BLOCK1D_X: MapFn = MapFn {
+    name: "block1d_x",
+    source: "def block1d_x(Tuple ipoint, Tuple ispace) {\n  m1 = mgpu.merge(0, 1).split(0, 1);\n  idx = ipoint * m1.size / ispace;\n  return m1[*idx];\n}\n",
+    dims: Dims::Exact(2),
+};
+
+/// block1D over y: linearize into one column of height #gpus-per-node.
+pub const BLOCK1D_Y: MapFn = MapFn {
+    name: "block1d_y",
+    source: "def block1d_y(Tuple ipoint, Tuple ispace) {\n  m2 = mgpu.merge(0, 1).split(0, 4);\n  idx = ipoint * m2.size / ispace;\n  return m2[*idx];\n}\n",
+    dims: Dims::Exact(2),
+};
+
+/// cyclic2D (A.3): wrap the index point around the 2D grid.
+pub const CYCLIC2D: MapFn = MapFn {
+    name: "cyclic2d",
+    source: "def cyclic2d(Tuple ipoint, Tuple ispace) {\n  idx = ipoint % mgpu.size;\n  return mgpu[*idx];\n}\n",
+    dims: Dims::Exact(2),
+};
+
+/// block1D with node-major placement: consecutive launch points stay on
+/// the same node (ghost-exchange friendly for 1D piece decompositions).
+pub const NODE_BLOCK1D: MapFn = MapFn {
+    name: "node_block1d",
+    source: "def node_block1d(Tuple ipoint, Tuple ispace) {\n  node = ipoint[0] * mgpu.size[0] / ispace[0] % mgpu.size[0];\n  return mgpu[node, ipoint[0] % mgpu.size[1]];\n}\n",
+    dims: Dims::Any,
+};
+
+/// cyclic1D over the linearized machine.
+pub const CYCLIC1D: MapFn = MapFn {
+    name: "cyclic1d",
+    source: "def cyclic1d(Tuple ipoint, Tuple ispace) {\n  m1 = mgpu.merge(0, 1);\n  lin = ipoint[0];\n  return m1[lin % m1.size[0]];\n}\n",
+    dims: Dims::Any,
+};
+
+/// block-cyclic (A.3).
+pub const BLOCK_CYCLIC: MapFn = MapFn {
+    name: "blockcyclic",
+    source: "def blockcyclic(Tuple ipoint, Tuple ispace) {\n  idx = ipoint / mgpu.size % mgpu.size;\n  return mgpu[*idx];\n}\n",
+    dims: Dims::Exact(2),
+};
+
+/// hierarchical 2D block (A.5, Cannon's/PUMMA/SUMMA expert mapping):
+/// nodes block the x axis, the node's GPUs form a 2x2 grid cyclically
+/// covering the (x, y) tile neighbourhood.
+pub const HIER_BLOCK2D: MapFn = MapFn {
+    name: "hierarchical_block2d",
+    source: "def hierarchical_block2d(Tuple ipoint, Tuple ispace) {\n  node = ipoint[0] * mgpu.size[0] / ispace[0];\n  gpu = (ipoint[0] % 2) * 2 + ipoint[1] % 2;\n  return mgpu[node % mgpu.size[0], gpu % mgpu.size[1]];\n}\n",
+    dims: Dims::AtLeast(2),
+};
+
+/// hierarchical 3D block (A.5/A.6, Solomonik's expert mapping): nodes
+/// split the x axis; each node's 4 GPUs 2D-block the y-z face.
+pub const HIER_BLOCK3D: MapFn = MapFn {
+    name: "hierarchical_block3d",
+    source: "def hierarchical_block3d(Tuple ipoint, Tuple ispace) {\n  node = ipoint[0] * mgpu.size[0] / ispace[0];\n  gpu = (ipoint[1] % 2) * 2 + ipoint[2] % 2;\n  return mgpu[node % mgpu.size[0], gpu % mgpu.size[1]];\n}\n",
+    dims: Dims::AtLeast(3),
+};
+
+/// linearize-cyclic (A.5, Solomonik's function 2).
+pub const LINEARIZE_CYCLIC: MapFn = MapFn {
+    name: "linearize_cyclic",
+    source: "def linearize_cyclic(Tuple ipoint, Tuple ispace) {\n  lin = ipoint[0] + ispace[0] * ipoint[1] + ispace[0] * ispace[1] * ipoint[2];\n  node = lin % mgpu.size[0];\n  gpu = (lin / mgpu.size[0]) % mgpu.size[1];\n  return mgpu[node, gpu];\n}\n",
+    dims: Dims::AtLeast(3),
+};
+
+/// 3D linearization row-major then block over all GPUs (COSMA-style).
+pub const LINEARIZE3D_BLOCK: MapFn = MapFn {
+    name: "linearize3d_block",
+    source: "def linearize3d_block(Tuple ipoint, Tuple ispace) {\n  m1 = mgpu.merge(0, 1);\n  lin = ipoint[0] + ipoint[1] * ispace[0] + ipoint[2] * ispace[0] * ispace[1];\n  total = ispace[0] * ispace[1] * ispace[2];\n  return m1[lin * m1.size[0] / total];\n}\n",
+    dims: Dims::AtLeast(3),
+};
+
+/// conditional linearize (A.5, Johnson's function).
+pub const COND_LINEARIZE3D: MapFn = MapFn {
+    name: "conditional_linearize3d",
+    source: "def conditional_linearize3d(Tuple ipoint, Tuple ispace) {\n  grid = ispace[0] > ispace[2] ? ispace[0] : ispace[2];\n  lin = ipoint[0] + ipoint[1] * grid + ipoint[2] * grid * grid;\n  m1 = mgpu.merge(0, 1);\n  return m1[lin % m1.size[0]];\n}\n",
+    dims: Dims::AtLeast(3),
+};
+
+/// 2D linearization then cyclic over the flattened machine.
+pub const LINEARIZE2D_CYCLIC: MapFn = MapFn {
+    name: "linearize2d_cyclic",
+    source: "def linearize2d_cyclic(Tuple ipoint, Tuple ispace) {\n  m1 = mgpu.merge(0, 1);\n  lin = ipoint[0] + ipoint[1] * ispace[0];\n  return m1[lin % m1.size[0]];\n}\n",
+    dims: Dims::AtLeast(2),
+};
+
+/// Node-cyclic over dim0, gpu-block over dim1 (a "transposed" hierarchy).
+pub const CYCLIC_NODE_BLOCK_GPU: MapFn = MapFn {
+    name: "cyclic_node_block_gpu",
+    source: "def cyclic_node_block_gpu(Tuple ipoint, Tuple ispace) {\n  node = ipoint[0] % mgpu.size[0];\n  gpu = ipoint[1] * mgpu.size[1] / ispace[1];\n  return mgpu[node, gpu % mgpu.size[1]];\n}\n",
+    dims: Dims::AtLeast(2),
+};
+
+/// Owner-aligned 2D map: node cyclic on dim0, GPUs walk (2*i + j) — keeps
+/// reductions next to the partials their producers wrote.
+pub const OWNER_BLOCK2D: MapFn = MapFn {
+    name: "owner_block2d",
+    source: "def owner_block2d(Tuple ipoint, Tuple ispace) {\n  node = ipoint[0] % mgpu.size[0];\n  gpu = (ipoint[0] * 2 + ipoint[1]) % mgpu.size[1];\n  return mgpu[node, gpu];\n}\n",
+    dims: Dims::AtLeast(2),
+};
+
+/// The full library the agent's index-map decision block samples from.
+pub const LIBRARY: &[MapFn] = &[
+    BLOCK2D,
+    NODE_BLOCK1D,
+    BLOCK1D_X,
+    BLOCK1D_Y,
+    CYCLIC2D,
+    CYCLIC1D,
+    BLOCK_CYCLIC,
+    HIER_BLOCK2D,
+    HIER_BLOCK3D,
+    LINEARIZE_CYCLIC,
+    LINEARIZE3D_BLOCK,
+    COND_LINEARIZE3D,
+    LINEARIZE2D_CYCLIC,
+    CYCLIC_NODE_BLOCK_GPU,
+    OWNER_BLOCK2D,
+];
+
+pub fn by_name(name: &str) -> Option<&'static MapFn> {
+    LIBRARY.iter().find(|f| f.name == name)
+}
+
+/// Functions applicable to an `n`-dimensional launch domain.
+pub fn for_dims(n: usize) -> Vec<&'static MapFn> {
+    LIBRARY.iter().filter(|f| f.dims.accepts(n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::compile::MappingPolicy;
+    use crate::dsl::eval::TaskCtx;
+    use crate::machine::{MachineSpec, ProcKind};
+
+    /// Every stdlib function must compile and resolve every point of the
+    /// launch domains its `dims` declares to a valid processor.
+    #[test]
+    fn all_library_functions_compile_and_map_in_bounds() {
+        let spec = MachineSpec::p100_cluster();
+        for f in LIBRARY {
+            let src = format!(
+                "{}{}IndexTaskMap work {};",
+                MACHINE_PREAMBLE, f.source, f.name
+            );
+            let p = MappingPolicy::compile(&src, &spec)
+                .unwrap_or_else(|e| panic!("{} failed to compile: {e}", f.name));
+            let spaces: Vec<Vec<i64>> = vec![vec![8, 8], vec![4, 4, 4], vec![16]];
+            for ispace in spaces {
+                if !f.dims.accepts(ispace.len()) {
+                    continue;
+                }
+                let total: i64 = ispace.iter().product();
+                for lin in 0..total {
+                    let mut rem = lin;
+                    let mut point = vec![0i64; ispace.len()];
+                    for d in (0..ispace.len()).rev() {
+                        point[d] = rem % ispace[d];
+                        rem /= ispace[d];
+                    }
+                    let ctx = TaskCtx {
+                        ipoint: point.clone(),
+                        ispace: ispace.clone(),
+                        parent_proc: None,
+                    };
+                    let proc = p
+                        .select_processor("work", &ctx, &[ProcKind::Gpu], &spec)
+                        .unwrap_or_else(|e| {
+                            panic!("{} on {point:?}/{ispace:?}: {e}", f.name)
+                        });
+                    assert!(proc.node < spec.nodes);
+                    assert!(proc.index < spec.gpus_per_node);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block2d_distributes_across_all_gpus() {
+        let spec = MachineSpec::p100_cluster();
+        let src = format!(
+            "{}{}IndexTaskMap work block2d;",
+            MACHINE_PREAMBLE, BLOCK2D.source
+        );
+        let p = MappingPolicy::compile(&src, &spec).unwrap();
+        let mut used = std::collections::HashSet::new();
+        for i in 0..2 {
+            for j in 0..4 {
+                let ctx = TaskCtx {
+                    ipoint: vec![i, j],
+                    ispace: vec![2, 4],
+                    parent_proc: None,
+                };
+                let proc = p
+                    .select_processor("work", &ctx, &[ProcKind::Gpu], &spec)
+                    .unwrap();
+                used.insert((proc.node, proc.index));
+            }
+        }
+        assert_eq!(used.len(), 8, "block2d on an exact-fit grid is a bijection");
+    }
+
+    #[test]
+    fn dims_filtering() {
+        assert!(Dims::Any.accepts(1) && Dims::Any.accepts(3));
+        assert!(Dims::Exact(2).accepts(2) && !Dims::Exact(2).accepts(3));
+        assert!(Dims::AtLeast(2).accepts(3) && !Dims::AtLeast(2).accepts(1));
+        assert!(!for_dims(1).is_empty());
+        assert!(for_dims(3).len() > for_dims(1).len());
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("cyclic2d").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

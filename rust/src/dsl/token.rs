@@ -1,0 +1,108 @@
+//! Token set for the mapping DSL (grammar in paper Appendix A.1).
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    // literals / identifiers
+    Ident(String),
+    Int(i64),
+
+    // statement keywords
+    KwTask,
+    KwRegion,
+    KwLayout,
+    KwIndexTaskMap,
+    KwSingleTaskMap,
+    KwInstanceLimit,
+    KwCollectMemory,
+    KwGarbageCollect,
+    KwDef,
+    KwReturn,
+    KwMachine,
+
+    // punctuation
+    Semi,      // ;
+    Comma,     // ,
+    LParen,    // (
+    RParen,    // )
+    LBracket,  // [
+    RBracket,  // ]
+    LBrace,    // {
+    RBrace,    // }
+    Star,      // * (wildcard, multiply, splat)
+    Plus,      // +
+    Minus,     // -
+    Slash,     // /
+    Percent,   // %
+    Dot,       // .
+    Assign,    // =
+    EqEq,      // ==
+    NotEq,     // !=
+    Lt,        // <
+    Gt,        // >
+    Le,        // <=
+    Ge,        // >=
+    Question,  // ?
+    Colon,     // :
+
+    Eof,
+}
+
+impl Tok {
+    /// Display form used in "Syntax error, unexpected X, expecting Y".
+    pub fn show(&self) -> String {
+        match self {
+            Tok::Ident(s) => s.clone(),
+            Tok::Int(v) => v.to_string(),
+            Tok::KwTask => "Task".into(),
+            Tok::KwRegion => "Region".into(),
+            Tok::KwLayout => "Layout".into(),
+            Tok::KwIndexTaskMap => "IndexTaskMap".into(),
+            Tok::KwSingleTaskMap => "SingleTaskMap".into(),
+            Tok::KwInstanceLimit => "InstanceLimit".into(),
+            Tok::KwCollectMemory => "CollectMemory".into(),
+            Tok::KwGarbageCollect => "GarbageCollect".into(),
+            Tok::KwDef => "def".into(),
+            Tok::KwReturn => "return".into(),
+            Tok::KwMachine => "Machine".into(),
+            Tok::Semi => ";".into(),
+            Tok::Comma => ",".into(),
+            Tok::LParen => "(".into(),
+            Tok::RParen => ")".into(),
+            Tok::LBracket => "[".into(),
+            Tok::RBracket => "]".into(),
+            Tok::LBrace => "{".into(),
+            Tok::RBrace => "}".into(),
+            Tok::Star => "*".into(),
+            Tok::Plus => "+".into(),
+            Tok::Minus => "-".into(),
+            Tok::Slash => "/".into(),
+            Tok::Percent => "%".into(),
+            Tok::Dot => ".".into(),
+            Tok::Assign => "=".into(),
+            Tok::EqEq => "==".into(),
+            Tok::NotEq => "!=".into(),
+            Tok::Lt => "<".into(),
+            Tok::Gt => ">".into(),
+            Tok::Le => "<=".into(),
+            Tok::Ge => ">=".into(),
+            Tok::Question => "?".into(),
+            Tok::Colon => ":".into(),
+            Tok::Eof => "end of input".into(),
+        }
+    }
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.show())
+    }
+}
+
+/// A token with its source line (1-based) for error reporting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: usize,
+}

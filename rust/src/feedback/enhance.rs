@@ -1,0 +1,293 @@
+//! Enhanced feedback via keyword matching (paper Table 2 / Table A1).
+
+use crate::sim::Metrics;
+
+/// The three system-feedback categories of Section 4.2.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SystemFeedback {
+    CompileError(String),
+    ExecutionError(String),
+    Performance { line: String, value: f64 },
+}
+
+impl SystemFeedback {
+    pub fn from_metrics(m: &Metrics) -> SystemFeedback {
+        SystemFeedback::Performance { line: m.feedback_line(), value: m.throughput }
+    }
+
+    /// The raw feedback line shown to the optimizer.
+    pub fn line(&self) -> String {
+        match self {
+            SystemFeedback::CompileError(e) => format!("Compile Error: {e}"),
+            SystemFeedback::ExecutionError(e) => format!("Execution Error: {e}"),
+            SystemFeedback::Performance { line, .. } => line.clone(),
+        }
+    }
+
+    pub fn score(&self) -> f64 {
+        match self {
+            SystemFeedback::Performance { value, .. } => *value,
+            _ => 0.0,
+        }
+    }
+
+    pub fn is_error(&self) -> bool {
+        !matches!(self, SystemFeedback::Performance { .. })
+    }
+}
+
+/// Which feedback tiers the optimizer receives (Fig. 8 ablation knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeedbackConfig {
+    pub explain: bool,
+    pub suggest: bool,
+}
+
+impl FeedbackConfig {
+    /// System feedback only.
+    pub const SYSTEM: FeedbackConfig = FeedbackConfig { explain: false, suggest: false };
+    /// System + error explanations.
+    pub const EXPLAIN: FeedbackConfig = FeedbackConfig { explain: true, suggest: false };
+    /// System + explanations + suggestions (the full Trace configuration).
+    pub const FULL: FeedbackConfig = FeedbackConfig { explain: true, suggest: true };
+
+    pub fn label(&self) -> &'static str {
+        match (self.explain, self.suggest) {
+            (false, false) => "System",
+            (true, false) => "System+Explain",
+            (true, true) => "System+Explain+Suggest",
+            (false, true) => "System+Suggest",
+        }
+    }
+}
+
+/// A fully-rendered feedback message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Feedback {
+    pub system: SystemFeedback,
+    pub explain: Option<String>,
+    pub suggest: Option<String>,
+}
+
+impl Feedback {
+    /// The text handed to the LLM optimizer.
+    pub fn text(&self) -> String {
+        let mut out = self.system.line();
+        if let Some(e) = &self.explain {
+            out.push_str("\nExplanation: ");
+            out.push_str(e);
+        }
+        if let Some(s) = &self.suggest {
+            out.push_str("\nSuggestion: ");
+            out.push_str(s);
+        }
+        out
+    }
+}
+
+/// Keyword-matching enhancement, one rule per Table A1 row.
+pub fn enhance(system: &SystemFeedback, cfg: FeedbackConfig) -> Feedback {
+    let line = system.line();
+    let (explain, suggest): (Option<&str>, Option<String>) = if line
+        .contains("Syntax error, unexpected :")
+    {
+        (None, Some("There should be no colon : in function definition.".into()))
+    } else if line.contains("IndexTaskMap's function undefined")
+        || line.contains("SingleTaskMap's function undefined")
+    {
+        (None, Some("Define the IndexTaskMap function first before using it.".into()))
+    } else if let Some(name) = line
+        .strip_prefix("Compile Error: ")
+        .and_then(|l| l.strip_suffix(" not found"))
+    {
+        (
+            None,
+            Some(format!("Include {name} = Machine(GPU); in the generated code.")),
+        )
+    } else if line.contains("stride does not match") {
+        (
+            Some("Memory layout is unexpected."),
+            Some(
+                "Adjust the layout constraints or move tasks to different processor types."
+                    .into(),
+            ),
+        )
+    } else if line.contains("DGEMM parameter") {
+        (Some("Memory layout is unexpected."), Some("Adjust the layout constraint.".into()))
+    } else if line.contains("Slice processor index out of bound") {
+        (
+            Some("IndexTaskMap statements cause error."),
+            Some(
+                "Ensure that the first index of mgpu ends with % mgpu.size[0], \
+                 and the second element ends with % mgpu.size[1]."
+                    .into(),
+            ),
+        )
+    } else if line.contains("event.exists()") {
+        (
+            Some("InstanceLimit statements cause error."),
+            Some("Avoid generating InstanceLimit statements.".into()),
+        )
+    } else if line.contains("Out of memory") {
+        (
+            Some("The chosen memory kind is too small for the working set."),
+            Some(
+                "Move regions out of ZCMEM into FBMEM or SYSMEM, or spread tasks \
+                 across more processors."
+                    .into(),
+            ),
+        )
+    } else if line.contains("Execution time") {
+        (None, Some("Move more tasks to GPU to reduce execution time.".into()))
+    } else if line.contains("GFLOPS") {
+        (
+            None,
+            Some(
+                "Try using different IndexTaskMap or SingleTaskMap statements to \
+                 maximize throughput."
+                    .into(),
+            ),
+        )
+    } else {
+        (None, None)
+    };
+
+    Feedback {
+        system: system.clone(),
+        explain: if cfg.explain { explain.map(String::from) } else { None },
+        suggest: if cfg.suggest { suggest } else { None },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exec(msg: &str) -> SystemFeedback {
+        SystemFeedback::ExecutionError(msg.into())
+    }
+
+    #[test]
+    fn table_a1_mapper1_colon() {
+        let f = enhance(
+            &SystemFeedback::CompileError("Syntax error, unexpected :, expecting {".into()),
+            FeedbackConfig::FULL,
+        );
+        assert!(f.suggest.unwrap().contains("no colon"));
+        assert!(f.explain.is_none());
+    }
+
+    #[test]
+    fn table_a1_mapper2_undefined_func() {
+        let f = enhance(
+            &SystemFeedback::CompileError(
+                "IndexTaskMap's function undefined: cyclic".into(),
+            ),
+            FeedbackConfig::FULL,
+        );
+        assert!(f.suggest.unwrap().contains("Define the IndexTaskMap function"));
+    }
+
+    #[test]
+    fn table_a1_mapper3_mgpu_not_found() {
+        let f = enhance(
+            &SystemFeedback::CompileError("mgpu not found".into()),
+            FeedbackConfig::FULL,
+        );
+        assert_eq!(
+            f.suggest.unwrap(),
+            "Include mgpu = Machine(GPU); in the generated code."
+        );
+    }
+
+    #[test]
+    fn table_a1_mapper4_stride() {
+        let f = enhance(
+            &exec("Assertion failed: stride does not match expected value."),
+            FeedbackConfig::FULL,
+        );
+        assert_eq!(f.explain.unwrap(), "Memory layout is unexpected.");
+        assert!(f.suggest.unwrap().contains("Adjust the layout constraints"));
+    }
+
+    #[test]
+    fn table_a1_mapper5_dgemm() {
+        let f = enhance(
+            &exec("DGEMM parameter number 8 had an illegal value"),
+            FeedbackConfig::FULL,
+        );
+        assert_eq!(f.explain.unwrap(), "Memory layout is unexpected.");
+        assert_eq!(f.suggest.unwrap(), "Adjust the layout constraint.");
+    }
+
+    #[test]
+    fn table_a1_mapper6_slice_oob() {
+        let f = enhance(
+            &exec("Slice processor index out of bound"),
+            FeedbackConfig::FULL,
+        );
+        assert_eq!(f.explain.unwrap(), "IndexTaskMap statements cause error.");
+        assert!(f.suggest.unwrap().contains("% mgpu.size[0]"));
+    }
+
+    #[test]
+    fn table_a1_mapper7_instance_limit() {
+        let f = enhance(&exec("Assertion 'event.exists()' failed"), FeedbackConfig::FULL);
+        assert_eq!(f.explain.unwrap(), "InstanceLimit statements cause error.");
+        assert_eq!(f.suggest.unwrap(), "Avoid generating InstanceLimit statements.");
+    }
+
+    #[test]
+    fn table_a1_mapper8_exec_time() {
+        let f = enhance(
+            &SystemFeedback::Performance {
+                line: "Performance Metric: Execution time is 0.03s.".into(),
+                value: 33.0,
+            },
+            FeedbackConfig::FULL,
+        );
+        assert_eq!(f.suggest.unwrap(), "Move more tasks to GPU to reduce execution time.");
+    }
+
+    #[test]
+    fn table_a1_mapper9_gflops() {
+        let f = enhance(
+            &SystemFeedback::Performance {
+                line: "Performance Metric: Achieved throughput = 4877 GFLOPS".into(),
+                value: 4877.0,
+            },
+            FeedbackConfig::FULL,
+        );
+        assert!(f.suggest.unwrap().contains("different IndexTaskMap"));
+    }
+
+    #[test]
+    fn ablation_config_strips_tiers() {
+        let sys = exec("Assertion failed: stride does not match expected value.");
+        let none = enhance(&sys, FeedbackConfig::SYSTEM);
+        assert!(none.explain.is_none() && none.suggest.is_none());
+        let ex = enhance(&sys, FeedbackConfig::EXPLAIN);
+        assert!(ex.explain.is_some() && ex.suggest.is_none());
+        let full = enhance(&sys, FeedbackConfig::FULL);
+        assert!(full.explain.is_some() && full.suggest.is_some());
+    }
+
+    #[test]
+    fn text_rendering_contains_all_tiers() {
+        let f = enhance(
+            &exec("Slice processor index out of bound"),
+            FeedbackConfig::FULL,
+        );
+        let t = f.text();
+        assert!(t.contains("Execution Error:"));
+        assert!(t.contains("Explanation:"));
+        assert!(t.contains("Suggestion:"));
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(FeedbackConfig::SYSTEM.label(), "System");
+        assert_eq!(FeedbackConfig::EXPLAIN.label(), "System+Explain");
+        assert_eq!(FeedbackConfig::FULL.label(), "System+Explain+Suggest");
+    }
+}

@@ -1,0 +1,12 @@
+//! Feedback engine (S7): system feedback + enhanced feedback.
+//!
+//! Reproduces the paper's three-tier feedback design (Section 4.2,
+//! Table 2 / Table A1): raw **system** feedback (compile error, execution
+//! error, or performance metric), optional **explanations** of execution
+//! errors, and optional **suggestions** for mapper modifications.
+//! Enhancement is keyword matching over the system-feedback text — exactly
+//! as the paper implements it.
+
+pub mod enhance;
+
+pub use enhance::{enhance, Feedback, FeedbackConfig, SystemFeedback};

@@ -1,0 +1,131 @@
+//! Extension experiment (beyond the paper's figures): machine-shape
+//! sensitivity.  The paper argues mappers are "optimized for the
+//! underlying machine architecture"; here we re-run the Cannon search on
+//! three cluster shapes and show that the best *index mapping* changes
+//! with the machine — the quantitative version of that claim, and the
+//! reason a search beats a fixed expert mapper.
+
+use crate::apps;
+use crate::coordinator::{Coordinator, SearchAlgo};
+use crate::feedback::FeedbackConfig;
+use crate::machine::MachineSpec;
+use crate::mapping::expert_dsl;
+use crate::util::table::{f, Table};
+
+use super::report::{save_csv, ExpParams};
+
+#[derive(Debug, Clone)]
+pub struct ShapeResult {
+    pub shape: String,
+    pub expert: f64,
+    pub best: f64,
+    pub best_map_fn: String,
+}
+
+/// The three machine shapes: fat node, the paper's 2x4, and wide cluster.
+pub fn shapes() -> Vec<MachineSpec> {
+    let mut fat = MachineSpec::p100_cluster();
+    fat.name = "1x8".into();
+    fat.nodes = 1;
+    fat.gpus_per_node = 8;
+    let paper = MachineSpec::p100_cluster();
+    let mut wide = MachineSpec::p100_cluster();
+    wide.name = "4x2".into();
+    wide.nodes = 4;
+    wide.gpus_per_node = 2;
+    vec![fat, paper, wide]
+}
+
+pub fn machine_ablation(p: ExpParams) -> Vec<ShapeResult> {
+    let mut results = Vec::new();
+    for spec in shapes() {
+        let shape = format!("{}x{}", spec.nodes, spec.gpus_per_node);
+        let coord = Coordinator::new(spec);
+        let app = apps::by_name("cannon").unwrap();
+        let expert = coord.throughput(&app, expert_dsl("cannon").unwrap());
+        let runs = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..p.runs)
+                .map(|r| {
+                    let coord = &coord;
+                    scope.spawn(move || {
+                        let app = apps::by_name("cannon").unwrap();
+                        coord.run_optimizer(
+                            &app,
+                            SearchAlgo::Trace,
+                            FeedbackConfig::FULL,
+                            p.seed + r as u64 * 71,
+                            p.iters,
+                        )
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect::<Vec<_>>()
+        });
+        let best = runs
+            .iter()
+            .filter_map(|r| r.best.clone())
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let (dsl, score) = best.unwrap_or_default();
+        let map_fn = dsl
+            .lines()
+            .find(|l| l.starts_with("IndexTaskMap dgemm"))
+            .unwrap_or("IndexTaskMap dgemm <default>")
+            .trim_start_matches("IndexTaskMap dgemm ")
+            .trim_end_matches(';')
+            .to_string();
+        results.push(ShapeResult { shape, expert, best: score, best_map_fn: map_fn });
+    }
+
+    let mut t = Table::new(vec![
+        "machine (nodes x gpus)",
+        "expert GFLOPS",
+        "best GFLOPS",
+        "best/expert",
+        "best index map",
+    ]);
+    for r in &results {
+        t.row(vec![
+            r.shape.clone(),
+            f(r.expert, 0),
+            f(r.best, 0),
+            f(r.best / r.expert, 2),
+            r.best_map_fn.clone(),
+        ]);
+    }
+    println!("\n== ablation: Cannon's best mapping across machine shapes ==");
+    print!("{}", t.render());
+    save_csv(&t, "ablation_machines");
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_covers_three_shapes() {
+        let mut p = ExpParams::smoke();
+        p.runs = 2;
+        p.iters = 5;
+        let rs = machine_ablation(p);
+        assert_eq!(rs.len(), 3);
+        for r in &rs {
+            assert!(r.expert > 0.0, "{}: expert failed", r.shape);
+            assert!(r.best > 0.0, "{}: search found nothing", r.shape);
+        }
+    }
+
+    #[test]
+    fn expert_mapper_runs_on_every_shape() {
+        // the fixed expert works everywhere, but its relative quality
+        // varies with the machine — the motivation for searching
+        for spec in shapes() {
+            let coord = Coordinator::new(spec);
+            let app = apps::by_name("cannon").unwrap();
+            assert!(coord.throughput(&app, expert_dsl("cannon").unwrap()) > 0.0);
+        }
+    }
+}

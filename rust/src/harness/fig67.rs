@@ -1,0 +1,149 @@
+//! Figures 6 and 7: normalized throughput for the scientific applications
+//! (Fig. 6) and the matmul algorithms (Fig. 7) — expert vs random vs the
+//! best mapper found by Trace, plus the mean optimization trajectories of
+//! Trace and OPRO over `iters` iterations across `runs` runs.
+
+use crate::apps;
+use crate::coordinator::{Coordinator, SearchAlgo};
+use crate::feedback::FeedbackConfig;
+use crate::mapping::expert_dsl;
+use crate::util::stats;
+use crate::util::table::{f, Table};
+
+use super::report::{save_csv, series, ExpParams};
+
+/// Per-benchmark outcome, throughputs normalized to the expert mapper.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub bench: &'static str,
+    pub expert_raw: f64,
+    pub random_norm: f64,
+    pub trace_best_norm: f64,
+    pub trace_traj: Vec<f64>,
+    pub opro_traj: Vec<f64>,
+    /// DSL of the best Trace mapper.
+    pub best_dsl: Option<String>,
+}
+
+/// Run the Fig. 6/7 protocol for one benchmark.
+pub fn run_bench(coord: &Coordinator, bench: &'static str, p: ExpParams) -> BenchResult {
+    let app = apps::by_name(bench).expect("unknown benchmark");
+    let expert_raw = coord.throughput(&app, expert_dsl(bench).unwrap());
+    assert!(expert_raw > 0.0, "{bench}: expert mapper failed");
+
+    let random_scores = coord.random_baseline(&app, p.random_mappers, p.seed ^ 0xBAD);
+    let random_norm = stats::mean(&random_scores) / expert_raw;
+
+    let trace_runs = coord.run_many(
+        bench,
+        SearchAlgo::Trace,
+        FeedbackConfig::FULL,
+        p.seed,
+        p.runs,
+        p.iters,
+    );
+    let opro_runs = coord.run_many(
+        bench,
+        SearchAlgo::Opro,
+        FeedbackConfig::FULL,
+        p.seed ^ 0x0520,
+        p.runs,
+        p.iters,
+    );
+
+    let trace_trajs: Vec<Vec<f64>> = trace_runs.iter().map(|r| r.trajectory()).collect();
+    let opro_trajs: Vec<Vec<f64>> = opro_runs.iter().map(|r| r.trajectory()).collect();
+    let norm = |t: Vec<f64>| t.into_iter().map(|x| x / expert_raw).collect::<Vec<_>>();
+
+    let best = trace_runs
+        .iter()
+        .filter_map(|r| r.best.clone())
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+    BenchResult {
+        bench,
+        expert_raw,
+        random_norm,
+        trace_best_norm: best.as_ref().map(|(_, s)| s / expert_raw).unwrap_or(0.0),
+        trace_traj: norm(stats::mean_trajectory(&trace_trajs)),
+        opro_traj: norm(stats::mean_trajectory(&opro_trajs)),
+        best_dsl: best.map(|(d, _)| d),
+    }
+}
+
+fn run_figure(
+    coord: &Coordinator,
+    benches: &[&'static str],
+    p: ExpParams,
+    fig_name: &str,
+) -> Vec<BenchResult> {
+    let results: Vec<BenchResult> =
+        benches.iter().map(|&b| run_bench(coord, b, p)).collect();
+
+    let mut t = Table::new(vec![
+        "benchmark",
+        "expert",
+        "random",
+        "trace-best",
+        "trace trajectory (mean best-so-far)",
+        "opro trajectory",
+    ]);
+    for r in &results {
+        t.row(vec![
+            r.bench.to_string(),
+            "1.00".to_string(),
+            f(r.random_norm, 2),
+            f(r.trace_best_norm, 2),
+            series(&r.trace_traj),
+            series(&r.opro_traj),
+        ]);
+    }
+    println!("\n== {fig_name}: normalized throughput (expert = 1.0) ==");
+    print!("{}", t.render());
+    save_csv(&t, fig_name);
+    results
+}
+
+/// Figure 6: circuit, stencil, pennant.
+pub fn fig6(coord: &Coordinator, p: ExpParams) -> Vec<BenchResult> {
+    run_figure(coord, &["circuit", "stencil", "pennant"], p, "fig6")
+}
+
+/// Figure 7: the six matmul algorithms.
+pub fn fig7(coord: &Coordinator, p: ExpParams) -> Vec<BenchResult> {
+    run_figure(
+        coord,
+        &["cannon", "summa", "pumma", "johnson", "solomonik", "cosma"],
+        p,
+        "fig7",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MachineSpec;
+
+    #[test]
+    fn fig6_smoke_shape() {
+        let coord = Coordinator::new(MachineSpec::p100_cluster());
+        let r = run_bench(&coord, "stencil", ExpParams::smoke());
+        assert!(r.expert_raw > 0.0);
+        assert!(r.random_norm < 1.0, "random must lose to expert");
+        assert_eq!(r.trace_traj.len(), ExpParams::smoke().iters);
+        // best-so-far trajectories are monotone
+        for w in r.trace_traj.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn fig7_cannon_smoke() {
+        let coord = Coordinator::new(MachineSpec::p100_cluster());
+        let mut p = ExpParams::smoke();
+        p.iters = 6;
+        let r = run_bench(&coord, "cannon", p);
+        assert!(r.trace_best_norm > 0.5, "trace found nothing decent");
+        assert!(r.best_dsl.is_some());
+    }
+}

@@ -1,0 +1,91 @@
+//! Figure 8: feedback-design ablation on Circuit, COSMA, and Cannon's —
+//! System vs System+Explain vs System+Explain+Suggest, Trace optimizer,
+//! mean best-so-far trajectories.
+
+use crate::apps;
+use crate::coordinator::{Coordinator, SearchAlgo};
+use crate::feedback::FeedbackConfig;
+use crate::mapping::expert_dsl;
+use crate::util::stats;
+use crate::util::table::{f, Table};
+
+use super::report::{save_csv, series, ExpParams};
+
+pub const FIG8_BENCHES: [&str; 3] = ["circuit", "cosma", "cannon"];
+pub const FIG8_CONFIGS: [FeedbackConfig; 3] = [
+    FeedbackConfig::SYSTEM,
+    FeedbackConfig::EXPLAIN,
+    FeedbackConfig::FULL,
+];
+
+#[derive(Debug, Clone)]
+pub struct AblationResult {
+    pub bench: &'static str,
+    pub config: &'static str,
+    /// Normalized mean best-so-far trajectory.
+    pub traj: Vec<f64>,
+    /// Normalized final throughput (mean over runs).
+    pub final_norm: f64,
+}
+
+pub fn fig8(coord: &Coordinator, p: ExpParams) -> Vec<AblationResult> {
+    // the mock LLM has higher run-to-run variance than gpt-4o; average at
+    // least 10 runs per configuration so the channel ordering is visible
+    // above the noise (the paper used 5)
+    let nruns = p.runs.max(10);
+    let mut results = Vec::new();
+    for &bench in &FIG8_BENCHES {
+        let app = apps::by_name(bench).unwrap();
+        let expert = coord.throughput(&app, expert_dsl(bench).unwrap());
+        for cfg in FIG8_CONFIGS {
+            let runs = coord.run_many(
+                bench,
+                SearchAlgo::Trace,
+                cfg,
+                p.seed ^ 0xF18,
+                nruns,
+                p.iters,
+            );
+            let trajs: Vec<Vec<f64>> = runs.iter().map(|r| r.trajectory()).collect();
+            let traj: Vec<f64> = stats::mean_trajectory(&trajs)
+                .into_iter()
+                .map(|x| x / expert)
+                .collect();
+            let final_norm = traj.last().copied().unwrap_or(0.0);
+            results.push(AblationResult { bench, config: cfg.label(), traj, final_norm });
+        }
+    }
+
+    let mut t = Table::new(vec!["benchmark", "feedback", "final", "trajectory"]);
+    for r in &results {
+        t.row(vec![
+            r.bench.to_string(),
+            r.config.to_string(),
+            f(r.final_norm, 2),
+            series(&r.traj),
+        ]);
+    }
+    println!("\n== fig8: feedback ablation (normalized, expert = 1.0) ==");
+    print!("{}", t.render());
+    save_csv(&t, "fig8");
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MachineSpec;
+
+    #[test]
+    fn ablation_runs_all_configs() {
+        let coord = Coordinator::new(MachineSpec::p100_cluster());
+        let mut p = ExpParams::smoke();
+        p.runs = 1;
+        p.iters = 3;
+        let rs = fig8(&coord, p);
+        assert_eq!(rs.len(), 9);
+        let labels: std::collections::HashSet<&str> =
+            rs.iter().map(|r| r.config).collect();
+        assert_eq!(labels.len(), 3);
+    }
+}

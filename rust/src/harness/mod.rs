@@ -1,0 +1,17 @@
+//! Experiment harness (S13/S14): regenerates every table and figure of the
+//! paper's evaluation section.  Each module prints the paper-style rows
+//! and writes a CSV under `results/`.
+
+pub mod ablation;
+pub mod fig67;
+pub mod fig8;
+pub mod report;
+pub mod strategies;
+pub mod table1;
+
+pub use ablation::machine_ablation;
+pub use fig67::{fig6, fig7, run_bench, BenchResult};
+pub use fig8::{fig8, AblationResult};
+pub use report::ExpParams;
+pub use strategies::table3;
+pub use table1::table1;

@@ -1,0 +1,49 @@
+//! Report plumbing shared by the experiment drivers: result directory,
+//! normalized-series rendering, CSV output.
+
+use std::path::PathBuf;
+
+use crate::util::table::Table;
+
+/// Where CSV outputs land (`$MAPPEROPT_RESULTS` or `results/`).
+pub fn results_dir() -> PathBuf {
+    std::env::var("MAPPEROPT_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// Write a table to `results/<name>.csv`, printing where it went.
+pub fn save_csv(table: &Table, name: &str) {
+    let path = results_dir().join(format!("{name}.csv"));
+    match table.write_csv(&path) {
+        Ok(()) => println!("[saved {}]", path.display()),
+        Err(e) => eprintln!("[warn: could not write {}: {e}]", path.display()),
+    }
+}
+
+/// Render a normalized trajectory as `0.52 0.61 .. 0.98` (2 decimals).
+pub fn series(xs: &[f64]) -> String {
+    xs.iter().map(|x| format!("{x:.2}")).collect::<Vec<_>>().join(" ")
+}
+
+/// Standard experiment parameters (paper defaults: 10 iters, 5 runs).
+#[derive(Debug, Clone, Copy)]
+pub struct ExpParams {
+    pub iters: usize,
+    pub runs: usize,
+    pub random_mappers: usize,
+    pub seed: u64,
+}
+
+impl Default for ExpParams {
+    fn default() -> Self {
+        ExpParams { iters: 10, runs: 5, random_mappers: 10, seed: 0xA11CE }
+    }
+}
+
+impl ExpParams {
+    /// Small parameters for integration tests.
+    pub fn smoke() -> ExpParams {
+        ExpParams { iters: 4, runs: 2, random_mappers: 3, seed: 7 }
+    }
+}

@@ -1,0 +1,31 @@
+//! # mapperopt
+//!
+//! Production-grade reproduction of *"Improving Parallel Program Performance
+//! with LLM Optimizers via Agent-System Interfaces"* (ICML 2025): a mapping
+//! DSL for task-based parallel programs, a Legion-like distributed execution
+//! substrate, and an LLM-optimizer loop (Trace-style and OPRO-style) that
+//! searches the DSL-defined mapper space using system feedback.
+//!
+//! Architecture (three layers, python never on the request path):
+//! - **L3 (this crate)** — DSL compiler, machine model, distributed executor,
+//!   feedback engine, mapper agent + optimizers, experiment harness.
+//! - **L2** — jax task-body compute graphs (`python/compile/model.py`),
+//!   AOT-lowered to `artifacts/*.hlo.txt`.
+//! - **L1** — Pallas kernels (`python/compile/kernels/`), validated against
+//!   a pure-jnp oracle.
+//!
+//! Entry points: [`coordinator::Coordinator`] for optimization runs,
+//! [`harness`] for the paper's tables/figures, [`runtime::ArtifactRuntime`]
+//! for executing the AOT-compiled task bodies via PJRT.
+
+pub mod apps;
+pub mod coordinator;
+pub mod dsl;
+pub mod feedback;
+pub mod harness;
+pub mod machine;
+pub mod mapping;
+pub mod optimizer;
+pub mod runtime;
+pub mod sim;
+pub mod util;

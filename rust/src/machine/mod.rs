@@ -1,0 +1,8 @@
+//! Machine substrate: the simulated cluster (S1) and the processor-space
+//! transformation algebra the DSL's index-mapping functions operate on (S2).
+
+pub mod procspace;
+pub mod spec;
+
+pub use procspace::{balanced_factors, ProcSpace, SpaceError};
+pub use spec::{MachineSpec, MemId, MemKind, ProcId, ProcKind};

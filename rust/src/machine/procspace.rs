@@ -1,0 +1,500 @@
+//! Processor-space transformation algebra (paper Appendix A.2).
+//!
+//! `Machine(GPU)` is a 2D space (node, gpu-within-node).  Mappers reshape it
+//! with `split` / `merge` / `swap` / `slice` (and the A.5 `decompose`
+//! convenience) and then index the transformed space; every transformation
+//! is invertible, so indexing the transformed space resolves back to a
+//! concrete processor of the original machine.
+//!
+//! Semantics (transformed index -> original index), verbatim from Fig. A2:
+//!   split(i, d):   b_i = a_i + a_{i+1} * d            (dim i -> (d, s/d))
+//!   merge(p, q):   b_p = a_p % s_p ; b_q = a_p / s_p  (dims p,q -> s_p*s_q)
+//!   swap(p, q):    permute indices p and q
+//!   slice(i,l,h):  b_i = a_i + l                      (dim i -> h-l+1)
+
+use super::spec::{MachineSpec, ProcId, ProcKind};
+
+/// One applied transformation together with the dims of the space it was
+/// applied to (needed to invert it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Op {
+    Split { dim: usize, d: usize },
+    Merge { p: usize, q: usize },
+    Swap { p: usize, q: usize },
+    Slice { dim: usize, low: usize },
+    /// A.5 decompose: dim -> mixed-radix factors (first factor fastest).
+    Decompose { dim: usize, factors: Vec<usize> },
+}
+
+/// A transformed view of the machine's processor grid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProcSpace {
+    pub kind: ProcKind,
+    base_dims: Vec<usize>,
+    dims: Vec<usize>,
+    ops: Vec<(Op, Vec<usize>)>, // (op, dims *before* the op)
+}
+
+/// Errors surface as execution errors in the paper's feedback taxonomy.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum SpaceError {
+    #[error("Slice processor index out of bound")]
+    IndexOutOfBound,
+    #[error("transformation error: {0}")]
+    BadTransform(String),
+}
+
+impl ProcSpace {
+    /// The DSL's `Machine(Proc)`: 2D (nodes, procs-per-node).
+    pub fn machine(spec: &MachineSpec, kind: ProcKind) -> ProcSpace {
+        ProcSpace {
+            kind,
+            base_dims: vec![spec.nodes, spec.per_node(kind)],
+            dims: vec![spec.nodes, spec.per_node(kind)],
+            ops: Vec::new(),
+        }
+    }
+
+    /// Construct directly from dims (tests / synthetic spaces).
+    pub fn from_dims(kind: ProcKind, dims: Vec<usize>) -> ProcSpace {
+        ProcSpace { kind, base_dims: dims.clone(), dims, ops: Vec::new() }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn ndims(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn push(&self, op: Op, new_dims: Vec<usize>) -> ProcSpace {
+        let mut out = self.clone();
+        out.ops.push((op, self.dims.clone()));
+        out.dims = new_dims;
+        out
+    }
+
+    /// split(i, d): dim i of size s -> dims (d, s/d); requires d | s.
+    pub fn split(&self, i: usize, d: usize) -> Result<ProcSpace, SpaceError> {
+        if i >= self.ndims() {
+            return Err(SpaceError::BadTransform(format!(
+                "split dim {i} out of range for {}D space",
+                self.ndims()
+            )));
+        }
+        if d == 0 || self.dims[i] % d != 0 {
+            return Err(SpaceError::BadTransform(format!(
+                "split factor {d} does not divide dim {i} of size {}",
+                self.dims[i]
+            )));
+        }
+        let mut nd = self.dims.clone();
+        let s = nd[i];
+        nd[i] = d;
+        nd.insert(i + 1, s / d);
+        Ok(self.push(Op::Split { dim: i, d }, nd))
+    }
+
+    /// merge(p, q), p < q: fuse dims p and q into one of size s_p * s_q at
+    /// position p (dim q removed).
+    pub fn merge(&self, p: usize, q: usize) -> Result<ProcSpace, SpaceError> {
+        if p >= q || q >= self.ndims() {
+            return Err(SpaceError::BadTransform(format!(
+                "merge({p},{q}) invalid for {}D space (need p < q < ndims)",
+                self.ndims()
+            )));
+        }
+        let mut nd = self.dims.clone();
+        nd[p] = self.dims[p] * self.dims[q];
+        nd.remove(q);
+        Ok(self.push(Op::Merge { p, q }, nd))
+    }
+
+    /// swap(p, q): exchange two dimensions.
+    pub fn swap(&self, p: usize, q: usize) -> Result<ProcSpace, SpaceError> {
+        if p >= self.ndims() || q >= self.ndims() {
+            return Err(SpaceError::BadTransform(format!(
+                "swap({p},{q}) out of range for {}D space",
+                self.ndims()
+            )));
+        }
+        let mut nd = self.dims.clone();
+        nd.swap(p, q);
+        Ok(self.push(Op::Swap { p, q }, nd))
+    }
+
+    /// slice(i, low, high): restrict dim i to [low, high] (inclusive).
+    pub fn slice(&self, i: usize, low: usize, high: usize) -> Result<ProcSpace, SpaceError> {
+        if i >= self.ndims() {
+            return Err(SpaceError::BadTransform(format!(
+                "slice dim {i} out of range for {}D space",
+                self.ndims()
+            )));
+        }
+        if low > high || high >= self.dims[i] {
+            return Err(SpaceError::BadTransform(format!(
+                "slice bounds [{low},{high}] invalid for dim {i} of size {}",
+                self.dims[i]
+            )));
+        }
+        let mut nd = self.dims.clone();
+        nd[i] = high - low + 1;
+        Ok(self.push(Op::Slice { dim: i, low }, nd))
+    }
+
+    /// A.5 decompose(i, target): split dim i into `target.len()` factors as
+    /// equal as possible (prime factors distributed round-robin), replacing
+    /// dim i with the factor list (first factor fastest-varying).
+    pub fn decompose(&self, i: usize, nparts: usize) -> Result<ProcSpace, SpaceError> {
+        if i >= self.ndims() {
+            return Err(SpaceError::BadTransform(format!(
+                "decompose dim {i} out of range for {}D space",
+                self.ndims()
+            )));
+        }
+        if nparts == 0 {
+            return Err(SpaceError::BadTransform("decompose into 0 parts".into()));
+        }
+        let factors = balanced_factors(self.dims[i], nparts);
+        let mut nd = self.dims.clone();
+        nd.splice(i..=i, factors.iter().copied());
+        Ok(self.push(Op::Decompose { dim: i, factors }, nd))
+    }
+
+    /// Map an index in the transformed space back to the base 2D
+    /// (node, proc-in-node) index. Bounds-checked at every stage: an
+    /// out-of-bound index is the paper's "Slice processor index out of
+    /// bound" execution error.
+    pub fn resolve(&self, idx: &[i64]) -> Result<(usize, usize), SpaceError> {
+        if idx.len() != self.ndims() {
+            return Err(SpaceError::BadTransform(format!(
+                "index arity {} != space dims {}",
+                idx.len(),
+                self.ndims()
+            )));
+        }
+        let mut cur: Vec<i64> = idx.to_vec();
+        check_bounds(&cur, &self.dims)?;
+        for (op, prev_dims) in self.ops.iter().rev() {
+            cur = apply_inverse(op, &cur, prev_dims)?;
+            check_bounds(&cur, prev_dims)?;
+        }
+        debug_assert_eq!(cur.len(), 2);
+        Ok((cur[0] as usize, cur[1] as usize))
+    }
+
+    /// Resolve to a concrete ProcId.
+    pub fn proc_at(&self, idx: &[i64]) -> Result<ProcId, SpaceError> {
+        let (node, index) = self.resolve(idx)?;
+        Ok(ProcId { node, kind: self.kind, index })
+    }
+}
+
+fn check_bounds(idx: &[i64], dims: &[usize]) -> Result<(), SpaceError> {
+    for (&v, &d) in idx.iter().zip(dims) {
+        if v < 0 || v as usize >= d {
+            return Err(SpaceError::IndexOutOfBound);
+        }
+    }
+    Ok(())
+}
+
+/// Map an index of the space *after* `op` to the space *before* it.
+fn apply_inverse(op: &Op, idx: &[i64], prev_dims: &[usize]) -> Result<Vec<i64>, SpaceError> {
+    match *op {
+        Op::Split { dim, d } => {
+            // after: (.., a_i, a_{i+1}, ..) -> before: b_i = a_i + a_{i+1}*d
+            let mut out = Vec::with_capacity(idx.len() - 1);
+            out.extend_from_slice(&idx[..dim]);
+            out.push(idx[dim] + idx[dim + 1] * d as i64);
+            out.extend_from_slice(&idx[dim + 2..]);
+            Ok(out)
+        }
+        Op::Merge { p, q } => {
+            // after: merged a_p -> before: b_p = a_p % s_p, b_q = a_p / s_p
+            let sp = prev_dims[p] as i64;
+            let mut out = Vec::with_capacity(idx.len() + 1);
+            out.extend_from_slice(&idx[..p]);
+            out.push(idx[p] % sp);
+            out.extend_from_slice(&idx[p + 1..]);
+            out.insert(q, idx[p] / sp);
+            Ok(out)
+        }
+        Op::Swap { p, q } => {
+            let mut out = idx.to_vec();
+            out.swap(p, q);
+            Ok(out)
+        }
+        Op::Slice { dim, low } => {
+            let mut out = idx.to_vec();
+            out[dim] += low as i64;
+            Ok(out)
+        }
+        Op::Decompose { dim, ref factors } => {
+            // mixed radix, first factor fastest: b = sum_j a_{dim+j} * prod(f_0..f_{j-1})
+            let k = factors.len();
+            let mut stride = 1i64;
+            let mut out_val = 0i64;
+            for j in 0..k {
+                out_val += idx[dim + j] * stride;
+                stride *= factors[j] as i64;
+            }
+            let mut out = Vec::with_capacity(idx.len() - k + 1);
+            out.extend_from_slice(&idx[..dim]);
+            out.push(out_val);
+            out.extend_from_slice(&idx[dim + k..]);
+            Ok(out)
+        }
+    }
+}
+
+/// Factor `n` into `k` parts as equal as possible (prime factors dealt
+/// round-robin largest-first onto the currently-smallest part).
+pub fn balanced_factors(n: usize, k: usize) -> Vec<usize> {
+    let mut parts = vec![1usize; k];
+    let mut primes = prime_factors(n);
+    primes.sort_unstable_by(|a, b| b.cmp(a));
+    for p in primes {
+        let i = (0..k).min_by_key(|&i| parts[i]).unwrap();
+        parts[i] *= p;
+    }
+    parts
+}
+
+fn prime_factors(mut n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut d = 2;
+    while d * d <= n {
+        while n % d == 0 {
+            out.push(d);
+            n /= d;
+        }
+        d += 1;
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn space(dims: &[usize]) -> ProcSpace {
+        ProcSpace::from_dims(ProcKind::Gpu, dims.to_vec())
+    }
+
+    #[test]
+    fn machine_is_2d() {
+        let spec = MachineSpec::p100_cluster();
+        let m = ProcSpace::machine(&spec, ProcKind::Gpu);
+        assert_eq!(m.dims(), &[2, 4]);
+        assert_eq!(m.len(), 8);
+    }
+
+    #[test]
+    fn split_semantics_paper_example() {
+        // m (8,8); m.split(0,2) -> (2,4,8); m'[j0,j1,j2] = m[j0 + j1*2, j2]
+        let m = space(&[8, 8]);
+        let m2 = m.split(0, 2).unwrap();
+        assert_eq!(m2.dims(), &[2, 4, 8]);
+        assert_eq!(m2.resolve(&[1, 3, 5]).unwrap(), (1 + 3 * 2, 5));
+    }
+
+    #[test]
+    fn merge_semantics_paper_example() {
+        // m' (2,4,8); merge(0,1) -> (8,8); m''[j0,j1] = m'[j0%2, j0/2, j1]
+        let m = space(&[8, 8]);
+        let m2 = m.split(0, 2).unwrap();
+        let m3 = m2.merge(0, 1).unwrap();
+        assert_eq!(m3.dims(), &[8, 8]);
+        // split+merge inverse: identity (paper derives this explicitly)
+        for j0 in 0..8 {
+            for j1 in 0..8 {
+                assert_eq!(m3.resolve(&[j0, j1]).unwrap(), (j0 as usize, j1 as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn merge_nonadjacent() {
+        // start 2D (4, 2), split dim0 -> (2, 2, 2), merge non-adjacent (0, 2)
+        let m = space(&[4, 2]).split(0, 2).unwrap();
+        assert_eq!(m.dims(), &[2, 2, 2]);
+        let m2 = m.merge(0, 2).unwrap();
+        assert_eq!(m2.dims(), &[4, 2]);
+        // merged a_0 = 3 -> (b_0 = 3 % 2 = 1, b_2 = 3 / 2 = 1), b_1 = a_1 = 0
+        // then invert split: base0 = b_0 + b_1*2 = 1, base1 = b_2 = 1
+        assert_eq!(m2.resolve(&[3, 0]).unwrap(), (1, 1));
+    }
+
+    #[test]
+    fn swap_then_merge_changes_linearization() {
+        // merging (node, gpu) row-major vs swapped column-major
+        let m = space(&[2, 4]);
+        let row = m.merge(0, 1).unwrap(); // size 8: idx -> (idx%2, idx/2)
+        let col = m.swap(0, 1).unwrap().merge(0, 1).unwrap(); // idx -> swapped
+        assert_eq!(row.resolve(&[3]).unwrap(), (1, 1)); // 3%2=1, 3/2=1
+        assert_eq!(col.resolve(&[3]).unwrap(), (0, 3)); // (3%4, 3/4) swapped -> (0,3)
+    }
+
+    #[test]
+    fn slice_offsets() {
+        let m = space(&[2, 4]);
+        let s = m.slice(1, 2, 3).unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.resolve(&[0, 0]).unwrap(), (0, 2));
+        assert_eq!(s.resolve(&[1, 1]).unwrap(), (1, 3));
+    }
+
+    #[test]
+    fn out_of_bound_is_slice_error() {
+        let m = space(&[2, 4]);
+        assert_eq!(m.resolve(&[0, 4]).unwrap_err(), SpaceError::IndexOutOfBound);
+        assert_eq!(m.resolve(&[-1, 0]).unwrap_err(), SpaceError::IndexOutOfBound);
+        let s = m.slice(1, 2, 3).unwrap();
+        assert_eq!(s.resolve(&[0, 2]).unwrap_err(), SpaceError::IndexOutOfBound);
+    }
+
+    #[test]
+    fn split_requires_divisibility() {
+        let m = space(&[2, 4]);
+        assert!(m.split(1, 3).is_err());
+        assert!(m.split(2, 2).is_err());
+        assert!(m.split(1, 0).is_err());
+    }
+
+    #[test]
+    fn decompose_balances_factors() {
+        assert_eq!(balanced_factors(8, 3).iter().product::<usize>(), 8);
+        assert_eq!(balanced_factors(12, 2), vec![3, 4]);
+        assert_eq!(balanced_factors(1, 3), vec![1, 1, 1]);
+        assert_eq!(balanced_factors(7, 2), vec![7, 1]);
+    }
+
+    #[test]
+    fn decompose_resolves_mixed_radix() {
+        // (4, 2) -> decompose dim0 into 2 parts (2, 2): dims (2, 2, 2)
+        let m = space(&[4, 2]);
+        let d = m.decompose(0, 2).unwrap();
+        assert_eq!(d.dims(), &[2, 2, 2]);
+        // first factor fastest: b0 = a0 + 2*a1
+        assert_eq!(d.resolve(&[1, 1, 0]).unwrap(), (3, 0));
+        assert_eq!(d.resolve(&[0, 1, 1]).unwrap(), (2, 1));
+    }
+
+    #[test]
+    fn solomonik_shape_from_paper_a6() {
+        // 2 nodes x 4 GPUs; split node dim and GPU dim into 3D each:
+        // visualized as (2,1,1) node space and (1,2,2) GPU space
+        let m = space(&[2, 4]);
+        let m6 = m.decompose(0, 3).unwrap().decompose(3, 3).unwrap();
+        assert_eq!(m6.ndims(), 6);
+        assert_eq!(m6.dims()[..3].iter().product::<usize>(), 2);
+        assert_eq!(m6.dims()[3..].iter().product::<usize>(), 4);
+        // every valid index resolves to a valid processor
+        let dims = m6.dims().to_vec();
+        let mut count = 0;
+        let mut seen = std::collections::HashSet::new();
+        let mut idx = vec![0i64; 6];
+        loop {
+            let r = m6.resolve(&idx).unwrap();
+            assert!(r.0 < 2 && r.1 < 4);
+            seen.insert(r);
+            count += 1;
+            // odometer
+            let mut k = 0;
+            loop {
+                idx[k] += 1;
+                if (idx[k] as usize) < dims[k] {
+                    break;
+                }
+                idx[k] = 0;
+                k += 1;
+                if k == 6 {
+                    assert_eq!(count, 8);
+                    assert_eq!(seen.len(), 8, "transform must stay bijective");
+                    return;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_split_merge_identity() {
+        // any chain of valid split(0,d) followed by merge(0,1) is identity
+        check(0xC0FFEE, 200, |rng| {
+            let nodes = 1 << rng.below(3); // 1,2,4
+            let per = 1 << (1 + rng.below(3)); // 2,4,8
+            let m = space(&[nodes, per]);
+            let divisors: Vec<usize> =
+                (1..=nodes).filter(|d| nodes % d == 0).collect();
+            let d = *rng.choose(&divisors);
+            let m2 = m.split(0, d).unwrap().merge(0, 1).unwrap();
+            let i = rng.below(nodes) as i64;
+            let j = rng.below(per) as i64;
+            assert_eq!(m2.resolve(&[i, j]).unwrap(), (i as usize, j as usize));
+        });
+    }
+
+    #[test]
+    fn property_transform_chains_stay_bijective() {
+        // random chains of split/merge/swap preserve bijectivity onto the base
+        check(0xBEEF, 100, |rng| {
+            let mut sp = space(&[2, 4]);
+            for _ in 0..rng.below(4) {
+                let choice = rng.below(3);
+                sp = match choice {
+                    0 => {
+                        let dim = rng.below(sp.ndims());
+                        let s = sp.dims()[dim];
+                        let divs: Vec<usize> =
+                            (1..=s).filter(|d| s % d == 0).collect();
+                        sp.split(dim, *rng.choose(&divs)).unwrap()
+                    }
+                    1 if sp.ndims() >= 2 => {
+                        let p = rng.below(sp.ndims() - 1);
+                        sp.merge(p, p + 1).unwrap()
+                    }
+                    _ => {
+                        let p = rng.below(sp.ndims());
+                        let q = rng.below(sp.ndims());
+                        sp.swap(p.min(q), p.max(q)).unwrap()
+                    }
+                };
+            }
+            assert_eq!(sp.len(), 8, "total processors must be preserved");
+            // enumerate all indices; all resolve, all distinct
+            let dims = sp.dims().to_vec();
+            let mut seen = std::collections::HashSet::new();
+            let mut idx = vec![0i64; dims.len()];
+            'outer: loop {
+                seen.insert(sp.resolve(&idx).unwrap());
+                let mut k = 0;
+                loop {
+                    idx[k] += 1;
+                    if (idx[k] as usize) < dims[k] {
+                        break;
+                    }
+                    idx[k] = 0;
+                    k += 1;
+                    if k == dims.len() {
+                        break 'outer;
+                    }
+                }
+            }
+            assert_eq!(seen.len(), 8);
+        });
+    }
+}

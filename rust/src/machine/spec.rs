@@ -1,0 +1,440 @@
+//! Machine model: a cluster of nodes with CPUs / GPUs / OpenMP groups and
+//! the memory kinds the paper's mappers place data into.
+//!
+//! This is the simulated stand-in for the paper's testbed (2 nodes, each
+//! with two 10-core Xeon E5-2640v4 CPUs, 256 GB RAM, 4 Tesla P100s).
+//! All constants are *ratios-first*: the experiments report normalized
+//! throughput, so what matters is that GPU:CPU compute, FBMEM:ZCMEM:SYSMEM
+//! bandwidth, and intra-node:inter-node link ratios are P100-era realistic.
+
+use std::fmt;
+
+/// Processor kinds a mapper can target (DSL `Proc ::= CPU | GPU | OMP`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ProcKind {
+    Cpu,
+    Gpu,
+    Omp,
+}
+
+impl ProcKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProcKind::Cpu => "CPU",
+            ProcKind::Gpu => "GPU",
+            ProcKind::Omp => "OMP",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProcKind> {
+        match s {
+            "CPU" => Some(ProcKind::Cpu),
+            "GPU" => Some(ProcKind::Gpu),
+            "OMP" => Some(ProcKind::Omp),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ProcKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Memory kinds (DSL `Memory ::= SYSMEM | FBMEM | ZCMEM | RDMA | SOCKMEM`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MemKind {
+    /// Node DRAM.
+    SysMem,
+    /// GPU framebuffer (HBM2 on P100).
+    FbMem,
+    /// Host memory pinned + mapped into the GPU address space; CPU and GPU
+    /// share it, GPU access goes over PCIe.
+    ZcMem,
+    /// Registered memory reachable by the NIC for one-sided transfers.
+    RdmaMem,
+    /// NUMA-socket-local DRAM.
+    SockMem,
+}
+
+impl MemKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemKind::SysMem => "SYSMEM",
+            MemKind::FbMem => "FBMEM",
+            MemKind::ZcMem => "ZCMEM",
+            MemKind::RdmaMem => "RDMA",
+            MemKind::SockMem => "SOCKMEM",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MemKind> {
+        match s {
+            "SYSMEM" => Some(MemKind::SysMem),
+            "FBMEM" => Some(MemKind::FbMem),
+            "ZCMEM" => Some(MemKind::ZcMem),
+            "RDMA" => Some(MemKind::RdmaMem),
+            "SOCKMEM" => Some(MemKind::SockMem),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for MemKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A concrete processor: (node, kind, index within kind on that node).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProcId {
+    pub node: usize,
+    pub kind: ProcKind,
+    pub index: usize,
+}
+
+impl fmt::Display for ProcId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}@n{}", self.kind, self.index, self.node)
+    }
+}
+
+/// A concrete memory: (node, kind, index). FBMEM/ZCMEM index = GPU index;
+/// SYSMEM/RDMA index = 0; SOCKMEM index = socket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MemId {
+    pub node: usize,
+    pub kind: MemKind,
+    pub index: usize,
+}
+
+impl fmt::Display for MemId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}@n{}", self.kind, self.index, self.node)
+    }
+}
+
+/// Full machine description + performance constants.
+#[derive(Debug, Clone)]
+pub struct MachineSpec {
+    pub name: String,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub cpus_per_node: usize,
+    pub omp_per_node: usize,
+    pub sockets_per_node: usize,
+
+    // capacities (bytes)
+    pub fbmem_capacity: u64,
+    pub zcmem_capacity: u64,
+    pub sysmem_capacity: u64,
+    pub rdma_capacity: u64,
+
+    // compute throughput (GFLOP/s, fp32)
+    pub gpu_gflops: f64,
+    pub cpu_gflops: f64,
+    pub omp_gflops: f64,
+
+    // memory access bandwidth from the *owning* processor (GB/s)
+    pub fbmem_bw: f64,
+    pub sysmem_bw: f64,
+    /// GPU access to ZCMEM crosses PCIe.
+    pub zcmem_gpu_bw: f64,
+    /// CPU access to ZCMEM is plain DRAM.
+    pub zcmem_cpu_bw: f64,
+    pub sockmem_bw: f64,
+
+    // transfer link bandwidth (GB/s) and latency (us)
+    pub pcie_bw: f64,
+    pub pcie_lat_us: f64,
+    /// GPU<->GPU peer copies within a node (PCIe P2P on the P100 testbed).
+    pub p2p_bw: f64,
+    pub nic_bw: f64,
+    pub nic_lat_us: f64,
+
+    // per-task overheads (us)
+    pub gpu_launch_us: f64,
+    pub cpu_spawn_us: f64,
+    pub omp_spawn_us: f64,
+}
+
+impl MachineSpec {
+    /// The paper's testbed: 2 nodes x 4 P100, 2x10-core Xeon, 256 GB.
+    pub fn p100_cluster() -> Self {
+        MachineSpec {
+            name: "p100x4x2".into(),
+            nodes: 2,
+            gpus_per_node: 4,
+            cpus_per_node: 20,
+            omp_per_node: 2, // one OpenMP group per socket
+            sockets_per_node: 2,
+            fbmem_capacity: 16 << 30,
+            zcmem_capacity: 128 << 20, // Legion-like pinned zero-copy pool (-ll:zsize)
+            sysmem_capacity: 256u64 << 30,
+            rdma_capacity: 32u64 << 30,
+            gpu_gflops: 9_300.0, // P100 fp32 peak ~9.3 TFLOP/s
+            cpu_gflops: 35.0,    // one Broadwell core w/ AVX2 FMA
+            omp_gflops: 300.0,   // 10-core socket group
+            fbmem_bw: 732.0, // HBM2
+            // per-*core* effective stream bandwidth (the socket's ~60 GB/s
+            // is shared by 10 cores; a lone core streams ~10 GB/s)
+            sysmem_bw: 10.0,
+            zcmem_gpu_bw: 10.0, // PCIe 3.0 x16 effective
+            zcmem_cpu_bw: 10.0,
+            // an OpenMP group owns its whole socket's bandwidth
+            sockmem_bw: 55.0,
+            pcie_bw: 12.0,
+            pcie_lat_us: 10.0,
+            p2p_bw: 9.0,
+            nic_bw: 6.0, // FDR-ish IB, effective
+            nic_lat_us: 25.0,
+            gpu_launch_us: 8.0,
+            cpu_spawn_us: 1.0,
+            omp_spawn_us: 4.0,
+        }
+    }
+
+    /// A single-node shape for unit tests (1 node x 2 GPUs).
+    pub fn small() -> Self {
+        let mut m = Self::p100_cluster();
+        m.name = "small".into();
+        m.nodes = 1;
+        m.gpus_per_node = 2;
+        m
+    }
+
+    /// Total processors of a kind across the machine.
+    pub fn count(&self, kind: ProcKind) -> usize {
+        let per = match kind {
+            ProcKind::Cpu => self.cpus_per_node,
+            ProcKind::Gpu => self.gpus_per_node,
+            ProcKind::Omp => self.omp_per_node,
+        };
+        per * self.nodes
+    }
+
+    pub fn per_node(&self, kind: ProcKind) -> usize {
+        match kind {
+            ProcKind::Cpu => self.cpus_per_node,
+            ProcKind::Gpu => self.gpus_per_node,
+            ProcKind::Omp => self.omp_per_node,
+        }
+    }
+
+    /// All processors of a kind in (node-major, index-minor) order — the
+    /// base 2D processor space `Machine(kind)` the DSL exposes.
+    pub fn procs(&self, kind: ProcKind) -> Vec<ProcId> {
+        let per = self.per_node(kind);
+        (0..self.nodes)
+            .flat_map(move |node| {
+                (0..per).map(move |index| ProcId { node, kind, index })
+            })
+            .collect()
+    }
+
+    /// GFLOP/s of one processor.
+    pub fn gflops(&self, kind: ProcKind) -> f64 {
+        match kind {
+            ProcKind::Cpu => self.cpu_gflops,
+            ProcKind::Gpu => self.gpu_gflops,
+            ProcKind::Omp => self.omp_gflops,
+        }
+    }
+
+    /// Per-task dispatch overhead in microseconds.
+    pub fn spawn_overhead_us(&self, kind: ProcKind) -> f64 {
+        match kind {
+            ProcKind::Cpu => self.cpu_spawn_us,
+            ProcKind::Gpu => self.gpu_launch_us,
+            ProcKind::Omp => self.omp_spawn_us,
+        }
+    }
+
+    /// Capacity of a memory instance in bytes.
+    pub fn capacity(&self, kind: MemKind) -> u64 {
+        match kind {
+            MemKind::SysMem => self.sysmem_capacity,
+            MemKind::FbMem => self.fbmem_capacity,
+            MemKind::ZcMem => self.zcmem_capacity,
+            MemKind::RdmaMem => self.rdma_capacity,
+            MemKind::SockMem => self.sysmem_capacity / self.sockets_per_node as u64,
+        }
+    }
+
+    /// Can `proc` address `mem` directly (zero-copy), and at what GB/s?
+    /// Returns None when the task data must first be *transferred* into a
+    /// memory the processor can address.
+    pub fn access_bw(&self, proc: ProcId, mem: MemId) -> Option<f64> {
+        if proc.node != mem.node {
+            // only RDMA memory is remotely addressable, and only by the NIC
+            return None;
+        }
+        match (proc.kind, mem.kind) {
+            (ProcKind::Gpu, MemKind::FbMem) if mem.index == proc.index => {
+                Some(self.fbmem_bw)
+            }
+            // a GPU can peer into a sibling's framebuffer over PCIe
+            (ProcKind::Gpu, MemKind::FbMem) => Some(self.p2p_bw),
+            (ProcKind::Gpu, MemKind::ZcMem) => Some(self.zcmem_gpu_bw),
+            (ProcKind::Cpu | ProcKind::Omp, MemKind::SysMem) => Some(self.sysmem_bw),
+            (ProcKind::Cpu | ProcKind::Omp, MemKind::SockMem) => Some(self.sockmem_bw),
+            (ProcKind::Cpu | ProcKind::Omp, MemKind::ZcMem) => Some(self.zcmem_cpu_bw),
+            (ProcKind::Cpu | ProcKind::Omp, MemKind::RdmaMem) => Some(self.sysmem_bw),
+            _ => None,
+        }
+    }
+
+    /// Best memory kind directly addressable by a processor kind, in the
+    /// priority order Legion's default mapper uses.
+    pub fn default_memory(&self, kind: ProcKind) -> MemKind {
+        match kind {
+            ProcKind::Gpu => MemKind::FbMem,
+            ProcKind::Cpu | ProcKind::Omp => MemKind::SysMem,
+        }
+    }
+
+    /// Which memory instance a (proc, memkind) pair resolves to.
+    pub fn mem_for(&self, proc: ProcId, kind: MemKind) -> MemId {
+        let index = match kind {
+            MemKind::FbMem => {
+                if proc.kind == ProcKind::Gpu {
+                    proc.index
+                } else {
+                    0
+                }
+            }
+            // zero-copy memory is pinned *host* memory shared by every
+            // processor on the node: one instance per node
+            MemKind::ZcMem => 0,
+            MemKind::SockMem => {
+                // map cpu index to socket
+                let per_socket =
+                    (self.cpus_per_node / self.sockets_per_node).max(1);
+                (proc.index / per_socket).min(self.sockets_per_node - 1)
+            }
+            _ => 0,
+        };
+        MemId { node: proc.node, kind, index }
+    }
+
+    /// Point-to-point transfer time in microseconds for `bytes` moved
+    /// from `src` to `dst` memory.
+    pub fn transfer_us(&self, src: MemId, dst: MemId, bytes: u64) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        let gb = bytes as f64 / 1e9;
+        if src.node != dst.node {
+            // inter-node: NIC path (staging through RDMA/SYSMEM is folded
+            // into the effective NIC bandwidth)
+            return self.nic_lat_us + gb / self.nic_bw * 1e6;
+        }
+        // intra-node
+        let bw = match (src.kind, dst.kind) {
+            (MemKind::FbMem, MemKind::FbMem) if src.index != dst.index => self.p2p_bw,
+            (MemKind::FbMem, MemKind::FbMem) => return 0.0,
+            (MemKind::FbMem, _) | (_, MemKind::FbMem) => self.pcie_bw,
+            (MemKind::ZcMem, _) | (_, MemKind::ZcMem) => self.zcmem_cpu_bw,
+            _ => self.sysmem_bw,
+        };
+        self.pcie_lat_us + gb / bw * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p100_shape() {
+        let m = MachineSpec::p100_cluster();
+        assert_eq!(m.count(ProcKind::Gpu), 8);
+        assert_eq!(m.count(ProcKind::Cpu), 40);
+        assert_eq!(m.count(ProcKind::Omp), 4);
+        assert_eq!(m.procs(ProcKind::Gpu).len(), 8);
+    }
+
+    #[test]
+    fn proc_enumeration_node_major() {
+        let m = MachineSpec::p100_cluster();
+        let ps = m.procs(ProcKind::Gpu);
+        assert_eq!(ps[0], ProcId { node: 0, kind: ProcKind::Gpu, index: 0 });
+        assert_eq!(ps[4], ProcId { node: 1, kind: ProcKind::Gpu, index: 0 });
+    }
+
+    #[test]
+    fn gpu_cannot_address_sysmem() {
+        let m = MachineSpec::p100_cluster();
+        let g = ProcId { node: 0, kind: ProcKind::Gpu, index: 0 };
+        let sys = MemId { node: 0, kind: MemKind::SysMem, index: 0 };
+        assert!(m.access_bw(g, sys).is_none());
+    }
+
+    #[test]
+    fn fbmem_fastest_for_owner_gpu() {
+        let m = MachineSpec::p100_cluster();
+        let g = ProcId { node: 0, kind: ProcKind::Gpu, index: 1 };
+        let own = MemId { node: 0, kind: MemKind::FbMem, index: 1 };
+        let zc = MemId { node: 0, kind: MemKind::ZcMem, index: 1 };
+        assert!(m.access_bw(g, own).unwrap() > m.access_bw(g, zc).unwrap() * 10.0);
+    }
+
+    #[test]
+    fn cross_node_access_denied() {
+        let m = MachineSpec::p100_cluster();
+        let g = ProcId { node: 0, kind: ProcKind::Gpu, index: 0 };
+        let far = MemId { node: 1, kind: MemKind::FbMem, index: 0 };
+        assert!(m.access_bw(g, far).is_none());
+    }
+
+    #[test]
+    fn transfer_cost_ordering() {
+        // same-fb == 0 < p2p < inter-node for same payload
+        let m = MachineSpec::p100_cluster();
+        let fb00 = MemId { node: 0, kind: MemKind::FbMem, index: 0 };
+        let fb01 = MemId { node: 0, kind: MemKind::FbMem, index: 1 };
+        let fb10 = MemId { node: 1, kind: MemKind::FbMem, index: 0 };
+        let bytes = 64 << 20;
+        assert_eq!(m.transfer_us(fb00, fb00, bytes), 0.0);
+        let p2p = m.transfer_us(fb00, fb01, bytes);
+        let nic = m.transfer_us(fb00, fb10, bytes);
+        assert!(p2p > 0.0 && nic > p2p, "p2p={p2p} nic={nic}");
+    }
+
+    #[test]
+    fn zcmem_shared_access() {
+        let m = MachineSpec::p100_cluster();
+        let g = ProcId { node: 0, kind: ProcKind::Gpu, index: 0 };
+        let c = ProcId { node: 0, kind: ProcKind::Cpu, index: 3 };
+        let zc = MemId { node: 0, kind: MemKind::ZcMem, index: 0 };
+        assert!(m.access_bw(g, zc).is_some());
+        assert!(m.access_bw(c, zc).is_some());
+    }
+
+    #[test]
+    fn mem_for_socket_mapping() {
+        let m = MachineSpec::p100_cluster();
+        let c0 = ProcId { node: 0, kind: ProcKind::Cpu, index: 0 };
+        let c19 = ProcId { node: 0, kind: ProcKind::Cpu, index: 19 };
+        assert_eq!(m.mem_for(c0, MemKind::SockMem).index, 0);
+        assert_eq!(m.mem_for(c19, MemKind::SockMem).index, 1);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [ProcKind::Cpu, ProcKind::Gpu, ProcKind::Omp] {
+            assert_eq!(ProcKind::parse(k.name()), Some(k));
+        }
+        for k in [
+            MemKind::SysMem,
+            MemKind::FbMem,
+            MemKind::ZcMem,
+            MemKind::RdmaMem,
+            MemKind::SockMem,
+        ] {
+            assert_eq!(MemKind::parse(k.name()), Some(k));
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! `mapperopt` — CLI for the mapper-optimization framework.
+//!
+//! Subcommands:
+//!   table1                    — mapper LoC, DSL vs C++ (paper Table 1)
+//!   table3                    — strategy->code generation (paper Table 3)
+//!   fig6 / fig7 / fig8        — the evaluation figures
+//!   all                       — every table and figure in sequence
+//!   run --app A [--mapper F]  — execute one app under a mapper (expert
+//!                               default), print metrics
+//!   optimize --app A [...]    — one optimization campaign, live log
+//!   bench-suite               — quick end-to-end status of all benchmarks
+//!
+//! Common flags: --iters N --runs N --seed S --algo trace|opro
+//!               --feedback system|explain|full
+
+use std::process::ExitCode;
+
+use mapperopt::apps;
+use mapperopt::coordinator::{Coordinator, SearchAlgo};
+use mapperopt::feedback::FeedbackConfig;
+use mapperopt::harness::{self, ExpParams};
+use mapperopt::machine::MachineSpec;
+use mapperopt::mapping::expert_dsl;
+use mapperopt::util::cli::Args;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+
+    let params = ExpParams {
+        iters: args.usize("iters", 10),
+        runs: args.usize("runs", 5),
+        random_mappers: args.usize("random-mappers", 10),
+        seed: args.u64("seed", 0xA11CE),
+    };
+    let coord = Coordinator::new(MachineSpec::p100_cluster());
+
+    match cmd {
+        "table1" => {
+            harness::table1();
+        }
+        "table3" => {
+            harness::table3(&coord.spec);
+        }
+        "fig6" => {
+            harness::fig6(&coord, params);
+        }
+        "fig7" => {
+            harness::fig7(&coord, params);
+        }
+        "fig8" => {
+            harness::fig8(&coord, params);
+        }
+        "ablation" => {
+            harness::machine_ablation(params);
+        }
+        "all" => {
+            harness::table1();
+            harness::table3(&coord.spec);
+            harness::fig6(&coord, params);
+            harness::fig7(&coord, params);
+            harness::fig8(&coord, params);
+            println!(
+                "\n[{} evaluations, {} cache hits]",
+                coord.stats.evals.load(std::sync::atomic::Ordering::Relaxed),
+                coord.stats.cache_hits.load(std::sync::atomic::Ordering::Relaxed)
+            );
+        }
+        "run" => return cmd_run(&coord, &args),
+        "optimize" => return cmd_optimize(&coord, &args, params),
+        "bench-suite" => {
+            for name in apps::ALL_BENCHMARKS {
+                let app = apps::by_name(name).unwrap();
+                let fb = coord.evaluate(&app, expert_dsl(name).unwrap());
+                println!("{name:10} {}", fb.line());
+            }
+        }
+        "help" => {
+            usage();
+        }
+        _ => {
+            usage();
+            return ExitCode::from(2);
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn usage() {
+    println!(
+        "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite>\n\
+         flags: --app NAME --mapper FILE --algo trace|opro \
+         --feedback system|explain|full --iters N --runs N --seed S"
+    );
+}
+
+fn cmd_run(coord: &Coordinator, args: &Args) -> ExitCode {
+    let name = args.str_or("app", "circuit");
+    let Some(app) = apps::by_name(name) else {
+        eprintln!("unknown app '{name}' (have: {:?})", apps::ALL_BENCHMARKS);
+        return ExitCode::from(2);
+    };
+    let dsl = match args.get("mapper") {
+        Some(path) => match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot read mapper {path}: {e}");
+                return ExitCode::from(2);
+            }
+        },
+        None => expert_dsl(name).unwrap().to_string(),
+    };
+    let fb = coord.evaluate(&app, &dsl);
+    println!("{}", fb.line());
+    ExitCode::SUCCESS
+}
+
+fn cmd_optimize(coord: &Coordinator, args: &Args, p: ExpParams) -> ExitCode {
+    let name = args.str_or("app", "circuit");
+    let Some(app) = apps::by_name(name) else {
+        eprintln!("unknown app '{name}'");
+        return ExitCode::from(2);
+    };
+    let algo = match args.str_or("algo", "trace") {
+        "opro" => SearchAlgo::Opro,
+        _ => SearchAlgo::Trace,
+    };
+    let cfg = match args.str_or("feedback", "full") {
+        "system" => FeedbackConfig::SYSTEM,
+        "explain" => FeedbackConfig::EXPLAIN,
+        _ => FeedbackConfig::FULL,
+    };
+    let expert = coord.throughput(&app, expert_dsl(name).unwrap());
+    println!(
+        "optimizing {name} with {} ({}) for {} iterations; expert = {expert:.1}",
+        algo.name(),
+        cfg.label(),
+        p.iters
+    );
+    let run = coord.run_optimizer(&app, algo, cfg, p.seed, p.iters);
+    for r in &run.records {
+        println!(
+            "iter {:2}  score {:10.1}  best {:10.1}  | {}",
+            r.iter,
+            r.score,
+            r.best_so_far,
+            r.feedback.text().replace('\n', " | ")
+        );
+    }
+    if let Some((dsl, score)) = run.best {
+        println!(
+            "\nbest mapper: {score:.1} ({:.2}x expert)\n---\n{dsl}",
+            score / expert
+        );
+    }
+    ExitCode::SUCCESS
+}

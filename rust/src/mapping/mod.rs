@@ -1,0 +1,8 @@
+//! Mapper sources: expert baselines (DSL re-implementations of the
+//! benchmarks' C++ mappers) and the random-agent baseline.
+
+pub mod expert;
+pub mod random;
+
+pub use expert::{all_experts, expert_dsl};
+pub use random::random_mappers;

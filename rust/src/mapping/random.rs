@@ -1,0 +1,37 @@
+//! Random mapper baseline: "produced by our MapperAgent with 10 different
+//! random seeds" (Section 5.2).  Thin wrapper over the agent genome.
+
+use crate::apps::taskgraph::App;
+use crate::optimizer::{AgentGenome, AppInfo};
+use crate::util::rng::Rng;
+
+/// Generate `n` random mappers for an app.
+pub fn random_mappers(app: &App, n: usize, seed: u64) -> Vec<String> {
+    let info = AppInfo::from_app(app);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| AgentGenome::random(&info, &mut rng).render())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+
+    #[test]
+    fn generates_distinct_mappers() {
+        let app = apps::by_name("circuit").unwrap();
+        let ms = random_mappers(&app, 10, 0);
+        assert_eq!(ms.len(), 10);
+        let distinct: std::collections::HashSet<&String> = ms.iter().collect();
+        assert!(distinct.len() >= 8, "random mappers should mostly differ");
+    }
+
+    #[test]
+    fn reproducible_per_seed() {
+        let app = apps::by_name("summa").unwrap();
+        assert_eq!(random_mappers(&app, 3, 5), random_mappers(&app, 3, 5));
+        assert_ne!(random_mappers(&app, 3, 5), random_mappers(&app, 3, 6));
+    }
+}

@@ -1,0 +1,457 @@
+//! The MapperAgent (paper Section 4.2, Figure 5 / A6).
+//!
+//! The agent is a structured genome with one *trainable decision block*
+//! per DSL statement class — task placement, region memories, layouts,
+//! index-task maps, instance limits — mirroring the `@bundle(trainable)`
+//! methods of the paper's Trace agent.  `render()` emits the DSL mapper
+//! text, which then flows through the *real* DSL compiler and executor;
+//! compile errors are therefore reachable, exactly as for an LLM emitting
+//! DSL (the mock LLM occasionally slips into python-style syntax).
+
+use std::collections::BTreeMap;
+
+use crate::apps::taskgraph::App;
+use crate::dsl::stdlib;
+use crate::machine::{MemKind, ProcKind};
+use crate::util::rng::Rng;
+
+/// What the agent knows about the application (the "application-related
+/// information" input of Figure 4).
+#[derive(Debug, Clone)]
+pub struct AppInfo {
+    pub name: String,
+    pub tasks: Vec<TaskInfo>,
+    /// Unique region-argument names the mapper can target, with field
+    /// counts (AOS/SOA relevance).
+    pub region_args: Vec<RegionArgInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskInfo {
+    pub name: String,
+    pub variants: Vec<ProcKind>,
+    /// Launch-domain dimensionality (0 = single task).
+    pub index_dims: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct RegionArgInfo {
+    pub name: String,
+    pub fields: usize,
+}
+
+impl AppInfo {
+    pub fn from_app(app: &App) -> AppInfo {
+        let mut tasks = Vec::new();
+        let mut region_args: Vec<RegionArgInfo> = Vec::new();
+        let mut seen_regions = std::collections::HashSet::new();
+        // scan the first two steps to see every launch shape
+        for step in 0..app.steps.min(2) {
+            for launch in app.launches(step) {
+                let t = &app.tasks[launch.task];
+                if !tasks.iter().any(|ti: &TaskInfo| ti.name == t.name) {
+                    tasks.push(TaskInfo {
+                        name: t.name.clone(),
+                        variants: t.variants.clone(),
+                        index_dims: if launch.num_points() > 1 {
+                            launch.ispace.len()
+                        } else {
+                            0
+                        },
+                    });
+                }
+                for rr in &launch.regions {
+                    let name = rr.mapped_name(&app.regions).to_string();
+                    if seen_regions.insert(name.clone()) {
+                        region_args.push(RegionArgInfo {
+                            name,
+                            fields: app.regions[rr.region].fields,
+                        });
+                    }
+                }
+            }
+        }
+        AppInfo { name: app.name.clone(), tasks, region_args }
+    }
+}
+
+/// Layout gene for one region argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayoutGene {
+    pub aos: bool,
+    pub f_order: bool,
+    /// None = no alignment constraint.
+    pub align: Option<u64>,
+}
+
+impl LayoutGene {
+    pub fn sane() -> LayoutGene {
+        LayoutGene { aos: false, f_order: false, align: Some(64) }
+    }
+
+    fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(if self.aos { "AOS" } else { "SOA" });
+        s.push(' ');
+        s.push_str(if self.f_order { "F_order" } else { "C_order" });
+        match self.align {
+            Some(a) => s.push_str(&format!(" Align=={a}")),
+            None => s.push_str(" No_Align"),
+        }
+        s
+    }
+}
+
+/// Index-mapping gene: a library function or a parameterized custom
+/// linearization (the ~10^9-member family of Section 5.3).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IndexGene {
+    Lib(&'static str),
+    Custom(CustomMap),
+}
+
+/// `lin = sum_d coef[d] * ipoint[d]`, then either modular or block node
+/// assignment (from `lin` or directly from one launch dimension) and a
+/// strided-modular GPU assignment — the ~10^9-member arithmetic family
+/// the paper's Section 5.3 search explores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CustomMap {
+    pub coefs: [i64; 3],
+    /// Node index source: Some(d) = `ipoint[d]`, None = `lin`.
+    pub node_dim: Option<usize>,
+    /// true: node = src % nodes; false: node = src * nodes / extent.
+    pub node_cyclic: bool,
+    /// gpu = (lin / gpu_div) % gpus.
+    pub gpu_div: i64,
+    /// If true, omit the wrap on the node index — an out-of-bounds bug the
+    /// search can introduce and the feedback loop must repair (Table A1
+    /// mapper6).
+    pub unwrapped: bool,
+}
+
+impl CustomMap {
+    pub fn render(&self, fname: &str, dims: usize) -> String {
+        let dims = dims.clamp(1, 3);
+        let lin: Vec<String> = (0..dims)
+            .filter(|&d| self.coefs[d] != 0)
+            .map(|d| format!("ipoint[{d}] * {}", self.coefs[d]))
+            .collect();
+        let lin = if lin.is_empty() { "ipoint[0]".to_string() } else { lin.join(" + ") };
+        let total = (0..dims)
+            .map(|d| format!("ispace[{d}]"))
+            .collect::<Vec<_>>()
+            .join(" * ");
+        let (src, extent) = match self.node_dim {
+            Some(d) if d < dims => (format!("ipoint[{d}]"), format!("ispace[{d}]")),
+            _ => ("lin".to_string(), format!("({total})")),
+        };
+        let node = if self.unwrapped {
+            src
+        } else if self.node_cyclic {
+            format!("{src} % mgpu.size[0]")
+        } else {
+            format!("{src} * mgpu.size[0] / {extent} % mgpu.size[0]")
+        };
+        format!(
+            "def {fname}(Tuple ipoint, Tuple ispace) {{\n  lin = {lin};\n  node = {node};\n  gpu = (lin / {div}) % mgpu.size[1];\n  return mgpu[node, gpu];\n}}\n",
+            div = self.gpu_div.max(1)
+        )
+    }
+}
+
+/// The agent's trainable decision blocks (Figure A6's @bundle methods).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentGenome {
+    /// Launch dimensionality per task (context, not trainable).
+    pub task_dims: BTreeMap<String, usize>,
+    /// task_decision: processor preference per task.
+    pub task_procs: BTreeMap<String, Vec<ProcKind>>,
+    /// region_decision: GPU-side memory per region argument.
+    pub region_mems: BTreeMap<String, MemKind>,
+    /// layout_decision: per region argument.
+    pub layouts: BTreeMap<String, LayoutGene>,
+    /// index_task_map_decision: per index-launched task.
+    pub index_maps: BTreeMap<String, IndexGene>,
+    /// instance_limit_decision (usually empty; a trap the feedback loop
+    /// must learn to avoid).
+    pub instance_limits: BTreeMap<String, i64>,
+    /// Mock-LLM syntax slip: emit a python-style `def f(...):` colon.
+    pub syntax_slip: bool,
+    /// Mock-LLM slip: reference mgpu without defining it.
+    pub missing_machine: bool,
+}
+
+impl AgentGenome {
+    /// The sane starting agent: everything on GPU/FBMEM, default layout,
+    /// library block maps — the paper's "initial starting point".
+    pub fn sane_default(info: &AppInfo) -> AgentGenome {
+        let mut g = AgentGenome {
+            task_dims: BTreeMap::new(),
+            task_procs: BTreeMap::new(),
+            region_mems: BTreeMap::new(),
+            layouts: BTreeMap::new(),
+            index_maps: BTreeMap::new(),
+            instance_limits: BTreeMap::new(),
+            syntax_slip: false,
+            missing_machine: false,
+        };
+        for t in &info.tasks {
+            g.task_dims.insert(t.name.clone(), t.index_dims);
+            g.task_procs.insert(t.name.clone(), vec![ProcKind::Gpu, ProcKind::Cpu]);
+            if t.index_dims > 0 {
+                let fns = stdlib::for_dims(t.index_dims);
+                if let Some(f) = fns.first() {
+                    g.index_maps.insert(t.name.clone(), IndexGene::Lib(f.name));
+                }
+            }
+        }
+        for r in &info.region_args {
+            g.region_mems.insert(r.name.clone(), MemKind::FbMem);
+            g.layouts.insert(r.name.clone(), LayoutGene::sane());
+        }
+        g
+    }
+
+    /// A uniformly random agent (the paper's random-mapper baseline:
+    /// "produced by our MapperAgent with 10 different random seeds").
+    pub fn random(info: &AppInfo, rng: &mut Rng) -> AgentGenome {
+        let mut g = AgentGenome::sane_default(info);
+        for t in &info.tasks {
+            let kinds: Vec<Vec<ProcKind>> = vec![
+                vec![ProcKind::Gpu, ProcKind::Cpu],
+                vec![ProcKind::Cpu],
+                vec![ProcKind::Omp, ProcKind::Cpu],
+                vec![ProcKind::Gpu],
+            ];
+            g.task_procs
+                .insert(t.name.clone(), rng.choose(&kinds).clone());
+            if t.index_dims > 0 {
+                g.index_maps.insert(t.name.clone(), random_index_gene(t.index_dims, rng));
+            }
+        }
+        for r in &info.region_args {
+            let mems = [MemKind::FbMem, MemKind::ZcMem, MemKind::FbMem, MemKind::ZcMem];
+            g.region_mems.insert(r.name.clone(), *rng.choose(&mems));
+            g.layouts.insert(
+                r.name.clone(),
+                LayoutGene {
+                    aos: rng.chance(0.5),
+                    f_order: rng.chance(0.5),
+                    align: *rng.choose(&[None, Some(16), Some(64), Some(128)]),
+                },
+            );
+        }
+        g
+    }
+
+    /// Emit the DSL mapper text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        // task block
+        out.push_str("Task * GPU,OMP,CPU;\n");
+        for (task, procs) in &self.task_procs {
+            let list: Vec<&str> = procs.iter().map(|p| p.name()).collect();
+            out.push_str(&format!("Task {task} {};\n", list.join(",")));
+        }
+        // region block
+        out.push_str("Region * * GPU FBMEM;\nRegion * * CPU SYSMEM;\nRegion * * OMP SOCKMEM,SYSMEM;\n");
+        for (region, mem) in &self.region_mems {
+            if *mem != MemKind::FbMem {
+                out.push_str(&format!("Region * {region} GPU {};\n", mem.name()));
+            }
+        }
+        // layout block
+        out.push_str("Layout * * * SOA C_order Align==64;\n");
+        for (region, gene) in &self.layouts {
+            if *gene != LayoutGene::sane() {
+                out.push_str(&format!("Layout * {region} * {};\n", gene.render()));
+            }
+        }
+        // instance limits (rarely)
+        for (task, limit) in &self.instance_limits {
+            out.push_str(&format!("InstanceLimit {task} {limit};\n"));
+        }
+        // machine + index-mapping functions
+        if !self.missing_machine {
+            out.push_str("mgpu = Machine(GPU);\nmcpu = Machine(CPU);\n");
+        }
+        let mut emitted: Vec<&str> = Vec::new();
+        for (task, gene) in &self.index_maps {
+            let fname = match gene {
+                IndexGene::Lib(name) => {
+                    if !emitted.contains(name) {
+                        let f = stdlib::by_name(name).expect("unknown stdlib fn");
+                        let mut src = f.source.to_string();
+                        if self.syntax_slip {
+                            // python-style colon slip (Table 2 mapper1)
+                            src = src.replacen(") {", "):", 1);
+                        }
+                        out.push_str(&src);
+                        emitted.push(name);
+                    }
+                    name.to_string()
+                }
+                IndexGene::Custom(map) => {
+                    let fname = format!("custom_{task}");
+                    let dims = self.task_dims.get(task).copied().unwrap_or(3).max(1);
+                    let mut src = map.render(&fname, dims);
+                    if self.syntax_slip {
+                        src = src.replacen(") {", "):", 1);
+                    }
+                    out.push_str(&src);
+                    fname
+                }
+            };
+            out.push_str(&format!("IndexTaskMap {task} {fname};\n"));
+        }
+        out
+    }
+}
+
+/// Sample a random index gene valid for `dims`-dimensional launches.
+pub fn random_index_gene(dims: usize, rng: &mut Rng) -> IndexGene {
+    if rng.chance(0.5) {
+        let fns = stdlib::for_dims(dims);
+        IndexGene::Lib(rng.choose(&fns).name)
+    } else {
+        let mut coefs = [0i64; 3];
+        for (d, c) in coefs.iter_mut().enumerate().take(dims.clamp(1, 3)) {
+            *c = rng.range(0, 4);
+            let _ = d;
+        }
+        if coefs.iter().all(|&c| c == 0) {
+            coefs[0] = 1;
+        }
+        let node_dim = if rng.chance(0.5) {
+            Some(rng.below(dims.clamp(1, 3)))
+        } else {
+            None
+        };
+        IndexGene::Custom(CustomMap {
+            coefs,
+            node_dim,
+            node_cyclic: rng.chance(0.5),
+            gpu_div: *rng.choose(&[1, 1, 2, 4]),
+            unwrapped: rng.chance(0.1),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::dsl::MappingPolicy;
+    use crate::machine::MachineSpec;
+    use crate::sim::Executor;
+
+    fn info(name: &str) -> AppInfo {
+        AppInfo::from_app(&apps::by_name(name).unwrap())
+    }
+
+    #[test]
+    fn app_info_extraction() {
+        let i = info("circuit");
+        assert_eq!(i.tasks.len(), 3);
+        let names: Vec<&str> = i.region_args.iter().map(|r| r.name.as_str()).collect();
+        assert!(names.contains(&"rp_ghost"));
+        assert!(names.contains(&"rp_shared"));
+        assert_eq!(i.tasks[0].index_dims, 1);
+    }
+
+    #[test]
+    fn sane_default_compiles_and_runs_everywhere() {
+        let spec = MachineSpec::p100_cluster();
+        for name in apps::ALL_BENCHMARKS {
+            let app = apps::by_name(name).unwrap();
+            let g = AgentGenome::sane_default(&AppInfo::from_app(&app));
+            let src = g.render();
+            let policy = MappingPolicy::compile(&src, &spec)
+                .unwrap_or_else(|e| panic!("{name}: {e}\n{src}"));
+            Executor::new(&spec)
+                .execute(&app, &policy)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn random_genomes_compile_or_fail_gracefully() {
+        let spec = MachineSpec::p100_cluster();
+        let mut rng = Rng::new(123);
+        let app = apps::by_name("summa").unwrap();
+        let i = AppInfo::from_app(&app);
+        let mut ok = 0;
+        let mut err = 0;
+        for _ in 0..30 {
+            let g = AgentGenome::random(&i, &mut rng);
+            match MappingPolicy::compile(&g.render(), &spec) {
+                Ok(p) => match Executor::new(&spec).execute(&app, &p) {
+                    Ok(_) => ok += 1,
+                    Err(_) => err += 1,
+                },
+                Err(e) => panic!("random genome must be syntactically valid: {e}"),
+            }
+        }
+        assert!(ok > 0, "no random genome executed");
+        // random mappers hit execution errors sometimes (paper's premise)
+        assert!(err > 0, "expected some execution errors from random mappers");
+    }
+
+    #[test]
+    fn syntax_slip_reproduces_colon_error() {
+        let i = info("circuit");
+        let mut g = AgentGenome::sane_default(&i);
+        g.syntax_slip = true;
+        let err = MappingPolicy::compile(&g.render(), &MachineSpec::p100_cluster())
+            .unwrap_err();
+        assert_eq!(err.to_string(), "Syntax error, unexpected :, expecting {");
+    }
+
+    #[test]
+    fn missing_machine_reproduces_not_found() {
+        let i = info("circuit");
+        let mut g = AgentGenome::sane_default(&i);
+        g.missing_machine = true;
+        let err = MappingPolicy::compile(&g.render(), &MachineSpec::p100_cluster())
+            .unwrap_err();
+        assert_eq!(err.to_string(), "mgpu not found");
+    }
+
+    #[test]
+    fn custom_map_unwrapped_goes_out_of_bounds() {
+        let spec = MachineSpec::p100_cluster();
+        let app = apps::by_name("cannon").unwrap();
+        let i = AppInfo::from_app(&app);
+        let mut g = AgentGenome::sane_default(&i);
+        g.index_maps.insert(
+            "dgemm".into(),
+            IndexGene::Custom(CustomMap {
+                coefs: [1, 1, 0],
+                node_dim: None,
+                node_cyclic: true,
+                gpu_div: 1,
+                unwrapped: true,
+            }),
+        );
+        let p = MappingPolicy::compile(&g.render(), &spec).unwrap();
+        let err = Executor::new(&spec).execute(&app, &p).unwrap_err();
+        assert_eq!(err.to_string(), "Slice processor index out of bound");
+    }
+
+    #[test]
+    fn genome_render_deterministic() {
+        let i = info("pennant");
+        let g = AgentGenome::sane_default(&i);
+        assert_eq!(g.render(), g.render());
+    }
+
+    #[test]
+    fn random_is_seeded() {
+        let i = info("stencil");
+        let a = AgentGenome::random(&i, &mut Rng::new(9));
+        let b = AgentGenome::random(&i, &mut Rng::new(9));
+        assert_eq!(a.render(), b.render());
+        let c = AgentGenome::random(&i, &mut Rng::new(10));
+        assert_ne!(a.render(), c.render());
+    }
+}

@@ -1,0 +1,39 @@
+//! The LLM-optimizer loop (S8): MapperAgent decision blocks, the seeded
+//! mock-LLM proposal policy, and the two search algorithms the paper
+//! evaluates (Trace-style and OPRO-style) plus the random baseline.
+
+pub mod agent;
+pub mod mockllm;
+pub mod opro;
+pub mod trace_opt;
+
+pub use agent::{AgentGenome, AppInfo, CustomMap, IndexGene, LayoutGene};
+pub use mockllm::{Block, MockLlm};
+pub use opro::OproOptimizer;
+pub use trace_opt::TraceOptimizer;
+
+use crate::feedback::{Feedback, SystemFeedback};
+
+/// Evaluation callback: DSL source -> system feedback.  Provided by the
+/// coordinator (compile + execute + classify).
+pub type EvalFn<'a> = &'a dyn Fn(&str) -> SystemFeedback;
+
+/// One iteration of an optimization run (a row of Fig. 6/7 trajectories).
+#[derive(Debug, Clone)]
+pub struct IterationRecord {
+    pub iter: usize,
+    /// The DSL mapper evaluated this iteration.
+    pub dsl: String,
+    /// Full feedback message shown to the optimizer.
+    pub feedback: Feedback,
+    /// Throughput (0 on compile/execution error).
+    pub score: f64,
+    /// Best score seen so far in this run.
+    pub best_so_far: f64,
+}
+
+/// Common interface over Trace / OPRO (and anything else).
+pub trait Optimizer {
+    fn name(&self) -> &'static str;
+    fn step(&mut self, eval: EvalFn<'_>) -> IterationRecord;
+}

@@ -1,0 +1,147 @@
+//! OPRO-style optimizer (Yang et al., "Large Language Models as
+//! Optimizers") — the paper's second search algorithm.
+//!
+//! OPRO shows the LLM a meta-prompt of (solution, score) pairs and asks
+//! for a better solution.  Crucially it sees only *scores*, not the
+//! error-channel text Trace gets — failed mappers simply score 0.  The
+//! mock LLM therefore proposes by recombining high-scoring genomes and
+//! mutating blocks blindly.
+
+use super::agent::{AgentGenome, AppInfo};
+use super::mockllm::{MockLlm, ALL_BLOCKS};
+use super::{EvalFn, IterationRecord, Optimizer};
+use crate::feedback::{enhance, FeedbackConfig, SystemFeedback};
+use crate::util::rng::Rng;
+
+pub struct OproOptimizer {
+    info: AppInfo,
+    llm: MockLlm,
+    rng: Rng,
+    /// Scored history (the meta-prompt), best first.
+    history: Vec<(AgentGenome, f64)>,
+    pending: AgentGenome,
+    iter: usize,
+}
+
+impl OproOptimizer {
+    pub fn new(info: AppInfo, seed: u64) -> OproOptimizer {
+        let mut rng = Rng::new(seed);
+        let llm = MockLlm::default();
+        let mut pending = AgentGenome::sane_default(&info);
+        pending.syntax_slip = rng.chance(llm.slip_prob);
+        for _ in 0..2 {
+            let b = *rng.choose(&ALL_BLOCKS);
+            llm.mutate_block(&mut pending, &info, b, &mut rng);
+        }
+        OproOptimizer { info, llm, rng, history: Vec::new(), pending, iter: 0 }
+    }
+
+    pub fn best_dsl(&self) -> Option<(String, f64)> {
+        self.history.first().map(|(g, s)| (g.render(), *s))
+    }
+
+    /// Propose the next candidate from the scored history alone.
+    fn propose(&mut self) -> AgentGenome {
+        // drop any syntax slip: the meta-prompt shows it scored 0 and a
+        // fresh sample is drawn from the solution distribution
+        if self.history.is_empty() || self.history[0].1 == 0.0 {
+            let mut g = AgentGenome::sane_default(&self.info);
+            for _ in 0..2 {
+                let b = *self.rng.choose(&ALL_BLOCKS);
+                self.llm.mutate_block(&mut g, &self.info, b, &mut self.rng);
+            }
+            return g;
+        }
+        let mut g = self.history[0].0.clone();
+        // occasional block-level crossover with the runner-up (the
+        // meta-prompt shows whole solutions, so recombination is fair)
+        if self.history.len() > 1 && self.history[1].1 > 0.0 && self.rng.chance(0.2) {
+            let other = &self.history[1].0;
+            if self.rng.chance(0.5) {
+                g.region_mems = other.region_mems.clone();
+            } else {
+                g.index_maps = other.index_maps.clone();
+            }
+        }
+        // blind exploration move(s) from the incumbent
+        self.llm.explore(&mut g, &self.info, &mut self.rng);
+        g.syntax_slip = false;
+        g.missing_machine = false;
+        g
+    }
+}
+
+impl Optimizer for OproOptimizer {
+    fn name(&self) -> &'static str {
+        "opro"
+    }
+
+    fn step(&mut self, eval: EvalFn<'_>) -> IterationRecord {
+        let genome = self.pending.clone();
+        let dsl = genome.render();
+        let system: SystemFeedback = eval(&dsl);
+        // OPRO's meta-prompt carries only scores: render feedback at the
+        // system tier regardless of configuration
+        let feedback = enhance(&system, FeedbackConfig::SYSTEM);
+        let score = system.score();
+
+        self.history.push((genome, score));
+        self.history
+            .sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        self.history.truncate(8); // top-k meta-prompt window
+
+        self.pending = self.propose();
+        self.iter += 1;
+        IterationRecord {
+            iter: self.iter,
+            dsl,
+            feedback,
+            score,
+            best_so_far: self.history.first().map(|(_, s)| *s).unwrap_or(0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::machine::MachineSpec;
+    use crate::sim::run_mapper;
+
+    #[test]
+    fn opro_finds_runnable_mappers_and_improves() {
+        let spec = MachineSpec::p100_cluster();
+        let app = apps::by_name("cannon").unwrap();
+        let info = AppInfo::from_app(&app);
+        let eval = |src: &str| match run_mapper(&app, src, &spec) {
+            Err(ce) => SystemFeedback::CompileError(ce.to_string()),
+            Ok(Err(xe)) => SystemFeedback::ExecutionError(xe.to_string()),
+            Ok(Ok(m)) => SystemFeedback::from_metrics(&m),
+        };
+        let mut opt = OproOptimizer::new(info, 3);
+        let mut best = 0.0;
+        for _ in 0..10 {
+            best = opt.step(&eval).best_so_far;
+        }
+        assert!(best > 0.0);
+        let (dsl, score) = opt.best_dsl().unwrap();
+        assert!(score == best);
+        assert!(dsl.contains("Task"));
+    }
+
+    #[test]
+    fn history_window_bounded() {
+        let app = apps::by_name("stencil").unwrap();
+        let info = AppInfo::from_app(&app);
+        let mut opt = OproOptimizer::new(info, 1);
+        let eval = |_: &str| SystemFeedback::Performance {
+            line: "Performance Metric: Execution time is 1s.".into(),
+            value: 1.0,
+        };
+        for _ in 0..20 {
+            opt.step(&eval);
+        }
+        assert!(opt.history.len() <= 8);
+    }
+}

@@ -1,0 +1,206 @@
+//! Trace-style optimizer (Cheng et al. 2024, as used in Section 5).
+//!
+//! Trace executes the agent, collects the *generation graph* (which
+//! decision block produced which statements) plus the feedback, and asks
+//! the LLM to update trainable blocks.  Our genome IS the generation
+//! graph: every statement is attributable to its block, so the mock LLM's
+//! block-targeted updates model Trace's credit assignment.  Trace also
+//! retains the best program seen and can revert to it — which we model
+//! explicitly.
+
+use super::agent::{AgentGenome, AppInfo};
+use super::mockllm::MockLlm;
+use super::{EvalFn, IterationRecord, Optimizer};
+use crate::feedback::{enhance, Feedback, FeedbackConfig, SystemFeedback};
+use crate::util::rng::Rng;
+
+pub struct TraceOptimizer {
+    info: AppInfo,
+    cfg: FeedbackConfig,
+    llm: MockLlm,
+    rng: Rng,
+    genome: AgentGenome,
+    best: Option<(AgentGenome, f64)>,
+    iter: usize,
+}
+
+impl TraceOptimizer {
+    pub fn new(info: AppInfo, cfg: FeedbackConfig, seed: u64) -> TraceOptimizer {
+        let mut rng = Rng::new(seed);
+        let llm = MockLlm::default();
+        let mut genome = AgentGenome::sane_default(&info);
+        // the initial agent is LLM-written: it may carry a syntax slip
+        genome.syntax_slip = rng.chance(llm.slip_prob);
+        // and starts from a random-ish point in the decision space so
+        // different runs explore differently (paper: 5 runs averaged)
+        let blocks = super::mockllm::ALL_BLOCKS;
+        for _ in 0..2 {
+            let b = *rng.choose(&blocks);
+            llm.mutate_block(&mut genome, &info, b, &mut rng);
+        }
+        TraceOptimizer { info, cfg, llm, rng, genome, best: None, iter: 0 }
+    }
+
+    pub fn best_dsl(&self) -> Option<(String, f64)> {
+        self.best.as_ref().map(|(g, s)| (g.render(), *s))
+    }
+}
+
+impl Optimizer for TraceOptimizer {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn step(&mut self, eval: EvalFn<'_>) -> IterationRecord {
+        let dsl = self.genome.render();
+        let system: SystemFeedback = eval(&dsl);
+        let feedback: Feedback = enhance(&system, self.cfg);
+        let score = system.score();
+
+        // track the best program (Trace keeps it in the LLM's context)
+        if !system.is_error() {
+            let improved = self.best.as_ref().map(|(_, b)| score > *b).unwrap_or(true);
+            if improved {
+                self.best = Some((self.genome.clone(), score));
+            }
+        }
+
+        // propose the next candidate:
+        //  * no runnable program yet -> repair the current genome from the
+        //    error feedback (the paper's compile/execution-error loop)
+        //  * otherwise hill-climb: explore from the incumbent best, using
+        //    the feedback text to pick the move
+        match (&self.best, system.is_error()) {
+            (None, _) | (Some(_), false) => {
+                if let Some((bg, bs)) = &self.best {
+                    if score < *bs {
+                        self.genome = bg.clone();
+                    }
+                }
+                self.llm
+                    .update(&mut self.genome, &self.info, &feedback.text(), &mut self.rng);
+            }
+            (Some((bg, _)), true) => {
+                if feedback.suggest.is_some() || feedback.explain.is_some() {
+                    // suggestion: targeted repair of the broken candidate
+                    // (novel parts survive).  explanation: the right block
+                    // is named, but the fix direction is guessed — the
+                    // candidate may stay broken for another iteration.
+                    self.llm.update(
+                        &mut self.genome,
+                        &self.info,
+                        &feedback.text(),
+                        &mut self.rng,
+                    );
+                } else if self.rng.chance(0.5) {
+                    // system-only: the optimizer cannot tell what broke;
+                    // half the time it keeps patching the broken program
+                    // blindly (the paper's System trajectories stall on
+                    // exactly this), otherwise it abandons the candidate
+                    self.llm.update(
+                        &mut self.genome,
+                        &self.info,
+                        &feedback.text(),
+                        &mut self.rng,
+                    );
+                } else {
+                    self.genome = bg.clone();
+                    self.llm.explore(&mut self.genome, &self.info, &mut self.rng);
+                }
+            }
+        }
+
+        self.iter += 1;
+        IterationRecord {
+            iter: self.iter,
+            dsl,
+            feedback,
+            score,
+            best_so_far: self.best.as_ref().map(|(_, s)| *s).unwrap_or(0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::machine::MachineSpec;
+    use crate::sim::run_mapper;
+
+    fn eval_on<'a>(
+        app: &'a crate::apps::App,
+        spec: &'a MachineSpec,
+    ) -> impl Fn(&str) -> SystemFeedback + 'a {
+        move |src: &str| match run_mapper(app, src, spec) {
+            Err(ce) => SystemFeedback::CompileError(ce.to_string()),
+            Ok(Err(xe)) => SystemFeedback::ExecutionError(xe.to_string()),
+            Ok(Ok(m)) => SystemFeedback::from_metrics(&m),
+        }
+    }
+
+    #[test]
+    fn trace_improves_over_iterations_on_circuit() {
+        let spec = MachineSpec::p100_cluster();
+        let app = apps::by_name("circuit").unwrap();
+        let info = AppInfo::from_app(&app);
+        let eval = eval_on(&app, &spec);
+        let mut first_valid = 0.0;
+        let mut last_best = 0.0;
+        let mut opt = TraceOptimizer::new(info, FeedbackConfig::FULL, 42);
+        for _ in 0..10 {
+            let rec = opt.step(&eval);
+            if first_valid == 0.0 && rec.score > 0.0 {
+                first_valid = rec.score;
+            }
+            last_best = rec.best_so_far;
+        }
+        assert!(last_best > 0.0, "never found a runnable mapper");
+        assert!(
+            last_best >= first_valid,
+            "best-so-far must be monotone: {last_best} < {first_valid}"
+        );
+    }
+
+    #[test]
+    fn trace_recovers_from_initial_syntax_slip() {
+        let spec = MachineSpec::p100_cluster();
+        let app = apps::by_name("summa").unwrap();
+        let info = AppInfo::from_app(&app);
+        let eval = eval_on(&app, &spec);
+        // find a seed whose initial genome slips
+        for seed in 0..200 {
+            let mut opt = TraceOptimizer::new(info.clone(), FeedbackConfig::FULL, seed);
+            if !opt.genome.syntax_slip {
+                continue;
+            }
+            let r1 = opt.step(&eval);
+            assert_eq!(r1.score, 0.0, "slipped mapper must fail to compile");
+            assert!(r1.feedback.text().contains("Syntax error"));
+            // within a few more iterations it must produce a runnable mapper
+            let mut recovered = false;
+            for _ in 0..5 {
+                if opt.step(&eval).score > 0.0 {
+                    recovered = true;
+                    break;
+                }
+            }
+            assert!(recovered, "seed {seed} never recovered from the slip");
+            return;
+        }
+        panic!("no seed produced an initial syntax slip");
+    }
+
+    #[test]
+    fn runs_are_seed_deterministic() {
+        let spec = MachineSpec::p100_cluster();
+        let app = apps::by_name("stencil").unwrap();
+        let info = AppInfo::from_app(&app);
+        let eval = eval_on(&app, &spec);
+        let run = |seed| {
+            let mut o = TraceOptimizer::new(info.clone(), FeedbackConfig::FULL, seed);
+            (0..6).map(|_| o.step(&eval).score).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+    }
+}

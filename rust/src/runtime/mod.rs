@@ -1,0 +1,9 @@
+//! PJRT runtime (S10): loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text) and executes task bodies on the
+//! rust request path — python is never loaded at runtime.
+
+pub mod pjrt;
+pub mod tasks;
+
+pub use pjrt::{parse_manifest, ArtInput, ArtifactRuntime, ManifestEntry};
+pub use tasks::CircuitState;

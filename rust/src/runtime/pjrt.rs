@@ -1,0 +1,238 @@
+//! PJRT artifact execution: load AOT-compiled HLO text, compile on the CPU
+//! PJRT client, execute with concrete buffers.
+//!
+//! Interchange format is HLO *text* (not serialized HloModuleProto): jax
+//! >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see DESIGN.md §4 and
+//! /opt/xla-example).  Python lowers with return_tuple=True, so outputs
+//! unwrap with `to_tuple()`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A typed input buffer for an artifact call.
+#[derive(Debug, Clone)]
+pub enum ArtInput {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl ArtInput {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> ArtInput {
+        ArtInput::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> ArtInput {
+        ArtInput::I32(data, shape.to_vec())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            ArtInput::F32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            ArtInput::I32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            ArtInput::F32(d, _) => d.len(),
+            ArtInput::I32(d, _) => d.len(),
+        }
+    }
+}
+
+/// One entry of artifacts/manifest.txt: `<name> <n_out> <dtype:shape,...>`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub n_outputs: usize,
+    /// (dtype, dims) per input.
+    pub inputs: Vec<(String, Vec<usize>)>,
+}
+
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let name = parts
+            .next()
+            .ok_or_else(|| anyhow!("manifest line {lineno}: missing name"))?
+            .to_string();
+        let n_outputs: usize = parts
+            .next()
+            .ok_or_else(|| anyhow!("manifest line {lineno}: missing n_outputs"))?
+            .parse()
+            .context("bad n_outputs")?;
+        let specs = parts
+            .next()
+            .ok_or_else(|| anyhow!("manifest line {lineno}: missing specs"))?;
+        let mut inputs = Vec::new();
+        for spec in specs.split(',') {
+            let (dtype, dims) = spec
+                .split_once(':')
+                .ok_or_else(|| anyhow!("bad spec '{spec}'"))?;
+            let dims: Vec<usize> = if dims == "scalar" {
+                vec![]
+            } else {
+                dims.split('x')
+                    .map(|d| d.parse().context("bad dim"))
+                    .collect::<Result<_>>()?
+            };
+            inputs.push((dtype.to_string(), dims));
+        }
+        out.push(ManifestEntry { name, n_outputs, inputs });
+    }
+    Ok(out)
+}
+
+/// Loads `artifacts/*.hlo.txt`, compiles lazily on the PJRT CPU client,
+/// and executes task bodies from the rust request path.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ManifestEntry>,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl ArtifactRuntime {
+    /// Default artifact directory: `$MAPPEROPT_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MAPPEROPT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "missing {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = parse_manifest(&text)?
+            .into_iter()
+            .map(|e| (e.name.clone(), e))
+            .collect();
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactRuntime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &ManifestEntry> {
+        self.manifest.values()
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.manifest.get(name)
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact; returns the flattened f32 outputs.
+    /// (int32 outputs are not produced by any current entry point.)
+    pub fn execute(&self, name: &str, inputs: &[ArtInput]) -> Result<Vec<Vec<f32>>> {
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "'{name}' expects {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (inp, (dtype, dims))) in inputs.iter().zip(&entry.inputs).enumerate() {
+            let want: usize = dims.iter().product();
+            if inp.len() != want {
+                bail!("'{name}' input {i}: expected {want} elements ({dtype}:{dims:?}), got {}", inp.len());
+            }
+        }
+        self.compile(name)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).expect("compiled above");
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        if tuple.len() != entry.n_outputs {
+            bail!(
+                "'{name}' returned {} outputs, manifest says {}",
+                tuple.len(),
+                entry.n_outputs
+            );
+        }
+        tuple
+            .into_iter()
+            .map(|lit| Ok(lit.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "gemm_tile_step 1 float32:64x64,float32:64x64,float32:64x64\n\
+                    circuit_uv 2 float32:64,float32:64,float32:64,float32:64\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].name, "gemm_tile_step");
+        assert_eq!(m[0].n_outputs, 1);
+        assert_eq!(m[0].inputs.len(), 3);
+        assert_eq!(m[0].inputs[0], ("float32".into(), vec![64, 64]));
+        assert_eq!(m[1].n_outputs, 2);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("just_a_name").is_err());
+        assert!(parse_manifest("x notanumber float32:4").is_err());
+        assert!(parse_manifest("x 1 float32-4").is_err());
+    }
+
+    #[test]
+    fn art_input_shapes() {
+        let a = ArtInput::f32(vec![0.0; 12], &[3, 4]);
+        assert_eq!(a.len(), 12);
+        let b = ArtInput::i32(vec![1, 2, 3], &[3]);
+        assert_eq!(b.len(), 3);
+    }
+}

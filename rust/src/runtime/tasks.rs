@@ -1,0 +1,258 @@
+//! Numeric task bodies: typed wrappers over the AOT artifacts, plus
+//! in-rust oracles.  These prove the three layers compose: the same leaf
+//! computation the simulator *times* is *executed* here through
+//! Pallas -> jax -> HLO -> PJRT, and validated against plain-rust math.
+//!
+//! Shapes must match the AOT instance sizes in python/compile/model.py.
+
+use anyhow::{ensure, Result};
+
+use super::pjrt::{ArtInput, ArtifactRuntime};
+use crate::util::rng::Rng;
+
+/// AOT instance sizes (keep in sync with python/compile/model.py).
+pub const GEMM_TILE: usize = 64;
+pub const CIRCUIT_NODES: usize = 64;
+pub const CIRCUIT_WIRES: usize = 128;
+pub const STENCIL_ROWS: usize = 34;
+pub const STENCIL_COLS: usize = 34;
+pub const HYDRO_ZONES: usize = 128;
+
+// ---------------------------------------------------------------------------
+// GEMM tile step
+// ---------------------------------------------------------------------------
+
+/// C + A @ B over GEMM_TILE x GEMM_TILE tiles via the Pallas artifact.
+pub fn gemm_tile_step(
+    rt: &ArtifactRuntime,
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+) -> Result<Vec<f32>> {
+    let t = GEMM_TILE;
+    ensure!(a.len() == t * t && b.len() == t * t && c.len() == t * t);
+    let out = rt.execute(
+        "gemm_tile_step",
+        &[
+            ArtInput::f32(a.to_vec(), &[t, t]),
+            ArtInput::f32(b.to_vec(), &[t, t]),
+            ArtInput::f32(c.to_vec(), &[t, t]),
+        ],
+    )?;
+    Ok(out.into_iter().next().unwrap())
+}
+
+/// Plain-rust oracle for the GEMM tile step.
+pub fn gemm_tile_ref(a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+    let t = GEMM_TILE;
+    let mut out = c.to_vec();
+    for i in 0..t {
+        for k in 0..t {
+            let aik = a[i * t + k];
+            for j in 0..t {
+                out[i * t + j] += aik * b[k * t + j];
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Circuit state machine (CNC -> DC -> UV per step)
+// ---------------------------------------------------------------------------
+
+/// Dense circuit piece state matching the circuit_* artifacts.
+#[derive(Debug, Clone)]
+pub struct CircuitState {
+    pub voltage: Vec<f32>,
+    pub charge: Vec<f32>,
+    pub capacitance: Vec<f32>,
+    pub leakage: Vec<f32>,
+    pub wire_in: Vec<i32>,
+    pub wire_out: Vec<i32>,
+    pub inductance: Vec<f32>,
+    pub resistance: Vec<f32>,
+    pub current: Vec<f32>,
+}
+
+impl CircuitState {
+    pub fn random(seed: u64) -> CircuitState {
+        let n = CIRCUIT_NODES;
+        let w = CIRCUIT_WIRES;
+        let mut rng = Rng::new(seed);
+        let mut fv = |lo: f64, hi: f64, len: usize| -> Vec<f32> {
+            (0..len).map(|_| (lo + rng.f64() * (hi - lo)) as f32).collect()
+        };
+        let voltage = fv(-1.0, 1.0, n);
+        let charge = fv(-0.1, 0.1, n);
+        let capacitance = fv(0.5, 2.0, n);
+        let leakage = fv(0.0, 0.1, n);
+        let inductance = fv(1e-4, 1e-3, w);
+        let resistance = fv(0.1, 10.0, w);
+        let mut rng2 = Rng::new(seed ^ 0xDEAD);
+        let wire_in: Vec<i32> = (0..w).map(|_| rng2.below(n) as i32).collect();
+        let wire_out: Vec<i32> = wire_in
+            .iter()
+            .map(|&i| {
+                let off = 1 + rng2.below(n - 1) as i32;
+                (i + off).rem_euclid(n as i32)
+            })
+            .collect();
+        CircuitState {
+            voltage,
+            charge,
+            capacitance,
+            leakage,
+            wire_in,
+            wire_out,
+            inductance,
+            resistance,
+            current: vec![0.0; w],
+        }
+    }
+
+    /// One timestep through the three artifacts (the L3 "request path").
+    pub fn step(&mut self, rt: &ArtifactRuntime) -> Result<()> {
+        let n = CIRCUIT_NODES;
+        let w = CIRCUIT_WIRES;
+        let cur = rt.execute(
+            "circuit_cnc",
+            &[
+                ArtInput::f32(self.voltage.clone(), &[n]),
+                ArtInput::i32(self.wire_in.clone(), &[w]),
+                ArtInput::i32(self.wire_out.clone(), &[w]),
+                ArtInput::f32(self.inductance.clone(), &[w]),
+                ArtInput::f32(self.resistance.clone(), &[w]),
+                ArtInput::f32(self.current.clone(), &[w]),
+            ],
+        )?;
+        self.current = cur.into_iter().next().unwrap();
+
+        let q = rt.execute(
+            "circuit_dc",
+            &[
+                ArtInput::f32(self.charge.clone(), &[n]),
+                ArtInput::i32(self.wire_in.clone(), &[w]),
+                ArtInput::i32(self.wire_out.clone(), &[w]),
+                ArtInput::f32(self.current.clone(), &[w]),
+            ],
+        )?;
+        self.charge = q.into_iter().next().unwrap();
+
+        let mut uv = rt.execute(
+            "circuit_uv",
+            &[
+                ArtInput::f32(self.voltage.clone(), &[n]),
+                ArtInput::f32(self.charge.clone(), &[n]),
+                ArtInput::f32(self.capacitance.clone(), &[n]),
+                ArtInput::f32(self.leakage.clone(), &[n]),
+            ],
+        )?;
+        self.charge = uv.pop().unwrap();
+        self.voltage = uv.pop().unwrap();
+        Ok(())
+    }
+
+    /// Pure-rust oracle for one step (mirrors kernels/ref.py, dt = 1e-6).
+    pub fn step_ref(&mut self) {
+        let dt = 1e-6f32;
+        for i in 0..self.current.len() {
+            let dv = self.voltage[self.wire_in[i] as usize]
+                - self.voltage[self.wire_out[i] as usize];
+            self.current[i] += (dt / self.inductance[i])
+                * (dv - self.resistance[i] * self.current[i]);
+        }
+        for i in 0..self.current.len() {
+            let dq = dt * self.current[i];
+            self.charge[self.wire_in[i] as usize] -= dq;
+            self.charge[self.wire_out[i] as usize] += dq;
+        }
+        for i in 0..self.voltage.len() {
+            self.voltage[i] = (self.voltage[i] + self.charge[i] / self.capacitance[i])
+                * (1.0 - self.leakage[i]);
+            self.charge[i] = 0.0;
+        }
+    }
+
+    pub fn total_abs_voltage(&self) -> f64 {
+        self.voltage.iter().map(|v| v.abs() as f64).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stencil + hydro wrappers
+// ---------------------------------------------------------------------------
+
+pub fn stencil_step(rt: &ArtifactRuntime, grid: &[f32]) -> Result<Vec<f32>> {
+    ensure!(grid.len() == STENCIL_ROWS * STENCIL_COLS);
+    let out = rt.execute(
+        "stencil_step",
+        &[ArtInput::f32(grid.to_vec(), &[STENCIL_ROWS, STENCIL_COLS])],
+    )?;
+    Ok(out.into_iter().next().unwrap())
+}
+
+pub fn hydro_step(
+    rt: &ArtifactRuntime,
+    rho: &[f32],
+    e: &[f32],
+    vol: &[f32],
+    dvol: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let z = HYDRO_ZONES;
+    let mut out = rt.execute(
+        "pennant_hydro",
+        &[
+            ArtInput::f32(rho.to_vec(), &[z]),
+            ArtInput::f32(e.to_vec(), &[z]),
+            ArtInput::f32(vol.to_vec(), &[z]),
+            ArtInput::f32(dvol.to_vec(), &[z]),
+        ],
+    )?;
+    let p = out.pop().unwrap();
+    let e2 = out.pop().unwrap();
+    let r = out.pop().unwrap();
+    Ok((r, e2, p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_ref_identity() {
+        let t = GEMM_TILE;
+        let mut a = vec![0.0f32; t * t];
+        for i in 0..t {
+            a[i * t + i] = 1.0; // identity
+        }
+        let mut rng = Rng::new(1);
+        let b: Vec<f32> = (0..t * t).map(|_| rng.f64() as f32).collect();
+        let c = vec![0.0f32; t * t];
+        let out = gemm_tile_ref(&a, &b, &c);
+        assert_eq!(out, b);
+    }
+
+    #[test]
+    fn circuit_state_wires_valid() {
+        let s = CircuitState::random(7);
+        for (&i, &o) in s.wire_in.iter().zip(&s.wire_out) {
+            assert!((i as usize) < CIRCUIT_NODES);
+            assert!((o as usize) < CIRCUIT_NODES);
+            assert_ne!(i, o, "self-loop wire");
+        }
+    }
+
+    #[test]
+    fn circuit_ref_step_is_stable() {
+        let mut s = CircuitState::random(3);
+        let v0 = s.total_abs_voltage();
+        for _ in 0..100 {
+            s.step_ref();
+        }
+        let v1 = s.total_abs_voltage();
+        assert!(v1.is_finite());
+        // leaky RC circuit decays
+        assert!(v1 < v0 * 1.5);
+    }
+}

@@ -1,0 +1,108 @@
+//! Layout cost model: multiplicative penalties on memory-access time.
+//!
+//! The numbers encode P100-era folklore the paper's mapping decisions trade
+//! on: GPU kernels want SOA (coalesced loads) and C-order row streaming;
+//! BLAS on the CPU wants Fortran order; unaligned instances cost a little
+//! everywhere; AOS is mildly *good* for CPU pointwise sweeps (struct
+//! locality).  Absolute values matter less than their ordering — the
+//! experiments are normalized.
+
+use crate::apps::taskgraph::RegionDecl;
+use crate::dsl::Layout;
+use crate::machine::ProcKind;
+
+/// Multiplier (>= ~0.9) on the bytes/bandwidth access time of one region
+/// argument under the given layout on the given processor kind.
+pub fn layout_penalty(layout: &Layout, kind: ProcKind, region: &RegionDecl) -> f64 {
+    let mut m = 1.0;
+    let multi_field = region.fields > 1;
+    let multi_dim = region.tile_dims() > 1;
+    match kind {
+        ProcKind::Gpu => {
+            if layout.aos && multi_field {
+                m *= 1.4; // uncoalesced strided loads
+            }
+            if layout.f_order && multi_dim {
+                m *= 1.15; // column-major fights the row-streaming kernels
+            }
+            match layout.align {
+                Some(a) if a >= 128 => m *= 0.97, // texture-aligned
+                Some(a) if a >= 64 => m *= 0.99,
+                Some(_) => {}
+                None => m *= 1.03, // unconstrained allocator picks poorly
+            }
+        }
+        ProcKind::Cpu | ProcKind::Omp => {
+            if layout.aos && multi_field {
+                m *= 0.95; // struct locality helps pointwise sweeps
+            }
+            if layout.f_order && multi_dim {
+                m *= 1.05; // row-major C kernels stride
+            }
+            if layout.align.is_none() {
+                m *= 1.01;
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn region(fields: usize, dims: usize) -> RegionDecl {
+        RegionDecl {
+            name: "r".into(),
+            tile_bytes: 1024,
+            fields,
+            tiles: vec![4; dims],
+        }
+    }
+
+    fn layout(aos: bool, f_order: bool, align: Option<u64>) -> Layout {
+        Layout { aos, f_order, align }
+    }
+
+    #[test]
+    fn gpu_aos_penalized_only_for_multi_field() {
+        let r_multi = region(6, 1);
+        let r_single = region(1, 1);
+        let aos = layout(true, false, Some(64));
+        let soa = layout(false, false, Some(64));
+        assert!(
+            layout_penalty(&aos, ProcKind::Gpu, &r_multi)
+                > layout_penalty(&soa, ProcKind::Gpu, &r_multi)
+        );
+        assert_eq!(
+            layout_penalty(&aos, ProcKind::Gpu, &r_single),
+            layout_penalty(&soa, ProcKind::Gpu, &r_single)
+        );
+    }
+
+    #[test]
+    fn gpu_f_order_penalized_for_2d() {
+        let r = region(1, 2);
+        assert!(
+            layout_penalty(&layout(false, true, Some(64)), ProcKind::Gpu, &r)
+                > layout_penalty(&layout(false, false, Some(64)), ProcKind::Gpu, &r)
+        );
+    }
+
+    #[test]
+    fn alignment_helps_gpu() {
+        let r = region(1, 2);
+        let aligned = layout_penalty(&layout(false, false, Some(128)), ProcKind::Gpu, &r);
+        let unaligned = layout_penalty(&layout(false, false, None), ProcKind::Gpu, &r);
+        assert!(aligned < unaligned);
+    }
+
+    #[test]
+    fn cpu_prefers_aos_for_structs() {
+        let r = region(6, 1);
+        assert!(
+            layout_penalty(&layout(true, false, Some(64)), ProcKind::Cpu, &r)
+                < layout_penalty(&layout(false, false, Some(64)), ProcKind::Cpu, &r)
+        );
+    }
+}

@@ -1,0 +1,399 @@
+//! The distributed execution simulator (substrate S6).
+//!
+//! Models the P100 cluster executing an [`App`] under a [`MappingPolicy`]:
+//! per-processor timelines, explicit inter-memory transfers with NIC
+//! serialization, memory capacity accounting with read-copy eviction, and
+//! the paper's execution-error surface (OOM, stride mismatch, DGEMM layout
+//! rejection, mapping-function failures, instance-limit starvation).
+//!
+//! Granularity: one "event" per (launch point, region argument) plus one
+//! per compute body — a macro discrete-event model.  Launches are
+//! bulk-synchronous (Legion phase barriers), which matches how these nine
+//! benchmarks are written.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::cost::layout_penalty;
+use super::metrics::{ExecError, Metrics};
+use crate::apps::taskgraph::{Access, App, InitialDist};
+use crate::dsl::{MappingPolicy, TaskCtx};
+use crate::machine::{MachineSpec, MemId, MemKind, ProcId, ProcKind};
+
+/// Tile identity: (region index, linearized tile coordinate).
+type TileId = (usize, i64);
+
+/// Memory bookkeeping: tile homes, resident copies, pool usage/eviction.
+#[derive(Default)]
+struct MemBook {
+    used: BTreeMap<MemId, u64>,
+    peak: BTreeMap<MemId, u64>,
+    homes: BTreeMap<TileId, MemId>,
+    /// tile -> (memory -> copy bytes).  BTreeMaps keep eviction order
+    /// deterministic (a HashMap here made elapsed time run-dependent).
+    copies: BTreeMap<TileId, BTreeMap<MemId, u64>>,
+}
+
+impl MemBook {
+    /// Home of a tile, initializing it on first touch.
+    fn home_or_init(&mut self, tile: TileId, init: MemId, bytes: u64) -> MemId {
+        if let Some(&h) = self.homes.get(&tile) {
+            return h;
+        }
+        self.homes.insert(tile, init);
+        self.copies.entry(tile).or_default().insert(init, bytes);
+        *self.used.entry(init).or_insert(0) += bytes;
+        let u = self.used[&init];
+        let p = self.peak.entry(init).or_insert(0);
+        *p = (*p).max(u);
+        init
+    }
+
+    fn is_resident(&self, tile: TileId, mem: MemId) -> bool {
+        self.copies.get(&tile).is_some_and(|c| c.contains_key(&mem))
+    }
+
+    /// Add a copy of `tile` in `mem`, evicting other tiles' non-home read
+    /// copies from `mem` if the pool overflows.
+    fn add_copy(
+        &mut self,
+        tile: TileId,
+        mem: MemId,
+        bytes: u64,
+        spec: &MachineSpec,
+    ) -> Result<(), ExecError> {
+        if self.is_resident(tile, mem) {
+            return Ok(());
+        }
+        let capacity = spec.capacity(mem.kind);
+        let mut used = *self.used.get(&mem).unwrap_or(&0);
+        if used + bytes > capacity {
+            // evict non-home copies of other tiles from this memory
+            let victims: Vec<TileId> = self
+                .copies
+                .iter()
+                .filter(|(t, c)| {
+                    **t != tile
+                        && c.contains_key(&mem)
+                        && self.homes.get(*t) != Some(&mem)
+                })
+                .map(|(t, _)| *t)
+                .collect();
+            for v in victims {
+                if let Some(sz) = self.copies.get_mut(&v).and_then(|c| c.remove(&mem)) {
+                    used = used.saturating_sub(sz);
+                }
+                if used + bytes <= capacity {
+                    break;
+                }
+            }
+            if used + bytes > capacity {
+                return Err(ExecError::OutOfMemory {
+                    mem: mem.to_string(),
+                    needed: used + bytes,
+                    capacity,
+                });
+            }
+        }
+        self.copies.entry(tile).or_default().insert(mem, bytes);
+        used += bytes;
+        self.used.insert(mem, used);
+        let p = self.peak.entry(mem).or_insert(0);
+        *p = (*p).max(used);
+        Ok(())
+    }
+
+    /// Drop a non-home copy (CollectMemory / GarbageCollect semantics).
+    fn collect_copy(&mut self, tile: TileId, mem: MemId) {
+        if self.homes.get(&tile) == Some(&mem) {
+            return; // never collect the valid home copy
+        }
+        if let Some(sz) = self.copies.get_mut(&tile).and_then(|c| c.remove(&mem)) {
+            if let Some(u) = self.used.get_mut(&mem) {
+                *u = u.saturating_sub(sz);
+            }
+        }
+    }
+
+    /// After a write: `mem` holds the only valid copy and becomes home.
+    fn make_exclusive(&mut self, tile: TileId, mem: MemId) {
+        if let Some(copies) = self.copies.get_mut(&tile) {
+            let drop: Vec<(MemId, u64)> = copies
+                .iter()
+                .filter(|(m, _)| **m != mem)
+                .map(|(m, b)| (*m, *b))
+                .collect();
+            for (m, b) in drop {
+                copies.remove(&m);
+                if let Some(u) = self.used.get_mut(&m) {
+                    *u = u.saturating_sub(b);
+                }
+            }
+        }
+        self.homes.insert(tile, mem);
+    }
+
+    fn home(&self, tile: TileId) -> MemId {
+        self.homes[&tile]
+    }
+}
+
+pub struct Executor<'a> {
+    spec: &'a MachineSpec,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(spec: &'a MachineSpec) -> Self {
+        Executor { spec }
+    }
+
+    /// Run the app under the policy; returns metrics or the first
+    /// execution error encountered.
+    pub fn execute(&self, app: &App, policy: &MappingPolicy) -> Result<Metrics, ExecError> {
+        let spec = self.spec;
+        let mut now_us = 0.0f64; // launch-barrier clock
+        let mut proc_time: HashMap<ProcId, f64> = HashMap::new();
+        let mut book = MemBook::default();
+        let mut nic_busy: HashMap<(usize, usize), f64> = HashMap::new();
+        let mut m = Metrics::default();
+        // §Perf: accumulate per-task busy time by task id (a String-keyed
+        // map entry per point dominated the bookkeeping cost)
+        let mut task_busy = vec![0.0f64; app.tasks.len()];
+
+        // parent (top-level) task runs on CPU 0 of node 0
+        let parent = ProcId { node: 0, kind: ProcKind::Cpu, index: 0 };
+
+        for step in 0..app.steps {
+            for launch in app.launches(step) {
+                let task = &app.tasks[launch.task];
+
+                // instance-limit model: a limit below the per-processor
+                // concurrency this launch needs starves instance creation
+                // and trips Legion's event assertion (Table A1 mapper7)
+                if let Some(limit) = policy.instance_limit(&task.name) {
+                    let nprocs = spec.count(ProcKind::Gpu).max(1) as i64;
+                    let per_proc = (launch.num_points() + nprocs - 1) / nprocs;
+                    if limit < per_proc.max(2) {
+                        return Err(ExecError::InstanceLimit { task: task.name.clone() });
+                    }
+                }
+
+                let mut max_end = now_us;
+                // §Perf: region decisions (layout, memory kind, collect
+                // flag, validity) depend only on (task, region, proc
+                // *kind*) — resolve once per launch per kind instead of
+                // per point x region (the former hot spot).
+                let mut kind_cache: [Option<Vec<RegionDecision>>; 3] =
+                    [None, None, None];
+
+                // §Perf: kind + mapping-function resolution is launch-
+                // invariant; hoist it out of the point loop
+                let resolution = policy
+                    .resolve_task(&task.name, &task.variants, launch.num_points() > 1)
+                    .map_err(|e| ExecError::MapFailed(e.to_string()))?;
+
+                for point in launch.points() {
+                    let ctx = TaskCtx {
+                        ipoint: point.clone(),
+                        ispace: launch.ispace.clone(),
+                        parent_proc: Some(parent),
+                    };
+                    let proc = policy
+                        .map_point(&resolution, &ctx, spec)
+                        .map_err(|e| ExecError::MapFailed(e.to_string()))?;
+                    let mut t = proc_time.get(&proc).copied().unwrap_or(now_us).max(now_us);
+                    let mut busy_us = 0.0;
+
+                    let slot = kind_slot(proc.kind);
+                    if kind_cache[slot].is_none() {
+                        kind_cache[slot] = Some(resolve_region_decisions(
+                            app, policy, task, &launch, proc, spec,
+                        )?);
+                    }
+                    let decisions = kind_cache[slot].as_ref().unwrap();
+
+                    for (pos, rr) in launch.regions.iter().enumerate() {
+                        let region = &app.regions[rr.region];
+                        let d = &decisions[pos];
+                        let mem = spec.mem_for(proc, d.mem_kind);
+                        let tile_coord = (rr.tile_of)(&point);
+                        let tile: TileId = (rr.region, region.tile_lin(&tile_coord));
+                        let bytes = d.bytes;
+
+                        // ---- home initialization --------------------------
+                        let init_home = match app.initial_dist {
+                            InitialDist::FirstUse => mem,
+                            InitialDist::BlockOverGpus => {
+                                let total = region.num_tiles().max(1);
+                                let lin = region.tile_lin(&tile_coord);
+                                let ngpus = spec.count(ProcKind::Gpu) as i64;
+                                let g = (lin * ngpus / total).clamp(0, ngpus - 1) as usize;
+                                let per = spec.gpus_per_node;
+                                MemId { node: g / per, kind: MemKind::FbMem, index: g % per }
+                            }
+                        };
+                        let home = book.home_or_init(tile, init_home, bytes);
+
+                        // ---- transfer (fetch into the chosen memory) ------
+                        let needs_data = matches!(
+                            rr.access,
+                            Access::Read | Access::ReadWrite | Access::Reduce
+                        );
+                        if !book.is_resident(tile, mem) {
+                            if needs_data && home != mem {
+                                let dt = spec.transfer_us(home, mem, bytes);
+                                if home.node != mem.node {
+                                    let ch = (home.node, mem.node);
+                                    let free = nic_busy.entry(ch).or_insert(0.0);
+                                    let begin = t.max(*free);
+                                    *free = begin + dt;
+                                    t = begin + dt;
+                                } else {
+                                    t += dt;
+                                }
+                                m.comm_bytes += bytes;
+                                m.transfer_s += dt * 1e-6;
+                            }
+                            book.add_copy(tile, mem, bytes, spec)?;
+                        }
+
+                        // ---- access time ----------------------------------
+                        let bw = spec
+                            .access_bw(proc, mem)
+                            .expect("select_memory returned unreachable memory");
+                        let gb = (bytes as f64 * rr.reuse) / 1e9;
+                        busy_us += gb / bw * 1e6 * d.penalty;
+
+                        // ---- write-back / ownership -----------------------
+                        match rr.access {
+                            Access::Write | Access::ReadWrite => {
+                                book.make_exclusive(tile, mem);
+                            }
+                            Access::Reduce => {
+                                // fold the remote contribution into the home
+                                let home_now = book.home(tile);
+                                if home_now != mem {
+                                    let dt = spec.transfer_us(mem, home_now, bytes);
+                                    t += dt;
+                                    m.comm_bytes += bytes;
+                                    m.transfer_s += dt * 1e-6;
+                                }
+                            }
+                            Access::Read => {}
+                        }
+                    }
+
+                    // ---- eager collection (CollectMemory statements) ------
+                    // collected region arguments free their instance right
+                    // after the task, trading refetches for memory headroom
+                    for (pos, rr) in launch.regions.iter().enumerate() {
+                        let d = &decisions[pos];
+                        if d.collect {
+                            let mem = spec.mem_for(proc, d.mem_kind);
+                            let tile_coord = (rr.tile_of)(&point);
+                            let tile: TileId =
+                                (rr.region, app.regions[rr.region].tile_lin(&tile_coord));
+                            book.collect_copy(tile, mem);
+                        }
+                    }
+
+                    // ---- compute body -------------------------------------
+                    busy_us += task.flops_per_point / (spec.gflops(proc.kind) * 1e3);
+                    busy_us += spec.spawn_overhead_us(proc.kind);
+
+                    let end = t + busy_us;
+                    proc_time.insert(proc, end);
+                    m.busy_s += busy_us * 1e-6;
+                    task_busy[launch.task] += busy_us * 1e-6;
+                    *m.per_proc_s.entry(proc).or_insert(0.0) += busy_us * 1e-6;
+                    max_end = max_end.max(end);
+                }
+
+                // bulk-synchronous launch barrier
+                now_us = max_end;
+            }
+        }
+
+        m.elapsed_s = now_us * 1e-6;
+        for (i, &busy) in task_busy.iter().enumerate() {
+            if busy > 0.0 {
+                m.per_task_s.insert(app.tasks[i].name.clone(), busy);
+            }
+        }
+        m.peak_mem = book.peak.iter().map(|(k, v)| (*k, *v)).collect();
+        let (tp, unit) = match app.metric {
+            crate::apps::taskgraph::Metric::Gflops { total_flops } => {
+                (total_flops / m.elapsed_s / 1e9, "GFLOPS")
+            }
+            crate::apps::taskgraph::Metric::StepsPerSecond => {
+                (app.steps as f64 / m.elapsed_s, "steps/s")
+            }
+        };
+        m.throughput = tp;
+        m.unit = unit;
+        Ok(m)
+    }
+}
+
+/// Per-(launch, region-argument, proc-kind) mapping decision, resolved
+/// once per launch (§Perf hoist — policy queries scan statement lists).
+struct RegionDecision {
+    mem_kind: MemKind,
+    bytes: u64,
+    penalty: f64,
+    collect: bool,
+}
+
+fn kind_slot(kind: ProcKind) -> usize {
+    match kind {
+        ProcKind::Cpu => 0,
+        ProcKind::Gpu => 1,
+        ProcKind::Omp => 2,
+    }
+}
+
+fn resolve_region_decisions(
+    app: &App,
+    policy: &MappingPolicy,
+    task: &crate::apps::taskgraph::TaskDecl,
+    launch: &crate::apps::taskgraph::Launch,
+    proc: ProcId,
+    spec: &MachineSpec,
+) -> Result<Vec<RegionDecision>, ExecError> {
+    let req_layout = task.layout_req(proc.kind);
+    launch
+        .regions
+        .iter()
+        .enumerate()
+        .map(|(pos, rr)| {
+            let region = &app.regions[rr.region];
+            let name = rr.mapped_name(&app.regions);
+            let layout = policy.layout(&task.name, name, pos, proc.kind);
+            if req_layout.requires_soa && layout.aos && region.fields > 1 {
+                return Err(ExecError::StrideMismatch {
+                    task: task.name.clone(),
+                    region: name.to_string(),
+                });
+            }
+            if req_layout.requires_f_order && !layout.f_order {
+                return Err(ExecError::DgemmIllegal { task: task.name.clone() });
+            }
+            let mem_kind = policy.select_memory(&task.name, name, pos, proc, spec);
+            Ok(RegionDecision {
+                mem_kind,
+                bytes: rr.touched_bytes(&app.regions),
+                penalty: layout_penalty(&layout, proc.kind, region),
+                collect: policy.collect_memory(&task.name, name, pos),
+            })
+        })
+        .collect()
+}
+
+/// Convenience wrapper: compile DSL source and execute in one call.
+pub fn run_mapper(
+    app: &App,
+    dsl_source: &str,
+    spec: &MachineSpec,
+) -> Result<Result<Metrics, ExecError>, crate::dsl::CompileError> {
+    let policy = MappingPolicy::compile(dsl_source, spec)?;
+    Ok(Executor::new(spec).execute(app, &policy))
+}

@@ -1,0 +1,139 @@
+//! Execution metrics and the execution-error taxonomy.
+//!
+//! Error Display strings reproduce the paper's Table A1 feedback messages
+//! verbatim — the feedback engine keyword-matches them.
+
+use std::collections::HashMap;
+
+use crate::machine::{MemId, ProcId};
+
+/// Result of a successful simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Wall-clock of the whole run (seconds, simulated).
+    pub elapsed_s: f64,
+    /// App-defined headline number (GFLOP/s or steps/s).
+    pub throughput: f64,
+    /// Unit of `throughput`.
+    pub unit: &'static str,
+    /// Bytes moved between memories (explicit transfers).
+    pub comm_bytes: u64,
+    /// Time spent in transfers (sum over transfers; overlaps not removed).
+    pub transfer_s: f64,
+    /// Time spent computing + accessing memory on processors.
+    pub busy_s: f64,
+    /// Per-task-name busy seconds.
+    pub per_task_s: HashMap<String, f64>,
+    /// Per-processor busy seconds.
+    pub per_proc_s: HashMap<ProcId, f64>,
+    /// Peak bytes resident per memory.
+    pub peak_mem: HashMap<MemId, u64>,
+}
+
+impl Metrics {
+    /// Fraction of total processor-seconds spent busy on the processors
+    /// that were used at all (load-balance indicator).
+    pub fn utilization(&self) -> f64 {
+        if self.per_proc_s.is_empty() || self.elapsed_s == 0.0 {
+            return 0.0;
+        }
+        let total: f64 = self.per_proc_s.values().sum();
+        total / (self.per_proc_s.len() as f64 * self.elapsed_s)
+    }
+
+    /// Render the performance-metric feedback line (Table 2, mapper3/8/9).
+    pub fn feedback_line(&self) -> String {
+        match self.unit {
+            "GFLOPS" => format!(
+                "Performance Metric: Achieved throughput = {:.0} GFLOPS",
+                self.throughput
+            ),
+            _ => format!(
+                "Performance Metric: Execution time is {:.4}s.",
+                self.elapsed_s
+            ),
+        }
+    }
+}
+
+/// Execution errors (the paper's second feedback category).
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ExecError {
+    /// Running out of a memory pool, e.g. GPU framebuffer or ZCMEM.
+    #[error("Out of memory: {mem} capacity {capacity} bytes exceeded (need {needed})")]
+    OutOfMemory { mem: String, needed: u64, capacity: u64 },
+
+    /// A task variant compiled for a different instance layout (Table A1
+    /// mapper4).
+    #[error("Assertion failed: stride does not match expected value.")]
+    StrideMismatch { task: String, region: String },
+
+    /// BLAS rejecting a C-order instance (Table A1 mapper5).
+    #[error("DGEMM parameter number 8 had an illegal value")]
+    DgemmIllegal { task: String },
+
+    /// Index-mapping function failed at runtime (Table A1 mapper6 — e.g.
+    /// "Slice processor index out of bound").
+    #[error("{0}")]
+    MapFailed(String),
+
+    /// InstanceLimit starved the runtime of instances (Table A1 mapper7).
+    #[error("Assertion 'event.exists()' failed")]
+    InstanceLimit { task: String },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_strings_match_paper_table_a1() {
+        assert_eq!(
+            ExecError::StrideMismatch { task: "t".into(), region: "r".into() }
+                .to_string(),
+            "Assertion failed: stride does not match expected value."
+        );
+        assert_eq!(
+            ExecError::DgemmIllegal { task: "t".into() }.to_string(),
+            "DGEMM parameter number 8 had an illegal value"
+        );
+        assert_eq!(
+            ExecError::InstanceLimit { task: "t".into() }.to_string(),
+            "Assertion 'event.exists()' failed"
+        );
+        assert_eq!(
+            ExecError::MapFailed("Slice processor index out of bound".into())
+                .to_string(),
+            "Slice processor index out of bound"
+        );
+    }
+
+    #[test]
+    fn feedback_lines() {
+        let mut m = Metrics { elapsed_s: 0.03, unit: "steps/s", ..Default::default() };
+        assert_eq!(
+            m.feedback_line(),
+            "Performance Metric: Execution time is 0.0300s."
+        );
+        m.unit = "GFLOPS";
+        m.throughput = 4877.0;
+        assert_eq!(
+            m.feedback_line(),
+            "Performance Metric: Achieved throughput = 4877 GFLOPS"
+        );
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let mut m = Metrics { elapsed_s: 2.0, ..Default::default() };
+        m.per_proc_s.insert(
+            crate::machine::ProcId {
+                node: 0,
+                kind: crate::machine::ProcKind::Gpu,
+                index: 0,
+            },
+            1.0,
+        );
+        assert!((m.utilization() - 0.5).abs() < 1e-12);
+    }
+}

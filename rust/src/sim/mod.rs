@@ -1,0 +1,180 @@
+//! Execution simulator (substrate S6): cost model, memory bookkeeping,
+//! the macro discrete-event executor, and execution metrics/errors.
+
+pub mod cost;
+pub mod executor;
+pub mod metrics;
+
+pub use executor::{run_mapper, Executor};
+pub use metrics::{ExecError, Metrics};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::dsl::MappingPolicy;
+    use crate::machine::MachineSpec;
+
+    fn spec() -> MachineSpec {
+        MachineSpec::p100_cluster()
+    }
+
+    /// The canonical all-GPU FBMEM mapper.
+    const GPU_MAPPER: &str = "Task * GPU;\n\
+                              Region * * GPU FBMEM;\n\
+                              Layout * * * SOA C_order Align==64;\n";
+
+    /// Everything on one CPU core, SYSMEM.
+    const CPU_MAPPER: &str = "Task * CPU;\n\
+                              Region * * CPU SYSMEM;\n\
+                              Layout * * * SOA F_order Align==64;\n";
+
+    #[test]
+    fn circuit_runs_on_gpu_mapper() {
+        let app = apps::circuit(apps::CircuitConfig::default());
+        let m = run_mapper(&app, GPU_MAPPER, &spec()).unwrap().unwrap();
+        assert!(m.elapsed_s > 0.0);
+        assert!(m.throughput > 0.0);
+        assert_eq!(m.unit, "steps/s");
+    }
+
+    #[test]
+    fn gpu_beats_cpu_on_every_benchmark() {
+        let s = spec();
+        for name in apps::ALL_BENCHMARKS {
+            let app = apps::by_name(name).unwrap();
+            let gpu = run_mapper(&app, GPU_MAPPER, &s).unwrap().unwrap();
+            let cpu = run_mapper(&app, CPU_MAPPER, &s).unwrap().unwrap();
+            assert!(
+                gpu.throughput > 2.0 * cpu.throughput,
+                "{name}: gpu {} vs cpu {}",
+                gpu.throughput,
+                cpu.throughput
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_gflops_metric() {
+        let app = apps::matmul(apps::Algorithm::Summa, apps::MatmulConfig::default());
+        let m = run_mapper(&app, GPU_MAPPER, &spec()).unwrap().unwrap();
+        assert_eq!(m.unit, "GFLOPS");
+        // 8 P100s peak at 74.4 TFLOPs; anything above that is a model bug
+        assert!(m.throughput < 74_400.0, "superluminal: {}", m.throughput);
+        assert!(m.throughput > 1_000.0, "implausibly slow: {}", m.throughput);
+    }
+
+    #[test]
+    fn zcmem_for_everything_ooms() {
+        // ZCMEM is 2 GB/node; the circuit's wire tiles alone exceed it
+        let app = apps::circuit(apps::CircuitConfig::default());
+        let src = "Task * GPU;\nRegion * * GPU ZCMEM;\n";
+        let err = run_mapper(&app, src, &spec()).unwrap().unwrap_err();
+        assert!(matches!(err, ExecError::OutOfMemory { .. }), "{err}");
+        assert!(err.to_string().contains("Out of memory"));
+    }
+
+    #[test]
+    fn aos_on_pennant_gpu_trips_stride_assertion() {
+        let app = apps::pennant(apps::PennantConfig::default());
+        let src = "Task * GPU;\nRegion * * GPU FBMEM;\nLayout * * * AOS C_order;\n";
+        let err = run_mapper(&app, src, &spec()).unwrap().unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "Assertion failed: stride does not match expected value."
+        );
+    }
+
+    #[test]
+    fn c_order_dgemm_on_cpu_trips_blas_error() {
+        let app = apps::matmul(apps::Algorithm::Cannon, apps::MatmulConfig::default());
+        let src = "Task * CPU;\nRegion * * CPU SYSMEM;\nLayout * * * SOA C_order;\n";
+        let err = run_mapper(&app, src, &spec()).unwrap().unwrap_err();
+        assert_eq!(err.to_string(), "DGEMM parameter number 8 had an illegal value");
+    }
+
+    #[test]
+    fn out_of_bound_mapping_function_fails_execution() {
+        let app = apps::circuit(apps::CircuitConfig::default());
+        let src = "Task * GPU;\nRegion * * GPU FBMEM;\n\
+                   mgpu = Machine(GPU);\n\
+                   def bad(Task task) {\n\
+                     ip = task.ipoint;\n\
+                     return mgpu[ip[0], 0];\n\
+                   }\n\
+                   IndexTaskMap * bad;";
+        let err = run_mapper(&app, src, &spec()).unwrap().unwrap_err();
+        assert_eq!(err.to_string(), "Slice processor index out of bound");
+    }
+
+    #[test]
+    fn instance_limit_starves_runtime() {
+        let app = apps::circuit(apps::CircuitConfig::default());
+        let src = format!("{GPU_MAPPER}InstanceLimit calculate_new_currents 1;");
+        let err = run_mapper(&app, &src, &spec()).unwrap().unwrap_err();
+        assert_eq!(err.to_string(), "Assertion 'event.exists()' failed");
+    }
+
+    #[test]
+    fn index_mapping_changes_matmul_throughput() {
+        // concentrating all dgemm tasks on one GPU must be much slower
+        // than spreading them with the expert-style hierarchical map
+        let s = spec();
+        let app = apps::matmul(apps::Algorithm::Cannon, apps::MatmulConfig::default());
+        let spread = format!(
+            "Task * GPU;\nRegion * * GPU FBMEM;\nmgpu = Machine(GPU);\n{}IndexTaskMap dgemm hierarchical_block2d;",
+            crate::dsl::stdlib::HIER_BLOCK2D.source
+        );
+        let one_gpu = "Task * GPU;\nRegion * * GPU FBMEM;\n\
+                       mgpu = Machine(GPU);\n\
+                       def one(Task task) { return mgpu[0, 0]; }\n\
+                       IndexTaskMap dgemm one;";
+        let m_spread = run_mapper(&app, &spread, &s).unwrap().unwrap();
+        let m_one = run_mapper(&app, one_gpu, &s).unwrap().unwrap();
+        assert!(
+            m_spread.throughput > 2.5 * m_one.throughput,
+            "spread {} vs one {}",
+            m_spread.throughput,
+            m_one.throughput
+        );
+    }
+
+    #[test]
+    fn circuit_fbmem_ghosts_beat_zcmem_ghosts() {
+        // the paper's 1.34x finding: FBMEM placement of shared/ghost beats
+        // the expert's ZCMEM placement
+        let s = spec();
+        let app = apps::circuit(apps::CircuitConfig::default());
+        let zc = format!("{GPU_MAPPER}Region * rp_shared GPU ZCMEM;\nRegion * rp_ghost GPU ZCMEM;");
+        let fb = GPU_MAPPER; // default FBMEM everywhere
+        let m_zc = run_mapper(&app, &zc, &s).unwrap().unwrap();
+        let m_fb = run_mapper(&app, fb, &s).unwrap().unwrap();
+        let ratio = m_fb.throughput / m_zc.throughput;
+        assert!(
+            ratio > 1.05 && ratio < 2.0,
+            "FBMEM/ZCMEM ratio {ratio} out of the paper's plausible band"
+        );
+    }
+
+    #[test]
+    fn metrics_track_communication() {
+        let s = spec();
+        let app = apps::matmul(apps::Algorithm::Summa, apps::MatmulConfig::default());
+        let m = run_mapper(&app, GPU_MAPPER, &s).unwrap().unwrap();
+        assert!(m.comm_bytes > 0, "SUMMA must move panels between GPUs");
+        assert!(m.transfer_s > 0.0);
+        assert!(!m.peak_mem.is_empty());
+    }
+
+    #[test]
+    fn deterministic_execution() {
+        let s = spec();
+        let app = apps::circuit(apps::CircuitConfig::default());
+        let policy = MappingPolicy::compile(GPU_MAPPER, &s).unwrap();
+        let ex = Executor::new(&s);
+        let a = ex.execute(&app, &policy).unwrap();
+        let b = ex.execute(&app, &policy).unwrap();
+        assert_eq!(a.elapsed_s, b.elapsed_s);
+        assert_eq!(a.comm_bytes, b.comm_bytes);
+    }
+}

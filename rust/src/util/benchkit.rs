@@ -1,0 +1,71 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `bench(name, iters, f)` warms up, runs `f` `iters` times, and prints
+//! mean / min / max wall-clock per iteration.  Used by the `[[bench]]`
+//! targets (harness = false).
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:40} {:>6} iters  mean {:>12.2} us  min {:>12.2} us  max {:>12.2} us",
+            self.name, self.iters, self.mean_us, self.min_us, self.max_us
+        );
+    }
+}
+
+/// Time `f` over `iters` iterations after 2 warmup calls.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..2 {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+    let max = times.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: mean,
+        min_us: min,
+        max_us: max,
+    };
+    r.print();
+    r
+}
+
+/// Measure a one-shot operation (whole-experiment timing).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("time  {:40} {:>12.2} ms", name, t0.elapsed().as_secs_f64() * 1e3);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_times() {
+        let r = bench("noopish", 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_us >= 0.0);
+        assert!(r.min_us <= r.mean_us && r.mean_us <= r.max_us);
+    }
+}

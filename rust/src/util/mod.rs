@@ -1,0 +1,10 @@
+//! Dependency-free utilities: PRNG, CLI parsing, statistics, tables,
+//! property-test driver. (The offline crate set lacks rand / clap /
+//! criterion / proptest; these modules replace what we need of them.)
+
+pub mod benchkit;
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

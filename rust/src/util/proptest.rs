@@ -1,0 +1,61 @@
+//! Tiny property-testing driver (proptest is unavailable offline).
+//!
+//! `check(seed, cases, |rng| ...)` runs a closure over `cases` random cases;
+//! on failure it reports the case index and the per-case seed so the exact
+//! case replays with `replay(case_seed, ...)`.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` seeded cases; panic with replay info on failure.
+pub fn check<F: FnMut(&mut Rng)>(seed: u64, cases: usize, mut f: F) {
+    let mut meta = Rng::new(seed);
+    for i in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {i}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn replay<F: FnMut(&mut Rng)>(case_seed: u64, mut f: F) {
+    let mut rng = Rng::new(case_seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(1, 50, |rng| {
+            let n = rng.below(100) as i64;
+            assert!((0..100).contains(&n));
+        });
+    }
+
+    #[test]
+    fn reports_failure_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check(2, 100, |rng| {
+                // fails eventually
+                assert!(rng.below(10) != 3, "hit the three");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "msg: {msg}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Small statistics helpers for the experiment harness and bench reports.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for < 2 samples.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Median via sort; NaNs not supported.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Per-iteration mean across runs: `series[run][iter]` -> mean over runs.
+/// Runs may be ragged; each position averages the runs that reached it.
+pub fn mean_trajectory(series: &[Vec<f64>]) -> Vec<f64> {
+    let len = series.iter().map(|s| s.len()).max().unwrap_or(0);
+    (0..len)
+        .map(|i| {
+            let vals: Vec<f64> =
+                series.iter().filter_map(|s| s.get(i).copied()).collect();
+            mean(&vals)
+        })
+        .collect()
+}
+
+/// Running maximum ("best so far") of a trajectory.
+pub fn best_so_far(xs: &[f64]) -> Vec<f64> {
+    let mut best = f64::NEG_INFINITY;
+    xs.iter()
+        .map(|&x| {
+            best = best.max(x);
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn stddev_basic() {
+        assert_eq!(stddev(&[2.0, 2.0, 2.0]), 0.0);
+        let s = stddev(&[1.0, 3.0]);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn trajectory_mean_ragged() {
+        let t = mean_trajectory(&[vec![1.0, 3.0], vec![3.0]]);
+        assert_eq!(t, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn best_so_far_monotone() {
+        assert_eq!(
+            best_so_far(&[1.0, 0.5, 2.0, 1.5]),
+            vec![1.0, 1.0, 2.0, 2.0]
+        );
+    }
+
+    #[test]
+    fn min_max() {
+        assert_eq!(min(&[2.0, -1.0, 3.0]), -1.0);
+        assert_eq!(max(&[2.0, -1.0, 3.0]), 3.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Plain-text table rendering + CSV writing for the experiment harness.
+//! (serde is unavailable offline; CSV output here is deliberately minimal.)
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// A simple left-aligned text table with a header row.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let sep = if i + 1 == ncols { "\n" } else { "  " };
+                let _ = write!(out, "{:<w$}{}", c, sep, w = widths[i]);
+            }
+        };
+        line(&mut out, &self.header);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// Write the table as CSV (comma-separated, quotes around commas).
+    pub fn write_csv(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut buf = String::new();
+        let _ = writeln!(buf, "{}", self.header.iter().map(esc).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(buf, "{}", row.iter().map(esc).collect::<Vec<_>>().join(","));
+        }
+        fs::write(path, buf)
+    }
+}
+
+/// Format a float with `d` decimal places.
+pub fn f(x: f64, d: usize) -> String {
+    format!("{:.*}", d, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["app", "speedup"]);
+        t.row(vec!["circuit", "1.34"]);
+        t.row(vec!["stencil-long-name", "1.00"]);
+        let r = t.render();
+        assert!(r.contains("circuit"));
+        assert!(r.lines().count() == 4);
+        // all data lines share the header line's column offset for col 2
+        let hdr = r.lines().next().unwrap();
+        let col = hdr.find("speedup").unwrap();
+        for l in r.lines().skip(2) {
+            assert_eq!(l.find(|c: char| c.is_ascii_digit()).unwrap(), col);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let dir = std::env::temp_dir().join("mapperopt_table_test");
+        let p = dir.join("t.csv");
+        let mut t = Table::new(vec!["k", "v"]);
+        t.row(vec!["x,y", "has \"quote\""]);
+        t.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("\"x,y\""));
+        assert!(s.contains("\"has \"\"quote\"\"\""));
+    }
+
+    #[test]
+    fn float_format() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(f(2.0, 3), "2.000");
+    }
+}

@@ -1,0 +1,128 @@
+//! Integration: DSL pipeline end to end — paper appendix mappers parse,
+//! compile, and drive real executions.
+
+use mapperopt::apps;
+use mapperopt::dsl::{parse, MappingPolicy, TaskCtx};
+use mapperopt::machine::{MachineSpec, ProcKind};
+use mapperopt::sim::run_mapper;
+
+/// Figure A8: the optimized circuit mapper from the paper (iteration 10).
+const FIGURE_A8: &str = "\
+Task * GPU,OMP,CPU;
+Task calculate_new_currents GPU;
+Task update_voltages GPU;
+Region * * GPU FBMEM;
+Layout * * * C_order AOS Align==128;
+mgpu = Machine(GPU);
+
+m_2d = Machine(GPU);
+def same_point(Task task) {
+  return m_2d[*task.parent.processor(m_2d)];
+}
+";
+
+/// Figure A9: Solomonik's mapper at iteration 2.
+const FIGURE_A9: &str = "\
+Task * GPU,OMP,CPU;
+Region * * GPU FBMEM;
+Region * * * SOCKMEM,SYSMEM;
+Layout * * * F_order SOA;
+mgpu = Machine(GPU);
+
+def block1d(Task task) {
+  ip = task.ipoint;
+  return mgpu[ip[0] % mgpu.size[0], ip[0] % mgpu.size[1]];
+}
+
+IndexTaskMap task_2 block1d;
+
+m_2d = Machine(GPU);
+def same_point(Task task) {
+  return m_2d[*task.parent.processor(m_2d)];
+}
+";
+
+#[test]
+fn paper_figure_a8_mapper_compiles_and_runs_circuit() {
+    let spec = MachineSpec::p100_cluster();
+    let app = apps::by_name("circuit").unwrap();
+    let metrics = run_mapper(&app, FIGURE_A8, &spec)
+        .expect("compiles")
+        .expect("executes");
+    assert!(metrics.throughput > 0.0);
+}
+
+#[test]
+fn paper_figure_a9_mapper_compiles() {
+    let spec = MachineSpec::p100_cluster();
+    let p = MappingPolicy::compile(FIGURE_A9, &spec).unwrap();
+    assert_eq!(p.index_map("task_2"), Some("block1d"));
+    // block1d resolves every point of an 8-launch in bounds
+    for pt in 0..8 {
+        let ctx = TaskCtx { ipoint: vec![pt], ispace: vec![8], parent_proc: None };
+        let proc = p.select_processor("task_2", &ctx, &[ProcKind::Gpu], &spec).unwrap();
+        assert!(proc.node < 2 && proc.index < 4);
+    }
+}
+
+/// Figure A10's pattern: many IndexTaskMap statements; the last one wins.
+#[test]
+fn figure_a10_last_index_map_wins() {
+    let spec = MachineSpec::p100_cluster();
+    let src = "\
+mgpu = Machine(GPU);
+def block1d(Task task) {
+  ip = task.ipoint;
+  return mgpu[ip[0] % mgpu.size[0], ip[0] % mgpu.size[1]];
+}
+def cyclic1d(Task task) {
+  ip = task.ipoint;
+  linearize = ip[0] * 2 + ip[1];
+  return mgpu[ip[0] % mgpu.size[0], linearize % mgpu.size[1]];
+}
+IndexTaskMap task_1 block1d;
+IndexTaskMap task_1 cyclic1d;
+";
+    let p = MappingPolicy::compile(src, &spec).unwrap();
+    assert_eq!(p.index_map("task_1"), Some("cyclic1d"));
+    let ctx = TaskCtx { ipoint: vec![1, 1], ispace: vec![4, 4], parent_proc: None };
+    let proc = p.select_processor("task_1", &ctx, &[ProcKind::Gpu], &spec).unwrap();
+    // cyclic1d: node = 1 % 2 = 1, gpu = (1*2+1) % 4 = 3
+    assert_eq!((proc.node, proc.index), (1, 3));
+}
+
+#[test]
+fn whole_grammar_smoke() {
+    // one program exercising every statement class of Appendix A.1
+    let src = "\
+Task * GPU,OMP,CPU;
+Task t0 GPU;
+Region * * GPU FBMEM;
+Region t0 r0 GPU ZCMEM;
+Region * * * SOCKMEM,SYSMEM;
+Layout * * * SOA C_order Align==64;
+Layout t0 r0 GPU AOS F_order No_Align;
+InstanceLimit t0 8;
+CollectMemory t0 r0;
+GarbageCollect t0 r1;
+m = Machine(GPU);
+n = Machine(CPU);
+def helper(int d) { return d * 2; }
+def f(Tuple ipoint, Tuple ispace) {
+  a = ipoint * m.size / ispace;
+  b = ipoint % m.size;
+  c = ispace[0] > ispace[1] ? a : b;
+  s = m.split(1, 2).merge(0, 1).swap(0, 1);
+  x = helper(ipoint[0]);
+  return m[*c];
+}
+def g(Task task) {
+  return m[*task.parent.processor(m)];
+}
+IndexTaskMap t0 f;
+SingleTaskMap t0 g;
+";
+    let prog = parse(src).unwrap();
+    assert!(prog.stmts.len() >= 14);
+    MappingPolicy::compile(src, &MachineSpec::p100_cluster()).unwrap();
+}

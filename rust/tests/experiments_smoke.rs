@@ -1,0 +1,42 @@
+//! Integration: the harness regenerates every table/figure end to end at
+//! smoke parameters, and the CSV outputs land on disk.
+
+use mapperopt::coordinator::Coordinator;
+use mapperopt::harness::{self, ExpParams};
+use mapperopt::machine::MachineSpec;
+
+#[test]
+fn all_artifacts_regenerate() {
+    let dir = std::env::temp_dir().join(format!("mapperopt_results_{}", std::process::id()));
+    std::env::set_var("MAPPEROPT_RESULTS", &dir);
+    let coord = Coordinator::new(MachineSpec::p100_cluster());
+    let p = ExpParams::smoke();
+
+    let t1 = harness::table1();
+    assert_eq!(t1.len(), 9);
+
+    let t3 = harness::table3(&coord.spec);
+    assert_eq!(t3.len(), 10);
+
+    let f6 = harness::fig6(&coord, p);
+    assert_eq!(f6.len(), 3);
+    for r in &f6 {
+        assert!(r.expert_raw > 0.0);
+        assert_eq!(r.trace_traj.len(), p.iters);
+        assert_eq!(r.opro_traj.len(), p.iters);
+    }
+
+    let f7 = harness::fig7(&coord, p);
+    assert_eq!(f7.len(), 6);
+
+    let f8 = harness::fig8(&coord, p);
+    assert_eq!(f8.len(), 9);
+
+    for name in ["table1", "table3", "fig6", "fig7", "fig8"] {
+        let path = dir.join(format!("{name}.csv"));
+        assert!(path.exists(), "missing {}", path.display());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() >= 2, "{name}.csv is empty");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

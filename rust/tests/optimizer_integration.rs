@@ -1,0 +1,105 @@
+//! Integration: full optimization campaigns reproduce the paper's
+//! qualitative results (Sections 5.2-5.4).
+
+use mapperopt::apps;
+use mapperopt::coordinator::{Coordinator, SearchAlgo};
+use mapperopt::feedback::FeedbackConfig;
+use mapperopt::machine::MachineSpec;
+use mapperopt::mapping::expert_dsl;
+use mapperopt::util::stats;
+
+fn coord() -> Coordinator {
+    Coordinator::new(MachineSpec::p100_cluster())
+}
+
+fn best_of(c: &Coordinator, bench: &str, algo: SearchAlgo, runs: usize, iters: usize) -> f64 {
+    c.run_many(bench, algo, FeedbackConfig::FULL, 0xA11CE, runs, iters)
+        .iter()
+        .filter_map(|r| r.best.as_ref().map(|(_, s)| *s))
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn trace_best_matches_or_beats_expert_on_scientific_apps() {
+    // paper: "All the best mappers found by Trace can at least match the
+    // performance of expert mappers"; circuit beats it by 1.34x
+    let c = coord();
+    for bench in ["circuit", "stencil", "pennant"] {
+        let app = apps::by_name(bench).unwrap();
+        let expert = c.throughput(&app, expert_dsl(bench).unwrap());
+        let best = best_of(&c, bench, SearchAlgo::Trace, 5, 10);
+        assert!(
+            best >= 0.97 * expert,
+            "{bench}: trace best {best} far below expert {expert}"
+        );
+    }
+    let app = apps::by_name("circuit").unwrap();
+    let expert = c.throughput(&app, expert_dsl("circuit").unwrap());
+    let best = best_of(&c, "circuit", SearchAlgo::Trace, 5, 10);
+    assert!(
+        best / expert > 1.2,
+        "circuit best/expert = {:.2}, paper reports 1.34",
+        best / expert
+    );
+}
+
+#[test]
+fn trace_best_beats_experts_on_most_matmuls() {
+    // paper: speedups of 1.09x-1.31x across the six algorithms
+    let c = coord();
+    let mut wins = 0;
+    for bench in ["cannon", "summa", "pumma", "johnson", "solomonik", "cosma"] {
+        let app = apps::by_name(bench).unwrap();
+        let expert = c.throughput(&app, expert_dsl(bench).unwrap());
+        let best = best_of(&c, bench, SearchAlgo::Trace, 5, 10);
+        assert!(best >= 0.95 * expert, "{bench}: best {best} < expert {expert}");
+        if best > 1.04 * expert {
+            wins += 1;
+        }
+    }
+    assert!(wins >= 4, "only {wins}/6 algorithms improved over the expert");
+}
+
+#[test]
+fn full_feedback_beats_system_only_on_average() {
+    // Fig. 8's headline: the full message achieves the highest throughput
+    let c = coord();
+    let mut full_sum = 0.0;
+    let mut sys_sum = 0.0;
+    for bench in ["circuit", "cosma", "cannon"] {
+        let full = c.run_many(bench, SearchAlgo::Trace, FeedbackConfig::FULL, 5, 5, 10);
+        let sys = c.run_many(bench, SearchAlgo::Trace, FeedbackConfig::SYSTEM, 5, 5, 10);
+        let final_of = |rs: &[mapperopt::coordinator::RunResult]| {
+            stats::mean(
+                &rs.iter()
+                    .map(|r| r.trajectory().last().copied().unwrap_or(0.0))
+                    .collect::<Vec<_>>(),
+            )
+        };
+        full_sum += final_of(&full);
+        sys_sum += final_of(&sys);
+    }
+    assert!(
+        full_sum >= sys_sum,
+        "full feedback {full_sum} must not lose to system-only {sys_sum}"
+    );
+}
+
+#[test]
+fn opro_competitive_but_not_dominant() {
+    let c = coord();
+    let app = apps::by_name("summa").unwrap();
+    let expert = c.throughput(&app, expert_dsl("summa").unwrap());
+    let opro = best_of(&c, "summa", SearchAlgo::Opro, 5, 10);
+    assert!(opro > 0.5 * expert, "opro best {opro} vs expert {expert}");
+}
+
+#[test]
+fn optimization_finishes_fast() {
+    // the paper's pitch: minutes, not days.  Our whole campaign must run
+    // in well under a second of wall clock.
+    let c = coord();
+    let t0 = std::time::Instant::now();
+    let _ = c.run_many("circuit", SearchAlgo::Trace, FeedbackConfig::FULL, 1, 5, 10);
+    assert!(t0.elapsed().as_secs_f64() < 30.0);
+}

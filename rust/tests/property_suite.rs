@@ -1,0 +1,207 @@
+//! Property-based integration suite: invariants that must hold for
+//! arbitrary (seeded-random) mappers, apps, and machine shapes.
+
+use mapperopt::apps;
+use mapperopt::dsl::{MappingPolicy, TaskCtx};
+use mapperopt::machine::{MachineSpec, ProcKind, ProcSpace};
+use mapperopt::optimizer::{AgentGenome, AppInfo};
+use mapperopt::sim::Executor;
+use mapperopt::util::proptest::check;
+use mapperopt::util::rng::Rng;
+
+fn spec() -> MachineSpec {
+    MachineSpec::p100_cluster()
+}
+
+/// Any syntactically-valid random genome either fails with a classified
+/// execution error or yields physically-sane metrics.
+#[test]
+fn property_random_mappers_yield_sane_metrics_or_classified_errors() {
+    let s = spec();
+    let benches = ["circuit", "stencil", "cannon", "johnson"];
+    check(0xAB5E, 80, |rng: &mut Rng| {
+        let bench = *rng.choose(&benches);
+        let app = apps::by_name(bench).unwrap();
+        let info = AppInfo::from_app(&app);
+        let mut g = AgentGenome::random(&info, rng);
+        g.syntax_slip = false;
+        g.missing_machine = false;
+        let policy = MappingPolicy::compile(&g.render(), &s)
+            .expect("random genomes are syntactically valid");
+        match Executor::new(&s).execute(&app, &policy) {
+            Ok(m) => {
+                assert!(m.elapsed_s > 0.0, "{bench}: zero elapsed");
+                assert!(m.throughput.is_finite() && m.throughput > 0.0);
+                // busy time cannot exceed procs x wall-clock
+                let nprocs = m.per_proc_s.len() as f64;
+                assert!(
+                    m.busy_s <= nprocs * m.elapsed_s * 1.0001,
+                    "{bench}: busy {} > {} procs x {}",
+                    m.busy_s,
+                    nprocs,
+                    m.elapsed_s
+                );
+                // per-task times sum to total busy
+                let per_task: f64 = m.per_task_s.values().sum();
+                assert!((per_task - m.busy_s).abs() < 1e-9 * m.busy_s.max(1.0));
+                // peak memory within capacity
+                for (mem, peak) in &m.peak_mem {
+                    assert!(
+                        *peak <= s.capacity(mem.kind),
+                        "{bench}: {mem} peak {peak} over capacity"
+                    );
+                }
+            }
+            Err(e) => {
+                // every error renders one of the paper's messages
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("Out of memory")
+                        || msg.contains("stride does not match")
+                        || msg.contains("DGEMM parameter")
+                        || msg.contains("Slice processor index out of bound")
+                        || msg.contains("event.exists()"),
+                    "{bench}: unclassified error '{msg}'"
+                );
+            }
+        }
+    });
+}
+
+/// Executing the same policy twice gives bit-identical metrics.
+#[test]
+fn property_execution_deterministic() {
+    let s = spec();
+    check(0xDE7, 30, |rng: &mut Rng| {
+        let bench = *rng.choose(&apps::ALL_BENCHMARKS);
+        let app = apps::by_name(bench).unwrap();
+        let info = AppInfo::from_app(&app);
+        let mut g = AgentGenome::random(&info, rng);
+        g.syntax_slip = false;
+        g.missing_machine = false;
+        let policy = MappingPolicy::compile(&g.render(), &s).unwrap();
+        let ex = Executor::new(&s);
+        let a = ex.execute(&app, &policy);
+        let b = ex.execute(&app, &policy);
+        match (a, b) {
+            (Ok(x), Ok(y)) => {
+                assert_eq!(x.elapsed_s, y.elapsed_s);
+                assert_eq!(x.comm_bytes, y.comm_bytes);
+            }
+            (Err(x), Err(y)) => assert_eq!(x.to_string(), y.to_string()),
+            _ => panic!("one run errored, the other did not"),
+        }
+    });
+}
+
+/// select_processor never returns a processor outside the machine, for
+/// arbitrary genomes and launch points.
+#[test]
+fn property_selected_processors_in_bounds() {
+    let s = spec();
+    let app = apps::by_name("summa").unwrap();
+    let info = AppInfo::from_app(&app);
+    check(0x5EEC, 100, |rng: &mut Rng| {
+        let mut g = AgentGenome::random(&info, rng);
+        g.syntax_slip = false;
+        g.missing_machine = false;
+        let policy = MappingPolicy::compile(&g.render(), &s).unwrap();
+        let n = 1 + rng.below(8) as i64;
+        let m = 1 + rng.below(8) as i64;
+        let ctx = TaskCtx {
+            ipoint: vec![rng.below(n as usize) as i64, rng.below(m as usize) as i64],
+            ispace: vec![n, m],
+            parent_proc: None,
+        };
+        if let Ok(p) = policy.select_processor(
+            "dgemm",
+            &ctx,
+            &[ProcKind::Gpu, ProcKind::Cpu, ProcKind::Omp],
+            &s,
+        ) {
+            assert!(p.node < s.nodes);
+            assert!(p.index < s.per_node(p.kind));
+        } // Err = Slice OOB, legitimate for unwrapped customs
+    });
+}
+
+/// Processor-space transforms remain bijections onto the machine under
+/// random chains (the invertibility claim of Appendix A.2) for varied
+/// machine shapes.
+#[test]
+fn property_transform_bijectivity_across_machine_shapes() {
+    check(0x5AFE, 120, |rng: &mut Rng| {
+        let nodes = 1 << rng.below(3); // 1, 2, 4
+        let gpus = 1 << (1 + rng.below(2)); // 2, 4
+        let mut spec = MachineSpec::p100_cluster();
+        spec.nodes = nodes;
+        spec.gpus_per_node = gpus;
+        let mut sp = ProcSpace::machine(&spec, ProcKind::Gpu);
+        for _ in 0..rng.below(5) {
+            sp = match rng.below(4) {
+                0 => {
+                    let dim = rng.below(sp.ndims());
+                    let size = sp.dims()[dim];
+                    let divs: Vec<usize> =
+                        (1..=size).filter(|d| size % d == 0).collect();
+                    sp.split(dim, *rng.choose(&divs)).unwrap()
+                }
+                1 if sp.ndims() >= 2 => {
+                    let p = rng.below(sp.ndims() - 1);
+                    sp.merge(p, p + 1).unwrap()
+                }
+                2 => {
+                    let p = rng.below(sp.ndims());
+                    let q = rng.below(sp.ndims());
+                    sp.swap(p.min(q), p.max(q)).unwrap()
+                }
+                _ => {
+                    let dim = rng.below(sp.ndims());
+                    sp.decompose(dim, 1 + rng.below(3)).unwrap()
+                }
+            };
+        }
+        let total: usize = sp.dims().iter().product();
+        assert_eq!(total, nodes * gpus);
+        let dims = sp.dims().to_vec();
+        let mut seen = std::collections::HashSet::new();
+        let mut idx = vec![0i64; dims.len()];
+        'outer: loop {
+            let r = sp.resolve(&idx).unwrap();
+            assert!(r.0 < nodes && r.1 < gpus);
+            seen.insert(r);
+            let mut k = 0;
+            loop {
+                idx[k] += 1;
+                if (idx[k] as usize) < dims[k] {
+                    break;
+                }
+                idx[k] = 0;
+                k += 1;
+                if k == dims.len() {
+                    break 'outer;
+                }
+            }
+        }
+        assert_eq!(seen.len(), total, "transform chain lost bijectivity");
+    });
+}
+
+/// The DSL compiler never panics on fuzzed token soup (errors only).
+#[test]
+fn property_compiler_total_on_fuzzed_input() {
+    let vocab = [
+        "Task", "Region", "Layout", "IndexTaskMap", "InstanceLimit", "def",
+        "return", "Machine", "GPU", "CPU", "FBMEM", "ZCMEM", "*", ";", ",",
+        "(", ")", "[", "]", "{", "}", "=", "==", "%", "/", "+", "?", ":",
+        "foo", "bar", "42", "0", "SOA", "Align",
+    ];
+    let s = spec();
+    check(0xF022, 300, |rng: &mut Rng| {
+        let len = rng.below(40);
+        let src: Vec<&str> = (0..len).map(|_| *rng.choose(&vocab)).collect();
+        let src = src.join(" ");
+        // must never panic; errors are fine
+        let _ = MappingPolicy::compile(&src, &s);
+    });
+}

@@ -1,0 +1,123 @@
+//! End-to-end AOT path: Pallas/jax -> HLO text -> PJRT compile -> execute
+//! from rust, validated against plain-rust oracles.  Requires
+//! `make artifacts` to have produced artifacts/ (run from the repo root).
+
+use mapperopt::runtime::{tasks, ArtInput, ArtifactRuntime, CircuitState};
+use mapperopt::util::rng::Rng;
+
+fn runtime() -> ArtifactRuntime {
+    ArtifactRuntime::load(ArtifactRuntime::default_dir())
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn manifest_covers_all_entry_points() {
+    let rt = runtime();
+    let names: Vec<&str> = rt.entries().map(|e| e.name.as_str()).collect();
+    for want in [
+        "gemm_tile_step",
+        "stencil_step",
+        "circuit_cnc",
+        "circuit_dc",
+        "circuit_uv",
+        "pennant_hydro",
+    ] {
+        assert!(names.contains(&want), "missing artifact {want}");
+    }
+}
+
+#[test]
+fn gemm_tile_matches_rust_oracle() {
+    let rt = runtime();
+    let t = tasks::GEMM_TILE;
+    let mut rng = Rng::new(42);
+    let mut mk = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect()
+    };
+    let a = mk(t * t);
+    let b = mk(t * t);
+    let c = mk(t * t);
+    let got = tasks::gemm_tile_step(&rt, &a, &b, &c).unwrap();
+    let want = tasks::gemm_tile_ref(&a, &b, &c);
+    let mut max_err = 0f32;
+    for (g, w) in got.iter().zip(&want) {
+        max_err = max_err.max((g - w).abs() / w.abs().max(1.0));
+    }
+    assert!(max_err < 1e-4, "max rel err {max_err}");
+}
+
+#[test]
+fn circuit_artifacts_match_rust_oracle_over_ten_steps() {
+    let rt = runtime();
+    let mut pjrt_state = CircuitState::random(7);
+    let mut ref_state = pjrt_state.clone();
+    for step in 0..10 {
+        pjrt_state.step(&rt).unwrap();
+        ref_state.step_ref();
+        for (i, (a, b)) in pjrt_state
+            .voltage
+            .iter()
+            .zip(&ref_state.voltage)
+            .enumerate()
+        {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "step {step} node {i}: pjrt {a} vs ref {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn stencil_artifact_smooths_interior() {
+    let rt = runtime();
+    let (r, c) = (tasks::STENCIL_ROWS, tasks::STENCIL_COLS);
+    let mut rng = Rng::new(5);
+    let grid: Vec<f32> = (0..r * c).map(|_| rng.f64() as f32).collect();
+    let out = tasks::stencil_step(&rt, &grid).unwrap();
+    assert_eq!(out.len(), grid.len());
+    // boundary rows pass through
+    assert_eq!(&out[..c], &grid[..c]);
+    assert_eq!(&out[(r - 1) * c..], &grid[(r - 1) * c..]);
+    // interior variance decreases (smoothing)
+    let var = |v: &[f32]| {
+        let inner: Vec<f32> = (1..r - 1)
+            .flat_map(|i| (1..c - 1).map(move |j| v[i * c + j]))
+            .collect();
+        let m = inner.iter().sum::<f32>() / inner.len() as f32;
+        inner.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / inner.len() as f32
+    };
+    assert!(var(&out) < var(&grid));
+}
+
+#[test]
+fn hydro_artifact_conserves_mass() {
+    let rt = runtime();
+    let z = tasks::HYDRO_ZONES;
+    let mut rng = Rng::new(9);
+    let rho: Vec<f32> = (0..z).map(|_| 0.5 + rng.f64() as f32).collect();
+    let e: Vec<f32> = (0..z).map(|_| 0.5 + rng.f64() as f32).collect();
+    let vol: Vec<f32> = (0..z).map(|_| 1.0 + rng.f64() as f32).collect();
+    let dvol: Vec<f32> = (0..z).map(|_| (rng.f64() * 0.1 - 0.05) as f32).collect();
+    let (new_rho, new_e, new_p) = tasks::hydro_step(&rt, &rho, &e, &vol, &dvol).unwrap();
+    for i in 0..z {
+        let mass_before = rho[i] * vol[i];
+        let mass_after = new_rho[i] * (vol[i] + dvol[i]);
+        assert!(
+            (mass_before - mass_after).abs() / mass_before < 1e-4,
+            "zone {i} mass not conserved"
+        );
+        assert!(new_e[i].is_finite() && new_p[i].is_finite());
+    }
+}
+
+#[test]
+fn execute_rejects_wrong_arity_and_shape() {
+    let rt = runtime();
+    assert!(rt.execute("gemm_tile_step", &[]).is_err());
+    let bad = ArtInput::f32(vec![0.0; 4], &[2, 2]);
+    assert!(rt
+        .execute("gemm_tile_step", &[bad.clone(), bad.clone(), bad])
+        .is_err());
+    assert!(rt.execute("no_such_artifact", &[]).is_err());
+}

@@ -1,0 +1,116 @@
+//! Integration: simulator behaviour across apps x mappers, including the
+//! paper's qualitative performance relationships.
+
+use mapperopt::apps;
+use mapperopt::machine::MachineSpec;
+use mapperopt::mapping::{expert_dsl, random_mappers};
+use mapperopt::sim::run_mapper;
+
+fn spec() -> MachineSpec {
+    MachineSpec::p100_cluster()
+}
+
+#[test]
+fn expert_beats_random_by_a_lot_everywhere() {
+    // paper: "a well-designed mapper can achieve up to 10x speedup
+    // compared to random mapping strategies"
+    let s = spec();
+    for bench in apps::ALL_BENCHMARKS {
+        let app = apps::by_name(bench).unwrap();
+        let expert = run_mapper(&app, expert_dsl(bench).unwrap(), &s)
+            .unwrap()
+            .unwrap()
+            .throughput;
+        let mut random_scores = Vec::new();
+        for m in random_mappers(&app, 10, 99) {
+            let score = match run_mapper(&app, &m, &s).unwrap() {
+                Ok(metrics) => metrics.throughput,
+                Err(_) => 0.0, // failed mappers score zero
+            };
+            random_scores.push(score);
+        }
+        let avg = random_scores.iter().sum::<f64>() / random_scores.len() as f64;
+        assert!(
+            avg < 0.6 * expert,
+            "{bench}: random avg {avg} vs expert {expert}"
+        );
+    }
+}
+
+#[test]
+fn circuit_best_found_band_matches_paper() {
+    // the ZCMEM->FBMEM flip is worth 1.2-1.6x (paper: 1.34x)
+    let s = spec();
+    let app = apps::by_name("circuit").unwrap();
+    let expert = run_mapper(&app, expert_dsl("circuit").unwrap(), &s)
+        .unwrap()
+        .unwrap()
+        .throughput;
+    let flipped = "Task * GPU;\nRegion * * GPU FBMEM;\nLayout * * * SOA C_order Align==64;\n";
+    let best = run_mapper(&app, flipped, &s).unwrap().unwrap().throughput;
+    let ratio = best / expert;
+    assert!(
+        (1.15..=1.6).contains(&ratio),
+        "circuit FBMEM/ZCMEM ratio {ratio} outside the paper-shaped band"
+    );
+}
+
+#[test]
+fn matmul_index_mapping_headroom_matches_paper() {
+    // for most algorithms some index mapping beats the expert by 1.05-1.5x
+    let s = spec();
+    let block2d = "Task * GPU;\nRegion * * GPU FBMEM;\nLayout * * * SOA C_order Align==64;\n\
+                   mgpu = Machine(GPU);\n\
+                   def bb(Tuple ipoint, Tuple ispace) {\n\
+                     idx = ipoint * mgpu.size / ispace;\n\
+                     return mgpu[*idx];\n\
+                   }\nIndexTaskMap dgemm bb;";
+    let mut improved = 0;
+    for bench in ["cannon", "summa", "pumma", "cosma"] {
+        let app = apps::by_name(bench).unwrap();
+        let expert = run_mapper(&app, expert_dsl(bench).unwrap(), &s)
+            .unwrap()
+            .unwrap()
+            .throughput;
+        let alt = run_mapper(&app, block2d, &s).unwrap().unwrap().throughput;
+        if alt > expert * 1.04 {
+            improved += 1;
+        }
+        assert!(
+            alt < expert * 1.6,
+            "{bench}: improvement {:.2}x implausibly large",
+            alt / expert
+        );
+    }
+    assert!(improved >= 3, "index mapping must matter on 2D algorithms");
+}
+
+#[test]
+fn omp_between_cpu_and_gpu() {
+    let s = spec();
+    let app = apps::by_name("stencil").unwrap();
+    let gpu = "Task * GPU;\nRegion * * GPU FBMEM;\n";
+    let omp = "Task * OMP;\nRegion * * OMP SOCKMEM,SYSMEM;\n";
+    let cpu = "Task * CPU;\nRegion * * CPU SYSMEM;\n";
+    let tg = run_mapper(&app, gpu, &s).unwrap().unwrap().throughput;
+    let to = run_mapper(&app, omp, &s).unwrap().unwrap().throughput;
+    let tc = run_mapper(&app, cpu, &s).unwrap().unwrap().throughput;
+    assert!(tg > to && to > tc, "gpu {tg} > omp {to} > cpu {tc} violated");
+}
+
+#[test]
+fn communication_scales_with_worse_locality() {
+    let s = spec();
+    let app = apps::by_name("cannon").unwrap();
+    let local = expert_dsl("cannon").unwrap();
+    // adversarial: node flips every step neighbour -> more NIC traffic
+    let scattered = "Task * GPU;\nRegion * * GPU FBMEM;\nLayout * * * SOA C_order Align==64;\n\
+                     mgpu = Machine(GPU);\n\
+                     def scatter(Tuple ipoint, Tuple ispace) {\n\
+                       lin = ipoint[0] + ipoint[1] * 3;\n\
+                       return mgpu[lin % mgpu.size[0], (lin / 2) % mgpu.size[1]];\n\
+                     }\nIndexTaskMap dgemm scatter;";
+    let m_local = run_mapper(&app, local, &s).unwrap().unwrap();
+    let m_scatter = run_mapper(&app, scattered, &s).unwrap().unwrap();
+    assert!(m_scatter.comm_bytes >= m_local.comm_bytes);
+}
