@@ -1,0 +1,41 @@
+# mapperopt — build / test / experiment entry points.
+#
+#   make verify     tier-1: release build + full test suite
+#   make artifacts  AOT-lower the python task bodies to artifacts/*.hlo.txt
+#                   (needed only for the PJRT runtime path; tests skip
+#                   cleanly when artifacts/ is absent)
+#   make ci         what .github/workflows/ci.yml runs
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test verify fmt fmt-check clippy ci artifacts figures clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+verify: build test
+
+fmt:
+	$(CARGO) fmt --all
+
+fmt-check:
+	$(CARGO) fmt --all -- --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+ci: fmt-check clippy verify
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+figures:
+	$(CARGO) run --release -- all
+
+clean:
+	$(CARGO) clean
+	rm -rf results

@@ -51,6 +51,15 @@ fn main() {
     );
 
     // ---- L1/L2: run the application numerics through PJRT --------------
+    if !ArtifactRuntime::backend_available() {
+        println!("\n--- best mapper found ---\n{best_dsl}");
+        println!(
+            "e2e OK (L3 only): for the PJRT numerics leg, vendor the `xla` \
+             crate into rust/Cargo.toml, rebuild with `--features pjrt`, \
+             and run `make artifacts`"
+        );
+        return;
+    }
     let rt = match ArtifactRuntime::load(ArtifactRuntime::default_dir()) {
         Ok(rt) => rt,
         Err(e) => {

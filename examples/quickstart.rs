@@ -1,8 +1,9 @@
-//! Quickstart: the public API in ~60 lines.
+//! Quickstart: the public API in ~80 lines.
 //!
 //! 1. Build a benchmark app and the simulated P100 cluster.
 //! 2. Compile a mapper written in the DSL.
-//! 3. Execute and read the metrics.
+//! 3. Execute and read the metrics — including the out-of-order engine's
+//!    critical-path profile (which tasks actually bound the run).
 //! 4. Let the LLM-optimizer loop improve the mapper.
 //!
 //! Run: `cargo run --release --example quickstart`
@@ -11,7 +12,7 @@ use mapperopt::apps;
 use mapperopt::coordinator::{Coordinator, SearchAlgo};
 use mapperopt::feedback::FeedbackConfig;
 use mapperopt::machine::MachineSpec;
-use mapperopt::sim::run_mapper;
+use mapperopt::sim::{run_mapper, run_mapper_with, ExecMode};
 
 fn main() {
     // -- 1. an application + machine ------------------------------------
@@ -43,9 +44,26 @@ fn main() {
         metrics.utilization() * 100.0
     );
 
+    // -- 3b. the dependency-aware engine: overlap + critical path --------
+    let ooo = run_mapper_with(&app, mapper, &spec, ExecMode::OutOfOrder)
+        .expect("mapper compiles")
+        .expect("mapper executes");
+    println!(
+        "out-of-order engine: {:.1} {} ({:+.1}% via comm/compute overlap)",
+        ooo.throughput,
+        ooo.unit,
+        (ooo.throughput / metrics.throughput - 1.0) * 100.0
+    );
+    if let Some(profile) = &ooo.profile {
+        for line in profile.render().lines() {
+            println!("  {line}");
+        }
+    }
+
     // -- 4. the optimization loop ----------------------------------------
     let coord = Coordinator::new(spec);
-    let run = coord.run_optimizer(&app, SearchAlgo::Trace, FeedbackConfig::FULL, 42, 10);
+    let run =
+        coord.run_optimizer(&app, SearchAlgo::Trace, FeedbackConfig::PROFILE, 42, 10);
     for r in &run.records {
         println!(
             "iter {:2}: score {:8.1}  best {:8.1}  ({})",

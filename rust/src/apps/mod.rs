@@ -13,8 +13,8 @@ pub use matmul::{matmul, Algorithm, MatmulConfig};
 pub use pennant::{pennant, PennantConfig};
 pub use stencil::{stencil, StencilConfig};
 pub use taskgraph::{
-    Access, App, InitialDist, Launch, LayoutReq, Metric, RegionDecl, RegionReq,
-    TaskDecl,
+    task_dag, Access, App, DepMode, InitialDist, Launch, LayoutReq, Metric,
+    PointTask, RegionDecl, RegionReq, TaskDecl,
 };
 
 /// Build any benchmark by name (CLI / harness convenience).

@@ -6,6 +6,15 @@
 //! processor runs it, which memory each region argument lives in, and what
 //! layout the instance uses.  The executor ([`crate::sim`]) charges
 //! compute, memory-access, and transfer costs accordingly.
+//!
+//! [`task_dag`] flattens an app into per-point tasks and infers the
+//! happens-before edges between them from the launches' region
+//! read/write/reduce sets (Legion's logical dependence analysis, at tile
+//! granularity).  The dependency-aware engine in [`crate::sim`] schedules
+//! that DAG out of order; [`DepMode::Serialized`] instead emits full
+//! barrier edges, which reproduces bulk-synchronous timing exactly.
+
+use std::collections::HashMap;
 
 use crate::machine::ProcKind;
 
@@ -297,6 +306,112 @@ impl std::fmt::Debug for App {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Dependency inference (happens-before edges between launch points)
+// ---------------------------------------------------------------------------
+
+/// How the task DAG's edges are derived.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepMode {
+    /// Happens-before edges inferred from the launches' region
+    /// read/write/reduce sets at tile granularity (RAW, WAR, WAW;
+    /// reductions into the same tile commute with each other).
+    Inferred,
+    /// Full edges: every point task depends on every task of the previous
+    /// launch — the DAG encoding of the bulk-synchronous launch barrier.
+    Serialized,
+}
+
+/// One point of one index-task launch, in program order.
+#[derive(Debug, Clone)]
+pub struct PointTask {
+    /// Timestep the task belongs to.
+    pub step: usize,
+    /// Launch index within the step.
+    pub launch: usize,
+    /// Index into `App::tasks`.
+    pub task: usize,
+    /// The launch point.
+    pub point: Vec<i64>,
+}
+
+/// Per-(region, tile) dependence bookkeeping during DAG construction.
+#[derive(Default)]
+struct TileState {
+    last_writer: Option<usize>,
+    /// Readers since the last write (WAR sources).
+    readers: Vec<usize>,
+    /// Pending reductions since the last write (commute with each other,
+    /// act as writers for subsequent reads/writes).
+    reducers: Vec<usize>,
+}
+
+/// Flatten `steps` (one `Vec<Launch>` per timestep, as produced by
+/// [`App::launches`]) into per-point tasks plus predecessor lists.
+/// Task ids are assigned in program order — (step, launch, point) — so the
+/// id order is a topological order of the returned DAG.
+pub fn task_dag(
+    app: &App,
+    steps: &[Vec<Launch>],
+    mode: DepMode,
+) -> (Vec<PointTask>, Vec<Vec<usize>>) {
+    let mut tasks: Vec<PointTask> = Vec::new();
+    let mut preds: Vec<Vec<usize>> = Vec::new();
+    let mut tiles: HashMap<(usize, i64), TileState> = HashMap::new();
+    let mut prev_launch: Vec<usize> = Vec::new();
+
+    for (step, launches) in steps.iter().enumerate() {
+        for (li, launch) in launches.iter().enumerate() {
+            let first_id = tasks.len();
+            for point in launch.points() {
+                let id = tasks.len();
+                let mut dd: Vec<usize> = Vec::new();
+                match mode {
+                    DepMode::Serialized => dd.extend_from_slice(&prev_launch),
+                    DepMode::Inferred => {
+                        for rr in &launch.regions {
+                            let region = &app.regions[rr.region];
+                            let lin = region.tile_lin(&(rr.tile_of)(&point));
+                            let ts = tiles.entry((rr.region, lin)).or_default();
+                            match rr.access {
+                                Access::Read => {
+                                    dd.extend(ts.last_writer);
+                                    dd.extend_from_slice(&ts.reducers);
+                                    ts.readers.push(id);
+                                }
+                                Access::Reduce => {
+                                    dd.extend(ts.last_writer);
+                                    dd.extend_from_slice(&ts.readers);
+                                    ts.reducers.push(id);
+                                }
+                                Access::Write | Access::ReadWrite => {
+                                    dd.extend(ts.last_writer);
+                                    dd.extend_from_slice(&ts.readers);
+                                    dd.extend_from_slice(&ts.reducers);
+                                    ts.readers.clear();
+                                    ts.reducers.clear();
+                                    ts.last_writer = Some(id);
+                                }
+                            }
+                        }
+                    }
+                }
+                dd.sort_unstable();
+                dd.dedup();
+                dd.retain(|&p| p != id);
+                preds.push(dd);
+                tasks.push(PointTask { step, launch: li, task: launch.task, point });
+            }
+            // an empty launch leaves the barrier where it was (bulk-sync
+            // keeps its clock), so it must not clear the edge source
+            if mode == DepMode::Serialized && tasks.len() > first_id {
+                prev_launch = (first_id..tasks.len()).collect();
+            }
+        }
+    }
+    (tasks, preds)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -376,5 +491,76 @@ mod tests {
             vec![(p[0] + 1) % 4, p[1]]
         });
         assert_eq!((r.tile_of)(&[3, 2]), vec![0, 2]);
+    }
+
+    fn dag_of(app: &App, mode: DepMode) -> (Vec<PointTask>, Vec<Vec<usize>>) {
+        let steps: Vec<Vec<Launch>> = (0..app.steps).map(|s| app.launches(s)).collect();
+        task_dag(app, &steps, mode)
+    }
+
+    #[test]
+    fn serialized_dag_encodes_launch_barriers() {
+        let app = tiny_app(); // 3 steps x 1 launch x 4 points
+        let (tasks, preds) = dag_of(&app, DepMode::Serialized);
+        assert_eq!(tasks.len(), 12);
+        for i in 0..4 {
+            assert!(preds[i].is_empty(), "first launch must be root");
+        }
+        for i in 4..8 {
+            assert_eq!(preds[i], vec![0, 1, 2, 3]);
+        }
+        for i in 8..12 {
+            assert_eq!(preds[i], vec![4, 5, 6, 7]);
+        }
+    }
+
+    #[test]
+    fn inferred_dag_chains_readwrite_tiles() {
+        // tiny_app: one RW region, identity tiling -> per-point chains
+        let app = tiny_app();
+        let (tasks, preds) = dag_of(&app, DepMode::Inferred);
+        assert_eq!(tasks.len(), 12);
+        for i in 0..4 {
+            assert!(preds[i].is_empty());
+        }
+        for i in 4..12 {
+            // point p at step s depends only on point p at step s-1
+            assert_eq!(preds[i], vec![i - 4]);
+        }
+    }
+
+    #[test]
+    fn inferred_circuit_deps_follow_ghost_neighbourhood() {
+        // CNC ids 0..8, DC ids 8..16, UV ids 16..24 (step 0), CNC' 24..32.
+        let app = crate::apps::circuit(crate::apps::CircuitConfig::default());
+        let (tasks, preds) = dag_of(&app, DepMode::Inferred);
+        assert_eq!(tasks[8].task, 1, "id 8 is distribute_charge piece 0");
+        // DC piece 0 reduces shared tiles 0 and 1, whose readers are the
+        // CNC tasks of pieces 7, 0, 1 (ghost reads wrap around).
+        assert_eq!(preds[8], vec![0, 1, 7]);
+        // UV piece 0 writes shared tile 0: WAR on CNC 7/0, plus the
+        // pending reductions of DC 7/0 and its private-tile chain.
+        assert_eq!(preds[16], vec![0, 7, 8, 15]);
+        // Next step's CNC piece 0 reads what UV pieces 0/1 wrote and
+        // rewrites its wires (read by DC 0).
+        assert_eq!(preds[24], vec![0, 8, 16, 17]);
+    }
+
+    #[test]
+    fn inferred_cannon_is_per_point_chains() {
+        // A/B tiles are read-only; only the C tile chains a point to its
+        // own previous step -> 16 independent pipelines.
+        let app = crate::apps::matmul(
+            crate::apps::Algorithm::Cannon,
+            crate::apps::MatmulConfig::default(),
+        );
+        let (tasks, preds) = dag_of(&app, DepMode::Inferred);
+        assert_eq!(tasks.len(), 64); // 4 steps x 16 points
+        for i in 0..16 {
+            assert!(preds[i].is_empty());
+        }
+        for i in 16..64 {
+            assert_eq!(preds[i], vec![i - 16]);
+        }
     }
 }

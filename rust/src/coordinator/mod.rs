@@ -5,6 +5,13 @@
 //! orchestrates multi-run optimization campaigns across worker threads —
 //! the "leader" of the three-layer architecture.  The CLI and the
 //! experiment harness drive everything through this type.
+//!
+//! Evaluations run on the dependency-aware engine in
+//! [`ExecMode::Serialized`] by default: timing is identical to the legacy
+//! bulk-synchronous loop, but every evaluation also yields a
+//! [`PerfProfile`] (see [`Coordinator::profile`]) that the profile
+//! feedback tier renders into the optimizer prompt.  Use
+//! [`Coordinator::with_mode`] for [`ExecMode::OutOfOrder`] runs.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -16,7 +23,7 @@ use crate::machine::MachineSpec;
 use crate::optimizer::{
     AppInfo, IterationRecord, Optimizer, OproOptimizer, TraceOptimizer,
 };
-use crate::sim::run_mapper;
+use crate::sim::{run_mapper_with, ExecMode, PerfProfile};
 
 /// Which search algorithm to run (Section 5's two optimizers).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,28 +67,46 @@ pub struct CoordinatorStats {
 /// The optimization service.
 pub struct Coordinator {
     pub spec: MachineSpec,
+    mode: ExecMode,
+    /// Fingerprint of `spec` folded into every cache key, so evals against
+    /// different machines never alias (multi-machine campaigns share code).
+    spec_fp: u64,
     cache: Mutex<HashMap<u64, SystemFeedback>>,
     pub stats: CoordinatorStats,
 }
 
 impl Coordinator {
+    /// Coordinator on the dependency-aware engine with barrier edges:
+    /// bulk-synchronous timing + critical-path profiles.
     pub fn new(spec: MachineSpec) -> Coordinator {
+        Coordinator::with_mode(spec, ExecMode::Serialized)
+    }
+
+    /// Coordinator with an explicit simulator execution model.
+    pub fn with_mode(spec: MachineSpec, mode: ExecMode) -> Coordinator {
+        let spec_fp = fnv1a(&[format!("{spec:?}").as_bytes()]);
         Coordinator {
             spec,
+            mode,
+            spec_fp,
             cache: Mutex::new(HashMap::new()),
             stats: CoordinatorStats::default(),
         }
     }
 
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
     /// Evaluate one DSL mapper against an app (cached by content hash).
     pub fn evaluate(&self, app: &App, dsl: &str) -> SystemFeedback {
-        let key = fnv1a(app.name.as_bytes(), dsl.as_bytes());
+        let key = eval_key(app_fingerprint(app), dsl, self.spec_fp, self.mode);
         if let Some(hit) = self.cache.lock().unwrap().get(&key) {
             self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
             return hit.clone();
         }
         self.stats.evals.fetch_add(1, Ordering::Relaxed);
-        let fb = match run_mapper(app, dsl, &self.spec) {
+        let fb = match run_mapper_with(app, dsl, &self.spec, self.mode) {
             Err(ce) => SystemFeedback::CompileError(ce.to_string()),
             Ok(Err(xe)) => SystemFeedback::ExecutionError(xe.to_string()),
             Ok(Ok(m)) => SystemFeedback::from_metrics(&m),
@@ -93,6 +118,12 @@ impl Coordinator {
     /// Throughput of one mapper, or 0.0 on any error.
     pub fn throughput(&self, app: &App, dsl: &str) -> f64 {
         self.evaluate(app, dsl).score()
+    }
+
+    /// Critical-path profile of one evaluation (cached like `evaluate`);
+    /// None on compile/execution errors or under `ExecMode::BulkSync`.
+    pub fn profile(&self, app: &App, dsl: &str) -> Option<PerfProfile> {
+        self.evaluate(app, dsl).profile().cloned()
     }
 
     /// Run one optimizer for `iters` iterations.
@@ -166,14 +197,52 @@ impl Coordinator {
     }
 }
 
-/// FNV-1a over two byte strings (cache key).
-fn fnv1a(a: &[u8], b: &[u8]) -> u64 {
+/// FNV-1a over length-prefixed byte fields.  The length prefix keeps
+/// field boundaries in the hash: `["ab", "c"]` and `["a", "bc"]` feed
+/// different byte streams (the unprefixed version collided on exactly
+/// that, aliasing cache entries across (app, dsl) pairs).
+fn fnv1a(fields: &[&[u8]]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &byte in a.iter().chain(b) {
-        h ^= byte as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    let mut eat = |bytes: &[u8]| {
+        for &byte in bytes {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    for field in fields {
+        eat(&(field.len() as u64).to_le_bytes());
+        eat(field);
     }
     h
+}
+
+/// Structural fingerprint of an app: name, steps, metric, and the task /
+/// region declarations.  Every config knob (problem sizes, tile grids,
+/// flops) manifests in these fields, so two same-named apps built from
+/// different configs get different cache keys.
+fn app_fingerprint(app: &App) -> u64 {
+    let mut desc = format!(
+        "{}|{}|{:?}|{:?}",
+        app.name, app.steps, app.metric, app.initial_dist
+    );
+    for t in &app.tasks {
+        desc.push_str(&format!("|t:{}:{}", t.name, t.flops_per_point));
+    }
+    for r in &app.regions {
+        desc.push_str(&format!("|r:{}:{}:{}:{:?}", r.name, r.tile_bytes, r.fields, r.tiles));
+    }
+    fnv1a(&[desc.as_bytes()])
+}
+
+/// Cache key of one evaluation: (app fingerprint, dsl source, machine
+/// fingerprint, execution mode), all length-delimited.
+fn eval_key(app_fp: u64, dsl: &str, spec_fp: u64, mode: ExecMode) -> u64 {
+    fnv1a(&[
+        &app_fp.to_le_bytes(),
+        dsl.as_bytes(),
+        &spec_fp.to_le_bytes(),
+        mode.name().as_bytes(),
+    ])
 }
 
 #[cfg(test)]
@@ -224,5 +293,85 @@ mod tests {
         let r = c.run_optimizer(&app, SearchAlgo::Opro, FeedbackConfig::SYSTEM, 5, 5);
         assert_eq!(r.records.len(), 5);
         assert_eq!(r.algo, "opro");
+    }
+
+    #[test]
+    fn cache_key_fields_are_length_delimited() {
+        // the old two-stream hash collided on ("ab","c") vs ("a","bc")
+        assert_ne!(
+            fnv1a(&[b"ab", b"c"]),
+            fnv1a(&[b"a", b"bc"]),
+            "field boundaries must enter the hash"
+        );
+        assert_ne!(fnv1a(&[b"ab"]), fnv1a(&[b"a", b"b"]));
+        assert_eq!(fnv1a(&[b"a", b"bc"]), fnv1a(&[b"a", b"bc"]));
+    }
+
+    #[test]
+    fn cache_key_covers_machine_mode_and_app_config() {
+        let circuit = app_fingerprint(&apps::by_name("circuit").unwrap());
+        let paper = fnv1a(&[format!("{:?}", MachineSpec::p100_cluster()).as_bytes()]);
+        let small = fnv1a(&[format!("{:?}", MachineSpec::small()).as_bytes()]);
+        assert_ne!(
+            eval_key(circuit, "Task * GPU;", paper, ExecMode::Serialized),
+            eval_key(circuit, "Task * GPU;", small, ExecMode::Serialized)
+        );
+        assert_ne!(
+            eval_key(circuit, "Task * GPU;", paper, ExecMode::Serialized),
+            eval_key(circuit, "Task * GPU;", paper, ExecMode::OutOfOrder)
+        );
+        // same app name, different problem size -> different fingerprint
+        let cfg = apps::CircuitConfig {
+            wires: 2 * apps::CircuitConfig::default().wires,
+            ..Default::default()
+        };
+        assert_ne!(circuit, app_fingerprint(&apps::circuit(cfg)));
+    }
+
+    #[test]
+    fn evaluate_exposes_critical_path_profile() {
+        let c = coord();
+        assert_eq!(c.mode(), ExecMode::Serialized);
+        let app = apps::by_name("circuit").unwrap();
+        let dsl = expert_dsl("circuit").unwrap();
+        let p = c.profile(&app, dsl).expect("serialized engine attaches profiles");
+        assert_eq!(p.engine, "serialized");
+        assert!(p.critical_path_s > 0.0);
+        assert!(!p.bottlenecks.is_empty());
+        // errors yield no profile
+        assert!(c.profile(&app, "Task * GPU;\nRegion * * GPU ZCMEM;\n").is_none());
+    }
+
+    #[test]
+    fn serialized_default_matches_legacy_bulk_sync_scores() {
+        // the engine swap must not move any evaluation result
+        let ser = coord();
+        let bulk = Coordinator::with_mode(MachineSpec::p100_cluster(), ExecMode::BulkSync);
+        for bench in ["circuit", "cannon", "johnson"] {
+            let app = apps::by_name(bench).unwrap();
+            let dsl = expert_dsl(bench).unwrap();
+            assert_eq!(
+                ser.throughput(&app, dsl),
+                bulk.throughput(&app, dsl),
+                "{bench}: serialized engine shifted the score"
+            );
+        }
+    }
+
+    #[test]
+    fn profile_feedback_runs_are_deterministic() {
+        let c = coord();
+        let runs =
+            c.run_many("circuit", SearchAlgo::Trace, FeedbackConfig::PROFILE, 9, 2, 5);
+        let again =
+            c.run_many("circuit", SearchAlgo::Trace, FeedbackConfig::PROFILE, 9, 2, 5);
+        for (a, b) in runs.iter().zip(&again) {
+            assert_eq!(a.trajectory(), b.trajectory());
+        }
+        // the profile tier actually reaches the prompt on successful evals
+        let any_profile_line = runs.iter().flat_map(|r| &r.records).any(|rec| {
+            rec.score > 0.0 && rec.feedback.text().contains("Critical Path:")
+        });
+        assert!(any_profile_line, "no record carried critical-path lines");
     }
 }

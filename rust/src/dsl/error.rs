@@ -2,44 +2,62 @@
 //! (Table 2 / A1 of the paper) keyword-matches these exact phrasings to
 //! produce explanations and suggestions for the LLM optimizer.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Compile-time errors (lexing, parsing, semantic analysis).
-#[derive(Debug, Clone, PartialEq, Eq, Error)]
+/// (Display is hand-rolled: the crate builds with zero dependencies, so
+/// thiserror is unavailable.)
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CompileError {
     /// The paper's canonical syntax-error feedback: a python-style colon in
     /// a function definition ("Syntax error, unexpected :, expecting {").
-    #[error("Syntax error, unexpected {found}, expecting {expected}")]
     Syntax { found: String, expected: String, line: usize },
-
-    #[error("Unknown token '{0}' at line {1}")]
     UnknownToken(String, usize),
-
-    #[error("IndexTaskMap's function undefined: {0}")]
     IndexMapFuncUndefined(String),
-
-    #[error("SingleTaskMap's function undefined: {0}")]
     SingleMapFuncUndefined(String),
-
     /// Unresolved identifier in a mapping function ("mgpu not found").
-    #[error("{0} not found")]
     NameNotFound(String),
-
-    #[error("Unknown processor kind '{0}' at line {1}")]
     UnknownProc(String, usize),
-
-    #[error("Unknown memory kind '{0}' at line {1}")]
     UnknownMemory(String, usize),
-
-    #[error("Unknown layout constraint '{0}' at line {1}")]
     UnknownConstraint(String, usize),
-
-    #[error("Duplicate function definition '{0}'")]
     DuplicateFunc(String),
-
-    #[error("{0}")]
     Other(String),
 }
+
+impl fmt::Display for CompileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CompileError::Syntax { found, expected, .. } => {
+                write!(f, "Syntax error, unexpected {found}, expecting {expected}")
+            }
+            CompileError::UnknownToken(t, line) => {
+                write!(f, "Unknown token '{t}' at line {line}")
+            }
+            CompileError::IndexMapFuncUndefined(name) => {
+                write!(f, "IndexTaskMap's function undefined: {name}")
+            }
+            CompileError::SingleMapFuncUndefined(name) => {
+                write!(f, "SingleTaskMap's function undefined: {name}")
+            }
+            CompileError::NameNotFound(name) => write!(f, "{name} not found"),
+            CompileError::UnknownProc(p, line) => {
+                write!(f, "Unknown processor kind '{p}' at line {line}")
+            }
+            CompileError::UnknownMemory(m, line) => {
+                write!(f, "Unknown memory kind '{m}' at line {line}")
+            }
+            CompileError::UnknownConstraint(c, line) => {
+                write!(f, "Unknown layout constraint '{c}' at line {line}")
+            }
+            CompileError::DuplicateFunc(name) => {
+                write!(f, "Duplicate function definition '{name}'")
+            }
+            CompileError::Other(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
 
 impl CompileError {
     pub fn syntax(found: impl Into<String>, expected: impl Into<String>, line: usize) -> Self {
@@ -50,26 +68,34 @@ impl CompileError {
 /// Runtime errors raised while *evaluating* a mapping function or applying
 /// the policy during execution.  These surface as Execution Errors in the
 /// paper's feedback taxonomy.
-#[derive(Debug, Clone, PartialEq, Eq, Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EvalError {
-    #[error("Slice processor index out of bound")]
     IndexOutOfBound,
-
-    #[error("{0} not found")]
     NameNotFound(String),
-
-    #[error("type error: {0}")]
     TypeError(String),
-
-    #[error("division by zero in mapping function")]
     DivByZero,
-
-    #[error("mapping function '{0}' did not return a processor")]
     NoProcessor(String),
-
-    #[error("transformation error: {0}")]
     BadTransform(String),
 }
+
+impl fmt::Display for EvalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EvalError::IndexOutOfBound => {
+                write!(f, "Slice processor index out of bound")
+            }
+            EvalError::NameNotFound(name) => write!(f, "{name} not found"),
+            EvalError::TypeError(msg) => write!(f, "type error: {msg}"),
+            EvalError::DivByZero => write!(f, "division by zero in mapping function"),
+            EvalError::NoProcessor(name) => {
+                write!(f, "mapping function '{name}' did not return a processor")
+            }
+            EvalError::BadTransform(msg) => write!(f, "transformation error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EvalError {}
 
 #[cfg(test)]
 mod tests {

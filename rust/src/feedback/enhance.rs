@@ -1,18 +1,36 @@
-//! Enhanced feedback via keyword matching (paper Table 2 / Table A1).
+//! Enhanced feedback via keyword matching (paper Table 2 / Table A1),
+//! plus the analytics tier: when the dependency-aware engine attaches a
+//! [`PerfProfile`], the profile's critical-path / bottleneck / idle /
+//! slack lines are rendered into the feedback text under
+//! [`FeedbackConfig::profile`] — richer-than-scalar signals for the
+//! optimizer's credit assignment.
 
-use crate::sim::Metrics;
+use crate::sim::{Metrics, PerfProfile};
 
-/// The three system-feedback categories of Section 4.2.
+/// The three system-feedback categories of Section 4.2.  Performance
+/// feedback optionally carries the engine's critical-path profile.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SystemFeedback {
     CompileError(String),
     ExecutionError(String),
-    Performance { line: String, value: f64 },
+    Performance { line: String, value: f64, profile: Option<PerfProfile> },
 }
 
 impl SystemFeedback {
     pub fn from_metrics(m: &Metrics) -> SystemFeedback {
-        SystemFeedback::Performance { line: m.feedback_line(), value: m.throughput }
+        SystemFeedback::Performance {
+            line: m.feedback_line(),
+            value: m.throughput,
+            profile: m.profile.clone(),
+        }
+    }
+
+    /// The attached critical-path profile, when the run produced one.
+    pub fn profile(&self) -> Option<&PerfProfile> {
+        match self {
+            SystemFeedback::Performance { profile, .. } => profile.as_ref(),
+            _ => None,
+        }
     }
 
     /// The raw feedback line shown to the optimizer.
@@ -36,27 +54,44 @@ impl SystemFeedback {
     }
 }
 
-/// Which feedback tiers the optimizer receives (Fig. 8 ablation knob).
+/// Which feedback tiers the optimizer receives (Fig. 8 ablation knob,
+/// plus the critical-path analytics tier).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FeedbackConfig {
     pub explain: bool,
     pub suggest: bool,
+    /// Render the engine's critical-path / bottleneck / idle / slack lines
+    /// into the feedback text (requires a profile-producing [`ExecMode`],
+    /// i.e. the dependency-aware engine).
+    ///
+    /// [`ExecMode`]: crate::sim::ExecMode
+    pub profile: bool,
 }
 
 impl FeedbackConfig {
     /// System feedback only.
-    pub const SYSTEM: FeedbackConfig = FeedbackConfig { explain: false, suggest: false };
+    pub const SYSTEM: FeedbackConfig =
+        FeedbackConfig { explain: false, suggest: false, profile: false };
     /// System + error explanations.
-    pub const EXPLAIN: FeedbackConfig = FeedbackConfig { explain: true, suggest: false };
+    pub const EXPLAIN: FeedbackConfig =
+        FeedbackConfig { explain: true, suggest: false, profile: false };
     /// System + explanations + suggestions (the full Trace configuration).
-    pub const FULL: FeedbackConfig = FeedbackConfig { explain: true, suggest: true };
+    pub const FULL: FeedbackConfig =
+        FeedbackConfig { explain: true, suggest: true, profile: false };
+    /// Everything, plus critical-path analytics.
+    pub const PROFILE: FeedbackConfig =
+        FeedbackConfig { explain: true, suggest: true, profile: true };
 
     pub fn label(&self) -> &'static str {
-        match (self.explain, self.suggest) {
-            (false, false) => "System",
-            (true, false) => "System+Explain",
-            (true, true) => "System+Explain+Suggest",
-            (false, true) => "System+Suggest",
+        match (self.explain, self.suggest, self.profile) {
+            (false, false, false) => "System",
+            (true, false, false) => "System+Explain",
+            (true, true, false) => "System+Explain+Suggest",
+            (false, true, false) => "System+Suggest",
+            (false, false, true) => "System+Profile",
+            (true, false, true) => "System+Explain+Profile",
+            (true, true, true) => "System+Explain+Suggest+Profile",
+            (false, true, true) => "System+Suggest+Profile",
         }
     }
 }
@@ -65,6 +100,8 @@ impl FeedbackConfig {
 #[derive(Debug, Clone, PartialEq)]
 pub struct Feedback {
     pub system: SystemFeedback,
+    /// Critical-path / bottleneck / idle / slack lines (profile tier).
+    pub profile: Option<String>,
     pub explain: Option<String>,
     pub suggest: Option<String>,
 }
@@ -73,6 +110,10 @@ impl Feedback {
     /// The text handed to the LLM optimizer.
     pub fn text(&self) -> String {
         let mut out = self.system.line();
+        if let Some(p) = &self.profile {
+            out.push('\n');
+            out.push_str(p);
+        }
         if let Some(e) = &self.explain {
             out.push_str("\nExplanation: ");
             out.push_str(e);
@@ -154,6 +195,7 @@ pub fn enhance(system: &SystemFeedback, cfg: FeedbackConfig) -> Feedback {
 
     Feedback {
         system: system.clone(),
+        profile: if cfg.profile { system.profile().map(|p| p.render()) } else { None },
         explain: if cfg.explain { explain.map(String::from) } else { None },
         suggest: if cfg.suggest { suggest } else { None },
     }
@@ -243,6 +285,7 @@ mod tests {
             &SystemFeedback::Performance {
                 line: "Performance Metric: Execution time is 0.03s.".into(),
                 value: 33.0,
+                profile: None,
             },
             FeedbackConfig::FULL,
         );
@@ -255,10 +298,72 @@ mod tests {
             &SystemFeedback::Performance {
                 line: "Performance Metric: Achieved throughput = 4877 GFLOPS".into(),
                 value: 4877.0,
+                profile: None,
             },
             FeedbackConfig::FULL,
         );
         assert!(f.suggest.unwrap().contains("different IndexTaskMap"));
+    }
+
+    fn perf_with_profile() -> SystemFeedback {
+        use crate::sim::{CritEntry, PerfProfile};
+        SystemFeedback::Performance {
+            line: "Performance Metric: Execution time is 0.0300s.".into(),
+            value: 33.0,
+            profile: Some(PerfProfile {
+                engine: "out-of-order",
+                critical_path_s: 0.0295,
+                critical_tasks: 40,
+                total_tasks: 240,
+                bottlenecks: vec![CritEntry {
+                    task: "calculate_new_currents".into(),
+                    instances: 10,
+                    seconds: 0.021,
+                    share: 0.71,
+                }],
+                mean_idle: 0.34,
+                worst_idle: 0.61,
+                worst_idle_proc: "GPU3@n1".into(),
+                mean_slack_s: 0.0011,
+                zero_slack_tasks: 40,
+            }),
+        }
+    }
+
+    #[test]
+    fn profile_tier_renders_critical_path_lines() {
+        let f = enhance(&perf_with_profile(), FeedbackConfig::PROFILE);
+        let t = f.text();
+        assert!(t.contains("Critical Path: 0.0295s over 40 of 240 tasks."), "{t}");
+        assert!(
+            t.contains("Bottleneck Tasks: calculate_new_currents 71%"),
+            "{t}"
+        );
+        assert!(t.contains("Processor Idle: mean 34%, worst 61% (GPU3@n1)."), "{t}");
+        assert!(t.contains("Slack: mean 0.0011s; 40 of 240 tasks have zero slack."), "{t}");
+        // the scalar tiers are still there
+        assert!(t.contains("Performance Metric:"));
+        assert!(t.contains("Suggestion:"));
+    }
+
+    #[test]
+    fn profile_tier_stripped_without_config() {
+        let f = enhance(&perf_with_profile(), FeedbackConfig::FULL);
+        assert!(f.profile.is_none());
+        assert!(!f.text().contains("Critical Path"));
+    }
+
+    #[test]
+    fn profile_config_without_engine_profile_is_harmless() {
+        let f = enhance(
+            &SystemFeedback::Performance {
+                line: "Performance Metric: Execution time is 0.03s.".into(),
+                value: 33.0,
+                profile: None,
+            },
+            FeedbackConfig::PROFILE,
+        );
+        assert!(f.profile.is_none());
     }
 
     #[test]
@@ -289,5 +394,6 @@ mod tests {
         assert_eq!(FeedbackConfig::SYSTEM.label(), "System");
         assert_eq!(FeedbackConfig::EXPLAIN.label(), "System+Explain");
         assert_eq!(FeedbackConfig::FULL.label(), "System+Explain+Suggest");
+        assert_eq!(FeedbackConfig::PROFILE.label(), "System+Explain+Suggest+Profile");
     }
 }

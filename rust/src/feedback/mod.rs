@@ -1,4 +1,4 @@
-//! Feedback engine (S7): system feedback + enhanced feedback.
+//! Feedback engine (S7): system feedback + enhanced feedback + analytics.
 //!
 //! Reproduces the paper's three-tier feedback design (Section 4.2,
 //! Table 2 / Table A1): raw **system** feedback (compile error, execution
@@ -6,6 +6,14 @@
 //! errors, and optional **suggestions** for mapper modifications.
 //! Enhancement is keyword matching over the system-feedback text — exactly
 //! as the paper implements it.
+//!
+//! A fourth, analytics-informed tier goes beyond the paper's scalar
+//! metric: when the dependency-aware engine runs, performance feedback
+//! carries a [`crate::sim::PerfProfile`] and
+//! [`FeedbackConfig::PROFILE`] renders critical-path attribution,
+//! per-task bottleneck shares, processor idle fractions, and slack into
+//! the prompt — so the optimizer sees *which tasks actually bound the
+//! run*, not just how long it took.
 
 pub mod enhance;
 

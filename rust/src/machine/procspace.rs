@@ -36,13 +36,25 @@ pub struct ProcSpace {
 }
 
 /// Errors surface as execution errors in the paper's feedback taxonomy.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+/// (Display is hand-rolled; the crate builds with zero dependencies.)
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SpaceError {
-    #[error("Slice processor index out of bound")]
     IndexOutOfBound,
-    #[error("transformation error: {0}")]
     BadTransform(String),
 }
+
+impl std::fmt::Display for SpaceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpaceError::IndexOutOfBound => {
+                write!(f, "Slice processor index out of bound")
+            }
+            SpaceError::BadTransform(msg) => write!(f, "transformation error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SpaceError {}
 
 impl ProcSpace {
     /// The DSL's `Machine(Proc)`: 2D (nodes, procs-per-node).

@@ -90,7 +90,7 @@ fn usage() {
     println!(
         "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite>\n\
          flags: --app NAME --mapper FILE --algo trace|opro \
-         --feedback system|explain|full --iters N --runs N --seed S"
+         --feedback system|explain|full|profile --iters N --runs N --seed S"
     );
 }
 
@@ -128,6 +128,7 @@ fn cmd_optimize(coord: &Coordinator, args: &Args, p: ExpParams) -> ExitCode {
     let cfg = match args.str_or("feedback", "full") {
         "system" => FeedbackConfig::SYSTEM,
         "explain" => FeedbackConfig::EXPLAIN,
+        "profile" => FeedbackConfig::PROFILE,
         _ => FeedbackConfig::FULL,
     };
     let expert = coord.throughput(&app, expert_dsl(name).unwrap());

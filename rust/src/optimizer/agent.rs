@@ -32,6 +32,9 @@ pub struct TaskInfo {
     pub variants: Vec<ProcKind>,
     /// Launch-domain dimensionality (0 = single task).
     pub index_dims: usize,
+    /// FLOPs one launch point executes — lets the optimizer guess which
+    /// task dominates when no critical-path profile is available.
+    pub flops_per_point: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -58,6 +61,7 @@ impl AppInfo {
                         } else {
                             0
                         },
+                        flops_per_point: t.flops_per_point,
                     });
                 }
                 for rr in &launch.regions {

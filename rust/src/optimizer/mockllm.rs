@@ -97,6 +97,16 @@ impl MockLlm {
         }
 
         // --- performance feedback: exploration ---------------------------
+        // critical-path profile present: the analytics tier names the task
+        // that actually bounds the run, so act on *that* block most of the
+        // time — the profile's whole point is sharper credit assignment
+        if let Some(task) = parse_bottleneck(t) {
+            if rng.chance(0.6) {
+                self.focus_task(g, info, &task, rng);
+                return;
+            }
+        }
+
         // follow the suggestion most of the time; keep some general
         // exploration so non-suggested blocks stay reachable
         if t.contains("Suggestion:") && rng.chance(0.7) {
@@ -219,6 +229,39 @@ impl MockLlm {
         }
     }
 
+    /// Act on the top critical-path bottleneck: promote it to the GPU if
+    /// it is not there, otherwise re-map how its points are distributed.
+    /// Falls back to the heaviest index task when the named task is
+    /// unknown or not index-launched (the profile may name an aggregate
+    /// or a single task whose distribution cannot be changed).
+    fn focus_task(&self, g: &mut AgentGenome, info: &AppInfo, task: &str, rng: &mut Rng) {
+        if g
+            .task_procs
+            .get(task)
+            .is_some_and(|p| p.first() != Some(&ProcKind::Gpu))
+        {
+            g.task_procs
+                .insert(task.to_string(), vec![ProcKind::Gpu, ProcKind::Cpu]);
+            return;
+        }
+        let ti = info
+            .tasks
+            .iter()
+            .find(|ti| ti.name == task && ti.index_dims > 0)
+            .or_else(|| {
+                info.tasks.iter().filter(|t| t.index_dims > 0).max_by(|a, b| {
+                    a.flops_per_point.partial_cmp(&b.flops_per_point).unwrap()
+                })
+            });
+        if let Some(ti) = ti {
+            g.index_maps
+                .insert(ti.name.clone(), random_index_gene(ti.index_dims, rng));
+        } else {
+            // app with no index launches at all: nothing to re-map
+            self.mutate_block(g, info, Block::TaskProcs, rng);
+        }
+    }
+
     /// Apply the fix a suggestion describes.
     fn targeted_fix(
         &self,
@@ -338,6 +381,13 @@ impl MockLlm {
             }
         }
     }
+}
+
+/// Top bottleneck task named by the profile tier's "Bottleneck Tasks:"
+/// line, if present.
+fn parse_bottleneck(text: &str) -> Option<String> {
+    let rest = text.lines().find_map(|l| l.strip_prefix("Bottleneck Tasks: "))?;
+    Some(rest.split_whitespace().next()?.to_string())
 }
 
 /// Which decision block an execution-error text implicates.
@@ -465,6 +515,7 @@ mod tests {
         let sys = SystemFeedback::Performance {
             line: "Performance Metric: Execution time is 0.5s.".into(),
             value: 2.0,
+            profile: None,
         };
         let fb = enhance(&sys, FeedbackConfig::FULL);
         MockLlm::default().update(&mut g, &info, &fb.text(), &mut Rng::new(7));
@@ -472,6 +523,47 @@ mod tests {
             g.task_procs["update_voltages"].first(),
             Some(&ProcKind::Gpu)
         );
+    }
+
+    #[test]
+    fn bottleneck_line_targets_named_task() {
+        // profile tier: the named critical-path bottleneck gets promoted
+        // to the GPU (or its index map re-drawn) instead of a blind move
+        let (_, info) = setup();
+        let text = "Performance Metric: Execution time is 0.05s.\n\
+                    Critical Path: 0.0450s over 30 of 240 tasks.\n\
+                    Bottleneck Tasks: distribute_charge 80% (0.0360s, 10 on path).\n\
+                    Suggestion: Move more tasks to GPU to reduce execution time.";
+        let llm = MockLlm::default();
+        let mut promoted = 0;
+        for seed in 0..40 {
+            let mut g = AgentGenome::sane_default(&info);
+            g.task_procs.insert("distribute_charge".into(), vec![ProcKind::Cpu]);
+            llm.update(&mut g, &info, text, &mut Rng::new(seed));
+            if g.task_procs["distribute_charge"].first() == Some(&ProcKind::Gpu) {
+                promoted += 1;
+            }
+        }
+        assert!(promoted > 20, "bottleneck targeting mostly fires: {promoted}/40");
+    }
+
+    #[test]
+    fn bottleneck_remaps_index_block_when_already_on_gpu() {
+        let app = apps::by_name("cannon").unwrap();
+        let info = AppInfo::from_app(&app);
+        let text = "Performance Metric: Achieved throughput = 4000 GFLOPS\n\
+                    Bottleneck Tasks: dgemm 95% (0.0100s, 4 on path).";
+        let llm = MockLlm::default();
+        let mut changed = 0;
+        for seed in 0..40 {
+            let mut g = AgentGenome::sane_default(&info);
+            let before = g.index_maps.get("dgemm").cloned();
+            llm.update(&mut g, &info, text, &mut Rng::new(seed));
+            if g.index_maps.get("dgemm").cloned() != before {
+                changed += 1;
+            }
+        }
+        assert!(changed > 10, "index remap should fire often: {changed}/40");
     }
 
     #[test]

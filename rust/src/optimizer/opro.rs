@@ -138,6 +138,7 @@ mod tests {
         let eval = |_: &str| SystemFeedback::Performance {
             line: "Performance Metric: Execution time is 1s.".into(),
             value: 1.0,
+            profile: None,
         };
         for _ in 0..20 {
             opt.step(&eval);

@@ -1,9 +1,14 @@
 //! PJRT runtime (S10): loads the AOT artifacts produced by
 //! `python/compile/aot.py` (HLO text) and executes task bodies on the
 //! rust request path — python is never loaded at runtime.
+//!
+//! The XLA/PJRT bindings live behind the `pjrt` cargo feature; the
+//! default build uses a stub backend so the crate is buildable and
+//! testable with no artifacts and no vendored xla crate (see
+//! [`ArtifactRuntime::backend_available`]).
 
 pub mod pjrt;
 pub mod tasks;
 
-pub use pjrt::{parse_manifest, ArtInput, ArtifactRuntime, ManifestEntry};
+pub use pjrt::{parse_manifest, ArtInput, ArtifactRuntime, ManifestEntry, Result, RtError};
 pub use tasks::CircuitState;

@@ -5,9 +5,7 @@
 //!
 //! Shapes must match the AOT instance sizes in python/compile/model.py.
 
-use anyhow::{ensure, Result};
-
-use super::pjrt::{ArtInput, ArtifactRuntime};
+use super::pjrt::{ArtInput, ArtifactRuntime, Result, RtError};
 use crate::util::rng::Rng;
 
 /// AOT instance sizes (keep in sync with python/compile/model.py).
@@ -30,7 +28,9 @@ pub fn gemm_tile_step(
     c: &[f32],
 ) -> Result<Vec<f32>> {
     let t = GEMM_TILE;
-    ensure!(a.len() == t * t && b.len() == t * t && c.len() == t * t);
+    if a.len() != t * t || b.len() != t * t || c.len() != t * t {
+        return Err(RtError::msg("gemm_tile_step: inputs must be GEMM_TILE^2"));
+    }
     let out = rt.execute(
         "gemm_tile_step",
         &[
@@ -184,7 +184,9 @@ impl CircuitState {
 // ---------------------------------------------------------------------------
 
 pub fn stencil_step(rt: &ArtifactRuntime, grid: &[f32]) -> Result<Vec<f32>> {
-    ensure!(grid.len() == STENCIL_ROWS * STENCIL_COLS);
+    if grid.len() != STENCIL_ROWS * STENCIL_COLS {
+        return Err(RtError::msg("stencil_step: grid must be ROWS*COLS"));
+    }
     let out = rt.execute(
         "stencil_step",
         &[ArtInput::f32(grid.to_vec(), &[STENCIL_ROWS, STENCIL_COLS])],

@@ -7,15 +7,23 @@
 //! rejection, mapping-function failures, instance-limit starvation).
 //!
 //! Granularity: one "event" per (launch point, region argument) plus one
-//! per compute body — a macro discrete-event model.  Launches are
-//! bulk-synchronous (Legion phase barriers), which matches how these nine
-//! benchmarks are written.
+//! per compute body — a macro discrete-event model.  Three execution
+//! models share the per-point cost code ([`SimState::simulate_point`]):
+//!
+//! * [`ExecMode::BulkSync`] — the legacy barrier-per-launch loop (Legion
+//!   phase barriers); the reference timing model.
+//! * [`ExecMode::Serialized`] — the dependency-aware engine driven by a
+//!   DAG with *full* barrier edges; reproduces BulkSync timing exactly
+//!   while also producing critical-path attribution ([`super::schedule`]).
+//! * [`ExecMode::OutOfOrder`] — the DAG engine with happens-before edges
+//!   inferred from region read/write/reduce sets: independent launches
+//!   overlap compute with communication, and timesteps pipeline.
 
 use std::collections::{BTreeMap, HashMap};
 
 use super::cost::layout_penalty;
 use super::metrics::{ExecError, Metrics};
-use crate::apps::taskgraph::{Access, App, InitialDist};
+use crate::apps::taskgraph::{Access, App, InitialDist, Launch};
 use crate::dsl::{MappingPolicy, TaskCtx};
 use crate::machine::{MachineSpec, MemId, MemKind, ProcId, ProcKind};
 
@@ -137,27 +145,244 @@ impl MemBook {
     }
 }
 
+/// Which execution model the simulator uses (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecMode {
+    /// Legacy bulk-synchronous loop: a global barrier after every launch.
+    BulkSync,
+    /// Dependency-aware engine, full barrier edges: BulkSync timing plus
+    /// critical-path profiles.
+    Serialized,
+    /// Dependency-aware engine, inferred happens-before edges: transfers
+    /// overlap independent compute and steps pipeline.
+    OutOfOrder,
+}
+
+impl ExecMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::BulkSync => "bulk-sync",
+            ExecMode::Serialized => "serialized",
+            ExecMode::OutOfOrder => "out-of-order",
+        }
+    }
+}
+
+/// Mutable simulation state shared by the bulk-synchronous loop and the
+/// DAG scheduler: per-processor timelines, memory book, NIC channels, and
+/// metric accumulators.  Both engines charge costs through
+/// [`SimState::simulate_point`], so their per-point arithmetic is
+/// identical by construction.
+pub(super) struct SimState<'a> {
+    spec: &'a MachineSpec,
+    proc_time: HashMap<ProcId, f64>,
+    book: MemBook,
+    nic_busy: HashMap<(usize, usize), f64>,
+    m: Metrics,
+    /// §Perf: accumulate per-task busy time by task id (a String-keyed
+    /// map entry per point dominated the bookkeeping cost)
+    task_busy: Vec<f64>,
+}
+
+impl<'a> SimState<'a> {
+    pub(super) fn new(spec: &'a MachineSpec, app: &App) -> SimState<'a> {
+        SimState {
+            spec,
+            proc_time: HashMap::new(),
+            book: MemBook::default(),
+            nic_busy: HashMap::new(),
+            m: Metrics::default(),
+            task_busy: vec![0.0f64; app.tasks.len()],
+        }
+    }
+
+    /// When `proc`'s timeline frees up, if it has run anything yet.
+    pub(super) fn proc_avail(&self, proc: ProcId) -> Option<f64> {
+        self.proc_time.get(&proc).copied()
+    }
+
+    /// Simulate one launch point on `proc`, starting no earlier than
+    /// `floor` (the launch barrier in BulkSync, the dependency ready time
+    /// in the DAG engines).  Returns (start_us, end_us).
+    pub(super) fn simulate_point(
+        &mut self,
+        app: &App,
+        launch: &Launch,
+        decisions: &[RegionDecision],
+        point: &[i64],
+        proc: ProcId,
+        floor: f64,
+    ) -> Result<(f64, f64), ExecError> {
+        let spec = self.spec;
+        let task = &app.tasks[launch.task];
+        let mut t = self.proc_time.get(&proc).copied().unwrap_or(floor).max(floor);
+        let start = t;
+        let mut busy_us = 0.0;
+
+        for (pos, rr) in launch.regions.iter().enumerate() {
+            let region = &app.regions[rr.region];
+            let d = &decisions[pos];
+            let mem = spec.mem_for(proc, d.mem_kind);
+            let tile_coord = (rr.tile_of)(point);
+            let tile: TileId = (rr.region, region.tile_lin(&tile_coord));
+            let bytes = d.bytes;
+
+            // ---- home initialization --------------------------------------
+            let init_home = match app.initial_dist {
+                InitialDist::FirstUse => mem,
+                InitialDist::BlockOverGpus => {
+                    let total = region.num_tiles().max(1);
+                    let lin = region.tile_lin(&tile_coord);
+                    let ngpus = spec.count(ProcKind::Gpu) as i64;
+                    let g = (lin * ngpus / total).clamp(0, ngpus - 1) as usize;
+                    let per = spec.gpus_per_node;
+                    MemId { node: g / per, kind: MemKind::FbMem, index: g % per }
+                }
+            };
+            let home = self.book.home_or_init(tile, init_home, bytes);
+
+            // ---- transfer (fetch into the chosen memory) ------------------
+            let needs_data =
+                matches!(rr.access, Access::Read | Access::ReadWrite | Access::Reduce);
+            if !self.book.is_resident(tile, mem) {
+                if needs_data && home != mem {
+                    let dt = spec.transfer_us(home, mem, bytes);
+                    if home.node != mem.node {
+                        let ch = (home.node, mem.node);
+                        let free = self.nic_busy.entry(ch).or_insert(0.0);
+                        let begin = t.max(*free);
+                        *free = begin + dt;
+                        t = begin + dt;
+                    } else {
+                        t += dt;
+                    }
+                    self.m.comm_bytes += bytes;
+                    self.m.transfer_s += dt * 1e-6;
+                }
+                self.book.add_copy(tile, mem, bytes, spec)?;
+            }
+
+            // ---- access time ----------------------------------------------
+            let bw = spec
+                .access_bw(proc, mem)
+                .expect("select_memory returned unreachable memory");
+            let gb = (bytes as f64 * rr.reuse) / 1e9;
+            busy_us += gb / bw * 1e6 * d.penalty;
+
+            // ---- write-back / ownership -----------------------------------
+            match rr.access {
+                Access::Write | Access::ReadWrite => {
+                    self.book.make_exclusive(tile, mem);
+                }
+                Access::Reduce => {
+                    // fold the remote contribution into the home
+                    let home_now = self.book.home(tile);
+                    if home_now != mem {
+                        let dt = spec.transfer_us(mem, home_now, bytes);
+                        t += dt;
+                        self.m.comm_bytes += bytes;
+                        self.m.transfer_s += dt * 1e-6;
+                    }
+                }
+                Access::Read => {}
+            }
+        }
+
+        // ---- eager collection (CollectMemory statements) ------------------
+        // collected region arguments free their instance right after the
+        // task, trading refetches for memory headroom
+        for (pos, rr) in launch.regions.iter().enumerate() {
+            let d = &decisions[pos];
+            if d.collect {
+                let mem = spec.mem_for(proc, d.mem_kind);
+                let tile_coord = (rr.tile_of)(point);
+                let tile: TileId =
+                    (rr.region, app.regions[rr.region].tile_lin(&tile_coord));
+                self.book.collect_copy(tile, mem);
+            }
+        }
+
+        // ---- compute body -------------------------------------------------
+        busy_us += task.flops_per_point / (spec.gflops(proc.kind) * 1e3);
+        busy_us += spec.spawn_overhead_us(proc.kind);
+
+        let end = t + busy_us;
+        self.proc_time.insert(proc, end);
+        self.m.busy_s += busy_us * 1e-6;
+        self.task_busy[launch.task] += busy_us * 1e-6;
+        *self.m.per_proc_s.entry(proc).or_insert(0.0) += busy_us * 1e-6;
+        Ok((start, end))
+    }
+
+    /// Close out the run: elapsed, per-task busy map, peaks, throughput.
+    pub(super) fn finalize(self, app: &App, elapsed_us: f64) -> Metrics {
+        let mut m = self.m;
+        m.elapsed_s = elapsed_us * 1e-6;
+        for (i, &busy) in self.task_busy.iter().enumerate() {
+            if busy > 0.0 {
+                m.per_task_s.insert(app.tasks[i].name.clone(), busy);
+            }
+        }
+        m.peak_mem = self.book.peak.iter().map(|(k, v)| (*k, *v)).collect();
+        let (tp, unit) = match app.metric {
+            crate::apps::taskgraph::Metric::Gflops { total_flops } => {
+                (total_flops / m.elapsed_s / 1e9, "GFLOPS")
+            }
+            crate::apps::taskgraph::Metric::StepsPerSecond => {
+                (app.steps as f64 / m.elapsed_s, "steps/s")
+            }
+        };
+        m.throughput = tp;
+        m.unit = unit;
+        m
+    }
+}
+
 pub struct Executor<'a> {
     spec: &'a MachineSpec,
+    mode: ExecMode,
 }
 
 impl<'a> Executor<'a> {
+    /// Bulk-synchronous executor (backward-compatible default).
     pub fn new(spec: &'a MachineSpec) -> Self {
-        Executor { spec }
+        Executor { spec, mode: ExecMode::BulkSync }
+    }
+
+    /// Executor with an explicit execution model.
+    pub fn with_mode(spec: &'a MachineSpec, mode: ExecMode) -> Self {
+        Executor { spec, mode }
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
     }
 
     /// Run the app under the policy; returns metrics or the first
     /// execution error encountered.
     pub fn execute(&self, app: &App, policy: &MappingPolicy) -> Result<Metrics, ExecError> {
+        match self.mode {
+            ExecMode::BulkSync => self.execute_bulk(app, policy),
+            ExecMode::Serialized => super::schedule::execute_dag(
+                self.spec,
+                app,
+                policy,
+                crate::apps::taskgraph::DepMode::Serialized,
+            ),
+            ExecMode::OutOfOrder => super::schedule::execute_dag(
+                self.spec,
+                app,
+                policy,
+                crate::apps::taskgraph::DepMode::Inferred,
+            ),
+        }
+    }
+
+    /// The legacy bulk-synchronous loop: a barrier after every launch.
+    fn execute_bulk(&self, app: &App, policy: &MappingPolicy) -> Result<Metrics, ExecError> {
         let spec = self.spec;
         let mut now_us = 0.0f64; // launch-barrier clock
-        let mut proc_time: HashMap<ProcId, f64> = HashMap::new();
-        let mut book = MemBook::default();
-        let mut nic_busy: HashMap<(usize, usize), f64> = HashMap::new();
-        let mut m = Metrics::default();
-        // §Perf: accumulate per-task busy time by task id (a String-keyed
-        // map entry per point dominated the bookkeeping cost)
-        let mut task_busy = vec![0.0f64; app.tasks.len()];
+        let mut st = SimState::new(spec, app);
 
         // parent (top-level) task runs on CPU 0 of node 0
         let parent = ProcId { node: 0, kind: ProcKind::Cpu, index: 0 };
@@ -165,17 +390,7 @@ impl<'a> Executor<'a> {
         for step in 0..app.steps {
             for launch in app.launches(step) {
                 let task = &app.tasks[launch.task];
-
-                // instance-limit model: a limit below the per-processor
-                // concurrency this launch needs starves instance creation
-                // and trips Legion's event assertion (Table A1 mapper7)
-                if let Some(limit) = policy.instance_limit(&task.name) {
-                    let nprocs = spec.count(ProcKind::Gpu).max(1) as i64;
-                    let per_proc = (launch.num_points() + nprocs - 1) / nprocs;
-                    if limit < per_proc.max(2) {
-                        return Err(ExecError::InstanceLimit { task: task.name.clone() });
-                    }
-                }
+                instance_limit_check(policy, app, &launch, spec)?;
 
                 let mut max_end = now_us;
                 // §Perf: region decisions (layout, memory kind, collect
@@ -200,111 +415,17 @@ impl<'a> Executor<'a> {
                     let proc = policy
                         .map_point(&resolution, &ctx, spec)
                         .map_err(|e| ExecError::MapFailed(e.to_string()))?;
-                    let mut t = proc_time.get(&proc).copied().unwrap_or(now_us).max(now_us);
-                    let mut busy_us = 0.0;
 
                     let slot = kind_slot(proc.kind);
                     if kind_cache[slot].is_none() {
                         kind_cache[slot] = Some(resolve_region_decisions(
-                            app, policy, task, &launch, proc, spec,
+                            app, policy, &launch, proc, spec,
                         )?);
                     }
                     let decisions = kind_cache[slot].as_ref().unwrap();
 
-                    for (pos, rr) in launch.regions.iter().enumerate() {
-                        let region = &app.regions[rr.region];
-                        let d = &decisions[pos];
-                        let mem = spec.mem_for(proc, d.mem_kind);
-                        let tile_coord = (rr.tile_of)(&point);
-                        let tile: TileId = (rr.region, region.tile_lin(&tile_coord));
-                        let bytes = d.bytes;
-
-                        // ---- home initialization --------------------------
-                        let init_home = match app.initial_dist {
-                            InitialDist::FirstUse => mem,
-                            InitialDist::BlockOverGpus => {
-                                let total = region.num_tiles().max(1);
-                                let lin = region.tile_lin(&tile_coord);
-                                let ngpus = spec.count(ProcKind::Gpu) as i64;
-                                let g = (lin * ngpus / total).clamp(0, ngpus - 1) as usize;
-                                let per = spec.gpus_per_node;
-                                MemId { node: g / per, kind: MemKind::FbMem, index: g % per }
-                            }
-                        };
-                        let home = book.home_or_init(tile, init_home, bytes);
-
-                        // ---- transfer (fetch into the chosen memory) ------
-                        let needs_data = matches!(
-                            rr.access,
-                            Access::Read | Access::ReadWrite | Access::Reduce
-                        );
-                        if !book.is_resident(tile, mem) {
-                            if needs_data && home != mem {
-                                let dt = spec.transfer_us(home, mem, bytes);
-                                if home.node != mem.node {
-                                    let ch = (home.node, mem.node);
-                                    let free = nic_busy.entry(ch).or_insert(0.0);
-                                    let begin = t.max(*free);
-                                    *free = begin + dt;
-                                    t = begin + dt;
-                                } else {
-                                    t += dt;
-                                }
-                                m.comm_bytes += bytes;
-                                m.transfer_s += dt * 1e-6;
-                            }
-                            book.add_copy(tile, mem, bytes, spec)?;
-                        }
-
-                        // ---- access time ----------------------------------
-                        let bw = spec
-                            .access_bw(proc, mem)
-                            .expect("select_memory returned unreachable memory");
-                        let gb = (bytes as f64 * rr.reuse) / 1e9;
-                        busy_us += gb / bw * 1e6 * d.penalty;
-
-                        // ---- write-back / ownership -----------------------
-                        match rr.access {
-                            Access::Write | Access::ReadWrite => {
-                                book.make_exclusive(tile, mem);
-                            }
-                            Access::Reduce => {
-                                // fold the remote contribution into the home
-                                let home_now = book.home(tile);
-                                if home_now != mem {
-                                    let dt = spec.transfer_us(mem, home_now, bytes);
-                                    t += dt;
-                                    m.comm_bytes += bytes;
-                                    m.transfer_s += dt * 1e-6;
-                                }
-                            }
-                            Access::Read => {}
-                        }
-                    }
-
-                    // ---- eager collection (CollectMemory statements) ------
-                    // collected region arguments free their instance right
-                    // after the task, trading refetches for memory headroom
-                    for (pos, rr) in launch.regions.iter().enumerate() {
-                        let d = &decisions[pos];
-                        if d.collect {
-                            let mem = spec.mem_for(proc, d.mem_kind);
-                            let tile_coord = (rr.tile_of)(&point);
-                            let tile: TileId =
-                                (rr.region, app.regions[rr.region].tile_lin(&tile_coord));
-                            book.collect_copy(tile, mem);
-                        }
-                    }
-
-                    // ---- compute body -------------------------------------
-                    busy_us += task.flops_per_point / (spec.gflops(proc.kind) * 1e3);
-                    busy_us += spec.spawn_overhead_us(proc.kind);
-
-                    let end = t + busy_us;
-                    proc_time.insert(proc, end);
-                    m.busy_s += busy_us * 1e-6;
-                    task_busy[launch.task] += busy_us * 1e-6;
-                    *m.per_proc_s.entry(proc).or_insert(0.0) += busy_us * 1e-6;
+                    let (_, end) =
+                        st.simulate_point(app, &launch, decisions, &point, proc, now_us)?;
                     max_end = max_end.max(end);
                 }
 
@@ -313,37 +434,40 @@ impl<'a> Executor<'a> {
             }
         }
 
-        m.elapsed_s = now_us * 1e-6;
-        for (i, &busy) in task_busy.iter().enumerate() {
-            if busy > 0.0 {
-                m.per_task_s.insert(app.tasks[i].name.clone(), busy);
-            }
-        }
-        m.peak_mem = book.peak.iter().map(|(k, v)| (*k, *v)).collect();
-        let (tp, unit) = match app.metric {
-            crate::apps::taskgraph::Metric::Gflops { total_flops } => {
-                (total_flops / m.elapsed_s / 1e9, "GFLOPS")
-            }
-            crate::apps::taskgraph::Metric::StepsPerSecond => {
-                (app.steps as f64 / m.elapsed_s, "steps/s")
-            }
-        };
-        m.throughput = tp;
-        m.unit = unit;
-        Ok(m)
+        Ok(st.finalize(app, now_us))
     }
+}
+
+/// Instance-limit model: a limit below the per-processor concurrency a
+/// launch needs starves instance creation and trips Legion's event
+/// assertion (Table A1 mapper7).
+pub(super) fn instance_limit_check(
+    policy: &MappingPolicy,
+    app: &App,
+    launch: &Launch,
+    spec: &MachineSpec,
+) -> Result<(), ExecError> {
+    let task = &app.tasks[launch.task];
+    if let Some(limit) = policy.instance_limit(&task.name) {
+        let nprocs = spec.count(ProcKind::Gpu).max(1) as i64;
+        let per_proc = (launch.num_points() + nprocs - 1) / nprocs;
+        if limit < per_proc.max(2) {
+            return Err(ExecError::InstanceLimit { task: task.name.clone() });
+        }
+    }
+    Ok(())
 }
 
 /// Per-(launch, region-argument, proc-kind) mapping decision, resolved
 /// once per launch (§Perf hoist — policy queries scan statement lists).
-struct RegionDecision {
+pub(super) struct RegionDecision {
     mem_kind: MemKind,
     bytes: u64,
     penalty: f64,
     collect: bool,
 }
 
-fn kind_slot(kind: ProcKind) -> usize {
+pub(super) fn kind_slot(kind: ProcKind) -> usize {
     match kind {
         ProcKind::Cpu => 0,
         ProcKind::Gpu => 1,
@@ -351,14 +475,14 @@ fn kind_slot(kind: ProcKind) -> usize {
     }
 }
 
-fn resolve_region_decisions(
+pub(super) fn resolve_region_decisions(
     app: &App,
     policy: &MappingPolicy,
-    task: &crate::apps::taskgraph::TaskDecl,
-    launch: &crate::apps::taskgraph::Launch,
+    launch: &Launch,
     proc: ProcId,
     spec: &MachineSpec,
 ) -> Result<Vec<RegionDecision>, ExecError> {
+    let task = &app.tasks[launch.task];
     let req_layout = task.layout_req(proc.kind);
     launch
         .regions
@@ -388,12 +512,23 @@ fn resolve_region_decisions(
         .collect()
 }
 
-/// Convenience wrapper: compile DSL source and execute in one call.
+/// Convenience wrapper: compile DSL source and execute in one call
+/// (bulk-synchronous mode).
 pub fn run_mapper(
     app: &App,
     dsl_source: &str,
     spec: &MachineSpec,
 ) -> Result<Result<Metrics, ExecError>, crate::dsl::CompileError> {
+    run_mapper_with(app, dsl_source, spec, ExecMode::BulkSync)
+}
+
+/// Compile DSL source and execute under an explicit execution model.
+pub fn run_mapper_with(
+    app: &App,
+    dsl_source: &str,
+    spec: &MachineSpec,
+    mode: ExecMode,
+) -> Result<Result<Metrics, ExecError>, crate::dsl::CompileError> {
     let policy = MappingPolicy::compile(dsl_source, spec)?;
-    Ok(Executor::new(spec).execute(app, &policy))
+    Ok(Executor::with_mode(spec, mode).execute(app, &policy))
 }

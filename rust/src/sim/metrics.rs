@@ -1,7 +1,11 @@
-//! Execution metrics and the execution-error taxonomy.
+//! Execution metrics, critical-path profiles, and the execution-error
+//! taxonomy.
 //!
 //! Error Display strings reproduce the paper's Table A1 feedback messages
-//! verbatim — the feedback engine keyword-matches them.
+//! verbatim — the feedback engine keyword-matches them.  The dependency-
+//! aware engine additionally attaches a [`PerfProfile`]: critical-path
+//! attribution (which tasks actually bound the run), per-processor idle
+//! fractions, and slack — the analytics-informed feedback tier.
 
 use std::collections::HashMap;
 
@@ -28,6 +32,97 @@ pub struct Metrics {
     pub per_proc_s: HashMap<ProcId, f64>,
     /// Peak bytes resident per memory.
     pub peak_mem: HashMap<MemId, u64>,
+    /// Critical-path attribution; produced by the dependency-aware engine
+    /// (`ExecMode::Serialized` / `ExecMode::OutOfOrder`), absent under the
+    /// legacy bulk-synchronous loop.
+    pub profile: Option<PerfProfile>,
+}
+
+/// One task's contribution to the critical path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CritEntry {
+    /// Task name.
+    pub task: String,
+    /// Point-task instances of this task on the critical path.
+    pub instances: usize,
+    /// Seconds this task contributes along the path (span = dependency /
+    /// transfer wait + busy time of the on-path instances).
+    pub seconds: f64,
+    /// `seconds` as a fraction of the critical-path length.
+    pub share: f64,
+}
+
+/// Critical-path / bottleneck profile of one simulated run, computed from
+/// the scheduled task DAG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfProfile {
+    /// Which engine produced the profile ("serialized" or "out-of-order").
+    pub engine: &'static str,
+    /// Length of the binding-constraint chain from t=0 to the makespan
+    /// (equals `elapsed_s` up to floating-point rounding).
+    pub critical_path_s: f64,
+    /// Point tasks on the critical path.
+    pub critical_tasks: usize,
+    /// Total point tasks scheduled.
+    pub total_tasks: usize,
+    /// Per-task attribution along the path, largest share first.
+    pub bottlenecks: Vec<CritEntry>,
+    /// Mean idle fraction over every processor of each kind the mapping
+    /// used (unused siblings count as fully idle — load imbalance shows).
+    pub mean_idle: f64,
+    /// Worst single-processor idle fraction.
+    pub worst_idle: f64,
+    /// The processor with `worst_idle`.
+    pub worst_idle_proc: String,
+    /// Mean dependency slack per task (seconds a task could be delayed
+    /// without growing the makespan; DAG edges only, resources ignored).
+    pub mean_slack_s: f64,
+    /// Tasks with (near-)zero slack — the rigid part of the schedule.
+    pub zero_slack_tasks: usize,
+}
+
+impl PerfProfile {
+    /// Render the paper-style feedback lines the optimizer sees when the
+    /// profile tier is enabled.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Critical Path: {:.4}s over {} of {} tasks.",
+            self.critical_path_s, self.critical_tasks, self.total_tasks
+        ));
+        if !self.bottlenecks.is_empty() {
+            let tops: Vec<String> = self
+                .bottlenecks
+                .iter()
+                .map(|b| {
+                    format!(
+                        "{} {:.0}% ({:.4}s, {} on path)",
+                        b.task,
+                        b.share * 100.0,
+                        b.seconds,
+                        b.instances
+                    )
+                })
+                .collect();
+            out.push_str(&format!("\nBottleneck Tasks: {}.", tops.join("; ")));
+        }
+        out.push_str(&format!(
+            "\nProcessor Idle: mean {:.0}%, worst {:.0}% ({}).",
+            self.mean_idle * 100.0,
+            self.worst_idle * 100.0,
+            self.worst_idle_proc
+        ));
+        out.push_str(&format!(
+            "\nSlack: mean {:.4}s; {} of {} tasks have zero slack.",
+            self.mean_slack_s, self.zero_slack_tasks, self.total_tasks
+        ));
+        out
+    }
+
+    /// The top bottleneck task name, if any.
+    pub fn top_bottleneck(&self) -> Option<&str> {
+        self.bottlenecks.first().map(|b| b.task.as_str())
+    }
 }
 
 impl Metrics {
@@ -57,30 +152,50 @@ impl Metrics {
 }
 
 /// Execution errors (the paper's second feedback category).
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+/// (Display is hand-rolled; the crate builds with zero dependencies, so
+/// thiserror is unavailable.)
+#[derive(Debug, Clone, PartialEq)]
 pub enum ExecError {
     /// Running out of a memory pool, e.g. GPU framebuffer or ZCMEM.
-    #[error("Out of memory: {mem} capacity {capacity} bytes exceeded (need {needed})")]
     OutOfMemory { mem: String, needed: u64, capacity: u64 },
 
     /// A task variant compiled for a different instance layout (Table A1
     /// mapper4).
-    #[error("Assertion failed: stride does not match expected value.")]
     StrideMismatch { task: String, region: String },
 
     /// BLAS rejecting a C-order instance (Table A1 mapper5).
-    #[error("DGEMM parameter number 8 had an illegal value")]
     DgemmIllegal { task: String },
 
     /// Index-mapping function failed at runtime (Table A1 mapper6 — e.g.
     /// "Slice processor index out of bound").
-    #[error("{0}")]
     MapFailed(String),
 
     /// InstanceLimit starved the runtime of instances (Table A1 mapper7).
-    #[error("Assertion 'event.exists()' failed")]
     InstanceLimit { task: String },
 }
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::OutOfMemory { mem, needed, capacity } => write!(
+                f,
+                "Out of memory: {mem} capacity {capacity} bytes exceeded (need {needed})"
+            ),
+            ExecError::StrideMismatch { .. } => {
+                write!(f, "Assertion failed: stride does not match expected value.")
+            }
+            ExecError::DgemmIllegal { .. } => {
+                write!(f, "DGEMM parameter number 8 had an illegal value")
+            }
+            ExecError::MapFailed(msg) => write!(f, "{msg}"),
+            ExecError::InstanceLimit { .. } => {
+                write!(f, "Assertion 'event.exists()' failed")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,412 @@
+//! Dependency-aware discrete-event scheduler (the out-of-order engine).
+//!
+//! Flattens an [`App`] into point tasks via [`task_dag`], assigns each a
+//! processor through the policy, then list-schedules the DAG against
+//! per-processor timelines and per-NIC channels: a task starts at
+//! `max(dependency ready time, processor free time)` and its transfers
+//! serialize on the NIC like in the bulk-synchronous loop — but nothing
+//! waits for a barrier, so independent launches overlap communication
+//! with compute and timesteps pipeline.
+//!
+//! With [`DepMode::Serialized`] (full barrier edges, program-order pops)
+//! the engine reproduces bulk-synchronous timing *bit-exactly*: both
+//! paths charge costs through [`SimState::simulate_point`] in the same
+//! order with the same start floors.
+//!
+//! After scheduling, the engine derives a [`PerfProfile`]: it walks the
+//! binding-constraint chain back from the makespan (each task's start is
+//! pinned either by a dependency or by its processor's previous task, so
+//! the chain tiles `[0, elapsed]` exactly), aggregates per-task critical
+//! seconds, and adds per-processor idle fractions plus CPM-style slack
+//! from a backward pass over the DAG.
+
+use std::collections::HashMap;
+
+use super::executor::{
+    instance_limit_check, kind_slot, resolve_region_decisions, RegionDecision,
+    SimState,
+};
+use super::metrics::{CritEntry, ExecError, Metrics, PerfProfile};
+use crate::apps::taskgraph::{task_dag, App, DepMode, Launch};
+use crate::dsl::{MappingPolicy, TaskCtx};
+use crate::machine::{MachineSpec, ProcId, ProcKind};
+
+/// Execute `app` under `policy` on the dependency-aware engine.
+pub(super) fn execute_dag(
+    spec: &MachineSpec,
+    app: &App,
+    policy: &MappingPolicy,
+    dep_mode: DepMode,
+) -> Result<Metrics, ExecError> {
+    let steps: Vec<Vec<Launch>> = (0..app.steps).map(|s| app.launches(s)).collect();
+    let (points, preds) = task_dag(app, &steps, dep_mode);
+    let n = points.len();
+    let mut st = SimState::new(spec, app);
+
+    // parent (top-level) task runs on CPU 0 of node 0
+    let parent = ProcId { node: 0, kind: ProcKind::Cpu, index: 0 };
+
+    // ---- flat launch index (pure structure, no policy calls) -------------
+    let mut launches_flat: Vec<(usize, usize)> = Vec::new();
+    let mut launch_of: Vec<usize> = Vec::with_capacity(n);
+    for (step, ls) in steps.iter().enumerate() {
+        for (li, launch) in ls.iter().enumerate() {
+            let flat = launches_flat.len();
+            launches_flat.push((step, li));
+            for _ in 0..launch.num_points() {
+                launch_of.push(flat);
+            }
+        }
+    }
+    debug_assert_eq!(launch_of.len(), n);
+
+    if n == 0 {
+        // no point tasks, but bulk-sync still performs the per-launch
+        // checks (instance limits, resolution) — error parity holds
+        for &(step, li) in &launches_flat {
+            init_launch(policy, app, &steps[step][li], spec)?;
+        }
+        // dependency-aware runs always attach a profile, even an empty one
+        let mut m = st.finalize(app, 0.0);
+        m.profile = Some(PerfProfile {
+            engine: engine_name(dep_mode),
+            critical_path_s: 0.0,
+            critical_tasks: 0,
+            total_tasks: 0,
+            bottlenecks: Vec::new(),
+            mean_idle: 0.0,
+            worst_idle: 0.0,
+            worst_idle_proc: String::new(),
+            mean_slack_s: 0.0,
+            zero_slack_tasks: 0,
+        });
+        return Ok(m);
+    }
+
+    // Launch-invariant resolutions, used (and filled, via the lazy
+    // cursor) only in Serialized mode — instance-limit / resolution
+    // errors then surface at exactly the point the bulk-synchronous loop
+    // reaches them.  OutOfOrder resolves everything upfront below and
+    // keeps only the per-point processors.
+    let mut resolutions: Vec<Option<crate::dsl::TaskResolution<'_>>> =
+        if dep_mode == DepMode::Serialized {
+            vec![None; launches_flat.len()]
+        } else {
+            Vec::new()
+        };
+
+    // Per-point processors.  The out-of-order picker must know every
+    // ready task's processor *before* scheduling it, so they are resolved
+    // upfront (mapping errors then surface in program order, ahead of any
+    // simulation error).  Serialized mode resolves per point at pop time,
+    // interleaved with simulation like the legacy loop.
+    let mut proc_of: Vec<ProcId> = Vec::new();
+    if dep_mode == DepMode::Inferred {
+        proc_of.reserve(n);
+        for &(step, li) in &launches_flat {
+            let launch = &steps[step][li];
+            let res = init_launch(policy, app, launch, spec)?;
+            for point in launch.points() {
+                let ctx = TaskCtx {
+                    ipoint: point,
+                    ispace: launch.ispace.clone(),
+                    parent_proc: Some(parent),
+                };
+                let proc = policy
+                    .map_point(&res, &ctx, spec)
+                    .map_err(|e| ExecError::MapFailed(e.to_string()))?;
+                proc_of.push(proc);
+            }
+        }
+    }
+
+    // region decisions, resolved lazily per (launch, processor kind)
+    let mut kind_caches: Vec<[Option<Vec<RegionDecision>>; 3]> =
+        (0..launches_flat.len()).map(|_| [None, None, None]).collect();
+
+    // ---- dependency bookkeeping ------------------------------------------
+    let mut npreds: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, ps) in preds.iter().enumerate() {
+        for &p in ps {
+            succs[p].push(i);
+        }
+    }
+
+    let mut ready: Vec<usize> = (0..n).filter(|&i| npreds[i] == 0).collect();
+    // serialized lazy-init cursor: pops arrive in program order, so
+    // initializing every launch up to the popped one (inclusive) runs the
+    // per-launch checks of zero-point launches too, exactly where the
+    // bulk-synchronous loop would reach them
+    let mut next_uninit = 0usize;
+    let mut ready_time = vec![0.0f64; n];
+    let mut start_of = vec![0.0f64; n];
+    let mut end_of = vec![0.0f64; n];
+    // which earlier task pinned this task's start time (None = t=0)
+    let mut bind_of: Vec<Option<usize>> = vec![None; n];
+    let mut last_on_proc: HashMap<ProcId, usize> = HashMap::new();
+    let mut makespan = 0.0f64;
+    let mut done = 0usize;
+
+    while done < n {
+        // pick the next task to simulate
+        let pos = match dep_mode {
+            // program order: keeps the state-mutation order identical to
+            // the bulk-synchronous loop (bit-exact timing)
+            DepMode::Serialized => {
+                let mut best = 0;
+                for (k, &i) in ready.iter().enumerate() {
+                    if i < ready[best] {
+                        best = k;
+                    }
+                }
+                best
+            }
+            // earliest feasible start, ties by program order — keeps the
+            // event order causally monotone and fully deterministic
+            DepMode::Inferred => {
+                let mut best = 0;
+                let mut best_key = (f64::INFINITY, usize::MAX);
+                for (k, &i) in ready.iter().enumerate() {
+                    let est = match st.proc_avail(proc_of[i]) {
+                        Some(a) => ready_time[i].max(a),
+                        None => ready_time[i],
+                    };
+                    if (est, i) < best_key {
+                        best_key = (est, i);
+                        best = k;
+                    }
+                }
+                best
+            }
+        };
+        let i = ready.swap_remove(pos);
+
+        let flat = launch_of[i];
+        let (step, li) = launches_flat[flat];
+        let launch = &steps[step][li];
+        if dep_mode == DepMode::Serialized {
+            while next_uninit <= flat {
+                let (s2, l2) = launches_flat[next_uninit];
+                resolutions[next_uninit] =
+                    Some(init_launch(policy, app, &steps[s2][l2], spec)?);
+                next_uninit += 1;
+            }
+        }
+        let proc = match dep_mode {
+            DepMode::Inferred => proc_of[i],
+            DepMode::Serialized => {
+                let ctx = TaskCtx {
+                    ipoint: points[i].point.clone(),
+                    ispace: launch.ispace.clone(),
+                    parent_proc: Some(parent),
+                };
+                policy
+                    .map_point(resolutions[flat].as_ref().unwrap(), &ctx, spec)
+                    .map_err(|e| ExecError::MapFailed(e.to_string()))?
+            }
+        };
+        let slot = kind_slot(proc.kind);
+        if kind_caches[flat][slot].is_none() {
+            kind_caches[flat][slot] =
+                Some(resolve_region_decisions(app, policy, launch, proc, spec)?);
+        }
+        let decisions = kind_caches[flat][slot].as_ref().unwrap();
+
+        let avail_before = st.proc_avail(proc);
+        let (start, end) =
+            st.simulate_point(app, launch, decisions, &points[i].point, proc, ready_time[i])?;
+        start_of[i] = start;
+        end_of[i] = end;
+        makespan = makespan.max(end);
+
+        // binding constraint: whichever of (processor free time, dependency
+        // ready time) set `start`; dependency wins ties so the chain
+        // follows data flow
+        bind_of[i] = if avail_before.is_some_and(|a| a > ready_time[i]) {
+            last_on_proc.get(&proc).copied()
+        } else if ready_time[i] > 0.0 {
+            preds[i]
+                .iter()
+                .copied()
+                .max_by(|&a, &b| end_of[a].partial_cmp(&end_of[b]).unwrap())
+        } else {
+            None
+        };
+        last_on_proc.insert(proc, i);
+
+        for &s in &succs[i] {
+            ready_time[s] = ready_time[s].max(end);
+            npreds[s] -= 1;
+            if npreds[s] == 0 {
+                ready.push(s);
+            }
+        }
+        done += 1;
+    }
+
+    // trailing zero-point launches still get their per-launch checks
+    // (bulk-sync performs them after the last simulated point)
+    if dep_mode == DepMode::Serialized {
+        while next_uninit < launches_flat.len() {
+            let (s2, l2) = launches_flat[next_uninit];
+            resolutions[next_uninit] =
+                Some(init_launch(policy, app, &steps[s2][l2], spec)?);
+            next_uninit += 1;
+        }
+    }
+
+    let profile = build_profile(
+        app, &points, &succs, &start_of, &end_of, &bind_of, makespan, dep_mode,
+    );
+    let mut m = st.finalize(app, makespan);
+    m.profile = Some(attach_idle(profile, &m, spec));
+    Ok(m)
+}
+
+/// Critical-path walk + per-task attribution + slack (idle fractions are
+/// filled in from the finalized metrics by [`attach_idle`]).
+#[allow(clippy::too_many_arguments)]
+fn build_profile(
+    app: &App,
+    points: &[crate::apps::taskgraph::PointTask],
+    succs: &[Vec<usize>],
+    start_of: &[f64],
+    end_of: &[f64],
+    bind_of: &[Option<usize>],
+    makespan: f64,
+    dep_mode: DepMode,
+) -> PerfProfile {
+    let n = points.len();
+
+    // walk the binding chain back from the latest-finishing task
+    let mut sink = 0usize;
+    let mut sink_end = end_of[0];
+    for (i, &e) in end_of.iter().enumerate() {
+        if e > sink_end {
+            sink = i;
+            sink_end = e;
+        }
+    }
+    let mut path: Vec<usize> = Vec::new();
+    let mut cur = Some(sink);
+    while let Some(i) = cur {
+        path.push(i);
+        cur = bind_of[i];
+    }
+
+    // per-task attribution along the path
+    let mut agg: HashMap<&str, (usize, f64)> = HashMap::new();
+    let mut path_len_us = 0.0f64;
+    for &i in &path {
+        let dur = end_of[i] - start_of[i];
+        path_len_us += dur;
+        let name = app.tasks[points[i].task].name.as_str();
+        let e = agg.entry(name).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dur;
+    }
+    let mut bottlenecks: Vec<CritEntry> = agg
+        .into_iter()
+        .map(|(task, (instances, us))| CritEntry {
+            task: task.to_string(),
+            instances,
+            seconds: us * 1e-6,
+            share: if path_len_us > 0.0 { us / path_len_us } else { 0.0 },
+        })
+        .collect();
+    bottlenecks.sort_by(|a, b| {
+        b.seconds.partial_cmp(&a.seconds).unwrap().then_with(|| a.task.cmp(&b.task))
+    });
+    bottlenecks.truncate(4);
+
+    // CPM slack: backward pass over the DAG (task ids are topo-ordered)
+    let mut latest_finish = vec![makespan; n];
+    for i in (0..n).rev() {
+        for &s in &succs[i] {
+            let ls = latest_finish[s] - (end_of[s] - start_of[s]);
+            if ls < latest_finish[i] {
+                latest_finish[i] = ls;
+            }
+        }
+    }
+    let mut slack_sum_us = 0.0f64;
+    let mut zero_slack = 0usize;
+    for i in 0..n {
+        let sl = (latest_finish[i] - end_of[i]).max(0.0);
+        slack_sum_us += sl;
+        // times are in microseconds: treat sub-nanosecond slack (float
+        // residue of the forward/backward summation orders) as zero
+        if sl <= 1e-3 {
+            zero_slack += 1;
+        }
+    }
+
+    PerfProfile {
+        engine: engine_name(dep_mode),
+        critical_path_s: path_len_us * 1e-6,
+        critical_tasks: path.len(),
+        total_tasks: n,
+        bottlenecks,
+        mean_idle: 0.0,
+        worst_idle: 0.0,
+        worst_idle_proc: String::new(),
+        mean_slack_s: slack_sum_us / n as f64 * 1e-6,
+        zero_slack_tasks: zero_slack,
+    }
+}
+
+fn engine_name(mode: DepMode) -> &'static str {
+    match mode {
+        DepMode::Serialized => "serialized",
+        DepMode::Inferred => "out-of-order",
+    }
+}
+
+/// Launch-invariant checks + resolution (instance-limit model, processor
+/// kind, mapping function) — the work the bulk-synchronous loop performs
+/// once per launch before its point loop.
+fn init_launch<'p>(
+    policy: &'p MappingPolicy,
+    app: &App,
+    launch: &Launch,
+    spec: &MachineSpec,
+) -> Result<crate::dsl::TaskResolution<'p>, ExecError> {
+    let task = &app.tasks[launch.task];
+    instance_limit_check(policy, app, launch, spec)?;
+    policy
+        .resolve_task(&task.name, &task.variants, launch.num_points() > 1)
+        .map_err(|e| ExecError::MapFailed(e.to_string()))
+}
+
+/// Fill the per-processor idle statistics from the finalized metrics.
+///
+/// Idle is computed over *every* processor of each kind the mapping
+/// used, not just the ones that ran a task — a mapper that parks all
+/// work on one GPU must read as "15 of 16 GPUs idle", which is exactly
+/// the signal the optimizer needs on maximally imbalanced mappings.
+fn attach_idle(mut profile: PerfProfile, m: &Metrics, spec: &MachineSpec) -> PerfProfile {
+    if m.elapsed_s <= 0.0 || m.per_proc_s.is_empty() {
+        return profile;
+    }
+    let kinds: std::collections::BTreeSet<crate::machine::ProcKind> =
+        m.per_proc_s.keys().map(|p| p.kind).collect();
+    // deterministic order: kinds sorted, spec.procs node-major per kind
+    let procs: Vec<ProcId> = kinds.iter().flat_map(|&k| spec.procs(k)).collect();
+    let mut idle_sum = 0.0f64;
+    let mut worst = f64::NEG_INFINITY;
+    let mut worst_proc = String::new();
+    for p in &procs {
+        let busy = m.per_proc_s.get(p).copied().unwrap_or(0.0);
+        let idle = (1.0 - busy / m.elapsed_s).clamp(0.0, 1.0);
+        idle_sum += idle;
+        if idle > worst {
+            worst = idle;
+            worst_proc = p.to_string();
+        }
+    }
+    profile.mean_idle = idle_sum / procs.len() as f64;
+    profile.worst_idle = worst.max(0.0);
+    profile.worst_idle_proc = worst_proc;
+    profile
+}

@@ -1,0 +1,213 @@
+//! The dependency-aware engine vs the bulk-synchronous reference:
+//!
+//! * serialized mode (full barrier edges) reproduces bulk-sync timing
+//!   bit-exactly on all nine benchmarks, for expert and plain mappers and
+//!   for seeded-random agent genomes;
+//! * out-of-order mode never misbehaves and strictly beats bulk-sync on
+//!   apps whose inferred DAGs expose communication/computation overlap;
+//! * critical-path profiles tile the elapsed time and stay deterministic.
+
+use mapperopt::apps;
+use mapperopt::machine::MachineSpec;
+use mapperopt::mapping::expert_dsl;
+use mapperopt::optimizer::{AgentGenome, AppInfo};
+use mapperopt::sim::{run_mapper, run_mapper_with, ExecMode};
+use mapperopt::util::proptest::check;
+use mapperopt::util::rng::Rng;
+
+fn spec() -> MachineSpec {
+    MachineSpec::p100_cluster()
+}
+
+const GPU_MAPPER: &str = "Task * GPU;\n\
+                          Region * * GPU FBMEM;\n\
+                          Layout * * * SOA C_order Align==64;\n";
+
+#[test]
+fn serialized_reproduces_bulk_sync_on_all_nine_benchmarks() {
+    let s = spec();
+    for bench in apps::ALL_BENCHMARKS {
+        let app = apps::by_name(bench).unwrap();
+        for dsl in [expert_dsl(bench).unwrap(), GPU_MAPPER] {
+            let bulk = run_mapper(&app, dsl, &s).unwrap().unwrap();
+            let ser = run_mapper_with(&app, dsl, &s, ExecMode::Serialized)
+                .unwrap()
+                .unwrap();
+            assert_eq!(
+                bulk.elapsed_s, ser.elapsed_s,
+                "{bench}: serialized elapsed diverged from bulk-sync"
+            );
+            assert_eq!(bulk.comm_bytes, ser.comm_bytes, "{bench}: comm diverged");
+            assert_eq!(bulk.busy_s, ser.busy_s, "{bench}: busy diverged");
+            assert_eq!(bulk.transfer_s, ser.transfer_s, "{bench}: transfer diverged");
+            assert_eq!(bulk.peak_mem, ser.peak_mem, "{bench}: peaks diverged");
+            assert!(ser.profile.is_some(), "{bench}: serialized run missing profile");
+        }
+    }
+}
+
+#[test]
+fn serialized_matches_bulk_sync_for_random_genomes() {
+    let s = spec();
+    check(0x0DE9, 60, |rng: &mut Rng| {
+        let bench = *rng.choose(&apps::ALL_BENCHMARKS);
+        let app = apps::by_name(bench).unwrap();
+        let info = AppInfo::from_app(&app);
+        let mut g = AgentGenome::random(&info, rng);
+        g.syntax_slip = false;
+        g.missing_machine = false;
+        let dsl = g.render();
+        let bulk = run_mapper(&app, &dsl, &s).unwrap();
+        let ser = run_mapper_with(&app, &dsl, &s, ExecMode::Serialized).unwrap();
+        match (bulk, ser) {
+            (Ok(b), Ok(e)) => {
+                assert_eq!(b.elapsed_s, e.elapsed_s, "{bench}: elapsed diverged");
+                assert_eq!(b.comm_bytes, e.comm_bytes, "{bench}: comm diverged");
+            }
+            (Err(b), Err(e)) => {
+                assert_eq!(b.to_string(), e.to_string(), "{bench}: errors diverged");
+            }
+            (b, e) => panic!(
+                "{bench}: engines disagree on failure: bulk ok={} serialized ok={}",
+                b.is_ok(),
+                e.is_ok()
+            ),
+        }
+    });
+}
+
+#[test]
+fn out_of_order_overlap_wins_somewhere_and_never_explodes() {
+    let s = spec();
+    let mut strict_wins = Vec::new();
+    for bench in apps::ALL_BENCHMARKS {
+        let app = apps::by_name(bench).unwrap();
+        let bulk = run_mapper(&app, GPU_MAPPER, &s).unwrap().unwrap();
+        let ooo = run_mapper_with(&app, GPU_MAPPER, &s, ExecMode::OutOfOrder)
+            .unwrap()
+            .unwrap();
+        let ratio = ooo.elapsed_s / bulk.elapsed_s;
+        assert!(
+            (0.2..1.2).contains(&ratio),
+            "{bench}: out-of-order elapsed implausible ({ratio:.3}x bulk)"
+        );
+        if ratio < 0.999 {
+            strict_wins.push((bench, ratio));
+        }
+    }
+    assert!(
+        !strict_wins.is_empty(),
+        "no app overlapped communication with compute under inferred deps"
+    );
+    // the systolic matmuls are 16 independent pipelines -> must be a winner
+    assert!(
+        strict_wins.iter().any(|(b, _)| *b == "cannon"),
+        "cannon must pipeline its shifts: {strict_wins:?}"
+    );
+}
+
+#[test]
+fn critical_path_tiles_elapsed_on_every_benchmark() {
+    let s = spec();
+    for bench in apps::ALL_BENCHMARKS {
+        let app = apps::by_name(bench).unwrap();
+        for mode in [ExecMode::Serialized, ExecMode::OutOfOrder] {
+            let m = run_mapper_with(&app, GPU_MAPPER, &s, mode).unwrap().unwrap();
+            let p = m.profile.expect("dependency-aware run missing profile");
+            assert!(
+                p.critical_path_s >= m.elapsed_s - 1e-9,
+                "{bench} {mode:?}: path {} < elapsed {}",
+                p.critical_path_s,
+                m.elapsed_s
+            );
+            assert!(
+                p.critical_path_s <= m.elapsed_s * 1.0001,
+                "{bench} {mode:?}: path {} > elapsed {}",
+                p.critical_path_s,
+                m.elapsed_s
+            );
+            assert!(p.critical_tasks >= 1);
+            assert!(p.zero_slack_tasks >= 1);
+            assert!(!p.bottlenecks.is_empty());
+            let share_sum: f64 = p.bottlenecks.iter().map(|b| b.share).sum();
+            assert!(share_sum <= 1.0 + 1e-9, "{bench} {mode:?}: shares {share_sum}");
+        }
+    }
+}
+
+#[test]
+fn idle_statistics_expose_unused_processors() {
+    // an all-on-one-GPU mapper must read as "7 of 8 GPUs idle" — the
+    // signal the optimizer needs on maximally imbalanced mappings
+    let s = spec();
+    let app = apps::by_name("cannon").unwrap();
+    let one_gpu = "Task * GPU;\nRegion * * GPU FBMEM;\nLayout * * * SOA C_order Align==64;\n\
+                   mgpu = Machine(GPU);\n\
+                   def one(Task task) { return mgpu[0, 0]; }\n\
+                   IndexTaskMap dgemm one;";
+    let m = run_mapper_with(&app, one_gpu, &s, ExecMode::OutOfOrder)
+        .unwrap()
+        .unwrap();
+    let p = m.profile.unwrap();
+    assert!(p.worst_idle > 0.9, "unused GPUs must read as idle: {}", p.worst_idle);
+    assert!(p.mean_idle > 0.5, "mean must count unused GPUs: {}", p.mean_idle);
+}
+
+#[test]
+fn out_of_order_runs_are_deterministic() {
+    let s = spec();
+    for bench in ["circuit", "stencil", "cannon", "solomonik"] {
+        let app = apps::by_name(bench).unwrap();
+        let a = run_mapper_with(&app, GPU_MAPPER, &s, ExecMode::OutOfOrder)
+            .unwrap()
+            .unwrap();
+        let b = run_mapper_with(&app, GPU_MAPPER, &s, ExecMode::OutOfOrder)
+            .unwrap()
+            .unwrap();
+        assert_eq!(a.elapsed_s, b.elapsed_s, "{bench}");
+        assert_eq!(a.comm_bytes, b.comm_bytes, "{bench}");
+        assert_eq!(a.profile, b.profile, "{bench}: profile not deterministic");
+    }
+}
+
+#[test]
+fn out_of_order_metrics_stay_physical_for_random_genomes() {
+    let s = spec();
+    check(0x00F0, 50, |rng: &mut Rng| {
+        let bench = *rng.choose(&["circuit", "stencil", "cannon", "johnson"]);
+        let app = apps::by_name(bench).unwrap();
+        let info = AppInfo::from_app(&app);
+        let mut g = AgentGenome::random(&info, rng);
+        g.syntax_slip = false;
+        g.missing_machine = false;
+        match run_mapper_with(&app, &g.render(), &s, ExecMode::OutOfOrder).unwrap() {
+            Ok(m) => {
+                assert!(m.elapsed_s > 0.0);
+                let nprocs = m.per_proc_s.len() as f64;
+                assert!(
+                    m.busy_s <= nprocs * m.elapsed_s * 1.0001,
+                    "{bench}: busy {} > {} procs x {}",
+                    m.busy_s,
+                    nprocs,
+                    m.elapsed_s
+                );
+                for (mem, peak) in &m.peak_mem {
+                    assert!(*peak <= s.capacity(mem.kind), "{bench}: {mem} over capacity");
+                }
+                let p = m.profile.expect("profile missing");
+                assert!(p.critical_path_s >= m.elapsed_s - 1e-9);
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("Out of memory")
+                        || msg.contains("stride does not match")
+                        || msg.contains("DGEMM parameter")
+                        || msg.contains("Slice processor index out of bound")
+                        || msg.contains("event.exists()"),
+                    "{bench}: unclassified error '{msg}'"
+                );
+            }
+        }
+    });
+}

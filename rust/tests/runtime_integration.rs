@@ -1,18 +1,37 @@
 //! End-to-end AOT path: Pallas/jax -> HLO text -> PJRT compile -> execute
-//! from rust, validated against plain-rust oracles.  Requires
-//! `make artifacts` to have produced artifacts/ (run from the repo root).
+//! from rust, validated against plain-rust oracles.
+//!
+//! These tests need both the `pjrt` cargo feature (the real backend) and
+//! `artifacts/` from `make artifacts`.  When either is missing they skip
+//! cleanly, so tier-1 (`cargo test -q` from a fresh clone) stays green;
+//! set `MAPPEROPT_REQUIRE_ARTIFACTS=1` to turn the skips into failures
+//! (artifact-CI intent).
 
 use mapperopt::runtime::{tasks, ArtInput, ArtifactRuntime, CircuitState};
 use mapperopt::util::rng::Rng;
 
-fn runtime() -> ArtifactRuntime {
-    ArtifactRuntime::load(ArtifactRuntime::default_dir())
-        .expect("artifacts missing — run `make artifacts`")
+/// The runtime, or None (with a note) when this build/checkout cannot run
+/// artifact tests.
+fn runtime() -> Option<ArtifactRuntime> {
+    let required = std::env::var_os("MAPPEROPT_REQUIRE_ARTIFACTS").is_some();
+    if !ArtifactRuntime::backend_available() {
+        assert!(!required, "MAPPEROPT_REQUIRE_ARTIFACTS set but the pjrt feature is off");
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
+    match ArtifactRuntime::load(ArtifactRuntime::default_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            assert!(!required, "MAPPEROPT_REQUIRE_ARTIFACTS set but artifacts missing: {e}");
+            eprintln!("skipping: {e}");
+            None
+        }
+    }
 }
 
 #[test]
 fn manifest_covers_all_entry_points() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let names: Vec<&str> = rt.entries().map(|e| e.name.as_str()).collect();
     for want in [
         "gemm_tile_step",
@@ -28,7 +47,7 @@ fn manifest_covers_all_entry_points() {
 
 #[test]
 fn gemm_tile_matches_rust_oracle() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let t = tasks::GEMM_TILE;
     let mut rng = Rng::new(42);
     let mut mk = |n: usize| -> Vec<f32> {
@@ -48,7 +67,7 @@ fn gemm_tile_matches_rust_oracle() {
 
 #[test]
 fn circuit_artifacts_match_rust_oracle_over_ten_steps() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut pjrt_state = CircuitState::random(7);
     let mut ref_state = pjrt_state.clone();
     for step in 0..10 {
@@ -70,7 +89,7 @@ fn circuit_artifacts_match_rust_oracle_over_ten_steps() {
 
 #[test]
 fn stencil_artifact_smooths_interior() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let (r, c) = (tasks::STENCIL_ROWS, tasks::STENCIL_COLS);
     let mut rng = Rng::new(5);
     let grid: Vec<f32> = (0..r * c).map(|_| rng.f64() as f32).collect();
@@ -92,7 +111,7 @@ fn stencil_artifact_smooths_interior() {
 
 #[test]
 fn hydro_artifact_conserves_mass() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let z = tasks::HYDRO_ZONES;
     let mut rng = Rng::new(9);
     let rho: Vec<f32> = (0..z).map(|_| 0.5 + rng.f64() as f32).collect();
@@ -113,7 +132,7 @@ fn hydro_artifact_conserves_mass() {
 
 #[test]
 fn execute_rejects_wrong_arity_and_shape() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     assert!(rt.execute("gemm_tile_step", &[]).is_err());
     let bad = ArtInput::f32(vec![0.0; 4], &[2, 2]);
     assert!(rt
