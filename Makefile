@@ -1,15 +1,18 @@
 # mapperopt — build / test / experiment entry points.
 #
-#   make verify     tier-1: release build + full test suite
-#   make artifacts  AOT-lower the python task bodies to artifacts/*.hlo.txt
-#                   (needed only for the PJRT runtime path; tests skip
-#                   cleanly when artifacts/ is absent)
-#   make ci         what .github/workflows/ci.yml runs
+#   make verify      tier-1: release build + full test suite
+#   make bench-smoke build every bench target and run the scheduler
+#                    scalability bench at its smallest size (CI keeps
+#                    bench code from rotting)
+#   make artifacts   AOT-lower the python task bodies to artifacts/*.hlo.txt
+#                    (needed only for the PJRT runtime path; tests skip
+#                    cleanly when artifacts/ is absent)
+#   make ci          what .github/workflows/ci.yml runs
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify fmt fmt-check clippy ci artifacts figures clean
+.PHONY: build test verify bench-smoke fmt fmt-check clippy ci artifacts figures clean
 
 build:
 	$(CARGO) build --release
@@ -18,6 +21,10 @@ test:
 	$(CARGO) test -q
 
 verify: build test
+
+bench-smoke:
+	$(CARGO) build --benches
+	$(CARGO) bench --bench sched_scale -- smoke
 
 fmt:
 	$(CARGO) fmt --all

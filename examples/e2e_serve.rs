@@ -31,7 +31,9 @@ fn main() {
     let coord = Coordinator::new(MachineSpec::p100_cluster());
     let expert = coord.throughput(&app, expert_dsl("circuit").unwrap());
     let t0 = Instant::now();
-    let runs = coord.run_many("circuit", SearchAlgo::Trace, FeedbackConfig::FULL, 7, 5, 10);
+    let runs = coord
+        .run_many("circuit", SearchAlgo::Trace, FeedbackConfig::FULL, 7, 5, 10)
+        .expect("circuit is registered");
     let (best_dsl, best) = runs
         .iter()
         .filter_map(|r| r.best.clone())

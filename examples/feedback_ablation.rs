@@ -22,7 +22,9 @@ fn main() {
     println!("{bench}: expert = {expert:.1} ({runs} runs x 10 iters per config)\n");
 
     for cfg in [FeedbackConfig::SYSTEM, FeedbackConfig::EXPLAIN, FeedbackConfig::FULL] {
-        let rs = coord.run_many(&bench, SearchAlgo::Trace, cfg, 0xF168u64, runs, 10);
+        let rs = coord
+            .run_many(&bench, SearchAlgo::Trace, cfg, 0xF168u64, runs, 10)
+            .expect("benchmark resolved above");
         let trajs: Vec<Vec<f64>> = rs.iter().map(|r| r.trajectory()).collect();
         let mean: Vec<f64> = stats::mean_trajectory(&trajs)
             .into_iter()

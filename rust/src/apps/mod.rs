@@ -6,15 +6,17 @@ pub mod circuit;
 pub mod matmul;
 pub mod pennant;
 pub mod stencil;
+pub mod stencil3d;
 pub mod taskgraph;
 
 pub use circuit::{circuit, CircuitConfig};
 pub use matmul::{matmul, Algorithm, MatmulConfig};
 pub use pennant::{pennant, PennantConfig};
 pub use stencil::{stencil, StencilConfig};
+pub use stencil3d::{stencil3d, Stencil3dConfig};
 pub use taskgraph::{
     task_dag, Access, App, DepMode, InitialDist, Launch, LayoutReq, Metric,
-    PointTask, RegionDecl, RegionReq, TaskDecl,
+    PointTask, RegionDecl, RegionReq, TaskDag, TaskDecl,
 };
 
 /// Build any benchmark by name (CLI / harness convenience).
@@ -22,6 +24,7 @@ pub fn by_name(name: &str) -> Option<App> {
     match name {
         "circuit" => Some(circuit(CircuitConfig::default())),
         "stencil" => Some(stencil(StencilConfig::default())),
+        "stencil3d" => Some(stencil3d(Stencil3dConfig::default())),
         "pennant" => Some(pennant(PennantConfig::default())),
         other => matmul::Algorithm::parse(other)
             .map(|a| matmul(a, MatmulConfig::default())),
@@ -32,6 +35,21 @@ pub fn by_name(name: &str) -> Option<App> {
 pub const ALL_BENCHMARKS: [&str; 9] = [
     "circuit",
     "stencil",
+    "pennant",
+    "cannon",
+    "summa",
+    "pumma",
+    "johnson",
+    "solomonik",
+    "cosma",
+];
+
+/// Every registered app: the paper's nine benchmarks plus the apps added
+/// since (the overlap/scale stress scenarios).
+pub const ALL_APPS: [&str; 10] = [
+    "circuit",
+    "stencil",
+    "stencil3d",
     "pennant",
     "cannon",
     "summa",
@@ -54,5 +72,24 @@ mod tests {
             assert!(!app.tasks.is_empty());
         }
         assert!(by_name("unknown").is_none());
+    }
+
+    #[test]
+    fn all_apps_build_and_have_expert_mappers() {
+        for name in ALL_APPS {
+            let app = by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(app.name, name);
+            assert!(
+                crate::mapping::expert_dsl(name).is_some(),
+                "{name} has no expert mapper"
+            );
+        }
+        assert!(ALL_APPS.contains(&"stencil3d"));
+        // ALL_APPS must stay a superset of the paper's nine — a benchmark
+        // missing here silently disappears from bench-suite and the CLI's
+        // unknown-app listing
+        for b in ALL_BENCHMARKS {
+            assert!(ALL_APPS.contains(&b), "{b} missing from ALL_APPS");
+        }
     }
 }

@@ -1,0 +1,253 @@
+//! 3D halo-exchange stencil with *split interior/boundary launches* —
+//! the overlap-aware stress scenario for the out-of-order engine, and
+//! the scale knob behind the `sched_scale` bench (it grows cleanly past
+//! 10^5 point tasks).
+//!
+//! Classic communication/computation-overlap decomposition: each
+//! timestep runs three launches over a `px x py x pz` tile grid,
+//!
+//!   interior: reads only the tile's own cells, writes the `core`
+//!             result — pure local compute, no halo traffic;
+//!   boundary: reads the tile's thin shell plus six neighbour *face*
+//!             strips (halo views of the neighbours' `grid` tiles, torus
+//!             wrap), writes the `shell` result — all of the step's
+//!             communication, little compute;
+//!   update:   folds `core` + `shell` back into the `grid` tile.
+//!
+//! Under inferred dependencies a tile's `interior` and `boundary` both
+//! depend only on the previous step's `update`s, so boundary halo
+//! transfers (NIC-serialized at node frontiers) overlap interior compute
+//! and the steps pipeline; the bulk-synchronous barrier instead stalls
+//! every processor on the slowest frontier transfer, launch after
+//! launch.  That gap is exactly what `OutOfOrder` vs `Serialized`
+//! measures on this app.
+
+use super::taskgraph::{Access, App, Launch, Metric, RegionDecl, RegionReq, TaskDecl};
+use crate::machine::ProcKind;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stencil3dConfig {
+    /// Tile grid extents (px x py x pz tiles).
+    pub px: i64,
+    pub py: i64,
+    pub pz: i64,
+    /// Block side length: each tile is `block^3` f32 cells.
+    pub block: u64,
+    pub steps: usize,
+}
+
+impl Default for Stencil3dConfig {
+    fn default() -> Self {
+        // 16 tiles over 8 GPUs, 128^3 cells (8 MB) per tile
+        Stencil3dConfig { px: 4, py: 2, pz: 2, block: 128, steps: 10 }
+    }
+}
+
+impl Stencil3dConfig {
+    /// Smallest power-of-two growth of the default tile grid whose task
+    /// graph has at least `n` point tasks (3 launches per tile per
+    /// step) — the scale knob of `benches/sched_scale.rs` and the
+    /// large-graph parity tests.
+    pub fn with_min_point_tasks(n: usize) -> Self {
+        let mut cfg = Stencil3dConfig::default();
+        let mut axis = 0usize;
+        while cfg.point_tasks() < n {
+            match axis % 3 {
+                0 => cfg.px *= 2,
+                1 => cfg.py *= 2,
+                _ => cfg.pz *= 2,
+            }
+            axis += 1;
+        }
+        cfg
+    }
+
+    /// Point tasks in the flattened task graph.
+    pub fn point_tasks(&self) -> usize {
+        3 * (self.px * self.py * self.pz) as usize * self.steps
+    }
+}
+
+pub const GRID: usize = 0;
+pub const CORE: usize = 1;
+pub const SHELL: usize = 2;
+
+pub fn stencil3d(cfg: Stencil3dConfig) -> App {
+    let f = 4u64; // f32 cells
+    let block_bytes = cfg.block * cfg.block * cfg.block * f;
+    // one halo face strip / the tile's own six-face shell
+    let face_bytes = cfg.block * cfg.block * f;
+    let shell_bytes = 6 * face_bytes;
+
+    let tiles = vec![cfg.px, cfg.py, cfg.pz];
+    let regions = vec![
+        RegionDecl {
+            name: "grid".into(),
+            tile_bytes: block_bytes,
+            fields: 1,
+            tiles: tiles.clone(),
+        },
+        RegionDecl {
+            name: "core".into(),
+            tile_bytes: block_bytes,
+            fields: 1,
+            tiles: tiles.clone(),
+        },
+        RegionDecl {
+            name: "shell".into(),
+            tile_bytes: shell_bytes,
+            fields: 1,
+            tiles,
+        },
+    ];
+
+    let b3 = (cfg.block * cfg.block * cfg.block) as f64;
+    let b2 = (cfg.block * cfg.block) as f64;
+    let tasks = vec![
+        TaskDecl {
+            name: "interior".into(),
+            variants: vec![ProcKind::Gpu, ProcKind::Omp, ProcKind::Cpu],
+            // 27-point stencil over the tile interior
+            flops_per_point: b3 * 27.0,
+            artifact: None,
+            layout_reqs: vec![],
+        },
+        TaskDecl {
+            name: "boundary".into(),
+            variants: vec![ProcKind::Gpu, ProcKind::Omp, ProcKind::Cpu],
+            flops_per_point: 6.0 * b2 * 27.0,
+            artifact: None,
+            layout_reqs: vec![],
+        },
+        TaskDecl {
+            name: "update".into(),
+            variants: vec![ProcKind::Gpu, ProcKind::Omp, ProcKind::Cpu],
+            flops_per_point: b3 * 2.0,
+            artifact: None,
+            layout_reqs: vec![],
+        },
+    ];
+
+    let (px, py, pz) = (cfg.px, cfg.py, cfg.pz);
+    App::new(
+        "stencil3d",
+        tasks,
+        regions,
+        cfg.steps,
+        Metric::StepsPerSecond,
+        move |_step| {
+            let xp = move |p: &[i64]| vec![(p[0] + 1) % px, p[1], p[2]];
+            let xm = move |p: &[i64]| vec![(p[0] - 1).rem_euclid(px), p[1], p[2]];
+            let yp = move |p: &[i64]| vec![p[0], (p[1] + 1) % py, p[2]];
+            let ym = move |p: &[i64]| vec![p[0], (p[1] - 1).rem_euclid(py), p[2]];
+            let zp = move |p: &[i64]| vec![p[0], p[1], (p[2] + 1) % pz];
+            let zm = move |p: &[i64]| vec![p[0], p[1], (p[2] - 1).rem_euclid(pz)];
+            let ispace = vec![px, py, pz];
+            vec![
+                // interior: own cells only — overlappable local compute
+                Launch {
+                    task: 0,
+                    ispace: ispace.clone(),
+                    regions: vec![
+                        RegionReq::own(GRID, Access::Read, 2.0),
+                        RegionReq::own(CORE, Access::Write, 1.0),
+                    ],
+                },
+                // boundary: thin own shell + six neighbour faces (halo
+                // views of `grid`, wrapping like a torus)
+                Launch {
+                    task: 1,
+                    ispace: ispace.clone(),
+                    regions: vec![
+                        RegionReq::own(GRID, Access::Read, 2.0)
+                            .aliased("shell_src")
+                            .bytes(shell_bytes),
+                        RegionReq::new(GRID, Access::Read, 2.0, xp)
+                            .aliased("halo_xp")
+                            .bytes(face_bytes),
+                        RegionReq::new(GRID, Access::Read, 2.0, xm)
+                            .aliased("halo_xm")
+                            .bytes(face_bytes),
+                        RegionReq::new(GRID, Access::Read, 2.0, yp)
+                            .aliased("halo_yp")
+                            .bytes(face_bytes),
+                        RegionReq::new(GRID, Access::Read, 2.0, ym)
+                            .aliased("halo_ym")
+                            .bytes(face_bytes),
+                        RegionReq::new(GRID, Access::Read, 2.0, zp)
+                            .aliased("halo_zp")
+                            .bytes(face_bytes),
+                        RegionReq::new(GRID, Access::Read, 2.0, zm)
+                            .aliased("halo_zm")
+                            .bytes(face_bytes),
+                        RegionReq::own(SHELL, Access::Write, 1.0),
+                    ],
+                },
+                // update: fold core + shell back into the state tile
+                Launch {
+                    task: 2,
+                    ispace,
+                    regions: vec![
+                        RegionReq::own(CORE, Access::Read, 1.0),
+                        RegionReq::own(SHELL, Access::Read, 1.0),
+                        RegionReq::own(GRID, Access::ReadWrite, 1.0),
+                    ],
+                },
+            ]
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_split_launches_per_step() {
+        let app = stencil3d(Stencil3dConfig::default());
+        let ls = app.launches(0);
+        assert_eq!(ls.len(), 3);
+        assert_eq!(app.tasks.len(), 3);
+        for l in &ls {
+            assert_eq!(l.num_points(), 16); // 4 x 2 x 2 tiles
+        }
+        assert_eq!(ls[1].regions.len(), 8, "shell + 6 halos + output");
+        assert_eq!(Stencil3dConfig::default().point_tasks(), 3 * 16 * 10);
+    }
+
+    #[test]
+    fn halos_wrap_torus_and_are_thin() {
+        let app = stencil3d(Stencil3dConfig::default());
+        let l = app.launches(0);
+        let xm = &l[1].regions[2]; // halo_xm
+        assert_eq!((xm.tile_of)(&[0, 1, 0]), vec![3, 1, 0]);
+        let zp = &l[1].regions[5]; // halo_zp
+        assert_eq!((zp.tile_of)(&[1, 0, 1]), vec![1, 0, 0]);
+        assert!(
+            xm.touched_bytes(&app.regions) < app.regions[GRID].tile_bytes / 100,
+            "halo faces must be thin strips"
+        );
+    }
+
+    #[test]
+    fn halo_alias_names_visible_to_mapper() {
+        let app = stencil3d(Stencil3dConfig::default());
+        let l = app.launches(0);
+        let names: Vec<&str> =
+            l[1].regions.iter().map(|r| r.mapped_name(&app.regions)).collect();
+        for want in ["shell_src", "halo_xp", "halo_zm", "shell"] {
+            assert!(names.contains(&want), "missing region arg name {want}");
+        }
+    }
+
+    #[test]
+    fn scale_knob_reaches_target_sizes() {
+        for n in [1_000, 10_000, 50_000, 100_000] {
+            let cfg = Stencil3dConfig::with_min_point_tasks(n);
+            assert!(cfg.point_tasks() >= n);
+            assert!(cfg.point_tasks() < 8 * n, "overshoot at {n}");
+            let app = stencil3d(cfg);
+            assert_eq!(app.launches(0).len(), 3);
+        }
+    }
+}

@@ -11,8 +11,31 @@
 //! happens-before edges between them from the launches' region
 //! read/write/reduce sets (Legion's logical dependence analysis, at tile
 //! granularity).  The dependency-aware engine in [`crate::sim`] schedules
-//! that DAG out of order; [`DepMode::Serialized`] instead emits full
-//! barrier edges, which reproduces bulk-synchronous timing exactly.
+//! that DAG out of order; [`DepMode::Serialized`] instead encodes the
+//! bulk-synchronous launch barrier, which reproduces its timing exactly.
+//!
+//! # Barrier compression (the 10^5-task encoding)
+//!
+//! Dense dependence patterns are routed through zero-duration *synthetic
+//! nodes* instead of materializing cross-product edge sets, so the DAG
+//! stays linear in the number of point tasks:
+//!
+//! * `Serialized`: a launch barrier between two P-point launches is one
+//!   barrier node (P in-edges, P out-edges) rather than the P^2 bipartite
+//!   edge set.  A single-point launch acts as its own barrier.
+//! * `Inferred`: when a consumer would depend on a tile's full reader (or
+//!   pending-reducer) set and that set has [`GATE_FANIN`] or more
+//!   members, the set is collapsed through a memoized *gate* node shared
+//!   by every consumer of the same set — broadcast-read-then-write
+//!   patterns cost O(P) edges instead of O(P^2).
+//!
+//! Synthetic nodes carry no point task ([`TaskDag::point_of`] returns
+//! `None`), take zero time, and are timing-neutral: a consumer's ready
+//! time is still the max end time of the real predecessors behind the
+//! node.  The DAG is returned as a [`TaskDag`]: CSR (offset + data)
+//! predecessor/successor adjacency over node ids in topological order,
+//! with the launch-point coordinates packed in one flat arena instead of
+//! one heap `Vec` per task.
 
 use std::collections::HashMap;
 
@@ -322,7 +345,9 @@ pub enum DepMode {
     Serialized,
 }
 
-/// One point of one index-task launch, in program order.
+/// One point of one index-task launch, in program order.  The launch
+/// point's coordinates live in the owning [`TaskDag`]'s flat arena
+/// ([`TaskDag::coords`]).
 #[derive(Debug, Clone)]
 pub struct PointTask {
     /// Timestep the task belongs to.
@@ -331,66 +356,252 @@ pub struct PointTask {
     pub launch: usize,
     /// Index into `App::tasks`.
     pub task: usize,
-    /// The launch point.
-    pub point: Vec<i64>,
+}
+
+/// Reader/reducer fan-in at which Inferred-mode dependence sets are
+/// collapsed through a gate node (below it, direct edges are cheaper).
+pub const GATE_FANIN: usize = 8;
+
+/// Sentinel in `TaskDag::node_point` marking a synthetic node.
+const NO_POINT: u32 = u32::MAX;
+
+/// Compressed sparse adjacency: row `i` of `off`/`dat` holds the
+/// neighbours of node `i` (ascending node ids).
+#[derive(Debug, Clone, Default)]
+pub struct Csr {
+    off: Vec<u32>,
+    dat: Vec<u32>,
+}
+
+impl Csr {
+    fn from_lists(lists: &[Vec<u32>]) -> Csr {
+        let mut off = Vec::with_capacity(lists.len() + 1);
+        off.push(0u32);
+        let total: usize = lists.iter().map(|l| l.len()).sum();
+        let mut dat = Vec::with_capacity(total);
+        for l in lists {
+            dat.extend_from_slice(l);
+            off.push(dat.len() as u32);
+        }
+        Csr { off, dat }
+    }
+
+    /// Transpose of `lists`: row `i` holds every `j` with `i` in
+    /// `lists[j]`, ascending (successors from predecessor lists).
+    fn transpose(lists: &[Vec<u32>]) -> Csr {
+        let n = lists.len();
+        let mut off = vec![0u32; n + 1];
+        for l in lists {
+            for &p in l {
+                off[p as usize + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            off[i + 1] += off[i];
+        }
+        let mut cur: Vec<u32> = off[..n].to_vec();
+        let mut dat = vec![0u32; off[n] as usize];
+        for (j, l) in lists.iter().enumerate() {
+            for &p in l {
+                dat[cur[p as usize] as usize] = j as u32;
+                cur[p as usize] += 1;
+            }
+        }
+        Csr { off, dat }
+    }
+
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.dat[self.off[i] as usize..self.off[i + 1] as usize]
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.dat.len()
+    }
+}
+
+/// The flattened task graph: point tasks in program order plus CSR
+/// adjacency over *nodes* (point tasks interleaved with the synthetic
+/// barrier/gate nodes of the compressed encoding).  Node ids are in
+/// topological order; point tasks appear in program order within it.
+#[derive(Debug, Clone, Default)]
+pub struct TaskDag {
+    points: Vec<PointTask>,
+    /// Flat coordinate arena: point `i`'s coordinates are
+    /// `coords[coord_off[i]..coord_off[i + 1]]`.
+    coords: Vec<i64>,
+    coord_off: Vec<u32>,
+    /// Per node: index into `points`, or `NO_POINT` for synthetic nodes.
+    node_point: Vec<u32>,
+    preds: Csr,
+    succs: Csr,
+}
+
+impl TaskDag {
+    pub fn num_points(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.node_point.len()
+    }
+
+    /// Total predecessor edges (what barrier compression keeps O(n)).
+    pub fn num_edges(&self) -> usize {
+        self.preds.num_edges()
+    }
+
+    pub fn point(&self, i: usize) -> &PointTask {
+        &self.points[i]
+    }
+
+    pub fn points(&self) -> &[PointTask] {
+        &self.points
+    }
+
+    /// Coordinates of point task `i` (program-order index, not node id).
+    pub fn coords(&self, i: usize) -> &[i64] {
+        &self.coords[self.coord_off[i] as usize..self.coord_off[i + 1] as usize]
+    }
+
+    /// Point-task index of a node, or `None` for synthetic nodes.
+    pub fn point_of(&self, node: usize) -> Option<usize> {
+        let p = self.node_point[node];
+        (p != NO_POINT).then_some(p as usize)
+    }
+
+    pub fn preds_of(&self, node: usize) -> &[u32] {
+        self.preds.row(node)
+    }
+
+    pub fn succs_of(&self, node: usize) -> &[u32] {
+        self.succs.row(node)
+    }
 }
 
 /// Per-(region, tile) dependence bookkeeping during DAG construction.
 #[derive(Default)]
 struct TileState {
-    last_writer: Option<usize>,
+    last_writer: Option<u32>,
     /// Readers since the last write (WAR sources).
-    readers: Vec<usize>,
+    readers: Vec<u32>,
     /// Pending reductions since the last write (commute with each other,
     /// act as writers for subsequent reads/writes).
-    reducers: Vec<usize>,
+    reducers: Vec<u32>,
+    /// Memoized gate nodes standing in for the *current* readers /
+    /// reducers sets; invalidated whenever the underlying set changes.
+    readers_gate: Option<u32>,
+    reducers_gate: Option<u32>,
+}
+
+/// Depend on `sources`: directly below [`GATE_FANIN`], through a shared
+/// (memoized) gate node at or above it.
+fn gate_deps(
+    dd: &mut Vec<u32>,
+    sources: &[u32],
+    gate: &mut Option<u32>,
+    node_point: &mut Vec<u32>,
+    pred_lists: &mut Vec<Vec<u32>>,
+) {
+    if sources.len() < GATE_FANIN {
+        dd.extend_from_slice(sources);
+        return;
+    }
+    let g = *gate.get_or_insert_with(|| {
+        node_point.push(NO_POINT);
+        pred_lists.push(sources.to_vec());
+        (node_point.len() - 1) as u32
+    });
+    dd.push(g);
 }
 
 /// Flatten `steps` (one `Vec<Launch>` per timestep, as produced by
-/// [`App::launches`]) into per-point tasks plus predecessor lists.
-/// Task ids are assigned in program order — (step, launch, point) — so the
-/// id order is a topological order of the returned DAG.
-pub fn task_dag(
-    app: &App,
-    steps: &[Vec<Launch>],
-    mode: DepMode,
-) -> (Vec<PointTask>, Vec<Vec<usize>>) {
-    let mut tasks: Vec<PointTask> = Vec::new();
-    let mut preds: Vec<Vec<usize>> = Vec::new();
+/// [`App::launches`]) into a [`TaskDag`].  Node ids are assigned in
+/// creation order — gates/barriers always before their consumers — so
+/// the id order is a topological order of the returned DAG, and point
+/// tasks keep program order (step, launch, point).
+pub fn task_dag(app: &App, steps: &[Vec<Launch>], mode: DepMode) -> TaskDag {
+    let mut points: Vec<PointTask> = Vec::new();
+    let mut coords: Vec<i64> = Vec::new();
+    let mut coord_off: Vec<u32> = vec![0];
+    let mut node_point: Vec<u32> = Vec::new();
+    let mut pred_lists: Vec<Vec<u32>> = Vec::new();
     let mut tiles: HashMap<(usize, i64), TileState> = HashMap::new();
-    let mut prev_launch: Vec<usize> = Vec::new();
+    // Serialized barrier bookkeeping: the previous non-empty launch's
+    // point-node range, and the lazily created barrier standing in for
+    // it.  An empty launch leaves the barrier where it was (bulk-sync
+    // keeps its clock), so it must not clear the edge source.
+    let mut prev_range: Option<(u32, u32)> = None;
+    let mut prev_barrier: Option<u32> = None;
+    // per-point scratch: (region, tile lin) of each region req, computed
+    // once in the dependency phase and reused by the registration phase
+    let mut tile_scratch: Vec<(usize, i64)> = Vec::new();
 
     for (step, launches) in steps.iter().enumerate() {
         for (li, launch) in launches.iter().enumerate() {
-            let first_id = tasks.len();
+            let mut first_point_node: Option<u32> = None;
+            let mut last_point_node = 0u32;
             for point in launch.points() {
-                let id = tasks.len();
-                let mut dd: Vec<usize> = Vec::new();
+                // ---- dependencies (may allocate gate/barrier nodes) ----
+                let mut dd: Vec<u32> = Vec::new();
                 match mode {
-                    DepMode::Serialized => dd.extend_from_slice(&prev_launch),
+                    DepMode::Serialized => {
+                        if let Some((lo, hi)) = prev_range {
+                            let b = *prev_barrier.get_or_insert_with(|| {
+                                if hi - lo == 1 {
+                                    lo // a single point is its own barrier
+                                } else {
+                                    node_point.push(NO_POINT);
+                                    pred_lists.push((lo..hi).collect());
+                                    (node_point.len() - 1) as u32
+                                }
+                            });
+                            dd.push(b);
+                        }
+                    }
                     DepMode::Inferred => {
+                        tile_scratch.clear();
                         for rr in &launch.regions {
                             let region = &app.regions[rr.region];
                             let lin = region.tile_lin(&(rr.tile_of)(&point));
+                            tile_scratch.push((rr.region, lin));
                             let ts = tiles.entry((rr.region, lin)).or_default();
                             match rr.access {
                                 Access::Read => {
                                     dd.extend(ts.last_writer);
-                                    dd.extend_from_slice(&ts.reducers);
-                                    ts.readers.push(id);
+                                    gate_deps(
+                                        &mut dd,
+                                        &ts.reducers,
+                                        &mut ts.reducers_gate,
+                                        &mut node_point,
+                                        &mut pred_lists,
+                                    );
                                 }
                                 Access::Reduce => {
                                     dd.extend(ts.last_writer);
-                                    dd.extend_from_slice(&ts.readers);
-                                    ts.reducers.push(id);
+                                    gate_deps(
+                                        &mut dd,
+                                        &ts.readers,
+                                        &mut ts.readers_gate,
+                                        &mut node_point,
+                                        &mut pred_lists,
+                                    );
                                 }
                                 Access::Write | Access::ReadWrite => {
                                     dd.extend(ts.last_writer);
-                                    dd.extend_from_slice(&ts.readers);
-                                    dd.extend_from_slice(&ts.reducers);
-                                    ts.readers.clear();
-                                    ts.reducers.clear();
-                                    ts.last_writer = Some(id);
+                                    gate_deps(
+                                        &mut dd,
+                                        &ts.readers,
+                                        &mut ts.readers_gate,
+                                        &mut node_point,
+                                        &mut pred_lists,
+                                    );
+                                    gate_deps(
+                                        &mut dd,
+                                        &ts.reducers,
+                                        &mut ts.reducers_gate,
+                                        &mut node_point,
+                                        &mut pred_lists,
+                                    );
                                 }
                             }
                         }
@@ -398,18 +609,62 @@ pub fn task_dag(
                 }
                 dd.sort_unstable();
                 dd.dedup();
-                dd.retain(|&p| p != id);
-                preds.push(dd);
-                tasks.push(PointTask { step, launch: li, task: launch.task, point });
+
+                // ---- allocate the point node ---------------------------
+                let id = node_point.len() as u32;
+                node_point.push(points.len() as u32);
+                pred_lists.push(dd);
+                if first_point_node.is_none() {
+                    first_point_node = Some(id);
+                }
+                last_point_node = id;
+
+                // ---- register this point's accesses --------------------
+                // (reader/reducer sets stay ascending and duplicate-free:
+                // two region reqs of one point can wrap onto the same
+                // tile, and `id` is always the largest id so far)
+                if mode == DepMode::Inferred {
+                    for (rr, &key) in launch.regions.iter().zip(&tile_scratch) {
+                        let ts = tiles.entry(key).or_default();
+                        match rr.access {
+                            Access::Read => {
+                                if ts.readers.last() != Some(&id) {
+                                    ts.readers.push(id);
+                                    ts.readers_gate = None;
+                                }
+                            }
+                            Access::Reduce => {
+                                if ts.reducers.last() != Some(&id) {
+                                    ts.reducers.push(id);
+                                    ts.reducers_gate = None;
+                                }
+                            }
+                            Access::Write | Access::ReadWrite => {
+                                ts.readers.clear();
+                                ts.reducers.clear();
+                                ts.readers_gate = None;
+                                ts.reducers_gate = None;
+                                ts.last_writer = Some(id);
+                            }
+                        }
+                    }
+                }
+                coords.extend_from_slice(&point);
+                coord_off.push(coords.len() as u32);
+                points.push(PointTask { step, launch: li, task: launch.task });
             }
-            // an empty launch leaves the barrier where it was (bulk-sync
-            // keeps its clock), so it must not clear the edge source
-            if mode == DepMode::Serialized && tasks.len() > first_id {
-                prev_launch = (first_id..tasks.len()).collect();
+            if mode == DepMode::Serialized {
+                if let Some(first) = first_point_node {
+                    prev_range = Some((first, last_point_node + 1));
+                    prev_barrier = None;
+                }
             }
         }
     }
-    (tasks, preds)
+
+    let preds = Csr::from_lists(&pred_lists);
+    let succs = Csr::transpose(&pred_lists);
+    TaskDag { points, coords, coord_off, node_point, preds, succs }
 }
 
 #[cfg(test)]
@@ -493,7 +748,7 @@ mod tests {
         assert_eq!((r.tile_of)(&[3, 2]), vec![0, 2]);
     }
 
-    fn dag_of(app: &App, mode: DepMode) -> (Vec<PointTask>, Vec<Vec<usize>>) {
+    fn dag_of(app: &App, mode: DepMode) -> TaskDag {
         let steps: Vec<Vec<Launch>> = (0..app.steps).map(|s| app.launches(s)).collect();
         task_dag(app, &steps, mode)
     }
@@ -501,49 +756,151 @@ mod tests {
     #[test]
     fn serialized_dag_encodes_launch_barriers() {
         let app = tiny_app(); // 3 steps x 1 launch x 4 points
-        let (tasks, preds) = dag_of(&app, DepMode::Serialized);
-        assert_eq!(tasks.len(), 12);
-        for i in 0..4 {
-            assert!(preds[i].is_empty(), "first launch must be root");
+        let dag = dag_of(&app, DepMode::Serialized);
+        assert_eq!(dag.num_points(), 12);
+        // nodes: 4 points, barrier, 4 points, barrier, 4 points
+        assert_eq!(dag.num_nodes(), 14);
+        for node in 0..4 {
+            assert!(dag.preds_of(node).is_empty(), "first launch must be root");
+            assert_eq!(dag.point_of(node), Some(node));
         }
-        for i in 4..8 {
-            assert_eq!(preds[i], vec![0, 1, 2, 3]);
+        assert_eq!(dag.point_of(4), None, "node 4 is the first launch barrier");
+        assert_eq!(dag.preds_of(4), &[0u32, 1, 2, 3][..]);
+        for node in 5..9 {
+            assert_eq!(dag.preds_of(node), &[4u32][..]);
         }
-        for i in 8..12 {
-            assert_eq!(preds[i], vec![4, 5, 6, 7]);
+        assert_eq!(dag.point_of(9), None);
+        assert_eq!(dag.preds_of(9), &[5u32, 6, 7, 8][..]);
+        for node in 10..14 {
+            assert_eq!(dag.preds_of(node), &[9u32][..]);
         }
+    }
+
+    #[test]
+    fn serialized_barrier_edges_linear_in_launch_width() {
+        // a P-point launch per step must cost O(P) edges per launch pair,
+        // not the P^2 bipartite barrier
+        let p = 64i64;
+        let steps = 4usize;
+        let app = App::new(
+            "wide",
+            vec![TaskDecl {
+                name: "work".into(),
+                variants: vec![ProcKind::Gpu],
+                flops_per_point: 1.0,
+                artifact: None,
+                layout_reqs: vec![],
+            }],
+            vec![RegionDecl {
+                name: "data".into(),
+                tile_bytes: 64,
+                fields: 1,
+                tiles: vec![p],
+            }],
+            steps,
+            Metric::StepsPerSecond,
+            move |_| {
+                vec![Launch {
+                    task: 0,
+                    ispace: vec![p],
+                    regions: vec![RegionReq::own(0, Access::ReadWrite, 1.0)],
+                }]
+            },
+        );
+        let dag = dag_of(&app, DepMode::Serialized);
+        assert_eq!(dag.num_points(), (p as usize) * steps);
+        // one barrier node between consecutive launches
+        assert_eq!(dag.num_nodes(), (p as usize) * steps + (steps - 1));
+        // each barrier: P in-edges + P out-edges
+        assert_eq!(dag.num_edges(), (steps - 1) * 2 * p as usize);
+    }
+
+    #[test]
+    fn inferred_gate_compresses_reader_cross_products() {
+        // one shared tile read by 16 points then reduced by 16 points:
+        // the reduce launch must depend through one gate node (2P edges),
+        // not the P^2 readers-x-reducers cross product
+        let p = 16i64;
+        let app = App::new(
+            "fan",
+            vec![TaskDecl {
+                name: "t".into(),
+                variants: vec![ProcKind::Gpu],
+                flops_per_point: 1.0,
+                artifact: None,
+                layout_reqs: vec![],
+            }],
+            vec![RegionDecl {
+                name: "acc".into(),
+                tile_bytes: 64,
+                fields: 1,
+                tiles: vec![1],
+            }],
+            1,
+            Metric::StepsPerSecond,
+            move |_| {
+                vec![
+                    Launch {
+                        task: 0,
+                        ispace: vec![p],
+                        regions: vec![RegionReq::new(0, Access::Read, 1.0, |_| vec![0])],
+                    },
+                    Launch {
+                        task: 0,
+                        ispace: vec![p],
+                        regions: vec![RegionReq::new(0, Access::Reduce, 1.0, |_| {
+                            vec![0]
+                        })],
+                    },
+                ]
+            },
+        );
+        let dag = dag_of(&app, DepMode::Inferred);
+        // nodes: 16 readers, 1 gate, 16 reducers
+        assert_eq!(dag.num_points(), 32);
+        assert_eq!(dag.num_nodes(), 33);
+        assert_eq!(dag.point_of(16), None, "node 16 is the readers gate");
+        assert_eq!(dag.preds_of(16).len(), p as usize);
+        for node in 17..33 {
+            assert_eq!(dag.preds_of(node), &[16u32][..]);
+        }
+        assert_eq!(dag.num_edges(), 2 * p as usize);
     }
 
     #[test]
     fn inferred_dag_chains_readwrite_tiles() {
         // tiny_app: one RW region, identity tiling -> per-point chains
+        // (fan-in 1 everywhere, so no gate nodes: node id == point id)
         let app = tiny_app();
-        let (tasks, preds) = dag_of(&app, DepMode::Inferred);
-        assert_eq!(tasks.len(), 12);
+        let dag = dag_of(&app, DepMode::Inferred);
+        assert_eq!(dag.num_points(), 12);
+        assert_eq!(dag.num_nodes(), 12);
         for i in 0..4 {
-            assert!(preds[i].is_empty());
+            assert!(dag.preds_of(i).is_empty());
         }
         for i in 4..12 {
             // point p at step s depends only on point p at step s-1
-            assert_eq!(preds[i], vec![i - 4]);
+            assert_eq!(dag.preds_of(i), &[(i - 4) as u32][..]);
         }
     }
 
     #[test]
     fn inferred_circuit_deps_follow_ghost_neighbourhood() {
         // CNC ids 0..8, DC ids 8..16, UV ids 16..24 (step 0), CNC' 24..32.
+        // All fan-ins sit below GATE_FANIN, so node ids equal point ids.
         let app = crate::apps::circuit(crate::apps::CircuitConfig::default());
-        let (tasks, preds) = dag_of(&app, DepMode::Inferred);
-        assert_eq!(tasks[8].task, 1, "id 8 is distribute_charge piece 0");
+        let dag = dag_of(&app, DepMode::Inferred);
+        assert_eq!(dag.num_nodes(), dag.num_points(), "no gates expected");
+        assert_eq!(dag.point(8).task, 1, "id 8 is distribute_charge piece 0");
         // DC piece 0 reduces shared tiles 0 and 1, whose readers are the
         // CNC tasks of pieces 7, 0, 1 (ghost reads wrap around).
-        assert_eq!(preds[8], vec![0, 1, 7]);
+        assert_eq!(dag.preds_of(8), &[0u32, 1, 7][..]);
         // UV piece 0 writes shared tile 0: WAR on CNC 7/0, plus the
         // pending reductions of DC 7/0 and its private-tile chain.
-        assert_eq!(preds[16], vec![0, 7, 8, 15]);
+        assert_eq!(dag.preds_of(16), &[0u32, 7, 8, 15][..]);
         // Next step's CNC piece 0 reads what UV pieces 0/1 wrote and
         // rewrites its wires (read by DC 0).
-        assert_eq!(preds[24], vec![0, 8, 16, 17]);
+        assert_eq!(dag.preds_of(24), &[0u32, 8, 16, 17][..]);
     }
 
     #[test]
@@ -554,13 +911,26 @@ mod tests {
             crate::apps::Algorithm::Cannon,
             crate::apps::MatmulConfig::default(),
         );
-        let (tasks, preds) = dag_of(&app, DepMode::Inferred);
-        assert_eq!(tasks.len(), 64); // 4 steps x 16 points
+        let dag = dag_of(&app, DepMode::Inferred);
+        assert_eq!(dag.num_points(), 64); // 4 steps x 16 points
+        assert_eq!(dag.num_nodes(), 64);
         for i in 0..16 {
-            assert!(preds[i].is_empty());
+            assert!(dag.preds_of(i).is_empty());
         }
         for i in 16..64 {
-            assert_eq!(preds[i], vec![i - 16]);
+            assert_eq!(dag.preds_of(i), &[(i - 16) as u32][..]);
+        }
+    }
+
+    #[test]
+    fn coordinate_arena_matches_launch_enumeration() {
+        let app = tiny_app();
+        let dag = dag_of(&app, DepMode::Serialized);
+        let l = app.launches(0);
+        let expected: Vec<Vec<i64>> = l[0].points().collect();
+        for i in 0..4 {
+            assert_eq!(dag.coords(i), expected[i].as_slice());
+            assert_eq!(dag.coords(i + 4), expected[i].as_slice(), "step 1 repeats");
         }
     }
 }

@@ -14,8 +14,9 @@
 //! [`Coordinator::with_mode`] for [`ExecMode::OutOfOrder`] runs.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::apps::{self, App};
 use crate::feedback::{FeedbackConfig, SystemFeedback};
@@ -62,6 +63,32 @@ impl RunResult {
 pub struct CoordinatorStats {
     pub evals: AtomicUsize,
     pub cache_hits: AtomicUsize,
+    /// Cumulative point tasks simulated by cache-miss evaluations (from
+    /// the attached [`PerfProfile`]s; `ExecMode::BulkSync` coordinators
+    /// attach none and count 0).
+    pub point_tasks: AtomicU64,
+    /// Wall-clock nanoseconds spent inside cache-miss evaluations.
+    pub eval_ns: AtomicU64,
+}
+
+impl CoordinatorStats {
+    /// Cache-miss evaluations per wall-clock second spent evaluating.
+    pub fn evals_per_sec(&self) -> f64 {
+        let ns = self.eval_ns.load(Ordering::Relaxed);
+        if ns == 0 {
+            return 0.0;
+        }
+        self.evals.load(Ordering::Relaxed) as f64 / (ns as f64 * 1e-9)
+    }
+
+    /// Simulated point tasks per wall-clock second spent evaluating.
+    pub fn point_tasks_per_sec(&self) -> f64 {
+        let ns = self.eval_ns.load(Ordering::Relaxed);
+        if ns == 0 {
+            return 0.0;
+        }
+        self.point_tasks.load(Ordering::Relaxed) as f64 / (ns as f64 * 1e-9)
+    }
 }
 
 /// The optimization service.
@@ -106,11 +133,20 @@ impl Coordinator {
             return hit.clone();
         }
         self.stats.evals.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
         let fb = match run_mapper_with(app, dsl, &self.spec, self.mode) {
             Err(ce) => SystemFeedback::CompileError(ce.to_string()),
             Ok(Err(xe)) => SystemFeedback::ExecutionError(xe.to_string()),
             Ok(Ok(m)) => SystemFeedback::from_metrics(&m),
         };
+        self.stats
+            .eval_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if let Some(p) = fb.profile() {
+            self.stats
+                .point_tasks
+                .fetch_add(p.total_tasks as u64, Ordering::Relaxed);
+        }
         self.cache.lock().unwrap().insert(key, fb.clone());
         fb
     }
@@ -159,7 +195,10 @@ impl Coordinator {
     }
 
     /// Run `runs` seeded campaigns in parallel worker threads (the paper
-    /// repeats each optimization 5 times and averages).
+    /// repeats each optimization 5 times and averages).  The app name is
+    /// resolved before any worker spawns: an unknown name is a proper
+    /// error instead of a panic inside a worker thread, and all workers
+    /// share one `App` instead of rebuilding it per thread.
     pub fn run_many(
         &self,
         app_name: &str,
@@ -168,23 +207,22 @@ impl Coordinator {
         base_seed: u64,
         runs: usize,
         iters: usize,
-    ) -> Vec<RunResult> {
-        std::thread::scope(|scope| {
+    ) -> Result<Vec<RunResult>, String> {
+        let app = apps::by_name(app_name)
+            .ok_or_else(|| format!("unknown app '{app_name}'"))?;
+        let app = &app;
+        Ok(std::thread::scope(|scope| {
             let handles: Vec<_> = (0..runs)
                 .map(|r| {
                     let seed = base_seed.wrapping_add(1000 * r as u64 + 17);
-                    scope.spawn(move || {
-                        let app = apps::by_name(app_name)
-                            .unwrap_or_else(|| panic!("unknown app {app_name}"));
-                        self.run_optimizer(&app, algo, cfg, seed, iters)
-                    })
+                    scope.spawn(move || self.run_optimizer(app, algo, cfg, seed, iters))
                 })
                 .collect();
             handles
                 .into_iter()
                 .map(|h| h.join().expect("worker panicked"))
                 .collect()
-        })
+        }))
     }
 
     /// Throughputs of `n` random mappers (errors count as 0 — the
@@ -269,12 +307,43 @@ mod tests {
     #[test]
     fn run_many_parallel_and_deterministic() {
         let c = coord();
-        let runs = c.run_many("stencil", SearchAlgo::Trace, FeedbackConfig::FULL, 1, 3, 4);
+        let runs = c
+            .run_many("stencil", SearchAlgo::Trace, FeedbackConfig::FULL, 1, 3, 4)
+            .unwrap();
         assert_eq!(runs.len(), 3);
-        let again = c.run_many("stencil", SearchAlgo::Trace, FeedbackConfig::FULL, 1, 3, 4);
+        let again = c
+            .run_many("stencil", SearchAlgo::Trace, FeedbackConfig::FULL, 1, 3, 4)
+            .unwrap();
         for (a, b) in runs.iter().zip(&again) {
             assert_eq!(a.trajectory(), b.trajectory());
         }
+    }
+
+    #[test]
+    fn run_many_unknown_app_is_an_error_not_a_panic() {
+        let c = coord();
+        let err = c
+            .run_many("nope", SearchAlgo::Trace, FeedbackConfig::FULL, 1, 2, 2)
+            .unwrap_err();
+        assert!(err.contains("unknown app 'nope'"), "{err}");
+    }
+
+    #[test]
+    fn stats_track_eval_throughput_and_point_tasks() {
+        let c = coord();
+        let app = apps::by_name("stencil3d").unwrap();
+        let dsl = expert_dsl("stencil3d").unwrap();
+        assert_eq!(c.stats.point_tasks.load(Ordering::Relaxed), 0);
+        c.evaluate(&app, dsl);
+        let pts = c.stats.point_tasks.load(Ordering::Relaxed);
+        assert_eq!(pts, 480, "3 launches x 16 tiles x 10 steps");
+        // cache hits must not double-count time or tasks
+        let ns = c.stats.eval_ns.load(Ordering::Relaxed);
+        c.evaluate(&app, dsl);
+        assert_eq!(c.stats.point_tasks.load(Ordering::Relaxed), pts);
+        assert_eq!(c.stats.eval_ns.load(Ordering::Relaxed), ns);
+        assert!(c.stats.evals_per_sec() > 0.0);
+        assert!(c.stats.point_tasks_per_sec() > 0.0);
     }
 
     #[test]
@@ -361,10 +430,12 @@ mod tests {
     #[test]
     fn profile_feedback_runs_are_deterministic() {
         let c = coord();
-        let runs =
-            c.run_many("circuit", SearchAlgo::Trace, FeedbackConfig::PROFILE, 9, 2, 5);
-        let again =
-            c.run_many("circuit", SearchAlgo::Trace, FeedbackConfig::PROFILE, 9, 2, 5);
+        let runs = c
+            .run_many("circuit", SearchAlgo::Trace, FeedbackConfig::PROFILE, 9, 2, 5)
+            .unwrap();
+        let again = c
+            .run_many("circuit", SearchAlgo::Trace, FeedbackConfig::PROFILE, 9, 2, 5)
+            .unwrap();
         for (a, b) in runs.iter().zip(&again) {
             assert_eq!(a.trajectory(), b.trajectory());
         }

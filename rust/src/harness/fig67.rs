@@ -34,22 +34,19 @@ pub fn run_bench(coord: &Coordinator, bench: &'static str, p: ExpParams) -> Benc
     let random_scores = coord.random_baseline(&app, p.random_mappers, p.seed ^ 0xBAD);
     let random_norm = stats::mean(&random_scores) / expert_raw;
 
-    let trace_runs = coord.run_many(
-        bench,
-        SearchAlgo::Trace,
-        FeedbackConfig::FULL,
-        p.seed,
-        p.runs,
-        p.iters,
-    );
-    let opro_runs = coord.run_many(
-        bench,
-        SearchAlgo::Opro,
-        FeedbackConfig::FULL,
-        p.seed ^ 0x0520,
-        p.runs,
-        p.iters,
-    );
+    let trace_runs = coord
+        .run_many(bench, SearchAlgo::Trace, FeedbackConfig::FULL, p.seed, p.runs, p.iters)
+        .expect("benchmark resolved above");
+    let opro_runs = coord
+        .run_many(
+            bench,
+            SearchAlgo::Opro,
+            FeedbackConfig::FULL,
+            p.seed ^ 0x0520,
+            p.runs,
+            p.iters,
+        )
+        .expect("benchmark resolved above");
 
     let trace_trajs: Vec<Vec<f64>> = trace_runs.iter().map(|r| r.trajectory()).collect();
     let opro_trajs: Vec<Vec<f64>> = opro_runs.iter().map(|r| r.trajectory()).collect();

@@ -38,14 +38,9 @@ pub fn fig8(coord: &Coordinator, p: ExpParams) -> Vec<AblationResult> {
         let app = apps::by_name(bench).unwrap();
         let expert = coord.throughput(&app, expert_dsl(bench).unwrap());
         for cfg in FIG8_CONFIGS {
-            let runs = coord.run_many(
-                bench,
-                SearchAlgo::Trace,
-                cfg,
-                p.seed ^ 0xF18,
-                nruns,
-                p.iters,
-            );
+            let runs = coord
+                .run_many(bench, SearchAlgo::Trace, cfg, p.seed ^ 0xF18, nruns, p.iters)
+                .expect("fig8 benchmarks are registered");
             let trajs: Vec<Vec<f64>> = runs.iter().map(|r| r.trajectory()).collect();
             let traj: Vec<f64> = stats::mean_trajectory(&trajs)
                 .into_iter()

@@ -234,6 +234,48 @@ impl MachineSpec {
             .collect()
     }
 
+    /// Processors per node across all kinds — the node stride of the
+    /// linearized processor space (see [`Self::proc_lin`]).
+    pub fn procs_per_node(&self) -> usize {
+        self.cpus_per_node + self.gpus_per_node + self.omp_per_node
+    }
+
+    /// Size of the dense linearized processor space.
+    pub fn num_procs(&self) -> usize {
+        self.procs_per_node() * self.nodes
+    }
+
+    /// Dense index of a processor: node-major, kinds ordered CPU | GPU |
+    /// OMP within a node.  The scheduler's hot paths index per-processor
+    /// tables with this instead of hashing `ProcId`s.
+    pub fn proc_lin(&self, p: ProcId) -> usize {
+        let base = match p.kind {
+            ProcKind::Cpu => 0,
+            ProcKind::Gpu => self.cpus_per_node,
+            ProcKind::Omp => self.cpus_per_node + self.gpus_per_node,
+        };
+        debug_assert!(p.index < self.per_node(p.kind) && p.node < self.nodes);
+        p.node * self.procs_per_node() + base + p.index
+    }
+
+    /// Inverse of [`Self::proc_lin`].
+    pub fn proc_at(&self, lin: usize) -> ProcId {
+        let per = self.procs_per_node();
+        let node = lin / per;
+        let r = lin % per;
+        if r < self.cpus_per_node {
+            ProcId { node, kind: ProcKind::Cpu, index: r }
+        } else if r < self.cpus_per_node + self.gpus_per_node {
+            ProcId { node, kind: ProcKind::Gpu, index: r - self.cpus_per_node }
+        } else {
+            ProcId {
+                node,
+                kind: ProcKind::Omp,
+                index: r - self.cpus_per_node - self.gpus_per_node,
+            }
+        }
+    }
+
     /// GFLOP/s of one processor.
     pub fn gflops(&self, kind: ProcKind) -> f64 {
         match kind {
@@ -420,6 +462,22 @@ mod tests {
         let c19 = ProcId { node: 0, kind: ProcKind::Cpu, index: 19 };
         assert_eq!(m.mem_for(c0, MemKind::SockMem).index, 0);
         assert_eq!(m.mem_for(c19, MemKind::SockMem).index, 1);
+    }
+
+    #[test]
+    fn proc_linearization_roundtrips_every_processor() {
+        for m in [MachineSpec::p100_cluster(), MachineSpec::small()] {
+            let mut seen = std::collections::HashSet::new();
+            for kind in [ProcKind::Cpu, ProcKind::Gpu, ProcKind::Omp] {
+                for p in m.procs(kind) {
+                    let lin = m.proc_lin(p);
+                    assert!(lin < m.num_procs(), "{p} out of dense range");
+                    assert_eq!(m.proc_at(lin), p, "proc_at(proc_lin) must roundtrip");
+                    assert!(seen.insert(lin), "{p} collides in the dense space");
+                }
+            }
+            assert_eq!(seen.len(), m.num_procs());
+        }
     }
 
     #[test]

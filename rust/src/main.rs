@@ -69,7 +69,7 @@ fn main() -> ExitCode {
         "run" => return cmd_run(&coord, &args),
         "optimize" => return cmd_optimize(&coord, &args, params),
         "bench-suite" => {
-            for name in apps::ALL_BENCHMARKS {
+            for name in apps::ALL_APPS {
                 let app = apps::by_name(name).unwrap();
                 let fb = coord.evaluate(&app, expert_dsl(name).unwrap());
                 println!("{name:10} {}", fb.line());
@@ -97,7 +97,7 @@ fn usage() {
 fn cmd_run(coord: &Coordinator, args: &Args) -> ExitCode {
     let name = args.str_or("app", "circuit");
     let Some(app) = apps::by_name(name) else {
-        eprintln!("unknown app '{name}' (have: {:?})", apps::ALL_BENCHMARKS);
+        eprintln!("unknown app '{name}' (have: {:?})", apps::ALL_APPS);
         return ExitCode::from(2);
     };
     let dsl = match args.get("mapper") {

@@ -10,11 +10,13 @@
 
 use crate::apps::ALL_BENCHMARKS;
 
-/// Expert mapper DSL for a benchmark name (all nine exist).
+/// Expert mapper DSL for a benchmark name (the paper's nine plus the
+/// apps added since).
 pub fn expert_dsl(benchmark: &str) -> Option<&'static str> {
     Some(match benchmark {
         "circuit" => CIRCUIT,
         "stencil" => STENCIL,
+        "stencil3d" => STENCIL3D,
         "pennant" => PENNANT,
         "cannon" => CANNON,
         "summa" => SUMMA,
@@ -74,6 +76,28 @@ def block2d(Tuple ipoint, Tuple ispace) {
 }
 IndexTaskMap stencil block2d;
 IndexTaskMap increment block2d;
+";
+
+pub const STENCIL3D: &str = "\
+# Expert mapper for the 3D halo-exchange stencil: block the x axis over
+# nodes, cycle the yz plane over each node's GPUs, keep all three
+# launches of a tile on the same GPU so only halo faces move.
+Task * GPU,OMP,CPU;
+Task interior GPU;
+Task boundary GPU;
+Task update GPU;
+Region * * GPU FBMEM;
+Region * * CPU SYSMEM;
+Layout * * * SOA C_order Align==64;
+mgpu = Machine(GPU);
+def block3d(Tuple ipoint, Tuple ispace) {
+  node = ipoint[0] * mgpu.size[0] / ispace[0];
+  lin = ipoint[1] * ispace[2] + ipoint[2];
+  return mgpu[node % mgpu.size[0], lin % mgpu.size[1]];
+}
+IndexTaskMap interior block3d;
+IndexTaskMap boundary block3d;
+IndexTaskMap update block3d;
 ";
 
 pub const PENNANT: &str = "\
@@ -250,6 +274,35 @@ mod tests {
     fn circuit_expert_uses_zcmem_for_ghosts() {
         assert!(CIRCUIT.contains("rp_shared GPU ZCMEM"));
         assert!(CIRCUIT.contains("rp_ghost GPU ZCMEM"));
+    }
+
+    #[test]
+    fn stencil3d_expert_compiles_runs_and_uses_all_gpus() {
+        use crate::dsl::TaskCtx;
+        use crate::machine::ProcKind;
+        let spec = MachineSpec::p100_cluster();
+        let app = apps::by_name("stencil3d").unwrap();
+        let policy =
+            MappingPolicy::compile(expert_dsl("stencil3d").unwrap(), &spec).unwrap();
+        let m = Executor::new(&spec).execute(&app, &policy).unwrap();
+        assert!(m.throughput > 0.0);
+        let mut used = std::collections::HashSet::new();
+        for x in 0..4 {
+            for y in 0..2 {
+                for z in 0..2 {
+                    let ctx = TaskCtx {
+                        ipoint: vec![x, y, z],
+                        ispace: vec![4, 2, 2],
+                        parent_proc: None,
+                    };
+                    let p = policy
+                        .select_processor("interior", &ctx, &[ProcKind::Gpu], &spec)
+                        .unwrap();
+                    used.insert((p.node, p.index));
+                }
+            }
+        }
+        assert_eq!(used.len(), 8, "stencil3d expert must use all 8 GPUs");
     }
 
     #[test]

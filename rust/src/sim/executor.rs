@@ -19,7 +19,7 @@
 //!   inferred from region read/write/reduce sets: independent launches
 //!   overlap compute with communication, and timesteps pipeline.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 use super::cost::layout_penalty;
 use super::metrics::{ExecError, Metrics};
@@ -175,30 +175,39 @@ impl ExecMode {
 /// identical by construction.
 pub(super) struct SimState<'a> {
     spec: &'a MachineSpec,
-    proc_time: HashMap<ProcId, f64>,
+    /// §Perf: per-processor timelines over the dense linearized proc
+    /// space ([`MachineSpec::proc_lin`]); NEG_INFINITY = never used.
+    /// Hashing a `ProcId` per pop dominated large-graph scheduling.
+    proc_time: Vec<f64>,
     book: MemBook,
-    nic_busy: HashMap<(usize, usize), f64>,
+    /// Per (src node, dst node) NIC-channel busy-until times, dense.
+    nic_busy: Vec<f64>,
     m: Metrics,
     /// §Perf: accumulate per-task busy time by task id (a String-keyed
     /// map entry per point dominated the bookkeeping cost)
     task_busy: Vec<f64>,
+    /// Dense per-processor busy seconds (folded into
+    /// [`Metrics::per_proc_s`] at finalize).
+    proc_busy: Vec<f64>,
 }
 
 impl<'a> SimState<'a> {
     pub(super) fn new(spec: &'a MachineSpec, app: &App) -> SimState<'a> {
         SimState {
             spec,
-            proc_time: HashMap::new(),
+            proc_time: vec![f64::NEG_INFINITY; spec.num_procs()],
             book: MemBook::default(),
-            nic_busy: HashMap::new(),
+            nic_busy: vec![0.0f64; spec.nodes * spec.nodes],
             m: Metrics::default(),
             task_busy: vec![0.0f64; app.tasks.len()],
+            proc_busy: vec![0.0f64; spec.num_procs()],
         }
     }
 
     /// When `proc`'s timeline frees up, if it has run anything yet.
     pub(super) fn proc_avail(&self, proc: ProcId) -> Option<f64> {
-        self.proc_time.get(&proc).copied()
+        let t = self.proc_time[self.spec.proc_lin(proc)];
+        (t != f64::NEG_INFINITY).then_some(t)
     }
 
     /// Simulate one launch point on `proc`, starting no earlier than
@@ -215,7 +224,10 @@ impl<'a> SimState<'a> {
     ) -> Result<(f64, f64), ExecError> {
         let spec = self.spec;
         let task = &app.tasks[launch.task];
-        let mut t = self.proc_time.get(&proc).copied().unwrap_or(floor).max(floor);
+        let plin = spec.proc_lin(proc);
+        let avail = self.proc_time[plin];
+        let mut t =
+            if avail == f64::NEG_INFINITY { floor } else { avail.max(floor) };
         let start = t;
         let mut busy_us = 0.0;
 
@@ -248,10 +260,9 @@ impl<'a> SimState<'a> {
                 if needs_data && home != mem {
                     let dt = spec.transfer_us(home, mem, bytes);
                     if home.node != mem.node {
-                        let ch = (home.node, mem.node);
-                        let free = self.nic_busy.entry(ch).or_insert(0.0);
-                        let begin = t.max(*free);
-                        *free = begin + dt;
+                        let ch = home.node * spec.nodes + mem.node;
+                        let begin = t.max(self.nic_busy[ch]);
+                        self.nic_busy[ch] = begin + dt;
                         t = begin + dt;
                     } else {
                         t += dt;
@@ -307,10 +318,10 @@ impl<'a> SimState<'a> {
         busy_us += spec.spawn_overhead_us(proc.kind);
 
         let end = t + busy_us;
-        self.proc_time.insert(proc, end);
+        self.proc_time[plin] = end;
         self.m.busy_s += busy_us * 1e-6;
         self.task_busy[launch.task] += busy_us * 1e-6;
-        *self.m.per_proc_s.entry(proc).or_insert(0.0) += busy_us * 1e-6;
+        self.proc_busy[plin] += busy_us * 1e-6;
         Ok((start, end))
     }
 
@@ -321,6 +332,11 @@ impl<'a> SimState<'a> {
         for (i, &busy) in self.task_busy.iter().enumerate() {
             if busy > 0.0 {
                 m.per_task_s.insert(app.tasks[i].name.clone(), busy);
+            }
+        }
+        for (lin, &busy) in self.proc_busy.iter().enumerate() {
+            if busy > 0.0 {
+                m.per_proc_s.insert(self.spec.proc_at(lin), busy);
             }
         }
         m.peak_mem = self.book.peak.iter().map(|(k, v)| (*k, *v)).collect();

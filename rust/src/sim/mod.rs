@@ -5,12 +5,14 @@
 //!   the legacy bulk-synchronous loop ([`ExecMode::BulkSync`]).
 //! * [`schedule`] — the dependency-aware out-of-order engine: schedules
 //!   the happens-before DAG inferred by [`crate::apps::taskgraph::task_dag`]
-//!   against per-processor timelines and NIC channels, so transfers
-//!   overlap independent compute ([`ExecMode::OutOfOrder`]), and computes
-//!   critical-path attribution ([`metrics::PerfProfile`]).
-//!   [`ExecMode::Serialized`] runs the same engine with full barrier
-//!   edges, reproducing bulk-synchronous timing bit-exactly — profiles
-//!   without behaviour change.
+//!   (CSR adjacency, compressed barrier/gate nodes) against
+//!   per-processor timelines and NIC channels via an event heap, so
+//!   transfers overlap independent compute ([`ExecMode::OutOfOrder`]),
+//!   and computes critical-path attribution ([`metrics::PerfProfile`]).
+//!   [`ExecMode::Serialized`] runs the same engine in program order
+//!   behind barrier nodes, reproducing bulk-synchronous timing
+//!   bit-exactly — profiles without behaviour change, now at
+//!   10^5-point-task scale.
 //! * [`metrics`] — [`Metrics`], [`PerfProfile`], and the paper's
 //!   execution-error taxonomy (Table A1 strings, keyword-matched by the
 //!   feedback engine).

@@ -136,6 +136,46 @@ fn critical_path_tiles_elapsed_on_every_benchmark() {
 }
 
 #[test]
+fn stencil3d_scale_parity_and_overlap_win() {
+    // the 10^4-point-task leg: the heap scheduler + compressed barriers
+    // must (a) keep Serialized bit-exact against bulk-sync at scale and
+    // (b) let OutOfOrder strictly beat the barrier on the split
+    // interior/boundary halo-exchange workload
+    let s = spec();
+    let cfg = apps::Stencil3dConfig::with_min_point_tasks(10_000);
+    assert!(cfg.point_tasks() >= 10_000);
+    let app = apps::stencil3d(cfg);
+    let dsl = expert_dsl("stencil3d").unwrap();
+
+    let bulk = run_mapper(&app, dsl, &s).unwrap().unwrap();
+    let ser = run_mapper_with(&app, dsl, &s, ExecMode::Serialized)
+        .unwrap()
+        .unwrap();
+    assert_eq!(bulk.elapsed_s, ser.elapsed_s, "serialized diverged at scale");
+    assert_eq!(bulk.comm_bytes, ser.comm_bytes);
+    assert_eq!(bulk.busy_s, ser.busy_s);
+    assert_eq!(bulk.transfer_s, ser.transfer_s);
+    assert_eq!(bulk.peak_mem, ser.peak_mem);
+    let p = ser.profile.as_ref().expect("profile missing at scale");
+    assert_eq!(p.total_tasks, cfg.point_tasks());
+    assert!(
+        p.critical_path_s >= ser.elapsed_s - 1e-9
+            && p.critical_path_s <= ser.elapsed_s * 1.0001,
+        "critical path must still tile elapsed at scale"
+    );
+
+    let ooo = run_mapper_with(&app, dsl, &s, ExecMode::OutOfOrder)
+        .unwrap()
+        .unwrap();
+    assert!(
+        ooo.elapsed_s < ser.elapsed_s * 0.999,
+        "split interior/boundary must overlap: ooo {} vs serialized {}",
+        ooo.elapsed_s,
+        ser.elapsed_s
+    );
+}
+
+#[test]
 fn idle_statistics_expose_unused_processors() {
     // an all-on-one-GPU mapper must read as "7 of 8 GPUs idle" — the
     // signal the optimizer needs on maximally imbalanced mappings

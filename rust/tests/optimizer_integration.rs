@@ -14,6 +14,7 @@ fn coord() -> Coordinator {
 
 fn best_of(c: &Coordinator, bench: &str, algo: SearchAlgo, runs: usize, iters: usize) -> f64 {
     c.run_many(bench, algo, FeedbackConfig::FULL, 0xA11CE, runs, iters)
+        .expect("known app")
         .iter()
         .filter_map(|r| r.best.as_ref().map(|(_, s)| *s))
         .fold(0.0, f64::max)
@@ -67,8 +68,12 @@ fn full_feedback_beats_system_only_on_average() {
     let mut full_sum = 0.0;
     let mut sys_sum = 0.0;
     for bench in ["circuit", "cosma", "cannon"] {
-        let full = c.run_many(bench, SearchAlgo::Trace, FeedbackConfig::FULL, 5, 5, 10);
-        let sys = c.run_many(bench, SearchAlgo::Trace, FeedbackConfig::SYSTEM, 5, 5, 10);
+        let full = c
+            .run_many(bench, SearchAlgo::Trace, FeedbackConfig::FULL, 5, 5, 10)
+            .expect("known app");
+        let sys = c
+            .run_many(bench, SearchAlgo::Trace, FeedbackConfig::SYSTEM, 5, 5, 10)
+            .expect("known app");
         let final_of = |rs: &[mapperopt::coordinator::RunResult]| {
             stats::mean(
                 &rs.iter()
