@@ -1,6 +1,9 @@
 # mapperopt — build / test / experiment entry points.
 #
 #   make verify      tier-1: release build + full test suite
+#   make test-props  the property suites at raised case counts
+#                    (PROPTEST_CASES, exported as MAPPEROPT_PROPTEST_CASES;
+#                    tier-1 keeps the small in-code defaults)
 #   make bench-smoke build every bench target and run the scheduler
 #                    scalability bench at its smallest size (CI keeps
 #                    bench code from rotting)
@@ -11,8 +14,9 @@
 
 CARGO ?= cargo
 PYTHON ?= python3
+PROPTEST_CASES ?= 400
 
-.PHONY: build test verify bench-smoke fmt fmt-check clippy ci artifacts figures clean
+.PHONY: build test verify test-props bench-smoke fmt fmt-check clippy ci artifacts figures clean
 
 build:
 	$(CARGO) build --release
@@ -21,6 +25,9 @@ test:
 	$(CARGO) test -q
 
 verify: build test
+
+test-props:
+	MAPPEROPT_PROPTEST_CASES=$(PROPTEST_CASES) $(CARGO) test -q --release --test property_suite
 
 bench-smoke:
 	$(CARGO) build --benches
@@ -35,7 +42,7 @@ fmt-check:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
-ci: fmt-check clippy verify
+ci: fmt-check clippy verify test-props
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts

@@ -1,15 +1,18 @@
 //! End-to-end driver: proves the three layers compose on a real workload.
 //!
-//! 1. **L3** — the coordinator runs a full optimization campaign on the
-//!    circuit benchmark (DSL compile -> simulated distributed execution ->
-//!    feedback -> mock-LLM update), producing the best mapper found.
+//! 1. **L3** — an [`EvalService`] (the serving layer) runs a full
+//!    optimization campaign on the circuit benchmark: campaign threads
+//!    submit `EvalRequest`s to the service's bounded queue, its worker
+//!    pool evaluates them (DSL compile -> simulated distributed execution
+//!    -> feedback -> mock-LLM update) behind the shared cross-campaign
+//!    cache, producing the best mapper found.
 //! 2. **L1/L2** — the winning mapper's application is then *numerically
 //!    executed*: every timestep's task bodies (CNC -> DC -> UV) run as the
 //!    Pallas/jax AOT artifacts through the PJRT runtime, validated
 //!    step-by-step against a plain-rust oracle.
 //! 3. Reports the paper's headline numbers: optimized-vs-expert
-//!    throughput, optimization wall-clock ("minutes, not days"), and the
-//!    numeric max-error across the run.
+//!    throughput, optimization wall-clock ("minutes, not days"), the
+//!    service's queue/cache statistics, and the numeric max-error.
 //!
 //! Requires `make artifacts`.  Run:
 //!     cargo run --release --example e2e_serve [steps]
@@ -17,22 +20,38 @@
 use std::time::Instant;
 
 use mapperopt::apps;
-use mapperopt::coordinator::{Coordinator, SearchAlgo};
+use mapperopt::coordinator::{Campaign, EvalService, SearchAlgo};
 use mapperopt::feedback::FeedbackConfig;
-use mapperopt::machine::MachineSpec;
 use mapperopt::mapping::expert_dsl;
 use mapperopt::runtime::{ArtifactRuntime, CircuitState};
+use mapperopt::sim::ExecMode;
 
 fn main() {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(50);
 
-    // ---- L3: optimize the mapper --------------------------------------
+    // ---- L3: optimize the mapper through the serving layer -------------
     let app = apps::circuit(apps::CircuitConfig::default());
-    let coord = Coordinator::new(MachineSpec::p100_cluster());
-    let expert = coord.throughput(&app, expert_dsl("circuit").unwrap());
+    let service = EvalService::with_defaults();
+    let spec_id = service.spec_id("p100_cluster").expect("preregistered spec");
+    let expert = service
+        .evaluate(spec_id, &app, expert_dsl("circuit").unwrap(), ExecMode::Serialized)
+        .score();
     let t0 = Instant::now();
-    let runs = coord
-        .run_many("circuit", SearchAlgo::Trace, FeedbackConfig::FULL, 7, 5, 10)
+    let runs = service
+        .run_campaigns(
+            "circuit",
+            Campaign {
+                spec_id,
+                mode: ExecMode::Serialized,
+                algo: SearchAlgo::Trace,
+                cfg: FeedbackConfig::FULL,
+                base_seed: 7,
+                seed_stride: 1000,
+                seed_offset: 17,
+                runs: 5,
+                iters: 10,
+            },
+        )
         .expect("circuit is registered");
     let (best_dsl, best) = runs
         .iter()
@@ -40,12 +59,8 @@ fn main() {
         .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
         .expect("no runnable mapper found");
     let opt_time = t0.elapsed();
-    println!(
-        "optimization: 5 runs x 10 iters in {opt_time:.2?} \
-         ({} evaluations, {} cache hits)",
-        coord.stats.evals.load(std::sync::atomic::Ordering::Relaxed),
-        coord.stats.cache_hits.load(std::sync::atomic::Ordering::Relaxed),
-    );
+    println!("optimization: 5 campaigns x 10 iters in {opt_time:.2?} through one EvalService");
+    print!("{}", service.summary());
     println!(
         "throughput: expert {expert:.1} steps/s -> optimized {best:.1} steps/s \
          ({:.2}x)",

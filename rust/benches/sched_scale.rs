@@ -71,7 +71,7 @@ fn main() {
     }
     println!(
         "coordinator  {:>6.2} evals/s  {:>12.0} point-tasks/s",
-        coord.stats.evals_per_sec(),
-        coord.stats.point_tasks_per_sec()
+        coord.stats().evals_per_sec(),
+        coord.stats().point_tasks_per_sec()
     );
 }

@@ -15,8 +15,9 @@ pub use pennant::{pennant, PennantConfig};
 pub use stencil::{stencil, StencilConfig};
 pub use stencil3d::{stencil3d, Stencil3dConfig};
 pub use taskgraph::{
-    task_dag, Access, App, DepMode, InitialDist, Launch, LayoutReq, Metric,
-    PointTask, RegionDecl, RegionReq, TaskDag, TaskDecl,
+    task_dag, task_dag_with_gate_fanin, Access, App, DepMode, InitialDist,
+    Launch, LayoutReq, Metric, PointTask, RegionDecl, RegionReq, TaskDag,
+    TaskDecl,
 };
 
 /// Build any benchmark by name (CLI / harness convenience).

@@ -493,16 +493,17 @@ struct TileState {
     reducers_gate: Option<u32>,
 }
 
-/// Depend on `sources`: directly below [`GATE_FANIN`], through a shared
-/// (memoized) gate node at or above it.
+/// Depend on `sources`: directly below the `gate_fanin` threshold,
+/// through a shared (memoized) gate node at or above it.
 fn gate_deps(
     dd: &mut Vec<u32>,
     sources: &[u32],
     gate: &mut Option<u32>,
+    gate_fanin: usize,
     node_point: &mut Vec<u32>,
     pred_lists: &mut Vec<Vec<u32>>,
 ) {
-    if sources.len() < GATE_FANIN {
+    if sources.len() < gate_fanin {
         dd.extend_from_slice(sources);
         return;
     }
@@ -520,6 +521,22 @@ fn gate_deps(
 /// the id order is a topological order of the returned DAG, and point
 /// tasks keep program order (step, launch, point).
 pub fn task_dag(app: &App, steps: &[Vec<Launch>], mode: DepMode) -> TaskDag {
+    task_dag_with_gate_fanin(app, steps, mode, GATE_FANIN)
+}
+
+/// [`task_dag`] with an explicit gate-compression threshold — a test
+/// hook for the compression invariants: `2` forces every multi-member
+/// reader/reducer set through a gate node, `usize::MAX` disables gates
+/// entirely (the uncompressed reference DAG).  Gate nodes are
+/// timing-neutral by construction, so per-node earliest-start times and
+/// the critical path must be threshold-independent;
+/// `tests/property_suite.rs` fuzzes exactly that.
+pub fn task_dag_with_gate_fanin(
+    app: &App,
+    steps: &[Vec<Launch>],
+    mode: DepMode,
+    gate_fanin: usize,
+) -> TaskDag {
     let mut points: Vec<PointTask> = Vec::new();
     let mut coords: Vec<i64> = Vec::new();
     let mut coord_off: Vec<u32> = vec![0];
@@ -572,6 +589,7 @@ pub fn task_dag(app: &App, steps: &[Vec<Launch>], mode: DepMode) -> TaskDag {
                                         &mut dd,
                                         &ts.reducers,
                                         &mut ts.reducers_gate,
+                                        gate_fanin,
                                         &mut node_point,
                                         &mut pred_lists,
                                     );
@@ -582,6 +600,7 @@ pub fn task_dag(app: &App, steps: &[Vec<Launch>], mode: DepMode) -> TaskDag {
                                         &mut dd,
                                         &ts.readers,
                                         &mut ts.readers_gate,
+                                        gate_fanin,
                                         &mut node_point,
                                         &mut pred_lists,
                                     );
@@ -592,6 +611,7 @@ pub fn task_dag(app: &App, steps: &[Vec<Launch>], mode: DepMode) -> TaskDag {
                                         &mut dd,
                                         &ts.readers,
                                         &mut ts.readers_gate,
+                                        gate_fanin,
                                         &mut node_point,
                                         &mut pred_lists,
                                     );
@@ -599,6 +619,7 @@ pub fn task_dag(app: &App, steps: &[Vec<Launch>], mode: DepMode) -> TaskDag {
                                         &mut dd,
                                         &ts.reducers,
                                         &mut ts.reducers_gate,
+                                        gate_fanin,
                                         &mut node_point,
                                         &mut pred_lists,
                                     );

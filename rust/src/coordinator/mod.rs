@@ -1,10 +1,14 @@
 //! L3 coordinator (S9): the optimization service.
 //!
-//! Owns the machine spec, evaluates candidate mappers (compile -> execute
-//! -> classify into system feedback) behind a content-addressed cache, and
-//! orchestrates multi-run optimization campaigns across worker threads —
-//! the "leader" of the three-layer architecture.  The CLI and the
-//! experiment harness drive everything through this type.
+//! The serving layer lives in [`service`]: a long-lived [`EvalService`]
+//! owns the [`service::SpecRegistry`] of named machine specs, a bounded
+//! job queue drained by a fixed worker pool, and one shared
+//! cross-campaign result cache keyed by the machine-fingerprinted
+//! [`eval_key`].  [`Coordinator`] is the thin single-spec client of that
+//! service: it pins one `(spec, mode)` pair and forwards evaluations and
+//! campaigns, so every pre-service score stays bit-identical while many
+//! campaigns — and many machine shapes — share one process.  The CLI and
+//! the experiment harness drive everything through these two types.
 //!
 //! Evaluations run on the dependency-aware engine in
 //! [`ExecMode::Serialized`] by default: timing is identical to the legacy
@@ -13,18 +17,23 @@
 //! feedback tier renders into the optimizer prompt.  Use
 //! [`Coordinator::with_mode`] for [`ExecMode::OutOfOrder`] runs.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+pub mod service;
 
-use crate::apps::{self, App};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::apps::App;
 use crate::feedback::{FeedbackConfig, SystemFeedback};
 use crate::machine::MachineSpec;
 use crate::optimizer::{
     AppInfo, IterationRecord, Optimizer, OproOptimizer, TraceOptimizer,
 };
-use crate::sim::{run_mapper_with, ExecMode, PerfProfile};
+use crate::sim::{ExecMode, PerfProfile};
+
+pub use service::{
+    Campaign, EvalRequest, EvalService, EvalTicket, ServiceStats, SpecCounters,
+    SpecId, SpecRegistry,
+};
 
 /// Which search algorithm to run (Section 5's two optimizers).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,64 +100,69 @@ impl CoordinatorStats {
     }
 }
 
-/// The optimization service.
+/// The thin single-spec client of an [`EvalService`]: pins one
+/// `(spec, mode)` pair and forwards to the service's shared cache,
+/// worker pool, and stats.
 pub struct Coordinator {
+    /// Copy of the machine spec this client evaluates against (the
+    /// authoritative one lives in the service's registry).
     pub spec: MachineSpec,
     mode: ExecMode,
-    /// Fingerprint of `spec` folded into every cache key, so evals against
-    /// different machines never alias (multi-machine campaigns share code).
-    spec_fp: u64,
-    cache: Mutex<HashMap<u64, SystemFeedback>>,
-    pub stats: CoordinatorStats,
+    spec_id: SpecId,
+    service: Arc<EvalService>,
 }
 
 impl Coordinator {
     /// Coordinator on the dependency-aware engine with barrier edges:
-    /// bulk-synchronous timing + critical-path profiles.
+    /// bulk-synchronous timing + critical-path profiles.  Spins up a
+    /// dedicated [`EvalService`] for this spec.
     pub fn new(spec: MachineSpec) -> Coordinator {
         Coordinator::with_mode(spec, ExecMode::Serialized)
     }
 
     /// Coordinator with an explicit simulator execution model.
     pub fn with_mode(spec: MachineSpec, mode: ExecMode) -> Coordinator {
-        let spec_fp = fnv1a(&[format!("{spec:?}").as_bytes()]);
-        Coordinator {
-            spec,
-            mode,
-            spec_fp,
-            cache: Mutex::new(HashMap::new()),
-            stats: CoordinatorStats::default(),
-        }
+        let service = Arc::new(EvalService::with_defaults());
+        let name = spec.name.clone();
+        let spec_id = service.register_spec(&name, spec);
+        Coordinator::on_service(service, spec_id, mode)
+    }
+
+    /// Client of an existing (shared) service — several coordinators on
+    /// one service share its cache, worker pool, and stats.
+    pub fn on_service(
+        service: Arc<EvalService>,
+        spec_id: SpecId,
+        mode: ExecMode,
+    ) -> Coordinator {
+        let spec = service.spec(spec_id);
+        Coordinator { spec, mode, spec_id, service }
     }
 
     pub fn mode(&self) -> ExecMode {
         self.mode
     }
 
-    /// Evaluate one DSL mapper against an app (cached by content hash).
+    /// The backing service (shared with any sibling clients).
+    pub fn service(&self) -> &Arc<EvalService> {
+        &self.service
+    }
+
+    /// This client's spec handle in the service registry.
+    pub fn spec_id(&self) -> SpecId {
+        self.spec_id
+    }
+
+    /// Evaluation counters of the backing service (aggregated over every
+    /// client when the service is shared).
+    pub fn stats(&self) -> &CoordinatorStats {
+        &self.service.stats().coord
+    }
+
+    /// Evaluate one DSL mapper against an app (cached by content hash in
+    /// the service's shared cross-campaign cache).
     pub fn evaluate(&self, app: &App, dsl: &str) -> SystemFeedback {
-        let key = eval_key(app_fingerprint(app), dsl, self.spec_fp, self.mode);
-        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
-            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
-            return hit.clone();
-        }
-        self.stats.evals.fetch_add(1, Ordering::Relaxed);
-        let t0 = Instant::now();
-        let fb = match run_mapper_with(app, dsl, &self.spec, self.mode) {
-            Err(ce) => SystemFeedback::CompileError(ce.to_string()),
-            Ok(Err(xe)) => SystemFeedback::ExecutionError(xe.to_string()),
-            Ok(Ok(m)) => SystemFeedback::from_metrics(&m),
-        };
-        self.stats
-            .eval_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        if let Some(p) = fb.profile() {
-            self.stats
-                .point_tasks
-                .fetch_add(p.total_tasks as u64, Ordering::Relaxed);
-        }
-        self.cache.lock().unwrap().insert(key, fb.clone());
-        fb
+        self.service.evaluate(self.spec_id, app, dsl, self.mode)
     }
 
     /// Throughput of one mapper, or 0.0 on any error.
@@ -162,7 +176,8 @@ impl Coordinator {
         self.evaluate(app, dsl).profile().cloned()
     }
 
-    /// Run one optimizer for `iters` iterations.
+    /// Run one optimizer for `iters` iterations (evaluations go through
+    /// the service's synchronous path in the calling thread).
     pub fn run_optimizer(
         &self,
         app: &App,
@@ -171,34 +186,16 @@ impl Coordinator {
         seed: u64,
         iters: usize,
     ) -> RunResult {
-        let info = AppInfo::from_app(app);
         let eval = |src: &str| self.evaluate(app, src);
-        let mut records = Vec::with_capacity(iters);
-        let best;
-        match algo {
-            SearchAlgo::Trace => {
-                let mut opt = TraceOptimizer::new(info, cfg, seed);
-                for _ in 0..iters {
-                    records.push(opt.step(&eval));
-                }
-                best = opt.best_dsl();
-            }
-            SearchAlgo::Opro => {
-                let mut opt = OproOptimizer::new(info, seed);
-                for _ in 0..iters {
-                    records.push(opt.step(&eval));
-                }
-                best = opt.best_dsl();
-            }
-        }
-        RunResult { algo: algo.name(), seed, records, best }
+        drive_campaign(&eval, AppInfo::from_app(app), algo, cfg, seed, iters)
     }
 
-    /// Run `runs` seeded campaigns in parallel worker threads (the paper
-    /// repeats each optimization 5 times and averages).  The app name is
-    /// resolved before any worker spawns: an unknown name is a proper
-    /// error instead of a panic inside a worker thread, and all workers
-    /// share one `App` instead of rebuilding it per thread.
+    /// Run `runs` seeded campaigns concurrently through the backing
+    /// service (the paper repeats each optimization 5 times and
+    /// averages): campaign threads submit [`EvalRequest`]s to the bounded
+    /// queue and block on tickets, the service's worker pool evaluates.
+    /// An unknown app name — or a panicking campaign — is a proper `Err`
+    /// instead of a process abort.
     pub fn run_many(
         &self,
         app_name: &str,
@@ -208,21 +205,21 @@ impl Coordinator {
         runs: usize,
         iters: usize,
     ) -> Result<Vec<RunResult>, String> {
-        let app = apps::by_name(app_name)
-            .ok_or_else(|| format!("unknown app '{app_name}'"))?;
-        let app = &app;
-        Ok(std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..runs)
-                .map(|r| {
-                    let seed = base_seed.wrapping_add(1000 * r as u64 + 17);
-                    scope.spawn(move || self.run_optimizer(app, algo, cfg, seed, iters))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("worker panicked"))
-                .collect()
-        }))
+        self.service.run_campaigns(
+            app_name,
+            Campaign {
+                spec_id: self.spec_id,
+                mode: self.mode,
+                algo,
+                cfg,
+                base_seed,
+                // the historical run_many seed spread, bit-for-bit
+                seed_stride: 1000,
+                seed_offset: 17,
+                runs,
+                iters,
+            },
+        )
     }
 
     /// Throughputs of `n` random mappers (errors count as 0 — the
@@ -235,11 +232,78 @@ impl Coordinator {
     }
 }
 
+/// One optimizer campaign over an arbitrary evaluation function — the
+/// shared driver behind [`Coordinator::run_optimizer`] (synchronous
+/// evals) and [`EvalService::run_campaigns`] (queued evals).
+pub(crate) fn drive_campaign(
+    eval: &dyn Fn(&str) -> SystemFeedback,
+    info: AppInfo,
+    algo: SearchAlgo,
+    cfg: FeedbackConfig,
+    seed: u64,
+    iters: usize,
+) -> RunResult {
+    let mut records = Vec::with_capacity(iters);
+    let best;
+    match algo {
+        SearchAlgo::Trace => {
+            let mut opt = TraceOptimizer::new(info, cfg, seed);
+            for _ in 0..iters {
+                records.push(opt.step(eval));
+            }
+            best = opt.best_dsl();
+        }
+        SearchAlgo::Opro => {
+            let mut opt = OproOptimizer::new(info, seed);
+            for _ in 0..iters {
+                records.push(opt.step(eval));
+            }
+            best = opt.best_dsl();
+        }
+    }
+    RunResult { algo: algo.name(), seed, records, best }
+}
+
+/// Join campaign threads, surfacing panics as `Err` instead of
+/// re-panicking (a single poisoned campaign used to abort the whole
+/// `run_many` batch through `.expect("worker panicked")`).
+pub(crate) fn join_campaigns<'scope, T>(
+    handles: Vec<std::thread::ScopedJoinHandle<'scope, T>>,
+) -> Result<Vec<T>, String> {
+    let mut out = Vec::with_capacity(handles.len());
+    let mut failures = Vec::new();
+    for (i, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(v) => out.push(v),
+            Err(p) => failures.push(format!("campaign {i} panicked: {}", panic_message(&*p))),
+        }
+    }
+    if failures.is_empty() {
+        Ok(out)
+    } else {
+        Err(failures.join("; "))
+    }
+}
+
+/// Best-effort text of a panic payload (String / &str, else a marker).
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic payload>".into())
+}
+
+/// Fingerprint of a machine spec (folded into every cache key, so evals
+/// against different machines never alias).
+pub(crate) fn spec_fingerprint(spec: &MachineSpec) -> u64 {
+    fnv1a(&[format!("{spec:?}").as_bytes()])
+}
+
 /// FNV-1a over length-prefixed byte fields.  The length prefix keeps
 /// field boundaries in the hash: `["ab", "c"]` and `["a", "bc"]` feed
 /// different byte streams (the unprefixed version collided on exactly
 /// that, aliasing cache entries across (app, dsl) pairs).
-fn fnv1a(fields: &[&[u8]]) -> u64 {
+pub(crate) fn fnv1a(fields: &[&[u8]]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     let mut eat = |bytes: &[u8]| {
         for &byte in bytes {
@@ -258,7 +322,7 @@ fn fnv1a(fields: &[&[u8]]) -> u64 {
 /// region declarations.  Every config knob (problem sizes, tile grids,
 /// flops) manifests in these fields, so two same-named apps built from
 /// different configs get different cache keys.
-fn app_fingerprint(app: &App) -> u64 {
+pub(crate) fn app_fingerprint(app: &App) -> u64 {
     let mut desc = format!(
         "{}|{}|{:?}|{:?}",
         app.name, app.steps, app.metric, app.initial_dist
@@ -274,7 +338,7 @@ fn app_fingerprint(app: &App) -> u64 {
 
 /// Cache key of one evaluation: (app fingerprint, dsl source, machine
 /// fingerprint, execution mode), all length-delimited.
-fn eval_key(app_fp: u64, dsl: &str, spec_fp: u64, mode: ExecMode) -> u64 {
+pub(crate) fn eval_key(app_fp: u64, dsl: &str, spec_fp: u64, mode: ExecMode) -> u64 {
     fnv1a(&[
         &app_fp.to_le_bytes(),
         dsl.as_bytes(),
@@ -286,6 +350,7 @@ fn eval_key(app_fp: u64, dsl: &str, spec_fp: u64, mode: ExecMode) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::apps;
     use crate::mapping::expert_dsl;
 
     fn coord() -> Coordinator {
@@ -300,8 +365,40 @@ mod tests {
         let a = c.evaluate(&app, dsl);
         let b = c.evaluate(&app, dsl);
         assert_eq!(a, b);
-        assert_eq!(c.stats.evals.load(Ordering::Relaxed), 1);
-        assert_eq!(c.stats.cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(c.stats().evals.load(Ordering::Relaxed), 1);
+        assert_eq!(c.stats().cache_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn campaign_panics_surface_as_err_not_a_process_abort() {
+        // regression: run_many used `.expect("worker panicked")`, so one
+        // poisoned campaign aborted the whole batch
+        let r: Result<Vec<u32>, String> = std::thread::scope(|scope| {
+            let handles = vec![
+                scope.spawn(|| 1u32),
+                scope.spawn(|| panic!("campaign exploded")),
+                scope.spawn(|| 3u32),
+            ];
+            join_campaigns(handles)
+        });
+        let err = r.unwrap_err();
+        assert!(err.contains("campaign 1 panicked"), "{err}");
+        assert!(err.contains("campaign exploded"), "{err}");
+    }
+
+    #[test]
+    fn clients_of_one_service_share_the_cache() {
+        let service = Arc::new(EvalService::new(2, 8));
+        let id = service.spec_id("p100_cluster").unwrap();
+        let a = Coordinator::on_service(Arc::clone(&service), id, ExecMode::Serialized);
+        let b = Coordinator::on_service(Arc::clone(&service), id, ExecMode::Serialized);
+        let app = apps::by_name("cannon").unwrap();
+        let dsl = expert_dsl("cannon").unwrap();
+        assert_eq!(a.evaluate(&app, dsl), b.evaluate(&app, dsl));
+        assert_eq!(a.stats().evals.load(Ordering::Relaxed), 1);
+        assert_eq!(b.stats().cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(a.spec_id(), b.spec_id());
+        assert_eq!(a.spec.name, "p100x4x2");
     }
 
     #[test]
@@ -333,17 +430,17 @@ mod tests {
         let c = coord();
         let app = apps::by_name("stencil3d").unwrap();
         let dsl = expert_dsl("stencil3d").unwrap();
-        assert_eq!(c.stats.point_tasks.load(Ordering::Relaxed), 0);
+        assert_eq!(c.stats().point_tasks.load(Ordering::Relaxed), 0);
         c.evaluate(&app, dsl);
-        let pts = c.stats.point_tasks.load(Ordering::Relaxed);
+        let pts = c.stats().point_tasks.load(Ordering::Relaxed);
         assert_eq!(pts, 480, "3 launches x 16 tiles x 10 steps");
         // cache hits must not double-count time or tasks
-        let ns = c.stats.eval_ns.load(Ordering::Relaxed);
+        let ns = c.stats().eval_ns.load(Ordering::Relaxed);
         c.evaluate(&app, dsl);
-        assert_eq!(c.stats.point_tasks.load(Ordering::Relaxed), pts);
-        assert_eq!(c.stats.eval_ns.load(Ordering::Relaxed), ns);
-        assert!(c.stats.evals_per_sec() > 0.0);
-        assert!(c.stats.point_tasks_per_sec() > 0.0);
+        assert_eq!(c.stats().point_tasks.load(Ordering::Relaxed), pts);
+        assert_eq!(c.stats().eval_ns.load(Ordering::Relaxed), ns);
+        assert!(c.stats().evals_per_sec() > 0.0);
+        assert!(c.stats().point_tasks_per_sec() > 0.0);
     }
 
     #[test]

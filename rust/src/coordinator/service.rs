@@ -1,0 +1,811 @@
+//! The serving layer of the Agent-System Interface: a batched,
+//! multi-machine evaluation service.
+//!
+//! [`EvalService`] is the long-lived process the plain
+//! [`Coordinator`](super::Coordinator) became a client of.  It owns:
+//!
+//! * a [`SpecRegistry`] of named [`MachineSpec`]s (`p100_cluster` and
+//!   `small` are pre-registered; ablation sweeps register their generated
+//!   shapes at runtime) — every request names its machine by [`SpecId`],
+//!   so one service process serves heterogeneous machine models;
+//! * a bounded job queue of [`EvalRequest`]s drained by a fixed-size
+//!   worker pool (spawned lazily on the first queued submission).
+//!   Workers pop jobs in *batches* — a fair share of the backlog capped
+//!   at [`BATCH_MAX`] — which keeps wake-ups O(batch) under bursty
+//!   campaign traffic without letting one worker drain the queue while
+//!   its siblings idle; [`ServiceStats::batch_occupancy`] reports the
+//!   realized mean batch size;
+//! * one shared, cross-campaign result cache keyed by the same
+//!   machine-fingerprinted `eval_key` the single-spec coordinator used —
+//!   identical requests from different campaigns hit once (concurrent
+//!   identical requests join the in-flight evaluation instead of
+//!   recomputing it), while the spec fingerprint in the key guarantees
+//!   that identical `(app, dsl)` pairs on *different* machines never
+//!   alias.
+//!
+//! Submission is asynchronous: [`EvalService::submit`] enqueues and
+//! returns an [`EvalTicket`] the caller can [`EvalTicket::wait`] on or
+//! [`EvalTicket::poll`].  [`EvalService::evaluate`] is the synchronous
+//! fast path through the same cache and stats (used by thin clients and
+//! by the workers themselves).  [`EvalService::run_campaigns`] drives
+//! whole optimization campaigns whose evaluations flow through the
+//! queue, so many concurrent campaigns — possibly on different machine
+//! shapes — share the worker pool and the cache.
+//!
+//! Fault containment: a panic inside an evaluation is caught in the
+//! worker, reported through the ticket as a classified internal
+//! execution error, and never takes down the pool or poisons the cache.
+//! Dropping the service closes the queue, drains the remaining jobs (so
+//! no ticket is left unresolved), and joins the workers.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread;
+use std::time::Instant;
+
+use crate::apps::{self, App};
+use crate::feedback::{FeedbackConfig, SystemFeedback};
+use crate::machine::MachineSpec;
+use crate::optimizer::AppInfo;
+use crate::sim::{run_mapper_with, ExecMode};
+
+use super::{
+    app_fingerprint, drive_campaign, eval_key, join_campaigns, panic_message,
+    spec_fingerprint, CoordinatorStats, RunResult, SearchAlgo,
+};
+
+/// Jobs a worker drains per wake-up.
+pub const BATCH_MAX: usize = 8;
+
+/// Handle of a registered machine spec (index into the registry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SpecId(usize);
+
+#[derive(Debug)]
+struct SpecEntry {
+    name: String,
+    spec: MachineSpec,
+    /// `spec_fingerprint` of `spec`, folded into every cache key.
+    fp: u64,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    specs: Vec<Arc<SpecEntry>>,
+    by_name: HashMap<String, usize>,
+}
+
+/// Named machine specs, deduplicated by fingerprint: registering a spec
+/// that is structurally identical to an existing one returns the existing
+/// id (its name becomes an alias), so campaigns agree on cache keys no
+/// matter which alias they registered under.
+#[derive(Default)]
+pub struct SpecRegistry {
+    inner: RwLock<RegistryInner>,
+}
+
+impl SpecRegistry {
+    /// Register `spec` under `name`; returns the (possibly pre-existing)
+    /// id.
+    pub fn register(&self, name: &str, spec: MachineSpec) -> SpecId {
+        let fp = spec_fingerprint(&spec);
+        let mut g = self.inner.write().unwrap();
+        if let Some(i) = g.specs.iter().position(|e| e.fp == fp) {
+            match g.by_name.get(name) {
+                // structurally identical spec, new name: add the alias
+                None => {
+                    g.by_name.insert(name.to_string(), i);
+                }
+                Some(&bound) if bound != i => eprintln!(
+                    "EvalService: spec name '{name}' is already bound to spec \
+                     {bound}; keeping that binding (the registered spec \
+                     deduplicated to id {i})"
+                ),
+                Some(_) => {}
+            }
+            return SpecId(i);
+        }
+        let i = g.specs.len();
+        g.specs.push(Arc::new(SpecEntry { name: name.to_string(), spec, fp }));
+        // first registration of a name wins (consistent with the alias
+        // path above): a colliding name keeps resolving to the original
+        // spec instead of silently redirecting existing by-name users —
+        // but the collision is surfaced, since the caller's returned id
+        // and the name now denote different machines
+        if let Some(&old) = g.by_name.get(name) {
+            eprintln!(
+                "EvalService: spec name '{name}' is already bound to spec {old}; \
+                 keeping that binding (the newly registered spec is id {i})"
+            );
+        } else {
+            g.by_name.insert(name.to_string(), i);
+        }
+        SpecId(i)
+    }
+
+    /// Look a spec up by registered name (or alias).
+    pub fn id(&self, name: &str) -> Option<SpecId> {
+        self.inner.read().unwrap().by_name.get(name).copied().map(SpecId)
+    }
+
+    /// Copy of the spec behind an id.
+    pub fn spec(&self, id: SpecId) -> MachineSpec {
+        self.entry(id).spec.clone()
+    }
+
+    /// Canonical (first-registered) name of an id.
+    pub fn name(&self, id: SpecId) -> String {
+        self.entry(id).name.clone()
+    }
+
+    /// Canonical `(name, id)` pairs in registration order.
+    pub fn entries(&self) -> Vec<(String, SpecId)> {
+        let g = self.inner.read().unwrap();
+        g.specs.iter().enumerate().map(|(i, e)| (e.name.clone(), SpecId(i))).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn entry(&self, id: SpecId) -> Arc<SpecEntry> {
+        Arc::clone(&self.inner.read().unwrap().specs[id.0])
+    }
+}
+
+/// One evaluation job: which machine, which app, which mapper, which
+/// engine.
+#[derive(Debug, Clone)]
+pub struct EvalRequest {
+    pub spec_id: SpecId,
+    pub app: Arc<App>,
+    pub dsl: String,
+    pub mode: ExecMode,
+}
+
+#[derive(Default)]
+struct TicketSlot {
+    done: Mutex<Option<SystemFeedback>>,
+    cv: Condvar,
+}
+
+impl TicketSlot {
+    fn fill(&self, fb: SystemFeedback) {
+        *self.done.lock().unwrap() = Some(fb);
+        self.cv.notify_all();
+    }
+
+    /// Fill only if no result landed yet (the panic-recovery path of
+    /// [`InFlightGuard`]; a normal completion wins).
+    fn fill_if_empty(&self, fb: SystemFeedback) {
+        let mut g = self.done.lock().unwrap();
+        if g.is_none() {
+            *g = Some(fb);
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) -> SystemFeedback {
+        let mut g = self.done.lock().unwrap();
+        loop {
+            if let Some(fb) = g.as_ref() {
+                return fb.clone();
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Completion handle of a submitted [`EvalRequest`].
+pub struct EvalTicket {
+    slot: Arc<TicketSlot>,
+}
+
+impl EvalTicket {
+    /// Block until the evaluation completes.
+    pub fn wait(&self) -> SystemFeedback {
+        self.slot.wait()
+    }
+
+    /// Non-blocking check; `Some` once the evaluation completed.
+    pub fn poll(&self) -> Option<SystemFeedback> {
+        self.slot.done.lock().unwrap().clone()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.slot.done.lock().unwrap().is_some()
+    }
+}
+
+/// Per-spec eval/hit counters (see [`ServiceStats::spec_counters`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpecCounters {
+    pub evals: usize,
+    pub cache_hits: usize,
+}
+
+impl SpecCounters {
+    /// Fraction of this spec's requests served from the shared cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.evals + self.cache_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Service-wide counters: the single-spec [`CoordinatorStats`] plus
+/// queue depth, per-spec hit rates, and batch occupancy.
+#[derive(Default)]
+pub struct ServiceStats {
+    /// The same counters a single-spec coordinator exposes (evals,
+    /// cache hits, point tasks, eval wall-clock), aggregated over every
+    /// spec the service serves.
+    pub coord: CoordinatorStats,
+    /// Requests enqueued via [`EvalService::submit`] (the synchronous
+    /// [`EvalService::evaluate`] path bypasses the queue and counts only
+    /// in `coord`).
+    pub submitted: AtomicUsize,
+    /// Tickets resolved by the worker pool.
+    pub completed: AtomicUsize,
+    max_queue_depth: AtomicUsize,
+    batches: AtomicUsize,
+    batched_jobs: AtomicUsize,
+    per_spec: Mutex<Vec<SpecCounters>>,
+}
+
+impl ServiceStats {
+    /// High-water mark of the bounded job queue.
+    pub fn max_queue_depth(&self) -> usize {
+        self.max_queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Mean jobs drained per worker wake-up (1.0 = no batching benefit).
+    pub fn batch_occupancy(&self) -> f64 {
+        let batches = self.batches.load(Ordering::Relaxed);
+        if batches == 0 {
+            0.0
+        } else {
+            self.batched_jobs.load(Ordering::Relaxed) as f64 / batches as f64
+        }
+    }
+
+    /// Eval/hit counters of one registered spec.
+    pub fn spec_counters(&self, id: SpecId) -> SpecCounters {
+        let g = self.per_spec.lock().unwrap();
+        g.get(id.0).copied().unwrap_or_default()
+    }
+
+    fn note_depth(&self, depth: usize) {
+        self.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    fn note_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_jobs.fetch_add(size, Ordering::Relaxed);
+    }
+
+    fn note_spec(&self, id: SpecId, hit: bool) {
+        let mut g = self.per_spec.lock().unwrap();
+        if g.len() <= id.0 {
+            g.resize(id.0 + 1, SpecCounters::default());
+        }
+        if hit {
+            g[id.0].cache_hits += 1;
+        } else {
+            g[id.0].evals += 1;
+        }
+    }
+}
+
+/// One optimization campaign batch: `runs` seeded repetitions of an
+/// optimizer on one `(spec, mode)` pair (the paper repeats each
+/// optimization 5 times and averages).
+#[derive(Debug, Clone, Copy)]
+pub struct Campaign {
+    pub spec_id: SpecId,
+    pub mode: ExecMode,
+    pub algo: SearchAlgo,
+    pub cfg: FeedbackConfig,
+    pub base_seed: u64,
+    /// Per-run seed spread: run `r` evaluates with
+    /// `base_seed + seed_stride * r + seed_offset` (wrapping).  Callers
+    /// that predate the service keep their exact historical seeds —
+    /// `run_many`'s (1000, 17) and the ablation sweep's (71, 0) — so
+    /// every pre-service campaign trajectory replays bit-identically.
+    pub seed_stride: u64,
+    pub seed_offset: u64,
+    pub runs: usize,
+    pub iters: usize,
+}
+
+impl Campaign {
+    /// Seed of repetition `r` (see `seed_stride` / `seed_offset`).
+    pub fn seed_for_run(&self, r: usize) -> u64 {
+        self.base_seed
+            .wrapping_add(self.seed_stride.wrapping_mul(r as u64))
+            .wrapping_add(self.seed_offset)
+    }
+}
+
+struct Job {
+    req: EvalRequest,
+    app_fp: u64,
+    slot: Arc<TicketSlot>,
+}
+
+struct JobQueue {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+struct Inner {
+    registry: SpecRegistry,
+    cache: Mutex<HashMap<u64, SystemFeedback>>,
+    /// Keys whose evaluation is currently running, with the slot the
+    /// running ("leader") evaluation will resolve — concurrent identical
+    /// requests join it instead of recomputing the same simulation.
+    in_flight: Mutex<HashMap<u64, Arc<TicketSlot>>>,
+    stats: ServiceStats,
+    queue: Mutex<JobQueue>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    /// Worker-pool size (used to size fair-share batches).
+    pool_size: usize,
+}
+
+/// Clears the in-flight entry of a leader evaluation on every exit path.
+/// If the evaluation panicked (slot still empty at drop), followers are
+/// released with a classified internal error instead of hanging.
+struct InFlightGuard<'a> {
+    inner: &'a Inner,
+    key: u64,
+    slot: Arc<TicketSlot>,
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.inner.in_flight.lock().unwrap().remove(&self.key);
+        self.slot.fill_if_empty(SystemFeedback::ExecutionError(
+            "Internal: evaluation panicked before completing".into(),
+        ));
+    }
+}
+
+impl Inner {
+    /// The one evaluation path: shared cache in front, in-flight
+    /// deduplication for concurrent identical requests, per-spec and
+    /// service-wide stats behind.  No lock is held across the simulation
+    /// itself, so a panicking evaluation cannot poison the cache.
+    fn evaluate(
+        &self,
+        spec_id: SpecId,
+        app_fp: u64,
+        app: &App,
+        dsl: &str,
+        mode: ExecMode,
+    ) -> SystemFeedback {
+        let entry = self.registry.entry(spec_id);
+        let key = eval_key(app_fp, dsl, entry.fp, mode);
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            self.stats.coord.cache_hits.fetch_add(1, Ordering::Relaxed);
+            self.stats.note_spec(spec_id, true);
+            return hit.clone();
+        }
+        // become the leader for this key, or join a running evaluation
+        let slot = Arc::new(TicketSlot::default());
+        let running = {
+            let mut inf = self.in_flight.lock().unwrap();
+            if let Some(leader) = inf.get(&key) {
+                Some(Arc::clone(leader))
+            } else {
+                // re-check the cache under the in-flight lock: a leader
+                // may have completed between our miss above and here
+                if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+                    self.stats.coord.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    self.stats.note_spec(spec_id, true);
+                    return hit.clone();
+                }
+                inf.insert(key, Arc::clone(&slot));
+                None
+            }
+        };
+        if let Some(leader) = running {
+            // identical request is being evaluated right now: wait for
+            // its result instead of recomputing the same simulation
+            let fb = leader.wait();
+            self.stats.coord.cache_hits.fetch_add(1, Ordering::Relaxed);
+            self.stats.note_spec(spec_id, true);
+            return fb;
+        }
+        let _guard = InFlightGuard { inner: self, key, slot: Arc::clone(&slot) };
+        self.stats.coord.evals.fetch_add(1, Ordering::Relaxed);
+        self.stats.note_spec(spec_id, false);
+        let t0 = Instant::now();
+        let fb = match run_mapper_with(app, dsl, &entry.spec, mode) {
+            Err(ce) => SystemFeedback::CompileError(ce.to_string()),
+            Ok(Err(xe)) => SystemFeedback::ExecutionError(xe.to_string()),
+            Ok(Ok(m)) => SystemFeedback::from_metrics(&m),
+        };
+        self.stats
+            .coord
+            .eval_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if let Some(p) = fb.profile() {
+            self.stats
+                .coord
+                .point_tasks
+                .fetch_add(p.total_tasks as u64, Ordering::Relaxed);
+        }
+        self.cache.lock().unwrap().insert(key, fb.clone());
+        slot.fill(fb.clone());
+        fb
+        // `_guard` drops here: the in-flight entry is cleared only after
+        // the cache holds the result, so late joiners always find one
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        let batch: Vec<Job> = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if !q.jobs.is_empty() {
+                    break;
+                }
+                if q.closed {
+                    return;
+                }
+                q = inner.not_empty.wait(q).unwrap();
+            }
+            // fair share of the backlog, capped at BATCH_MAX: under a
+            // burst each worker gets ~len/pool jobs, so a single worker
+            // never drains the whole queue while its siblings idle
+            let take = q.jobs.len().div_ceil(inner.pool_size).min(BATCH_MAX);
+            let batch: Vec<Job> = q.jobs.drain(..take).collect();
+            inner.not_full.notify_all();
+            inner.stats.note_batch(take);
+            batch
+        };
+        for job in batch {
+            let fb = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                inner.evaluate(
+                    job.req.spec_id,
+                    job.app_fp,
+                    &job.req.app,
+                    &job.req.dsl,
+                    job.req.mode,
+                )
+            }))
+            .unwrap_or_else(|p| {
+                SystemFeedback::ExecutionError(format!(
+                    "Internal: evaluation worker panicked: {}",
+                    panic_message(&*p)
+                ))
+            });
+            job.slot.fill(fb);
+            inner.stats.completed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The batched multi-machine evaluation service (see module docs).
+pub struct EvalService {
+    inner: Arc<Inner>,
+    /// Pool size once spawned (see [`Self::ensure_workers`]).
+    worker_target: usize,
+    /// Worker handles, spawned lazily on the first queued submission so
+    /// synchronous-only clients (a plain `Coordinator` doing `evaluate`
+    /// calls) never pay for an idle thread pool.
+    workers: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl EvalService {
+    /// Service with `workers` pool threads (spawned on first use of the
+    /// queue) and a bounded queue of `queue_capacity` jobs.
+    /// `p100_cluster` and `small` are pre-registered.
+    pub fn new(workers: usize, queue_capacity: usize) -> EvalService {
+        let inner = Arc::new(Inner {
+            registry: SpecRegistry::default(),
+            cache: Mutex::new(HashMap::new()),
+            in_flight: Mutex::new(HashMap::new()),
+            stats: ServiceStats::default(),
+            queue: Mutex::new(JobQueue { jobs: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: queue_capacity.max(1),
+            pool_size: workers.max(1),
+        });
+        inner.registry.register("p100_cluster", MachineSpec::p100_cluster());
+        inner.registry.register("small", MachineSpec::small());
+        EvalService {
+            inner,
+            worker_target: workers.max(1),
+            workers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Spawn the worker pool if it is not running yet.
+    fn ensure_workers(&self) {
+        let mut ws = self.workers.lock().unwrap();
+        if !ws.is_empty() {
+            return;
+        }
+        ws.extend((0..self.worker_target).map(|i| {
+            let inner = Arc::clone(&self.inner);
+            thread::Builder::new()
+                .name(format!("evalsvc-{i}"))
+                .spawn(move || worker_loop(&inner))
+                .expect("spawn eval-service worker")
+        }));
+    }
+
+    /// Worker count matched to the host; queue sized for campaign bursts.
+    pub fn with_defaults() -> EvalService {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let n = n.clamp(2, 8);
+        EvalService::new(n, 8 * n)
+    }
+
+    pub fn registry(&self) -> &SpecRegistry {
+        &self.inner.registry
+    }
+
+    /// Register (or alias) a machine spec; see [`SpecRegistry::register`].
+    pub fn register_spec(&self, name: &str, spec: MachineSpec) -> SpecId {
+        self.inner.registry.register(name, spec)
+    }
+
+    pub fn spec_id(&self, name: &str) -> Option<SpecId> {
+        self.inner.registry.id(name)
+    }
+
+    /// Copy of a registered spec.
+    pub fn spec(&self, id: SpecId) -> MachineSpec {
+        self.inner.registry.spec(id)
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        &self.inner.stats
+    }
+
+    /// Entries in the shared cross-campaign cache.
+    pub fn cache_len(&self) -> usize {
+        self.inner.cache.lock().unwrap().len()
+    }
+
+    /// Jobs currently queued (excludes jobs being evaluated).
+    pub fn queue_depth(&self) -> usize {
+        self.inner.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Synchronous evaluation in the calling thread, through the shared
+    /// cache and stats (the thin-client path of
+    /// [`Coordinator`](super::Coordinator)).
+    pub fn evaluate(
+        &self,
+        spec_id: SpecId,
+        app: &App,
+        dsl: &str,
+        mode: ExecMode,
+    ) -> SystemFeedback {
+        self.inner.evaluate(spec_id, app_fingerprint(app), app, dsl, mode)
+    }
+
+    /// Enqueue a request; blocks while the queue is at capacity.
+    pub fn submit(&self, req: EvalRequest) -> EvalTicket {
+        self.ensure_workers();
+        let app_fp = app_fingerprint(&req.app);
+        let slot = Arc::new(TicketSlot::default());
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            while q.jobs.len() >= self.inner.capacity && !q.closed {
+                q = self.inner.not_full.wait(q).unwrap();
+            }
+            q.jobs.push_back(Job { req, app_fp, slot: Arc::clone(&slot) });
+            self.inner.stats.note_depth(q.jobs.len());
+            self.inner.not_empty.notify_one();
+        }
+        self.inner.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        EvalTicket { slot }
+    }
+
+    /// Run `c.runs` seeded campaigns of `app_name` concurrently; every
+    /// evaluation is submitted through the queue and served by the
+    /// worker pool, so concurrent campaigns (on any mix of specs) share
+    /// the pool and the cross-campaign cache.  Campaign-thread panics
+    /// surface as `Err`, not a process abort.
+    pub fn run_campaigns(
+        &self,
+        app_name: &str,
+        c: Campaign,
+    ) -> Result<Vec<RunResult>, String> {
+        let app = apps::by_name(app_name)
+            .ok_or_else(|| format!("unknown app '{app_name}'"))?;
+        self.run_campaigns_on(Arc::new(app), c)
+    }
+
+    /// [`Self::run_campaigns`] for an already-built app.
+    pub fn run_campaigns_on(
+        &self,
+        app: Arc<App>,
+        c: Campaign,
+    ) -> Result<Vec<RunResult>, String> {
+        let info = AppInfo::from_app(&app);
+        thread::scope(|scope| {
+            let handles: Vec<_> = (0..c.runs)
+                .map(|r| {
+                    let app = Arc::clone(&app);
+                    let info = info.clone();
+                    scope.spawn(move || {
+                        let eval = |src: &str| {
+                            self.submit(EvalRequest {
+                                spec_id: c.spec_id,
+                                app: Arc::clone(&app),
+                                dsl: src.to_string(),
+                                mode: c.mode,
+                            })
+                            .wait()
+                        };
+                        drive_campaign(&eval, info, c.algo, c.cfg, c.seed_for_run(r), c.iters)
+                    })
+                })
+                .collect();
+            join_campaigns(handles)
+        })
+    }
+
+    /// Human-readable stats block (CLI / examples).
+    pub fn summary(&self) -> String {
+        let s = self.stats();
+        let mut out = format!(
+            "eval service: {} evals, {} cache hits, {} submitted, {} completed\n\
+             queue: max depth {}, batch occupancy {:.2}\n",
+            s.coord.evals.load(Ordering::Relaxed),
+            s.coord.cache_hits.load(Ordering::Relaxed),
+            s.submitted.load(Ordering::Relaxed),
+            s.completed.load(Ordering::Relaxed),
+            s.max_queue_depth(),
+            s.batch_occupancy(),
+        );
+        for (name, id) in self.inner.registry.entries() {
+            let c = s.spec_counters(id);
+            out.push_str(&format!(
+                "  spec {:<14} evals {:>5}  hits {:>5}  hit rate {:>3.0}%\n",
+                name,
+                c.evals,
+                c.cache_hits,
+                100.0 * c.hit_rate(),
+            ));
+        }
+        out
+    }
+}
+
+impl Drop for EvalService {
+    fn drop(&mut self) {
+        self.inner.queue.lock().unwrap().closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+        for h in self.workers.get_mut().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::expert_dsl;
+
+    fn service() -> EvalService {
+        EvalService::new(2, 8)
+    }
+
+    #[test]
+    fn preregisters_the_two_canonical_specs() {
+        let s = service();
+        let p100 = s.spec_id("p100_cluster").unwrap();
+        let small = s.spec_id("small").unwrap();
+        assert_ne!(p100, small);
+        assert_eq!(s.registry().len(), 2);
+        assert_eq!(s.spec(p100).nodes, 2);
+        assert_eq!(s.spec(small).nodes, 1);
+        assert_eq!(s.registry().name(p100), "p100_cluster");
+    }
+
+    #[test]
+    fn register_dedupes_by_fingerprint_and_aliases_names() {
+        let s = service();
+        let p100 = s.spec_id("p100_cluster").unwrap();
+        // structurally identical spec under a new name: same id
+        let again = s.register_spec("paper_testbed", MachineSpec::p100_cluster());
+        assert_eq!(again, p100);
+        assert_eq!(s.spec_id("paper_testbed"), Some(p100));
+        assert_eq!(s.registry().len(), 2, "no duplicate entry");
+        // structurally new spec: new id
+        let mut wide = MachineSpec::p100_cluster();
+        wide.nodes = 4;
+        wide.gpus_per_node = 2;
+        let wide_id = s.register_spec("wide", wide);
+        assert_ne!(wide_id, p100);
+        assert_eq!(s.registry().len(), 3);
+    }
+
+    #[test]
+    fn ticket_wait_and_poll_resolve_to_the_same_feedback() {
+        let s = service();
+        let p100 = s.spec_id("p100_cluster").unwrap();
+        let app = Arc::new(apps::by_name("circuit").unwrap());
+        let dsl = expert_dsl("circuit").unwrap();
+        let t = s.submit(EvalRequest {
+            spec_id: p100,
+            app: Arc::clone(&app),
+            dsl: dsl.to_string(),
+            mode: ExecMode::Serialized,
+        });
+        let fb = t.wait();
+        assert!(fb.score() > 0.0);
+        assert!(t.is_done());
+        assert_eq!(t.poll(), Some(fb.clone()));
+        // synchronous path agrees and hits the same cache entry
+        assert_eq!(s.evaluate(p100, &app, dsl, ExecMode::Serialized), fb);
+        assert_eq!(s.stats().coord.evals.load(Ordering::Relaxed), 1);
+        assert_eq!(s.stats().coord.cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(s.stats().submitted.load(Ordering::Relaxed), 1);
+        assert_eq!(s.stats().completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn per_spec_counters_track_hits_separately() {
+        let s = service();
+        let p100 = s.spec_id("p100_cluster").unwrap();
+        let small = s.spec_id("small").unwrap();
+        let app = apps::by_name("cannon").unwrap();
+        let dsl = expert_dsl("cannon").unwrap();
+        let a = s.evaluate(p100, &app, dsl, ExecMode::Serialized);
+        let b = s.evaluate(small, &app, dsl, ExecMode::Serialized);
+        assert_ne!(a.score(), b.score(), "different machines must not alias");
+        s.evaluate(p100, &app, dsl, ExecMode::Serialized);
+        let cp = s.stats().spec_counters(p100);
+        let cs = s.stats().spec_counters(small);
+        assert_eq!((cp.evals, cp.cache_hits), (1, 1));
+        assert_eq!((cs.evals, cs.cache_hits), (1, 0));
+        assert!(cp.hit_rate() > 0.49 && cp.hit_rate() < 0.51);
+        assert_eq!(s.cache_len(), 2);
+    }
+
+    #[test]
+    fn campaigns_through_the_queue_are_deterministic() {
+        let s = service();
+        let small = s.spec_id("small").unwrap();
+        let c = Campaign {
+            spec_id: small,
+            mode: ExecMode::Serialized,
+            algo: SearchAlgo::Trace,
+            cfg: FeedbackConfig::FULL,
+            base_seed: 3,
+            seed_stride: 1000,
+            seed_offset: 17,
+            runs: 2,
+            iters: 3,
+        };
+        let a = s.run_campaigns("stencil", c).unwrap();
+        let b = s.run_campaigns("stencil", c).unwrap();
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.trajectory(), y.trajectory());
+        }
+        assert!(s.stats().max_queue_depth() >= 1, "campaigns must use the queue");
+        let err = s.run_campaigns("nope", c).unwrap_err();
+        assert!(err.contains("unknown app 'nope'"), "{err}");
+    }
+}

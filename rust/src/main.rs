@@ -11,16 +11,22 @@
 //!   bench-suite               — quick end-to-end status of all benchmarks
 //!
 //! Common flags: --iters N --runs N --seed S --algo trace|opro
-//!               --feedback system|explain|full
+//!               --feedback system|explain|full --workers N
+//!
+//! Every evaluation flows through one process-wide [`EvalService`] (the
+//! serving layer): the CLI's coordinator is a thin client of it, and the
+//! `all` / `bench-suite` subcommands print the service's queue/cache
+//! statistics on exit.
 
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use mapperopt::apps;
-use mapperopt::coordinator::{Coordinator, SearchAlgo};
+use mapperopt::coordinator::{Coordinator, EvalService, SearchAlgo};
 use mapperopt::feedback::FeedbackConfig;
 use mapperopt::harness::{self, ExpParams};
-use mapperopt::machine::MachineSpec;
 use mapperopt::mapping::expert_dsl;
+use mapperopt::sim::ExecMode;
 use mapperopt::util::cli::Args;
 
 fn main() -> ExitCode {
@@ -33,7 +39,14 @@ fn main() -> ExitCode {
         random_mappers: args.usize("random-mappers", 10),
         seed: args.u64("seed", 0xA11CE),
     };
-    let coord = Coordinator::new(MachineSpec::p100_cluster());
+    let workers = args.usize("workers", 0);
+    let service = Arc::new(if workers > 0 {
+        EvalService::new(workers, 8 * workers)
+    } else {
+        EvalService::with_defaults()
+    });
+    let spec_id = service.spec_id("p100_cluster").expect("preregistered spec");
+    let coord = Coordinator::on_service(Arc::clone(&service), spec_id, ExecMode::Serialized);
 
     match cmd {
         "table1" => {
@@ -60,11 +73,7 @@ fn main() -> ExitCode {
             harness::fig6(&coord, params);
             harness::fig7(&coord, params);
             harness::fig8(&coord, params);
-            println!(
-                "\n[{} evaluations, {} cache hits]",
-                coord.stats.evals.load(std::sync::atomic::Ordering::Relaxed),
-                coord.stats.cache_hits.load(std::sync::atomic::Ordering::Relaxed)
-            );
+            print!("\n{}", service.summary());
         }
         "run" => return cmd_run(&coord, &args),
         "optimize" => return cmd_optimize(&coord, &args, params),
@@ -74,6 +83,7 @@ fn main() -> ExitCode {
                 let fb = coord.evaluate(&app, expert_dsl(name).unwrap());
                 println!("{name:10} {}", fb.line());
             }
+            print!("\n{}", service.summary());
         }
         "help" => {
             usage();
@@ -90,7 +100,8 @@ fn usage() {
     println!(
         "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite>\n\
          flags: --app NAME --mapper FILE --algo trace|opro \
-         --feedback system|explain|full|profile --iters N --runs N --seed S"
+         --feedback system|explain|full|profile --iters N --runs N --seed S \
+         --workers N"
     );
 }
 

@@ -2,9 +2,21 @@
 //!
 //! `check(seed, cases, |rng| ...)` runs a closure over `cases` random cases;
 //! on failure it reports the case index and the per-case seed so the exact
-//! case replays with `replay(case_seed, ...)`.
+//! case replays with `replay(case_seed, ...)`.  Case counts are usually
+//! spelled `env_cases(default)` so `MAPPEROPT_PROPTEST_CASES` (see `make
+//! test-props`) can crank every suite up without touching code; tier-1
+//! keeps the small defaults.
 
 use super::rng::Rng;
+
+/// Property case count: the `MAPPEROPT_PROPTEST_CASES` override when set
+/// (and parseable), else `default`.
+pub fn env_cases(default: usize) -> usize {
+    std::env::var("MAPPEROPT_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
 
 /// Run `f` for `cases` seeded cases; panic with replay info on failure.
 pub fn check<F: FnMut(&mut Rng)>(seed: u64, cases: usize, mut f: F) {
@@ -37,6 +49,19 @@ pub fn replay<F: FnMut(&mut Rng)>(case_seed: u64, mut f: F) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn env_cases_prefers_the_env_override() {
+        // no other test in this binary reads the variable, so the brief
+        // global mutation cannot race a reader
+        std::env::remove_var("MAPPEROPT_PROPTEST_CASES");
+        assert_eq!(env_cases(40), 40);
+        std::env::set_var("MAPPEROPT_PROPTEST_CASES", "250");
+        assert_eq!(env_cases(40), 250);
+        std::env::set_var("MAPPEROPT_PROPTEST_CASES", "not-a-number");
+        assert_eq!(env_cases(40), 40);
+        std::env::remove_var("MAPPEROPT_PROPTEST_CASES");
+    }
 
     #[test]
     fn passes_trivial_property() {

@@ -1,12 +1,19 @@
 //! Property-based integration suite: invariants that must hold for
 //! arbitrary (seeded-random) mappers, apps, and machine shapes.
+//!
+//! Case counts default small (tier-1 latency) and scale through
+//! `MAPPEROPT_PROPTEST_CASES` — `make test-props` runs this suite at
+//! raised counts.
 
-use mapperopt::apps;
+use mapperopt::apps::{
+    self, task_dag, task_dag_with_gate_fanin, Access, App, DepMode, Launch,
+    Metric, RegionDecl, RegionReq, TaskDag, TaskDecl,
+};
 use mapperopt::dsl::{MappingPolicy, TaskCtx};
 use mapperopt::machine::{MachineSpec, ProcKind, ProcSpace};
 use mapperopt::optimizer::{AgentGenome, AppInfo};
-use mapperopt::sim::Executor;
-use mapperopt::util::proptest::check;
+use mapperopt::sim::{run_mapper_with, ExecMode, Executor};
+use mapperopt::util::proptest::{check, env_cases};
 use mapperopt::util::rng::Rng;
 
 fn spec() -> MachineSpec {
@@ -19,7 +26,7 @@ fn spec() -> MachineSpec {
 fn property_random_mappers_yield_sane_metrics_or_classified_errors() {
     let s = spec();
     let benches = ["circuit", "stencil", "cannon", "johnson"];
-    check(0xAB5E, 80, |rng: &mut Rng| {
+    check(0xAB5E, env_cases(80), |rng: &mut Rng| {
         let bench = *rng.choose(&benches);
         let app = apps::by_name(bench).unwrap();
         let info = AppInfo::from_app(&app);
@@ -72,7 +79,7 @@ fn property_random_mappers_yield_sane_metrics_or_classified_errors() {
 #[test]
 fn property_execution_deterministic() {
     let s = spec();
-    check(0xDE7, 30, |rng: &mut Rng| {
+    check(0xDE7, env_cases(30), |rng: &mut Rng| {
         let bench = *rng.choose(&apps::ALL_BENCHMARKS);
         let app = apps::by_name(bench).unwrap();
         let info = AppInfo::from_app(&app);
@@ -101,7 +108,7 @@ fn property_selected_processors_in_bounds() {
     let s = spec();
     let app = apps::by_name("summa").unwrap();
     let info = AppInfo::from_app(&app);
-    check(0x5EEC, 100, |rng: &mut Rng| {
+    check(0x5EEC, env_cases(100), |rng: &mut Rng| {
         let mut g = AgentGenome::random(&info, rng);
         g.syntax_slip = false;
         g.missing_machine = false;
@@ -130,7 +137,7 @@ fn property_selected_processors_in_bounds() {
 /// machine shapes.
 #[test]
 fn property_transform_bijectivity_across_machine_shapes() {
-    check(0x5AFE, 120, |rng: &mut Rng| {
+    check(0x5AFE, env_cases(120), |rng: &mut Rng| {
         let nodes = 1 << rng.below(3); // 1, 2, 4
         let gpus = 1 << (1 + rng.below(2)); // 2, 4
         let mut spec = MachineSpec::p100_cluster();
@@ -197,11 +204,234 @@ fn property_compiler_total_on_fuzzed_input() {
         "foo", "bar", "42", "0", "SOA", "Align",
     ];
     let s = spec();
-    check(0xF022, 300, |rng: &mut Rng| {
+    check(0xF022, env_cases(300), |rng: &mut Rng| {
         let len = rng.below(40);
         let src: Vec<&str> = (0..len).map(|_| *rng.choose(&vocab)).collect();
         let src = src.join(" ");
         // must never panic; errors are fine
         let _ = MappingPolicy::compile(&src, &s);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Differential engine parity (the PR 1/2 claim, fuzzed)
+// ---------------------------------------------------------------------------
+
+/// For arbitrary random genomes, apps, and machine shapes, the
+/// dependency-aware engine in `Serialized` mode is *bit-equal* to the
+/// legacy bulk-synchronous loop: identical metrics on success, identical
+/// error classification on failure.
+#[test]
+fn property_serialized_engine_differential_vs_bulk_sync() {
+    let machines = [MachineSpec::p100_cluster(), MachineSpec::small()];
+    let benches = ["circuit", "stencil", "cannon", "stencil3d"];
+    check(0xD1FF, env_cases(40), |rng: &mut Rng| {
+        let bench = *rng.choose(&benches);
+        let s = &machines[rng.below(machines.len())];
+        let app = apps::by_name(bench).unwrap();
+        let info = AppInfo::from_app(&app);
+        let mut g = AgentGenome::random(&info, rng);
+        g.syntax_slip = false;
+        g.missing_machine = false;
+        let dsl = g.render();
+        let bulk = run_mapper_with(&app, &dsl, s, ExecMode::BulkSync);
+        let ser = run_mapper_with(&app, &dsl, s, ExecMode::Serialized);
+        match (bulk, ser) {
+            (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string()),
+            (Ok(Err(a)), Ok(Err(b))) => assert_eq!(
+                a.to_string(),
+                b.to_string(),
+                "{bench} on {}: engines classified the failure differently",
+                s.name
+            ),
+            (Ok(Ok(a)), Ok(Ok(b))) => {
+                assert_eq!(
+                    a.throughput, b.throughput,
+                    "{bench} on {}: serialized engine moved the score",
+                    s.name
+                );
+                assert_eq!(a.elapsed_s, b.elapsed_s);
+                assert_eq!(a.busy_s, b.busy_s);
+                assert_eq!(a.transfer_s, b.transfer_s);
+                assert_eq!(a.comm_bytes, b.comm_bytes);
+            }
+            (x, y) => panic!(
+                "{bench} on {}: outcome category diverged: bulk={:?} ser={:?}",
+                s.name,
+                x.map(|r| r.map(|m| m.throughput)),
+                y.map(|r| r.map(|m| m.throughput)),
+            ),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// DAG compression invariants (gate + barrier nodes are timing-neutral)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Tiling {
+    /// Launch point i touches tile i (mod extent).
+    Own,
+    /// Every launch point touches one fixed tile (builds wide fan-ins).
+    Fixed(i64),
+    /// Launch point i touches tile i + shift (mod extent).
+    Shift(i64),
+}
+
+struct LaunchDesc {
+    width: i64,
+    regions: Vec<(usize, Access, Tiling)>,
+}
+
+/// Materialize the (re-runnable) launch description: `Launch` holds boxed
+/// closures and is not `Clone`, so each DAG build gets a fresh copy.
+fn make_steps(app: &App, desc: &[Vec<LaunchDesc>]) -> Vec<Vec<Launch>> {
+    desc.iter()
+        .map(|launches| {
+            launches
+                .iter()
+                .map(|l| Launch {
+                    task: 0,
+                    ispace: vec![l.width],
+                    regions: l
+                        .regions
+                        .iter()
+                        .map(|&(r, access, tiling)| {
+                            let extent = app.regions[r].tiles[0];
+                            RegionReq::new(r, access, 1.0, move |p: &[i64]| match tiling {
+                                Tiling::Own => vec![p[0] % extent],
+                                Tiling::Fixed(c) => vec![c % extent],
+                                Tiling::Shift(sh) => vec![(p[0] + sh) % extent],
+                            })
+                        })
+                        .collect(),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Unit-duration schedule shape of a DAG: earliest start per *point task*
+/// (program order) and the critical-path length, with synthetic
+/// barrier/gate nodes at zero duration.  Node ids are topologically
+/// ordered by construction, so one forward pass suffices.
+fn unit_earliest_starts(dag: &TaskDag) -> (Vec<u64>, u64) {
+    let mut end = vec![0u64; dag.num_nodes()];
+    let mut starts = vec![0u64; dag.num_points()];
+    let mut critical_path = 0u64;
+    for i in 0..dag.num_nodes() {
+        let est = dag
+            .preds_of(i)
+            .iter()
+            .map(|&p| end[p as usize])
+            .max()
+            .unwrap_or(0);
+        end[i] = est + u64::from(dag.point_of(i).is_some());
+        if let Some(pi) = dag.point_of(i) {
+            starts[pi] = est;
+        }
+        critical_path = critical_path.max(end[i]);
+    }
+    (starts, critical_path)
+}
+
+/// Forcing gate compression onto small random launch graphs (threshold 2
+/// instead of the production fan-in) must preserve every point task's
+/// earliest start and the critical path of the uncompressed DAG; the
+/// serialized barrier encoding must reproduce the analytic bulk-sync
+/// schedule (launch k starts at "number of launches before k").
+#[test]
+fn property_dag_compression_preserves_earliest_starts_and_critical_path() {
+    check(0xC0DE, env_cases(60), |rng: &mut Rng| {
+        let extent = 1 + rng.below(4) as i64;
+        let nregions = 1 + rng.below(2);
+        let regions: Vec<RegionDecl> = (0..nregions)
+            .map(|i| RegionDecl {
+                name: format!("r{i}"),
+                tile_bytes: 64,
+                fields: 1,
+                tiles: vec![extent],
+            })
+            .collect();
+        let app = App::new(
+            "randgraph",
+            vec![TaskDecl {
+                name: "work".into(),
+                variants: vec![ProcKind::Gpu],
+                flops_per_point: 1.0,
+                artifact: None,
+                layout_reqs: vec![],
+            }],
+            regions,
+            1,
+            Metric::StepsPerSecond,
+            |_| Vec::new(),
+        );
+        let mut desc = Vec::new();
+        for _ in 0..1 + rng.below(2) {
+            let mut launches = Vec::new();
+            for _ in 0..1 + rng.below(4) {
+                let width = 1 + rng.below(6) as i64;
+                let regs = (0..1 + rng.below(2))
+                    .map(|_| {
+                        let r = rng.below(nregions);
+                        let access = match rng.below(4) {
+                            0 => Access::Read,
+                            1 => Access::Write,
+                            2 => Access::ReadWrite,
+                            _ => Access::Reduce,
+                        };
+                        let tiling = match rng.below(3) {
+                            0 => Tiling::Own,
+                            1 => Tiling::Fixed(rng.below(4) as i64),
+                            _ => Tiling::Shift(1 + rng.below(3) as i64),
+                        };
+                        (r, access, tiling)
+                    })
+                    .collect();
+                launches.push(LaunchDesc { width, regions: regs });
+            }
+            desc.push(launches);
+        }
+
+        // gates forced on (every fan-in >= 2 collapses) vs disabled
+        let gated =
+            task_dag_with_gate_fanin(&app, &make_steps(&app, &desc), DepMode::Inferred, 2);
+        let plain = task_dag_with_gate_fanin(
+            &app,
+            &make_steps(&app, &desc),
+            DepMode::Inferred,
+            usize::MAX,
+        );
+        assert_eq!(gated.num_points(), plain.num_points());
+        assert_eq!(
+            plain.num_nodes(),
+            plain.num_points(),
+            "threshold MAX must gate nothing"
+        );
+        let (starts_gated, cp_gated) = unit_earliest_starts(&gated);
+        let (starts_plain, cp_plain) = unit_earliest_starts(&plain);
+        assert_eq!(starts_gated, starts_plain, "gate compression moved an earliest start");
+        assert_eq!(cp_gated, cp_plain, "gate compression changed the critical path");
+
+        // serialized barrier nodes vs the analytic bulk-sync schedule
+        let ser = task_dag(&app, &make_steps(&app, &desc), DepMode::Serialized);
+        let (starts_ser, cp_ser) = unit_earliest_starts(&ser);
+        let mut launch_index = 0u64;
+        let mut point = 0usize;
+        for launches in &desc {
+            for l in launches {
+                for _ in 0..l.width {
+                    assert_eq!(
+                        starts_ser[point], launch_index,
+                        "barrier encoding shifted a start in launch {launch_index}"
+                    );
+                    point += 1;
+                }
+                launch_index += 1;
+            }
+        }
+        assert_eq!(cp_ser, launch_index, "serialized critical path must count every launch");
     });
 }

@@ -1,0 +1,242 @@
+//! EvalService integration: concurrent optimization campaigns on
+//! multiple registered machine specs through one service, shared-cache
+//! accounting under thread pressure, ticket lifecycle, and worker-pool
+//! fault containment.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use mapperopt::apps::{self, App, Metric};
+use mapperopt::coordinator::{
+    Campaign, EvalRequest, EvalService, SearchAlgo, SpecId,
+};
+use mapperopt::feedback::FeedbackConfig;
+use mapperopt::mapping::expert_dsl;
+use mapperopt::sim::ExecMode;
+
+const SER: ExecMode = ExecMode::Serialized;
+
+fn campaign(spec_id: SpecId, base_seed: u64) -> Campaign {
+    Campaign {
+        spec_id,
+        mode: SER,
+        algo: SearchAlgo::Trace,
+        cfg: FeedbackConfig::FULL,
+        base_seed,
+        seed_stride: 1000,
+        seed_offset: 17,
+        runs: 2,
+        iters: 4,
+    }
+}
+
+/// The acceptance scenario: two concurrent campaigns on two registered
+/// specs through one `EvalService`, with cross-campaign cache hits and
+/// per-spec isolation (no cross-spec aliasing).
+#[test]
+fn concurrent_campaigns_on_two_specs_share_one_service() {
+    let service = Arc::new(EvalService::new(4, 16));
+    let p100 = service.spec_id("p100_cluster").unwrap();
+    let small = service.spec_id("small").unwrap();
+    assert_ne!(p100, small);
+
+    let svc = &*service;
+    let run_both = || {
+        std::thread::scope(|scope| {
+            let a = scope.spawn(|| svc.run_campaigns("circuit", campaign(p100, 1)));
+            let b = scope.spawn(|| svc.run_campaigns("circuit", campaign(small, 1)));
+            (a.join().unwrap().unwrap(), b.join().unwrap().unwrap())
+        })
+    };
+    let (on_p100, on_small) = run_both();
+    assert_eq!(on_p100.len(), 2);
+    assert_eq!(on_small.len(), 2);
+
+    // per-spec isolation: the same (app, dsl) scores differently on the
+    // two machines, so the shared cache must not alias across specs
+    let app = apps::by_name("circuit").unwrap();
+    let dsl = expert_dsl("circuit").unwrap();
+    let expert_p100 = service.evaluate(p100, &app, dsl, SER).score();
+    let expert_small = service.evaluate(small, &app, dsl, SER).score();
+    assert!(expert_p100 > 0.0 && expert_small > 0.0);
+    assert_ne!(
+        expert_p100, expert_small,
+        "2x4 and 1x2 machines must not share cache entries"
+    );
+
+    // same seeds replayed: identical trajectories, and the replay is
+    // served entirely from the cross-campaign cache (zero new evals)
+    let evals_before = service.stats().coord.evals.load(Ordering::Relaxed);
+    let (again_p100, again_small) = run_both();
+    for (x, y) in on_p100.iter().zip(&again_p100) {
+        assert_eq!(x.trajectory(), y.trajectory());
+    }
+    for (x, y) in on_small.iter().zip(&again_small) {
+        assert_eq!(x.trajectory(), y.trajectory());
+    }
+    assert_eq!(
+        service.stats().coord.evals.load(Ordering::Relaxed),
+        evals_before,
+        "replayed campaigns must be pure cross-campaign cache hits"
+    );
+    assert!(service.stats().coord.cache_hits.load(Ordering::Relaxed) > 0);
+
+    // both specs saw queued traffic and produced hits
+    let p100_counters = service.stats().spec_counters(p100);
+    let small_counters = service.stats().spec_counters(small);
+    assert!(p100_counters.evals > 0 && small_counters.evals > 0);
+    assert!(p100_counters.cache_hits > 0 && small_counters.cache_hits > 0);
+    assert_eq!(
+        service.stats().submitted.load(Ordering::Relaxed),
+        service.stats().completed.load(Ordering::Relaxed),
+        "every queued request must resolve its ticket"
+    );
+}
+
+/// N threads hammering overlapping (spec, app, dsl) sets: every
+/// submission is exactly one eval or one cache hit, point-task/eval-time
+/// counters never double-count on hits, and results never drift.
+#[test]
+fn shared_cache_stress_accounting() {
+    let service = Arc::new(EvalService::new(3, 8));
+    let p100 = service.spec_id("p100_cluster").unwrap();
+    let small = service.spec_id("small").unwrap();
+    let gpu_mapper = "Task * GPU;\nRegion * * GPU FBMEM;\n\
+                      Layout * * * SOA C_order Align==64;\n";
+    let zc_mapper = "Task * GPU;\nRegion * * GPU ZCMEM;\n";
+
+    let mut combos: Vec<(SpecId, Arc<App>, String)> = Vec::new();
+    for name in ["circuit", "cannon"] {
+        let app = Arc::new(apps::by_name(name).unwrap());
+        for spec in [p100, small] {
+            for dsl in [expert_dsl(name).unwrap(), gpu_mapper, zc_mapper] {
+                combos.push((spec, Arc::clone(&app), dsl.to_string()));
+            }
+        }
+    }
+
+    // prewarm: every combo is a distinct cache key, evaluated once
+    let expected: Vec<_> = combos
+        .iter()
+        .map(|(spec, app, dsl)| service.evaluate(*spec, app, dsl, SER))
+        .collect();
+    let stats = service.stats();
+    let evals_warm = stats.coord.evals.load(Ordering::Relaxed);
+    assert_eq!(evals_warm, combos.len(), "prewarm keys must not collide");
+    assert_eq!(stats.coord.cache_hits.load(Ordering::Relaxed), 0);
+    let point_tasks_warm = stats.coord.point_tasks.load(Ordering::Relaxed);
+    let eval_ns_warm = stats.coord.eval_ns.load(Ordering::Relaxed);
+    assert!(point_tasks_warm > 0 && eval_ns_warm > 0);
+
+    let threads = 8usize;
+    let iters = 24usize;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let service = Arc::clone(&service);
+            let combos = &combos;
+            let expected = &expected;
+            scope.spawn(move || {
+                for i in 0..iters {
+                    let k = (t * 5 + i * 3) % combos.len();
+                    let (spec, app, dsl) = &combos[k];
+                    let ticket = service.submit(EvalRequest {
+                        spec_id: *spec,
+                        app: Arc::clone(app),
+                        dsl: dsl.clone(),
+                        mode: SER,
+                    });
+                    let fb = if i % 2 == 0 {
+                        ticket.wait()
+                    } else {
+                        loop {
+                            if let Some(fb) = ticket.poll() {
+                                break fb;
+                            }
+                            std::thread::yield_now();
+                        }
+                    };
+                    assert_eq!(fb, expected[k], "combo {k} drifted under concurrency");
+                }
+            });
+        }
+    });
+
+    let stats = service.stats();
+    let total = combos.len() + threads * iters;
+    assert_eq!(
+        stats.coord.evals.load(Ordering::Relaxed)
+            + stats.coord.cache_hits.load(Ordering::Relaxed),
+        total,
+        "every submission is exactly one eval or one cache hit"
+    );
+    assert_eq!(
+        stats.coord.evals.load(Ordering::Relaxed),
+        evals_warm,
+        "the hammer phase must be served from the cache"
+    );
+    assert_eq!(
+        stats.coord.point_tasks.load(Ordering::Relaxed),
+        point_tasks_warm,
+        "cache hits must never re-count point tasks"
+    );
+    assert_eq!(
+        stats.coord.eval_ns.load(Ordering::Relaxed),
+        eval_ns_warm,
+        "cache hits must never re-count evaluation time"
+    );
+    assert_eq!(stats.submitted.load(Ordering::Relaxed), threads * iters);
+    assert_eq!(stats.completed.load(Ordering::Relaxed), threads * iters);
+    assert!(stats.max_queue_depth() <= 8, "bounded queue overflowed its capacity");
+    assert!(stats.batch_occupancy() >= 1.0, "workers must drain in batches");
+    assert_eq!(service.cache_len(), combos.len(), "no aliased or duplicate entries");
+
+    // per-spec counters partition the service-wide totals
+    let p100_counters = stats.spec_counters(p100);
+    let small_counters = stats.spec_counters(small);
+    assert_eq!(
+        p100_counters.evals
+            + p100_counters.cache_hits
+            + small_counters.evals
+            + small_counters.cache_hits,
+        total
+    );
+    assert_eq!(p100_counters.evals, combos.len() / 2);
+    assert_eq!(small_counters.evals, combos.len() / 2);
+}
+
+/// A panic inside an evaluation resolves the ticket with a classified
+/// internal error and leaves the worker pool serving.
+#[test]
+fn worker_panic_fills_ticket_and_pool_survives() {
+    let service = EvalService::new(1, 4);
+    let p100 = service.spec_id("p100_cluster").unwrap();
+    let boom: Arc<App> = Arc::new(App::new(
+        "boom",
+        vec![],
+        vec![],
+        1,
+        Metric::StepsPerSecond,
+        |_| panic!("launch generator exploded"),
+    ));
+    let ticket = service.submit(EvalRequest {
+        spec_id: p100,
+        app: boom,
+        dsl: "Task * GPU;".into(),
+        mode: SER,
+    });
+    let fb = ticket.wait();
+    assert!(fb.is_error());
+    assert!(fb.line().contains("worker panicked"), "{}", fb.line());
+    assert!(fb.line().contains("launch generator exploded"), "{}", fb.line());
+
+    // the single worker survived and still serves healthy requests
+    let app = Arc::new(apps::by_name("circuit").unwrap());
+    let ticket = service.submit(EvalRequest {
+        spec_id: p100,
+        app,
+        dsl: expert_dsl("circuit").unwrap().into(),
+        mode: SER,
+    });
+    assert!(ticket.wait().score() > 0.0);
+    assert_eq!(service.stats().completed.load(Ordering::Relaxed), 2);
+}
