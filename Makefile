@@ -6,7 +6,12 @@
 #                    tier-1 keeps the small in-code defaults)
 #   make bench-smoke build every bench target and run the scheduler
 #                    scalability bench at its smallest size (CI keeps
-#                    bench code from rotting)
+#                    bench code from rotting); the campaign section
+#                    prints its JSON line alongside the human one
+#   make bench-json  run the warm-vs-cold campaign benchmark and write
+#                    the evals/sec + point-tasks/sec numbers as JSON to
+#                    BENCH_sched_scale.json (the machine-readable
+#                    trajectory seed)
 #   make artifacts   AOT-lower the python task bodies to artifacts/*.hlo.txt
 #                    (needed only for the PJRT runtime path; tests skip
 #                    cleanly when artifacts/ is absent)
@@ -16,7 +21,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 PROPTEST_CASES ?= 400
 
-.PHONY: build test verify test-props bench-smoke fmt fmt-check clippy ci artifacts figures clean
+.PHONY: build test verify test-props bench-smoke bench-json fmt fmt-check clippy ci artifacts figures clean
 
 build:
 	$(CARGO) build --release
@@ -32,6 +37,10 @@ test-props:
 bench-smoke:
 	$(CARGO) build --benches
 	$(CARGO) bench --bench sched_scale -- smoke
+
+bench-json:
+	$(CARGO) build --benches
+	$(CARGO) bench --bench sched_scale -- json | tee BENCH_sched_scale.json
 
 fmt:
 	$(CARGO) fmt --all

@@ -1,17 +1,24 @@
 //! Scheduler scalability: end-to-end evaluation throughput on the
 //! `stencil3d` halo-exchange app across task-graph sizes, for all three
-//! execution engines.
+//! execution engines — plus the campaign benchmark: repeated
+//! evaluations of *distinct* mappers on one app, cold (fresh DSL
+//! compile + DAG build + buffers per eval) vs warm (`EvalService` with
+//! its plan / policy / decision caches and per-worker `SimArena`), and
+//! a semantic-alias phase (reformatted mappers, identical decisions)
+//! that measures the decision cache.
 //!
-//! Reports ms/eval, point-tasks/sec, and evals/sec per (size, engine),
-//! plus the coordinator-level throughput counters — the numbers a
-//! many-campaign optimization service lives and dies by.
+//! Flags (combine freely):
+//!   smoke — CI sizes only
+//!   json  — print ONLY a machine-readable JSON line with the campaign
+//!           evals/sec + point-tasks/sec numbers (the `BENCH_*.json`
+//!           seed; see `make bench-json`)
 //!
 //! Run small-only (CI smoke): `cargo bench --bench sched_scale -- smoke`
 
 use std::time::Instant;
 
 use mapperopt::apps::{self, App, Stencil3dConfig};
-use mapperopt::coordinator::Coordinator;
+use mapperopt::coordinator::{Coordinator, EvalService};
 use mapperopt::machine::MachineSpec;
 use mapperopt::mapping::expert_dsl;
 use mapperopt::sim::{run_mapper_with, ExecMode};
@@ -41,8 +48,147 @@ fn measure(
     );
 }
 
+/// Mappers with pairwise-distinct concrete decision vectors: every
+/// (multiplier % 4, offset % 4) pair induces a different per-point GPU
+/// assignment on the 2x4 cluster, so the decision cache cannot alias
+/// them — each one costs a real simulation.
+fn distinct_mappers(k: usize) -> Vec<String> {
+    assert!(k <= 12, "only 12 guaranteed-distinct (m, c) pairs generated");
+    (0..k)
+        .map(|i| {
+            let m = 1 + i / 4; // 1..=3
+            let c = i % 4;
+            format!(
+                "Task * GPU;\n\
+                 Region * * GPU FBMEM;\n\
+                 Layout * * * SOA C_order Align==64;\n\
+                 mgpu = Machine(GPU);\n\
+                 def v{i}(Tuple ipoint, Tuple ispace) {{\n\
+                 \x20 lin = ipoint[0] * {m} + {c};\n\
+                 \x20 return mgpu[lin % mgpu.size[0], lin % mgpu.size[1]];\n\
+                 }}\n\
+                 IndexTaskMap * v{i};\n"
+            )
+        })
+        .collect()
+}
+
+struct CampaignNumbers {
+    tasks: usize,
+    mappers: usize,
+    cold_eps: f64,
+    warm_eps: f64,
+    alias_eps: f64,
+    cold_tps: f64,
+    warm_tps: f64,
+    decision_hits: usize,
+}
+
+/// The campaign hot path: K distinct mappers on one >= `min_tasks`-task
+/// app, cold vs warm, then K semantic aliases of the same mappers.
+fn campaign(min_tasks: usize) -> CampaignNumbers {
+    let cfg = Stencil3dConfig::with_min_point_tasks(min_tasks);
+    let tasks = cfg.point_tasks();
+    let app = apps::stencil3d(cfg);
+    let spec = MachineSpec::p100_cluster();
+    let mappers = distinct_mappers(12);
+
+    // cold: the full per-eval pipeline — DSL compile, launch flattening,
+    // DAG build, fresh scratch buffers — per mapper
+    let t0 = Instant::now();
+    for dsl in &mappers {
+        std::hint::black_box(
+            run_mapper_with(&app, dsl, &spec, ExecMode::Serialized).unwrap().unwrap(),
+        );
+    }
+    let cold_s = t0.elapsed().as_secs_f64();
+
+    // warm: the serving path — shared EvalPlan, policy cache, reusable
+    // per-thread SimArena; every mapper still simulates (decisions are
+    // pairwise distinct)
+    let service = EvalService::new(1, 8);
+    let sid = service.spec_id("p100_cluster").unwrap();
+    let t1 = Instant::now();
+    for dsl in &mappers {
+        std::hint::black_box(service.evaluate(sid, &app, dsl, ExecMode::Serialized));
+    }
+    let warm_s = t1.elapsed().as_secs_f64();
+
+    // aliases: textually new, semantically identical — the decision
+    // cache serves them without re-simulating
+    let t2 = Instant::now();
+    for (i, dsl) in mappers.iter().enumerate() {
+        let alias = format!("# llm rewrite {i}\n{dsl}# renamed candidate\n");
+        std::hint::black_box(service.evaluate(sid, &app, &alias, ExecMode::Serialized));
+    }
+    let alias_s = t2.elapsed().as_secs_f64();
+
+    let k = mappers.len() as f64;
+    let stats = service.stats();
+    CampaignNumbers {
+        tasks,
+        mappers: mappers.len(),
+        cold_eps: k / cold_s,
+        warm_eps: k / warm_s,
+        alias_eps: k / alias_s,
+        cold_tps: k * tasks as f64 / cold_s,
+        warm_tps: k * tasks as f64 / warm_s,
+        decision_hits: stats
+            .decision_hits
+            .load(std::sync::atomic::Ordering::Relaxed),
+    }
+}
+
+impl CampaignNumbers {
+    fn json(&self) -> String {
+        format!(
+            "{{\"bench\":\"sched_scale_campaign\",\"tasks\":{},\"mappers\":{},\
+             \"cold_evals_per_sec\":{:.3},\"warm_evals_per_sec\":{:.3},\
+             \"warm_over_cold\":{:.3},\"alias_evals_per_sec\":{:.3},\
+             \"cold_point_tasks_per_sec\":{:.0},\"warm_point_tasks_per_sec\":{:.0},\
+             \"decision_hits\":{}}}",
+            self.tasks,
+            self.mappers,
+            self.cold_eps,
+            self.warm_eps,
+            self.warm_eps / self.cold_eps,
+            self.alias_eps,
+            self.cold_tps,
+            self.warm_tps,
+            self.decision_hits,
+        )
+    }
+
+    fn human(&self) -> String {
+        format!(
+            "campaign {:>6} tasks x {} mappers: cold {:>7.2} evals/s  warm {:>7.2} \
+             evals/s ({:.2}x)  aliases {:>8.2} evals/s ({} decision hits)\n\
+             campaign point-tasks/s: cold {:>12.0}  warm {:>12.0}",
+            self.tasks,
+            self.mappers,
+            self.cold_eps,
+            self.warm_eps,
+            self.warm_eps / self.cold_eps,
+            self.alias_eps,
+            self.decision_hits,
+            self.cold_tps,
+            self.warm_tps,
+        )
+    }
+}
+
 fn main() {
-    let smoke = std::env::args().any(|a| a == "smoke" || a == "--smoke");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "smoke" || a == "--smoke");
+    let json = args.iter().any(|a| a == "json" || a == "--json");
+    let campaign_tasks = if smoke { 1_000 } else { 10_000 };
+
+    if json {
+        // machine-readable only: one JSON object on stdout
+        println!("{}", campaign(campaign_tasks).json());
+        return;
+    }
+
     let spec = MachineSpec::p100_cluster();
     let dsl = expert_dsl("stencil3d").unwrap();
 
@@ -58,13 +204,18 @@ fn main() {
         }
     }
 
+    // one campaign run serves both renderings (CI smoke covers the JSON
+    // path without re-simulating)
+    let numbers = campaign(campaign_tasks);
+    println!("{}", numbers.human());
+    println!("{}", numbers.json());
+
     // coordinator-level throughput: three distinct mappers on a 10^4-task
-    // graph (comment suffixes defeat the content cache without changing
-    // mapping semantics)
+    // graph (comment suffixes defeat the text cache without changing
+    // mapping semantics — since PR 4 they hit the decision cache instead,
+    // so the counters below reflect one real simulation)
     let coord = Coordinator::new(spec);
-    let app = apps::stencil3d(Stencil3dConfig::with_min_point_tasks(
-        if smoke { 1_000 } else { 10_000 },
-    ));
+    let app = apps::stencil3d(Stencil3dConfig::with_min_point_tasks(campaign_tasks));
     for i in 0..3 {
         let variant = format!("{dsl}# variant {i}\n");
         std::hint::black_box(coord.evaluate(&app, &variant));

@@ -473,6 +473,15 @@ impl TaskDag {
         self.preds.row(node)
     }
 
+    /// Predecessor fan-in of every node — the scheduler's initial
+    /// in-degree vector.  Cached once per [`crate::sim::EvalPlan`] so a
+    /// warm evaluation copies it instead of re-walking the CSR rows.
+    pub fn pred_counts(&self) -> Vec<u32> {
+        (0..self.num_nodes())
+            .map(|i| self.preds_of(i).len() as u32)
+            .collect()
+    }
+
     pub fn succs_of(&self, node: usize) -> &[u32] {
         self.succs.row(node)
     }

@@ -16,6 +16,17 @@
 //! [`PerfProfile`] (see [`Coordinator::profile`]) that the profile
 //! feedback tier renders into the optimizer prompt.  Use
 //! [`Coordinator::with_mode`] for [`ExecMode::OutOfOrder`] runs.
+//!
+//! The service's evaluation hot path is layered (all bounded-LRU, see
+//! [`CacheConfig`]): a text-level feedback cache keyed by the
+//! machine-fingerprinted [`eval_key`], a compiled-policy cache keyed by
+//! `(dsl fingerprint, spec fingerprint)`, a structural
+//! [`crate::sim::EvalPlan`] cache keyed by `(app fingerprint, mode)`,
+//! and a *semantic* decision cache keyed by the resolved mapping
+//! decision vector — so textually different mappers that induce
+//! identical mappings share one simulation.  A standalone
+//! [`Coordinator`] gets all of this for free: `Coordinator::new` spins a
+//! dedicated service around its single spec.
 
 pub mod service;
 
@@ -31,8 +42,8 @@ use crate::optimizer::{
 use crate::sim::{ExecMode, PerfProfile};
 
 pub use service::{
-    Campaign, EvalRequest, EvalService, EvalTicket, ServiceStats, SpecCounters,
-    SpecId, SpecRegistry,
+    CacheConfig, Campaign, EvalRequest, EvalService, EvalTicket, ServiceStats,
+    SpecCounters, SpecId, SpecRegistry,
 };
 
 /// Which search algorithm to run (Section 5's two optimizers).
@@ -299,24 +310,9 @@ pub(crate) fn spec_fingerprint(spec: &MachineSpec) -> u64 {
     fnv1a(&[format!("{spec:?}").as_bytes()])
 }
 
-/// FNV-1a over length-prefixed byte fields.  The length prefix keeps
-/// field boundaries in the hash: `["ab", "c"]` and `["a", "bc"]` feed
-/// different byte streams (the unprefixed version collided on exactly
-/// that, aliasing cache entries across (app, dsl) pairs).
-pub(crate) fn fnv1a(fields: &[&[u8]]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut eat = |bytes: &[u8]| {
-        for &byte in bytes {
-            h ^= byte as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01B3);
-        }
-    };
-    for field in fields {
-        eat(&(field.len() as u64).to_le_bytes());
-        eat(field);
-    }
-    h
-}
+/// FNV-1a over length-prefixed byte fields (shared with the simulator's
+/// decision fingerprints; see [`crate::util::hash`]).
+pub(crate) use crate::util::hash::fnv1a;
 
 /// Structural fingerprint of an app: name, steps, metric, and the task /
 /// region declarations.  Every config knob (problem sizes, tile grids,

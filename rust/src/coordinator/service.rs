@@ -38,6 +38,7 @@
 //! Dropping the service closes the queue, drains the remaining jobs (so
 //! no ticket is left unresolved), and joins the workers.
 
+use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
@@ -45,18 +46,56 @@ use std::thread;
 use std::time::Instant;
 
 use crate::apps::{self, App};
+use crate::dsl::MappingPolicy;
 use crate::feedback::{FeedbackConfig, SystemFeedback};
 use crate::machine::MachineSpec;
 use crate::optimizer::AppInfo;
-use crate::sim::{run_mapper_with, ExecMode};
+use crate::sim::{
+    execute_plan, resolve_decisions, EvalPlan, ExecMode, Executor,
+    ResolvedDecisions, SimArena,
+};
+use crate::util::lru::LruCache;
 
 use super::{
-    app_fingerprint, drive_campaign, eval_key, join_campaigns, panic_message,
-    spec_fingerprint, CoordinatorStats, RunResult, SearchAlgo,
+    app_fingerprint, drive_campaign, eval_key, fnv1a, join_campaigns,
+    panic_message, spec_fingerprint, CoordinatorStats, RunResult, SearchAlgo,
 };
 
 /// Jobs a worker drains per wake-up.
 pub const BATCH_MAX: usize = 8;
+
+thread_local! {
+    /// Per-thread reusable simulation arena: pool workers and
+    /// synchronous callers alike evaluate with zero structural
+    /// allocations once warm (see [`SimArena`]).
+    static ARENA: RefCell<SimArena> = RefCell::new(SimArena::new());
+}
+
+/// Capacities of the service's four bounded-LRU caches.  Defaults are
+/// generous — eviction is the long-lived-service safety valve (the
+/// ROADMAP follow-on), not the steady state.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// Text-level feedback cache (`eval_key -> SystemFeedback`).
+    pub feedback_cap: usize,
+    /// Structural plan cache (`(app_fp, mode) -> Arc<EvalPlan>`).
+    pub plan_cap: usize,
+    /// Compiled-policy cache (`(dsl_fp, spec_fp) -> Arc<MappingPolicy>`).
+    pub policy_cap: usize,
+    /// Semantic decision cache (`decision_key -> SystemFeedback`).
+    pub decision_cap: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> CacheConfig {
+        CacheConfig {
+            feedback_cap: 1 << 16,
+            plan_cap: 64,
+            policy_cap: 1 << 10,
+            decision_cap: 1 << 16,
+        }
+    }
+}
 
 /// Handle of a registered machine spec (index into the registry).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -255,6 +294,23 @@ pub struct ServiceStats {
     pub submitted: AtomicUsize,
     /// Tickets resolved by the worker pool.
     pub completed: AtomicUsize,
+    /// Structural [`EvalPlan`]s built (plan-cache misses).
+    pub plan_builds: AtomicUsize,
+    /// Evaluations that reused a cached [`EvalPlan`].
+    pub plan_hits: AtomicUsize,
+    /// Mapper sources compiled (policy-cache misses).
+    pub policy_compiles: AtomicUsize,
+    /// Evaluations that reused a cached compiled [`MappingPolicy`].
+    pub policy_hits: AtomicUsize,
+    /// Evaluations served by the semantic decision cache: textually new
+    /// mappers whose resolved decision vector matched a prior simulation
+    /// (each also counts as a `coord.cache_hits` hit).
+    pub decision_hits: AtomicUsize,
+    /// LRU evictions per cache (feedback / plan / policy / decision).
+    pub evicted_feedback: AtomicUsize,
+    pub evicted_plans: AtomicUsize,
+    pub evicted_policies: AtomicUsize,
+    pub evicted_decisions: AtomicUsize,
     max_queue_depth: AtomicUsize,
     batches: AtomicUsize,
     batched_jobs: AtomicUsize,
@@ -348,7 +404,21 @@ struct JobQueue {
 
 struct Inner {
     registry: SpecRegistry,
-    cache: Mutex<HashMap<u64, SystemFeedback>>,
+    /// Text-level result cache: `eval_key -> feedback` (bounded LRU).
+    cache: Mutex<LruCache<u64, SystemFeedback>>,
+    /// Structural plan cache: `(app_fp, mode) -> plan`.  Plans are
+    /// machine-independent, so one entry serves every registered spec.
+    plans: Mutex<LruCache<(u64, ExecMode), Arc<EvalPlan>>>,
+    /// Compiled-policy cache: `(dsl_fp, spec_fp) -> policy` (compilation
+    /// consults the machine — `Machine(GPU)` globals bake in its shape —
+    /// so the spec fingerprint is part of the key).
+    policies: Mutex<LruCache<(u64, u64), Arc<MappingPolicy>>>,
+    /// Semantic decision cache: `decision_key -> feedback`, where the
+    /// key fingerprints the resolved mapping decision vector (plus app /
+    /// spec / mode).  Textually different mappers that induce identical
+    /// mappings — LLM search loves renaming and reformatting — hit here
+    /// instead of re-simulating.
+    decisions: Mutex<LruCache<u64, SystemFeedback>>,
     /// Keys whose evaluation is currently running, with the slot the
     /// running ("leader") evaluation will resolve — concurrent identical
     /// requests join it instead of recomputing the same simulation.
@@ -360,6 +430,32 @@ struct Inner {
     capacity: usize,
     /// Worker-pool size (used to size fair-share batches).
     pool_size: usize,
+}
+
+/// How the leader path produced a feedback: a fresh simulation (or
+/// compile/resolution error), or a semantic decision-cache hit.
+enum Served {
+    Fresh(SystemFeedback),
+    Decision(SystemFeedback),
+}
+
+/// Counts a leader evaluation that unwound (panicked) as one eval, so
+/// the `evals + cache_hits == submissions` accounting invariant survives
+/// panics (the worker still resolves the ticket and bumps `completed`).
+/// Disarmed on the normal path, where the outcome decides the counter.
+struct PanicEvalCount<'a> {
+    stats: &'a ServiceStats,
+    spec_id: SpecId,
+    armed: bool,
+}
+
+impl Drop for PanicEvalCount<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.stats.coord.evals.fetch_add(1, Ordering::Relaxed);
+            self.stats.note_spec(self.spec_id, false);
+        }
+    }
 }
 
 /// Clears the in-flight entry of a leader evaluation on every exit path.
@@ -381,10 +477,12 @@ impl Drop for InFlightGuard<'_> {
 }
 
 impl Inner {
-    /// The one evaluation path: shared cache in front, in-flight
-    /// deduplication for concurrent identical requests, per-spec and
-    /// service-wide stats behind.  No lock is held across the simulation
-    /// itself, so a panicking evaluation cannot poison the cache.
+    /// The one evaluation path: text-level cache in front, in-flight
+    /// deduplication for concurrent identical requests, then the
+    /// semantic layers (policy / plan / decision caches) behind, with
+    /// per-spec and service-wide stats.  No lock is held across
+    /// compilation or simulation, so a panicking evaluation cannot
+    /// poison any cache.
     fn evaluate(
         &self,
         spec_id: SpecId,
@@ -395,10 +493,11 @@ impl Inner {
     ) -> SystemFeedback {
         let entry = self.registry.entry(spec_id);
         let key = eval_key(app_fp, dsl, entry.fp, mode);
-        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+        let hit = self.cache.lock().unwrap().get(&key).cloned();
+        if let Some(fb) = hit {
             self.stats.coord.cache_hits.fetch_add(1, Ordering::Relaxed);
             self.stats.note_spec(spec_id, true);
-            return hit.clone();
+            return fb;
         }
         // become the leader for this key, or join a running evaluation
         let slot = Arc::new(TicketSlot::default());
@@ -409,10 +508,11 @@ impl Inner {
             } else {
                 // re-check the cache under the in-flight lock: a leader
                 // may have completed between our miss above and here
-                if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+                let hit = self.cache.lock().unwrap().get(&key).cloned();
+                if let Some(fb) = hit {
                     self.stats.coord.cache_hits.fetch_add(1, Ordering::Relaxed);
                     self.stats.note_spec(spec_id, true);
-                    return hit.clone();
+                    return fb;
                 }
                 inf.insert(key, Arc::clone(&slot));
                 None
@@ -427,29 +527,163 @@ impl Inner {
             return fb;
         }
         let _guard = InFlightGuard { inner: self, key, slot: Arc::clone(&slot) };
-        self.stats.coord.evals.fetch_add(1, Ordering::Relaxed);
-        self.stats.note_spec(spec_id, false);
         let t0 = Instant::now();
-        let fb = match run_mapper_with(app, dsl, &entry.spec, mode) {
-            Err(ce) => SystemFeedback::CompileError(ce.to_string()),
-            Ok(Err(xe)) => SystemFeedback::ExecutionError(xe.to_string()),
-            Ok(Ok(m)) => SystemFeedback::from_metrics(&m),
+        let mut panic_count =
+            PanicEvalCount { stats: &self.stats, spec_id, armed: true };
+        let served = self.evaluate_semantic(app_fp, app, dsl, mode, &entry);
+        panic_count.armed = false;
+        let fb = match served {
+            Served::Decision(fb) => {
+                // a textually new mapper resolved to a decision vector we
+                // already simulated: a hit, not an eval (and no eval_ns /
+                // point_tasks, which count simulations only)
+                self.stats.coord.cache_hits.fetch_add(1, Ordering::Relaxed);
+                self.stats.decision_hits.fetch_add(1, Ordering::Relaxed);
+                self.stats.note_spec(spec_id, true);
+                fb
+            }
+            Served::Fresh(fb) => {
+                self.stats.coord.evals.fetch_add(1, Ordering::Relaxed);
+                self.stats.note_spec(spec_id, false);
+                self.stats
+                    .coord
+                    .eval_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                if let Some(p) = fb.profile() {
+                    self.stats
+                        .coord
+                        .point_tasks
+                        .fetch_add(p.total_tasks as u64, Ordering::Relaxed);
+                }
+                fb
+            }
         };
-        self.stats
-            .coord
-            .eval_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        if let Some(p) = fb.profile() {
-            self.stats
-                .coord
-                .point_tasks
-                .fetch_add(p.total_tasks as u64, Ordering::Relaxed);
+        let evicted = self.cache.lock().unwrap().insert(key, fb.clone());
+        if evicted > 0 {
+            self.stats.evicted_feedback.fetch_add(evicted, Ordering::Relaxed);
         }
-        self.cache.lock().unwrap().insert(key, fb.clone());
         slot.fill(fb.clone());
         fb
         // `_guard` drops here: the in-flight entry is cleared only after
         // the cache holds the result, so late joiners always find one
+    }
+
+    /// Compiled policy for `(dsl, spec)`, through the policy cache.
+    fn policy_for(
+        &self,
+        dsl: &str,
+        entry: &SpecEntry,
+    ) -> Result<Arc<MappingPolicy>, String> {
+        let key = (fnv1a(&[dsl.as_bytes()]), entry.fp);
+        let hit = self.policies.lock().unwrap().get(&key).cloned();
+        if let Some(p) = hit {
+            self.stats.policy_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(p);
+        }
+        self.stats.policy_compiles.fetch_add(1, Ordering::Relaxed);
+        match MappingPolicy::compile(dsl, &entry.spec) {
+            Ok(p) => {
+                let p = Arc::new(p);
+                let evicted = self.policies.lock().unwrap().insert(key, Arc::clone(&p));
+                if evicted > 0 {
+                    self.stats.evicted_policies.fetch_add(evicted, Ordering::Relaxed);
+                }
+                Ok(p)
+            }
+            // compile errors are cheap and land in the text-level cache,
+            // so they are not worth a policy-cache slot
+            Err(ce) => Err(ce.to_string()),
+        }
+    }
+
+    /// Structural plan for `(app, mode)`, through the plan cache.
+    fn plan_for(
+        &self,
+        app_fp: u64,
+        app: &App,
+        mode: ExecMode,
+        dep: crate::apps::DepMode,
+    ) -> Arc<EvalPlan> {
+        let key = (app_fp, mode);
+        let hit = self.plans.lock().unwrap().get(&key).cloned();
+        if let Some(p) = hit {
+            self.stats.plan_hits.fetch_add(1, Ordering::Relaxed);
+            return p;
+        }
+        // build outside the lock (concurrent duplicate builds are
+        // harmless — the second insert refreshes the entry)
+        self.stats.plan_builds.fetch_add(1, Ordering::Relaxed);
+        let p = Arc::new(EvalPlan::build(app, dep));
+        let evicted = self.plans.lock().unwrap().insert(key, Arc::clone(&p));
+        if evicted > 0 {
+            self.stats.evicted_plans.fetch_add(evicted, Ordering::Relaxed);
+        }
+        p
+    }
+
+    /// The semantic evaluation pipeline of one leader: policy cache ->
+    /// plan cache -> decision resolution -> decision cache -> (if all
+    /// miss) one simulation over the cached plan with the thread's
+    /// reusable arena.  Every path is bit-identical to the cold
+    /// `run_mapper_with` pipeline; when decision resolution errors, the
+    /// plain engine re-runs it interleaved with simulation so the error
+    /// classification matches the legacy order exactly.
+    fn evaluate_semantic(
+        &self,
+        app_fp: u64,
+        app: &App,
+        dsl: &str,
+        mode: ExecMode,
+        entry: &SpecEntry,
+    ) -> Served {
+        let policy = match self.policy_for(dsl, entry) {
+            Ok(p) => p,
+            Err(ce) => return Served::Fresh(SystemFeedback::CompileError(ce)),
+        };
+        let Some(dep) = mode.dep_mode() else {
+            // bulk-sync has no DAG plan; run the legacy loop directly
+            let fb = match Executor::with_mode(&entry.spec, mode).execute(app, &policy)
+            {
+                Ok(m) => SystemFeedback::from_metrics(&m),
+                Err(xe) => SystemFeedback::ExecutionError(xe.to_string()),
+            };
+            return Served::Fresh(fb);
+        };
+        let plan = self.plan_for(app_fp, app, mode, dep);
+        let simulate = |resolved: Option<&ResolvedDecisions>| -> SystemFeedback {
+            ARENA.with(|a| {
+                let mut arena = a.borrow_mut();
+                match execute_plan(&entry.spec, app, &policy, &plan, resolved, &mut arena)
+                {
+                    Ok(m) => SystemFeedback::from_metrics(&m),
+                    Err(xe) => SystemFeedback::ExecutionError(xe.to_string()),
+                }
+            })
+        };
+        match resolve_decisions(&plan, app, &policy, &entry.spec) {
+            Ok(resolved) => {
+                let dkey = fnv1a(&[
+                    &app_fp.to_le_bytes(),
+                    &entry.fp.to_le_bytes(),
+                    mode.name().as_bytes(),
+                    &resolved.fingerprint(&entry.spec).to_le_bytes(),
+                ]);
+                let hit = self.decisions.lock().unwrap().get(&dkey).cloned();
+                if let Some(fb) = hit {
+                    return Served::Decision(fb);
+                }
+                let fb = simulate(Some(&resolved));
+                let evicted = self.decisions.lock().unwrap().insert(dkey, fb.clone());
+                if evicted > 0 {
+                    self.stats.evicted_decisions.fetch_add(evicted, Ordering::Relaxed);
+                }
+                Served::Fresh(fb)
+            }
+            // a resolution error is not necessarily the evaluation's
+            // outcome (the legacy engines interleave checks with
+            // simulation); replay cold for bit-identical classification
+            Err(_) => Served::Fresh(simulate(None)),
+        }
     }
 }
 
@@ -510,12 +744,24 @@ pub struct EvalService {
 
 impl EvalService {
     /// Service with `workers` pool threads (spawned on first use of the
-    /// queue) and a bounded queue of `queue_capacity` jobs.
-    /// `p100_cluster` and `small` are pre-registered.
+    /// queue), a bounded queue of `queue_capacity` jobs, and default
+    /// cache capacities.  `p100_cluster` and `small` are pre-registered.
     pub fn new(workers: usize, queue_capacity: usize) -> EvalService {
+        EvalService::with_cache_config(workers, queue_capacity, CacheConfig::default())
+    }
+
+    /// [`Self::new`] with explicit bounded-LRU cache capacities.
+    pub fn with_cache_config(
+        workers: usize,
+        queue_capacity: usize,
+        caches: CacheConfig,
+    ) -> EvalService {
         let inner = Arc::new(Inner {
             registry: SpecRegistry::default(),
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(LruCache::new(caches.feedback_cap)),
+            plans: Mutex::new(LruCache::new(caches.plan_cap)),
+            policies: Mutex::new(LruCache::new(caches.policy_cap)),
+            decisions: Mutex::new(LruCache::new(caches.decision_cap)),
             in_flight: Mutex::new(HashMap::new()),
             stats: ServiceStats::default(),
             queue: Mutex::new(JobQueue { jobs: VecDeque::new(), closed: false }),
@@ -577,9 +823,24 @@ impl EvalService {
         &self.inner.stats
     }
 
-    /// Entries in the shared cross-campaign cache.
+    /// Entries in the shared cross-campaign (text-level) cache.
     pub fn cache_len(&self) -> usize {
         self.inner.cache.lock().unwrap().len()
+    }
+
+    /// Entries in the structural plan cache.
+    pub fn plan_cache_len(&self) -> usize {
+        self.inner.plans.lock().unwrap().len()
+    }
+
+    /// Entries in the compiled-policy cache.
+    pub fn policy_cache_len(&self) -> usize {
+        self.inner.policies.lock().unwrap().len()
+    }
+
+    /// Entries in the semantic decision cache.
+    pub fn decision_cache_len(&self) -> usize {
+        self.inner.decisions.lock().unwrap().len()
     }
 
     /// Jobs currently queued (excludes jobs being evaluated).
@@ -668,13 +929,25 @@ impl EvalService {
         let s = self.stats();
         let mut out = format!(
             "eval service: {} evals, {} cache hits, {} submitted, {} completed\n\
-             queue: max depth {}, batch occupancy {:.2}\n",
+             queue: max depth {}, batch occupancy {:.2}\n\
+             caches: plan {} built / {} hits, policy {} compiled / {} hits, \
+             decision {} hits\n\
+             evictions: feedback {}, plan {}, policy {}, decision {}\n",
             s.coord.evals.load(Ordering::Relaxed),
             s.coord.cache_hits.load(Ordering::Relaxed),
             s.submitted.load(Ordering::Relaxed),
             s.completed.load(Ordering::Relaxed),
             s.max_queue_depth(),
             s.batch_occupancy(),
+            s.plan_builds.load(Ordering::Relaxed),
+            s.plan_hits.load(Ordering::Relaxed),
+            s.policy_compiles.load(Ordering::Relaxed),
+            s.policy_hits.load(Ordering::Relaxed),
+            s.decision_hits.load(Ordering::Relaxed),
+            s.evicted_feedback.load(Ordering::Relaxed),
+            s.evicted_plans.load(Ordering::Relaxed),
+            s.evicted_policies.load(Ordering::Relaxed),
+            s.evicted_decisions.load(Ordering::Relaxed),
         );
         for (name, id) in self.inner.registry.entries() {
             let c = s.spec_counters(id);
@@ -781,6 +1054,106 @@ mod tests {
         assert_eq!((cs.evals, cs.cache_hits), (1, 0));
         assert!(cp.hit_rate() > 0.49 && cp.hit_rate() < 0.51);
         assert_eq!(s.cache_len(), 2);
+    }
+
+    #[test]
+    fn semantically_identical_mappers_share_one_simulation() {
+        let s = service();
+        let p100 = s.spec_id("p100_cluster").unwrap();
+        let app = apps::by_name("cannon").unwrap();
+        let dsl = expert_dsl("cannon").unwrap();
+        let a = s.evaluate(p100, &app, dsl, ExecMode::Serialized);
+        // an LLM-style rewrite: renamed mapping function plus comments —
+        // a new eval_key, but the same concrete mapping decisions
+        let rewrite = format!(
+            "# candidate 7\n{}\n# end of candidate\n",
+            dsl.replace("hierarchical_block2d", "my_block_map")
+        );
+        let b = s.evaluate(p100, &app, &rewrite, ExecMode::Serialized);
+        assert_eq!(a, b, "identical decisions must yield identical feedback");
+        assert_eq!(
+            s.stats().coord.evals.load(Ordering::Relaxed),
+            1,
+            "the rewrite must share the first simulation"
+        );
+        assert_eq!(s.stats().coord.cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(s.stats().decision_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(s.cache_len(), 2, "both texts get text-level entries");
+        assert_eq!(s.decision_cache_len(), 1);
+        // a genuinely different mapping simulates anew
+        let other = "Task * GPU;\nRegion * * GPU FBMEM;\n\
+                     Layout * * * SOA C_order Align==64;\n";
+        s.evaluate(p100, &app, other, ExecMode::Serialized);
+        assert_eq!(s.stats().coord.evals.load(Ordering::Relaxed), 2);
+        assert_eq!(s.stats().decision_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn policy_and_plan_caches_amortize_structure() {
+        let s = service();
+        let p100 = s.spec_id("p100_cluster").unwrap();
+        let app = apps::by_name("stencil").unwrap();
+        let dsl = expert_dsl("stencil").unwrap();
+        s.evaluate(p100, &app, dsl, ExecMode::Serialized);
+        s.evaluate(p100, &app, dsl, ExecMode::OutOfOrder);
+        // one compile + one policy hit across the two modes; one plan
+        // per dependence encoding
+        assert_eq!(s.stats().policy_compiles.load(Ordering::Relaxed), 1);
+        assert_eq!(s.stats().policy_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(s.stats().plan_builds.load(Ordering::Relaxed), 2);
+        assert_eq!(s.plan_cache_len(), 2);
+        assert_eq!(s.policy_cache_len(), 1);
+        // a different mapper on the same (app, mode) reuses the plan
+        let other = "Task * GPU;\nRegion * * GPU FBMEM;\n";
+        s.evaluate(p100, &app, other, ExecMode::Serialized);
+        assert_eq!(s.stats().plan_builds.load(Ordering::Relaxed), 2);
+        assert_eq!(s.stats().plan_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(s.stats().coord.evals.load(Ordering::Relaxed), 3);
+        // bulk-sync shares the policy cache but never builds a plan
+        s.evaluate(p100, &app, other, ExecMode::BulkSync);
+        assert_eq!(s.stats().policy_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(s.stats().plan_builds.load(Ordering::Relaxed), 2);
+        assert_eq!(s.stats().coord.evals.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn bounded_caches_evict_lru_entries_and_recount() {
+        let s = EvalService::with_cache_config(
+            1,
+            4,
+            CacheConfig { feedback_cap: 2, plan_cap: 1, policy_cap: 2, decision_cap: 2 },
+        );
+        let small = s.spec_id("small").unwrap();
+        let app = apps::by_name("stencil").unwrap();
+        let mappers = [
+            "Task * GPU;\nRegion * * GPU FBMEM;\n",
+            "Task * GPU;\nRegion * * GPU FBMEM;\nLayout * * * SOA C_order Align==128;\n",
+            "Task * CPU;\nRegion * * CPU SYSMEM;\n",
+        ];
+        let first = s.evaluate(small, &app, mappers[0], ExecMode::Serialized);
+        s.evaluate(small, &app, mappers[1], ExecMode::Serialized);
+        s.evaluate(small, &app, mappers[2], ExecMode::Serialized);
+        let stats = s.stats();
+        assert_eq!(stats.coord.evals.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.evicted_feedback.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.evicted_policies.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.evicted_decisions.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.evicted_plans.load(Ordering::Relaxed), 0);
+        assert_eq!(s.cache_len(), 2);
+        assert_eq!(s.plan_cache_len(), 1);
+        assert_eq!(s.policy_cache_len(), 2);
+        assert_eq!(s.decision_cache_len(), 2);
+        // the evicted mapper re-evaluates from scratch, bit-identically
+        let again = s.evaluate(small, &app, mappers[0], ExecMode::Serialized);
+        assert_eq!(first, again, "eviction must not change results");
+        assert_eq!(stats.coord.evals.load(Ordering::Relaxed), 4);
+        assert_eq!(stats.policy_compiles.load(Ordering::Relaxed), 4);
+        assert_eq!(stats.plan_builds.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.plan_hits.load(Ordering::Relaxed), 3);
+        // the summary surfaces the new counters
+        let summary = s.summary();
+        assert!(summary.contains("caches: plan 1 built / 3 hits"), "{summary}");
+        assert!(summary.contains("evictions: feedback 2"), "{summary}");
     }
 
     #[test]

@@ -501,4 +501,40 @@ mod tests {
         let err = MappingPolicy::compile("m = nope;", &spec()).unwrap_err();
         assert_eq!(err.to_string(), "nope not found");
     }
+
+    #[test]
+    fn policy_is_shareable_across_threads() {
+        // the eval service caches compiled policies as Arc<MappingPolicy>
+        // consumed concurrently by its worker pool; keep the whole policy
+        // (AST + evaluated globals, incl. ProcSpace values) Send + Sync
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<MappingPolicy>();
+    }
+
+    #[test]
+    fn comments_and_renames_do_not_change_decisions() {
+        // the premise of the service's semantic decision cache: an
+        // LLM-style rewrite (comments, renamed function) resolves to the
+        // same processor for every point
+        let s = spec();
+        let base = compile(
+            "Task * GPU;\nmgpu = Machine(GPU);\n\
+             def block(Task t) {\n  ip = t.ipoint;\n  \
+             return mgpu[ip[0] % mgpu.size[0], ip[0] % mgpu.size[1]];\n}\n\
+             IndexTaskMap work block;",
+        );
+        let rewrite = compile(
+            "# a comment the optimizer added\nTask * GPU;\nmgpu = Machine(GPU);\n\
+             def spread_work(Task t) {\n  ip = t.ipoint;\n  \
+             return mgpu[ip[0] % mgpu.size[0], ip[0] % mgpu.size[1]];\n}\n\
+             IndexTaskMap work spread_work;\n# trailing note",
+        );
+        for i in 0..8 {
+            let ctx = TaskCtx { ipoint: vec![i], ispace: vec![8], parent_proc: None };
+            assert_eq!(
+                base.select_processor("work", &ctx, &[ProcKind::Gpu], &s).unwrap(),
+                rewrite.select_processor("work", &ctx, &[ProcKind::Gpu], &s).unwrap(),
+            );
+        }
+    }
 }

@@ -23,7 +23,7 @@ use std::collections::BTreeMap;
 
 use super::cost::layout_penalty;
 use super::metrics::{ExecError, Metrics};
-use crate::apps::taskgraph::{Access, App, InitialDist, Launch};
+use crate::apps::taskgraph::{Access, App, DepMode, InitialDist, Launch};
 use crate::dsl::{MappingPolicy, TaskCtx};
 use crate::machine::{MachineSpec, MemId, MemKind, ProcId, ProcKind};
 
@@ -166,6 +166,29 @@ impl ExecMode {
             ExecMode::OutOfOrder => "out-of-order",
         }
     }
+
+    /// Dependence encoding of the DAG engine behind this mode; `None`
+    /// for the legacy bulk-synchronous loop (which schedules no DAG and
+    /// therefore has no cacheable [`super::schedule::EvalPlan`]).
+    pub fn dep_mode(self) -> Option<DepMode> {
+        match self {
+            ExecMode::BulkSync => None,
+            ExecMode::Serialized => Some(DepMode::Serialized),
+            ExecMode::OutOfOrder => Some(DepMode::Inferred),
+        }
+    }
+}
+
+/// Recyclable scratch vectors of a [`SimState`]: taken from a
+/// [`super::schedule::SimArena`] before a run, handed back by
+/// [`SimState::finalize`] after it, so steady-state warm evaluations
+/// re-use the allocations instead of growing fresh ones per eval.
+#[derive(Default)]
+pub(super) struct SimBuffers {
+    proc_time: Vec<f64>,
+    nic_busy: Vec<f64>,
+    task_busy: Vec<f64>,
+    proc_busy: Vec<f64>,
 }
 
 /// Mutable simulation state shared by the bulk-synchronous loop and the
@@ -193,14 +216,34 @@ pub(super) struct SimState<'a> {
 
 impl<'a> SimState<'a> {
     pub(super) fn new(spec: &'a MachineSpec, app: &App) -> SimState<'a> {
+        SimState::with_buffers(spec, app, SimBuffers::default())
+    }
+
+    /// State over recycled buffers (cleared and re-sized here, so the
+    /// caller hands them over dirty).
+    pub(super) fn with_buffers(
+        spec: &'a MachineSpec,
+        app: &App,
+        bufs: SimBuffers,
+    ) -> SimState<'a> {
+        let SimBuffers { mut proc_time, mut nic_busy, mut task_busy, mut proc_busy } =
+            bufs;
+        proc_time.clear();
+        proc_time.resize(spec.num_procs(), f64::NEG_INFINITY);
+        nic_busy.clear();
+        nic_busy.resize(spec.nodes * spec.nodes, 0.0);
+        task_busy.clear();
+        task_busy.resize(app.tasks.len(), 0.0);
+        proc_busy.clear();
+        proc_busy.resize(spec.num_procs(), 0.0);
         SimState {
             spec,
-            proc_time: vec![f64::NEG_INFINITY; spec.num_procs()],
+            proc_time,
             book: MemBook::default(),
-            nic_busy: vec![0.0f64; spec.nodes * spec.nodes],
+            nic_busy,
             m: Metrics::default(),
-            task_busy: vec![0.0f64; app.tasks.len()],
-            proc_busy: vec![0.0f64; spec.num_procs()],
+            task_busy,
+            proc_busy,
         }
     }
 
@@ -325,21 +368,32 @@ impl<'a> SimState<'a> {
         Ok((start, end))
     }
 
+    /// Dismantle without finalizing — the error path's buffer recovery:
+    /// an evaluation that fails (OOM, stride, map errors are routine in
+    /// LLM mapper search) still hands its scratch back to the arena.
+    pub(super) fn recycle(self) -> SimBuffers {
+        let SimState { proc_time, nic_busy, task_busy, proc_busy, .. } = self;
+        SimBuffers { proc_time, nic_busy, task_busy, proc_busy }
+    }
+
     /// Close out the run: elapsed, per-task busy map, peaks, throughput.
-    pub(super) fn finalize(self, app: &App, elapsed_us: f64) -> Metrics {
-        let mut m = self.m;
+    /// The scratch vectors come back alongside the metrics so a warm
+    /// caller can return them to its [`super::schedule::SimArena`].
+    pub(super) fn finalize(self, app: &App, elapsed_us: f64) -> (Metrics, SimBuffers) {
+        let SimState { spec, proc_time, book, nic_busy, mut m, task_busy, proc_busy } =
+            self;
         m.elapsed_s = elapsed_us * 1e-6;
-        for (i, &busy) in self.task_busy.iter().enumerate() {
+        for (i, &busy) in task_busy.iter().enumerate() {
             if busy > 0.0 {
                 m.per_task_s.insert(app.tasks[i].name.clone(), busy);
             }
         }
-        for (lin, &busy) in self.proc_busy.iter().enumerate() {
+        for (lin, &busy) in proc_busy.iter().enumerate() {
             if busy > 0.0 {
-                m.per_proc_s.insert(self.spec.proc_at(lin), busy);
+                m.per_proc_s.insert(spec.proc_at(lin), busy);
             }
         }
-        m.peak_mem = self.book.peak.iter().map(|(k, v)| (*k, *v)).collect();
+        m.peak_mem = book.peak.iter().map(|(k, v)| (*k, *v)).collect();
         let (tp, unit) = match app.metric {
             crate::apps::taskgraph::Metric::Gflops { total_flops } => {
                 (total_flops / m.elapsed_s / 1e9, "GFLOPS")
@@ -350,7 +404,7 @@ impl<'a> SimState<'a> {
         };
         m.throughput = tp;
         m.unit = unit;
-        m
+        (m, SimBuffers { proc_time, nic_busy, task_busy, proc_busy })
     }
 }
 
@@ -377,20 +431,9 @@ impl<'a> Executor<'a> {
     /// Run the app under the policy; returns metrics or the first
     /// execution error encountered.
     pub fn execute(&self, app: &App, policy: &MappingPolicy) -> Result<Metrics, ExecError> {
-        match self.mode {
-            ExecMode::BulkSync => self.execute_bulk(app, policy),
-            ExecMode::Serialized => super::schedule::execute_dag(
-                self.spec,
-                app,
-                policy,
-                crate::apps::taskgraph::DepMode::Serialized,
-            ),
-            ExecMode::OutOfOrder => super::schedule::execute_dag(
-                self.spec,
-                app,
-                policy,
-                crate::apps::taskgraph::DepMode::Inferred,
-            ),
+        match self.mode.dep_mode() {
+            None => self.execute_bulk(app, policy),
+            Some(dep) => super::schedule::execute_dag(self.spec, app, policy, dep),
         }
     }
 
@@ -450,7 +493,7 @@ impl<'a> Executor<'a> {
             }
         }
 
-        Ok(st.finalize(app, now_us))
+        Ok(st.finalize(app, now_us).0)
     }
 }
 
@@ -477,10 +520,10 @@ pub(super) fn instance_limit_check(
 /// Per-(launch, region-argument, proc-kind) mapping decision, resolved
 /// once per launch (§Perf hoist — policy queries scan statement lists).
 pub(super) struct RegionDecision {
-    mem_kind: MemKind,
-    bytes: u64,
-    penalty: f64,
-    collect: bool,
+    pub(super) mem_kind: MemKind,
+    pub(super) bytes: u64,
+    pub(super) penalty: f64,
+    pub(super) collect: bool,
 }
 
 pub(super) fn kind_slot(kind: ProcKind) -> usize {

@@ -16,6 +16,12 @@
 //! * [`metrics`] — [`Metrics`], [`PerfProfile`], and the paper's
 //!   execution-error taxonomy (Table A1 strings, keyword-matched by the
 //!   feedback engine).
+//!
+//! The campaign-scale warm path lives in [`schedule`] too: a cached
+//! [`EvalPlan`] (policy-independent structure per `(app, dep_mode)`), a
+//! per-worker [`SimArena`] of recycled scratch buffers, and
+//! [`resolve_decisions`] / [`ResolvedDecisions::fingerprint`] for the
+//! semantic decision cache — all bit-identical to the cold path.
 
 pub mod cost;
 pub mod executor;
@@ -24,6 +30,9 @@ pub mod schedule;
 
 pub use executor::{run_mapper, run_mapper_with, ExecMode, Executor};
 pub use metrics::{CritEntry, ExecError, Metrics, PerfProfile};
+pub use schedule::{
+    execute_plan, resolve_decisions, EvalPlan, ResolvedDecisions, SimArena,
+};
 
 #[cfg(test)]
 mod tests {
@@ -249,5 +258,109 @@ mod tests {
         assert_eq!(ExecMode::BulkSync.name(), "bulk-sync");
         assert_eq!(ExecMode::Serialized.name(), "serialized");
         assert_eq!(ExecMode::OutOfOrder.name(), "out-of-order");
+    }
+
+    #[test]
+    fn exec_mode_dep_modes() {
+        use crate::apps::DepMode;
+        assert_eq!(ExecMode::BulkSync.dep_mode(), None);
+        assert_eq!(ExecMode::Serialized.dep_mode(), Some(DepMode::Serialized));
+        assert_eq!(ExecMode::OutOfOrder.dep_mode(), Some(DepMode::Inferred));
+    }
+
+    #[test]
+    fn eval_plan_is_shareable_across_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        // the service caches plans as Arc<EvalPlan> consumed by a pool
+        assert_send_sync::<EvalPlan>();
+    }
+
+    #[test]
+    fn cached_plan_arena_and_decisions_reproduce_cold_metrics() {
+        use crate::apps::DepMode;
+        let s = spec();
+        let app = apps::circuit(apps::CircuitConfig::default());
+        let policy = MappingPolicy::compile(GPU_MAPPER, &s).unwrap();
+        for (dep, mode) in [
+            (DepMode::Serialized, ExecMode::Serialized),
+            (DepMode::Inferred, ExecMode::OutOfOrder),
+        ] {
+            let cold = run_mapper_with(&app, GPU_MAPPER, &s, mode).unwrap().unwrap();
+            let plan = EvalPlan::build(&app, dep);
+            assert_eq!(plan.dep_mode(), dep);
+            assert_eq!(plan.num_points(), 240, "8 pieces x 3 launches x 10 steps");
+            let mut arena = SimArena::new();
+            let res = resolve_decisions(&plan, &app, &policy, &s).unwrap();
+            assert_eq!(res.num_points(), plan.num_points());
+            // three times over one arena: the recycled buffers must not
+            // leak state between evaluations
+            for _ in 0..3 {
+                let warm =
+                    execute_plan(&s, &app, &policy, &plan, Some(&res), &mut arena)
+                        .unwrap();
+                assert_eq!(warm.elapsed_s, cold.elapsed_s);
+                assert_eq!(warm.throughput, cold.throughput);
+                assert_eq!(warm.busy_s, cold.busy_s);
+                assert_eq!(warm.transfer_s, cold.transfer_s);
+                assert_eq!(warm.comm_bytes, cold.comm_bytes);
+                assert_eq!(warm.per_task_s, cold.per_task_s);
+                assert_eq!(warm.per_proc_s, cold.per_proc_s);
+                assert_eq!(warm.peak_mem, cold.peak_mem);
+                assert_eq!(warm.profile, cold.profile);
+            }
+            // the cold-order fallback over the same plan matches too
+            let fallback =
+                execute_plan(&s, &app, &policy, &plan, None, &mut arena).unwrap();
+            assert_eq!(fallback.elapsed_s, cold.elapsed_s);
+            assert_eq!(fallback.profile, cold.profile);
+        }
+    }
+
+    #[test]
+    fn decision_fingerprints_are_semantic() {
+        use crate::apps::DepMode;
+        let s = spec();
+        let app = apps::circuit(apps::CircuitConfig::default());
+        let plan = EvalPlan::build(&app, DepMode::Serialized);
+        let base = MappingPolicy::compile(GPU_MAPPER, &s).unwrap();
+        let fp = resolve_decisions(&plan, &app, &base, &s).unwrap().fingerprint(&s);
+        // recomputation is stable
+        let again =
+            resolve_decisions(&plan, &app, &base, &s).unwrap().fingerprint(&s);
+        assert_eq!(fp, again);
+        // comments / reformatting do not move the fingerprint
+        let alias = format!("# llm renamed this mapper\n{GPU_MAPPER}\n# trailing\n");
+        let alias_policy = MappingPolicy::compile(&alias, &s).unwrap();
+        let alias_fp =
+            resolve_decisions(&plan, &app, &alias_policy, &s).unwrap().fingerprint(&s);
+        assert_eq!(fp, alias_fp, "semantically identical mappers must alias");
+        // a real decision change (memory placement) does
+        let moved = format!("{GPU_MAPPER}Region * rp_shared GPU ZCMEM;\n");
+        let moved_policy = MappingPolicy::compile(&moved, &s).unwrap();
+        let moved_fp =
+            resolve_decisions(&plan, &app, &moved_policy, &s).unwrap().fingerprint(&s);
+        assert_ne!(fp, moved_fp, "different placements must not alias");
+    }
+
+    #[test]
+    fn resolve_decisions_surfaces_mapping_errors() {
+        use crate::apps::DepMode;
+        let s = spec();
+        let app = apps::circuit(apps::CircuitConfig::default());
+        let plan = EvalPlan::build(&app, DepMode::Serialized);
+        let bad = "Task * GPU;\nRegion * * GPU FBMEM;\n\
+                   mgpu = Machine(GPU);\n\
+                   def bad(Task task) {\n\
+                     ip = task.ipoint;\n\
+                     return mgpu[ip[0], 0];\n\
+                   }\n\
+                   IndexTaskMap * bad;";
+        let policy = MappingPolicy::compile(bad, &s).unwrap();
+        let err = resolve_decisions(&plan, &app, &policy, &s).unwrap_err();
+        assert_eq!(err.to_string(), "Slice processor index out of bound");
+        // and the cold fallback over the same plan classifies identically
+        let cold = execute_plan(&s, &app, &policy, &plan, None, &mut SimArena::new())
+            .unwrap_err();
+        assert_eq!(cold.to_string(), err.to_string());
     }
 }

@@ -13,6 +13,32 @@
 //! both paths charge costs through [`SimState::simulate_point`] in the
 //! same order with the same start floors.
 //!
+//! # The campaign hot path: [`EvalPlan`] / [`SimArena`] / decisions
+//!
+//! Everything an evaluation needs that does **not** depend on the mapper
+//! being scored — the flattened launches, the [`TaskDag`] (CSR +
+//! barrier/gate compression), the flat launch index, and the initial
+//! in-degree vector — is policy-independent and is captured once in an
+//! immutable [`EvalPlan`] keyed by `(app, dep_mode)`.  The serving layer
+//! caches plans as `Arc<EvalPlan>` and calls [`execute_plan`] per
+//! mapper; the standalone [`execute_dag`] path builds a throwaway plan,
+//! so `Executor`/`run_mapper_with` behave exactly as before.
+//!
+//! [`SimArena`] holds every per-eval scratch buffer ([`SimState`]'s
+//! dense tables, ready heaps, start/end/bind vectors), so a warm worker
+//! performs no structural allocations in steady state.
+//!
+//! [`resolve_decisions`] resolves the *concrete mapping decision
+//! vector* — per-point processors plus per-(launch, kind) region
+//! decisions — up front.  When that resolution is error-free the vector
+//! fully determines the simulation, its [`ResolvedDecisions::fingerprint`]
+//! keys the service's semantic decision cache (textually different
+//! mappers inducing identical mappings share one simulation), and
+//! [`execute_plan`] skips all per-pop policy queries.  When resolution
+//! fails, callers fall back to `execute_plan(.., None, ..)`, which
+//! interleaves policy queries with simulation in program order so error
+//! classification stays bit-identical to the legacy loop.
+//!
 //! # Complexity (the 10^5-task hot path)
 //!
 //! The ready set is a binary heap, popped `O(log ready)` per task instead
@@ -41,15 +67,19 @@ use std::collections::{BinaryHeap, HashMap};
 
 use super::executor::{
     instance_limit_check, kind_slot, resolve_region_decisions, RegionDecision,
-    SimState,
+    SimBuffers, SimState,
 };
 use super::metrics::{CritEntry, ExecError, Metrics, PerfProfile};
 use crate::apps::taskgraph::{task_dag, App, DepMode, Launch, TaskDag};
 use crate::dsl::{MappingPolicy, TaskCtx};
-use crate::machine::{MachineSpec, ProcId, ProcKind};
+use crate::machine::{MachineSpec, MemKind, ProcId, ProcKind};
+use crate::util::hash::Fnv1a;
 
 /// `last_on_proc` sentinel: no task has run on the processor yet.
 const NO_TASK: u32 = u32::MAX;
+
+/// Per-(flat launch, processor kind) region-decision slots.
+type KindDecisions = [Option<Vec<RegionDecision>>; 3];
 
 /// Heap key for a start-time estimate.  Times are finite and
 /// non-negative, where IEEE-754 bit patterns order like the floats.
@@ -85,47 +115,272 @@ fn max_end_pred(dag: &TaskDag, node: usize, end_of: &[f64]) -> Option<u32> {
         .max_by(|&a, &b| end_of[a as usize].partial_cmp(&end_of[b as usize]).unwrap())
 }
 
-/// Execute `app` under `policy` on the dependency-aware engine.
+// ---------------------------------------------------------------------------
+// EvalPlan: the policy-independent half of an evaluation
+// ---------------------------------------------------------------------------
+
+/// Immutable, shareable evaluation structure for one `(app, dep_mode)`
+/// pair: flattened launches, the compressed [`TaskDag`], the flat launch
+/// index, and the initial in-degree vector.  Machine-independent (the
+/// spec only enters at simulation time), so one plan serves every
+/// registered machine shape.
+pub struct EvalPlan {
+    dep_mode: DepMode,
+    /// One `Vec<Launch>` per timestep, exactly as [`App::launches`]
+    /// produced them — flattening launches is itself a per-eval cost the
+    /// plan amortizes away.
+    steps: Vec<Vec<Launch>>,
+    dag: TaskDag,
+    /// Flat launch id -> (step, launch-in-step).
+    launches_flat: Vec<(usize, usize)>,
+    /// Point index -> flat launch id.
+    launch_of: Vec<u32>,
+    /// Point-index range of flat launch f: `launch_off[f]..launch_off[f+1]`.
+    launch_off: Vec<usize>,
+    /// Initial predecessor counts ([`TaskDag::pred_counts`]), copied into
+    /// the arena per eval instead of re-derived from the CSR.
+    npreds0: Vec<u32>,
+}
+
+impl EvalPlan {
+    /// Build the plan for `app` under `dep_mode` (the expensive,
+    /// cache-once half of an evaluation).
+    pub fn build(app: &App, dep_mode: DepMode) -> EvalPlan {
+        let steps: Vec<Vec<Launch>> = (0..app.steps).map(|s| app.launches(s)).collect();
+        let dag = task_dag(app, &steps, dep_mode);
+        let n = dag.num_points();
+        let mut launches_flat: Vec<(usize, usize)> = Vec::new();
+        let mut launch_of: Vec<u32> = Vec::with_capacity(n);
+        let mut launch_off: Vec<usize> = vec![0];
+        for (step, ls) in steps.iter().enumerate() {
+            for (li, launch) in ls.iter().enumerate() {
+                let flat = launches_flat.len() as u32;
+                launches_flat.push((step, li));
+                for _ in 0..launch.num_points() {
+                    launch_of.push(flat);
+                }
+                launch_off.push(launch_of.len());
+            }
+        }
+        debug_assert_eq!(launch_of.len(), n);
+        let npreds0 = dag.pred_counts();
+        EvalPlan { dep_mode, steps, dag, launches_flat, launch_of, launch_off, npreds0 }
+    }
+
+    pub fn dep_mode(&self) -> DepMode {
+        self.dep_mode
+    }
+
+    pub fn num_points(&self) -> usize {
+        self.dag.num_points()
+    }
+
+    pub fn num_launches(&self) -> usize {
+        self.launches_flat.len()
+    }
+
+    pub fn dag(&self) -> &TaskDag {
+        &self.dag
+    }
+
+    fn launch(&self, flat: usize) -> &Launch {
+        let (step, li) = self.launches_flat[flat];
+        &self.steps[step][li]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SimArena: per-worker recyclable scratch
+// ---------------------------------------------------------------------------
+
+/// Reusable per-evaluation scratch: every growable buffer
+/// [`execute_plan`] and [`SimState`] need.  A long-lived worker keeps one
+/// arena and evaluates with zero structural allocations once warm; the
+/// buffers are cleared and re-sized per eval, never shrunk, and are
+/// handed back on error paths too (failing mappers are routine in LLM
+/// search, so the warm path must survive them).
+#[derive(Default)]
+pub struct SimArena {
+    npreds: Vec<u32>,
+    ready_time: Vec<f64>,
+    start_of: Vec<f64>,
+    end_of: Vec<f64>,
+    bind_of: Vec<Option<u32>>,
+    last_on_proc: Vec<u32>,
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+    proc_of: Vec<ProcId>,
+    sim: SimBuffers,
+}
+
+impl SimArena {
+    pub fn new() -> SimArena {
+        SimArena::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ResolvedDecisions: the concrete mapping decision vector
+// ---------------------------------------------------------------------------
+
+/// The concrete, error-free mapping decision vector of one (plan,
+/// policy, machine) triple: per-point processor assignments plus the
+/// per-(launch, kind) region decisions.  Together with the plan and the
+/// machine spec this fully determines the simulation, so its
+/// [`fingerprint`](Self::fingerprint) is a *semantic* cache key:
+/// textually different mappers (renamed functions, reordered or
+/// commented statements) that induce the same decisions hash equal.
+pub struct ResolvedDecisions {
+    proc_of: Vec<ProcId>,
+    decisions: Vec<KindDecisions>,
+}
+
+fn mem_tag(kind: MemKind) -> u8 {
+    match kind {
+        MemKind::SysMem => 0,
+        MemKind::FbMem => 1,
+        MemKind::ZcMem => 2,
+        MemKind::RdmaMem => 3,
+        MemKind::SockMem => 4,
+    }
+}
+
+impl ResolvedDecisions {
+    pub fn num_points(&self) -> usize {
+        self.proc_of.len()
+    }
+
+    /// Content hash of the decision vector.  Covers every value the
+    /// simulation reads from the policy: the dense processor index of
+    /// every point task, and per (launch, kind) slot the memory kind,
+    /// touched bytes, layout penalty bits, and collect flag of every
+    /// region argument.  Streams into the hasher — no O(points) byte
+    /// buffer; the layout is self-delimiting because the plan fixes the
+    /// point count and slot structure, and each record is fixed-size
+    /// behind its tag.  Callers must still fold in the app/spec/mode
+    /// fingerprints — equal decisions on different apps or machines are
+    /// different simulations.
+    pub fn fingerprint(&self, spec: &MachineSpec) -> u64 {
+        let mut f = Fnv1a::new();
+        for &p in &self.proc_of {
+            f.eat(&(spec.proc_lin(p) as u32).to_le_bytes());
+        }
+        for slots in &self.decisions {
+            for slot in slots {
+                match slot {
+                    None => f.eat(&[0xFF]),
+                    Some(ds) => {
+                        f.eat(&[0x01]);
+                        f.eat(&(ds.len() as u32).to_le_bytes());
+                        for d in ds {
+                            f.eat(&[mem_tag(d.mem_kind)]);
+                            f.eat(&d.bytes.to_le_bytes());
+                            f.eat(&d.penalty.to_bits().to_le_bytes());
+                            f.eat(&[d.collect as u8]);
+                        }
+                    }
+                }
+            }
+        }
+        f.finish()
+    }
+}
+
+/// Resolve the full decision vector of `policy` against `plan` without
+/// simulating: per-launch checks (instance limits, task resolution),
+/// per-point processors, and the region decisions of every kind a launch
+/// actually uses.  An `Err` here does **not** mean the evaluation's
+/// outcome — the legacy engines interleave these checks with simulation,
+/// so an earlier simulation error (e.g. OOM) may take precedence; on
+/// `Err`, run `execute_plan(.., None, ..)` to get the bit-identical
+/// cold-path classification.  On `Ok`, all checks pass and the cold path
+/// would pass them too, so the vector is safe to key a semantic cache.
+pub fn resolve_decisions(
+    plan: &EvalPlan,
+    app: &App,
+    policy: &MappingPolicy,
+    spec: &MachineSpec,
+) -> Result<ResolvedDecisions, ExecError> {
+    let parent = ProcId { node: 0, kind: ProcKind::Cpu, index: 0 };
+    let mut proc_of: Vec<ProcId> = Vec::with_capacity(plan.num_points());
+    let mut decisions: Vec<KindDecisions> =
+        (0..plan.num_launches()).map(|_| [None, None, None]).collect();
+    let mut ctx =
+        TaskCtx { ipoint: Vec::new(), ispace: Vec::new(), parent_proc: Some(parent) };
+    for flat in 0..plan.num_launches() {
+        let launch = plan.launch(flat);
+        let res = init_launch(policy, app, launch, spec)?;
+        ctx.ispace.clone_from(&launch.ispace);
+        for pi in plan.launch_off[flat]..plan.launch_off[flat + 1] {
+            ctx.ipoint.clear();
+            ctx.ipoint.extend_from_slice(plan.dag.coords(pi));
+            let proc = policy
+                .map_point(&res, &ctx, spec)
+                .map_err(|e| ExecError::MapFailed(e.to_string()))?;
+            let slot = kind_slot(proc.kind);
+            if decisions[flat][slot].is_none() {
+                decisions[flat][slot] =
+                    Some(resolve_region_decisions(app, policy, launch, proc, spec)?);
+            }
+            proc_of.push(proc);
+        }
+    }
+    Ok(ResolvedDecisions { proc_of, decisions })
+}
+
+/// Execute `app` under `policy` on the dependency-aware engine,
+/// building a throwaway plan and arena (the cold standalone path behind
+/// [`super::Executor`]; services cache both and call [`execute_plan`]).
 pub(super) fn execute_dag(
     spec: &MachineSpec,
     app: &App,
     policy: &MappingPolicy,
     dep_mode: DepMode,
 ) -> Result<Metrics, ExecError> {
-    let steps: Vec<Vec<Launch>> = (0..app.steps).map(|s| app.launches(s)).collect();
-    let dag = task_dag(app, &steps, dep_mode);
+    let plan = EvalPlan::build(app, dep_mode);
+    execute_plan(spec, app, policy, &plan, None, &mut SimArena::new())
+}
+
+/// Schedule one evaluation of `policy` over a (possibly cached) `plan`,
+/// with scratch drawn from `arena`.
+///
+/// With `resolved: Some(..)` (a clean [`resolve_decisions`] vector) all
+/// per-pop policy queries are skipped — the warm path.  With `None` the
+/// policy is consulted lazily in exactly the legacy order, so errors
+/// surface with bit-identical classification to the bulk-synchronous
+/// loop.  Either way the metrics and profile of a successful run are
+/// bit-identical.
+pub fn execute_plan(
+    spec: &MachineSpec,
+    app: &App,
+    policy: &MappingPolicy,
+    plan: &EvalPlan,
+    resolved: Option<&ResolvedDecisions>,
+    arena: &mut SimArena,
+) -> Result<Metrics, ExecError> {
+    let dep_mode = plan.dep_mode;
+    let dag = &plan.dag;
     let n = dag.num_points();
     let nn = dag.num_nodes();
-    let mut st = SimState::new(spec, app);
+    let mut st = SimState::with_buffers(spec, app, std::mem::take(&mut arena.sim));
 
     // parent (top-level) task runs on CPU 0 of node 0
     let parent = ProcId { node: 0, kind: ProcKind::Cpu, index: 0 };
 
-    // ---- flat launch index (pure structure, no policy calls) -------------
-    let mut launches_flat: Vec<(usize, usize)> = Vec::new();
-    let mut launch_of: Vec<u32> = Vec::with_capacity(n);
-    // point-index range of flat launch f: launch_off[f]..launch_off[f + 1]
-    let mut launch_off: Vec<usize> = vec![0];
-    for (step, ls) in steps.iter().enumerate() {
-        for (li, launch) in ls.iter().enumerate() {
-            let flat = launches_flat.len() as u32;
-            launches_flat.push((step, li));
-            for _ in 0..launch.num_points() {
-                launch_of.push(flat);
-            }
-            launch_off.push(launch_of.len());
-        }
-    }
-    debug_assert_eq!(launch_of.len(), n);
-
     if n == 0 {
         // no point tasks, but bulk-sync still performs the per-launch
-        // checks (instance limits, resolution) — error parity holds
-        for &(step, li) in &launches_flat {
-            init_launch(policy, app, &steps[step][li], spec)?;
+        // checks (instance limits, resolution) — error parity holds.
+        // (With precomputed decisions they already passed.)
+        if resolved.is_none() {
+            for &(step, li) in &plan.launches_flat {
+                if let Err(e) = init_launch(policy, app, &plan.steps[step][li], spec) {
+                    arena.sim = st.recycle();
+                    return Err(e);
+                }
+            }
         }
         // dependency-aware runs always attach a profile, even an empty one
-        let mut m = st.finalize(app, 0.0);
+        let (mut m, bufs) = st.finalize(app, 0.0);
+        arena.sim = bufs;
         m.profile = Some(PerfProfile {
             engine: engine_name(dep_mode),
             critical_path_s: 0.0,
@@ -142,116 +397,157 @@ pub(super) fn execute_dag(
     }
 
     // Launch-invariant resolutions, used (and filled, via the lazy
-    // cursor) only in Serialized mode — instance-limit / resolution
-    // errors then surface at exactly the point the bulk-synchronous loop
-    // reaches them.  OutOfOrder resolves everything upfront below and
-    // keeps only the per-point processors.
+    // cursor) only on the cold Serialized path — instance-limit /
+    // resolution errors then surface at exactly the point the
+    // bulk-synchronous loop reaches them.  Borrows `policy`, so it
+    // cannot live in the arena.
     let mut resolutions: Vec<Option<crate::dsl::TaskResolution<'_>>> =
-        if dep_mode == DepMode::Serialized {
-            vec![None; launches_flat.len()]
+        if resolved.is_none() && dep_mode == DepMode::Serialized {
+            vec![None; plan.num_launches()]
         } else {
             Vec::new()
         };
 
     // Per-point processors.  The out-of-order picker must know every
-    // ready task's processor *before* scheduling it, so they are resolved
-    // upfront (mapping errors then surface in program order, ahead of any
-    // simulation error).  Serialized mode resolves per point at pop time,
-    // interleaved with simulation like the legacy loop.
-    let mut proc_of: Vec<ProcId> = Vec::new();
-    if dep_mode == DepMode::Inferred {
-        proc_of.reserve(n);
-        for (flat, &(step, li)) in launches_flat.iter().enumerate() {
-            let launch = &steps[step][li];
-            let res = init_launch(policy, app, launch, spec)?;
-            for pi in launch_off[flat]..launch_off[flat + 1] {
-                let ctx = TaskCtx {
-                    ipoint: dag.coords(pi).to_vec(),
-                    ispace: launch.ispace.clone(),
-                    parent_proc: Some(parent),
-                };
-                let proc = policy
-                    .map_point(&res, &ctx, spec)
-                    .map_err(|e| ExecError::MapFailed(e.to_string()))?;
-                proc_of.push(proc);
+    // ready task's processor *before* scheduling it, so the cold
+    // Inferred path resolves them upfront (mapping errors then surface
+    // in program order, ahead of any simulation error); the warm path
+    // borrows the precomputed vector.  Cold Serialized resolves per
+    // point at pop time, interleaved with simulation like the legacy
+    // loop.
+    let mut own_proc_of = std::mem::take(&mut arena.proc_of);
+    own_proc_of.clear();
+    if resolved.is_none() && dep_mode == DepMode::Inferred {
+        own_proc_of.reserve(n);
+        let mut fill = || -> Result<(), ExecError> {
+            let mut ctx = TaskCtx {
+                ipoint: Vec::new(),
+                ispace: Vec::new(),
+                parent_proc: Some(parent),
+            };
+            for flat in 0..plan.num_launches() {
+                let launch = plan.launch(flat);
+                let res = init_launch(policy, app, launch, spec)?;
+                ctx.ispace.clone_from(&launch.ispace);
+                for pi in plan.launch_off[flat]..plan.launch_off[flat + 1] {
+                    ctx.ipoint.clear();
+                    ctx.ipoint.extend_from_slice(dag.coords(pi));
+                    let proc = policy
+                        .map_point(&res, &ctx, spec)
+                        .map_err(|e| ExecError::MapFailed(e.to_string()))?;
+                    own_proc_of.push(proc);
+                }
             }
+            Ok(())
+        };
+        if let Err(e) = fill() {
+            arena.sim = st.recycle();
+            arena.proc_of = own_proc_of;
+            return Err(e);
         }
     }
+    let proc_of: &[ProcId] = match resolved {
+        Some(r) => &r.proc_of,
+        None => &own_proc_of,
+    };
 
-    // region decisions, resolved lazily per (launch, processor kind)
-    let mut kind_caches: Vec<[Option<Vec<RegionDecision>>; 3]> =
-        (0..launches_flat.len()).map(|_| [None, None, None]).collect();
+    // region decisions, resolved lazily per (launch, processor kind) on
+    // the cold path; precomputed on the warm path
+    let mut kind_caches: Vec<KindDecisions> = if resolved.is_none() {
+        (0..plan.num_launches()).map(|_| [None, None, None]).collect()
+    } else {
+        Vec::new()
+    };
 
     // ---- dependency bookkeeping ------------------------------------------
-    let mut npreds: Vec<u32> =
-        (0..nn).map(|i| dag.preds_of(i).len() as u32).collect();
+    let mut npreds = std::mem::take(&mut arena.npreds);
+    npreds.clear();
+    npreds.extend_from_slice(&plan.npreds0);
     // serialized lazy-init cursor: pops arrive in program order, so
     // initializing every launch up to the popped one (inclusive) runs the
     // per-launch checks of zero-point launches too, exactly where the
     // bulk-synchronous loop would reach them
     let mut next_uninit = 0usize;
-    let mut ready_time = vec![0.0f64; nn];
-    let mut start_of = vec![0.0f64; nn];
-    let mut end_of = vec![0.0f64; nn];
+    let mut ready_time = std::mem::take(&mut arena.ready_time);
+    ready_time.clear();
+    ready_time.resize(nn, 0.0);
+    let mut start_of = std::mem::take(&mut arena.start_of);
+    start_of.clear();
+    start_of.resize(nn, 0.0);
+    let mut end_of = std::mem::take(&mut arena.end_of);
+    end_of.clear();
+    end_of.resize(nn, 0.0);
     // which earlier node pinned this node's start time (None = t=0)
-    let mut bind_of: Vec<Option<u32>> = vec![None; nn];
-    let mut last_on_proc: Vec<u32> = vec![NO_TASK; spec.num_procs()];
-    let mut makespan = 0.0f64;
-    let mut done = 0usize;
+    let mut bind_of = std::mem::take(&mut arena.bind_of);
+    bind_of.clear();
+    bind_of.resize(nn, None);
+    let mut last_on_proc = std::mem::take(&mut arena.last_on_proc);
+    last_on_proc.clear();
+    last_on_proc.resize(spec.num_procs(), NO_TASK);
 
     // the event heap (see module docs for the two key disciplines)
-    let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::with_capacity(64);
-    for node in 0..nn {
-        if npreds[node] == 0 {
-            let key = match dep_mode {
-                DepMode::Serialized => 0,
-                DepMode::Inferred => {
-                    time_key(est_start(node, &dag, &ready_time, &proc_of, &st))
-                }
-            };
-            heap.push(Reverse((key, node as u32)));
-        }
-    }
+    let mut heap = std::mem::take(&mut arena.heap);
+    heap.clear();
 
-    while done < n {
-        let Reverse((key, node32)) = heap.pop().expect("acyclic DAG ran dry");
-        let node = node32 as usize;
-        if dep_mode == DepMode::Inferred {
-            // lazy re-insertion: keys were computed when the node became
-            // ready; processor availability only grows, so a stale entry
-            // re-enters with its current estimate
-            let cur = time_key(est_start(node, &dag, &ready_time, &proc_of, &st));
-            if cur > key {
-                heap.push(Reverse((cur, node32)));
-                continue;
-            }
-        }
-
-        let end = match dag.point_of(node) {
-            None => {
-                // synthetic barrier/gate: zero-duration bookkeeping node
-                let t = ready_time[node];
-                bind_of[node] =
-                    if t > 0.0 { max_end_pred(&dag, node, &end_of) } else { None };
-                start_of[node] = t;
-                end_of[node] = t;
-                t
-            }
-            Some(pi) => {
-                let flat = launch_of[pi] as usize;
-                let (step, li) = launches_flat[flat];
-                let launch = &steps[step][li];
-                if dep_mode == DepMode::Serialized {
-                    while next_uninit <= flat {
-                        let (s2, l2) = launches_flat[next_uninit];
-                        resolutions[next_uninit] =
-                            Some(init_launch(policy, app, &steps[s2][l2], spec)?);
-                        next_uninit += 1;
+    // The fallible scheduling core runs in a closure borrowing every
+    // scratch buffer, so an erroring evaluation (routine in LLM mapper
+    // search) still hands all of them back to the arena below.
+    let mut schedule = || -> Result<f64, ExecError> {
+        let mut makespan = 0.0f64;
+        let mut done = 0usize;
+        for node in 0..nn {
+            if npreds[node] == 0 {
+                let key = match dep_mode {
+                    DepMode::Serialized => 0,
+                    DepMode::Inferred => {
+                        time_key(est_start(node, dag, &ready_time, proc_of, &st))
                     }
+                };
+                heap.push(Reverse((key, node as u32)));
+            }
+        }
+
+        while done < n {
+            let Reverse((key, node32)) = heap.pop().expect("acyclic DAG ran dry");
+            let node = node32 as usize;
+            if dep_mode == DepMode::Inferred {
+                // lazy re-insertion: keys were computed when the node became
+                // ready; processor availability only grows, so a stale entry
+                // re-enters with its current estimate
+                let cur = time_key(est_start(node, dag, &ready_time, proc_of, &st));
+                if cur > key {
+                    heap.push(Reverse((cur, node32)));
+                    continue;
                 }
-                let proc = match dep_mode {
-                    DepMode::Inferred => proc_of[pi],
-                    DepMode::Serialized => {
+            }
+
+            let end = match dag.point_of(node) {
+                None => {
+                    // synthetic barrier/gate: zero-duration bookkeeping node
+                    let t = ready_time[node];
+                    bind_of[node] =
+                        if t > 0.0 { max_end_pred(dag, node, &end_of) } else { None };
+                    start_of[node] = t;
+                    end_of[node] = t;
+                    t
+                }
+                Some(pi) => {
+                    let flat = plan.launch_of[pi] as usize;
+                    let launch = plan.launch(flat);
+                    if resolved.is_none() && dep_mode == DepMode::Serialized {
+                        while next_uninit <= flat {
+                            resolutions[next_uninit] = Some(init_launch(
+                                policy,
+                                app,
+                                plan.launch(next_uninit),
+                                spec,
+                            )?);
+                            next_uninit += 1;
+                        }
+                    }
+                    let proc = if resolved.is_some() || dep_mode == DepMode::Inferred {
+                        proc_of[pi]
+                    } else {
                         let ctx = TaskCtx {
                             ipoint: dag.coords(pi).to_vec(),
                             ispace: launch.ispace.clone(),
@@ -260,80 +556,110 @@ pub(super) fn execute_dag(
                         policy
                             .map_point(resolutions[flat].as_ref().unwrap(), &ctx, spec)
                             .map_err(|e| ExecError::MapFailed(e.to_string()))?
-                    }
-                };
-                let slot = kind_slot(proc.kind);
-                if kind_caches[flat][slot].is_none() {
-                    kind_caches[flat][slot] =
-                        Some(resolve_region_decisions(app, policy, launch, proc, spec)?);
+                    };
+                    let slot = kind_slot(proc.kind);
+                    let decisions: &[RegionDecision] = match resolved {
+                        Some(r) => r.decisions[flat][slot]
+                            .as_ref()
+                            .expect("resolved decisions cover every used kind"),
+                        None => {
+                            if kind_caches[flat][slot].is_none() {
+                                kind_caches[flat][slot] = Some(resolve_region_decisions(
+                                    app, policy, launch, proc, spec,
+                                )?);
+                            }
+                            kind_caches[flat][slot].as_ref().unwrap()
+                        }
+                    };
+
+                    let avail_before = st.proc_avail(proc);
+                    let (start, end) = st.simulate_point(
+                        app,
+                        launch,
+                        decisions,
+                        dag.coords(pi),
+                        proc,
+                        ready_time[node],
+                    )?;
+                    start_of[node] = start;
+                    end_of[node] = end;
+
+                    // binding constraint: whichever of (processor free time,
+                    // dependency ready time) set `start`; dependency wins ties
+                    // so the chain follows data flow
+                    let plin = spec.proc_lin(proc);
+                    bind_of[node] = if avail_before.is_some_and(|a| a > ready_time[node]) {
+                        let l = last_on_proc[plin];
+                        (l != NO_TASK).then_some(l)
+                    } else if ready_time[node] > 0.0 {
+                        max_end_pred(dag, node, &end_of)
+                    } else {
+                        None
+                    };
+                    last_on_proc[plin] = node32;
+                    done += 1;
+                    end
                 }
-                let decisions = kind_caches[flat][slot].as_ref().unwrap();
+            };
+            makespan = makespan.max(end);
 
-                let avail_before = st.proc_avail(proc);
-                let (start, end) = st.simulate_point(
-                    app,
-                    launch,
-                    decisions,
-                    dag.coords(pi),
-                    proc,
-                    ready_time[node],
-                )?;
-                start_of[node] = start;
-                end_of[node] = end;
-
-                // binding constraint: whichever of (processor free time,
-                // dependency ready time) set `start`; dependency wins ties
-                // so the chain follows data flow
-                let plin = spec.proc_lin(proc);
-                bind_of[node] = if avail_before.is_some_and(|a| a > ready_time[node]) {
-                    let l = last_on_proc[plin];
-                    (l != NO_TASK).then_some(l)
-                } else if ready_time[node] > 0.0 {
-                    max_end_pred(&dag, node, &end_of)
-                } else {
-                    None
-                };
-                last_on_proc[plin] = node32;
-                done += 1;
-                end
-            }
-        };
-        makespan = makespan.max(end);
-
-        for &s in dag.succs_of(node) {
-            let s = s as usize;
-            if end > ready_time[s] {
-                ready_time[s] = end;
-            }
-            npreds[s] -= 1;
-            if npreds[s] == 0 {
-                let skey = match dep_mode {
-                    DepMode::Serialized => 0,
-                    DepMode::Inferred => {
-                        time_key(est_start(s, &dag, &ready_time, &proc_of, &st))
-                    }
-                };
-                heap.push(Reverse((skey, s as u32)));
+            for &s in dag.succs_of(node) {
+                let s = s as usize;
+                if end > ready_time[s] {
+                    ready_time[s] = end;
+                }
+                npreds[s] -= 1;
+                if npreds[s] == 0 {
+                    let skey = match dep_mode {
+                        DepMode::Serialized => 0,
+                        DepMode::Inferred => {
+                            time_key(est_start(s, dag, &ready_time, proc_of, &st))
+                        }
+                    };
+                    heap.push(Reverse((skey, s as u32)));
+                }
             }
         }
-    }
 
-    // trailing zero-point launches still get their per-launch checks
-    // (bulk-sync performs them after the last simulated point)
-    if dep_mode == DepMode::Serialized {
-        while next_uninit < launches_flat.len() {
-            let (s2, l2) = launches_flat[next_uninit];
-            resolutions[next_uninit] =
-                Some(init_launch(policy, app, &steps[s2][l2], spec)?);
-            next_uninit += 1;
+        // trailing zero-point launches still get their per-launch checks
+        // (bulk-sync performs them after the last simulated point)
+        if resolved.is_none() && dep_mode == DepMode::Serialized {
+            while next_uninit < plan.num_launches() {
+                resolutions[next_uninit] =
+                    Some(init_launch(policy, app, plan.launch(next_uninit), spec)?);
+                next_uninit += 1;
+            }
         }
-    }
+        Ok(makespan)
+    };
+    let sched = schedule();
 
-    let profile =
-        build_profile(app, &dag, &start_of, &end_of, &bind_of, makespan, dep_mode);
-    let mut m = st.finalize(app, makespan);
-    m.profile = Some(attach_idle(profile, &m, spec));
-    Ok(m)
+    let out = match sched {
+        Ok(makespan) => {
+            let profile = build_profile(
+                app, dag, &start_of, &end_of, &bind_of, makespan, dep_mode,
+            );
+            let (mut m, bufs) = st.finalize(app, makespan);
+            m.profile = Some(attach_idle(profile, &m, spec));
+            arena.sim = bufs;
+            Ok(m)
+        }
+        Err(e) => {
+            arena.sim = st.recycle();
+            Err(e)
+        }
+    };
+
+    // hand every scratch buffer back to the arena on both paths
+    arena.npreds = npreds;
+    arena.ready_time = ready_time;
+    arena.start_of = start_of;
+    arena.end_of = end_of;
+    arena.bind_of = bind_of;
+    arena.last_on_proc = last_on_proc;
+    arena.heap = heap;
+    arena.proc_of = own_proc_of;
+    out
 }
 
 /// Critical-path walk + per-task attribution + slack (idle fractions are
@@ -499,4 +825,53 @@ fn attach_idle(mut profile: PerfProfile, m: &Metrics, spec: &MachineSpec) -> Per
     profile.worst_idle = worst.max(0.0);
     profile.worst_idle_proc = worst_proc;
     profile
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// An erroring evaluation must hand its scratch back: the arena's
+    /// buffers keep their grown capacity and the next (successful) warm
+    /// evaluation reuses them.
+    #[test]
+    fn arena_buffers_survive_erroring_evaluations() {
+        let spec = MachineSpec::p100_cluster();
+        let app = crate::apps::circuit(crate::apps::CircuitConfig::default());
+        let plan = EvalPlan::build(&app, DepMode::Serialized);
+        let mut arena = SimArena::new();
+        // ZCMEM-everything OOMs mid-simulation (an execution error from
+        // inside the scheduling loop)
+        let bad =
+            MappingPolicy::compile("Task * GPU;\nRegion * * GPU ZCMEM;\n", &spec)
+                .unwrap();
+        let err =
+            execute_plan(&spec, &app, &bad, &plan, None, &mut arena).unwrap_err();
+        assert!(err.to_string().contains("Out of memory"), "{err}");
+        let nn = plan.dag().num_nodes();
+        assert!(arena.ready_time.capacity() >= nn, "ready_time was dropped");
+        assert!(arena.npreds.capacity() >= nn, "npreds was dropped");
+        assert!(arena.end_of.capacity() >= nn, "end_of was dropped");
+        // a mapping error from upfront Inferred resolution too
+        let oob = MappingPolicy::compile(
+            "Task * GPU;\nRegion * * GPU FBMEM;\nmgpu = Machine(GPU);\n\
+             def bad(Task t) {\n  ip = t.ipoint;\n  return mgpu[ip[0], 0];\n}\n\
+             IndexTaskMap * bad;",
+            &spec,
+        )
+        .unwrap();
+        let inferred = EvalPlan::build(&app, DepMode::Inferred);
+        let err = execute_plan(&spec, &app, &oob, &inferred, None, &mut arena)
+            .unwrap_err();
+        assert_eq!(err.to_string(), "Slice processor index out of bound");
+        assert!(arena.proc_of.capacity() > 0, "proc_of was dropped");
+        // and the same arena still produces correct warm results
+        let good =
+            MappingPolicy::compile("Task * GPU;\nRegion * * GPU FBMEM;\n", &spec)
+                .unwrap();
+        let res = resolve_decisions(&plan, &app, &good, &spec).unwrap();
+        let m = execute_plan(&spec, &app, &good, &plan, Some(&res), &mut arena)
+            .unwrap();
+        assert!(m.throughput > 0.0);
+    }
 }

@@ -1,0 +1,84 @@
+//! FNV-1a content hashing — the crate's cache-key primitive (evaluation
+//! cache keys, app/spec fingerprints, and the semantic decision
+//! fingerprints of `sim::ResolvedDecisions`).
+//!
+//! [`fnv1a`] hashes length-prefixed byte fields: the prefix keeps field
+//! boundaries in the hash, so `["ab", "c"]` and `["a", "bc"]` feed
+//! different byte streams (an unprefixed version collided on exactly
+//! that, aliasing cache entries across (app, dsl) pairs).  [`Fnv1a`] is
+//! the streaming form for hot-path callers whose record layout is
+//! already unambiguous — it hashes incrementally instead of
+//! materializing a byte buffer.
+
+/// Streaming FNV-1a hasher.
+pub struct Fnv1a {
+    h: u64,
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a { h: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    /// Feed raw bytes (no framing — the caller's layout must be
+    /// self-delimiting).
+    pub fn eat(&mut self, bytes: &[u8]) {
+        for &byte in bytes {
+            self.h ^= byte as u64;
+            self.h = self.h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    /// Feed one length-prefixed field (the [`fnv1a`] framing).
+    pub fn eat_field(&mut self, field: &[u8]) {
+        self.eat(&(field.len() as u64).to_le_bytes());
+        self.eat(field);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Fnv1a {
+        Fnv1a::new()
+    }
+}
+
+/// FNV-1a over length-prefixed byte fields.
+pub fn fnv1a(fields: &[&[u8]]) -> u64 {
+    let mut f = Fnv1a::new();
+    for field in fields {
+        f.eat_field(field);
+    }
+    f.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_field_sensitive() {
+        assert_eq!(fnv1a(&[b"a", b"bc"]), fnv1a(&[b"a", b"bc"]));
+        assert_ne!(fnv1a(&[b"ab", b"c"]), fnv1a(&[b"a", b"bc"]));
+        assert_ne!(fnv1a(&[b"ab"]), fnv1a(&[b"a", b"b"]));
+        assert_ne!(fnv1a(&[]), fnv1a(&[b""]));
+    }
+
+    #[test]
+    fn streaming_matches_the_field_form() {
+        let mut f = Fnv1a::new();
+        f.eat_field(b"app");
+        f.eat_field(b"dsl source");
+        assert_eq!(f.finish(), fnv1a(&[b"app", b"dsl source"]));
+        // raw eat is chunking-insensitive
+        let mut a = Fnv1a::new();
+        a.eat(b"hello world");
+        let mut b = Fnv1a::new();
+        b.eat(b"hello ");
+        b.eat(b"world");
+        assert_eq!(a.finish(), b.finish());
+    }
+}

@@ -1,0 +1,149 @@
+//! Minimal bounded LRU map for the eval service's long-lived caches
+//! (zero-dependency build, so no external `lru` crate).
+//!
+//! Recency is a monotone tick bumped on every `get`/`insert`.  Eviction
+//! is *batched*: when the cache is full, one scan computes the tick
+//! threshold of the oldest ~1/8 of entries and `retain`s the rest, so a
+//! service past capacity pays O(len) once per `cap/8` inserts — O(1)
+//! amortized per request — instead of a full scan on every insert.
+//! Callers account evictions from [`LruCache::insert`]'s return value
+//! (the service's `ServiceStats` atomics are the single source of
+//! truth; the cache keeps no counter of its own).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+pub struct LruCache<K, V> {
+    map: HashMap<K, (V, u64)>,
+    tick: u64,
+    cap: usize,
+}
+
+impl<K: Eq + Hash, V> LruCache<K, V> {
+    /// Cache holding at most `cap` entries (clamped to >= 1).
+    pub fn new(cap: usize) -> LruCache<K, V> {
+        LruCache { map: HashMap::new(), tick: 0, cap: cap.max(1) }
+    }
+
+    /// Look `k` up, marking it most-recently-used on a hit.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(k) {
+            Some(slot) => {
+                slot.1 = tick;
+                Some(&slot.0)
+            }
+            None => None,
+        }
+    }
+
+    /// Insert (or refresh) `k -> v`; returns how many least-recently-used
+    /// entries were evicted to make room (0 when there was room or the
+    /// key already existed).
+    pub fn insert(&mut self, k: K, v: V) -> usize {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(slot) = self.map.get_mut(&k) {
+            *slot = (v, tick);
+            return 0;
+        }
+        let mut evicted = 0usize;
+        if self.map.len() >= self.cap {
+            // batch eviction: drop the oldest ~1/8 of the cache in one
+            // retain pass (ticks are unique, so exactly `batch` entries
+            // fall at or below the selected threshold)
+            let batch = (self.cap / 8).max(1).min(self.map.len());
+            let mut ticks: Vec<u64> = self.map.values().map(|&(_, t)| t).collect();
+            let (_, &mut threshold, _) = ticks.select_nth_unstable(batch - 1);
+            self.map.retain(|_, &mut (_, t)| t > threshold);
+            evicted = batch;
+        }
+        self.map.insert(k, (v, tick));
+        evicted
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn holds_up_to_capacity_without_evicting() {
+        let mut c = LruCache::new(3);
+        assert!(c.is_empty());
+        for i in 0..3 {
+            assert_eq!(c.insert(i, i * 10), 0);
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.get(&0), Some(&0));
+        assert_eq!(c.get(&2), Some(&20));
+    }
+
+    #[test]
+    fn evicts_the_least_recently_used_entry() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        // touch "a" so "b" becomes the LRU entry
+        assert_eq!(c.get(&"a"), Some(&1));
+        assert_eq!(c.insert("c", 3), 1, "inserting over capacity must evict");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&"b"), None, "the LRU entry is gone");
+        assert_eq!(c.get(&"a"), Some(&1));
+        assert_eq!(c.get(&"c"), Some(&3));
+    }
+
+    #[test]
+    fn refreshing_an_existing_key_never_evicts() {
+        let mut c = LruCache::new(2);
+        c.insert(1, "x");
+        c.insert(2, "y");
+        assert_eq!(c.insert(1, "z"), 0, "refresh must not evict");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&1), Some(&"z"));
+    }
+
+    #[test]
+    fn large_caches_evict_in_amortized_batches() {
+        let mut c = LruCache::new(64);
+        for i in 0..64 {
+            assert_eq!(c.insert(i, i), 0);
+        }
+        // the 65th insert evicts one batch (64/8 = 8 oldest entries)...
+        assert_eq!(c.insert(64, 64), 8);
+        assert_eq!(c.len(), 57);
+        for i in 0..8 {
+            assert_eq!(c.get(&i), None, "entry {i} was in the oldest batch");
+        }
+        assert_eq!(c.get(&8), Some(&8));
+        assert_eq!(c.get(&64), Some(&64));
+        // ...buying 7 eviction-free inserts before the next scan
+        for i in 65..72 {
+            assert_eq!(c.insert(i, i), 0);
+        }
+        assert_eq!(c.insert(72, 72), 8);
+    }
+
+    #[test]
+    fn capacity_is_clamped_to_one() {
+        let mut c = LruCache::new(0);
+        assert_eq!(c.capacity(), 1);
+        c.insert(1, 1);
+        assert_eq!(c.insert(2, 2), 1);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&2), Some(&2));
+    }
+}

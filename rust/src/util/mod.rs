@@ -1,9 +1,12 @@
 //! Dependency-free utilities: PRNG, CLI parsing, statistics, tables,
-//! property-test driver. (The offline crate set lacks rand / clap /
-//! criterion / proptest; these modules replace what we need of them.)
+//! property-test driver, content hashing, bounded LRU. (The offline
+//! crate set lacks rand / clap / criterion / proptest / lru; these
+//! modules replace what we need of them.)
 
 pub mod benchkit;
 pub mod cli;
+pub mod hash;
+pub mod lru;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -5,6 +5,8 @@
 //! `MAPPEROPT_PROPTEST_CASES` — `make test-props` runs this suite at
 //! raised counts.
 
+use std::sync::Arc;
+
 use mapperopt::apps::{
     self, task_dag, task_dag_with_gate_fanin, Access, App, DepMode, Launch,
     Metric, RegionDecl, RegionReq, TaskDag, TaskDecl,
@@ -12,7 +14,10 @@ use mapperopt::apps::{
 use mapperopt::dsl::{MappingPolicy, TaskCtx};
 use mapperopt::machine::{MachineSpec, ProcKind, ProcSpace};
 use mapperopt::optimizer::{AgentGenome, AppInfo};
-use mapperopt::sim::{run_mapper_with, ExecMode, Executor};
+use mapperopt::sim::{
+    execute_plan, resolve_decisions, run_mapper_with, EvalPlan, ExecMode,
+    Executor, SimArena,
+};
 use mapperopt::util::proptest::{check, env_cases};
 use mapperopt::util::rng::Rng;
 
@@ -260,6 +265,86 @@ fn property_serialized_engine_differential_vs_bulk_sync() {
                 s.name,
                 x.map(|r| r.map(|m| m.throughput)),
                 y.map(|r| r.map(|m| m.throughput)),
+            ),
+        }
+    });
+}
+
+/// Warm-path differential (the PR 4 claim, fuzzed): evaluating through a
+/// *cached* `EvalPlan`, a precomputed decision vector, and a `SimArena`
+/// reused across every case — the long-lived-service configuration — is
+/// bit-identical to the cold `run_mapper_with` path for arbitrary random
+/// mappers x {circuit, stencil, cannon, stencil3d} x {p100_cluster,
+/// small} x {Serialized, Inferred}: full metrics, the attached profile,
+/// and error classification all match.
+#[test]
+fn property_warm_plan_arena_eval_is_bit_identical_to_cold() {
+    let machines = [MachineSpec::p100_cluster(), MachineSpec::small()];
+    let benches = ["circuit", "stencil", "cannon", "stencil3d"];
+    let modes = [ExecMode::Serialized, ExecMode::OutOfOrder];
+    // shared warm state, deliberately reused across cases: one arena,
+    // and one plan per (bench, mode) built from a *different* App
+    // instance than the one later simulated (the service's cache-by-
+    // fingerprint scenario)
+    let mut arena = SimArena::new();
+    let mut plans: std::collections::HashMap<(&str, &str), Arc<EvalPlan>> =
+        std::collections::HashMap::new();
+    check(0x9A7B, env_cases(40), |rng: &mut Rng| {
+        let bench = *rng.choose(&benches);
+        let s = &machines[rng.below(machines.len())];
+        let mode = modes[rng.below(modes.len())];
+        let dep = mode.dep_mode().unwrap();
+        let app = apps::by_name(bench).unwrap();
+        let info = AppInfo::from_app(&app);
+        let mut g = AgentGenome::random(&info, rng);
+        g.syntax_slip = false;
+        g.missing_machine = false;
+        let dsl = g.render();
+        let cold = run_mapper_with(&app, &dsl, s, mode)
+            .expect("random genomes are syntactically valid");
+        let policy = MappingPolicy::compile(&dsl, s).unwrap();
+        let plan = Arc::clone(
+            plans
+                .entry((bench, mode.name()))
+                .or_insert_with(|| Arc::new(EvalPlan::build(&app, dep))),
+        );
+        let warm = match resolve_decisions(&plan, &app, &policy, s) {
+            Ok(res) => execute_plan(s, &app, &policy, &plan, Some(&res), &mut arena),
+            // resolution errors replay through the cold-order engine —
+            // classification must still match bit-exactly
+            Err(_) => execute_plan(s, &app, &policy, &plan, None, &mut arena),
+        };
+        match (cold, warm) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(
+                    a.throughput, b.throughput,
+                    "{bench} on {} ({}): warm path moved the score",
+                    s.name,
+                    mode.name()
+                );
+                assert_eq!(a.elapsed_s, b.elapsed_s);
+                assert_eq!(a.busy_s, b.busy_s);
+                assert_eq!(a.transfer_s, b.transfer_s);
+                assert_eq!(a.comm_bytes, b.comm_bytes);
+                assert_eq!(a.unit, b.unit);
+                assert_eq!(a.per_task_s, b.per_task_s);
+                assert_eq!(a.per_proc_s, b.per_proc_s);
+                assert_eq!(a.peak_mem, b.peak_mem);
+                assert_eq!(a.profile, b.profile, "{bench}: profiles diverged");
+            }
+            (Err(a), Err(b)) => assert_eq!(
+                a.to_string(),
+                b.to_string(),
+                "{bench} on {} ({}): warm path classified the failure differently",
+                s.name,
+                mode.name()
+            ),
+            (x, y) => panic!(
+                "{bench} on {} ({}): outcome category diverged: cold={:?} warm={:?}",
+                s.name,
+                mode.name(),
+                x.map(|m| m.throughput),
+                y.map(|m| m.throughput),
             ),
         }
     });

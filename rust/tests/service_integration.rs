@@ -204,6 +204,59 @@ fn shared_cache_stress_accounting() {
     assert_eq!(small_counters.evals, combos.len() / 2);
 }
 
+/// Campaign traffic with the semantic layers in play: every submission
+/// is still exactly one eval or one cache hit (decision-cache hits count
+/// as hits), the structural plan is built once per (app, mode), and
+/// replayed campaigns stay bit-deterministic.
+#[test]
+fn campaign_accounting_holds_with_semantic_caching() {
+    let service = Arc::new(EvalService::new(2, 8));
+    let small = service.spec_id("small").unwrap();
+    let c = Campaign {
+        spec_id: small,
+        mode: SER,
+        algo: SearchAlgo::Trace,
+        cfg: FeedbackConfig::FULL,
+        base_seed: 11,
+        seed_stride: 1000,
+        seed_offset: 17,
+        runs: 2,
+        iters: 5,
+    };
+    // prewarm the structural plan synchronously so the two workers never
+    // race to build it (a benign race, but it would double-count builds)
+    let app = apps::by_name("circuit").unwrap();
+    service.evaluate(small, &app, expert_dsl("circuit").unwrap(), SER);
+    let first = service.run_campaigns("circuit", c).unwrap();
+    let stats = service.stats();
+    let evals = stats.coord.evals.load(Ordering::Relaxed);
+    let hits = stats.coord.cache_hits.load(Ordering::Relaxed);
+    assert_eq!(
+        evals + hits,
+        stats.completed.load(Ordering::Relaxed) + 1,
+        "every request is exactly one eval or one hit (incl. the prewarm)"
+    );
+    assert!(
+        stats.decision_hits.load(Ordering::Relaxed) <= hits,
+        "decision hits are a subset of cache hits"
+    );
+    // one structural plan serves the whole campaign
+    assert_eq!(stats.plan_builds.load(Ordering::Relaxed), 1);
+    assert_eq!(service.plan_cache_len(), 1);
+    // every simulated mapper compiled at most once
+    assert!(
+        stats.policy_compiles.load(Ordering::Relaxed)
+            <= evals + stats.decision_hits.load(Ordering::Relaxed)
+    );
+    assert_eq!(stats.evicted_feedback.load(Ordering::Relaxed), 0);
+    // replay: identical trajectories, zero new simulations
+    let again = service.run_campaigns("circuit", c).unwrap();
+    for (x, y) in first.iter().zip(&again) {
+        assert_eq!(x.trajectory(), y.trajectory());
+    }
+    assert_eq!(stats.coord.evals.load(Ordering::Relaxed), evals);
+}
+
 /// A panic inside an evaluation resolves the ticket with a classified
 /// internal error and leaves the worker pool serving.
 #[test]
@@ -239,4 +292,11 @@ fn worker_panic_fills_ticket_and_pool_survives() {
     });
     assert!(ticket.wait().score() > 0.0);
     assert_eq!(service.stats().completed.load(Ordering::Relaxed), 2);
+    // a panicked evaluation still counts as one eval, so the service's
+    // evals + cache_hits == completed accounting survives faults
+    assert_eq!(
+        service.stats().coord.evals.load(Ordering::Relaxed)
+            + service.stats().coord.cache_hits.load(Ordering::Relaxed),
+        2
+    );
 }
