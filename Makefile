@@ -12,6 +12,10 @@
 #                    the evals/sec + point-tasks/sec numbers as JSON to
 #                    BENCH_sched_scale.json (the machine-readable
 #                    trajectory seed)
+#   make serve-smoke boot the TCP eval server on loopback, run two
+#                    concurrent remote campaigns against it, and assert
+#                    remote == in-process bit-identically (the example
+#                    self-enforces a deadline so CI can never hang)
 #   make artifacts   AOT-lower the python task bodies to artifacts/*.hlo.txt
 #                    (needed only for the PJRT runtime path; tests skip
 #                    cleanly when artifacts/ is absent)
@@ -21,7 +25,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 PROPTEST_CASES ?= 400
 
-.PHONY: build test verify test-props bench-smoke bench-json fmt fmt-check clippy ci artifacts figures clean
+.PHONY: build test verify test-props bench-smoke bench-json serve-smoke fmt fmt-check clippy ci artifacts figures clean
 
 build:
 	$(CARGO) build --release
@@ -41,6 +45,9 @@ bench-smoke:
 bench-json:
 	$(CARGO) build --benches
 	$(CARGO) bench --bench sched_scale -- json | tee BENCH_sched_scale.json
+
+serve-smoke:
+	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release --example e2e_remote
 
 fmt:
 	$(CARGO) fmt --all

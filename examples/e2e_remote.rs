@@ -1,0 +1,112 @@
+//! Cross-process serving, end to end over loopback TCP:
+//!
+//! 1. Boot an [`EvalService`] and put it behind an [`EvalServer`] on an
+//!    ephemeral loopback port (in a thread here; `mapperopt serve` is
+//!    the real multi-process deployment).
+//! 2. Run **two concurrent remote campaigns on two different machine
+//!    specs** — each through its own [`Coordinator::remote`] connection,
+//!    exactly the code path local campaigns use — hammering the one
+//!    shared, warm-cached backend.
+//! 3. Prove bit-identical serving: the same seeded campaign replayed
+//!    in-process must reproduce the remote trajectories exactly.
+//! 4. Print the merged server-side `summary()` plus the wire-fetched
+//!    stats snapshot.
+//!
+//! A watchdog enforces a deadline (`MAPPEROPT_SERVE_DEADLINE_S`,
+//! default 180 s) so `make serve-smoke` can never hang CI.
+//!
+//! Run:  cargo run --release --example e2e_remote
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mapperopt::coordinator::{Coordinator, EvalService, SearchAlgo};
+use mapperopt::feedback::FeedbackConfig;
+use mapperopt::net::{EvalServer, RemoteEvalClient};
+use mapperopt::sim::ExecMode;
+
+fn main() {
+    let deadline: u64 = std::env::var("MAPPEROPT_SERVE_DEADLINE_S")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(180);
+    std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_secs(deadline));
+        eprintln!("e2e_remote: deadline of {deadline}s exceeded");
+        std::process::exit(124);
+    });
+
+    // ---- the server process-to-be ---------------------------------------
+    let service = Arc::new(EvalService::with_defaults());
+    let server = EvalServer::bind("127.0.0.1:0", Arc::clone(&service))
+        .expect("bind a loopback listener");
+    let addr = server.addr().to_string();
+    println!("eval server on {addr} (2 specs preregistered)");
+
+    // ---- two concurrent remote campaigns on two specs --------------------
+    let t0 = Instant::now();
+    let (circuit_runs, cannon_runs) = std::thread::scope(|scope| {
+        let addr_a = addr.clone();
+        let addr_b = addr.clone();
+        let a = scope.spawn(move || {
+            let coord =
+                Coordinator::remote(&addr_a, "p100_cluster", ExecMode::Serialized)
+                    .expect("connect client A");
+            coord
+                .run_many("circuit", SearchAlgo::Trace, FeedbackConfig::FULL, 7, 2, 6)
+                .expect("circuit campaign")
+        });
+        let b = scope.spawn(move || {
+            let coord = Coordinator::remote(&addr_b, "small", ExecMode::Serialized)
+                .expect("connect client B");
+            coord
+                .run_many("cannon", SearchAlgo::Trace, FeedbackConfig::FULL, 3, 2, 6)
+                .expect("cannon campaign")
+        });
+        (a.join().expect("campaign A"), b.join().expect("campaign B"))
+    });
+    let wall = t0.elapsed();
+
+    let best = |runs: &[mapperopt::coordinator::RunResult]| {
+        runs.iter()
+            .filter_map(|r| r.best.clone())
+            .map(|(_, s)| s)
+            .fold(0.0f64, f64::max)
+    };
+    let best_circuit = best(&circuit_runs);
+    let best_cannon = best(&cannon_runs);
+    assert!(best_circuit > 0.0, "circuit search found no runnable mapper");
+    assert!(best_cannon > 0.0, "cannon search found no runnable mapper");
+    println!(
+        "2 remote campaigns x 2 runs x 6 iters in {wall:.2?}: \
+         circuit best {best_circuit:.1} steps/s, cannon best {best_cannon:.0} GFLOPS"
+    );
+
+    // ---- bit-identical to in-process serving -----------------------------
+    let local = Coordinator::new(mapperopt::machine::MachineSpec::p100_cluster());
+    let local_runs = local
+        .run_many("circuit", SearchAlgo::Trace, FeedbackConfig::FULL, 7, 2, 6)
+        .expect("local replay");
+    for (r, l) in circuit_runs.iter().zip(&local_runs) {
+        assert_eq!(
+            r.trajectory(),
+            l.trajectory(),
+            "remote trajectory diverged from in-process"
+        );
+    }
+    println!("remote == in-process: trajectories bit-identical");
+
+    // ---- merged server-side stats ---------------------------------------
+    print!("\nmerged server summary:\n{}", service.summary());
+    let probe = RemoteEvalClient::connect(&addr).expect("stats probe connects");
+    let snap = probe.stats().expect("stats over the wire");
+    println!(
+        "wire snapshot: {} evals, {} cache hits, {} submitted, {} completed",
+        snap.evals, snap.cache_hits, snap.submitted, snap.completed
+    );
+    assert_eq!(snap.submitted, snap.completed, "no ticket left unresolved");
+    drop(probe);
+
+    server.shutdown();
+    println!("\ne2e remote OK: wire protocol served 2 campaigns bit-identically");
+}

@@ -20,7 +20,7 @@
 use std::time::Instant;
 
 use mapperopt::apps;
-use mapperopt::coordinator::{Campaign, EvalService, SearchAlgo};
+use mapperopt::coordinator::{Campaign, EvalService, SearchAlgo, PRIORITY_NORMAL};
 use mapperopt::feedback::FeedbackConfig;
 use mapperopt::mapping::expert_dsl;
 use mapperopt::runtime::{ArtifactRuntime, CircuitState};
@@ -50,6 +50,7 @@ fn main() {
                 seed_offset: 17,
                 runs: 5,
                 iters: 10,
+                priority: PRIORITY_NORMAL,
             },
         )
         .expect("circuit is registered");

@@ -32,6 +32,126 @@ pub fn by_name(name: &str) -> Option<App> {
     }
 }
 
+/// Build a benchmark by name with named integer overrides of its
+/// default config — the wire protocol's scenario constructor (see
+/// [`crate::net::proto::Scenario`]): a remote request carries
+/// `(app name, params)` instead of a serialized task graph, and the
+/// server rebuilds the `App` here.  An empty parameter list is exactly
+/// [`by_name`]; unknown apps and unknown parameter names are `Err`
+/// (classified as bad requests by the server), never panics.
+pub fn scenario(name: &str, params: &[(String, i64)]) -> Result<App, String> {
+    // Every scenario override is a positive count/size, bounded so a
+    // hostile remote request classifies as a bad request instead of
+    // wrapping the `as u64`/`as usize` casts or overflowing downstream
+    // products (the serving layer additionally budgets the *resulting
+    // task count* per request).  Two bound classes:
+    //
+    // * EXTENT_MAX — parameters that multiply into each other (tile
+    //   grid extents, steps, and the block/matrix sides whose squares
+    //   or cubes size tiles): 2^16 keeps any product of three extents,
+    //   a step count, and a small constant inside i64/u64.
+    // * SIZE_MAX — linear per-piece element counts (wires, nodes,
+    //   zones, points) that only ever scale by a small field constant:
+    //   2^32 leaves defaults like circuit's `wires = 2<<20` far from
+    //   the ceiling.
+    const EXTENT_MAX: i64 = 1 << 16;
+    const SIZE_MAX: i64 = 1 << 32;
+
+    fn unknown(app: &str, key: &str) -> String {
+        format!("unknown {app} scenario parameter '{key}'")
+    }
+    fn bounded(app: &str, key: &str, v: i64, max: i64) -> Result<i64, String> {
+        if (1..=max).contains(&v) {
+            Ok(v)
+        } else {
+            Err(format!(
+                "{app} scenario parameter '{key}' = {v} outside 1..={max}"
+            ))
+        }
+    }
+    fn extent(app: &str, key: &str, v: i64) -> Result<i64, String> {
+        bounded(app, key, v, EXTENT_MAX)
+    }
+    fn size(app: &str, key: &str, v: i64) -> Result<i64, String> {
+        bounded(app, key, v, SIZE_MAX)
+    }
+    match name {
+        "circuit" => {
+            let mut c = CircuitConfig::default();
+            for (k, v) in params {
+                match k.as_str() {
+                    "pieces" => c.pieces = extent(name, k, *v)?,
+                    "wires" => c.wires = size(name, k, *v)? as u64,
+                    "private_nodes" => c.private_nodes = size(name, k, *v)? as u64,
+                    "shared_nodes" => c.shared_nodes = size(name, k, *v)? as u64,
+                    "steps" => c.steps = extent(name, k, *v)? as usize,
+                    _ => return Err(unknown(name, k)),
+                }
+            }
+            Ok(circuit(c))
+        }
+        "stencil" => {
+            let mut c = StencilConfig::default();
+            for (k, v) in params {
+                match k.as_str() {
+                    "px" => c.px = extent(name, k, *v)?,
+                    "py" => c.py = extent(name, k, *v)?,
+                    // tiles are block^2 elements: extent-bounded
+                    "block" => c.block = extent(name, k, *v)? as u64,
+                    "steps" => c.steps = extent(name, k, *v)? as usize,
+                    _ => return Err(unknown(name, k)),
+                }
+            }
+            Ok(stencil(c))
+        }
+        "stencil3d" => {
+            let mut c = Stencil3dConfig::default();
+            for (k, v) in params {
+                match k.as_str() {
+                    "px" => c.px = extent(name, k, *v)?,
+                    "py" => c.py = extent(name, k, *v)?,
+                    "pz" => c.pz = extent(name, k, *v)?,
+                    // tiles are block^3 cells: extent-bounded
+                    "block" => c.block = extent(name, k, *v)? as u64,
+                    "steps" => c.steps = extent(name, k, *v)? as usize,
+                    _ => return Err(unknown(name, k)),
+                }
+            }
+            Ok(stencil3d(c))
+        }
+        "pennant" => {
+            let mut c = PennantConfig::default();
+            for (k, v) in params {
+                match k.as_str() {
+                    "pieces" => c.pieces = extent(name, k, *v)?,
+                    "zones" => c.zones = size(name, k, *v)? as u64,
+                    "points_private" => c.points_private = size(name, k, *v)? as u64,
+                    "points_shared" => c.points_shared = size(name, k, *v)? as u64,
+                    "steps" => c.steps = extent(name, k, *v)? as usize,
+                    _ => return Err(unknown(name, k)),
+                }
+            }
+            Ok(pennant(c))
+        }
+        other => {
+            let Some(algo) = matmul::Algorithm::parse(other) else {
+                return Err(format!("unknown app '{other}'"));
+            };
+            let mut c = MatmulConfig::default();
+            for (k, v) in params {
+                match k.as_str() {
+                    // tiles are (n/p)^2 elements: extent-bounded
+                    "n" => c.n = extent(other, k, *v)? as u64,
+                    "p" => c.p = extent(other, k, *v)?,
+                    "q" => c.q = extent(other, k, *v)?,
+                    _ => return Err(unknown(other, k)),
+                }
+            }
+            Ok(matmul(algo, c))
+        }
+    }
+}
+
 /// All nine benchmark names (Table 1's "9 applications").
 pub const ALL_BENCHMARKS: [&str; 9] = [
     "circuit",
@@ -73,6 +193,44 @@ mod tests {
             assert!(!app.tasks.is_empty());
         }
         assert!(by_name("unknown").is_none());
+    }
+
+    #[test]
+    fn scenario_overrides_and_matches_by_name() {
+        for name in ALL_APPS {
+            let plain = by_name(name).unwrap();
+            let wired = scenario(name, &[]).unwrap();
+            assert_eq!(plain.steps, wired.steps, "{name}: default scenario drifted");
+            assert_eq!(plain.tasks.len(), wired.tasks.len());
+            assert_eq!(plain.regions.len(), wired.regions.len());
+        }
+        let small = scenario(
+            "circuit",
+            &[("pieces".into(), 4), ("steps".into(), 3)],
+        )
+        .unwrap();
+        assert_eq!(small.steps, 3);
+        let grown = scenario("stencil3d", &[("px".into(), 8)]).unwrap();
+        assert_eq!(grown.name, "stencil3d");
+        let wide = scenario("cannon", &[("p".into(), 8)]).unwrap();
+        assert_eq!(wide.name, "cannon");
+        assert!(scenario("nope", &[]).unwrap_err().contains("unknown app"));
+        let err = scenario("circuit", &[("bogus".into(), 1)]).unwrap_err();
+        assert!(err.contains("unknown circuit scenario parameter"), "{err}");
+        // hostile values classify instead of wrapping through the casts
+        for bad in [-1, 0, i64::MIN, i64::MAX, (1 << 16) + 1] {
+            let err = scenario("circuit", &[("steps".into(), bad)]).unwrap_err();
+            assert!(err.contains("outside 1..="), "steps={bad}: {err}");
+        }
+        let err = scenario("cannon", &[("n".into(), -8192)]).unwrap_err();
+        assert!(err.contains("'n' = -8192"), "{err}");
+        // linear size params accept default-scale values (circuit's
+        // default wires is 2<<20 — the wire must be able to say "half
+        // the default")
+        let half = scenario("circuit", &[("wires".into(), 1 << 20)]).unwrap();
+        assert_eq!(half.name, "circuit");
+        let err = scenario("circuit", &[("wires".into(), (1i64 << 32) + 1)]).unwrap_err();
+        assert!(err.contains("outside 1..="), "{err}");
     }
 
     #[test]

@@ -9,6 +9,12 @@
 //! campaigns, so every pre-service score stays bit-identical while many
 //! campaigns — and many machine shapes — share one process.  The CLI and
 //! the experiment harness drive everything through these two types.
+//! Since the wire layer ([`crate::net`]), the backing service may also
+//! live in *another process*: [`Coordinator::remote`] speaks the binary
+//! protocol to a `mapperopt serve` instance with the same API, the same
+//! caches, and bit-identical scores.  Campaign runs additionally dedup
+//! their own proposals semantically before submitting
+//! ([`RunResult::proposer_dupes`]).
 //!
 //! Evaluations run on the dependency-aware engine in
 //! [`ExecMode::Serialized`] by default: timing is identical to the legacy
@@ -30,20 +36,27 @@
 
 pub mod service;
 
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::thread;
 
-use crate::apps::App;
+use crate::apps::{self, App};
+use crate::dsl::MappingPolicy;
 use crate::feedback::{FeedbackConfig, SystemFeedback};
 use crate::machine::MachineSpec;
+use crate::net::client::RemoteEvalClient;
+use crate::net::proto::{Scenario, SpecRef};
 use crate::optimizer::{
     AppInfo, IterationRecord, Optimizer, OproOptimizer, TraceOptimizer,
 };
-use crate::sim::{ExecMode, PerfProfile};
+use crate::sim::{resolve_decisions, EvalPlan, ExecMode, PerfProfile};
 
 pub use service::{
-    CacheConfig, Campaign, EvalRequest, EvalService, EvalTicket, ServiceStats,
-    SpecCounters, SpecId, SpecRegistry,
+    CacheConfig, Campaign, EvalRequest, EvalService, EvalTicket,
+    PriorityCounters, PrioritySnapshot, ServiceStats, SpecCounters, SpecId,
+    SpecRegistry, SpecSnapshot, StatsSnapshot, PRIORITY_NORMAL,
 };
 
 /// Which search algorithm to run (Section 5's two optimizers).
@@ -70,6 +83,12 @@ pub struct RunResult {
     pub records: Vec<IterationRecord>,
     /// Best (dsl, throughput) found.
     pub best: Option<(String, f64)>,
+    /// Proposals this run answered from its local semantic memo instead
+    /// of submitting: the optimizer re-proposed a mapper whose resolved
+    /// decision vector matched an earlier proposal of the same run (see
+    /// [`ProposalFilter`]).  The trajectory is unchanged — the memoized
+    /// feedback is exactly what the service would have returned.
+    pub proposer_dupes: usize,
 }
 
 impl RunResult {
@@ -111,16 +130,43 @@ impl CoordinatorStats {
     }
 }
 
+/// Where a [`Coordinator`]'s evaluations actually run: an in-process
+/// [`EvalService`], or a [`RemoteEvalClient`] connection to one behind
+/// the wire protocol.
+enum Backend {
+    Local {
+        service: Arc<EvalService>,
+        spec_id: SpecId,
+    },
+    Remote {
+        client: Arc<RemoteEvalClient>,
+        /// Server-side registry index of the pinned spec.
+        spec_id: SpecId,
+        /// Placeholder counters so [`Coordinator::stats`] keeps its
+        /// signature: a remote backend's real counters live server-side
+        /// (fetch them with [`Coordinator::summary`] or
+        /// [`RemoteEvalClient::stats`]).
+        stats: CoordinatorStats,
+        /// Memoized `app name -> catalogue fingerprint` for the
+        /// default-scenario check in [`Coordinator::evaluate`] (so the
+        /// per-proposal hot path never rebuilds the catalogue app).
+        catalogue_fps: Mutex<HashMap<String, Option<u64>>>,
+    },
+}
+
 /// The thin single-spec client of an [`EvalService`]: pins one
 /// `(spec, mode)` pair and forwards to the service's shared cache,
-/// worker pool, and stats.
+/// worker pool, and stats.  The service can be in-process
+/// ([`Coordinator::new`] / [`Coordinator::on_service`]) or in another
+/// process entirely ([`Coordinator::remote`]) — optimizers, the
+/// harness, and whole campaigns run unmodified against either.
 pub struct Coordinator {
     /// Copy of the machine spec this client evaluates against (the
-    /// authoritative one lives in the service's registry).
+    /// authoritative one lives in the service's registry — local or
+    /// remote).
     pub spec: MachineSpec,
     mode: ExecMode,
-    spec_id: SpecId,
-    service: Arc<EvalService>,
+    backend: Backend,
 }
 
 impl Coordinator {
@@ -147,33 +193,138 @@ impl Coordinator {
         mode: ExecMode,
     ) -> Coordinator {
         let spec = service.spec(spec_id);
-        Coordinator { spec, mode, spec_id, service }
+        Coordinator { spec, mode, backend: Backend::Local { service, spec_id } }
+    }
+
+    /// Client of an [`EvalService`] living in *another process*, behind
+    /// [`crate::net::server::EvalServer`] at `addr`: resolves
+    /// `spec_name` in the remote registry and pins it, so every
+    /// `evaluate` / `run_many` hits the server's shared warm caches.
+    /// Apps are referred to by registered scenario name over the wire —
+    /// the remote twin of the `apps::by_name` catalogue both processes
+    /// compile in — so scores are bit-identical to in-process
+    /// evaluation.
+    pub fn remote(
+        addr: &str,
+        spec_name: &str,
+        mode: ExecMode,
+    ) -> Result<Coordinator, String> {
+        let client = RemoteEvalClient::connect(addr)
+            .map_err(|e| format!("cannot connect to eval server at {addr}: {e}"))?;
+        let (id, spec) = client.spec(spec_name)?;
+        Ok(Coordinator::on_client(Arc::new(client), id, spec, mode))
+    }
+
+    /// [`Coordinator::remote`] over an already-connected client (share
+    /// one connection between several pinned-spec coordinators).
+    pub fn on_client(
+        client: Arc<RemoteEvalClient>,
+        spec_index: u32,
+        spec: MachineSpec,
+        mode: ExecMode,
+    ) -> Coordinator {
+        Coordinator {
+            spec,
+            mode,
+            backend: Backend::Remote {
+                client,
+                spec_id: SpecId::from_raw(spec_index as usize),
+                stats: CoordinatorStats::default(),
+                catalogue_fps: Mutex::new(HashMap::new()),
+            },
+        }
     }
 
     pub fn mode(&self) -> ExecMode {
         self.mode
     }
 
-    /// The backing service (shared with any sibling clients).
-    pub fn service(&self) -> &Arc<EvalService> {
-        &self.service
+    /// The backing in-process service (shared with any sibling
+    /// clients); `None` when the service lives in another process.
+    pub fn service(&self) -> Option<&Arc<EvalService>> {
+        match &self.backend {
+            Backend::Local { service, .. } => Some(service),
+            Backend::Remote { .. } => None,
+        }
     }
 
-    /// This client's spec handle in the service registry.
+    /// The remote connection, when the backend is one.
+    pub fn remote_client(&self) -> Option<&Arc<RemoteEvalClient>> {
+        match &self.backend {
+            Backend::Remote { client, .. } => Some(client),
+            Backend::Local { .. } => None,
+        }
+    }
+
+    /// This client's spec handle in the (local or remote) registry.
     pub fn spec_id(&self) -> SpecId {
-        self.spec_id
+        match &self.backend {
+            Backend::Local { spec_id, .. } | Backend::Remote { spec_id, .. } => {
+                *spec_id
+            }
+        }
     }
 
     /// Evaluation counters of the backing service (aggregated over every
-    /// client when the service is shared).
+    /// client when the service is shared).  For a remote backend the
+    /// real counters live server-side — this returns zeros; use
+    /// [`Coordinator::summary`] or [`RemoteEvalClient::stats`].
     pub fn stats(&self) -> &CoordinatorStats {
-        &self.service.stats().coord
+        match &self.backend {
+            Backend::Local { service, .. } => &service.stats().coord,
+            Backend::Remote { stats, .. } => stats,
+        }
+    }
+
+    /// The backing service's human-readable stats block (fetched over
+    /// the wire for remote backends).
+    pub fn summary(&self) -> String {
+        match &self.backend {
+            Backend::Local { service, .. } => service.summary(),
+            Backend::Remote { client, .. } => client.summary().unwrap_or_else(|e| {
+                format!("remote eval service summary unavailable: {e}\n")
+            }),
+        }
     }
 
     /// Evaluate one DSL mapper against an app (cached by content hash in
-    /// the service's shared cross-campaign cache).
+    /// the service's shared cross-campaign cache).  Remote backends send
+    /// the app *by name* (the registered default scenario), so the app
+    /// instance must fingerprint-match the catalogue one — which every
+    /// CLI / harness path uses.  A custom-config instance is answered
+    /// with a classified error instead of silently scoring the default
+    /// scenario; route those through [`RemoteEvalClient::evaluate`] with
+    /// explicit scenario parameters.
     pub fn evaluate(&self, app: &App, dsl: &str) -> SystemFeedback {
-        self.service.evaluate(self.spec_id, app, dsl, self.mode)
+        match &self.backend {
+            Backend::Local { service, spec_id } => {
+                service.evaluate(*spec_id, app, dsl, self.mode)
+            }
+            Backend::Remote { client, spec_id, catalogue_fps, .. } => {
+                let catalogue = {
+                    let mut memo = catalogue_fps.lock().unwrap();
+                    *memo.entry(app.name.clone()).or_insert_with(|| {
+                        apps::by_name(&app.name).map(|c| app_fingerprint(&c))
+                    })
+                };
+                if catalogue != Some(app_fingerprint(app)) {
+                    return SystemFeedback::ExecutionError(format!(
+                        "Remote bad-request error: app '{}' is not the \
+                         registry's default scenario; evaluate custom configs \
+                         via RemoteEvalClient::evaluate with explicit scenario \
+                         parameters",
+                        app.name
+                    ));
+                }
+                client.evaluate(
+                    SpecRef::Id(spec_id.index() as u32),
+                    Scenario::named(&app.name),
+                    dsl,
+                    self.mode,
+                    PRIORITY_NORMAL,
+                )
+            }
+        }
     }
 
     /// Throughput of one mapper, or 0.0 on any error.
@@ -187,8 +338,12 @@ impl Coordinator {
         self.evaluate(app, dsl).profile().cloned()
     }
 
-    /// Run one optimizer for `iters` iterations (evaluations go through
-    /// the service's synchronous path in the calling thread).
+    /// Run one optimizer for `iters` iterations.  Local backends
+    /// evaluate through the service's synchronous path in the calling
+    /// thread — its semantic decision cache already makes duplicate
+    /// proposals cheap, so no [`ProposalFilter`] is paid for here;
+    /// remote backends arm the filter, saving a network round trip per
+    /// semantically duplicate proposal.
     pub fn run_optimizer(
         &self,
         app: &App,
@@ -197,8 +352,22 @@ impl Coordinator {
         seed: u64,
         iters: usize,
     ) -> RunResult {
+        let filter = match &self.backend {
+            Backend::Local { .. } => None,
+            Backend::Remote { .. } => {
+                Some(ProposalFilter::new(app, &self.spec, self.mode))
+            }
+        };
         let eval = |src: &str| self.evaluate(app, src);
-        drive_campaign(&eval, AppInfo::from_app(app), algo, cfg, seed, iters)
+        drive_campaign(
+            &eval,
+            AppInfo::from_app(app),
+            algo,
+            cfg,
+            seed,
+            iters,
+            filter.as_ref(),
+        )
     }
 
     /// Run `runs` seeded campaigns concurrently through the backing
@@ -216,21 +385,55 @@ impl Coordinator {
         runs: usize,
         iters: usize,
     ) -> Result<Vec<RunResult>, String> {
-        self.service.run_campaigns(
-            app_name,
-            Campaign {
-                spec_id: self.spec_id,
-                mode: self.mode,
-                algo,
-                cfg,
-                base_seed,
-                // the historical run_many seed spread, bit-for-bit
-                seed_stride: 1000,
-                seed_offset: 17,
-                runs,
-                iters,
-            },
-        )
+        let c = Campaign {
+            spec_id: self.spec_id(),
+            mode: self.mode,
+            algo,
+            cfg,
+            base_seed,
+            // the historical run_many seed spread, bit-for-bit
+            seed_stride: 1000,
+            seed_offset: 17,
+            runs,
+            iters,
+            priority: PRIORITY_NORMAL,
+        };
+        match &self.backend {
+            Backend::Local { service, .. } => service.run_campaigns(app_name, c),
+            Backend::Remote { client, .. } => {
+                self.run_many_remote(client, app_name, c)
+            }
+        }
+    }
+
+    /// The remote mirror of `EvalService::run_campaigns`: campaign
+    /// threads pipeline submissions over the one client connection (the
+    /// server resolves tickets in order while evaluating concurrently),
+    /// with the same [`Campaign::seed_for_run`] seeds and the same
+    /// semantic [`ProposalFilter`] — so trajectories are bit-identical
+    /// to the in-process path.
+    fn run_many_remote(
+        &self,
+        client: &Arc<RemoteEvalClient>,
+        app_name: &str,
+        c: Campaign,
+    ) -> Result<Vec<RunResult>, String> {
+        let app = apps::by_name(app_name)
+            .ok_or_else(|| format!("unknown app '{app_name}'"))?;
+        run_campaign_fleet(&app, &self.spec, c, |_r| {
+            let client = Arc::clone(client);
+            move |src: &str| {
+                client
+                    .submit(
+                        SpecRef::Id(c.spec_id.index() as u32),
+                        Scenario::named(app_name),
+                        src.to_string(),
+                        c.mode,
+                        c.priority,
+                    )
+                    .wait()
+            }
+        })
     }
 
     /// Throughputs of `n` random mappers (errors count as 0 — the
@@ -243,9 +446,118 @@ impl Coordinator {
     }
 }
 
+/// The optimizer-loop semantic deduplicator: fingerprints a proposed
+/// mapper's *resolved decision vector* (the same
+/// [`ResolvedDecisions::fingerprint`] the service's decision cache
+/// keys on) without simulating, so a campaign can recognize — before
+/// submitting — that a proposal is semantically identical to one it
+/// already scored this run.
+///
+/// One filter serves one `(app, spec, mode)` campaign run.  Proposals
+/// that fail to compile or resolve return `None` and pass through
+/// unfiltered (errors must keep their exact service-side
+/// classification); `ExecMode::BulkSync` has no plan and disables the
+/// filter entirely.
+///
+/// [`ResolvedDecisions::fingerprint`]: crate::sim::ResolvedDecisions::fingerprint
+pub(crate) struct ProposalFilter<'a> {
+    plan: Option<Arc<EvalPlan>>,
+    app: &'a App,
+    spec: &'a MachineSpec,
+}
+
+impl<'a> ProposalFilter<'a> {
+    pub(crate) fn new(
+        app: &'a App,
+        spec: &'a MachineSpec,
+        mode: ExecMode,
+    ) -> ProposalFilter<'a> {
+        let plan = mode.dep_mode().map(|d| Arc::new(EvalPlan::build(app, d)));
+        ProposalFilter::with_plan(plan, app, spec)
+    }
+
+    /// Filter over a plan the caller already built (shared across a
+    /// campaign's runs).
+    pub(crate) fn with_plan(
+        plan: Option<Arc<EvalPlan>>,
+        app: &'a App,
+        spec: &'a MachineSpec,
+    ) -> ProposalFilter<'a> {
+        ProposalFilter { plan, app, spec }
+    }
+
+    /// Semantic fingerprint of a proposal, `None` when the proposal
+    /// cannot be (cheaply and safely) proven equivalent to anything.
+    pub(crate) fn fingerprint(&self, dsl: &str) -> Option<u64> {
+        let plan = self.plan.as_ref()?;
+        let policy = MappingPolicy::compile(dsl, self.spec).ok()?;
+        let resolved = resolve_decisions(plan, self.app, &policy, self.spec).ok()?;
+        Some(resolved.fingerprint(self.spec))
+    }
+}
+
+/// The one campaign-fanout scaffold shared by
+/// [`EvalService::run_campaigns_on`] (queued local evals) and the
+/// remote campaign path — a single copy of the seed spread
+/// ([`Campaign::seed_for_run`]), the shared structural plan, the
+/// per-run [`ProposalFilter`], and the panic-safe join, so the
+/// remote == local bit-identity can never drift between two copies of
+/// this code.  `make_eval(r)` builds run `r`'s evaluation function
+/// (submit-to-queue or submit-over-wire).
+///
+/// The filter is armed on both queued paths deliberately: it runs in
+/// the campaign threads (which otherwise idle on tickets), so a
+/// semantic duplicate never occupies a queue slot or a pool worker at
+/// the price of one compile + decision resolution per unique proposal
+/// *off* the worker pool.  (The synchronous local
+/// [`Coordinator::run_optimizer`] path, which has no queue to spare,
+/// skips it — see its docs.)
+pub(crate) fn run_campaign_fleet<E>(
+    app: &App,
+    spec: &MachineSpec,
+    c: Campaign,
+    make_eval: impl Fn(usize) -> E + Sync,
+) -> Result<Vec<RunResult>, String>
+where
+    E: Fn(&str) -> SystemFeedback,
+{
+    let info = AppInfo::from_app(app);
+    // one structural plan shared by every run's filter (the filter
+    // resolves decision vectors without simulating)
+    let plan = c.mode.dep_mode().map(|d| Arc::new(EvalPlan::build(app, d)));
+    let make_eval = &make_eval;
+    thread::scope(|scope| {
+        let handles: Vec<_> = (0..c.runs)
+            .map(|r| {
+                let info = info.clone();
+                let plan = plan.clone();
+                scope.spawn(move || {
+                    let filter = ProposalFilter::with_plan(plan, app, spec);
+                    let eval = make_eval(r);
+                    drive_campaign(
+                        &eval,
+                        info,
+                        c.algo,
+                        c.cfg,
+                        c.seed_for_run(r),
+                        c.iters,
+                        Some(&filter),
+                    )
+                })
+            })
+            .collect();
+        join_campaigns(handles)
+    })
+}
+
 /// One optimizer campaign over an arbitrary evaluation function — the
 /// shared driver behind [`Coordinator::run_optimizer`] (synchronous
-/// evals) and [`EvalService::run_campaigns`] (queued evals).
+/// evals), [`EvalService::run_campaigns`] (queued evals), and the
+/// remote campaign path (wire evals).  With a [`ProposalFilter`],
+/// semantically duplicate proposals within the run are answered from a
+/// local memo — the feedback is a clone of the first submission's, so
+/// the trajectory is bit-identical — and counted as
+/// [`RunResult::proposer_dupes`].
 pub(crate) fn drive_campaign(
     eval: &dyn Fn(&str) -> SystemFeedback,
     info: AppInfo,
@@ -253,26 +565,41 @@ pub(crate) fn drive_campaign(
     cfg: FeedbackConfig,
     seed: u64,
     iters: usize,
+    filter: Option<&ProposalFilter<'_>>,
 ) -> RunResult {
+    let seen: RefCell<HashMap<u64, SystemFeedback>> = RefCell::new(HashMap::new());
+    let dupes = Cell::new(0usize);
+    let gated = |src: &str| -> SystemFeedback {
+        let Some(fp) = filter.and_then(|f| f.fingerprint(src)) else {
+            return eval(src);
+        };
+        if let Some(fb) = seen.borrow().get(&fp) {
+            dupes.set(dupes.get() + 1);
+            return fb.clone();
+        }
+        let fb = eval(src);
+        seen.borrow_mut().insert(fp, fb.clone());
+        fb
+    };
     let mut records = Vec::with_capacity(iters);
     let best;
     match algo {
         SearchAlgo::Trace => {
             let mut opt = TraceOptimizer::new(info, cfg, seed);
             for _ in 0..iters {
-                records.push(opt.step(eval));
+                records.push(opt.step(&gated));
             }
             best = opt.best_dsl();
         }
         SearchAlgo::Opro => {
             let mut opt = OproOptimizer::new(info, seed);
             for _ in 0..iters {
-                records.push(opt.step(eval));
+                records.push(opt.step(&gated));
             }
             best = opt.best_dsl();
         }
     }
-    RunResult { algo: algo.name(), seed, records, best }
+    RunResult { algo: algo.name(), seed, records, best, proposer_dupes: dupes.get() }
 }
 
 /// Join campaign threads, surfacing panics as `Err` instead of
@@ -395,6 +722,61 @@ mod tests {
         assert_eq!(b.stats().cache_hits.load(Ordering::Relaxed), 1);
         assert_eq!(a.spec_id(), b.spec_id());
         assert_eq!(a.spec.name, "p100x4x2");
+    }
+
+    #[test]
+    fn proposal_filter_fingerprints_semantics_not_text() {
+        let app = apps::by_name("circuit").unwrap();
+        let s = MachineSpec::p100_cluster();
+        let f = ProposalFilter::new(&app, &s, ExecMode::Serialized);
+        let base = "Task * GPU;\nRegion * * GPU FBMEM;\n\
+                    Layout * * * SOA C_order Align==64;\n";
+        let a = f.fingerprint(base).expect("clean mapper resolves");
+        // an LLM-style rewrite: comments and whitespace, same decisions
+        let alias = format!("# candidate 9\n{base}\n# end\n");
+        assert_eq!(f.fingerprint(&alias), Some(a), "semantic alias must match");
+        // a real decision change must not alias
+        let moved = format!("{base}Region * rp_shared GPU ZCMEM;\n");
+        let b = f.fingerprint(&moved).expect("clean mapper resolves");
+        assert_ne!(a, b, "different placements must not alias");
+        // compile errors pass through unfiltered (classification stays
+        // with the service)
+        assert!(f.fingerprint("Task GPU ((").is_none());
+        // bulk-sync has no plan: filter disabled
+        let bulk = ProposalFilter::new(&app, &s, ExecMode::BulkSync);
+        assert!(bulk.fingerprint(base).is_none());
+    }
+
+    #[test]
+    fn campaign_dedup_preserves_trajectories_and_counts_dupes() {
+        // two coordinators on two fresh services: identical seeds must
+        // give identical trajectories AND identical dupe counts (the
+        // filter is deterministic), and every dupe is a submission the
+        // service never saw
+        let a = coord();
+        let b = coord();
+        let ra = a
+            .run_many("circuit", SearchAlgo::Trace, FeedbackConfig::FULL, 5, 2, 6)
+            .unwrap();
+        let rb = b
+            .run_many("circuit", SearchAlgo::Trace, FeedbackConfig::FULL, 5, 2, 6)
+            .unwrap();
+        let dupes: usize = ra.iter().map(|r| r.proposer_dupes).sum();
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.trajectory(), y.trajectory());
+            assert_eq!(x.proposer_dupes, y.proposer_dupes);
+        }
+        let submitted = a
+            .service()
+            .expect("local backend")
+            .stats()
+            .submitted
+            .load(Ordering::Relaxed);
+        assert_eq!(
+            submitted,
+            2 * 6 - dupes,
+            "every proposal either submits or counts as a dupe"
+        );
     }
 
     #[test]

@@ -8,13 +8,21 @@
 //!   `small` are pre-registered; ablation sweeps register their generated
 //!   shapes at runtime) — every request names its machine by [`SpecId`],
 //!   so one service process serves heterogeneous machine models;
-//! * a bounded job queue of [`EvalRequest`]s drained by a fixed-size
-//!   worker pool (spawned lazily on the first queued submission).
-//!   Workers pop jobs in *batches* — a fair share of the backlog capped
-//!   at [`BATCH_MAX`] — which keeps wake-ups O(batch) under bursty
-//!   campaign traffic without letting one worker drain the queue while
-//!   its siblings idle; [`ServiceStats::batch_occupancy`] reports the
-//!   realized mean batch size;
+//! * a bounded, *priority-aware* job queue of [`EvalRequest`]s drained
+//!   by a fixed-size worker pool (spawned lazily on the first queued
+//!   submission).  The queue is one FIFO ring per in-use priority
+//!   level, popped highest-first with a starvation escape hatch (every
+//!   [`STARVE_RELIEF`]-th pop serves a round-robin rotation over the
+//!   live levels), so one campaign cannot starve another at *any*
+//!   priority; per-priority submission counts, high-water
+//!   marks, and live depths surface through
+//!   [`ServiceStats::priority_counters`] and
+//!   [`EvalService::snapshot`].  Workers pop jobs in *batches* — a fair
+//!   share of the backlog capped at [`BATCH_MAX`] — which keeps
+//!   wake-ups O(batch) under bursty campaign traffic without letting
+//!   one worker drain the queue while its siblings idle;
+//!   [`ServiceStats::batch_occupancy`] reports the realized mean batch
+//!   size;
 //! * one shared, cross-campaign result cache keyed by the same
 //!   machine-fingerprinted `eval_key` the single-spec coordinator used —
 //!   identical requests from different campaigns hit once (concurrent
@@ -37,9 +45,15 @@
 //! execution error, and never takes down the pool or poisons the cache.
 //! Dropping the service closes the queue, drains the remaining jobs (so
 //! no ticket is left unresolved), and joins the workers.
+//!
+//! Clients need not share the process: [`crate::net`] puts this whole
+//! surface — evaluation with priorities, spec registration,
+//! [`StatsSnapshot`] / `summary()` — behind a versioned TCP wire
+//! protocol, and remote requests drain into the *same* queue, caches,
+//! and in-flight deduplication as local ones.
 
 use std::cell::RefCell;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread;
@@ -49,7 +63,6 @@ use crate::apps::{self, App};
 use crate::dsl::MappingPolicy;
 use crate::feedback::{FeedbackConfig, SystemFeedback};
 use crate::machine::MachineSpec;
-use crate::optimizer::AppInfo;
 use crate::sim::{
     execute_plan, resolve_decisions, EvalPlan, ExecMode, Executor,
     ResolvedDecisions, SimArena,
@@ -57,12 +70,24 @@ use crate::sim::{
 use crate::util::lru::LruCache;
 
 use super::{
-    app_fingerprint, drive_campaign, eval_key, fnv1a, join_campaigns,
-    panic_message, spec_fingerprint, CoordinatorStats, RunResult, SearchAlgo,
+    app_fingerprint, eval_key, fnv1a, panic_message, run_campaign_fleet,
+    spec_fingerprint, CoordinatorStats, RunResult, SearchAlgo,
 };
 
 /// Jobs a worker drains per wake-up.
 pub const BATCH_MAX: usize = 8;
+
+/// Default request priority (the middle of the `u8` range, so callers
+/// can go both above and below it).
+pub const PRIORITY_NORMAL: u8 = 128;
+
+/// Every `STARVE_RELIEF`-th pop serves a non-empty ring chosen by an
+/// ascending round-robin cursor instead of the highest ring, so
+/// sustained high-priority traffic can delay lower-priority campaigns
+/// but never starve *any* level outright (a lowest-only relief would
+/// still starve middle priorities between sustained high and low
+/// traffic).
+const STARVE_RELIEF: usize = 8;
 
 thread_local! {
     /// Per-thread reusable simulation arena: pool workers and
@@ -101,6 +126,20 @@ impl Default for CacheConfig {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SpecId(usize);
 
+impl SpecId {
+    /// The raw registry index (what the wire protocol ships; resolve it
+    /// back with [`SpecRegistry::by_index`]).
+    pub fn index(self) -> usize {
+        self.0
+    }
+
+    /// Rebuild a handle from a raw index *without* registry validation
+    /// — only for indices the (remote) registry itself handed out.
+    pub(crate) fn from_raw(index: usize) -> SpecId {
+        SpecId(index)
+    }
+}
+
 #[derive(Debug)]
 struct SpecEntry {
     name: String,
@@ -128,12 +167,44 @@ impl SpecRegistry {
     /// Register `spec` under `name`; returns the (possibly pre-existing)
     /// id.
     pub fn register(&self, name: &str, spec: MachineSpec) -> SpecId {
+        self.register_impl(name, spec, usize::MAX)
+            .expect("uncapped registration cannot be refused")
+    }
+
+    /// [`Self::register`] refusing to *grow* the registry past `cap`
+    /// entries (or its name table past `4 * cap` aliases) — the check
+    /// and the append happen under one write lock, so concurrent
+    /// registrations cannot overshoot the bound.  Dedup hits against
+    /// already-registered specs still succeed at the cap.  This is the
+    /// remote-registration entry point; local callers use the uncapped
+    /// [`Self::register`].
+    pub fn register_bounded(
+        &self,
+        name: &str,
+        spec: MachineSpec,
+        cap: usize,
+    ) -> Option<SpecId> {
+        self.register_impl(name, spec, cap)
+    }
+
+    fn register_impl(
+        &self,
+        name: &str,
+        spec: MachineSpec,
+        cap: usize,
+    ) -> Option<SpecId> {
+        let name_cap = cap.saturating_mul(4);
         let fp = spec_fingerprint(&spec);
         let mut g = self.inner.write().unwrap();
         if let Some(i) = g.specs.iter().position(|e| e.fp == fp) {
             match g.by_name.get(name) {
                 // structurally identical spec, new name: add the alias
+                // (aliases are bounded too — a dedup hit must not be a
+                // loophole for growing the name table without bound)
                 None => {
+                    if g.by_name.len() >= name_cap {
+                        return None;
+                    }
                     g.by_name.insert(name.to_string(), i);
                 }
                 Some(&bound) if bound != i => eprintln!(
@@ -143,7 +214,10 @@ impl SpecRegistry {
                 ),
                 Some(_) => {}
             }
-            return SpecId(i);
+            return Some(SpecId(i));
+        }
+        if g.specs.len() >= cap {
+            return None;
         }
         let i = g.specs.len();
         g.specs.push(Arc::new(SpecEntry { name: name.to_string(), spec, fp }));
@@ -160,7 +234,7 @@ impl SpecRegistry {
         } else {
             g.by_name.insert(name.to_string(), i);
         }
-        SpecId(i)
+        Some(SpecId(i))
     }
 
     /// Look a spec up by registered name (or alias).
@@ -176,6 +250,12 @@ impl SpecRegistry {
     /// Canonical (first-registered) name of an id.
     pub fn name(&self, id: SpecId) -> String {
         self.entry(id).name.clone()
+    }
+
+    /// Validate a raw registry index (e.g. off the wire) back into a
+    /// handle.
+    pub fn by_index(&self, index: usize) -> Option<SpecId> {
+        (index < self.len()).then_some(SpecId(index))
     }
 
     /// Canonical `(name, id)` pairs in registration order.
@@ -198,13 +278,119 @@ impl SpecRegistry {
 }
 
 /// One evaluation job: which machine, which app, which mapper, which
-/// engine.
+/// engine — and how urgently.
 #[derive(Debug, Clone)]
 pub struct EvalRequest {
     pub spec_id: SpecId,
     pub app: Arc<App>,
     pub dsl: String,
     pub mode: ExecMode,
+    /// Scheduling priority, higher first ([`PRIORITY_NORMAL`] default;
+    /// see the priority ring in the queue).  Requests of equal priority
+    /// stay FIFO.
+    pub priority: u8,
+}
+
+impl EvalRequest {
+    /// Request at [`PRIORITY_NORMAL`].
+    pub fn new(
+        spec_id: SpecId,
+        app: Arc<App>,
+        dsl: impl Into<String>,
+        mode: ExecMode,
+    ) -> EvalRequest {
+        EvalRequest {
+            spec_id,
+            app,
+            dsl: dsl.into(),
+            mode,
+            priority: PRIORITY_NORMAL,
+        }
+    }
+
+    /// Builder-style priority override.
+    pub fn with_priority(mut self, priority: u8) -> EvalRequest {
+        self.priority = priority;
+        self
+    }
+}
+
+/// The priority-aware ring behind the service queue: one FIFO ring per
+/// in-use priority level, popped highest-priority-first with a
+/// [`STARVE_RELIEF`] escape hatch (see its docs) — one flooding
+/// campaign can be *outranked* by others but can also never pin
+/// lower-priority work forever.
+struct PriorityRing<T> {
+    /// `priority -> FIFO ring`; empty rings are removed eagerly, so
+    /// iteration only sees live levels.
+    rings: BTreeMap<u8, VecDeque<T>>,
+    len: usize,
+    pops: usize,
+    /// Next level the starvation relief will serve (ascending,
+    /// wrapping): successive relief pops visit every live level, so no
+    /// priority waits longer than `STARVE_RELIEF x live levels` pops.
+    relief_cursor: u8,
+}
+
+impl<T> PriorityRing<T> {
+    fn new() -> PriorityRing<T> {
+        PriorityRing {
+            rings: BTreeMap::new(),
+            len: 0,
+            pops: 0,
+            relief_cursor: 0,
+        }
+    }
+
+    fn push(&mut self, priority: u8, item: T) {
+        self.rings.entry(priority).or_default().push_back(item);
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<T> {
+        let relief = (self.pops + 1) % STARVE_RELIEF == 0;
+        let key = if relief {
+            // round-robin over live levels from the cursor up (wrap to
+            // the lowest), so every level — not just the lowest — is
+            // guaranteed service under sustained higher traffic
+            self.rings
+                .range(self.relief_cursor..)
+                .map(|(k, _)| *k)
+                .next()
+                .or_else(|| self.rings.keys().next().copied())
+        } else {
+            self.rings.keys().next_back().copied()
+        }?;
+        if relief {
+            self.relief_cursor = key.wrapping_add(1);
+        }
+        self.pops += 1;
+        self.len -= 1;
+        let ring = self.rings.get_mut(&key).expect("live ring");
+        let item = ring.pop_front();
+        if ring.is_empty() {
+            self.rings.remove(&key);
+        }
+        item
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Jobs currently queued at `priority`.
+    fn depth_of(&self, priority: u8) -> usize {
+        self.rings.get(&priority).map_or(0, VecDeque::len)
+    }
+
+    /// `(priority, queued)` for every live level, ascending.
+    fn depths(&self) -> Vec<(u8, usize)> {
+        self.rings.iter().map(|(p, q)| (*p, q.len())).collect()
+    }
 }
 
 #[derive(Default)]
@@ -315,6 +501,19 @@ pub struct ServiceStats {
     batches: AtomicUsize,
     batched_jobs: AtomicUsize,
     per_spec: Mutex<Vec<SpecCounters>>,
+    /// Per-priority submission counters + high-water marks (the live
+    /// queued depth comes from the ring; see
+    /// [`EvalService::snapshot`]).
+    per_priority: Mutex<BTreeMap<u8, PriorityCounters>>,
+}
+
+/// Per-priority queue counters (see [`ServiceStats::priority_counters`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PriorityCounters {
+    /// Requests submitted at this priority.
+    pub submitted: usize,
+    /// High-water mark of this priority's ring.
+    pub max_depth: usize,
 }
 
 impl ServiceStats {
@@ -359,6 +558,72 @@ impl ServiceStats {
             g[id.0].evals += 1;
         }
     }
+
+    /// Submission counters of every priority level seen, ascending.
+    pub fn priority_counters(&self) -> Vec<(u8, PriorityCounters)> {
+        let g = self.per_priority.lock().unwrap();
+        g.iter().map(|(p, c)| (*p, *c)).collect()
+    }
+
+    fn note_priority(&self, priority: u8, depth_now: usize) {
+        let mut g = self.per_priority.lock().unwrap();
+        let c = g.entry(priority).or_default();
+        c.submitted += 1;
+        c.max_depth = c.max_depth.max(depth_now);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StatsSnapshot: the wire-friendly image of ServiceStats
+// ---------------------------------------------------------------------------
+
+/// One spec's counters in a [`StatsSnapshot`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SpecSnapshot {
+    pub name: String,
+    pub evals: u64,
+    pub cache_hits: u64,
+}
+
+/// One priority level's counters in a [`StatsSnapshot`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PrioritySnapshot {
+    pub priority: u8,
+    /// Requests submitted at this priority since service start.
+    pub submitted: u64,
+    /// High-water mark of this priority's ring.
+    pub max_depth: u64,
+    /// Jobs queued at this priority right now.
+    pub queued: u64,
+}
+
+/// Plain-data snapshot of [`ServiceStats`] (every counter loaded once),
+/// taken by [`EvalService::snapshot`] — what the wire protocol ships to
+/// remote clients, and a convenient local view for tests.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StatsSnapshot {
+    pub evals: u64,
+    pub cache_hits: u64,
+    /// Subset of `cache_hits` served by the semantic decision cache.
+    pub decision_hits: u64,
+    pub point_tasks: u64,
+    pub eval_ns: u64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub plan_builds: u64,
+    pub plan_hits: u64,
+    pub policy_compiles: u64,
+    pub policy_hits: u64,
+    pub evicted_feedback: u64,
+    pub evicted_plans: u64,
+    pub evicted_policies: u64,
+    pub evicted_decisions: u64,
+    pub max_queue_depth: u64,
+    pub batch_occupancy: f64,
+    /// Per-spec counters in registration order.
+    pub specs: Vec<SpecSnapshot>,
+    /// Per-priority counters, ascending priority.
+    pub priorities: Vec<PrioritySnapshot>,
 }
 
 /// One optimization campaign batch: `runs` seeded repetitions of an
@@ -380,6 +645,11 @@ pub struct Campaign {
     pub seed_offset: u64,
     pub runs: usize,
     pub iters: usize,
+    /// Queue priority of every evaluation this campaign submits
+    /// ([`PRIORITY_NORMAL`] for all pre-priority callers) — how one
+    /// campaign outranks (or yields to) its neighbours on a shared
+    /// service.
+    pub priority: u8,
 }
 
 impl Campaign {
@@ -398,7 +668,7 @@ struct Job {
 }
 
 struct JobQueue {
-    jobs: VecDeque<Job>,
+    jobs: PriorityRing<Job>,
     closed: bool,
 }
 
@@ -641,12 +911,18 @@ impl Inner {
             Err(ce) => return Served::Fresh(SystemFeedback::CompileError(ce)),
         };
         let Some(dep) = mode.dep_mode() else {
-            // bulk-sync has no DAG plan; run the legacy loop directly
-            let fb = match Executor::with_mode(&entry.spec, mode).execute(app, &policy)
-            {
-                Ok(m) => SystemFeedback::from_metrics(&m),
-                Err(xe) => SystemFeedback::ExecutionError(xe.to_string()),
-            };
+            // bulk-sync has no DAG plan; run the legacy loop directly —
+            // through the thread's reusable arena, so even the legacy
+            // engine allocates nothing structurally in steady state
+            let fb = ARENA.with(|a| {
+                let mut arena = a.borrow_mut();
+                match Executor::with_mode(&entry.spec, mode)
+                    .execute_in(app, &policy, &mut arena)
+                {
+                    Ok(m) => SystemFeedback::from_metrics(&m),
+                    Err(xe) => SystemFeedback::ExecutionError(xe.to_string()),
+                }
+            });
             return Served::Fresh(fb);
         };
         let plan = self.plan_for(app_fp, app, mode, dep);
@@ -702,11 +978,19 @@ fn worker_loop(inner: &Inner) {
             }
             // fair share of the backlog, capped at BATCH_MAX: under a
             // burst each worker gets ~len/pool jobs, so a single worker
-            // never drains the whole queue while its siblings idle
+            // never drains the whole queue while its siblings idle.
+            // Pops come off the priority ring (highest level first,
+            // FIFO within a level, with the starvation escape hatch).
             let take = q.jobs.len().div_ceil(inner.pool_size).min(BATCH_MAX);
-            let batch: Vec<Job> = q.jobs.drain(..take).collect();
+            let mut batch: Vec<Job> = Vec::with_capacity(take);
+            while batch.len() < take {
+                match q.jobs.pop() {
+                    Some(job) => batch.push(job),
+                    None => break,
+                }
+            }
             inner.not_full.notify_all();
-            inner.stats.note_batch(take);
+            inner.stats.note_batch(batch.len());
             batch
         };
         for job in batch {
@@ -764,7 +1048,7 @@ impl EvalService {
             decisions: Mutex::new(LruCache::new(caches.decision_cap)),
             in_flight: Mutex::new(HashMap::new()),
             stats: ServiceStats::default(),
-            queue: Mutex::new(JobQueue { jobs: VecDeque::new(), closed: false }),
+            queue: Mutex::new(JobQueue { jobs: PriorityRing::new(), closed: false }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             capacity: queue_capacity.max(1),
@@ -823,6 +1107,66 @@ impl EvalService {
         &self.inner.stats
     }
 
+    /// Plain-data snapshot of every counter (what [`Request::Stats`]
+    /// ships over the wire; also handy for local assertions).
+    ///
+    /// [`Request::Stats`]: crate::net::proto::Request::Stats
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let s = self.stats();
+        let depths: Vec<(u8, usize)> = {
+            let q = self.inner.queue.lock().unwrap();
+            q.jobs.depths()
+        };
+        let specs = self
+            .inner
+            .registry
+            .entries()
+            .into_iter()
+            .map(|(name, id)| {
+                let c = s.spec_counters(id);
+                SpecSnapshot {
+                    name,
+                    evals: c.evals as u64,
+                    cache_hits: c.cache_hits as u64,
+                }
+            })
+            .collect();
+        let priorities = s
+            .priority_counters()
+            .into_iter()
+            .map(|(priority, c)| PrioritySnapshot {
+                priority,
+                submitted: c.submitted as u64,
+                max_depth: c.max_depth as u64,
+                queued: depths
+                    .iter()
+                    .find(|(p, _)| *p == priority)
+                    .map_or(0, |(_, d)| *d as u64),
+            })
+            .collect();
+        StatsSnapshot {
+            evals: s.coord.evals.load(Ordering::Relaxed) as u64,
+            cache_hits: s.coord.cache_hits.load(Ordering::Relaxed) as u64,
+            decision_hits: s.decision_hits.load(Ordering::Relaxed) as u64,
+            point_tasks: s.coord.point_tasks.load(Ordering::Relaxed),
+            eval_ns: s.coord.eval_ns.load(Ordering::Relaxed),
+            submitted: s.submitted.load(Ordering::Relaxed) as u64,
+            completed: s.completed.load(Ordering::Relaxed) as u64,
+            plan_builds: s.plan_builds.load(Ordering::Relaxed) as u64,
+            plan_hits: s.plan_hits.load(Ordering::Relaxed) as u64,
+            policy_compiles: s.policy_compiles.load(Ordering::Relaxed) as u64,
+            policy_hits: s.policy_hits.load(Ordering::Relaxed) as u64,
+            evicted_feedback: s.evicted_feedback.load(Ordering::Relaxed) as u64,
+            evicted_plans: s.evicted_plans.load(Ordering::Relaxed) as u64,
+            evicted_policies: s.evicted_policies.load(Ordering::Relaxed) as u64,
+            evicted_decisions: s.evicted_decisions.load(Ordering::Relaxed) as u64,
+            max_queue_depth: s.max_queue_depth() as u64,
+            batch_occupancy: s.batch_occupancy(),
+            specs,
+            priorities,
+        }
+    }
+
     /// Entries in the shared cross-campaign (text-level) cache.
     pub fn cache_len(&self) -> usize {
         self.inner.cache.lock().unwrap().len()
@@ -862,17 +1206,23 @@ impl EvalService {
     }
 
     /// Enqueue a request; blocks while the queue is at capacity.
+    /// Higher-priority requests are drained first (FIFO within a
+    /// level), so one campaign cannot starve another that outranks it —
+    /// and the [`STARVE_RELIEF`] escape hatch keeps even the lowest
+    /// level moving.
     pub fn submit(&self, req: EvalRequest) -> EvalTicket {
         self.ensure_workers();
         let app_fp = app_fingerprint(&req.app);
+        let priority = req.priority;
         let slot = Arc::new(TicketSlot::default());
         {
             let mut q = self.inner.queue.lock().unwrap();
             while q.jobs.len() >= self.inner.capacity && !q.closed {
                 q = self.inner.not_full.wait(q).unwrap();
             }
-            q.jobs.push_back(Job { req, app_fp, slot: Arc::clone(&slot) });
+            q.jobs.push(priority, Job { req, app_fp, slot: Arc::clone(&slot) });
             self.inner.stats.note_depth(q.jobs.len());
+            self.inner.stats.note_priority(priority, q.jobs.depth_of(priority));
             self.inner.not_empty.notify_one();
         }
         self.inner.stats.submitted.fetch_add(1, Ordering::Relaxed);
@@ -894,33 +1244,32 @@ impl EvalService {
         self.run_campaigns_on(Arc::new(app), c)
     }
 
-    /// [`Self::run_campaigns`] for an already-built app.
+    /// [`Self::run_campaigns`] for an already-built app, through the
+    /// shared campaign-fanout scaffold (`run_campaign_fleet`).  Each run
+    /// carries a `ProposalFilter`: semantically duplicate proposals
+    /// (same resolved decision vector as an earlier proposal of the
+    /// same run) are answered from the run's local memo without ever
+    /// reaching the queue, counted in
+    /// [`RunResult::proposer_dupes`](super::RunResult) — so
+    /// `submitted == runs x iters - Σ proposer_dupes`.
     pub fn run_campaigns_on(
         &self,
         app: Arc<App>,
         c: Campaign,
     ) -> Result<Vec<RunResult>, String> {
-        let info = AppInfo::from_app(&app);
-        thread::scope(|scope| {
-            let handles: Vec<_> = (0..c.runs)
-                .map(|r| {
-                    let app = Arc::clone(&app);
-                    let info = info.clone();
-                    scope.spawn(move || {
-                        let eval = |src: &str| {
-                            self.submit(EvalRequest {
-                                spec_id: c.spec_id,
-                                app: Arc::clone(&app),
-                                dsl: src.to_string(),
-                                mode: c.mode,
-                            })
-                            .wait()
-                        };
-                        drive_campaign(&eval, info, c.algo, c.cfg, c.seed_for_run(r), c.iters)
-                    })
+        let spec = self.spec(c.spec_id);
+        run_campaign_fleet(&app, &spec, c, |_r| {
+            let app = Arc::clone(&app);
+            move |src: &str| {
+                self.submit(EvalRequest {
+                    spec_id: c.spec_id,
+                    app: Arc::clone(&app),
+                    dsl: src.to_string(),
+                    mode: c.mode,
+                    priority: c.priority,
                 })
-                .collect();
-            join_campaigns(handles)
+                .wait()
+            }
         })
     }
 
@@ -957,6 +1306,12 @@ impl EvalService {
                 c.evals,
                 c.cache_hits,
                 100.0 * c.hit_rate(),
+            ));
+        }
+        for (priority, c) in s.priority_counters() {
+            out.push_str(&format!(
+                "  priority {:>3}       submitted {:>5}  max depth {:>3}\n",
+                priority, c.submitted, c.max_depth,
             ));
         }
         out
@@ -1019,12 +1374,12 @@ mod tests {
         let p100 = s.spec_id("p100_cluster").unwrap();
         let app = Arc::new(apps::by_name("circuit").unwrap());
         let dsl = expert_dsl("circuit").unwrap();
-        let t = s.submit(EvalRequest {
-            spec_id: p100,
-            app: Arc::clone(&app),
-            dsl: dsl.to_string(),
-            mode: ExecMode::Serialized,
-        });
+        let t = s.submit(EvalRequest::new(
+            p100,
+            Arc::clone(&app),
+            dsl,
+            ExecMode::Serialized,
+        ));
         let fb = t.wait();
         assert!(fb.score() > 0.0);
         assert!(t.is_done());
@@ -1157,6 +1512,144 @@ mod tests {
     }
 
     #[test]
+    fn priority_ring_orders_high_first_fifo_within_level() {
+        let mut r: PriorityRing<u32> = PriorityRing::new();
+        assert!(r.is_empty());
+        r.push(PRIORITY_NORMAL, 1);
+        r.push(PRIORITY_NORMAL, 2);
+        r.push(200, 10);
+        r.push(10, 90);
+        r.push(200, 11);
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.depth_of(200), 2);
+        assert_eq!(r.depths(), vec![(10, 1), (PRIORITY_NORMAL, 2), (200, 2)]);
+        // strict highest-first, FIFO within a level
+        assert_eq!(r.pop(), Some(10));
+        assert_eq!(r.pop(), Some(11));
+        assert_eq!(r.pop(), Some(1));
+        assert_eq!(r.pop(), Some(2));
+        assert_eq!(r.pop(), Some(90));
+        assert_eq!(r.pop(), None);
+        assert_eq!(r.depths(), Vec::new());
+    }
+
+    #[test]
+    fn priority_ring_starvation_relief_reaches_the_lowest_level() {
+        let mut r: PriorityRing<u32> = PriorityRing::new();
+        // one low-priority job buried under sustained high priority
+        r.push(0, 999);
+        for i in 0..100u32 {
+            r.push(200, i);
+        }
+        let mut low_at = None;
+        for pop in 0..=100usize {
+            if r.pop() == Some(999) {
+                low_at = Some(pop);
+                break;
+            }
+        }
+        let low_at = low_at.expect("low-priority job never served");
+        assert!(
+            low_at < 2 * STARVE_RELIEF,
+            "strict priority starved the low ring for {low_at} pops"
+        );
+    }
+
+    #[test]
+    fn register_bounded_caps_growth_but_not_dedup_hits() {
+        let s = service();
+        assert_eq!(s.registry().len(), 2, "two preregistered specs");
+        // at cap: a structurally new spec is refused...
+        let mut wide = MachineSpec::p100_cluster();
+        wide.nodes = 4;
+        wide.gpus_per_node = 2;
+        assert!(s.registry().register_bounded("wide", wide.clone(), 2).is_none());
+        assert_eq!(s.registry().len(), 2);
+        // ...but a dedup hit against an existing spec still succeeds
+        let aliased = s
+            .registry()
+            .register_bounded("paper_alias", MachineSpec::p100_cluster(), 2)
+            .expect("dedup hits pass at the cap");
+        assert_eq!(Some(aliased), s.spec_id("p100_cluster"));
+        // with headroom the same spec registers fine
+        let id = s.registry().register_bounded("wide", wide, 3).expect("has room");
+        assert_eq!(s.registry().len(), 3);
+        assert_eq!(s.spec_id("wide"), Some(id));
+    }
+
+    #[test]
+    fn priority_ring_relief_rotates_through_middle_levels() {
+        // sustained high-priority traffic plus a low-priority stream
+        // must not starve the *middle* (default) level: the relief
+        // cursor rotates ascending over live levels
+        let mut r: PriorityRing<u32> = PriorityRing::new();
+        r.push(PRIORITY_NORMAL, 1111);
+        r.push(0, 2222);
+        for i in 0..200u32 {
+            r.push(250, i);
+        }
+        let mut mid_at = None;
+        let mut low_at = None;
+        for pop in 0..200usize {
+            match r.pop() {
+                Some(1111) => mid_at = Some(pop),
+                Some(2222) => low_at = Some(pop),
+                _ => {}
+            }
+            if mid_at.is_some() && low_at.is_some() {
+                break;
+            }
+        }
+        let (mid_at, low_at) =
+            (mid_at.expect("middle starved"), low_at.expect("lowest starved"));
+        // both buried levels surface within a few relief rounds
+        assert!(low_at < 3 * STARVE_RELIEF, "low served only at pop {low_at}");
+        assert!(mid_at < 3 * STARVE_RELIEF, "mid served only at pop {mid_at}");
+    }
+
+    #[test]
+    fn priorities_surface_in_stats_snapshot_and_summary() {
+        let s = service();
+        let p100 = s.spec_id("p100_cluster").unwrap();
+        let app = Arc::new(apps::by_name("circuit").unwrap());
+        let dsl = expert_dsl("circuit").unwrap();
+        let base = EvalRequest::new(p100, Arc::clone(&app), dsl, ExecMode::Serialized);
+        assert_eq!(base.priority, PRIORITY_NORMAL);
+        let t1 = s.submit(base.clone());
+        let t2 = s.submit(base.clone().with_priority(250));
+        let t3 = s.submit(base.with_priority(250));
+        t1.wait();
+        t2.wait();
+        t3.wait();
+        let counters = s.stats().priority_counters();
+        assert_eq!(
+            counters
+                .iter()
+                .map(|(p, c)| (*p, c.submitted))
+                .collect::<Vec<_>>(),
+            vec![(PRIORITY_NORMAL, 1), (250, 2)]
+        );
+        let snap = s.snapshot();
+        assert_eq!(snap.submitted, 3);
+        assert_eq!(snap.completed, 3);
+        assert_eq!(snap.evals + snap.cache_hits, 3);
+        assert_eq!(snap.priorities.len(), 2);
+        assert_eq!(snap.priorities[0].priority, PRIORITY_NORMAL);
+        assert_eq!(snap.priorities[1].priority, 250);
+        assert_eq!(snap.priorities[1].submitted, 2);
+        assert_eq!(
+            snap.priorities.iter().map(|p| p.queued).sum::<u64>(),
+            0,
+            "all tickets resolved, nothing still queued"
+        );
+        assert_eq!(snap.specs.len(), 2, "both preregistered specs listed");
+        assert_eq!(snap.specs[0].name, "p100_cluster");
+        let summary = s.summary();
+        assert!(summary.contains("priority 128"), "{summary}");
+        assert!(summary.contains("priority 250"), "{summary}");
+    }
+
+    #[test]
     fn campaigns_through_the_queue_are_deterministic() {
         let s = service();
         let small = s.spec_id("small").unwrap();
@@ -1170,6 +1663,7 @@ mod tests {
             seed_offset: 17,
             runs: 2,
             iters: 3,
+            priority: PRIORITY_NORMAL,
         };
         let a = s.run_campaigns("stencil", c).unwrap();
         let b = s.run_campaigns("stencil", c).unwrap();

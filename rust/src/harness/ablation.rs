@@ -12,7 +12,9 @@
 //! machine fingerprint, so shapes never alias).
 
 use crate::apps;
-use crate::coordinator::{Campaign, EvalService, SearchAlgo, SpecId};
+use crate::coordinator::{
+    Campaign, EvalService, SearchAlgo, SpecId, PRIORITY_NORMAL,
+};
 use crate::feedback::FeedbackConfig;
 use crate::machine::MachineSpec;
 use crate::mapping::expert_dsl;
@@ -75,6 +77,7 @@ pub fn machine_ablation(p: ExpParams) -> Vec<ShapeResult> {
                     seed_offset: 0,
                     runs: p.runs,
                     iters: p.iters,
+                    priority: PRIORITY_NORMAL,
                 },
             )
             .expect("cannon is registered");

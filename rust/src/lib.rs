@@ -25,6 +25,7 @@ pub mod feedback;
 pub mod harness;
 pub mod machine;
 pub mod mapping;
+pub mod net;
 pub mod optimizer;
 pub mod runtime;
 pub mod sim;

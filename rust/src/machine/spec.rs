@@ -117,7 +117,7 @@ impl fmt::Display for MemId {
 }
 
 /// Full machine description + performance constants.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MachineSpec {
     pub name: String,
     pub nodes: usize,

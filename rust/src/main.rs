@@ -9,14 +9,22 @@
 //!                               default), print metrics
 //!   optimize --app A [...]    — one optimization campaign, live log
 //!   bench-suite               — quick end-to-end status of all benchmarks
+//!   serve --addr HOST:PORT    — put the eval service behind a TCP
+//!                               listener (the wire protocol of net/)
 //!
 //! Common flags: --iters N --runs N --seed S --algo trace|opro
 //!               --feedback system|explain|full --workers N
+//!               --remote HOST:PORT (run a subcommand's evaluations
+//!               against a `serve` process instead of in-process;
+//!               `ablation` excepted — it registers its own sweep
+//!               shapes in a dedicated service)
 //!
-//! Every evaluation flows through one process-wide [`EvalService`] (the
-//! serving layer): the CLI's coordinator is a thin client of it, and the
-//! `all` / `bench-suite` subcommands print the service's queue/cache
-//! statistics on exit.
+//! Without `--remote`, every evaluation flows through one process-wide
+//! [`EvalService`] (the serving layer) and the CLI's coordinator is a
+//! thin client of it.  With `--remote ADDR`, the same coordinator
+//! speaks the wire protocol to a `mapperopt serve` process — campaigns,
+//! figures, and bench-suite run unmodified, scores bit-identical — and
+//! the `all` / `bench-suite` summaries are fetched from the server.
 
 use std::process::ExitCode;
 use std::sync::Arc;
@@ -26,6 +34,7 @@ use mapperopt::coordinator::{Coordinator, EvalService, SearchAlgo};
 use mapperopt::feedback::FeedbackConfig;
 use mapperopt::harness::{self, ExpParams};
 use mapperopt::mapping::expert_dsl;
+use mapperopt::net::EvalServer;
 use mapperopt::sim::ExecMode;
 use mapperopt::util::cli::Args;
 
@@ -40,13 +49,27 @@ fn main() -> ExitCode {
         seed: args.u64("seed", 0xA11CE),
     };
     let workers = args.usize("workers", 0);
-    let service = Arc::new(if workers > 0 {
-        EvalService::new(workers, 8 * workers)
-    } else {
-        EvalService::with_defaults()
-    });
-    let spec_id = service.spec_id("p100_cluster").expect("preregistered spec");
-    let coord = Coordinator::on_service(Arc::clone(&service), spec_id, ExecMode::Serialized);
+
+    if cmd == "serve" {
+        return cmd_serve(&args, workers);
+    }
+
+    let coord = match args.get("remote") {
+        Some(addr) => {
+            match Coordinator::remote(addr, "p100_cluster", ExecMode::Serialized) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::from(2);
+                }
+            }
+        }
+        None => {
+            let service = service_for(workers);
+            let spec_id = service.spec_id("p100_cluster").expect("preregistered spec");
+            Coordinator::on_service(service, spec_id, ExecMode::Serialized)
+        }
+    };
 
     match cmd {
         "table1" => {
@@ -65,6 +88,16 @@ fn main() -> ExitCode {
             harness::fig8(&coord, params);
         }
         "ablation" => {
+            if args.get("remote").is_some() {
+                // the sweep registers its own generated machine shapes in
+                // a dedicated multi-spec service; silently running it
+                // in-process would make --remote a lie
+                eprintln!(
+                    "ablation drives its own multi-spec service and does not \
+                     support --remote"
+                );
+                return ExitCode::from(2);
+            }
             harness::machine_ablation(params);
         }
         "all" => {
@@ -73,7 +106,7 @@ fn main() -> ExitCode {
             harness::fig6(&coord, params);
             harness::fig7(&coord, params);
             harness::fig8(&coord, params);
-            print!("\n{}", service.summary());
+            print!("\n{}", coord.summary());
         }
         "run" => return cmd_run(&coord, &args),
         "optimize" => return cmd_optimize(&coord, &args, params),
@@ -83,7 +116,7 @@ fn main() -> ExitCode {
                 let fb = coord.evaluate(&app, expert_dsl(name).unwrap());
                 println!("{name:10} {}", fb.line());
             }
-            print!("\n{}", service.summary());
+            print!("\n{}", coord.summary());
         }
         "help" => {
             usage();
@@ -98,11 +131,45 @@ fn main() -> ExitCode {
 
 fn usage() {
     println!(
-        "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite>\n\
+        "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite|serve>\n\
          flags: --app NAME --mapper FILE --algo trace|opro \
          --feedback system|explain|full|profile --iters N --runs N --seed S \
-         --workers N"
+         --workers N --remote HOST:PORT --addr HOST:PORT (serve)"
     );
+}
+
+/// The process-wide service: explicit worker count (queue sized to
+/// match) or host-derived defaults — one policy for the in-process and
+/// `serve` paths alike.
+fn service_for(workers: usize) -> Arc<EvalService> {
+    Arc::new(if workers > 0 {
+        EvalService::new(workers, 8 * workers)
+    } else {
+        EvalService::with_defaults()
+    })
+}
+
+/// `mapperopt serve --addr HOST:PORT [--workers N]`: one process-wide
+/// [`EvalService`] behind a TCP listener, serving every connected
+/// campaign process until killed.
+fn cmd_serve(args: &Args, workers: usize) -> ExitCode {
+    let addr = args.str_or("addr", "127.0.0.1:9377");
+    let service = service_for(workers);
+    match EvalServer::bind(addr, service) {
+        Ok(server) => {
+            println!(
+                "eval service listening on {} (p100_cluster + small preregistered; \
+                 Ctrl-C to stop)",
+                server.addr()
+            );
+            server.join();
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("cannot bind {addr}: {e}");
+            ExitCode::from(2)
+        }
+    }
 }
 
 fn cmd_run(coord: &Coordinator, args: &Args) -> ExitCode {
@@ -157,6 +224,12 @@ fn cmd_optimize(coord: &Coordinator, args: &Args, p: ExpParams) -> ExitCode {
             r.score,
             r.best_so_far,
             r.feedback.text().replace('\n', " | ")
+        );
+    }
+    if run.proposer_dupes > 0 {
+        println!(
+            "({} semantically duplicate proposals served from the run's memo)",
+            run.proposer_dupes
         );
     }
     if let Some((dsl, score)) = run.best {

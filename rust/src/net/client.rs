@@ -1,0 +1,341 @@
+//! The remote eval client: the cross-process face of
+//! [`EvalService`](crate::coordinator::EvalService), with the same
+//! `evaluate` / `submit`-plus-ticket shape — so campaigns drive a
+//! remote backend exactly like an in-process one (the
+//! `Coordinator`-compatible adapter is
+//! [`Coordinator::remote`](crate::coordinator::Coordinator::remote)).
+//!
+//! One socket carries any number of in-flight requests: senders
+//! serialize frames under the writer lock (pushing their reply slot in
+//! the same critical section, so slot order equals frame order) and a
+//! dedicated reader thread matches responses FIFO.  A dead connection
+//! resolves every outstanding and future ticket with a classified
+//! `Remote:` execution error instead of hanging or panicking.
+
+use std::collections::VecDeque;
+use std::io;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use crate::coordinator::StatsSnapshot;
+use crate::feedback::SystemFeedback;
+use crate::machine::MachineSpec;
+use crate::sim::ExecMode;
+
+use super::proto::{
+    self, Request, Response, Scenario, SpecRef, WireEvalRequest,
+};
+
+/// One awaited response slot (FIFO-matched by the reader thread).
+#[derive(Default)]
+struct ReplySlot {
+    done: Mutex<Option<Result<Response, String>>>,
+    cv: Condvar,
+}
+
+impl ReplySlot {
+    /// First fill wins (a send-side failure and the reader's drain can
+    /// race; both write errors, so either order is correct).
+    fn fill(&self, r: Result<Response, String>) {
+        let mut g = self.done.lock().unwrap();
+        if g.is_none() {
+            *g = Some(r);
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Result<Response, String> {
+        let mut g = self.done.lock().unwrap();
+        loop {
+            if let Some(r) = g.as_ref() {
+                return r.clone();
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn poll(&self) -> Option<Result<Response, String>> {
+        self.done.lock().unwrap().clone()
+    }
+}
+
+struct ClientInner {
+    /// Write half; also the lock that orders `pending` pushes.
+    writer: Mutex<TcpStream>,
+    /// Outstanding slots in frame order (reader pops front per frame).
+    pending: Mutex<VecDeque<Arc<ReplySlot>>>,
+    /// Set once the connection is unusable; new sends fail fast.
+    dead: AtomicBool,
+}
+
+impl ClientInner {
+    fn fail_all_pending(&self, msg: &str) {
+        let drained: Vec<Arc<ReplySlot>> =
+            self.pending.lock().unwrap().drain(..).collect();
+        for slot in drained {
+            slot.fill(Err(msg.to_string()));
+        }
+    }
+}
+
+/// Completion handle of one remote submission — the wire twin of
+/// [`EvalTicket`](crate::coordinator::EvalTicket).
+pub struct RemoteTicket {
+    slot: Arc<ReplySlot>,
+}
+
+impl RemoteTicket {
+    /// Block until the server answers (or the connection dies); every
+    /// non-feedback outcome is classified as an execution error, so
+    /// campaign code never sees a second error channel.
+    pub fn wait(&self) -> SystemFeedback {
+        feedback_of(self.slot.wait())
+    }
+
+    /// Non-blocking check; `Some` once the response arrived.
+    pub fn poll(&self) -> Option<SystemFeedback> {
+        self.slot.poll().map(feedback_of)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.slot.done.lock().unwrap().is_some()
+    }
+}
+
+fn feedback_of(r: Result<Response, String>) -> SystemFeedback {
+    match r {
+        Ok(Response::Feedback(fb)) => fb,
+        Ok(Response::Error { kind, msg }) => {
+            SystemFeedback::ExecutionError(format!("Remote {kind} error: {msg}"))
+        }
+        Ok(other) => SystemFeedback::ExecutionError(format!(
+            "Remote protocol error: expected feedback, got {}",
+            other.kind_name()
+        )),
+        Err(e) => SystemFeedback::ExecutionError(format!("Remote transport error: {e}")),
+    }
+}
+
+/// A connection to a remote [`EvalServer`](super::EvalServer) (see
+/// module docs).
+pub struct RemoteEvalClient {
+    inner: Arc<ClientInner>,
+    reader: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl RemoteEvalClient {
+    /// Connect and start the response-matching reader thread.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<RemoteEvalClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream.try_clone()?;
+        let inner = Arc::new(ClientInner {
+            writer: Mutex::new(stream),
+            pending: Mutex::new(VecDeque::new()),
+            dead: AtomicBool::new(false),
+        });
+        let rx_inner = Arc::clone(&inner);
+        let reader = thread::Builder::new()
+            .name("evalcli-read".into())
+            .spawn(move || reader_loop(read_half, rx_inner))?;
+        Ok(RemoteEvalClient { inner, reader: Mutex::new(Some(reader)) })
+    }
+
+    /// Send one request; the returned slot resolves when its response
+    /// arrives (FIFO).
+    fn send(&self, req: &Request) -> Arc<ReplySlot> {
+        let slot = Arc::new(ReplySlot::default());
+        if self.inner.dead.load(Ordering::SeqCst) {
+            slot.fill(Err("connection to eval server is closed".into()));
+            return slot;
+        }
+        let payload = req.encode();
+        let mut w = self.inner.writer.lock().unwrap();
+        // push under the writer lock: slot order == frame order, and
+        // the slot is queued before the server can possibly answer
+        self.inner.pending.lock().unwrap().push_back(Arc::clone(&slot));
+        let sent = proto::write_frame(&mut *w, &payload);
+        if let Err(e) = sent {
+            // the server will never answer this frame, so retract the
+            // slot — it is still the newest entry (pushes are serialized
+            // by the writer lock we hold, and responses only exist for
+            // *written* requests) — or FIFO matching would hand the next
+            // response to this dead slot and hang its real owner
+            {
+                let mut pending = self.inner.pending.lock().unwrap();
+                if pending.back().is_some_and(|s| Arc::ptr_eq(s, &slot)) {
+                    pending.pop_back();
+                }
+            }
+            // a frame rejected by the size guard never touched the
+            // socket — the connection stays usable; anything else may
+            // have written a partial frame, which is unrecoverable
+            if e.kind() != io::ErrorKind::InvalidInput {
+                self.inner.dead.store(true, Ordering::SeqCst);
+            }
+            slot.fill(Err(format!("send failed: {e}")));
+        }
+        drop(w);
+        slot
+    }
+
+    /// Send and block for the matched response.
+    fn request(&self, req: &Request) -> Result<Response, String> {
+        self.send(req).wait()
+    }
+
+    /// Send and unwrap one expected response variant: classified server
+    /// errors and variant mismatches both become the `Err` string, in
+    /// one place for every typed endpoint below.
+    fn expect<T>(
+        &self,
+        req: &Request,
+        what: &'static str,
+        extract: impl FnOnce(Response) -> Result<T, Response>,
+    ) -> Result<T, String> {
+        match self.request(req)? {
+            Response::Error { kind, msg } => Err(format!("{kind} error: {msg}")),
+            resp => extract(resp).map_err(|other| {
+                format!("expected {what}, got {}", other.kind_name())
+            }),
+        }
+    }
+
+    fn expect_spec_info(
+        &self,
+        req: &Request,
+    ) -> Result<(u32, String, MachineSpec), String> {
+        self.expect(req, "spec-info", |r| match r {
+            Response::SpecInfo { id, name, spec } => Ok((id, name, spec)),
+            other => Err(other),
+        })
+    }
+
+    /// Liveness probe (also a cheap protocol handshake check).
+    pub fn ping(&self) -> Result<(), String> {
+        self.expect(&Request::Ping, "pong", |r| match r {
+            Response::Pong => Ok(()),
+            other => Err(other),
+        })
+    }
+
+    /// Register (or alias) a machine spec in the server's registry;
+    /// returns the server-side spec id.
+    pub fn register_spec(&self, name: &str, spec: &MachineSpec) -> Result<u32, String> {
+        self.expect_spec_info(&Request::RegisterSpec {
+            name: name.to_string(),
+            spec: spec.clone(),
+        })
+        .map(|(id, _, _)| id)
+    }
+
+    /// Look up a registered spec by name: `(id, copy of the spec)`.
+    pub fn spec(&self, name: &str) -> Result<(u32, MachineSpec), String> {
+        self.expect_spec_info(&Request::GetSpec { name: name.to_string() })
+            .map(|(id, _, spec)| (id, spec))
+    }
+
+    /// Asynchronous evaluation: returns a ticket immediately; any
+    /// number may be in flight on this one connection.
+    pub fn submit(
+        &self,
+        spec: SpecRef,
+        scenario: Scenario,
+        dsl: String,
+        mode: ExecMode,
+        priority: u8,
+    ) -> RemoteTicket {
+        let slot = self.send(&Request::Eval(WireEvalRequest {
+            spec,
+            scenario,
+            dsl,
+            mode,
+            priority,
+        }));
+        RemoteTicket { slot }
+    }
+
+    /// Synchronous evaluation through the server's shared caches (the
+    /// remote mirror of `EvalService::evaluate`).
+    pub fn evaluate(
+        &self,
+        spec: SpecRef,
+        scenario: Scenario,
+        dsl: &str,
+        mode: ExecMode,
+        priority: u8,
+    ) -> SystemFeedback {
+        self.submit(spec, scenario, dsl.to_string(), mode, priority).wait()
+    }
+
+    /// Server-side [`StatsSnapshot`] (counters live with the service,
+    /// not the client).
+    pub fn stats(&self) -> Result<StatsSnapshot, String> {
+        self.expect(&Request::Stats, "stats", |r| match r {
+            Response::Stats(s) => Ok(s),
+            other => Err(other),
+        })
+    }
+
+    /// The server's human-readable `summary()` block.
+    pub fn summary(&self) -> Result<String, String> {
+        self.expect(&Request::Summary, "summary", |r| match r {
+            Response::Summary(s) => Ok(s),
+            other => Err(other),
+        })
+    }
+}
+
+impl Drop for RemoteEvalClient {
+    fn drop(&mut self) {
+        self.inner.dead.store(true, Ordering::SeqCst);
+        if let Ok(w) = self.inner.writer.lock() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn reader_loop(mut stream: TcpStream, inner: Arc<ClientInner>) {
+    let close_msg;
+    loop {
+        let result = match proto::read_frame(&mut stream) {
+            Ok(Some(payload)) => {
+                Response::decode(&payload).map_err(|e| e.to_string())
+            }
+            Ok(None) => {
+                close_msg = "connection to eval server is closed".to_string();
+                break;
+            }
+            Err(e) => {
+                close_msg = format!("connection to eval server failed: {e}");
+                break;
+            }
+        };
+        let slot = inner.pending.lock().unwrap().pop_front();
+        match slot {
+            Some(s) => s.fill(result),
+            None => {
+                // a frame with no awaiting request: either the server
+                // refused us up front (e.g. connection-capacity errors
+                // are sent before any request — surface that message),
+                // or the stream is out of sync beyond repair; tear the
+                // connection down either way
+                close_msg = match result {
+                    Ok(Response::Error { kind, msg }) => {
+                        format!("eval server refused the connection ({kind}): {msg}")
+                    }
+                    _ => "eval server sent an unsolicited response".to_string(),
+                };
+                break;
+            }
+        }
+    }
+    inner.dead.store(true, Ordering::SeqCst);
+    let _ = stream.shutdown(Shutdown::Both);
+    inner.fail_all_pending(&close_msg);
+}

@@ -1,0 +1,56 @@
+//! Cross-process serving (the PR 5 wire layer): a versioned binary
+//! protocol, a threaded TCP server, and a remote client — so
+//! optimization campaigns can live in *other processes* (or other
+//! machines) and hammer one shared, warm-cached
+//! [`EvalService`](crate::coordinator::EvalService).
+//!
+//! Zero external dependencies: framing and the codec are hand-rolled
+//! over `std::net` / `std::io`, like the rest of the crate's
+//! clap/criterion/proptest stand-ins.
+//!
+//! # Frame format
+//!
+//! Every message travels in one length-prefixed frame:
+//!
+//! ```text
+//! +----------------+------------------------------------------+
+//! | len: u32 LE    | payload (len bytes)                      |
+//! +----------------+------------------------------------------+
+//!                   payload = [version: u8][tag: u8][body...]
+//! ```
+//!
+//! * `len` counts the payload only (version byte included) and must be
+//!   in `1..=MAX_FRAME`; a length outside that range is an
+//!   unrecoverable framing error — the server answers a classified
+//!   [`proto::ErrorKind::Frame`] response and closes, since the stream
+//!   cannot be resynchronized.
+//! * The **version byte** ([`proto::WIRE_VERSION`]) leads every
+//!   payload, *outside* the versioned body, so any future version can
+//!   still be skipped frame-by-frame: a version-skewed frame is
+//!   answered with a classified [`proto::ErrorKind::Version`] response
+//!   and the connection keeps serving.
+//! * `tag` selects the [`proto::Request`] / [`proto::Response`]
+//!   variant; bodies are fixed-layout little-endian fields with
+//!   `u32`-length-prefixed UTF-8 strings, `u64`-bit `f64`s, and
+//!   `0/1` booleans.  Decoding is total: truncated, trailing,
+//!   non-UTF-8, or unknown-tag payloads produce
+//!   [`proto::DecodeError`]s, never panics — answered as classified
+//!   [`proto::ErrorKind::Decode`] responses, never connection aborts.
+//!
+//! # Pipelining
+//!
+//! Responses are delivered strictly in request order per connection, so
+//! a client may keep many requests in flight on one socket (the
+//! [`client::RemoteEvalClient`] reader thread matches responses FIFO,
+//! and the [`server::EvalServer`] per-connection writer resolves
+//! [`EvalTicket`](crate::coordinator::EvalTicket)s in arrival order
+//! while the evaluations themselves proceed concurrently on the
+//! service's worker pool).
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::{RemoteEvalClient, RemoteTicket};
+pub use proto::{Scenario, SpecRef, WIRE_VERSION};
+pub use server::EvalServer;

@@ -1,0 +1,1089 @@
+//! The wire codec: a versioned, length-prefixed binary protocol for the
+//! full [`EvalService`](crate::coordinator::EvalService) request /
+//! response surface (see the [module docs](super) for the frame
+//! layout).
+//!
+//! Hand-rolled like [`crate::util::hash`]: little-endian fixed-width
+//! integers, `u32`-length-prefixed UTF-8 strings, bit-cast `f64`s (so
+//! scores survive the wire *bit-identically*), and one tag byte per
+//! enum.  Every decoder is total — malformed bytes yield a classified
+//! [`DecodeError`], never a panic — and every encoder destructures its
+//! struct exhaustively, so adding a field without updating the codec is
+//! a compile error, not a silent wire skew.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use crate::coordinator::{PrioritySnapshot, SpecSnapshot, StatsSnapshot};
+use crate::feedback::SystemFeedback;
+use crate::machine::MachineSpec;
+use crate::sim::{CritEntry, ExecMode, PerfProfile};
+
+/// Protocol revision; bumped on any layout change.  Leads every payload
+/// so mismatched peers fail with a classified version error.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Upper bound on one frame's payload (DSL mappers, profiles, and stats
+/// snapshots are all well under this; anything larger is a framing
+/// error, not a legitimate message).
+pub const MAX_FRAME: usize = 8 << 20;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Why a payload failed to decode.  Total and panic-free by
+/// construction; servers answer these as classified error responses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The payload ended before its fields did.
+    Truncated,
+    /// The payload has bytes left after its last field.
+    Trailing(usize),
+    /// A string field is not valid UTF-8.
+    Utf8,
+    /// The payload speaks a protocol version this build does not.
+    Version(u8),
+    /// Unknown tag byte while decoding `what`.
+    UnknownTag(&'static str, u8),
+    /// Structurally well-formed but semantically impossible field.
+    Invalid(&'static str),
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::Truncated => write!(f, "truncated payload"),
+            DecodeError::Trailing(n) => write!(f, "{n} trailing bytes after payload"),
+            DecodeError::Utf8 => write!(f, "string field is not UTF-8"),
+            DecodeError::Version(got) => write!(
+                f,
+                "unsupported wire version {got} (this build speaks {WIRE_VERSION})"
+            ),
+            DecodeError::UnknownTag(what, tag) => {
+                write!(f, "unknown {what} tag {tag:#04x}")
+            }
+            DecodeError::Invalid(what) => write!(f, "invalid {what} field"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+impl DecodeError {
+    /// The classified error category a server reports for this failure.
+    pub fn wire_kind(&self) -> ErrorKind {
+        match self {
+            DecodeError::Version(_) => ErrorKind::Version,
+            _ => ErrorKind::Decode,
+        }
+    }
+}
+
+/// Classified error categories of [`Response::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Unrecoverable framing (length prefix outside `1..=MAX_FRAME`);
+    /// the server answers once and closes the connection.
+    Frame,
+    /// Version-skewed frame; the connection keeps serving.
+    Version,
+    /// Undecodable payload; the connection keeps serving.
+    Decode,
+    /// Well-formed request naming something the server does not have
+    /// (unknown spec, unknown app, bad scenario parameter).
+    BadRequest,
+    /// Server-side failure outside the evaluation path.
+    Internal,
+}
+
+impl ErrorKind {
+    fn code(self) -> u8 {
+        match self {
+            ErrorKind::Frame => 0,
+            ErrorKind::Version => 1,
+            ErrorKind::Decode => 2,
+            ErrorKind::BadRequest => 3,
+            ErrorKind::Internal => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<ErrorKind> {
+        match c {
+            0 => Some(ErrorKind::Frame),
+            1 => Some(ErrorKind::Version),
+            2 => Some(ErrorKind::Decode),
+            3 => Some(ErrorKind::BadRequest),
+            4 => Some(ErrorKind::Internal),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorKind::Frame => "framing",
+            ErrorKind::Version => "version",
+            ErrorKind::Decode => "decode",
+            ErrorKind::BadRequest => "bad-request",
+            ErrorKind::Internal => "internal",
+        }
+    }
+}
+
+impl fmt::Display for ErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Message types
+// ---------------------------------------------------------------------------
+
+/// A machine spec reference: the compact id a client obtained from
+/// [`Response::SpecInfo`], or a registered name resolved server-side.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecRef {
+    Id(u32),
+    Name(String),
+}
+
+/// Which app to evaluate: a registered app name plus named integer
+/// overrides of its default config (see [`crate::apps::scenario`]); an
+/// empty parameter list is exactly `apps::by_name`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scenario {
+    pub app: String,
+    pub params: Vec<(String, i64)>,
+}
+
+impl Scenario {
+    /// The default-config scenario of a registered app.
+    pub fn named(app: &str) -> Scenario {
+        Scenario { app: app.to_string(), params: Vec::new() }
+    }
+}
+
+/// One evaluation request as it travels the wire (the cross-process
+/// image of [`crate::coordinator::EvalRequest`]; the server rebuilds
+/// the `App` from the scenario).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireEvalRequest {
+    pub spec: SpecRef,
+    pub scenario: Scenario,
+    pub dsl: String,
+    pub mode: ExecMode,
+    /// Scheduling priority, higher first
+    /// ([`crate::coordinator::PRIORITY_NORMAL`] default).
+    pub priority: u8,
+}
+
+/// Client-to-server messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Liveness / handshake probe.
+    Ping,
+    /// Evaluate one mapper; answered with [`Response::Feedback`].
+    Eval(WireEvalRequest),
+    /// Register (or alias) a machine spec; answered with
+    /// [`Response::SpecInfo`].
+    RegisterSpec { name: String, spec: MachineSpec },
+    /// Look up a registered spec by name; answered with
+    /// [`Response::SpecInfo`] or a `BadRequest` error.
+    GetSpec { name: String },
+    /// Snapshot of [`crate::coordinator::ServiceStats`]; answered with
+    /// [`Response::Stats`].
+    Stats,
+    /// The human-readable `summary()` block; answered with
+    /// [`Response::Summary`].
+    Summary,
+}
+
+/// Server-to-client messages, delivered strictly in request order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Pong,
+    Feedback(SystemFeedback),
+    SpecInfo { id: u32, name: String, spec: MachineSpec },
+    Stats(StatsSnapshot),
+    Summary(String),
+    /// A classified protocol- or request-level failure (evaluation
+    /// failures travel as [`Response::Feedback`] carrying the usual
+    /// compile/execution-error feedback, exactly like in-process).
+    Error { kind: ErrorKind, msg: String },
+}
+
+// ---------------------------------------------------------------------------
+// Primitive encode / decode
+// ---------------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Enc {
+        Enc { buf: vec![WIRE_VERSION, tag] }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Check the version byte and position the cursor on the body;
+    /// returns the message tag.
+    fn new(payload: &'a [u8]) -> Result<(u8, Dec<'a>), DecodeError> {
+        if payload.len() < 2 {
+            return Err(DecodeError::Truncated);
+        }
+        if payload[0] != WIRE_VERSION {
+            return Err(DecodeError::Version(payload[0]));
+        }
+        Ok((payload[1], Dec { buf: payload, pos: 2 }))
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.buf.len() - self.pos < n {
+            return Err(DecodeError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool, DecodeError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(DecodeError::Invalid("bool")),
+        }
+    }
+
+    fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64, DecodeError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String, DecodeError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        std::str::from_utf8(bytes)
+            .map(str::to_string)
+            .map_err(|_| DecodeError::Utf8)
+    }
+
+    /// The payload must be fully consumed — trailing garbage is a
+    /// decode error, not silently ignored bytes.
+    fn finish(self) -> Result<(), DecodeError> {
+        let extra = self.buf.len() - self.pos;
+        if extra == 0 {
+            Ok(())
+        } else {
+            Err(DecodeError::Trailing(extra))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Domain-type codecs
+// ---------------------------------------------------------------------------
+
+fn enc_mode(e: &mut Enc, m: ExecMode) {
+    e.u8(match m {
+        ExecMode::BulkSync => 0,
+        ExecMode::Serialized => 1,
+        ExecMode::OutOfOrder => 2,
+    });
+}
+
+fn dec_mode(d: &mut Dec<'_>) -> Result<ExecMode, DecodeError> {
+    match d.u8()? {
+        0 => Ok(ExecMode::BulkSync),
+        1 => Ok(ExecMode::Serialized),
+        2 => Ok(ExecMode::OutOfOrder),
+        t => Err(DecodeError::UnknownTag("exec mode", t)),
+    }
+}
+
+fn enc_spec_ref(e: &mut Enc, s: &SpecRef) {
+    match s {
+        SpecRef::Id(i) => {
+            e.u8(0);
+            e.u32(*i);
+        }
+        SpecRef::Name(n) => {
+            e.u8(1);
+            e.str(n);
+        }
+    }
+}
+
+fn dec_spec_ref(d: &mut Dec<'_>) -> Result<SpecRef, DecodeError> {
+    match d.u8()? {
+        0 => Ok(SpecRef::Id(d.u32()?)),
+        1 => Ok(SpecRef::Name(d.str()?)),
+        t => Err(DecodeError::UnknownTag("spec ref", t)),
+    }
+}
+
+fn enc_scenario(e: &mut Enc, s: &Scenario) {
+    e.str(&s.app);
+    e.u32(s.params.len() as u32);
+    for (k, v) in &s.params {
+        e.str(k);
+        e.i64(*v);
+    }
+}
+
+fn dec_scenario(d: &mut Dec<'_>) -> Result<Scenario, DecodeError> {
+    let app = d.str()?;
+    let n = d.u32()? as usize;
+    let mut params = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        let k = d.str()?;
+        let v = d.i64()?;
+        params.push((k, v));
+    }
+    Ok(Scenario { app, params })
+}
+
+fn enc_machine_spec(e: &mut Enc, spec: &MachineSpec) {
+    // exhaustive destructure: a new MachineSpec field fails to compile
+    // here until the codec (and WIRE_VERSION) are updated
+    let MachineSpec {
+        name,
+        nodes,
+        gpus_per_node,
+        cpus_per_node,
+        omp_per_node,
+        sockets_per_node,
+        fbmem_capacity,
+        zcmem_capacity,
+        sysmem_capacity,
+        rdma_capacity,
+        gpu_gflops,
+        cpu_gflops,
+        omp_gflops,
+        fbmem_bw,
+        sysmem_bw,
+        zcmem_gpu_bw,
+        zcmem_cpu_bw,
+        sockmem_bw,
+        pcie_bw,
+        pcie_lat_us,
+        p2p_bw,
+        nic_bw,
+        nic_lat_us,
+        gpu_launch_us,
+        cpu_spawn_us,
+        omp_spawn_us,
+    } = spec;
+    e.str(name);
+    e.u64(*nodes as u64);
+    e.u64(*gpus_per_node as u64);
+    e.u64(*cpus_per_node as u64);
+    e.u64(*omp_per_node as u64);
+    e.u64(*sockets_per_node as u64);
+    e.u64(*fbmem_capacity);
+    e.u64(*zcmem_capacity);
+    e.u64(*sysmem_capacity);
+    e.u64(*rdma_capacity);
+    e.f64(*gpu_gflops);
+    e.f64(*cpu_gflops);
+    e.f64(*omp_gflops);
+    e.f64(*fbmem_bw);
+    e.f64(*sysmem_bw);
+    e.f64(*zcmem_gpu_bw);
+    e.f64(*zcmem_cpu_bw);
+    e.f64(*sockmem_bw);
+    e.f64(*pcie_bw);
+    e.f64(*pcie_lat_us);
+    e.f64(*p2p_bw);
+    e.f64(*nic_bw);
+    e.f64(*nic_lat_us);
+    e.f64(*gpu_launch_us);
+    e.f64(*cpu_spawn_us);
+    e.f64(*omp_spawn_us);
+}
+
+fn dec_machine_spec(d: &mut Dec<'_>) -> Result<MachineSpec, DecodeError> {
+    Ok(MachineSpec {
+        name: d.str()?,
+        nodes: d.u64()? as usize,
+        gpus_per_node: d.u64()? as usize,
+        cpus_per_node: d.u64()? as usize,
+        omp_per_node: d.u64()? as usize,
+        sockets_per_node: d.u64()? as usize,
+        fbmem_capacity: d.u64()?,
+        zcmem_capacity: d.u64()?,
+        sysmem_capacity: d.u64()?,
+        rdma_capacity: d.u64()?,
+        gpu_gflops: d.f64()?,
+        cpu_gflops: d.f64()?,
+        omp_gflops: d.f64()?,
+        fbmem_bw: d.f64()?,
+        sysmem_bw: d.f64()?,
+        zcmem_gpu_bw: d.f64()?,
+        zcmem_cpu_bw: d.f64()?,
+        sockmem_bw: d.f64()?,
+        pcie_bw: d.f64()?,
+        pcie_lat_us: d.f64()?,
+        p2p_bw: d.f64()?,
+        nic_bw: d.f64()?,
+        nic_lat_us: d.f64()?,
+        gpu_launch_us: d.f64()?,
+        cpu_spawn_us: d.f64()?,
+        omp_spawn_us: d.f64()?,
+    })
+}
+
+fn enc_profile(e: &mut Enc, p: &PerfProfile) {
+    let PerfProfile {
+        engine,
+        critical_path_s,
+        critical_tasks,
+        total_tasks,
+        bottlenecks,
+        mean_idle,
+        worst_idle,
+        worst_idle_proc,
+        mean_slack_s,
+        zero_slack_tasks,
+    } = p;
+    e.str(engine);
+    e.f64(*critical_path_s);
+    e.u64(*critical_tasks as u64);
+    e.u64(*total_tasks as u64);
+    e.u32(bottlenecks.len() as u32);
+    for b in bottlenecks {
+        let CritEntry { task, instances, seconds, share } = b;
+        e.str(task);
+        e.u64(*instances as u64);
+        e.f64(*seconds);
+        e.f64(*share);
+    }
+    e.f64(*mean_idle);
+    e.f64(*worst_idle);
+    e.str(worst_idle_proc);
+    e.f64(*mean_slack_s);
+    e.u64(*zero_slack_tasks as u64);
+}
+
+fn dec_profile(d: &mut Dec<'_>) -> Result<PerfProfile, DecodeError> {
+    // `engine` is `&'static str` in-process; map the known names back
+    let engine = match d.str()?.as_str() {
+        "serialized" => "serialized",
+        "out-of-order" => "out-of-order",
+        "bulk-sync" => "bulk-sync",
+        _ => return Err(DecodeError::Invalid("profile engine")),
+    };
+    let critical_path_s = d.f64()?;
+    let critical_tasks = d.u64()? as usize;
+    let total_tasks = d.u64()? as usize;
+    let n = d.u32()? as usize;
+    let mut bottlenecks = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        bottlenecks.push(CritEntry {
+            task: d.str()?,
+            instances: d.u64()? as usize,
+            seconds: d.f64()?,
+            share: d.f64()?,
+        });
+    }
+    Ok(PerfProfile {
+        engine,
+        critical_path_s,
+        critical_tasks,
+        total_tasks,
+        bottlenecks,
+        mean_idle: d.f64()?,
+        worst_idle: d.f64()?,
+        worst_idle_proc: d.str()?,
+        mean_slack_s: d.f64()?,
+        zero_slack_tasks: d.u64()? as usize,
+    })
+}
+
+fn enc_feedback(e: &mut Enc, fb: &SystemFeedback) {
+    match fb {
+        SystemFeedback::CompileError(msg) => {
+            e.u8(0);
+            e.str(msg);
+        }
+        SystemFeedback::ExecutionError(msg) => {
+            e.u8(1);
+            e.str(msg);
+        }
+        SystemFeedback::Performance { line, value, profile } => {
+            e.u8(2);
+            e.str(line);
+            e.f64(*value);
+            match profile {
+                None => e.bool(false),
+                Some(p) => {
+                    e.bool(true);
+                    enc_profile(e, p);
+                }
+            }
+        }
+    }
+}
+
+fn dec_feedback(d: &mut Dec<'_>) -> Result<SystemFeedback, DecodeError> {
+    match d.u8()? {
+        0 => Ok(SystemFeedback::CompileError(d.str()?)),
+        1 => Ok(SystemFeedback::ExecutionError(d.str()?)),
+        2 => {
+            let line = d.str()?;
+            let value = d.f64()?;
+            let profile = if d.bool()? { Some(dec_profile(d)?) } else { None };
+            Ok(SystemFeedback::Performance { line, value, profile })
+        }
+        t => Err(DecodeError::UnknownTag("feedback", t)),
+    }
+}
+
+fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
+    let StatsSnapshot {
+        evals,
+        cache_hits,
+        decision_hits,
+        point_tasks,
+        eval_ns,
+        submitted,
+        completed,
+        plan_builds,
+        plan_hits,
+        policy_compiles,
+        policy_hits,
+        evicted_feedback,
+        evicted_plans,
+        evicted_policies,
+        evicted_decisions,
+        max_queue_depth,
+        batch_occupancy,
+        specs,
+        priorities,
+    } = s;
+    e.u64(*evals);
+    e.u64(*cache_hits);
+    e.u64(*decision_hits);
+    e.u64(*point_tasks);
+    e.u64(*eval_ns);
+    e.u64(*submitted);
+    e.u64(*completed);
+    e.u64(*plan_builds);
+    e.u64(*plan_hits);
+    e.u64(*policy_compiles);
+    e.u64(*policy_hits);
+    e.u64(*evicted_feedback);
+    e.u64(*evicted_plans);
+    e.u64(*evicted_policies);
+    e.u64(*evicted_decisions);
+    e.u64(*max_queue_depth);
+    e.f64(*batch_occupancy);
+    e.u32(specs.len() as u32);
+    for sp in specs {
+        let SpecSnapshot { name, evals, cache_hits } = sp;
+        e.str(name);
+        e.u64(*evals);
+        e.u64(*cache_hits);
+    }
+    e.u32(priorities.len() as u32);
+    for p in priorities {
+        let PrioritySnapshot { priority, submitted, max_depth, queued } = p;
+        e.u8(*priority);
+        e.u64(*submitted);
+        e.u64(*max_depth);
+        e.u64(*queued);
+    }
+}
+
+fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
+    let evals = d.u64()?;
+    let cache_hits = d.u64()?;
+    let decision_hits = d.u64()?;
+    let point_tasks = d.u64()?;
+    let eval_ns = d.u64()?;
+    let submitted = d.u64()?;
+    let completed = d.u64()?;
+    let plan_builds = d.u64()?;
+    let plan_hits = d.u64()?;
+    let policy_compiles = d.u64()?;
+    let policy_hits = d.u64()?;
+    let evicted_feedback = d.u64()?;
+    let evicted_plans = d.u64()?;
+    let evicted_policies = d.u64()?;
+    let evicted_decisions = d.u64()?;
+    let max_queue_depth = d.u64()?;
+    let batch_occupancy = d.f64()?;
+    let nspecs = d.u32()? as usize;
+    let mut specs = Vec::with_capacity(nspecs.min(1024));
+    for _ in 0..nspecs {
+        specs.push(SpecSnapshot {
+            name: d.str()?,
+            evals: d.u64()?,
+            cache_hits: d.u64()?,
+        });
+    }
+    let nprio = d.u32()? as usize;
+    let mut priorities = Vec::with_capacity(nprio.min(1024));
+    for _ in 0..nprio {
+        priorities.push(PrioritySnapshot {
+            priority: d.u8()?,
+            submitted: d.u64()?,
+            max_depth: d.u64()?,
+            queued: d.u64()?,
+        });
+    }
+    Ok(StatsSnapshot {
+        evals,
+        cache_hits,
+        decision_hits,
+        point_tasks,
+        eval_ns,
+        submitted,
+        completed,
+        plan_builds,
+        plan_hits,
+        policy_compiles,
+        policy_hits,
+        evicted_feedback,
+        evicted_plans,
+        evicted_policies,
+        evicted_decisions,
+        max_queue_depth,
+        batch_occupancy,
+        specs,
+        priorities,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Top-level messages
+// ---------------------------------------------------------------------------
+
+impl Request {
+    /// Serialize into one frame payload (`[version][tag][body]`).
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Request::Ping => Enc::new(0).buf,
+            Request::Eval(q) => {
+                let mut e = Enc::new(1);
+                enc_spec_ref(&mut e, &q.spec);
+                enc_scenario(&mut e, &q.scenario);
+                e.str(&q.dsl);
+                enc_mode(&mut e, q.mode);
+                e.u8(q.priority);
+                e.buf
+            }
+            Request::RegisterSpec { name, spec } => {
+                let mut e = Enc::new(2);
+                e.str(name);
+                enc_machine_spec(&mut e, spec);
+                e.buf
+            }
+            Request::GetSpec { name } => {
+                let mut e = Enc::new(3);
+                e.str(name);
+                e.buf
+            }
+            Request::Stats => Enc::new(4).buf,
+            Request::Summary => Enc::new(5).buf,
+        }
+    }
+
+    /// Total inverse of [`Request::encode`].
+    pub fn decode(payload: &[u8]) -> Result<Request, DecodeError> {
+        let (tag, mut d) = Dec::new(payload)?;
+        let req = match tag {
+            0 => Request::Ping,
+            1 => Request::Eval(WireEvalRequest {
+                spec: dec_spec_ref(&mut d)?,
+                scenario: dec_scenario(&mut d)?,
+                dsl: d.str()?,
+                mode: dec_mode(&mut d)?,
+                priority: d.u8()?,
+            }),
+            2 => Request::RegisterSpec {
+                name: d.str()?,
+                spec: dec_machine_spec(&mut d)?,
+            },
+            3 => Request::GetSpec { name: d.str()? },
+            4 => Request::Stats,
+            5 => Request::Summary,
+            t => return Err(DecodeError::UnknownTag("request", t)),
+        };
+        d.finish()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    /// Serialize into one frame payload (`[version][tag][body]`).
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Response::Pong => Enc::new(0).buf,
+            Response::Feedback(fb) => {
+                let mut e = Enc::new(1);
+                enc_feedback(&mut e, fb);
+                e.buf
+            }
+            Response::SpecInfo { id, name, spec } => {
+                let mut e = Enc::new(2);
+                e.u32(*id);
+                e.str(name);
+                enc_machine_spec(&mut e, spec);
+                e.buf
+            }
+            Response::Stats(s) => {
+                let mut e = Enc::new(3);
+                enc_snapshot(&mut e, s);
+                e.buf
+            }
+            Response::Summary(s) => {
+                let mut e = Enc::new(4);
+                e.str(s);
+                e.buf
+            }
+            Response::Error { kind, msg } => {
+                let mut e = Enc::new(5);
+                e.u8(kind.code());
+                e.str(msg);
+                e.buf
+            }
+        }
+    }
+
+    /// Total inverse of [`Response::encode`].
+    pub fn decode(payload: &[u8]) -> Result<Response, DecodeError> {
+        let (tag, mut d) = Dec::new(payload)?;
+        let resp = match tag {
+            0 => Response::Pong,
+            1 => Response::Feedback(dec_feedback(&mut d)?),
+            2 => Response::SpecInfo {
+                id: d.u32()?,
+                name: d.str()?,
+                spec: dec_machine_spec(&mut d)?,
+            },
+            3 => Response::Stats(dec_snapshot(&mut d)?),
+            4 => Response::Summary(d.str()?),
+            5 => {
+                let kind = ErrorKind::from_code(d.u8()?)
+                    .ok_or(DecodeError::Invalid("error kind"))?;
+                Response::Error { kind, msg: d.str()? }
+            }
+            t => return Err(DecodeError::UnknownTag("response", t)),
+        };
+        d.finish()?;
+        Ok(resp)
+    }
+
+    /// Short variant name (diagnostics; avoids dumping whole payloads
+    /// into error strings).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Response::Pong => "pong",
+            Response::Feedback(_) => "feedback",
+            Response::SpecInfo { .. } => "spec-info",
+            Response::Stats(_) => "stats",
+            Response::Summary(_) => "summary",
+            Response::Error { .. } => "error",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Write one `len ++ payload` frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    if payload.is_empty() || payload.len() > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("refusing to write a {}-byte frame", payload.len()),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame payload.  `Ok(None)` is a clean end-of-stream (EOF at
+/// a frame boundary); `Err` with [`io::ErrorKind::InvalidData`] is an
+/// unrecoverable framing error (length prefix outside `1..=MAX_FRAME`,
+/// or EOF partway through the prefix — either way the stream cannot be
+/// resynchronized); other errors are transport failures.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
+    // read the length prefix byte-wise so an EOF *inside* it (a peer
+    // dying mid-frame) is distinguishable from a clean close *before*
+    // it — read_exact cannot tell the two apart
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    while got < len.len() {
+        match r.read(&mut len[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None) // clean end-of-stream at a frame boundary
+                } else {
+                    Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("stream ended {got} bytes into a frame length prefix"),
+                    ))
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n == 0 || n > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {n} outside 1..={MAX_FRAME}"),
+        ));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_profile() -> PerfProfile {
+        PerfProfile {
+            engine: "out-of-order",
+            critical_path_s: 0.0295,
+            critical_tasks: 40,
+            total_tasks: 240,
+            bottlenecks: vec![CritEntry {
+                task: "calculate_new_currents".into(),
+                instances: 10,
+                seconds: 0.021,
+                share: 0.71,
+            }],
+            mean_idle: 0.34,
+            worst_idle: 0.61,
+            worst_idle_proc: "GPU3@n1".into(),
+            mean_slack_s: 0.0011,
+            zero_slack_tasks: 40,
+        }
+    }
+
+    fn roundtrip_req(r: &Request) {
+        let bytes = r.encode();
+        assert_eq!(bytes[0], WIRE_VERSION);
+        assert_eq!(&Request::decode(&bytes).unwrap(), r, "request roundtrip");
+    }
+
+    fn roundtrip_resp(r: &Response) {
+        let bytes = r.encode();
+        assert_eq!(bytes[0], WIRE_VERSION);
+        assert_eq!(&Response::decode(&bytes).unwrap(), r, "response roundtrip");
+    }
+
+    #[test]
+    fn every_request_variant_roundtrips() {
+        roundtrip_req(&Request::Ping);
+        roundtrip_req(&Request::Eval(WireEvalRequest {
+            spec: SpecRef::Name("p100_cluster".into()),
+            scenario: Scenario {
+                app: "stencil3d".into(),
+                params: vec![("px".into(), 8), ("steps".into(), 3)],
+            },
+            dsl: "Task * GPU;\nRegion * * GPU FBMEM;\n".into(),
+            mode: ExecMode::OutOfOrder,
+            priority: 200,
+        }));
+        roundtrip_req(&Request::Eval(WireEvalRequest {
+            spec: SpecRef::Id(3),
+            scenario: Scenario::named("circuit"),
+            dsl: String::new(),
+            mode: ExecMode::BulkSync,
+            priority: 0,
+        }));
+        roundtrip_req(&Request::RegisterSpec {
+            name: "wide".into(),
+            spec: MachineSpec::small(),
+        });
+        roundtrip_req(&Request::GetSpec { name: "small".into() });
+        roundtrip_req(&Request::Stats);
+        roundtrip_req(&Request::Summary);
+    }
+
+    #[test]
+    fn every_response_variant_roundtrips() {
+        roundtrip_resp(&Response::Pong);
+        roundtrip_resp(&Response::Feedback(SystemFeedback::CompileError(
+            "mgpu not found".into(),
+        )));
+        roundtrip_resp(&Response::Feedback(SystemFeedback::ExecutionError(
+            "Out of memory: FBMEM0@n0 capacity 1 bytes exceeded (need 2)".into(),
+        )));
+        roundtrip_resp(&Response::Feedback(SystemFeedback::Performance {
+            line: "Performance Metric: Achieved throughput = 4877 GFLOPS".into(),
+            value: 4877.25,
+            profile: None,
+        }));
+        roundtrip_resp(&Response::Feedback(SystemFeedback::Performance {
+            line: "Performance Metric: Execution time is 0.0300s.".into(),
+            value: 33.0,
+            profile: Some(sample_profile()),
+        }));
+        roundtrip_resp(&Response::SpecInfo {
+            id: 1,
+            name: "small".into(),
+            spec: MachineSpec::small(),
+        });
+        roundtrip_resp(&Response::Stats(StatsSnapshot {
+            evals: 10,
+            cache_hits: 7,
+            batch_occupancy: 1.75,
+            specs: vec![SpecSnapshot {
+                name: "p100_cluster".into(),
+                evals: 10,
+                cache_hits: 7,
+            }],
+            priorities: vec![PrioritySnapshot {
+                priority: 128,
+                submitted: 17,
+                max_depth: 4,
+                queued: 1,
+            }],
+            ..StatsSnapshot::default()
+        }));
+        roundtrip_resp(&Response::Summary("eval service: 3 evals\n".into()));
+        roundtrip_resp(&Response::Error {
+            kind: ErrorKind::BadRequest,
+            msg: "unknown machine spec 'nope'".into(),
+        });
+    }
+
+    #[test]
+    fn scores_survive_the_wire_bit_identically() {
+        // f64s travel as raw bits: subnormals, negatives, and values with
+        // no short decimal representation must all come back bit-equal
+        for value in [0.1 + 0.2, f64::MIN_POSITIVE, -1.0 / 3.0, 1e300] {
+            let fb = SystemFeedback::Performance {
+                line: "Performance Metric: Execution time is 0.0300s.".into(),
+                value,
+                profile: None,
+            };
+            let bytes = Response::Feedback(fb.clone()).encode();
+            match Response::decode(&bytes).unwrap() {
+                Response::Feedback(got) => {
+                    assert_eq!(got.score().to_bits(), value.to_bits());
+                    assert_eq!(got, fb);
+                }
+                other => panic!("wrong variant {}", other.kind_name()),
+            }
+        }
+    }
+
+    #[test]
+    fn version_skew_classifies_not_panics() {
+        let mut bytes = Request::Ping.encode();
+        bytes[0] = WIRE_VERSION + 1;
+        let err = Request::decode(&bytes).unwrap_err();
+        assert_eq!(err, DecodeError::Version(WIRE_VERSION + 1));
+        assert_eq!(err.wire_kind(), ErrorKind::Version);
+        assert!(err.to_string().contains("unsupported wire version"));
+    }
+
+    #[test]
+    fn truncation_and_trailing_classify_not_panic() {
+        let bytes = Request::GetSpec { name: "p100_cluster".into() }.encode();
+        for cut in 0..bytes.len() {
+            let err = Request::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, DecodeError::Truncated | DecodeError::Version(_)),
+                "cut at {cut}: unexpected {err:?}"
+            );
+        }
+        let mut long = bytes.clone();
+        long.push(0xEE);
+        assert_eq!(Request::decode(&long).unwrap_err(), DecodeError::Trailing(1));
+        assert_eq!(
+            Request::decode(&[WIRE_VERSION, 0xFE]).unwrap_err(),
+            DecodeError::UnknownTag("request", 0xFE)
+        );
+        assert_eq!(err_kind_of(&DecodeError::Truncated), ErrorKind::Decode);
+    }
+
+    fn err_kind_of(e: &DecodeError) -> ErrorKind {
+        e.wire_kind()
+    }
+
+    #[test]
+    fn frames_roundtrip_and_reject_bad_lengths() {
+        let payload = Request::Stats.encode();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &payload).unwrap();
+        write_frame(&mut wire, &payload).unwrap();
+        let mut r = wire.as_slice();
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), payload);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), payload);
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+
+        // zero-length and oversized prefixes are unrecoverable framing
+        let mut zero = 0u32.to_le_bytes().to_vec();
+        zero.extend_from_slice(&payload);
+        let err = read_frame(&mut zero.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        let err = read_frame(&mut huge.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(write_frame(&mut Vec::new(), &[]).is_err());
+    }
+}

@@ -1,0 +1,350 @@
+//! The threaded TCP eval server: drains decoded requests into one
+//! shared [`EvalService`], so remote clients hit the same feedback /
+//! plan / policy / decision caches and in-flight deduplication as
+//! local ones.
+//!
+//! One thread accepts connections; each connection gets a reader thread
+//! (this one) plus a writer thread.  The reader decodes frames and
+//! turns them into replies *immediately* — synchronous requests resolve
+//! inline, evaluations become [`EvalTicket`]s submitted to the
+//! service's priority queue — and hands them to the writer in arrival
+//! order.  The writer waits each ticket and encodes the response, so
+//! responses keep request order (the client matches FIFO) while the
+//! evaluations themselves run concurrently on the service's worker
+//! pool, interleaved with every other client's.
+//!
+//! Fault containment: framing errors, version skew, undecodable
+//! payloads, unknown specs/apps, and worker panics are all answered as
+//! classified responses ([`proto::Response::Error`] or error-carrying
+//! feedback), never connection aborts — the only hard close is an
+//! unrecoverable length prefix, answered first.
+
+use std::io;
+use std::net::{
+    IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream,
+};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use crate::apps;
+use crate::coordinator::{EvalRequest, EvalService, EvalTicket};
+
+use super::proto::{
+    self, ErrorKind, Request, Response, SpecRef, WireEvalRequest,
+};
+
+/// One queued reply: either ready now (sync requests, protocol errors)
+/// or a ticket the writer resolves in order.
+enum Reply {
+    Now(Response),
+    Ticket(EvalTicket),
+}
+
+/// Releases one connection slot on drop — including when the
+/// connection handler panics, so a fault can never leak capacity.
+struct ConnSlot(Arc<AtomicUsize>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Per-request budget on the simulated task graph a remote scenario may
+/// ask for: `apps::scenario`'s per-parameter bounds keep the arithmetic
+/// sane, but a product of in-range extents can still describe a graph
+/// whose materialization would exhaust memory — and an allocation
+/// failure *aborts* the shared server (it does not unwind into the
+/// worker-panic containment).  Oversized scenarios classify as bad
+/// requests instead.
+const MAX_REQUEST_POINT_TASKS: i64 = 1 << 24;
+
+/// Registered machine specs are deduplicated by fingerprint but the
+/// registry itself is append-only (ids must stay stable), so remote
+/// registration is capped — the one piece of service state a client
+/// could otherwise grow without bound.
+const MAX_REGISTERED_SPECS: usize = 1024;
+
+/// Registry entries live forever and their names are re-cloned by every
+/// summary/stats request, so a registered name (the alias *and* the
+/// name embedded in the spec) may not exceed this — otherwise the entry
+/// cap above still admits gigabytes of hostile name bytes.
+const MAX_SPEC_NAME_BYTES: usize = 256;
+
+/// Each connection costs two OS threads (reader + writer) and a cloned
+/// socket; beyond this many concurrent connections the server answers a
+/// classified capacity error and closes instead of exhausting
+/// threads/fds under a reconnect storm.
+const MAX_CONNECTIONS: usize = 256;
+
+/// A TCP front over one shared [`EvalService`] (see module docs).
+/// Binding spawns the accept loop; [`EvalServer::join`] blocks for a
+/// serve-forever process, dropping (or [`EvalServer::shutdown`]) stops
+/// accepting and joins the acceptor.  Established connections run to
+/// client disconnect.
+pub struct EvalServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl EvalServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port)
+    /// and start accepting; every connection is served against
+    /// `service`.
+    pub fn bind(addr: &str, service: Arc<EvalService>) -> io::Result<EvalServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let conns = Arc::new(AtomicUsize::new(0));
+        let accept = thread::Builder::new()
+            .name("evalsrv-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(mut stream) => {
+                            if conns.load(Ordering::SeqCst) >= MAX_CONNECTIONS {
+                                // classified refusal, then close
+                                let resp = Response::Error {
+                                    kind: ErrorKind::Internal,
+                                    msg: format!(
+                                        "server at connection capacity \
+                                         ({MAX_CONNECTIONS})"
+                                    ),
+                                };
+                                let _ = proto::write_frame(&mut stream, &resp.encode());
+                                continue;
+                            }
+                            conns.fetch_add(1, Ordering::SeqCst);
+                            let service = Arc::clone(&service);
+                            let slot = ConnSlot(Arc::clone(&conns));
+                            // on spawn failure the closure (stream +
+                            // guard) is dropped, and the guard's Drop
+                            // releases the reservation either way
+                            let _ = thread::Builder::new()
+                                .name("evalsrv-conn".into())
+                                .spawn(move || {
+                                    // held for the connection's life:
+                                    // released on return *and* on panic
+                                    let _slot = slot;
+                                    handle_conn(stream, service);
+                                });
+                        }
+                        // transient accept errors (EMFILE, aborted
+                        // handshakes) must not kill the server — but
+                        // back off so a persistent error (fd
+                        // exhaustion) cannot busy-spin this thread
+                        Err(_) => {
+                            thread::sleep(std::time::Duration::from_millis(50));
+                            continue;
+                        }
+                    }
+                }
+            })?;
+        Ok(EvalServer { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `":0"` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the accept loop exits (the serve-forever CLI path).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting new connections and join the acceptor.
+    pub fn shutdown(mut self) {
+        self.stop_accepting();
+    }
+
+    fn stop_accepting(&mut self) {
+        if let Some(h) = self.accept.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // unblock the blocking accept with a throwaway connection;
+            // a wildcard bind (0.0.0.0 / ::) is not connectable on
+            // every platform, so aim the wake-up at loopback instead
+            let mut target = self.addr;
+            if target.ip().is_unspecified() {
+                let loopback = match target.ip() {
+                    IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                    IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                };
+                target.set_ip(loopback);
+            }
+            let _ = TcpStream::connect(target);
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EvalServer {
+    fn drop(&mut self) {
+        self.stop_accepting();
+    }
+}
+
+/// Per-connection reader: decode frames, resolve or enqueue, preserve
+/// order through the writer channel.
+fn handle_conn(stream: TcpStream, service: Arc<EvalService>) {
+    let _ = stream.set_nodelay(true);
+    let mut reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::channel::<Reply>();
+    let writer = thread::Builder::new()
+        .name("evalsrv-write".into())
+        .spawn(move || {
+            let mut out = stream;
+            for reply in rx {
+                let resp = match reply {
+                    Reply::Now(r) => r,
+                    // worker panics surface through the ticket as
+                    // classified execution-error feedback
+                    Reply::Ticket(t) => Response::Feedback(t.wait()),
+                };
+                if proto::write_frame(&mut out, &resp.encode()).is_err() {
+                    // client gone: remaining queued replies are simply
+                    // dropped — pending evaluations still complete on
+                    // the service's workers, their tickets just have no
+                    // reader anymore
+                    break;
+                }
+            }
+            let _ = out.shutdown(Shutdown::Both);
+        });
+    let Ok(writer) = writer else { return };
+
+    loop {
+        let payload = match proto::read_frame(&mut reader) {
+            Ok(Some(p)) => p,
+            Ok(None) => break, // clean close
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                // unrecoverable framing: classify, answer, close
+                let _ = tx.send(Reply::Now(Response::Error {
+                    kind: ErrorKind::Frame,
+                    msg: e.to_string(),
+                }));
+                break;
+            }
+            Err(_) => break, // transport failure
+        };
+        let reply = match Request::decode(&payload) {
+            Ok(req) => serve_request(req, &service),
+            // version skew / undecodable payloads answer in place; the
+            // length prefix already resynchronized the stream
+            Err(e) => Reply::Now(Response::Error {
+                kind: e.wire_kind(),
+                msg: e.to_string(),
+            }),
+        };
+        if tx.send(reply).is_err() {
+            break;
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+}
+
+fn bad_request(msg: String) -> Reply {
+    Reply::Now(Response::Error { kind: ErrorKind::BadRequest, msg })
+}
+
+fn serve_request(req: Request, service: &Arc<EvalService>) -> Reply {
+    match req {
+        Request::Ping => Reply::Now(Response::Pong),
+        Request::Eval(q) => match prepare_eval(q, service) {
+            Ok(req) => Reply::Ticket(service.submit(req)),
+            Err(reply) => reply,
+        },
+        Request::RegisterSpec { name, spec } => {
+            if name.len() > MAX_SPEC_NAME_BYTES
+                || spec.name.len() > MAX_SPEC_NAME_BYTES
+            {
+                bad_request(format!(
+                    "spec names are limited to {MAX_SPEC_NAME_BYTES} bytes"
+                ))
+            } else {
+                // capped atomically under the registry lock, so racing
+                // registrations cannot overshoot the bound
+                match service.registry().register_bounded(
+                    &name,
+                    spec,
+                    MAX_REGISTERED_SPECS,
+                ) {
+                    Some(id) => Reply::Now(spec_info(service, id)),
+                    None => bad_request(format!(
+                        "spec registry is full ({MAX_REGISTERED_SPECS} entries); \
+                         reuse a registered spec"
+                    )),
+                }
+            }
+        }
+        Request::GetSpec { name } => match service.spec_id(&name) {
+            Some(id) => Reply::Now(spec_info(service, id)),
+            None => bad_request(format!("unknown machine spec '{name}'")),
+        },
+        Request::Stats => Reply::Now(Response::Stats(service.snapshot())),
+        Request::Summary => Reply::Now(Response::Summary(service.summary())),
+    }
+}
+
+fn spec_info(service: &EvalService, id: crate::coordinator::SpecId) -> Response {
+    Response::SpecInfo {
+        id: id.index() as u32,
+        name: service.registry().name(id),
+        spec: service.spec(id),
+    }
+}
+
+/// Resolve the wire request into a service request: spec ref against
+/// the registry, scenario into a concrete [`App`](crate::apps::App).
+fn prepare_eval(
+    q: WireEvalRequest,
+    service: &Arc<EvalService>,
+) -> Result<EvalRequest, Reply> {
+    let spec_id = match &q.spec {
+        SpecRef::Id(i) => service
+            .registry()
+            .by_index(*i as usize)
+            .ok_or_else(|| bad_request(format!("unknown machine spec id {i}")))?,
+        SpecRef::Name(n) => service
+            .spec_id(n)
+            .ok_or_else(|| bad_request(format!("unknown machine spec '{n}'")))?,
+    };
+    let app = apps::scenario(&q.scenario.app, &q.scenario.params)
+        .map_err(bad_request)?;
+    // budget the graph before any engine materializes it, summing every
+    // step's launches — launch structure can vary per step (Solomonik
+    // adds its reduce launch only on the last one), so pricing step 0
+    // alone would undercount; the early break keeps this loop itself
+    // budget-bounded for huge step counts
+    let mut total: i64 = 0;
+    for step in 0..app.steps {
+        let per_step: i64 = app.launches(step).iter().map(|l| l.num_points()).sum();
+        total = total.saturating_add(per_step);
+        if total > MAX_REQUEST_POINT_TASKS {
+            return Err(bad_request(format!(
+                "scenario '{}' describes over {total} point tasks, over the \
+                 per-request budget of {MAX_REQUEST_POINT_TASKS}",
+                q.scenario.app
+            )));
+        }
+    }
+    Ok(EvalRequest {
+        spec_id,
+        app: Arc::new(app),
+        dsl: q.dsl,
+        mode: q.mode,
+        priority: q.priority,
+    })
+}

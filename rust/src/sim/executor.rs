@@ -215,10 +215,6 @@ pub(super) struct SimState<'a> {
 }
 
 impl<'a> SimState<'a> {
-    pub(super) fn new(spec: &'a MachineSpec, app: &App) -> SimState<'a> {
-        SimState::with_buffers(spec, app, SimBuffers::default())
-    }
-
     /// State over recycled buffers (cleared and re-sized here, so the
     /// caller hands them over dirty).
     pub(super) fn with_buffers(
@@ -429,72 +425,117 @@ impl<'a> Executor<'a> {
     }
 
     /// Run the app under the policy; returns metrics or the first
-    /// execution error encountered.
+    /// execution error encountered.  Builds throwaway scratch — the
+    /// standalone cold path; long-lived callers use
+    /// [`Self::execute_in`] with a reusable arena.
     pub fn execute(&self, app: &App, policy: &MappingPolicy) -> Result<Metrics, ExecError> {
+        self.execute_in(app, policy, &mut super::schedule::SimArena::new())
+    }
+
+    /// [`Self::execute`] with every scratch buffer drawn from (and
+    /// returned to) `arena`, for all three execution models — since the
+    /// BulkSync arena rework, no engine allocates structurally per
+    /// steady-state evaluation.  Bit-identical to [`Self::execute`].
+    pub fn execute_in(
+        &self,
+        app: &App,
+        policy: &MappingPolicy,
+        arena: &mut super::schedule::SimArena,
+    ) -> Result<Metrics, ExecError> {
         match self.mode.dep_mode() {
-            None => self.execute_bulk(app, policy),
-            Some(dep) => super::schedule::execute_dag(self.spec, app, policy, dep),
+            None => self.execute_bulk(app, policy, arena),
+            Some(dep) => {
+                super::schedule::execute_dag_in(self.spec, app, policy, dep, arena)
+            }
         }
     }
 
     /// The legacy bulk-synchronous loop: a barrier after every launch.
-    fn execute_bulk(&self, app: &App, policy: &MappingPolicy) -> Result<Metrics, ExecError> {
-        let spec = self.spec;
-        let mut now_us = 0.0f64; // launch-barrier clock
-        let mut st = SimState::new(spec, app);
-
-        // parent (top-level) task runs on CPU 0 of node 0
-        let parent = ProcId { node: 0, kind: ProcKind::Cpu, index: 0 };
-
-        for step in 0..app.steps {
-            for launch in app.launches(step) {
-                let task = &app.tasks[launch.task];
-                instance_limit_check(policy, app, &launch, spec)?;
-
-                let mut max_end = now_us;
-                // §Perf: region decisions (layout, memory kind, collect
-                // flag, validity) depend only on (task, region, proc
-                // *kind*) — resolve once per launch per kind instead of
-                // per point x region (the former hot spot).
-                let mut kind_cache: [Option<Vec<RegionDecision>>; 3] =
-                    [None, None, None];
-
-                // §Perf: kind + mapping-function resolution is launch-
-                // invariant; hoist it out of the point loop
-                let resolution = policy
-                    .resolve_task(&task.name, &task.variants, launch.num_points() > 1)
-                    .map_err(|e| ExecError::MapFailed(e.to_string()))?;
-
-                for point in launch.points() {
-                    let ctx = TaskCtx {
-                        ipoint: point.clone(),
-                        ispace: launch.ispace.clone(),
-                        parent_proc: Some(parent),
-                    };
-                    let proc = policy
-                        .map_point(&resolution, &ctx, spec)
-                        .map_err(|e| ExecError::MapFailed(e.to_string()))?;
-
-                    let slot = kind_slot(proc.kind);
-                    if kind_cache[slot].is_none() {
-                        kind_cache[slot] = Some(resolve_region_decisions(
-                            app, policy, &launch, proc, spec,
-                        )?);
-                    }
-                    let decisions = kind_cache[slot].as_ref().unwrap();
-
-                    let (_, end) =
-                        st.simulate_point(app, &launch, decisions, &point, proc, now_us)?;
-                    max_end = max_end.max(end);
-                }
-
-                // bulk-synchronous launch barrier
-                now_us = max_end;
+    /// Scratch comes from the arena and goes back on success *and*
+    /// error paths (failing mappers are routine in LLM search).
+    fn execute_bulk(
+        &self,
+        app: &App,
+        policy: &MappingPolicy,
+        arena: &mut super::schedule::SimArena,
+    ) -> Result<Metrics, ExecError> {
+        let mut st = SimState::with_buffers(self.spec, app, arena.take_sim());
+        match bulk_loop(self.spec, app, policy, &mut st) {
+            Ok(now_us) => {
+                let (m, bufs) = st.finalize(app, now_us);
+                arena.put_sim(bufs);
+                Ok(m)
+            }
+            Err(e) => {
+                arena.put_sim(st.recycle());
+                Err(e)
             }
         }
-
-        Ok(st.finalize(app, now_us).0)
     }
+}
+
+/// The barrier-per-launch schedule proper; returns the final barrier
+/// clock (elapsed microseconds).  Split from `execute_bulk` so the
+/// `?`-shaped control flow cannot leak the arena's buffers on error.
+fn bulk_loop(
+    spec: &MachineSpec,
+    app: &App,
+    policy: &MappingPolicy,
+    st: &mut SimState<'_>,
+) -> Result<f64, ExecError> {
+    let mut now_us = 0.0f64; // launch-barrier clock
+
+    // parent (top-level) task runs on CPU 0 of node 0
+    let parent = ProcId { node: 0, kind: ProcKind::Cpu, index: 0 };
+
+    for step in 0..app.steps {
+        for launch in app.launches(step) {
+            let task = &app.tasks[launch.task];
+            instance_limit_check(policy, app, &launch, spec)?;
+
+            let mut max_end = now_us;
+            // §Perf: region decisions (layout, memory kind, collect
+            // flag, validity) depend only on (task, region, proc
+            // *kind*) — resolve once per launch per kind instead of
+            // per point x region (the former hot spot).
+            let mut kind_cache: [Option<Vec<RegionDecision>>; 3] =
+                [None, None, None];
+
+            // §Perf: kind + mapping-function resolution is launch-
+            // invariant; hoist it out of the point loop
+            let resolution = policy
+                .resolve_task(&task.name, &task.variants, launch.num_points() > 1)
+                .map_err(|e| ExecError::MapFailed(e.to_string()))?;
+
+            for point in launch.points() {
+                let ctx = TaskCtx {
+                    ipoint: point.clone(),
+                    ispace: launch.ispace.clone(),
+                    parent_proc: Some(parent),
+                };
+                let proc = policy
+                    .map_point(&resolution, &ctx, spec)
+                    .map_err(|e| ExecError::MapFailed(e.to_string()))?;
+
+                let slot = kind_slot(proc.kind);
+                if kind_cache[slot].is_none() {
+                    kind_cache[slot] = Some(resolve_region_decisions(
+                        app, policy, &launch, proc, spec,
+                    )?);
+                }
+                let decisions = kind_cache[slot].as_ref().unwrap();
+
+                let (_, end) =
+                    st.simulate_point(app, &launch, decisions, &point, proc, now_us)?;
+                max_end = max_end.max(end);
+            }
+
+            // bulk-synchronous launch barrier
+            now_us = max_end;
+        }
+    }
+
+    Ok(now_us)
 }
 
 /// Instance-limit model: a limit below the per-processor concurrency a

@@ -21,8 +21,8 @@
 //! in-degree vector — is policy-independent and is captured once in an
 //! immutable [`EvalPlan`] keyed by `(app, dep_mode)`.  The serving layer
 //! caches plans as `Arc<EvalPlan>` and calls [`execute_plan`] per
-//! mapper; the standalone [`execute_dag`] path builds a throwaway plan,
-//! so `Executor`/`run_mapper_with` behave exactly as before.
+//! mapper; the standalone `execute_dag_in` path builds a throwaway
+//! plan, so `Executor`/`run_mapper_with` behave exactly as before.
 //!
 //! [`SimArena`] holds every per-eval scratch buffer ([`SimState`]'s
 //! dense tables, ready heaps, start/end/bind vectors), so a warm worker
@@ -216,6 +216,19 @@ impl SimArena {
     pub fn new() -> SimArena {
         SimArena::default()
     }
+
+    /// Hand the [`SimState`] scratch buffers to an engine (the
+    /// bulk-synchronous loop draws them directly; the DAG engine goes
+    /// through [`execute_plan`]).
+    pub(super) fn take_sim(&mut self) -> SimBuffers {
+        std::mem::take(&mut self.sim)
+    }
+
+    /// Return the scratch buffers after a run (success *and* error
+    /// paths — failing mappers are routine in LLM search).
+    pub(super) fn put_sim(&mut self, bufs: SimBuffers) {
+        self.sim = bufs;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -327,17 +340,19 @@ pub fn resolve_decisions(
     Ok(ResolvedDecisions { proc_of, decisions })
 }
 
-/// Execute `app` under `policy` on the dependency-aware engine,
-/// building a throwaway plan and arena (the cold standalone path behind
-/// [`super::Executor`]; services cache both and call [`execute_plan`]).
-pub(super) fn execute_dag(
+/// Execute `app` under `policy` on the dependency-aware engine over a
+/// throwaway plan, with scratch drawn from a caller-provided (reusable)
+/// arena — the standalone path behind [`super::Executor`]; services
+/// cache plans and call [`execute_plan`] directly.
+pub(super) fn execute_dag_in(
     spec: &MachineSpec,
     app: &App,
     policy: &MappingPolicy,
     dep_mode: DepMode,
+    arena: &mut SimArena,
 ) -> Result<Metrics, ExecError> {
     let plan = EvalPlan::build(app, dep_mode);
-    execute_plan(spec, app, policy, &plan, None, &mut SimArena::new())
+    execute_plan(spec, app, policy, &plan, None, arena)
 }
 
 /// Schedule one evaluation of `policy` over a (possibly cached) `plan`,

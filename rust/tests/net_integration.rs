@@ -1,0 +1,348 @@
+//! Cross-process serving integration: remote-vs-local differential
+//! (bit-identical scores and trajectories through the wire protocol),
+//! cross-client cache sharing on the server, classified protocol-error
+//! handling (framing / version / decode / bad requests — never
+//! connection aborts), remote spec registration, pipelined tickets, and
+//! per-priority queue accounting over the wire.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use mapperopt::coordinator::{Coordinator, EvalService};
+use mapperopt::coordinator::{SearchAlgo, PRIORITY_NORMAL};
+use mapperopt::feedback::FeedbackConfig;
+use mapperopt::machine::MachineSpec;
+use mapperopt::mapping::expert_dsl;
+use mapperopt::net::proto::{
+    read_frame, write_frame, ErrorKind, Request, Response, WIRE_VERSION,
+};
+use mapperopt::net::{EvalServer, RemoteEvalClient, Scenario, SpecRef};
+use mapperopt::sim::ExecMode;
+
+const SER: ExecMode = ExecMode::Serialized;
+
+fn boot() -> (Arc<EvalService>, EvalServer, String) {
+    let service = Arc::new(EvalService::new(3, 32));
+    let server = EvalServer::bind("127.0.0.1:0", Arc::clone(&service))
+        .expect("bind loopback");
+    let addr = server.addr().to_string();
+    (service, server, addr)
+}
+
+/// The acceptance scenario: the same seeded campaign through
+/// `RemoteEvalClient`-backed coordinators and through an in-process
+/// `EvalService` produces bit-identical scores and trajectories, and
+/// two concurrent remote clients share the server's caches.
+#[test]
+fn remote_campaigns_are_bit_identical_and_share_the_server_cache() {
+    let (service, server, addr) = boot();
+
+    // in-process reference on a *separate* service (same spec + seeds)
+    let local = Coordinator::new(MachineSpec::p100_cluster());
+    let reference = local
+        .run_many("cannon", SearchAlgo::Trace, FeedbackConfig::FULL, 5, 2, 4)
+        .expect("local campaign");
+
+    // two concurrent remote clients running the identical campaign
+    let (ra, rb) = std::thread::scope(|scope| {
+        let addr_a = addr.clone();
+        let addr_b = addr.clone();
+        let a = scope.spawn(move || {
+            Coordinator::remote(&addr_a, "p100_cluster", SER)
+                .expect("client A connects")
+                .run_many("cannon", SearchAlgo::Trace, FeedbackConfig::FULL, 5, 2, 4)
+                .expect("remote campaign A")
+        });
+        let b = scope.spawn(move || {
+            Coordinator::remote(&addr_b, "p100_cluster", SER)
+                .expect("client B connects")
+                .run_many("cannon", SearchAlgo::Trace, FeedbackConfig::FULL, 5, 2, 4)
+                .expect("remote campaign B")
+        });
+        (a.join().expect("thread A"), b.join().expect("thread B"))
+    });
+
+    assert_eq!(reference.len(), 2);
+    for (r, l) in ra.iter().zip(&reference) {
+        assert_eq!(
+            r.trajectory(),
+            l.trajectory(),
+            "remote trajectory diverged from in-process"
+        );
+        assert_eq!(r.seed, l.seed);
+        assert_eq!(
+            r.best.as_ref().map(|(_, s)| s.to_bits()),
+            l.best.as_ref().map(|(_, s)| s.to_bits()),
+            "best scores must be bit-identical over the wire"
+        );
+        assert_eq!(r.proposer_dupes, l.proposer_dupes);
+    }
+    for (x, y) in ra.iter().zip(&rb) {
+        assert_eq!(x.trajectory(), y.trajectory(), "the two clients diverged");
+    }
+
+    // cross-client sharing: both clients submitted identical work, so
+    // the server evaluated each unique mapper once and served the rest
+    // from the shared cache / in-flight dedup
+    let stats = service.stats();
+    let evals = stats.coord.evals.load(Ordering::Relaxed);
+    let hits = stats.coord.cache_hits.load(Ordering::Relaxed);
+    let completed = stats.completed.load(Ordering::Relaxed);
+    assert_eq!(stats.submitted.load(Ordering::Relaxed), completed);
+    assert_eq!(evals + hits, completed, "every request is one eval or one hit");
+    assert!(hits > 0, "two identical remote clients must produce cache hits");
+    assert!(
+        evals < completed,
+        "cross-client sharing must avoid re-evaluating shared mappers"
+    );
+
+    // the same numbers are visible over the wire
+    let probe = RemoteEvalClient::connect(&addr).expect("probe connects");
+    let snap = probe.stats().expect("stats over the wire");
+    assert_eq!(snap.evals, evals as u64);
+    assert!(snap.cache_hits > 0);
+    assert_eq!(snap.specs[0].name, "p100_cluster");
+    let summary = probe.summary().expect("summary over the wire");
+    assert!(summary.contains("eval service:"), "{summary}");
+    drop(probe);
+    server.shutdown();
+}
+
+/// Synchronous remote evaluation equals in-process evaluation bit-wise,
+/// pipelined tickets resolve out of wait-order, and remote spec
+/// registration round-trips.
+#[test]
+fn remote_evaluate_registration_and_pipelining() {
+    let (service, server, addr) = boot();
+    let client = RemoteEvalClient::connect(&addr).expect("connect");
+    client.ping().expect("ping");
+
+    let app = mapperopt::apps::by_name("circuit").unwrap();
+    let dsl = expert_dsl("circuit").unwrap();
+    let p100 = service.spec_id("p100_cluster").unwrap();
+    let local_fb = service.evaluate(p100, &app, dsl, SER);
+    let remote_fb = client.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario::named("circuit"),
+        dsl,
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert_eq!(remote_fb, local_fb, "remote feedback must be bit-identical");
+    assert_eq!(remote_fb.score().to_bits(), local_fb.score().to_bits());
+    assert!(
+        remote_fb.profile().is_some(),
+        "the PerfProfile analytics tier must survive the wire"
+    );
+
+    // scenario parameters reach the app builder (halving the piece
+    // count changes the parallelism, hence the steps/s score)
+    let small_fb = client.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario {
+            app: "circuit".into(),
+            params: vec![("pieces".into(), 4)],
+        },
+        dsl,
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert!(small_fb.score() > 0.0);
+    assert_ne!(
+        small_fb.score().to_bits(),
+        local_fb.score().to_bits(),
+        "a different scenario must not alias the default's cache entry"
+    );
+
+    // remote registration: a new shape becomes evaluable by id
+    let mut wide = MachineSpec::p100_cluster();
+    wide.name = "4x2".into();
+    wide.nodes = 4;
+    wide.gpus_per_node = 2;
+    let wide_id = client.register_spec("4x2", &wide).expect("register");
+    let (again_id, fetched) = client.spec("4x2").expect("fetch registered");
+    assert_eq!(wide_id, again_id);
+    assert_eq!(fetched, wide);
+    let wide_fb = client.evaluate(
+        SpecRef::Id(wide_id),
+        Scenario::named("circuit"),
+        dsl,
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert!(wide_fb.score() > 0.0);
+    assert_ne!(wide_fb.score().to_bits(), local_fb.score().to_bits());
+
+    // pipelining: three tickets in flight on one socket, waited in
+    // reverse submission order, each with a distinct priority
+    let mappers = [
+        "Task * GPU;\nRegion * * GPU FBMEM;\n",
+        "Task * GPU;\nRegion * * GPU FBMEM;\nLayout * * * SOA C_order Align==128;\n",
+        "Task * CPU;\nRegion * * CPU SYSMEM;\n",
+    ];
+    let tickets: Vec<_> = mappers
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            client.submit(
+                SpecRef::Name("p100_cluster".into()),
+                Scenario::named("circuit"),
+                m.to_string(),
+                SER,
+                50 + 100 * i as u8,
+            )
+        })
+        .collect();
+    for (i, t) in tickets.iter().enumerate().rev() {
+        let fb = t.wait();
+        assert!(t.is_done());
+        let direct = service.evaluate(p100, &app, mappers[i], SER);
+        assert_eq!(fb, direct, "pipelined ticket {i} got the wrong response");
+    }
+
+    // the distinct priorities surfaced in the per-priority counters
+    let snap = client.stats().expect("stats");
+    let prios: Vec<u8> = snap.priorities.iter().map(|p| p.priority).collect();
+    for want in [50u8, 150, 250] {
+        assert!(prios.contains(&want), "priority {want} missing from {prios:?}");
+    }
+    assert!(snap.priorities.iter().all(|p| p.queued == 0));
+
+    drop(client);
+    server.shutdown();
+}
+
+/// Unknown specs/apps and malformed frames are answered as classified
+/// errors on a connection that keeps serving; only an unrecoverable
+/// length prefix closes it (after answering).
+#[test]
+fn protocol_errors_are_classified_and_never_abort_the_connection() {
+    let (_service, server, addr) = boot();
+
+    // high-level client: bad requests become classified execution errors
+    let client = RemoteEvalClient::connect(&addr).expect("connect");
+    let fb = client.evaluate(
+        SpecRef::Name("nonexistent".into()),
+        Scenario::named("circuit"),
+        "Task * GPU;",
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert!(fb.is_error());
+    assert!(fb.line().contains("bad-request"), "{}", fb.line());
+    assert!(fb.line().contains("unknown machine spec"), "{}", fb.line());
+    let fb = client.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario::named("no_such_app"),
+        "Task * GPU;",
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert!(fb.line().contains("unknown app"), "{}", fb.line());
+    let fb = client.evaluate(
+        SpecRef::Id(999),
+        Scenario::named("circuit"),
+        "Task * GPU;",
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert!(fb.line().contains("unknown machine spec id"), "{}", fb.line());
+    // hostile scenario parameters classify instead of wedging a worker
+    let fb = client.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario {
+            app: "circuit".into(),
+            params: vec![("steps".into(), -1)],
+        },
+        "Task * GPU;",
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert!(fb.line().contains("outside 1..="), "{}", fb.line());
+    // in-range extents whose *product* is absurd hit the task budget
+    let fb = client.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario {
+            app: "stencil3d".into(),
+            params: vec![
+                ("px".into(), 512),
+                ("py".into(), 512),
+                ("pz".into(), 512),
+            ],
+        },
+        "Task * GPU;",
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert!(fb.line().contains("per-request budget"), "{}", fb.line());
+    client.ping().expect("connection still serves after bad requests");
+    drop(client);
+
+    // a remote Coordinator refuses to silently score a non-catalogue
+    // App instance (the wire carries apps by registered scenario name)
+    let coord = Coordinator::remote(&addr, "p100_cluster", SER).expect("connect");
+    let custom = mapperopt::apps::circuit(mapperopt::apps::CircuitConfig {
+        pieces: 4,
+        ..Default::default()
+    });
+    let fb = coord.evaluate(&custom, "Task * GPU;\nRegion * * GPU FBMEM;\n");
+    assert!(fb.is_error());
+    assert!(fb.line().contains("default scenario"), "{}", fb.line());
+    let catalogue = mapperopt::apps::by_name("circuit").unwrap();
+    assert!(
+        coord.evaluate(&catalogue, expert_dsl("circuit").unwrap()).score() > 0.0,
+        "the catalogue instance must still evaluate remotely"
+    );
+    drop(coord);
+
+    // raw socket: version skew and undecodable payloads answer and
+    // keep serving
+    let mut raw = TcpStream::connect(&addr).expect("raw connect");
+    let expect = |raw: &mut TcpStream, what: &str| -> Response {
+        let payload = read_frame(raw)
+            .expect("read")
+            .unwrap_or_else(|| panic!("server closed before answering {what}"));
+        Response::decode(&payload).expect("decodable response")
+    };
+
+    write_frame(&mut raw, &Request::Ping.encode()).unwrap();
+    assert_eq!(expect(&mut raw, "ping"), Response::Pong);
+
+    let mut skewed = Request::Ping.encode();
+    skewed[0] = WIRE_VERSION + 9;
+    write_frame(&mut raw, &skewed).unwrap();
+    match expect(&mut raw, "version skew") {
+        Response::Error { kind: ErrorKind::Version, msg } => {
+            assert!(msg.contains("unsupported wire version"), "{msg}");
+        }
+        other => panic!("expected version error, got {other:?}"),
+    }
+
+    write_frame(&mut raw, &[WIRE_VERSION, 0xFE, 1, 2, 3]).unwrap();
+    match expect(&mut raw, "unknown tag") {
+        Response::Error { kind: ErrorKind::Decode, msg } => {
+            assert!(msg.contains("unknown request tag"), "{msg}");
+        }
+        other => panic!("expected decode error, got {other:?}"),
+    }
+
+    // the same connection still answers real requests afterwards
+    write_frame(&mut raw, &Request::Ping.encode()).unwrap();
+    assert_eq!(expect(&mut raw, "ping after errors"), Response::Pong);
+
+    // an unrecoverable zero-length prefix: answered, then closed
+    raw.write_all(&0u32.to_le_bytes()).unwrap();
+    raw.flush().unwrap();
+    match expect(&mut raw, "zero-length frame") {
+        Response::Error { kind: ErrorKind::Frame, .. } => {}
+        other => panic!("expected framing error, got {other:?}"),
+    }
+    assert!(
+        read_frame(&mut raw).expect("clean close").is_none(),
+        "server must close after an unrecoverable framing error"
+    );
+
+    server.shutdown();
+}

@@ -11,12 +11,18 @@ use mapperopt::apps::{
     self, task_dag, task_dag_with_gate_fanin, Access, App, DepMode, Launch,
     Metric, RegionDecl, RegionReq, TaskDag, TaskDecl,
 };
+use mapperopt::coordinator::{PrioritySnapshot, SpecSnapshot, StatsSnapshot};
 use mapperopt::dsl::{MappingPolicy, TaskCtx};
+use mapperopt::feedback::SystemFeedback;
 use mapperopt::machine::{MachineSpec, ProcKind, ProcSpace};
+use mapperopt::net::proto::{
+    DecodeError, Request, Response, Scenario, SpecRef, WireEvalRequest,
+    WIRE_VERSION,
+};
 use mapperopt::optimizer::{AgentGenome, AppInfo};
 use mapperopt::sim::{
-    execute_plan, resolve_decisions, run_mapper_with, EvalPlan, ExecMode,
-    Executor, SimArena,
+    execute_plan, resolve_decisions, run_mapper_with, CritEntry, EvalPlan,
+    ExecMode, Executor, PerfProfile, SimArena,
 };
 use mapperopt::util::proptest::{check, env_cases};
 use mapperopt::util::rng::Rng;
@@ -270,18 +276,21 @@ fn property_serialized_engine_differential_vs_bulk_sync() {
     });
 }
 
-/// Warm-path differential (the PR 4 claim, fuzzed): evaluating through a
-/// *cached* `EvalPlan`, a precomputed decision vector, and a `SimArena`
-/// reused across every case — the long-lived-service configuration — is
-/// bit-identical to the cold `run_mapper_with` path for arbitrary random
-/// mappers x {circuit, stencil, cannon, stencil3d} x {p100_cluster,
-/// small} x {Serialized, Inferred}: full metrics, the attached profile,
-/// and error classification all match.
+/// Warm-path differential (the PR 4 claim, fuzzed; extended to the
+/// legacy loop in PR 5): evaluating through a *cached* `EvalPlan`, a
+/// precomputed decision vector, and a `SimArena` reused across every
+/// case — the long-lived-service configuration — is bit-identical to
+/// the cold `run_mapper_with` path for arbitrary random mappers x
+/// {circuit, stencil, cannon, stencil3d} x {p100_cluster, small} x
+/// {BulkSync, Serialized, Inferred}: full metrics, the attached
+/// profile, and error classification all match.  `BulkSync` exercises
+/// `Executor::execute_in` — the bulk-synchronous loop drawing its
+/// scratch from the same shared arena (no plan, no decision vector).
 #[test]
 fn property_warm_plan_arena_eval_is_bit_identical_to_cold() {
     let machines = [MachineSpec::p100_cluster(), MachineSpec::small()];
     let benches = ["circuit", "stencil", "cannon", "stencil3d"];
-    let modes = [ExecMode::Serialized, ExecMode::OutOfOrder];
+    let modes = [ExecMode::BulkSync, ExecMode::Serialized, ExecMode::OutOfOrder];
     // shared warm state, deliberately reused across cases: one arena,
     // and one plan per (bench, mode) built from a *different* App
     // instance than the one later simulated (the service's cache-by-
@@ -293,7 +302,6 @@ fn property_warm_plan_arena_eval_is_bit_identical_to_cold() {
         let bench = *rng.choose(&benches);
         let s = &machines[rng.below(machines.len())];
         let mode = modes[rng.below(modes.len())];
-        let dep = mode.dep_mode().unwrap();
         let app = apps::by_name(bench).unwrap();
         let info = AppInfo::from_app(&app);
         let mut g = AgentGenome::random(&info, rng);
@@ -303,16 +311,24 @@ fn property_warm_plan_arena_eval_is_bit_identical_to_cold() {
         let cold = run_mapper_with(&app, &dsl, s, mode)
             .expect("random genomes are syntactically valid");
         let policy = MappingPolicy::compile(&dsl, s).unwrap();
-        let plan = Arc::clone(
-            plans
-                .entry((bench, mode.name()))
-                .or_insert_with(|| Arc::new(EvalPlan::build(&app, dep))),
-        );
-        let warm = match resolve_decisions(&plan, &app, &policy, s) {
-            Ok(res) => execute_plan(s, &app, &policy, &plan, Some(&res), &mut arena),
-            // resolution errors replay through the cold-order engine —
-            // classification must still match bit-exactly
-            Err(_) => execute_plan(s, &app, &policy, &plan, None, &mut arena),
+        let warm = match mode.dep_mode() {
+            // the legacy bulk-synchronous loop over the shared arena
+            None => Executor::with_mode(s, mode).execute_in(&app, &policy, &mut arena),
+            Some(dep) => {
+                let plan = Arc::clone(
+                    plans
+                        .entry((bench, mode.name()))
+                        .or_insert_with(|| Arc::new(EvalPlan::build(&app, dep))),
+                );
+                match resolve_decisions(&plan, &app, &policy, s) {
+                    Ok(res) => {
+                        execute_plan(s, &app, &policy, &plan, Some(&res), &mut arena)
+                    }
+                    // resolution errors replay through the cold-order
+                    // engine — classification must still match bit-exactly
+                    Err(_) => execute_plan(s, &app, &policy, &plan, None, &mut arena),
+                }
+            }
         };
         match (cold, warm) {
             (Ok(a), Ok(b)) => {
@@ -518,5 +534,246 @@ fn property_dag_compression_preserves_earliest_starts_and_critical_path() {
             }
         }
         assert_eq!(cp_ser, launch_index, "serialized critical path must count every launch");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Wire-codec invariants (the PR 5 net/proto layer, fuzzed)
+// ---------------------------------------------------------------------------
+
+fn rand_string(rng: &mut Rng) -> String {
+    // multibyte chars included: string fields are length-prefixed in
+    // *bytes*, which the codec must handle
+    let alphabet = [
+        "a", "B", "7", "_", " ", ";", "\n", "=", "π", "Ж", "mapper", "GPU",
+    ];
+    (0..rng.below(10)).map(|_| *rng.choose(&alphabet)).collect()
+}
+
+fn rand_f64(rng: &mut Rng) -> f64 {
+    // finite values only (NaN != NaN would break the equality check);
+    // bit-exactness of awkward values is asserted separately below
+    match rng.below(5) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => rng.f64() * 1e9,
+        3 => -(0.1 + rng.f64()),
+        _ => f64::MIN_POSITIVE * (1.0 + rng.f64()),
+    }
+}
+
+fn rand_mode(rng: &mut Rng) -> ExecMode {
+    *rng.choose(&[ExecMode::BulkSync, ExecMode::Serialized, ExecMode::OutOfOrder])
+}
+
+fn rand_profile(rng: &mut Rng) -> PerfProfile {
+    PerfProfile {
+        engine: *rng.choose(&["serialized", "out-of-order"]),
+        critical_path_s: rand_f64(rng),
+        critical_tasks: rng.below(1000),
+        total_tasks: rng.below(100_000),
+        bottlenecks: (0..rng.below(4))
+            .map(|_| CritEntry {
+                task: rand_string(rng),
+                instances: rng.below(500),
+                seconds: rand_f64(rng),
+                share: rng.f64(),
+            })
+            .collect(),
+        mean_idle: rng.f64(),
+        worst_idle: rng.f64(),
+        worst_idle_proc: rand_string(rng),
+        mean_slack_s: rand_f64(rng),
+        zero_slack_tasks: rng.below(1000),
+    }
+}
+
+fn rand_feedback(rng: &mut Rng) -> SystemFeedback {
+    match rng.below(4) {
+        0 => SystemFeedback::CompileError(rand_string(rng)),
+        1 => SystemFeedback::ExecutionError(rand_string(rng)),
+        2 => SystemFeedback::Performance {
+            line: rand_string(rng),
+            value: rand_f64(rng),
+            profile: None,
+        },
+        _ => SystemFeedback::Performance {
+            line: rand_string(rng),
+            value: rand_f64(rng),
+            profile: Some(rand_profile(rng)),
+        },
+    }
+}
+
+fn rand_machine_spec(rng: &mut Rng) -> MachineSpec {
+    let mut m = if rng.chance(0.5) {
+        MachineSpec::p100_cluster()
+    } else {
+        MachineSpec::small()
+    };
+    m.name = rand_string(rng);
+    m.nodes = 1 + rng.below(8);
+    m.gpus_per_node = 1 + rng.below(8);
+    m.gpu_gflops = rand_f64(rng);
+    m.nic_bw = rand_f64(rng);
+    m.fbmem_capacity = rng.next_u64() >> rng.below(40);
+    m
+}
+
+fn rand_request(rng: &mut Rng) -> Request {
+    match rng.below(6) {
+        0 => Request::Ping,
+        1 => Request::Eval(WireEvalRequest {
+            spec: if rng.chance(0.5) {
+                SpecRef::Id(rng.below(1000) as u32)
+            } else {
+                SpecRef::Name(rand_string(rng))
+            },
+            scenario: Scenario {
+                app: rand_string(rng),
+                params: (0..rng.below(4))
+                    .map(|_| (rand_string(rng), rng.range(-(1i64 << 40), 1i64 << 40)))
+                    .collect(),
+            },
+            dsl: rand_string(rng),
+            mode: rand_mode(rng),
+            priority: rng.below(256) as u8,
+        }),
+        2 => Request::RegisterSpec {
+            name: rand_string(rng),
+            spec: rand_machine_spec(rng),
+        },
+        3 => Request::GetSpec { name: rand_string(rng) },
+        4 => Request::Stats,
+        _ => Request::Summary,
+    }
+}
+
+fn rand_snapshot(rng: &mut Rng) -> StatsSnapshot {
+    StatsSnapshot {
+        evals: rng.next_u64() >> 1,
+        cache_hits: rng.next_u64() >> 1,
+        decision_hits: rng.below(1000) as u64,
+        point_tasks: rng.next_u64() >> 1,
+        eval_ns: rng.next_u64() >> 1,
+        submitted: rng.below(100_000) as u64,
+        completed: rng.below(100_000) as u64,
+        plan_builds: rng.below(100) as u64,
+        plan_hits: rng.below(100_000) as u64,
+        policy_compiles: rng.below(100_000) as u64,
+        policy_hits: rng.below(100_000) as u64,
+        evicted_feedback: rng.below(100) as u64,
+        evicted_plans: rng.below(100) as u64,
+        evicted_policies: rng.below(100) as u64,
+        evicted_decisions: rng.below(100) as u64,
+        max_queue_depth: rng.below(1000) as u64,
+        batch_occupancy: rand_f64(rng),
+        specs: (0..rng.below(4))
+            .map(|_| SpecSnapshot {
+                name: rand_string(rng),
+                evals: rng.below(100_000) as u64,
+                cache_hits: rng.below(100_000) as u64,
+            })
+            .collect(),
+        priorities: (0..rng.below(4))
+            .map(|_| PrioritySnapshot {
+                priority: rng.below(256) as u8,
+                submitted: rng.below(100_000) as u64,
+                max_depth: rng.below(1000) as u64,
+                queued: rng.below(1000) as u64,
+            })
+            .collect(),
+    }
+}
+
+fn rand_response(rng: &mut Rng) -> Response {
+    match rng.below(6) {
+        0 => Response::Pong,
+        1 => Response::Feedback(rand_feedback(rng)),
+        2 => Response::SpecInfo {
+            id: rng.below(1000) as u32,
+            name: rand_string(rng),
+            spec: rand_machine_spec(rng),
+        },
+        3 => Response::Stats(rand_snapshot(rng)),
+        4 => Response::Summary(rand_string(rng)),
+        _ => Response::Error {
+            kind: DecodeError::Truncated.wire_kind(),
+            msg: rand_string(rng),
+        },
+    }
+}
+
+/// Random requests, feedback, profiles, specs, and stats snapshots
+/// encode -> decode bit-identically (f64 fields travel as raw bits, so
+/// scores cannot drift a single ulp across the wire).
+#[test]
+fn property_wire_codec_roundtrips_bit_identically() {
+    check(0x31BE, env_cases(200), |rng: &mut Rng| {
+        if rng.chance(0.5) {
+            let req = rand_request(rng);
+            let bytes = req.encode();
+            assert_eq!(bytes[0], WIRE_VERSION);
+            assert_eq!(Request::decode(&bytes).unwrap(), req, "request roundtrip");
+        } else {
+            let resp = rand_response(rng);
+            let bytes = resp.encode();
+            assert_eq!(bytes[0], WIRE_VERSION);
+            assert_eq!(Response::decode(&bytes).unwrap(), resp, "response roundtrip");
+        }
+    });
+}
+
+/// Malformed payloads classify, never panic: every strict truncation of
+/// a valid payload is a decode error (each byte of an encoding is
+/// claimed by some field), version-skewed frames classify as version
+/// errors, and arbitrary byte soup decodes to *some* `Result` without
+/// panicking.
+#[test]
+fn property_wire_malformed_frames_classify_never_panic() {
+    check(0xBAD5, env_cases(200), |rng: &mut Rng| {
+        let bytes = rand_request(rng).encode();
+
+        // strict truncations are errors, never panics or false decodes
+        let cut = rng.below(bytes.len());
+        let err = Request::decode(&bytes[..cut])
+            .expect_err("a strict prefix must not decode");
+        assert!(
+            matches!(err, DecodeError::Truncated | DecodeError::Version(_)),
+            "cut {cut}/{}: unexpected {err:?}",
+            bytes.len()
+        );
+
+        // version skew classifies (and maps to the version error kind)
+        let mut skewed = bytes.clone();
+        skewed[0] = skewed[0].wrapping_add(1 + rng.below(254) as u8);
+        match Request::decode(&skewed) {
+            Err(DecodeError::Version(got)) => {
+                assert_eq!(got, skewed[0]);
+                assert_eq!(
+                    DecodeError::Version(got).wire_kind().name(),
+                    "version"
+                );
+            }
+            other => panic!("version skew produced {other:?}"),
+        }
+
+        // mutate one byte of the body: must return *some* Result
+        let mut mutated = bytes.clone();
+        if mutated.len() > 1 {
+            let at = 1 + rng.below(mutated.len() - 1);
+            mutated[at] ^= 1 << rng.below(8);
+            let _ = Request::decode(&mutated);
+            let _ = Response::decode(&mutated);
+        }
+
+        // pure byte soup (version byte forced valid so we fuzz the body
+        // decoders, not just the version check)
+        let mut soup: Vec<u8> = (0..rng.below(40)).map(|_| rng.below(256) as u8).collect();
+        if !soup.is_empty() {
+            soup[0] = WIRE_VERSION;
+        }
+        let _ = Request::decode(&soup);
+        let _ = Response::decode(&soup);
     });
 }

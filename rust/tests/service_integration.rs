@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use mapperopt::apps::{self, App, Metric};
 use mapperopt::coordinator::{
-    Campaign, EvalRequest, EvalService, SearchAlgo, SpecId,
+    Campaign, EvalRequest, EvalService, SearchAlgo, SpecId, PRIORITY_NORMAL,
 };
 use mapperopt::feedback::FeedbackConfig;
 use mapperopt::mapping::expert_dsl;
@@ -27,6 +27,7 @@ fn campaign(spec_id: SpecId, base_seed: u64) -> Campaign {
         seed_offset: 17,
         runs: 2,
         iters: 4,
+        priority: PRIORITY_NORMAL,
     }
 }
 
@@ -144,6 +145,7 @@ fn shared_cache_stress_accounting() {
                         app: Arc::clone(app),
                         dsl: dsl.clone(),
                         mode: SER,
+                        priority: PRIORITY_NORMAL,
                     });
                     let fb = if i % 2 == 0 {
                         ticket.wait()
@@ -222,6 +224,7 @@ fn campaign_accounting_holds_with_semantic_caching() {
         seed_offset: 17,
         runs: 2,
         iters: 5,
+        priority: PRIORITY_NORMAL,
     };
     // prewarm the structural plan synchronously so the two workers never
     // race to build it (a benign race, but it would double-count builds)
@@ -231,6 +234,14 @@ fn campaign_accounting_holds_with_semantic_caching() {
     let stats = service.stats();
     let evals = stats.coord.evals.load(Ordering::Relaxed);
     let hits = stats.coord.cache_hits.load(Ordering::Relaxed);
+    // proposer-side semantic dedup: every proposal either reached the
+    // queue or was answered from the run's local memo
+    let dupes: usize = first.iter().map(|r| r.proposer_dupes).sum();
+    assert_eq!(
+        stats.submitted.load(Ordering::Relaxed),
+        c.runs * c.iters - dupes,
+        "submitted must be proposals minus proposer dupes"
+    );
     assert_eq!(
         evals + hits,
         stats.completed.load(Ordering::Relaxed) + 1,
@@ -271,12 +282,12 @@ fn worker_panic_fills_ticket_and_pool_survives() {
         Metric::StepsPerSecond,
         |_| panic!("launch generator exploded"),
     ));
-    let ticket = service.submit(EvalRequest {
-        spec_id: p100,
-        app: boom,
-        dsl: "Task * GPU;".into(),
-        mode: SER,
-    });
+    let ticket = service.submit(EvalRequest::new(
+        p100,
+        boom,
+        "Task * GPU;",
+        SER,
+    ));
     let fb = ticket.wait();
     assert!(fb.is_error());
     assert!(fb.line().contains("worker panicked"), "{}", fb.line());
@@ -284,12 +295,12 @@ fn worker_panic_fills_ticket_and_pool_survives() {
 
     // the single worker survived and still serves healthy requests
     let app = Arc::new(apps::by_name("circuit").unwrap());
-    let ticket = service.submit(EvalRequest {
-        spec_id: p100,
+    let ticket = service.submit(EvalRequest::new(
+        p100,
         app,
-        dsl: expert_dsl("circuit").unwrap().into(),
-        mode: SER,
-    });
+        expert_dsl("circuit").unwrap(),
+        SER,
+    ));
     assert!(ticket.wait().score() > 0.0);
     assert_eq!(service.stats().completed.load(Ordering::Relaxed), 2);
     // a panicked evaluation still counts as one eval, so the service's
