@@ -5,13 +5,15 @@
 #                    (PROPTEST_CASES, exported as MAPPEROPT_PROPTEST_CASES;
 #                    tier-1 keeps the small in-code defaults)
 #   make bench-smoke build every bench target and run the scheduler
-#                    scalability bench at its smallest size (CI keeps
-#                    bench code from rotting); the campaign section
-#                    prints its JSON line alongside the human one
-#   make bench-json  run the warm-vs-cold campaign benchmark and write
-#                    the evals/sec + point-tasks/sec numbers as JSON to
-#                    BENCH_sched_scale.json (the machine-readable
-#                    trajectory seed)
+#                    scalability + delta-splice benches at their smallest
+#                    sizes (CI keeps bench code from rotting); the
+#                    campaign sections print their JSON lines alongside
+#                    the human ones
+#   make bench-json  run the warm-vs-cold campaign benchmark and the
+#                    cold-vs-spliced delta campaign, writing the numbers
+#                    as JSON to BENCH_sched_scale.json and
+#                    BENCH_delta.json (the machine-readable trajectory
+#                    seeds)
 #   make serve-smoke boot the TCP eval server on loopback, run two
 #                    concurrent remote campaigns against it, and assert
 #                    remote == in-process bit-identically (the example
@@ -41,10 +43,12 @@ test-props:
 bench-smoke:
 	$(CARGO) build --benches
 	$(CARGO) bench --bench sched_scale -- smoke
+	$(CARGO) bench --bench delta_campaign -- smoke
 
 bench-json:
 	$(CARGO) build --benches
 	$(CARGO) bench --bench sched_scale -- json | tee BENCH_sched_scale.json
+	$(CARGO) bench --bench delta_campaign -- json | tee BENCH_delta.json
 
 serve-smoke:
 	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release --example e2e_remote

@@ -1,0 +1,202 @@
+//! Delta-campaign benchmark: per-iteration cost of an optimizer step
+//! that changes a handful of decisions, cold (full re-simulation of the
+//! whole task graph per candidate) vs spliced (incremental
+//! cone-of-influence re-simulation against the incumbent's
+//! `ScheduleSnapshot` inside `EvalService`).
+//!
+//! The campaign mirrors the optimizer's hot loop: one base mapper is
+//! evaluated (and recorded), then K candidates each retarget a single
+//! launch point — the exact "small delta" shape LLM optimizer steps
+//! produce — on the `stencil3d` app at growing task-graph sizes.
+//!
+//! Flags (combine freely):
+//!   smoke — CI size only (1k tasks)
+//!   json  — print ONLY one machine-readable JSON line (the
+//!           `BENCH_delta.json` seed; see `make bench-json`)
+//!
+//! Run small-only (CI smoke): `cargo bench --bench delta_campaign -- smoke`
+
+use std::time::Instant;
+
+use mapperopt::apps::{self, Stencil3dConfig};
+use mapperopt::coordinator::{CacheConfig, EvalService};
+use mapperopt::machine::MachineSpec;
+use mapperopt::sim::{run_mapper_with, ExecMode};
+
+/// Base mapper: every launch point lands on `mgpu[lin % s0, lin % s1]`.
+/// `py`/`pz` fold the 3-D launch point into the same linearization the
+/// perturbations key on, so a retarget of `lin == t` moves exactly one
+/// spatial tile.
+fn base_mapper(py: i64, pz: i64) -> String {
+    format!(
+        "Task * GPU;\n\
+         Region * * GPU FBMEM;\n\
+         Layout * * * SOA C_order Align==64;\n\
+         mgpu = Machine(GPU);\n\
+         def send(Tuple ipoint, Tuple ispace) {{\n\
+         \x20 lin = (ipoint[0] * {py} + ipoint[1]) * {pz} + ipoint[2];\n\
+         \x20 return mgpu[lin % mgpu.size[0], lin % mgpu.size[1]];\n\
+         }}\n\
+         IndexTaskMap * send;\n"
+    )
+}
+
+/// K single-tile perturbations of the base: candidate `i` reroutes the
+/// point with `lin == 4i+1` to `mgpu[0, 0]` (the base maps odd `lin` to
+/// node 1, so every retarget is a real decision change and every
+/// candidate's decision vector is pairwise distinct).
+fn perturbations(py: i64, pz: i64, k: usize) -> Vec<String> {
+    (0..k)
+        .map(|i| {
+            let t = 4 * i + 1;
+            format!(
+                "Task * GPU;\n\
+                 Region * * GPU FBMEM;\n\
+                 Layout * * * SOA C_order Align==64;\n\
+                 mgpu = Machine(GPU);\n\
+                 def send(Tuple ipoint, Tuple ispace) {{\n\
+                 \x20 lin = (ipoint[0] * {py} + ipoint[1]) * {pz} + ipoint[2];\n\
+                 \x20 return lin == {t} ? mgpu[0, 0] : \
+                 mgpu[lin % mgpu.size[0], lin % mgpu.size[1]];\n\
+                 }}\n\
+                 IndexTaskMap * send;\n"
+            )
+        })
+        .collect()
+}
+
+struct DeltaNumbers {
+    tasks: usize,
+    candidates: usize,
+    cold_ms: f64,
+    spliced_ms: f64,
+    delta_evals: u64,
+    spliced_point_tasks: u64,
+    dirty_fallbacks: u64,
+}
+
+impl DeltaNumbers {
+    fn speedup(&self) -> f64 {
+        self.cold_ms / self.spliced_ms
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"tasks\":{},\"candidates\":{},\"cold_ms_per_eval\":{:.4},\
+             \"spliced_ms_per_eval\":{:.4},\"speedup\":{:.2},\
+             \"delta_evals\":{},\"spliced_point_tasks\":{},\
+             \"dirty_fallbacks\":{}}}",
+            self.tasks,
+            self.candidates,
+            self.cold_ms,
+            self.spliced_ms,
+            self.speedup(),
+            self.delta_evals,
+            self.spliced_point_tasks,
+            self.dirty_fallbacks,
+        )
+    }
+
+    fn human(&self) -> String {
+        format!(
+            "delta_campaign {:>7} tasks x {} candidates: cold {:>9.3} ms/eval  \
+             spliced {:>9.3} ms/eval  ({:>6.2}x)  \
+             [{} spliced, {} fallbacks, {} point tasks replayed]",
+            self.tasks,
+            self.candidates,
+            self.cold_ms,
+            self.spliced_ms,
+            self.speedup(),
+            self.delta_evals,
+            self.dirty_fallbacks,
+            self.spliced_point_tasks,
+        )
+    }
+}
+
+/// One campaign at >= `min_tasks` point tasks: base + K one-tile
+/// candidates, cold loop vs serving loop with splicing enabled.
+fn campaign(min_tasks: usize) -> DeltaNumbers {
+    const K: usize = 8;
+    let cfg = Stencil3dConfig::with_min_point_tasks(min_tasks);
+    let tasks = cfg.point_tasks();
+    let (py, pz) = (cfg.py, cfg.pz);
+    let app = apps::stencil3d(cfg);
+    let spec = MachineSpec::p100_cluster();
+    let base = base_mapper(py, pz);
+    let cands = perturbations(py, pz, K);
+
+    // cold: every candidate pays a full simulation (plus compile + DAG
+    // build — the per-eval pipeline an optimizer without a serving
+    // layer runs); base first as warmup + validation
+    run_mapper_with(&app, &base, &spec, ExecMode::Serialized).unwrap().unwrap();
+    let t0 = Instant::now();
+    for dsl in &cands {
+        std::hint::black_box(
+            run_mapper_with(&app, dsl, &spec, ExecMode::Serialized).unwrap().unwrap(),
+        );
+    }
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3 / K as f64;
+
+    // spliced: the base eval records the incumbent snapshot, then each
+    // candidate re-simulates only its dirty cone.  The one-tile cone is
+    // ~33% of the DAG at the 1k smoke size, so the threshold is raised
+    // from the 0.25 default to splice uniformly across sizes.
+    let service = EvalService::with_cache_config(
+        1,
+        K.max(2),
+        CacheConfig { delta_dirty_frac: 0.5, ..CacheConfig::default() },
+    );
+    let sid = service.spec_id("p100_cluster").unwrap();
+    std::hint::black_box(service.evaluate(sid, &app, &base, ExecMode::Serialized));
+    let t1 = Instant::now();
+    for dsl in &cands {
+        std::hint::black_box(service.evaluate(sid, &app, dsl, ExecMode::Serialized));
+    }
+    let spliced_ms = t1.elapsed().as_secs_f64() * 1e3 / K as f64;
+
+    let snap = service.snapshot();
+    DeltaNumbers {
+        tasks,
+        candidates: K,
+        cold_ms,
+        spliced_ms,
+        delta_evals: snap.delta_evals,
+        spliced_point_tasks: snap.spliced_point_tasks,
+        dirty_fallbacks: snap.dirty_fallbacks,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "smoke" || a == "--smoke");
+    let json = args.iter().any(|a| a == "json" || a == "--json");
+    let sizes: &[usize] = if smoke { &[1_000] } else { &[1_000, 10_000, 100_000] };
+
+    let runs: Vec<DeltaNumbers> = sizes.iter().map(|&n| campaign(n)).collect();
+
+    if json {
+        // machine-readable only: one JSON object on stdout
+        let sizes_json: Vec<String> = runs.iter().map(|r| r.json()).collect();
+        println!(
+            "{{\"bench\":\"delta_campaign\",\"sizes\":[{}]}}",
+            sizes_json.join(",")
+        );
+        return;
+    }
+
+    for r in &runs {
+        println!("{}", r.human());
+        // splice counters double as a correctness canary: a candidate
+        // that reaches neither counter never took the delta path (no
+        // incumbent snapshot — e.g. the base ran under eviction
+        // pressure), and the spliced column is really a cold measurement
+        if r.delta_evals + r.dirty_fallbacks != r.candidates as u64 {
+            println!(
+                "delta_campaign WARNING: {}/{} candidates bypassed the delta path",
+                r.candidates as u64 - (r.delta_evals + r.dirty_fallbacks),
+                r.candidates
+            );
+        }
+    }
+}

@@ -64,8 +64,9 @@ use crate::dsl::MappingPolicy;
 use crate::feedback::{FeedbackConfig, SystemFeedback};
 use crate::machine::MachineSpec;
 use crate::sim::{
-    execute_plan, resolve_decisions, EvalPlan, ExecMode, Executor,
-    ResolvedDecisions, SimArena,
+    execute_plan, execute_plan_delta, execute_plan_recorded, resolve_decisions,
+    DeltaOutcome, EvalPlan, ExecMode, Executor, ResolvedDecisions,
+    ScheduleSnapshot, SimArena,
 };
 use crate::util::lru::LruCache;
 
@@ -109,15 +110,31 @@ pub struct CacheConfig {
     pub policy_cap: usize,
     /// Semantic decision cache (`decision_key -> SystemFeedback`).
     pub decision_cap: usize,
+    /// Incumbent [`ScheduleSnapshot`] cache: one retained recording per
+    /// `(app, spec, mode)` triple that optimizer-step deltas splice
+    /// against.  Snapshots are the only O(points) cache entries, so
+    /// this cap is small.
+    pub snapshot_cap: usize,
+    /// Splice declines when the dirty cone exceeds this fraction of the
+    /// DAG (see [`crate::sim::execute_plan_delta`]).  `0.0` disables
+    /// splicing entirely; overridable via `MAPPEROPT_DELTA_DIRTY_FRAC`.
+    pub delta_dirty_frac: f64,
 }
 
 impl Default for CacheConfig {
     fn default() -> CacheConfig {
+        let delta_dirty_frac = std::env::var("MAPPEROPT_DELTA_DIRTY_FRAC")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .filter(|f| f.is_finite() && (0.0..=1.0).contains(f))
+            .unwrap_or(0.25);
         CacheConfig {
             feedback_cap: 1 << 16,
             plan_cap: 64,
             policy_cap: 1 << 10,
             decision_cap: 1 << 16,
+            snapshot_cap: 8,
+            delta_dirty_frac,
         }
     }
 }
@@ -492,6 +509,18 @@ pub struct ServiceStats {
     /// mappers whose resolved decision vector matched a prior simulation
     /// (each also counts as a `coord.cache_hits` hit).
     pub decision_hits: AtomicUsize,
+    /// Evaluations served by the delta splice path: a fresh, bit-exact
+    /// result (each also counts in `coord.evals`) obtained by replaying
+    /// an incumbent [`ScheduleSnapshot`] and re-simulating only the
+    /// perturbed cone.
+    pub delta_evals: AtomicUsize,
+    /// Point tasks replayed verbatim (not re-simulated) across all
+    /// spliced evaluations — the work the delta path saved.
+    pub spliced_point_tasks: AtomicUsize,
+    /// Splice attempts that declined or aborted and fell back to a full
+    /// simulation (dirty cone over threshold, capacity pressure, or an
+    /// incompatible shape).
+    pub dirty_fallbacks: AtomicUsize,
     /// LRU evictions per cache (feedback / plan / policy / decision).
     pub evicted_feedback: AtomicUsize,
     pub evicted_plans: AtomicUsize,
@@ -620,6 +649,13 @@ pub struct StatsSnapshot {
     pub evicted_decisions: u64,
     pub max_queue_depth: u64,
     pub batch_occupancy: f64,
+    /// Evaluations served by the delta splice path (subset of `evals`).
+    pub delta_evals: u64,
+    /// Point tasks replayed rather than re-simulated across all
+    /// spliced evaluations.
+    pub spliced_point_tasks: u64,
+    /// Splice attempts that fell back to a full simulation.
+    pub dirty_fallbacks: u64,
     /// Per-spec counters in registration order.
     pub specs: Vec<SpecSnapshot>,
     /// Per-priority counters, ascending priority.
@@ -672,6 +708,17 @@ struct JobQueue {
     closed: bool,
 }
 
+/// Decision-cache value: the feedback, plus — when the evaluation was a
+/// full, eviction-free Serialized simulation — the retained
+/// [`ScheduleSnapshot`] that future near-identical decision vectors can
+/// splice against.  Spliced evaluations cache `snapshot: None` (they
+/// replayed a recording; they did not produce one).
+#[derive(Clone)]
+struct DecisionEntry {
+    fb: SystemFeedback,
+    snapshot: Option<Arc<ScheduleSnapshot>>,
+}
+
 struct Inner {
     registry: SpecRegistry,
     /// Text-level result cache: `eval_key -> feedback` (bounded LRU).
@@ -683,12 +730,23 @@ struct Inner {
     /// consults the machine — `Machine(GPU)` globals bake in its shape —
     /// so the spec fingerprint is part of the key).
     policies: Mutex<LruCache<(u64, u64), Arc<MappingPolicy>>>,
-    /// Semantic decision cache: `decision_key -> feedback`, where the
-    /// key fingerprints the resolved mapping decision vector (plus app /
-    /// spec / mode).  Textually different mappers that induce identical
-    /// mappings — LLM search loves renaming and reformatting — hit here
-    /// instead of re-simulating.
-    decisions: Mutex<LruCache<u64, SystemFeedback>>,
+    /// Semantic decision cache: `decision_key -> feedback (+ retained
+    /// schedule snapshot)`, where the key fingerprints the resolved
+    /// mapping decision vector (plus app / spec / mode).  Textually
+    /// different mappers that induce identical mappings — LLM search
+    /// loves renaming and reformatting — hit here instead of
+    /// re-simulating; entries that kept their recording can be promoted
+    /// to the incumbent splice base on a hit.
+    decisions: Mutex<LruCache<u64, DecisionEntry>>,
+    /// Incumbent snapshot per `(app_fp, spec_fp, mode)`: the diff base
+    /// the delta path splices new decision vectors against.  Only full
+    /// (recorded) evaluations and promoted decision hits replace the
+    /// incumbent — spliced results never do, so successive optimizer
+    /// steps keep diffing against their nearest accepted ancestor.
+    incumbents: Mutex<LruCache<(u64, u64, ExecMode), Arc<ScheduleSnapshot>>>,
+    /// Dirty-cone fraction above which splices decline (from
+    /// [`CacheConfig::delta_dirty_frac`]).
+    delta_dirty_frac: f64,
     /// Keys whose evaluation is currently running, with the slot the
     /// running ("leader") evaluation will resolve — concurrent identical
     /// requests join it instead of recomputing the same simulation.
@@ -945,11 +1003,96 @@ impl Inner {
                     &resolved.fingerprint(&entry.spec).to_le_bytes(),
                 ]);
                 let hit = self.decisions.lock().unwrap().get(&dkey).cloned();
-                if let Some(fb) = hit {
-                    return Served::Decision(fb);
+                if let Some(e) = hit {
+                    // nearest-ancestor promotion: a re-confirmed decision
+                    // vector becomes the diff base for the optimizer's
+                    // next perturbation of it
+                    if let Some(s) = &e.snapshot {
+                        self.incumbents
+                            .lock()
+                            .unwrap()
+                            .insert((app_fp, entry.fp, mode), Arc::clone(s));
+                    }
+                    return Served::Decision(e.fb);
                 }
-                let fb = simulate(Some(&resolved));
-                let evicted = self.decisions.lock().unwrap().insert(dkey, fb.clone());
+                let resolved = Arc::new(resolved);
+                // Delta path: splice against the incumbent recording of
+                // this (app, spec, mode), re-simulating only the cone
+                // the decision diff perturbs.  Any decline falls through
+                // to the full (recorded) simulation below.  No lock is
+                // held across either simulation.
+                let incumbent = self
+                    .incumbents
+                    .lock()
+                    .unwrap()
+                    .get(&(app_fp, entry.fp, mode))
+                    .cloned();
+                let mut spliced: Option<SystemFeedback> = None;
+                if let Some(snap) = incumbent {
+                    let outcome = ARENA.with(|a| {
+                        let mut arena = a.borrow_mut();
+                        execute_plan_delta(
+                            &entry.spec,
+                            app,
+                            &plan,
+                            &snap,
+                            &resolved,
+                            self.delta_dirty_frac,
+                            &mut arena,
+                        )
+                    });
+                    match outcome {
+                        DeltaOutcome::Spliced { metrics, resim_points } => {
+                            self.stats.delta_evals.fetch_add(1, Ordering::Relaxed);
+                            let replayed =
+                                plan.num_points().saturating_sub(resim_points);
+                            self.stats
+                                .spliced_point_tasks
+                                .fetch_add(replayed, Ordering::Relaxed);
+                            spliced = Some(SystemFeedback::from_metrics(&metrics));
+                        }
+                        DeltaOutcome::Fallback(_) => {
+                            self.stats.dirty_fallbacks.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                let (fb, snapshot) = match spliced {
+                    // spliced results never replace the incumbent: the
+                    // next delta still diffs against the accepted base
+                    Some(fb) => (fb, None),
+                    None => {
+                        let (res, snap) = ARENA.with(|a| {
+                            let mut arena = a.borrow_mut();
+                            execute_plan_recorded(
+                                &entry.spec,
+                                app,
+                                &policy,
+                                &plan,
+                                &resolved,
+                                &mut arena,
+                            )
+                        });
+                        let fb = match res {
+                            Ok(m) => SystemFeedback::from_metrics(&m),
+                            Err(xe) => {
+                                SystemFeedback::ExecutionError(xe.to_string())
+                            }
+                        };
+                        let snap = snap.map(Arc::new);
+                        if let Some(s) = &snap {
+                            self.incumbents
+                                .lock()
+                                .unwrap()
+                                .insert((app_fp, entry.fp, mode), Arc::clone(s));
+                        }
+                        (fb, snap)
+                    }
+                };
+                let evicted = self
+                    .decisions
+                    .lock()
+                    .unwrap()
+                    .insert(dkey, DecisionEntry { fb: fb.clone(), snapshot });
                 if evicted > 0 {
                     self.stats.evicted_decisions.fetch_add(evicted, Ordering::Relaxed);
                 }
@@ -1046,6 +1189,8 @@ impl EvalService {
             plans: Mutex::new(LruCache::new(caches.plan_cap)),
             policies: Mutex::new(LruCache::new(caches.policy_cap)),
             decisions: Mutex::new(LruCache::new(caches.decision_cap)),
+            incumbents: Mutex::new(LruCache::new(caches.snapshot_cap.max(1))),
+            delta_dirty_frac: caches.delta_dirty_frac,
             in_flight: Mutex::new(HashMap::new()),
             stats: ServiceStats::default(),
             queue: Mutex::new(JobQueue { jobs: PriorityRing::new(), closed: false }),
@@ -1162,6 +1307,9 @@ impl EvalService {
             evicted_decisions: s.evicted_decisions.load(Ordering::Relaxed) as u64,
             max_queue_depth: s.max_queue_depth() as u64,
             batch_occupancy: s.batch_occupancy(),
+            delta_evals: s.delta_evals.load(Ordering::Relaxed) as u64,
+            spliced_point_tasks: s.spliced_point_tasks.load(Ordering::Relaxed) as u64,
+            dirty_fallbacks: s.dirty_fallbacks.load(Ordering::Relaxed) as u64,
             specs,
             priorities,
         }
@@ -1281,6 +1429,7 @@ impl EvalService {
              queue: max depth {}, batch occupancy {:.2}\n\
              caches: plan {} built / {} hits, policy {} compiled / {} hits, \
              decision {} hits\n\
+             delta: {} spliced evals, {} point tasks replayed, {} fallbacks\n\
              evictions: feedback {}, plan {}, policy {}, decision {}\n",
             s.coord.evals.load(Ordering::Relaxed),
             s.coord.cache_hits.load(Ordering::Relaxed),
@@ -1293,6 +1442,9 @@ impl EvalService {
             s.policy_compiles.load(Ordering::Relaxed),
             s.policy_hits.load(Ordering::Relaxed),
             s.decision_hits.load(Ordering::Relaxed),
+            s.delta_evals.load(Ordering::Relaxed),
+            s.spliced_point_tasks.load(Ordering::Relaxed),
+            s.dirty_fallbacks.load(Ordering::Relaxed),
             s.evicted_feedback.load(Ordering::Relaxed),
             s.evicted_plans.load(Ordering::Relaxed),
             s.evicted_policies.load(Ordering::Relaxed),
@@ -1476,7 +1628,13 @@ mod tests {
         let s = EvalService::with_cache_config(
             1,
             4,
-            CacheConfig { feedback_cap: 2, plan_cap: 1, policy_cap: 2, decision_cap: 2 },
+            CacheConfig {
+                feedback_cap: 2,
+                plan_cap: 1,
+                policy_cap: 2,
+                decision_cap: 2,
+                ..CacheConfig::default()
+            },
         );
         let small = s.spec_id("small").unwrap();
         let app = apps::by_name("stencil").unwrap();
@@ -1674,5 +1832,100 @@ mod tests {
         assert!(s.stats().max_queue_depth() >= 1, "campaigns must use the queue");
         let err = s.run_campaigns("nope", c).unwrap_err();
         assert!(err.contains("unknown app 'nope'"), "{err}");
+    }
+
+    /// Point-task mapper over the 8x4x2 grid of
+    /// `Stencil3dConfig::with_min_point_tasks(1000)`; `retarget` pins
+    /// one spatial tile onto GPU (0, 0) — a single-decision delta.
+    fn delta_mapper(retarget: Option<i64>) -> String {
+        let ret = match retarget {
+            Some(k) => format!(
+                "return lin == {k} ? mgpu[0, 0] : \
+                 mgpu[lin % mgpu.size[0], lin % mgpu.size[1]];"
+            ),
+            None => {
+                "return mgpu[lin % mgpu.size[0], lin % mgpu.size[1]];".to_string()
+            }
+        };
+        format!(
+            "Task * GPU;\nRegion * * GPU FBMEM;\n\
+             Layout * * * SOA C_order Align==64;\n\
+             mgpu = Machine(GPU);\n\
+             def send(Tuple ipoint, Tuple ispace) {{\n\
+             \x20 lin = (ipoint[0] * 4 + ipoint[1]) * 2 + ipoint[2];\n\
+             \x20 {ret}\n}}\n\
+             IndexTaskMap * send;\n"
+        )
+    }
+
+    #[test]
+    fn delta_splices_serve_bit_identical_feedback_and_count() {
+        let app = apps::stencil3d(apps::Stencil3dConfig::with_min_point_tasks(1000));
+        let perturbed: Vec<String> =
+            (0..3).map(|i| delta_mapper(Some(4 * i + 1))).collect();
+        // reference service with splicing disabled outright
+        let cold = EvalService::with_cache_config(
+            1,
+            4,
+            CacheConfig { delta_dirty_frac: 0.0, ..CacheConfig::default() },
+        );
+        // spliced service: generous frontier so single-tile cones splice
+        // even at this (test-sized) grid
+        let warm = EvalService::with_cache_config(
+            1,
+            4,
+            CacheConfig { delta_dirty_frac: 0.5, ..CacheConfig::default() },
+        );
+        let pc = cold.spec_id("p100_cluster").unwrap();
+        let pw = warm.spec_id("p100_cluster").unwrap();
+        let base = delta_mapper(None);
+        let base_fb = warm.evaluate(pw, &app, &base, ExecMode::Serialized);
+        assert_eq!(
+            base_fb,
+            cold.evaluate(pc, &app, &base, ExecMode::Serialized),
+            "base eval must be unaffected by recording"
+        );
+        for dsl in &perturbed {
+            assert_eq!(
+                cold.evaluate(pc, &app, dsl, ExecMode::Serialized),
+                warm.evaluate(pw, &app, dsl, ExecMode::Serialized),
+                "spliced feedback must be bit-identical to cold"
+            );
+        }
+        let ws = warm.stats();
+        assert_eq!(ws.delta_evals.load(Ordering::Relaxed), perturbed.len());
+        assert!(ws.spliced_point_tasks.load(Ordering::Relaxed) > 0);
+        assert_eq!(ws.dirty_fallbacks.load(Ordering::Relaxed), 0);
+        // spliced evals are real (fresh) evals in the accounting
+        assert_eq!(
+            ws.coord.evals.load(Ordering::Relaxed),
+            1 + perturbed.len(),
+            "spliced evals count as fresh evaluations"
+        );
+        // the disabled service attempted and declined every delta
+        let cs = cold.stats();
+        assert_eq!(cs.delta_evals.load(Ordering::Relaxed), 0);
+        assert_eq!(cs.dirty_fallbacks.load(Ordering::Relaxed), perturbed.len());
+
+        // a semantic alias (same decisions, new text) hits the decision
+        // cache and re-promotes the base recording to the incumbent
+        let alias = format!("{base}\n");
+        assert_eq!(warm.evaluate(pw, &app, &alias, ExecMode::Serialized), base_fb);
+        assert_eq!(ws.decision_hits.load(Ordering::Relaxed), 1);
+        // ... so the next perturbation still splices against the base
+        let extra = delta_mapper(Some(13));
+        assert_eq!(
+            warm.evaluate(pw, &app, &extra, ExecMode::Serialized),
+            cold.evaluate(pc, &app, &extra, ExecMode::Serialized),
+        );
+        assert_eq!(ws.delta_evals.load(Ordering::Relaxed), perturbed.len() + 1);
+
+        // counters surface end to end
+        let snap = warm.snapshot();
+        assert_eq!(snap.delta_evals, (perturbed.len() + 1) as u64);
+        assert!(snap.spliced_point_tasks > 0);
+        assert_eq!(snap.dirty_fallbacks, 0);
+        let summary = warm.summary();
+        assert!(summary.contains("delta:"), "{summary}");
     }
 }

@@ -319,6 +319,12 @@ impl<'a> Dec<'a> {
             .map_err(|_| DecodeError::Utf8)
     }
 
+    /// Bytes left in the payload — lets a decoder accept an older,
+    /// shorter payload shape by defaulting fields appended since.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
     /// The payload must be fully consumed — trailing garbage is a
     /// decode error, not silently ignored bytes.
     fn finish(self) -> Result<(), DecodeError> {
@@ -609,6 +615,9 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
         evicted_decisions,
         max_queue_depth,
         batch_occupancy,
+        delta_evals,
+        spliced_point_tasks,
+        dirty_fallbacks,
         specs,
         priorities,
     } = s;
@@ -644,6 +653,11 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
         e.u64(*max_depth);
         e.u64(*queued);
     }
+    // delta counters ride at the tail so pre-delta decoders fail with a
+    // clean Trailing error (and this decoder zero-fills their absence)
+    e.u64(*delta_evals);
+    e.u64(*spliced_point_tasks);
+    e.u64(*dirty_fallbacks);
 }
 
 fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
@@ -683,6 +697,13 @@ fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
             queued: d.u64()?,
         });
     }
+    // appended by the delta-eval revision; zero-fill when a pre-delta
+    // peer's payload ends here (old payloads must classify, not panic)
+    let (delta_evals, spliced_point_tasks, dirty_fallbacks) = if d.remaining() > 0 {
+        (d.u64()?, d.u64()?, d.u64()?)
+    } else {
+        (0, 0, 0)
+    };
     Ok(StatsSnapshot {
         evals,
         cache_hits,
@@ -701,6 +722,9 @@ fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
         evicted_decisions,
         max_queue_depth,
         batch_occupancy,
+        delta_evals,
+        spliced_point_tasks,
+        dirty_fallbacks,
         specs,
         priorities,
     })
@@ -990,6 +1014,9 @@ mod tests {
             evals: 10,
             cache_hits: 7,
             batch_occupancy: 1.75,
+            delta_evals: 4,
+            spliced_point_tasks: 9000,
+            dirty_fallbacks: 2,
             specs: vec![SpecSnapshot {
                 name: "p100_cluster".into(),
                 evals: 10,
@@ -1063,6 +1090,53 @@ mod tests {
 
     fn err_kind_of(e: &DecodeError) -> ErrorKind {
         e.wire_kind()
+    }
+
+    #[test]
+    fn pre_delta_stats_payload_decodes_with_zeroed_delta_counters() {
+        // a pre-delta peer's Stats payload is exactly today's shape minus
+        // the three trailing u64s — it must classify cleanly, never panic
+        let full = StatsSnapshot {
+            evals: 11,
+            cache_hits: 3,
+            delta_evals: 5,
+            spliced_point_tasks: 1234,
+            dirty_fallbacks: 1,
+            priorities: vec![PrioritySnapshot {
+                priority: 128,
+                submitted: 9,
+                max_depth: 2,
+                queued: 0,
+            }],
+            ..StatsSnapshot::default()
+        };
+        let bytes = Response::Stats(full.clone()).encode();
+        let old = &bytes[..bytes.len() - 24];
+        match Response::decode(old).unwrap() {
+            Response::Stats(got) => {
+                assert_eq!(got.delta_evals, 0);
+                assert_eq!(got.spliced_point_tasks, 0);
+                assert_eq!(got.dirty_fallbacks, 0);
+                assert_eq!(
+                    got,
+                    StatsSnapshot {
+                        delta_evals: 0,
+                        spliced_point_tasks: 0,
+                        dirty_fallbacks: 0,
+                        ..full
+                    }
+                );
+            }
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+        // and truncating inside the trio still classifies, never panics
+        for cut in 1..24 {
+            let err = Response::decode(&bytes[..bytes.len() - cut]).unwrap_err();
+            assert!(
+                matches!(err, DecodeError::Truncated),
+                "cut {cut}: unexpected {err:?}"
+            );
+        }
     }
 
     #[test]

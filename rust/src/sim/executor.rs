@@ -30,6 +30,86 @@ use crate::machine::{MachineSpec, MemId, MemKind, ProcId, ProcKind};
 /// Tile identity: (region index, linearized tile coordinate).
 type TileId = (usize, i64);
 
+/// [`TransferRec::ch`] sentinel: an intra-node copy (or a reduce fold),
+/// which charges time without booking a NIC channel.
+pub(super) const LOCAL_CH: u32 = u32::MAX;
+
+/// One recorded data-movement event of a point task.  Replay re-applies
+/// the exact arithmetic of the recording run against the *live* NIC
+/// timelines — absolute times are not retained, so a splice whose dirty
+/// cone shifts the clock still replays clean points correctly.
+#[derive(Clone, Copy)]
+pub(super) struct TransferRec {
+    /// Dense `src_node * nodes + dst_node` channel, or [`LOCAL_CH`].
+    pub(super) ch: u32,
+    pub(super) dt: f64,
+    pub(super) bytes: u64,
+}
+
+/// Kind of a recorded [`MemBook`] mutation.
+#[derive(Clone, Copy)]
+pub(super) enum MemOpKind {
+    /// First touch: set home, insert the home copy (no capacity check —
+    /// mirrors [`MemBook::home_or_init`]).
+    Init,
+    /// Insert a read/write copy; over capacity the cold path would
+    /// evict, so replay aborts the splice instead.
+    Add,
+    /// Remove a copy (write-back exclusivity or eager collection).
+    Drop,
+    /// Reassign the home after a write (no pool accounting).
+    SetHome,
+}
+
+/// One recorded memory-book mutation, in within-point program order.
+/// Replay applies these as full *state* ops (homes + copies + pools),
+/// so re-simulated neighbors observe live-correct residency for every
+/// tile the dirty cone did not perturb.
+#[derive(Clone, Copy)]
+pub(super) struct MemOpRec {
+    pub(super) kind: MemOpKind,
+    pub(super) region: u32,
+    pub(super) lin: i64,
+    pub(super) mem: MemId,
+    pub(super) bytes: u64,
+}
+
+/// Event log of one recorded run, retained inside a
+/// [`super::schedule::ScheduleSnapshot`].  Flat event vectors with
+/// per-point ranges — ~tens of bytes per point task, no per-point
+/// allocations.
+#[derive(Default)]
+pub(super) struct SimRecorder {
+    pub(super) transfers: Vec<TransferRec>,
+    pub(super) mem_ops: Vec<MemOpRec>,
+    /// Per-point busy microseconds (recorded, not re-derived, so
+    /// `end = t + busy_us` replays bit-identically).
+    pub(super) busy: Vec<f64>,
+    /// Per-point `(start, len)` into `transfers`.
+    pub(super) t_ranges: Vec<(u32, u32)>,
+    /// Per-point `(start, len)` into `mem_ops`.
+    pub(super) m_ranges: Vec<(u32, u32)>,
+    /// The run evicted a read copy under capacity pressure: its book
+    /// evolution is workload-dependent in a way replay cannot patch, so
+    /// the snapshot is not retained.
+    pub(super) evicted: bool,
+    last_busy: f64,
+}
+
+impl SimRecorder {
+    fn new(n: usize) -> SimRecorder {
+        SimRecorder {
+            transfers: Vec::new(),
+            mem_ops: Vec::new(),
+            busy: vec![0.0; n],
+            t_ranges: vec![(0, 0); n],
+            m_ranges: vec![(0, 0); n],
+            evicted: false,
+            last_busy: 0.0,
+        }
+    }
+}
+
 /// Memory bookkeeping: tile homes, resident copies, pool usage/eviction.
 #[derive(Default)]
 struct MemBook {
@@ -43,7 +123,13 @@ struct MemBook {
 
 impl MemBook {
     /// Home of a tile, initializing it on first touch.
-    fn home_or_init(&mut self, tile: TileId, init: MemId, bytes: u64) -> MemId {
+    fn home_or_init(
+        &mut self,
+        tile: TileId,
+        init: MemId,
+        bytes: u64,
+        rec: &mut Option<SimRecorder>,
+    ) -> MemId {
         if let Some(&h) = self.homes.get(&tile) {
             return h;
         }
@@ -53,6 +139,15 @@ impl MemBook {
         let u = self.used[&init];
         let p = self.peak.entry(init).or_insert(0);
         *p = (*p).max(u);
+        if let Some(r) = rec {
+            r.mem_ops.push(MemOpRec {
+                kind: MemOpKind::Init,
+                region: tile.0 as u32,
+                lin: tile.1,
+                mem: init,
+                bytes,
+            });
+        }
         init
     }
 
@@ -61,13 +156,18 @@ impl MemBook {
     }
 
     /// Add a copy of `tile` in `mem`, evicting other tiles' non-home read
-    /// copies from `mem` if the pool overflows.
+    /// copies from `mem` if the pool overflows.  With `strict` (the
+    /// splice path) entering the eviction branch errors instead — the
+    /// victim list would see only live tiles, so the caller must fall
+    /// back to a full simulation for the canonical outcome.
     fn add_copy(
         &mut self,
         tile: TileId,
         mem: MemId,
         bytes: u64,
         spec: &MachineSpec,
+        strict: bool,
+        rec: &mut Option<SimRecorder>,
     ) -> Result<(), ExecError> {
         if self.is_resident(tile, mem) {
             return Ok(());
@@ -75,6 +175,16 @@ impl MemBook {
         let capacity = spec.capacity(mem.kind);
         let mut used = *self.used.get(&mem).unwrap_or(&0);
         if used + bytes > capacity {
+            if strict {
+                return Err(ExecError::OutOfMemory {
+                    mem: mem.to_string(),
+                    needed: used + bytes,
+                    capacity,
+                });
+            }
+            if let Some(r) = rec {
+                r.evicted = true;
+            }
             // evict non-home copies of other tiles from this memory
             let victims: Vec<TileId> = self
                 .copies
@@ -107,11 +217,20 @@ impl MemBook {
         self.used.insert(mem, used);
         let p = self.peak.entry(mem).or_insert(0);
         *p = (*p).max(used);
+        if let Some(r) = rec {
+            r.mem_ops.push(MemOpRec {
+                kind: MemOpKind::Add,
+                region: tile.0 as u32,
+                lin: tile.1,
+                mem,
+                bytes,
+            });
+        }
         Ok(())
     }
 
     /// Drop a non-home copy (CollectMemory / GarbageCollect semantics).
-    fn collect_copy(&mut self, tile: TileId, mem: MemId) {
+    fn collect_copy(&mut self, tile: TileId, mem: MemId, rec: &mut Option<SimRecorder>) {
         if self.homes.get(&tile) == Some(&mem) {
             return; // never collect the valid home copy
         }
@@ -119,11 +238,20 @@ impl MemBook {
             if let Some(u) = self.used.get_mut(&mem) {
                 *u = u.saturating_sub(sz);
             }
+            if let Some(r) = rec {
+                r.mem_ops.push(MemOpRec {
+                    kind: MemOpKind::Drop,
+                    region: tile.0 as u32,
+                    lin: tile.1,
+                    mem,
+                    bytes: sz,
+                });
+            }
         }
     }
 
     /// After a write: `mem` holds the only valid copy and becomes home.
-    fn make_exclusive(&mut self, tile: TileId, mem: MemId) {
+    fn make_exclusive(&mut self, tile: TileId, mem: MemId, rec: &mut Option<SimRecorder>) {
         if let Some(copies) = self.copies.get_mut(&tile) {
             let drop: Vec<(MemId, u64)> = copies
                 .iter()
@@ -135,9 +263,67 @@ impl MemBook {
                 if let Some(u) = self.used.get_mut(&m) {
                     *u = u.saturating_sub(b);
                 }
+                if let Some(r) = rec {
+                    r.mem_ops.push(MemOpRec {
+                        kind: MemOpKind::Drop,
+                        region: tile.0 as u32,
+                        lin: tile.1,
+                        mem: m,
+                        bytes: b,
+                    });
+                }
             }
         }
         self.homes.insert(tile, mem);
+        if let Some(r) = rec {
+            r.mem_ops.push(MemOpRec {
+                kind: MemOpKind::SetHome,
+                region: tile.0 as u32,
+                lin: tile.1,
+                mem,
+                bytes: 0,
+            });
+        }
+    }
+
+    /// Replay one recorded mutation as a full state op.  `Err(())` means
+    /// a recorded `Add` would overflow its pool in the new run — exactly
+    /// where the cold path would start evicting — so the splice aborts.
+    fn apply_rec(&mut self, op: &MemOpRec, spec: &MachineSpec) -> Result<(), ()> {
+        let tile: TileId = (op.region as usize, op.lin);
+        match op.kind {
+            MemOpKind::Init => {
+                self.homes.insert(tile, op.mem);
+                self.copies.entry(tile).or_default().insert(op.mem, op.bytes);
+                let u = self.used.entry(op.mem).or_insert(0);
+                *u += op.bytes;
+                let u = *u;
+                let p = self.peak.entry(op.mem).or_insert(0);
+                *p = (*p).max(u);
+            }
+            MemOpKind::Add => {
+                let used = *self.used.get(&op.mem).unwrap_or(&0);
+                if used + op.bytes > spec.capacity(op.mem.kind) {
+                    return Err(());
+                }
+                self.copies.entry(tile).or_default().insert(op.mem, op.bytes);
+                self.used.insert(op.mem, used + op.bytes);
+                let p = self.peak.entry(op.mem).or_insert(0);
+                *p = (*p).max(used + op.bytes);
+            }
+            MemOpKind::Drop => {
+                if let Some(c) = self.copies.get_mut(&tile) {
+                    c.remove(&op.mem);
+                }
+                if let Some(u) = self.used.get_mut(&op.mem) {
+                    *u = u.saturating_sub(op.bytes);
+                }
+            }
+            MemOpKind::SetHome => {
+                self.homes.insert(tile, op.mem);
+            }
+        }
+        Ok(())
     }
 
     fn home(&self, tile: TileId) -> MemId {
@@ -212,6 +398,11 @@ pub(super) struct SimState<'a> {
     /// Dense per-processor busy seconds (folded into
     /// [`Metrics::per_proc_s`] at finalize).
     proc_busy: Vec<f64>,
+    /// Event recorder for delta re-simulation snapshots (None = free).
+    rec: Option<SimRecorder>,
+    /// Splice mode: entering the eviction branch errors instead of
+    /// evicting, so the caller falls back to a full simulation.
+    strict_mem: bool,
 }
 
 impl<'a> SimState<'a> {
@@ -240,6 +431,8 @@ impl<'a> SimState<'a> {
             m: Metrics::default(),
             task_busy,
             proc_busy,
+            rec: None,
+            strict_mem: false,
         }
     }
 
@@ -247,6 +440,39 @@ impl<'a> SimState<'a> {
     pub(super) fn proc_avail(&self, proc: ProcId) -> Option<f64> {
         let t = self.proc_time[self.spec.proc_lin(proc)];
         (t != f64::NEG_INFINITY).then_some(t)
+    }
+
+    /// Start recording an event log over `n` point tasks.
+    pub(super) fn enable_recording(&mut self, n: usize) {
+        self.rec = Some(SimRecorder::new(n));
+    }
+
+    /// Detach the recorded log (None if recording was never enabled).
+    pub(super) fn take_recorder(&mut self) -> Option<SimRecorder> {
+        self.rec.take()
+    }
+
+    /// Toggle splice-strict memory mode (see [`MemBook::add_copy`]).
+    pub(super) fn set_strict_mem(&mut self, on: bool) {
+        self.strict_mem = on;
+    }
+
+    /// Current event-log cursors, captured before a point simulation so
+    /// [`Self::rec_commit`] can close the point's ranges.
+    pub(super) fn rec_marks(&self) -> (usize, usize) {
+        match &self.rec {
+            Some(r) => (r.transfers.len(), r.mem_ops.len()),
+            None => (0, 0),
+        }
+    }
+
+    /// Close point `pi`'s event ranges after its simulation.
+    pub(super) fn rec_commit(&mut self, pi: usize, t0: usize, m0: usize) {
+        if let Some(r) = &mut self.rec {
+            r.t_ranges[pi] = (t0 as u32, (r.transfers.len() - t0) as u32);
+            r.m_ranges[pi] = (m0 as u32, (r.mem_ops.len() - m0) as u32);
+            r.busy[pi] = r.last_busy;
+        }
     }
 
     /// Simulate one launch point on `proc`, starting no earlier than
@@ -290,7 +516,7 @@ impl<'a> SimState<'a> {
                     MemId { node: g / per, kind: MemKind::FbMem, index: g % per }
                 }
             };
-            let home = self.book.home_or_init(tile, init_home, bytes);
+            let home = self.book.home_or_init(tile, init_home, bytes, &mut self.rec);
 
             // ---- transfer (fetch into the chosen memory) ------------------
             let needs_data =
@@ -298,18 +524,23 @@ impl<'a> SimState<'a> {
             if !self.book.is_resident(tile, mem) {
                 if needs_data && home != mem {
                     let dt = spec.transfer_us(home, mem, bytes);
-                    if home.node != mem.node {
+                    let ch = if home.node != mem.node {
                         let ch = home.node * spec.nodes + mem.node;
                         let begin = t.max(self.nic_busy[ch]);
                         self.nic_busy[ch] = begin + dt;
                         t = begin + dt;
+                        ch as u32
                     } else {
                         t += dt;
-                    }
+                        LOCAL_CH
+                    };
                     self.m.comm_bytes += bytes;
                     self.m.transfer_s += dt * 1e-6;
+                    if let Some(r) = &mut self.rec {
+                        r.transfers.push(TransferRec { ch, dt, bytes });
+                    }
                 }
-                self.book.add_copy(tile, mem, bytes, spec)?;
+                self.book.add_copy(tile, mem, bytes, spec, self.strict_mem, &mut self.rec)?;
             }
 
             // ---- access time ----------------------------------------------
@@ -322,7 +553,7 @@ impl<'a> SimState<'a> {
             // ---- write-back / ownership -----------------------------------
             match rr.access {
                 Access::Write | Access::ReadWrite => {
-                    self.book.make_exclusive(tile, mem);
+                    self.book.make_exclusive(tile, mem, &mut self.rec);
                 }
                 Access::Reduce => {
                     // fold the remote contribution into the home
@@ -332,6 +563,10 @@ impl<'a> SimState<'a> {
                         t += dt;
                         self.m.comm_bytes += bytes;
                         self.m.transfer_s += dt * 1e-6;
+                        // folds charge time without booking a NIC channel
+                        if let Some(r) = &mut self.rec {
+                            r.transfers.push(TransferRec { ch: LOCAL_CH, dt, bytes });
+                        }
                     }
                 }
                 Access::Read => {}
@@ -348,7 +583,7 @@ impl<'a> SimState<'a> {
                 let tile_coord = (rr.tile_of)(point);
                 let tile: TileId =
                     (rr.region, app.regions[rr.region].tile_lin(&tile_coord));
-                self.book.collect_copy(tile, mem);
+                self.book.collect_copy(tile, mem, &mut self.rec);
             }
         }
 
@@ -360,6 +595,60 @@ impl<'a> SimState<'a> {
         self.proc_time[plin] = end;
         self.m.busy_s += busy_us * 1e-6;
         self.task_busy[launch.task] += busy_us * 1e-6;
+        self.proc_busy[plin] += busy_us * 1e-6;
+        if let Some(r) = &mut self.rec {
+            r.last_busy = busy_us;
+        }
+        Ok((start, end))
+    }
+
+    /// Replay one clean point of a recorded run: re-applies its recorded
+    /// transfer and memory events with the exact arithmetic (and float
+    /// accumulation order) of [`Self::simulate_point`], against the live
+    /// NIC timelines and memory pools — so a splice whose dirty cone
+    /// shifted the clock or pool pressure still composes correctly.
+    /// `Err` means a recorded pool add would overflow in the new run
+    /// (the cold path would evict there); the caller falls back to a
+    /// full simulation for the canonical classification.
+    pub(super) fn replay_point(
+        &mut self,
+        task: usize,
+        proc: ProcId,
+        floor: f64,
+        transfers: &[TransferRec],
+        mem_ops: &[MemOpRec],
+        busy_us: f64,
+    ) -> Result<(f64, f64), ExecError> {
+        let plin = self.spec.proc_lin(proc);
+        let avail = self.proc_time[plin];
+        let mut t =
+            if avail == f64::NEG_INFINITY { floor } else { avail.max(floor) };
+        let start = t;
+        for tr in transfers {
+            if tr.ch != LOCAL_CH {
+                let ch = tr.ch as usize;
+                let begin = t.max(self.nic_busy[ch]);
+                self.nic_busy[ch] = begin + tr.dt;
+                t = begin + tr.dt;
+            } else {
+                t += tr.dt;
+            }
+            self.m.comm_bytes += tr.bytes;
+            self.m.transfer_s += tr.dt * 1e-6;
+        }
+        for op in mem_ops {
+            if self.book.apply_rec(op, self.spec).is_err() {
+                return Err(ExecError::OutOfMemory {
+                    mem: op.mem.to_string(),
+                    needed: op.bytes,
+                    capacity: self.spec.capacity(op.mem.kind),
+                });
+            }
+        }
+        let end = t + busy_us;
+        self.proc_time[plin] = end;
+        self.m.busy_s += busy_us * 1e-6;
+        self.task_busy[task] += busy_us * 1e-6;
         self.proc_busy[plin] += busy_us * 1e-6;
         Ok((start, end))
     }
@@ -376,8 +665,9 @@ impl<'a> SimState<'a> {
     /// The scratch vectors come back alongside the metrics so a warm
     /// caller can return them to its [`super::schedule::SimArena`].
     pub(super) fn finalize(self, app: &App, elapsed_us: f64) -> (Metrics, SimBuffers) {
-        let SimState { spec, proc_time, book, nic_busy, mut m, task_busy, proc_busy } =
-            self;
+        let SimState {
+            spec, proc_time, book, nic_busy, mut m, task_busy, proc_busy, ..
+        } = self;
         m.elapsed_s = elapsed_us * 1e-6;
         for (i, &busy) in task_busy.iter().enumerate() {
             if busy > 0.0 {
@@ -560,6 +850,10 @@ pub(super) fn instance_limit_check(
 
 /// Per-(launch, region-argument, proc-kind) mapping decision, resolved
 /// once per launch (§Perf hoist — policy queries scan statement lists).
+/// `PartialEq` backs the delta diff: two slots compare equal exactly
+/// when every simulated quantity they feed is identical (penalty values
+/// are finite, so `==` agrees with the fingerprint's bit comparison).
+#[derive(PartialEq)]
 pub(super) struct RegionDecision {
     pub(super) mem_kind: MemKind,
     pub(super) bytes: u64,

@@ -31,7 +31,8 @@ pub mod schedule;
 pub use executor::{run_mapper, run_mapper_with, ExecMode, Executor};
 pub use metrics::{CritEntry, ExecError, Metrics, PerfProfile};
 pub use schedule::{
-    execute_plan, resolve_decisions, EvalPlan, ResolvedDecisions, SimArena,
+    execute_plan, execute_plan_delta, execute_plan_recorded, resolve_decisions,
+    DeltaOutcome, EvalPlan, ResolvedDecisions, ScheduleSnapshot, SimArena,
 };
 
 #[cfg(test)]

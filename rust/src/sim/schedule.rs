@@ -64,10 +64,11 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::{Arc, OnceLock};
 
 use super::executor::{
     instance_limit_check, kind_slot, resolve_region_decisions, RegionDecision,
-    SimBuffers, SimState,
+    SimBuffers, SimRecorder, SimState,
 };
 use super::metrics::{CritEntry, ExecError, Metrics, PerfProfile};
 use crate::apps::taskgraph::{task_dag, App, DepMode, Launch, TaskDag};
@@ -140,6 +141,23 @@ pub struct EvalPlan {
     /// Initial predecessor counts ([`TaskDag::pred_counts`]), copied into
     /// the arena per eval instead of re-derived from the CSR.
     npreds0: Vec<u32>,
+    /// Point <-> tile incidence (policy-independent: tile coordinates are
+    /// a pure function of launch structure), built lazily on the first
+    /// delta evaluation and shared by every splice over this plan.
+    tiles: OnceLock<TileIndex>,
+}
+
+/// Interned point/tile incidence of a plan, both directions in CSR form.
+/// The delta path expands the decision-dirty point set one tile-sharing
+/// ring through this index: every point that can observe a perturbed
+/// tile re-simulates, everything else replays its recorded events.
+struct TileIndex {
+    /// Point `pi`'s (deduped) tile ids: `point_tiles[point_off[pi]..point_off[pi+1]]`.
+    point_off: Vec<u32>,
+    point_tiles: Vec<u32>,
+    /// Tile `t`'s touching points: `tile_points[tile_off[t]..tile_off[t+1]]`.
+    tile_off: Vec<u32>,
+    tile_points: Vec<u32>,
 }
 
 impl EvalPlan {
@@ -164,7 +182,67 @@ impl EvalPlan {
         }
         debug_assert_eq!(launch_of.len(), n);
         let npreds0 = dag.pred_counts();
-        EvalPlan { dep_mode, steps, dag, launches_flat, launch_of, launch_off, npreds0 }
+        EvalPlan {
+            dep_mode,
+            steps,
+            dag,
+            launches_flat,
+            launch_of,
+            launch_off,
+            npreds0,
+            tiles: OnceLock::new(),
+        }
+    }
+
+    /// The point/tile incidence index, built once per plan.  `app` must
+    /// be the app this plan was built from (the same contract as
+    /// [`execute_plan`]).
+    fn tile_index(&self, app: &App) -> &TileIndex {
+        self.tiles.get_or_init(|| {
+            let n = self.num_points();
+            let mut intern: HashMap<(usize, i64), u32> = HashMap::new();
+            let mut point_off: Vec<u32> = Vec::with_capacity(n + 1);
+            point_off.push(0);
+            let mut point_tiles: Vec<u32> = Vec::new();
+            for flat in 0..self.num_launches() {
+                let launch = self.launch(flat);
+                for pi in self.launch_off[flat]..self.launch_off[flat + 1] {
+                    let coords = self.dag.coords(pi);
+                    let row0 = point_tiles.len();
+                    for rr in &launch.regions {
+                        let lin =
+                            app.regions[rr.region].tile_lin(&(rr.tile_of)(coords));
+                        let next = intern.len() as u32;
+                        let id = *intern.entry((rr.region, lin)).or_insert(next);
+                        // dedup within the point (a tile can back several
+                        // region arguments of one task)
+                        if !point_tiles[row0..].contains(&id) {
+                            point_tiles.push(id);
+                        }
+                    }
+                    point_off.push(point_tiles.len() as u32);
+                }
+            }
+            // invert to tile -> points
+            let ntiles = intern.len();
+            let mut tile_off = vec![0u32; ntiles + 1];
+            for &t in &point_tiles {
+                tile_off[t as usize + 1] += 1;
+            }
+            for t in 0..ntiles {
+                tile_off[t + 1] += tile_off[t];
+            }
+            let mut cursor = tile_off.clone();
+            let mut tile_points = vec![0u32; point_tiles.len()];
+            for pi in 0..n {
+                for k in point_off[pi]..point_off[pi + 1] {
+                    let t = point_tiles[k as usize] as usize;
+                    tile_points[cursor[t] as usize] = pi as u32;
+                    cursor[t] += 1;
+                }
+            }
+            TileIndex { point_off, point_tiles, tile_off, tile_points }
+        })
     }
 
     pub fn dep_mode(&self) -> DepMode {
@@ -340,6 +418,275 @@ pub fn resolve_decisions(
     Ok(ResolvedDecisions { proc_of, decisions })
 }
 
+// ---------------------------------------------------------------------------
+// ScheduleSnapshot + delta re-simulation (cone-of-influence splicing)
+// ---------------------------------------------------------------------------
+
+/// Compact retained form of one recorded Serialized run: the decision
+/// vector it ran under, the plan's pop order, and per-point event logs
+/// (transfers as `(channel, dt, bytes)` — no absolute times — plus
+/// memory-book mutations and busy microseconds).  Tens of bytes per
+/// point task; [`execute_plan_delta`] splices a near-identical decision
+/// vector against it, re-simulating only the perturbed cone.
+///
+/// Only eviction-free, error-free Serialized runs with a resolved
+/// decision vector are retained ([`execute_plan_recorded`] returns
+/// `None` otherwise): Serialized pop order is a pure function of the
+/// DAG (every heap key is 0, readiness is structural), which is what
+/// makes the recorded order valid for any later decision vector.
+pub struct ScheduleSnapshot {
+    resolved: Arc<ResolvedDecisions>,
+    rec: SimRecorder,
+    /// Node pop sequence of the recording run (== any Serialized run of
+    /// this plan).
+    pop_order: Vec<u32>,
+}
+
+impl ScheduleSnapshot {
+    pub fn num_points(&self) -> usize {
+        self.resolved.num_points()
+    }
+
+    /// Approximate retained heap bytes (snapshot cache cost accounting).
+    pub fn retained_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.rec.transfers.len() * size_of::<super::executor::TransferRec>()
+            + self.rec.mem_ops.len() * size_of::<super::executor::MemOpRec>()
+            + self.rec.busy.len() * size_of::<f64>()
+            + (self.rec.t_ranges.len() + self.rec.m_ranges.len())
+                * size_of::<(u32, u32)>()
+            + self.pop_order.len() * size_of::<u32>()
+    }
+}
+
+/// Outcome of a splice attempt.  Never an error: any divergence risk
+/// (dirty cone too large, capacity pressure the recording run did not
+/// see, non-Serialized plan) declines, and the caller runs the full
+/// path for the canonical result.
+pub enum DeltaOutcome {
+    /// Splice succeeded; `metrics` is bit-identical to a cold run of the
+    /// new decision vector, and only `resim_points` of the plan's point
+    /// tasks were actually re-simulated.
+    Spliced { metrics: Metrics, resim_points: usize },
+    /// Splice declined or aborted (static reason tag, for telemetry).
+    Fallback(&'static str),
+}
+
+/// Points whose resolved decisions differ between `old` and `new`: the
+/// processor moved, or any region decision of the launch's kind slot
+/// changed.  Slot comparisons are memoized per (launch, kind).
+fn diff_dirty_points(
+    plan: &EvalPlan,
+    old: &ResolvedDecisions,
+    new: &ResolvedDecisions,
+) -> (Vec<bool>, usize) {
+    let n = plan.num_points();
+    let mut dirty = vec![false; n];
+    let mut count = 0usize;
+    let mut slot_eq: Vec<[Option<bool>; 3]> = vec![[None; 3]; plan.num_launches()];
+    for pi in 0..n {
+        let pn = new.proc_of[pi];
+        let mut d = old.proc_of[pi] != pn;
+        if !d {
+            let flat = plan.launch_of[pi] as usize;
+            let slot = kind_slot(pn.kind);
+            let eq = *slot_eq[flat][slot].get_or_insert_with(|| {
+                old.decisions[flat][slot] == new.decisions[flat][slot]
+            });
+            d = !eq;
+        }
+        if d {
+            dirty[pi] = true;
+            count += 1;
+        }
+    }
+    (dirty, count)
+}
+
+/// Splice `new_resolved` against a retained run of the same plan:
+/// compute the cone of influence (decision-dirty points expanded one
+/// tile-sharing ring, so every point that can observe a perturbed
+/// tile's state re-simulates), replay every clean point's recorded
+/// events verbatim, and run the real simulation only inside the cone.
+/// Clean replay applies recorded memory ops as full *state* mutations,
+/// so re-simulated points see live-correct residency for unperturbed
+/// tiles; re-simulated transfers book the live NIC timelines, so clock
+/// shifts compose.  When the cone exceeds `dirty_frac` of the point
+/// tasks — or anything at all diverges from the recording run's
+/// assumptions (capacity pressure, eviction) — the splice declines and
+/// the caller must run [`execute_plan`] cold.
+pub fn execute_plan_delta(
+    spec: &MachineSpec,
+    app: &App,
+    plan: &EvalPlan,
+    snap: &ScheduleSnapshot,
+    new_resolved: &ResolvedDecisions,
+    dirty_frac: f64,
+    arena: &mut SimArena,
+) -> DeltaOutcome {
+    let dag = &plan.dag;
+    let n = dag.num_points();
+    let nn = dag.num_nodes();
+    if plan.dep_mode != DepMode::Serialized {
+        return DeltaOutcome::Fallback("mode");
+    }
+    // the recording pops every point task but may stop before trailing
+    // synthetic nodes (the cold loop ends when the last point finishes),
+    // so the pop order is bounded by [n, nn]
+    if n == 0
+        || snap.num_points() != n
+        || new_resolved.num_points() != n
+        || snap.pop_order.len() < n
+        || snap.pop_order.len() > nn
+    {
+        return DeltaOutcome::Fallback("shape");
+    }
+
+    let (dirty, ndirty) = diff_dirty_points(plan, &snap.resolved, new_resolved);
+    let idx = plan.tile_index(app);
+    let mut resim = dirty;
+    let mut nresim = ndirty;
+    if ndirty > 0 {
+        let ntiles = idx.tile_off.len() - 1;
+        let mut tile_dirty = vec![false; ntiles];
+        for (pi, &d) in resim.iter().enumerate() {
+            if d {
+                for k in idx.point_off[pi]..idx.point_off[pi + 1] {
+                    tile_dirty[idx.point_tiles[k as usize] as usize] = true;
+                }
+            }
+        }
+        for (t, &td) in tile_dirty.iter().enumerate() {
+            if td {
+                for k in idx.tile_off[t]..idx.tile_off[t + 1] {
+                    let pj = idx.tile_points[k as usize] as usize;
+                    if !resim[pj] {
+                        resim[pj] = true;
+                        nresim += 1;
+                    }
+                }
+            }
+        }
+    }
+    if (nresim as f64) > dirty_frac * (n as f64) {
+        return DeltaOutcome::Fallback("frontier");
+    }
+
+    let mut st = SimState::with_buffers(spec, app, std::mem::take(&mut arena.sim));
+    st.set_strict_mem(true);
+    let mut ready_time = std::mem::take(&mut arena.ready_time);
+    ready_time.clear();
+    ready_time.resize(nn, 0.0);
+    let mut start_of = std::mem::take(&mut arena.start_of);
+    start_of.clear();
+    start_of.resize(nn, 0.0);
+    let mut end_of = std::mem::take(&mut arena.end_of);
+    end_of.clear();
+    end_of.resize(nn, 0.0);
+    let mut bind_of = std::mem::take(&mut arena.bind_of);
+    bind_of.clear();
+    bind_of.resize(nn, None);
+    let mut last_on_proc = std::mem::take(&mut arena.last_on_proc);
+    last_on_proc.clear();
+    last_on_proc.resize(spec.num_procs(), NO_TASK);
+
+    // the fallible splice core borrows every scratch buffer, so an
+    // aborting splice still hands them all back below
+    let mut splice = || -> Result<f64, ExecError> {
+        let mut makespan = 0.0f64;
+        for &node32 in &snap.pop_order {
+            let node = node32 as usize;
+            let end = match dag.point_of(node) {
+                None => {
+                    // synthetic barrier/gate: zero-duration bookkeeping
+                    let t = ready_time[node];
+                    bind_of[node] =
+                        if t > 0.0 { max_end_pred(dag, node, &end_of) } else { None };
+                    start_of[node] = t;
+                    end_of[node] = t;
+                    t
+                }
+                Some(pi) => {
+                    let proc = new_resolved.proc_of[pi];
+                    let avail_before = st.proc_avail(proc);
+                    let flat = plan.launch_of[pi] as usize;
+                    let launch = plan.launch(flat);
+                    let (start, end) = if resim[pi] {
+                        let slot = kind_slot(proc.kind);
+                        let decisions = new_resolved.decisions[flat][slot]
+                            .as_ref()
+                            .expect("resolved decisions cover every used kind");
+                        st.simulate_point(
+                            app,
+                            launch,
+                            decisions,
+                            dag.coords(pi),
+                            proc,
+                            ready_time[node],
+                        )?
+                    } else {
+                        let (t0, tl) = snap.rec.t_ranges[pi];
+                        let (m0, ml) = snap.rec.m_ranges[pi];
+                        st.replay_point(
+                            launch.task,
+                            proc,
+                            ready_time[node],
+                            &snap.rec.transfers[t0 as usize..(t0 + tl) as usize],
+                            &snap.rec.mem_ops[m0 as usize..(m0 + ml) as usize],
+                            snap.rec.busy[pi],
+                        )?
+                    };
+                    start_of[node] = start;
+                    end_of[node] = end;
+                    let plin = spec.proc_lin(proc);
+                    bind_of[node] = if avail_before.is_some_and(|a| a > ready_time[node])
+                    {
+                        let l = last_on_proc[plin];
+                        (l != NO_TASK).then_some(l)
+                    } else if ready_time[node] > 0.0 {
+                        max_end_pred(dag, node, &end_of)
+                    } else {
+                        None
+                    };
+                    last_on_proc[plin] = node32;
+                    end
+                }
+            };
+            makespan = makespan.max(end);
+            for &s in dag.succs_of(node) {
+                let s = s as usize;
+                if end > ready_time[s] {
+                    ready_time[s] = end;
+                }
+            }
+        }
+        Ok(makespan)
+    };
+    let out = match splice() {
+        Ok(makespan) => {
+            let profile = build_profile(
+                app, dag, &start_of, &end_of, &bind_of, makespan, DepMode::Serialized,
+            );
+            let (mut m, bufs) = st.finalize(app, makespan);
+            m.profile = Some(attach_idle(profile, &m, spec));
+            arena.sim = bufs;
+            DeltaOutcome::Spliced { metrics: m, resim_points: nresim }
+        }
+        Err(_) => {
+            // capacity pressure the recording run never saw — eviction
+            // and OOM classification belong to the cold path
+            arena.sim = st.recycle();
+            DeltaOutcome::Fallback("capacity")
+        }
+    };
+    arena.ready_time = ready_time;
+    arena.start_of = start_of;
+    arena.end_of = end_of;
+    arena.bind_of = bind_of;
+    arena.last_on_proc = last_on_proc;
+    out
+}
+
 /// Execute `app` under `policy` on the dependency-aware engine over a
 /// throwaway plan, with scratch drawn from a caller-provided (reusable)
 /// arena — the standalone path behind [`super::Executor`]; services
@@ -372,11 +719,61 @@ pub fn execute_plan(
     resolved: Option<&ResolvedDecisions>,
     arena: &mut SimArena,
 ) -> Result<Metrics, ExecError> {
+    execute_plan_inner(spec, app, policy, plan, resolved, arena, false).0
+}
+
+/// [`execute_plan`] with event recording: on a successful, eviction-free
+/// Serialized run the returned [`ScheduleSnapshot`] retains everything
+/// [`execute_plan_delta`] needs to splice later near-identical decision
+/// vectors.  Returns `None` for the snapshot otherwise (Inferred plans,
+/// errors, eviction under capacity pressure); metrics and errors are
+/// bit-identical to the unrecorded path — recording only appends to
+/// side logs.
+pub fn execute_plan_recorded(
+    spec: &MachineSpec,
+    app: &App,
+    policy: &MappingPolicy,
+    plan: &EvalPlan,
+    resolved: &Arc<ResolvedDecisions>,
+    arena: &mut SimArena,
+) -> (Result<Metrics, ExecError>, Option<ScheduleSnapshot>) {
+    let (res, parts) =
+        execute_plan_inner(spec, app, policy, plan, Some(resolved), arena, true);
+    let snap = match (&res, parts) {
+        (Ok(_), Some((rec, pop_order))) if !rec.evicted => Some(ScheduleSnapshot {
+            resolved: Arc::clone(resolved),
+            rec,
+            pop_order,
+        }),
+        _ => None,
+    };
+    (res, snap)
+}
+
+fn execute_plan_inner(
+    spec: &MachineSpec,
+    app: &App,
+    policy: &MappingPolicy,
+    plan: &EvalPlan,
+    resolved: Option<&ResolvedDecisions>,
+    arena: &mut SimArena,
+    record: bool,
+) -> (Result<Metrics, ExecError>, Option<(SimRecorder, Vec<u32>)>) {
     let dep_mode = plan.dep_mode;
     let dag = &plan.dag;
     let n = dag.num_points();
     let nn = dag.num_nodes();
     let mut st = SimState::with_buffers(spec, app, std::mem::take(&mut arena.sim));
+
+    // Record only what a ScheduleSnapshot can later replay: a resolved
+    // Serialized run with at least one point task.
+    let record =
+        record && dep_mode == DepMode::Serialized && resolved.is_some() && n > 0;
+    if record {
+        st.enable_recording(n);
+    }
+    let mut pop_order: Vec<u32> =
+        if record { Vec::with_capacity(nn) } else { Vec::new() };
 
     // parent (top-level) task runs on CPU 0 of node 0
     let parent = ProcId { node: 0, kind: ProcKind::Cpu, index: 0 };
@@ -389,7 +786,7 @@ pub fn execute_plan(
             for &(step, li) in &plan.launches_flat {
                 if let Err(e) = init_launch(policy, app, &plan.steps[step][li], spec) {
                     arena.sim = st.recycle();
-                    return Err(e);
+                    return (Err(e), None);
                 }
             }
         }
@@ -408,7 +805,7 @@ pub fn execute_plan(
             mean_slack_s: 0.0,
             zero_slack_tasks: 0,
         });
-        return Ok(m);
+        return (Ok(m), None);
     }
 
     // Launch-invariant resolutions, used (and filled, via the lazy
@@ -458,7 +855,7 @@ pub fn execute_plan(
         if let Err(e) = fill() {
             arena.sim = st.recycle();
             arena.proc_of = own_proc_of;
-            return Err(e);
+            return (Err(e), None);
         }
     }
     let proc_of: &[ProcId] = match resolved {
@@ -535,6 +932,9 @@ pub fn execute_plan(
                     continue;
                 }
             }
+            if record {
+                pop_order.push(node32);
+            }
 
             let end = match dag.point_of(node) {
                 None => {
@@ -588,6 +988,7 @@ pub fn execute_plan(
                     };
 
                     let avail_before = st.proc_avail(proc);
+                    let marks = st.rec_marks();
                     let (start, end) = st.simulate_point(
                         app,
                         launch,
@@ -596,6 +997,9 @@ pub fn execute_plan(
                         proc,
                         ready_time[node],
                     )?;
+                    if record {
+                        st.rec_commit(pi, marks.0, marks.1);
+                    }
                     start_of[node] = start;
                     end_of[node] = end;
 
@@ -649,19 +1053,20 @@ pub fn execute_plan(
     };
     let sched = schedule();
 
-    let out = match sched {
+    let (out, parts) = match sched {
         Ok(makespan) => {
             let profile = build_profile(
                 app, dag, &start_of, &end_of, &bind_of, makespan, dep_mode,
             );
+            let rec = st.take_recorder();
             let (mut m, bufs) = st.finalize(app, makespan);
             m.profile = Some(attach_idle(profile, &m, spec));
             arena.sim = bufs;
-            Ok(m)
+            (Ok(m), rec.map(|r| (r, pop_order)))
         }
         Err(e) => {
             arena.sim = st.recycle();
-            Err(e)
+            (Err(e), None)
         }
     };
 
@@ -674,7 +1079,7 @@ pub fn execute_plan(
     arena.last_on_proc = last_on_proc;
     arena.heap = heap;
     arena.proc_of = own_proc_of;
-    out
+    (out, parts)
 }
 
 /// Critical-path walk + per-task attribution + slack (idle fractions are
@@ -888,5 +1293,142 @@ mod tests {
         let m = execute_plan(&spec, &app, &good, &plan, Some(&res), &mut arena)
             .unwrap();
         assert!(m.throughput > 0.0);
+    }
+
+    /// Bit-exact metric equality, field by field (f64s compared by bit
+    /// pattern — the delta≡cold invariant allows no rounding slack).
+    fn assert_metrics_eq(a: &Metrics, b: &Metrics) {
+        assert_eq!(a.elapsed_s.to_bits(), b.elapsed_s.to_bits(), "elapsed_s");
+        assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "throughput");
+        assert_eq!(a.unit, b.unit);
+        assert_eq!(a.comm_bytes, b.comm_bytes);
+        assert_eq!(a.transfer_s.to_bits(), b.transfer_s.to_bits(), "transfer_s");
+        assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits(), "busy_s");
+        assert_eq!(a.per_task_s, b.per_task_s);
+        assert_eq!(a.per_proc_s, b.per_proc_s);
+        assert_eq!(a.peak_mem, b.peak_mem);
+        assert_eq!(a.profile, b.profile);
+    }
+
+    /// Point-task mapper over the 8x4x2 tile grid of
+    /// `Stencil3dConfig::with_min_point_tasks(1000)`.  `retarget`
+    /// pins one spatial tile's tasks onto GPU (0, 0) via the DSL
+    /// ternary — a single-decision optimizer-step delta.
+    fn delta_mapper(retarget: Option<i64>) -> String {
+        let ret = match retarget {
+            Some(k) => format!(
+                "return lin == {k} ? mgpu[0, 0] : \
+                 mgpu[lin % mgpu.size[0], lin % mgpu.size[1]];"
+            ),
+            None => {
+                "return mgpu[lin % mgpu.size[0], lin % mgpu.size[1]];".to_string()
+            }
+        };
+        format!(
+            "Task * GPU;\nRegion * * GPU FBMEM;\n\
+             Layout * * * SOA C_order Align==64;\n\
+             mgpu = Machine(GPU);\n\
+             def send(Tuple ipoint, Tuple ispace) {{\n\
+             \x20 lin = (ipoint[0] * 4 + ipoint[1]) * 2 + ipoint[2];\n\
+             \x20 {ret}\n}}\n\
+             IndexTaskMap * send;\n"
+        )
+    }
+
+    /// The tentpole invariant at the engine level: a recorded base run
+    /// plus a single-decision delta splices bit-identically to a cold
+    /// run of the new decision vector, re-simulating only the cone.
+    #[test]
+    fn delta_splice_is_bit_identical_to_cold() {
+        let spec = MachineSpec::p100_cluster();
+        let app = crate::apps::stencil3d(
+            crate::apps::Stencil3dConfig::with_min_point_tasks(1000),
+        );
+        let plan = EvalPlan::build(&app, DepMode::Serialized);
+        let mut arena = SimArena::new();
+        let base = MappingPolicy::compile(&delta_mapper(None), &spec).unwrap();
+        let resolved =
+            Arc::new(resolve_decisions(&plan, &app, &base, &spec).unwrap());
+        let (res, snap) =
+            execute_plan_recorded(&spec, &app, &base, &plan, &resolved, &mut arena);
+        let base_m = res.unwrap();
+        let snap = snap.expect("eviction-free Serialized run retains a snapshot");
+        assert_eq!(snap.num_points(), plan.num_points());
+        assert!(snap.retained_bytes() > 0);
+
+        // identical decisions: a pure replay, zero re-simulated points
+        match execute_plan_delta(&spec, &app, &plan, &snap, &resolved, 0.25, &mut arena)
+        {
+            DeltaOutcome::Spliced { metrics, resim_points } => {
+                assert_eq!(resim_points, 0, "identity delta re-simulates nothing");
+                assert_metrics_eq(&metrics, &base_m);
+            }
+            DeltaOutcome::Fallback(why) => panic!("identity delta declined: {why}"),
+        }
+
+        // single-tile retargets: small cone, bit-identical to cold
+        for k in [1i64, 5, 9] {
+            let p = MappingPolicy::compile(&delta_mapper(Some(k)), &spec).unwrap();
+            let newr = resolve_decisions(&plan, &app, &p, &spec).unwrap();
+            let cold = execute_plan(&spec, &app, &p, &plan, Some(&newr), &mut arena)
+                .unwrap();
+            match execute_plan_delta(&spec, &app, &plan, &snap, &newr, 0.5, &mut arena)
+            {
+                DeltaOutcome::Spliced { metrics, resim_points } => {
+                    assert!(
+                        resim_points > 0 && resim_points < plan.num_points() / 2,
+                        "cone must be a strict minority of the DAG, got {resim_points}"
+                    );
+                    assert_metrics_eq(&metrics, &cold);
+                }
+                DeltaOutcome::Fallback(why) => {
+                    panic!("single-tile delta (k={k}) declined: {why}")
+                }
+            }
+            // a zero threshold forces the frontier fallback on any
+            // nonempty diff — the knob that disables splicing outright
+            match execute_plan_delta(&spec, &app, &plan, &snap, &newr, 0.0, &mut arena)
+            {
+                DeltaOutcome::Fallback(why) => assert_eq!(why, "frontier"),
+                DeltaOutcome::Spliced { .. } => {
+                    panic!("zero dirty_frac must decline")
+                }
+            }
+        }
+
+        // the arena stays healthy across splices and still serves the
+        // cold path bit-identically
+        let m2 = execute_plan(&spec, &app, &base, &plan, Some(&resolved), &mut arena)
+            .unwrap();
+        assert_metrics_eq(&m2, &base_m);
+    }
+
+    /// Recording is Serialized-only: Inferred plans return no snapshot
+    /// (their pop order is decision-dependent), and a Serialized
+    /// snapshot never splices onto an Inferred plan.
+    #[test]
+    fn recording_and_splice_are_serialized_only() {
+        let spec = MachineSpec::p100_cluster();
+        let app = crate::apps::stencil3d(crate::apps::Stencil3dConfig::default());
+        let policy = MappingPolicy::compile(&delta_mapper(None), &spec).unwrap();
+
+        let iplan = EvalPlan::build(&app, DepMode::Inferred);
+        let mut arena = SimArena::new();
+        let ir = Arc::new(resolve_decisions(&iplan, &app, &policy, &spec).unwrap());
+        let (res, snap) =
+            execute_plan_recorded(&spec, &app, &policy, &iplan, &ir, &mut arena);
+        res.unwrap();
+        assert!(snap.is_none(), "Inferred runs must not retain snapshots");
+
+        let splan = EvalPlan::build(&app, DepMode::Serialized);
+        let sr = Arc::new(resolve_decisions(&splan, &app, &policy, &spec).unwrap());
+        let (res, snap) =
+            execute_plan_recorded(&spec, &app, &policy, &splan, &sr, &mut arena);
+        res.unwrap();
+        let snap = snap.unwrap();
+        match execute_plan_delta(&spec, &app, &iplan, &snap, &ir, 1.0, &mut arena) {
+            DeltaOutcome::Fallback(why) => assert_eq!(why, "mode"),
+            DeltaOutcome::Spliced { .. } => panic!("Inferred plan must decline"),
+        }
     }
 }

@@ -14,15 +14,16 @@ use mapperopt::apps::{
 use mapperopt::coordinator::{PrioritySnapshot, SpecSnapshot, StatsSnapshot};
 use mapperopt::dsl::{MappingPolicy, TaskCtx};
 use mapperopt::feedback::SystemFeedback;
-use mapperopt::machine::{MachineSpec, ProcKind, ProcSpace};
+use mapperopt::machine::{MachineSpec, MemKind, ProcKind, ProcSpace};
 use mapperopt::net::proto::{
     DecodeError, Request, Response, Scenario, SpecRef, WireEvalRequest,
     WIRE_VERSION,
 };
-use mapperopt::optimizer::{AgentGenome, AppInfo};
+use mapperopt::optimizer::{agent::random_index_gene, AgentGenome, AppInfo, LayoutGene};
 use mapperopt::sim::{
-    execute_plan, resolve_decisions, run_mapper_with, CritEntry, EvalPlan,
-    ExecMode, Executor, PerfProfile, SimArena,
+    execute_plan, execute_plan_delta, execute_plan_recorded, resolve_decisions,
+    run_mapper_with, CritEntry, DeltaOutcome, EvalPlan, ExecMode, Executor,
+    Metrics, PerfProfile, SimArena,
 };
 use mapperopt::util::proptest::{check, env_cases};
 use mapperopt::util::rng::Rng;
@@ -668,6 +669,9 @@ fn rand_snapshot(rng: &mut Rng) -> StatsSnapshot {
         evicted_decisions: rng.below(100) as u64,
         max_queue_depth: rng.below(1000) as u64,
         batch_occupancy: rand_f64(rng),
+        delta_evals: rng.below(100_000) as u64,
+        spliced_point_tasks: rng.next_u64() >> 1,
+        dirty_fallbacks: rng.below(100_000) as u64,
         specs: (0..rng.below(4))
             .map(|_| SpecSnapshot {
                 name: rand_string(rng),
@@ -775,5 +779,180 @@ fn property_wire_malformed_frames_classify_never_panic() {
         }
         let _ = Request::decode(&soup);
         let _ = Response::decode(&soup);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Incremental delta re-simulation (cone-of-influence splicing)
+// ---------------------------------------------------------------------------
+
+/// Bit-exact metric equality — the delta≡cold invariant allows no
+/// rounding slack anywhere, profiles included.
+fn assert_metrics_bit_eq(a: &Metrics, b: &Metrics, ctx: &str) {
+    assert_eq!(a.elapsed_s.to_bits(), b.elapsed_s.to_bits(), "{ctx}: elapsed_s");
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{ctx}: throughput");
+    assert_eq!(a.unit, b.unit, "{ctx}: unit");
+    assert_eq!(a.comm_bytes, b.comm_bytes, "{ctx}: comm_bytes");
+    assert_eq!(a.transfer_s.to_bits(), b.transfer_s.to_bits(), "{ctx}: transfer_s");
+    assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits(), "{ctx}: busy_s");
+    assert_eq!(a.per_task_s, b.per_task_s, "{ctx}: per_task_s");
+    assert_eq!(a.per_proc_s, b.per_proc_s, "{ctx}: per_proc_s");
+    assert_eq!(a.peak_mem, b.peak_mem, "{ctx}: peak_mem");
+    assert_eq!(a.profile, b.profile, "{ctx}: profile");
+}
+
+/// Perturb 1..=k genes of a genome — the optimizer-step shape the delta
+/// path exists for: a handful of decision edits, not a rewrite.
+fn perturb_genome(g: &mut AgentGenome, info: &AppInfo, rng: &mut Rng) {
+    let edits = 1 + rng.below(3);
+    for _ in 0..edits {
+        match rng.below(4) {
+            0 if !info.tasks.is_empty() => {
+                let t = rng.choose(&info.tasks);
+                let kinds: Vec<Vec<ProcKind>> = vec![
+                    vec![ProcKind::Gpu, ProcKind::Cpu],
+                    vec![ProcKind::Cpu],
+                    vec![ProcKind::Omp, ProcKind::Cpu],
+                    vec![ProcKind::Gpu],
+                ];
+                g.task_procs.insert(t.name.clone(), rng.choose(&kinds).clone());
+            }
+            1 if !info.region_args.is_empty() => {
+                let r = rng.choose(&info.region_args);
+                let mems = [MemKind::FbMem, MemKind::ZcMem];
+                g.region_mems.insert(r.name.clone(), *rng.choose(&mems));
+            }
+            2 if !info.region_args.is_empty() => {
+                let r = rng.choose(&info.region_args);
+                g.layouts.insert(
+                    r.name.clone(),
+                    LayoutGene {
+                        aos: rng.chance(0.5),
+                        f_order: rng.chance(0.5),
+                        align: *rng.choose(&[None, Some(16), Some(64), Some(128)]),
+                    },
+                );
+            }
+            _ => {
+                let indexed: Vec<&mapperopt::optimizer::agent::TaskInfo> =
+                    info.tasks.iter().filter(|t| t.index_dims > 0).collect();
+                if !indexed.is_empty() {
+                    let t = rng.choose(&indexed);
+                    g.index_maps.insert(
+                        t.name.clone(),
+                        random_index_gene(t.index_dims, rng),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The tentpole invariant (extends PR 4's warm≡cold property): given a
+/// recorded base run and a 1..k-gene decision delta, the splice path
+/// either (a) produces metrics + profile bit-identical to a cold run of
+/// the new decision vector, or (b) declines and the caller's cold path
+/// is canonical by construction.  A splice never succeeds where the
+/// cold run errors; forced-fallback (zero threshold) declines any
+/// nonempty diff; non-Serialized modes never record a snapshot.
+#[test]
+fn property_delta_eval_is_bit_identical_to_cold() {
+    let machines = [MachineSpec::p100_cluster(), MachineSpec::small()];
+    let modes = [ExecMode::BulkSync, ExecMode::Serialized, ExecMode::OutOfOrder];
+    let mut arena = SimArena::new();
+    // plans shared across cases, like the service's plan cache
+    let mut plans: std::collections::HashMap<(&str, &str), Arc<EvalPlan>> =
+        std::collections::HashMap::new();
+    check(0xDE17A, env_cases(60), |rng: &mut Rng| {
+        let bench = *rng.choose(&apps::ALL_APPS);
+        let s = &machines[rng.below(machines.len())];
+        let mode = modes[rng.below(modes.len())];
+        let app = apps::by_name(bench).unwrap();
+        let info = AppInfo::from_app(&app);
+        let mut g = AgentGenome::random(&info, rng);
+        g.syntax_slip = false;
+        g.missing_machine = false;
+        let mut gd = g.clone();
+        perturb_genome(&mut gd, &info, rng);
+
+        let Some(dep) = mode.dep_mode() else {
+            // BulkSync has no DAG plan and thus no snapshot surface; the
+            // service's delta path is unreachable there by construction
+            return;
+        };
+        let base_policy = MappingPolicy::compile(&g.render(), s).unwrap();
+        let delta_policy = MappingPolicy::compile(&gd.render(), s).unwrap();
+        let plan = Arc::clone(plans.entry((bench, mode.name())).or_insert_with(
+            || Arc::new(EvalPlan::build(&app, dep)),
+        ));
+        let (Ok(rb), Ok(rd)) = (
+            resolve_decisions(&plan, &app, &base_policy, s),
+            resolve_decisions(&plan, &app, &delta_policy, s),
+        ) else {
+            // a resolution error routes the service down the cold
+            // `execute_plan(.., None, ..)` path; no snapshot, no splice
+            return;
+        };
+        let rb = Arc::new(rb);
+
+        // recording must not perturb the base run
+        let (bres, snap) =
+            execute_plan_recorded(s, &app, &base_policy, &plan, &rb, &mut arena);
+        let bcold = execute_plan(s, &app, &base_policy, &plan, Some(&rb), &mut arena);
+        match (&bres, &bcold) {
+            (Ok(a), Ok(b)) => assert_metrics_bit_eq(a, b, &format!("{bench} base")),
+            (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string()),
+            _ => panic!("{bench}: recording changed the base outcome category"),
+        }
+
+        if dep != DepMode::Serialized {
+            assert!(snap.is_none(), "{bench}: non-Serialized run recorded");
+            return;
+        }
+
+        let dcold = execute_plan(s, &app, &delta_policy, &plan, Some(&rd), &mut arena);
+        let Some(snap) = snap else {
+            // base errored or ran under eviction pressure: nothing
+            // retained, the service diffs against no incumbent
+            return;
+        };
+
+        // permissive threshold: exercise the splice on any cone size
+        match execute_plan_delta(s, &app, &plan, &snap, &rd, 1.0, &mut arena) {
+            DeltaOutcome::Spliced { metrics, resim_points } => {
+                assert!(resim_points <= plan.num_points());
+                let c = dcold.as_ref().unwrap_or_else(|e| {
+                    panic!("{bench} on {} ({}): splice succeeded where cold errors: {e}",
+                        s.name, mode.name())
+                });
+                assert_metrics_bit_eq(
+                    &metrics,
+                    c,
+                    &format!("{bench} on {} ({})", s.name, mode.name()),
+                );
+            }
+            // a decline is always sound: the caller re-runs cold, which
+            // is canonical for metrics and error classification alike
+            DeltaOutcome::Fallback(why) => {
+                assert!(
+                    matches!(why, "mode" | "shape" | "frontier" | "capacity"),
+                    "{bench}: unknown fallback tag {why}"
+                );
+            }
+        }
+
+        // forced fallback: a zero threshold declines every nonempty
+        // diff (and an empty diff must replay bit-identically)
+        match execute_plan_delta(s, &app, &plan, &snap, &rd, 0.0, &mut arena) {
+            DeltaOutcome::Fallback(why) => assert_eq!(why, "frontier"),
+            DeltaOutcome::Spliced { metrics, resim_points } => {
+                assert_eq!(
+                    resim_points, 0,
+                    "{bench}: zero threshold spliced a dirty cone"
+                );
+                let c = dcold.as_ref().expect("identity splice but cold errors");
+                assert_metrics_bit_eq(&metrics, c, &format!("{bench} identity"));
+            }
+        }
     });
 }
