@@ -18,6 +18,10 @@
 #                    concurrent remote campaigns against it, and assert
 #                    remote == in-process bit-identically (the example
 #                    self-enforces a deadline so CI can never hang)
+#   make chaos-smoke run a remote campaign through the seeded chaos
+#                    proxy (delays, corruption, truncation, resets) and
+#                    assert it is bit-identical to a clean local run
+#                    with retries and reconnects actually exercised
 #   make artifacts   AOT-lower the python task bodies to artifacts/*.hlo.txt
 #                    (needed only for the PJRT runtime path; tests skip
 #                    cleanly when artifacts/ is absent)
@@ -27,7 +31,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 PROPTEST_CASES ?= 400
 
-.PHONY: build test verify test-props bench-smoke bench-json serve-smoke fmt fmt-check clippy ci artifacts figures clean
+.PHONY: build test verify test-props bench-smoke bench-json serve-smoke chaos-smoke fmt fmt-check clippy ci artifacts figures clean
 
 build:
 	$(CARGO) build --release
@@ -52,6 +56,9 @@ bench-json:
 
 serve-smoke:
 	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release --example e2e_remote
+
+chaos-smoke:
+	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release -- chaos-smoke
 
 fmt:
 	$(CARGO) fmt --all

@@ -46,7 +46,7 @@ use crate::apps::{self, App};
 use crate::dsl::MappingPolicy;
 use crate::feedback::{FeedbackConfig, SystemFeedback};
 use crate::machine::MachineSpec;
-use crate::net::client::RemoteEvalClient;
+use crate::net::client::{RemoteEvalClient, RetryPolicy};
 use crate::net::proto::{Scenario, SpecRef};
 use crate::optimizer::{
     AppInfo, IterationRecord, Optimizer, OproOptimizer, TraceOptimizer,
@@ -209,7 +209,19 @@ impl Coordinator {
         spec_name: &str,
         mode: ExecMode,
     ) -> Result<Coordinator, String> {
-        let client = RemoteEvalClient::connect(addr)
+        Coordinator::remote_with(addr, spec_name, mode, RetryPolicy::default())
+    }
+
+    /// [`Coordinator::remote`] with an explicit [`RetryPolicy`] — how
+    /// aggressively the underlying [`RemoteEvalClient`] retries,
+    /// reconnects, and deadlines each request when the wire misbehaves.
+    pub fn remote_with(
+        addr: &str,
+        spec_name: &str,
+        mode: ExecMode,
+        policy: RetryPolicy,
+    ) -> Result<Coordinator, String> {
+        let client = RemoteEvalClient::connect_with(addr, policy)
             .map_err(|e| format!("cannot connect to eval server at {addr}: {e}"))?;
         let (id, spec) = client.spec(spec_name)?;
         Ok(Coordinator::on_client(Arc::new(client), id, spec, mode))

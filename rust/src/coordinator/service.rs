@@ -54,7 +54,7 @@
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread;
 use std::time::Instant;
@@ -119,6 +119,13 @@ pub struct CacheConfig {
     /// DAG (see [`crate::sim::execute_plan_delta`]).  `0.0` disables
     /// splicing entirely; overridable via `MAPPEROPT_DELTA_DIRTY_FRAC`.
     pub delta_dirty_frac: f64,
+    /// Queue depth at which [`EvalService::try_submit`] starts shedding
+    /// lowest-priority work instead of queueing (admission control for
+    /// the serving path; the blocking [`EvalService::submit`] is
+    /// unaffected).  `0` means "at queue capacity"; values above the
+    /// queue capacity clamp to it.  Overridable via
+    /// `MAPPEROPT_QUEUE_HIGH_WATER`.
+    pub queue_high_water: usize,
 }
 
 impl Default for CacheConfig {
@@ -128,6 +135,10 @@ impl Default for CacheConfig {
             .and_then(|v| v.parse::<f64>().ok())
             .filter(|f| f.is_finite() && (0.0..=1.0).contains(f))
             .unwrap_or(0.25);
+        let queue_high_water = std::env::var("MAPPEROPT_QUEUE_HIGH_WATER")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(0);
         CacheConfig {
             feedback_cap: 1 << 16,
             plan_cap: 64,
@@ -135,6 +146,7 @@ impl Default for CacheConfig {
             decision_cap: 1 << 16,
             snapshot_cap: 8,
             delta_dirty_frac,
+            queue_high_water,
         }
     }
 }
@@ -404,6 +416,28 @@ impl<T> PriorityRing<T> {
         self.rings.get(&priority).map_or(0, VecDeque::len)
     }
 
+    /// Lowest live priority level, if any work is queued.
+    fn lowest_priority(&self) -> Option<u8> {
+        self.rings.keys().next().copied()
+    }
+
+    /// Evict the *newest* job of the lowest live level (admission
+    /// control sacrifices the work that has waited least at the level
+    /// that matters least; older jobs at the same level keep their FIFO
+    /// position).
+    fn shed_lowest(&mut self) -> Option<T> {
+        let key = self.lowest_priority()?;
+        let ring = self.rings.get_mut(&key).expect("live ring");
+        let item = ring.pop_back();
+        if ring.is_empty() {
+            self.rings.remove(&key);
+        }
+        if item.is_some() {
+            self.len -= 1;
+        }
+        item
+    }
+
     /// `(priority, queued)` for every live level, ascending.
     fn depths(&self) -> Vec<(u8, usize)> {
         self.rings.iter().map(|(p, q)| (*p, q.len())).collect()
@@ -414,6 +448,12 @@ impl<T> PriorityRing<T> {
 struct TicketSlot {
     done: Mutex<Option<SystemFeedback>>,
     cv: Condvar,
+    /// Nonzero when admission control shed this request instead of
+    /// evaluating it: the retry-after hint in milliseconds (clamped to
+    /// at least 1 so "shed" and "not shed" never alias).  The serving
+    /// layer turns a shed ticket into a wire `Overloaded` error; local
+    /// callers see the classified execution-error feedback.
+    shed: AtomicU64,
 }
 
 impl TicketSlot {
@@ -461,6 +501,17 @@ impl EvalTicket {
 
     pub fn is_done(&self) -> bool {
         self.slot.done.lock().unwrap().is_some()
+    }
+
+    /// `Some(hint_ms)` when admission control shed this request instead
+    /// of evaluating it (the ticket is already resolved with a
+    /// classified execution error; the hint says how long to back off
+    /// before resubmitting).
+    pub fn shed_retry_after_ms(&self) -> Option<u64> {
+        match self.slot.shed.load(Ordering::Relaxed) {
+            0 => None,
+            ms => Some(ms),
+        }
     }
 }
 
@@ -521,6 +572,13 @@ pub struct ServiceStats {
     /// simulation (dirty cone over threshold, capacity pressure, or an
     /// incompatible shape).
     pub dirty_fallbacks: AtomicUsize,
+    /// Requests shed by admission control ([`EvalService::try_submit`]
+    /// at the queue high-water mark, or the server's per-connection
+    /// in-flight cap).  Each shed request still counts as submitted and
+    /// completed, so `evals + cache_hits + shed == submitted` holds.
+    pub shed_requests: AtomicUsize,
+    /// Zombie connections reaped by the server's idle/read deadline.
+    pub reaped_connections: AtomicUsize,
     /// LRU evictions per cache (feedback / plan / policy / decision).
     pub evicted_feedback: AtomicUsize,
     pub evicted_plans: AtomicUsize,
@@ -656,6 +714,20 @@ pub struct StatsSnapshot {
     pub spliced_point_tasks: u64,
     /// Splice attempts that fell back to a full simulation.
     pub dirty_fallbacks: u64,
+    /// Requests shed by admission control (queue high-water mark or
+    /// per-connection in-flight cap).
+    pub shed_requests: u64,
+    /// Zombie connections reaped by the server's idle/read deadline.
+    pub reaped_connections: u64,
+    /// Client-side: requests re-sent by the retry machinery.  The
+    /// server encodes 0; [`RemoteEvalClient`] overlays its own counter
+    /// into fetched snapshots.
+    ///
+    /// [`RemoteEvalClient`]: crate::net::RemoteEvalClient
+    pub retries: u64,
+    /// Client-side: successful redials after a connection died (see
+    /// `retries` for the overlay rule).
+    pub reconnects: u64,
     /// Per-spec counters in registration order.
     pub specs: Vec<SpecSnapshot>,
     /// Per-priority counters, ascending priority.
@@ -756,6 +828,10 @@ struct Inner {
     not_empty: Condvar,
     not_full: Condvar,
     capacity: usize,
+    /// Queue depth at which [`EvalService::try_submit`] sheds instead
+    /// of queueing (see [`CacheConfig::queue_high_water`]; always
+    /// `1..=capacity`).
+    high_water: usize,
     /// Worker-pool size (used to size fair-share batches).
     pool_size: usize,
 }
@@ -1106,6 +1182,13 @@ impl Inner {
     }
 }
 
+/// Deterministic retry-after hint for a shed request: scale with the
+/// backlog a worker thread would have to chew through, clamped to a
+/// sane polling window.
+fn retry_after_hint(depth: usize, pool: usize) -> u64 {
+    ((depth as u64).saturating_mul(25) / pool.max(1) as u64).clamp(25, 2000)
+}
+
 fn worker_loop(inner: &Inner) {
     loop {
         let batch: Vec<Job> = {
@@ -1183,6 +1266,11 @@ impl EvalService {
         queue_capacity: usize,
         caches: CacheConfig,
     ) -> EvalService {
+        let capacity = queue_capacity.max(1);
+        let high_water = match caches.queue_high_water {
+            0 => capacity,
+            hw => hw.min(capacity),
+        };
         let inner = Arc::new(Inner {
             registry: SpecRegistry::default(),
             cache: Mutex::new(LruCache::new(caches.feedback_cap)),
@@ -1196,7 +1284,8 @@ impl EvalService {
             queue: Mutex::new(JobQueue { jobs: PriorityRing::new(), closed: false }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
-            capacity: queue_capacity.max(1),
+            capacity,
+            high_water,
             pool_size: workers.max(1),
         });
         inner.registry.register("p100_cluster", MachineSpec::p100_cluster());
@@ -1310,6 +1399,13 @@ impl EvalService {
             delta_evals: s.delta_evals.load(Ordering::Relaxed) as u64,
             spliced_point_tasks: s.spliced_point_tasks.load(Ordering::Relaxed) as u64,
             dirty_fallbacks: s.dirty_fallbacks.load(Ordering::Relaxed) as u64,
+            shed_requests: s.shed_requests.load(Ordering::Relaxed) as u64,
+            reaped_connections: s.reaped_connections.load(Ordering::Relaxed) as u64,
+            // client-side counters: the service never retries or
+            // reconnects, so these are 0 here and overlaid by
+            // RemoteEvalClient::stats on fetched snapshots
+            retries: 0,
+            reconnects: 0,
             specs,
             priorities,
         }
@@ -1377,6 +1473,95 @@ impl EvalService {
         EvalTicket { slot }
     }
 
+    /// Non-blocking, admission-controlled submission — the serving
+    /// path.  Below the high-water mark this is exactly [`Self::submit`]
+    /// without the capacity wait.  At (or above) the mark the service
+    /// sheds the *lowest-priority* work in sight instead of queueing
+    /// without bound: if the incoming request ranks at or below every
+    /// queued job it is shed itself; otherwise the newest job of the
+    /// lowest queued level is evicted to make room.  Shed tickets
+    /// resolve immediately with a classified `Overloaded:` execution
+    /// error and carry a deterministic retry-after hint
+    /// ([`EvalTicket::shed_retry_after_ms`]).  Accounting counts shed
+    /// requests as both submitted and completed, so
+    /// `evals + cache_hits + shed == submitted == completed` holds once
+    /// the queue drains.
+    pub fn try_submit(&self, req: EvalRequest) -> EvalTicket {
+        self.ensure_workers();
+        let app_fp = app_fingerprint(&req.app);
+        let priority = req.priority;
+        let slot = Arc::new(TicketSlot::default());
+        let mut victim: Option<Job> = None;
+        let mut hint = 0u64;
+        let queued = {
+            let mut q = self.inner.queue.lock().unwrap();
+            let over = q.jobs.len() >= self.inner.high_water;
+            let shed_newcomer = over
+                && match q.jobs.lowest_priority() {
+                    Some(lowest) => priority <= lowest,
+                    None => true,
+                };
+            if over {
+                hint = retry_after_hint(q.jobs.len(), self.inner.pool_size);
+            }
+            if shed_newcomer {
+                false
+            } else {
+                if over {
+                    // outranked: evict the newest lowest-priority job
+                    victim = q.jobs.shed_lowest();
+                }
+                q.jobs.push(priority, Job { req, app_fp, slot: Arc::clone(&slot) });
+                self.inner.stats.note_depth(q.jobs.len());
+                self.inner.stats.note_priority(priority, q.jobs.depth_of(priority));
+                self.inner.not_empty.notify_one();
+                true
+            }
+        };
+        self.inner.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        if !queued {
+            self.inner.stats.note_priority(priority, 0);
+            self.shed_resolve(&slot, hint);
+        }
+        if let Some(job) = victim {
+            self.shed_resolve(&job.slot, hint);
+        }
+        EvalTicket { slot }
+    }
+
+    /// Resolve a shed request: mark the ticket, fill it with the
+    /// classified error, and keep the submission accounting balanced
+    /// (a shed request completes without an eval or a cache hit).
+    fn shed_resolve(&self, slot: &TicketSlot, hint_ms: u64) {
+        let hint_ms = hint_ms.max(1);
+        slot.shed.store(hint_ms, Ordering::Relaxed);
+        slot.fill(SystemFeedback::ExecutionError(format!(
+            "Overloaded: eval queue at high-water mark \
+             ({} of {}); retry after {hint_ms}ms",
+            self.inner.high_water, self.inner.capacity,
+        )));
+        self.inner.stats.shed_requests.fetch_add(1, Ordering::Relaxed);
+        self.inner.stats.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Bump the zombie-connection reap counter (the server's idle/read
+    /// deadline path; lives on [`ServiceStats`] so it ships in
+    /// [`StatsSnapshot`]s).
+    pub fn note_reaped_connection(&self) {
+        self.inner.stats.reaped_connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account a request refused *before* reaching the queue (the
+    /// server's per-connection in-flight cap) as a shed submission that
+    /// completed instantly, so the
+    /// `evals + cache_hits + shed == submitted == completed` invariant
+    /// covers connection-level admission control too.
+    pub fn note_shed_at_connection(&self) {
+        self.inner.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.inner.stats.completed.fetch_add(1, Ordering::Relaxed);
+        self.inner.stats.shed_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Run `c.runs` seeded campaigns of `app_name` concurrently; every
     /// evaluation is submitted through the queue and served by the
     /// worker pool, so concurrent campaigns (on any mix of specs) share
@@ -1430,6 +1615,7 @@ impl EvalService {
              caches: plan {} built / {} hits, policy {} compiled / {} hits, \
              decision {} hits\n\
              delta: {} spliced evals, {} point tasks replayed, {} fallbacks\n\
+             load: {} shed requests, {} reaped connections\n\
              evictions: feedback {}, plan {}, policy {}, decision {}\n",
             s.coord.evals.load(Ordering::Relaxed),
             s.coord.cache_hits.load(Ordering::Relaxed),
@@ -1445,6 +1631,8 @@ impl EvalService {
             s.delta_evals.load(Ordering::Relaxed),
             s.spliced_point_tasks.load(Ordering::Relaxed),
             s.dirty_fallbacks.load(Ordering::Relaxed),
+            s.shed_requests.load(Ordering::Relaxed),
+            s.reaped_connections.load(Ordering::Relaxed),
             s.evicted_feedback.load(Ordering::Relaxed),
             s.evicted_plans.load(Ordering::Relaxed),
             s.evicted_policies.load(Ordering::Relaxed),
@@ -1542,6 +1730,112 @@ mod tests {
         assert_eq!(s.stats().coord.cache_hits.load(Ordering::Relaxed), 1);
         assert_eq!(s.stats().submitted.load(Ordering::Relaxed), 1);
         assert_eq!(s.stats().completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn priority_ring_sheds_newest_of_the_lowest_level() {
+        let mut r = PriorityRing::new();
+        r.push(10, "a10");
+        r.push(200, "b200");
+        r.push(10, "c10");
+        assert_eq!(r.lowest_priority(), Some(10));
+        // newest of the lowest level goes first; FIFO order of the rest
+        // is untouched
+        assert_eq!(r.shed_lowest(), Some("c10"));
+        assert_eq!(r.shed_lowest(), Some("a10"));
+        assert_eq!(r.lowest_priority(), Some(200));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.shed_lowest(), Some("b200"));
+        assert!(r.is_empty());
+        assert_eq!(r.shed_lowest(), None);
+        assert_eq!(r.lowest_priority(), None);
+    }
+
+    #[test]
+    fn retry_after_hints_scale_with_backlog_and_clamp() {
+        assert_eq!(retry_after_hint(0, 4), 25);
+        assert_eq!(retry_after_hint(8, 4), 50);
+        assert!(retry_after_hint(1 << 20, 1) <= 2000);
+        assert!(retry_after_hint(10, 0) >= 25, "zero pool must not divide by zero");
+        assert!(retry_after_hint(16, 2) >= retry_after_hint(8, 2));
+    }
+
+    #[test]
+    fn try_submit_sheds_at_the_high_water_mark_and_accounting_balances() {
+        let s = EvalService::with_cache_config(
+            1,
+            2,
+            CacheConfig { queue_high_water: 1, ..CacheConfig::default() },
+        );
+        let small = s.spec_id("small").unwrap();
+        let app = Arc::new(apps::by_name("circuit").unwrap());
+        let dsl = expert_dsl("circuit").unwrap();
+        // flood the single-worker service; with a 1-deep high-water mark
+        // any push that finds the queue non-empty sheds lowest-priority
+        // work (either the newcomer or an outranked queued job)
+        let tickets: Vec<EvalTicket> = (0..512u32)
+            .map(|i| {
+                let priority = (i % 3) as u8 * 100;
+                s.try_submit(
+                    EvalRequest::new(
+                        small,
+                        Arc::clone(&app),
+                        dsl,
+                        ExecMode::Serialized,
+                    )
+                    .with_priority(priority),
+                )
+            })
+            .collect();
+        let mut shed = 0u64;
+        for t in &tickets {
+            let fb = t.wait();
+            match t.shed_retry_after_ms() {
+                Some(ms) => {
+                    shed += 1;
+                    assert!((1..=2000).contains(&ms), "hint {ms} out of range");
+                    match fb {
+                        SystemFeedback::ExecutionError(msg) => assert!(
+                            msg.starts_with("Overloaded:"),
+                            "shed feedback must classify: {msg}"
+                        ),
+                        other => panic!("shed ticket resolved with {other:?}"),
+                    }
+                }
+                None => assert!(fb.score() > 0.0, "served ticket must score"),
+            }
+        }
+        assert!(shed > 0, "512 pushes over a 1-deep mark must shed some work");
+        let snap = s.snapshot();
+        assert_eq!(snap.shed_requests, shed);
+        assert_eq!(snap.submitted, 512);
+        assert_eq!(snap.completed, 512);
+        assert_eq!(
+            snap.evals + snap.cache_hits + snap.shed_requests,
+            snap.submitted,
+            "shed requests complete without an eval or a hit"
+        );
+        assert!(s.summary().contains(&format!("{shed} shed requests")));
+    }
+
+    #[test]
+    fn try_submit_below_the_mark_behaves_like_submit() {
+        let s = service();
+        let p100 = s.spec_id("p100_cluster").unwrap();
+        let app = Arc::new(apps::by_name("circuit").unwrap());
+        let dsl = expert_dsl("circuit").unwrap();
+        let t = s.try_submit(EvalRequest::new(
+            p100,
+            Arc::clone(&app),
+            dsl,
+            ExecMode::Serialized,
+        ));
+        let fb = t.wait();
+        assert!(fb.score() > 0.0);
+        assert_eq!(t.shed_retry_after_ms(), None);
+        assert_eq!(s.stats().shed_requests.load(Ordering::Relaxed), 0);
+        // and it agrees bit-identically with the synchronous path
+        assert_eq!(s.evaluate(p100, &app, dsl, ExecMode::Serialized), fb);
     }
 
     #[test]

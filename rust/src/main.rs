@@ -11,6 +11,9 @@
 //!   bench-suite               — quick end-to-end status of all benchmarks
 //!   serve --addr HOST:PORT    — put the eval service behind a TCP
 //!                               listener (the wire protocol of net/)
+//!   chaos-smoke               — run a remote campaign through the seeded
+//!                               fault-injecting chaos proxy and assert it
+//!                               is bit-identical to a clean local run
 //!
 //! Common flags: --iters N --runs N --seed S --algo trace|opro
 //!               --feedback system|explain|full --workers N
@@ -28,13 +31,15 @@
 
 use std::process::ExitCode;
 use std::sync::Arc;
+use std::time::Duration;
 
 use mapperopt::apps;
 use mapperopt::coordinator::{Coordinator, EvalService, SearchAlgo};
 use mapperopt::feedback::FeedbackConfig;
 use mapperopt::harness::{self, ExpParams};
+use mapperopt::machine::MachineSpec;
 use mapperopt::mapping::expert_dsl;
-use mapperopt::net::EvalServer;
+use mapperopt::net::{ChaosConfig, ChaosProxy, EvalServer, RetryPolicy};
 use mapperopt::sim::ExecMode;
 use mapperopt::util::cli::Args;
 
@@ -52,6 +57,9 @@ fn main() -> ExitCode {
 
     if cmd == "serve" {
         return cmd_serve(&args, workers);
+    }
+    if cmd == "chaos-smoke" {
+        return cmd_chaos_smoke(&args, workers);
     }
 
     let coord = match args.get("remote") {
@@ -131,10 +139,17 @@ fn main() -> ExitCode {
 
 fn usage() {
     println!(
-        "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite|serve>\n\
+        "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite|serve|chaos-smoke>\n\
          flags: --app NAME --mapper FILE --algo trace|opro \
          --feedback system|explain|full|profile --iters N --runs N --seed S \
-         --workers N --remote HOST:PORT --addr HOST:PORT (serve)"
+         --workers N --remote HOST:PORT --addr HOST:PORT (serve)\n\
+         env:   MAPPEROPT_RETRY_BUDGET    remote client transmission attempts per request (default 4)\n\
+         \x20      MAPPEROPT_QUEUE_HIGH_WATER eval queue depth that starts shedding lowest-priority\n\
+         \x20                                 work with Overloaded responses (default: queue capacity)\n\
+         \x20      MAPPEROPT_CONN_DEADLINE_S  server-side idle-connection reap deadline in seconds\n\
+         \x20                                 (default 300, 0 disables)\n\
+         \x20      MAPPEROPT_SERVE_DEADLINE_S chaos-smoke/serve-smoke self-kill deadline in seconds\n\
+         \x20                                 (default 180)"
     );
 }
 
@@ -170,6 +185,167 @@ fn cmd_serve(args: &Args, workers: usize) -> ExitCode {
             ExitCode::from(2)
         }
     }
+}
+
+/// `mapperopt chaos-smoke`: the fault-tolerance acceptance drive.  Runs
+/// one seeded campaign clean and in-process, then the same campaign
+/// through a [`ChaosProxy`] injecting delays, corruption, truncation,
+/// and resets, and requires (a) bit-identical trajectories and best
+/// scores and (b) observed `retries > 0` and `reconnects > 0` — i.e.
+/// the faults actually fired and the retry machinery actually hid them.
+/// A watchdog thread enforces `MAPPEROPT_SERVE_DEADLINE_S` (default
+/// 180s) so a wedged run fails CI instead of hanging it.
+fn cmd_chaos_smoke(args: &Args, workers: usize) -> ExitCode {
+    let deadline_s = std::env::var("MAPPEROPT_SERVE_DEADLINE_S")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(180);
+    std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_secs(deadline_s));
+        eprintln!("chaos-smoke: exceeded the {deadline_s}s deadline; wedged");
+        std::process::exit(124);
+    });
+
+    let (app, algo, cfg) = ("cannon", SearchAlgo::Trace, FeedbackConfig::FULL);
+    let base_seed = args.u64("seed", 5);
+    let runs = args.usize("runs", 2);
+    let iters = args.usize("iters", 6);
+
+    println!(
+        "chaos-smoke: clean in-process reference ({app}, {runs} runs x {iters} iters)"
+    );
+    let local = Coordinator::new(MachineSpec::p100_cluster());
+    let reference = match local.run_many(app, algo, cfg, base_seed, runs, iters) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("chaos-smoke: reference campaign failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let service = service_for(workers);
+    let server = match EvalServer::bind("127.0.0.1:0", Arc::clone(&service)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("chaos-smoke: cannot bind eval server: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let backend = server.addr();
+
+    // sweep a few proxy seeds: each is fully deterministic, and the
+    // sweep makes "a schedule that only drew harmless delays" a
+    // non-issue — every pass must still be bit-identical, and the smoke
+    // only demands that *some* pass exercised retry and reconnect
+    let (mut retries, mut reconnects, mut faults) = (0u64, 0u64, 0u64);
+    for (pass, chaos_seed) in
+        [0xC4A0_5EEDu64, 0xC4A0_5EEE, 0xC4A0_5EEF].into_iter().enumerate()
+    {
+        let chaos = ChaosConfig {
+            seed: chaos_seed,
+            delay_weight: 1,
+            corrupt_weight: 2,
+            truncate_weight: 1,
+            reset_weight: 2,
+            blackhole_weight: 0,
+            ..ChaosConfig::default()
+        };
+        let proxy = match ChaosProxy::bind("127.0.0.1:0", backend, chaos) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("chaos-smoke: cannot bind chaos proxy: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        let policy = RetryPolicy {
+            deadline: Duration::from_secs(20),
+            budget: 16,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(250),
+            seed: chaos_seed,
+        };
+        let front = proxy.addr().to_string();
+        let coord = match Coordinator::remote_with(
+            &front,
+            "p100_cluster",
+            ExecMode::Serialized,
+            policy,
+        ) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("chaos-smoke: cannot connect through the proxy: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        let chaotic = match coord.run_many(app, algo, cfg, base_seed, runs, iters)
+        {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("chaos-smoke: campaign under faults failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        if chaotic.len() != reference.len() {
+            eprintln!(
+                "chaos-smoke: FAILED — {} runs came back, expected {}",
+                chaotic.len(),
+                reference.len()
+            );
+            return ExitCode::FAILURE;
+        }
+        for (c, l) in chaotic.iter().zip(&reference) {
+            let same_best = c.best.as_ref().map(|(_, s)| s.to_bits())
+                == l.best.as_ref().map(|(_, s)| s.to_bits());
+            if c.trajectory() != l.trajectory() || !same_best {
+                eprintln!(
+                    "chaos-smoke: FAILED — seed {} diverged under faults:\n  \
+                     faulty: {:?}\n  clean:  {:?}",
+                    c.seed,
+                    c.trajectory(),
+                    l.trajectory()
+                );
+                return ExitCode::FAILURE;
+            }
+        }
+        let client = coord.remote_client().expect("remote backend");
+        retries += client.retries();
+        reconnects += client.reconnects();
+        let ps = proxy.stats();
+        faults += ps.faults();
+        println!(
+            "chaos-smoke: pass {} (chaos seed {chaos_seed:#x}): {} faults \
+             ({} delays, {} corruptions, {} truncations, {} resets) over {} \
+             connections; {} retries, {} reconnects; bit-identical",
+            pass + 1,
+            ps.faults(),
+            ps.delays,
+            ps.corruptions,
+            ps.truncations,
+            ps.resets,
+            ps.connections,
+            client.retries(),
+            client.reconnects(),
+        );
+        drop(coord);
+        proxy.shutdown();
+        if retries > 0 && reconnects > 0 {
+            break;
+        }
+    }
+    server.shutdown();
+
+    if retries == 0 || reconnects == 0 {
+        eprintln!(
+            "chaos-smoke: FAILED — expected retries > 0 and reconnects > 0, \
+             got {retries} retries / {reconnects} reconnects ({faults} faults)"
+        );
+        return ExitCode::FAILURE;
+    }
+    println!(
+        "chaos-smoke: OK — remote-under-faults == clean local, bit-identical; \
+         {retries} retries, {reconnects} reconnects, {faults} faults injected"
+    );
+    ExitCode::SUCCESS
 }
 
 fn cmd_run(coord: &Coordinator, args: &Args) -> ExitCode {

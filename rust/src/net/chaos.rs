@@ -1,0 +1,455 @@
+//! A deterministic in-process chaos proxy: a std-only TCP forwarder
+//! that injects faults — delays, byte corruption, truncation,
+//! connection resets, blackholes — on a schedule that is a pure
+//! function of `(seed, connection index, direction)`, using the same
+//! seeded [`Rng`](crate::util::rng::Rng) as the rest of the tree.
+//!
+//! Faults are scheduled by *cumulative byte offset*, not by read call:
+//! each direction forwards exactly `gap` bytes (drawn from the seeded
+//! RNG), applies one fault, draws the next gap, and so on — so the
+//! schedule does not depend on how TCP happens to chunk the stream, and
+//! a test that replays a seed replays the same faults at the same
+//! stream positions.  [`ChaosConfig::max_faults_per_conn`] bounds the
+//! faults per connection-direction, after which the connection runs
+//! clean — together with the client's retry budget this guarantees
+//! forward progress.
+//!
+//! The proxy front stays bound across backend restarts
+//! ([`ChaosProxy::set_backend`]), which is how the fault-injection
+//! tests give a reconnecting client a stable address while the real
+//! server is killed and rebound elsewhere.
+//!
+//! What each fault exercises:
+//!
+//! * **Delay** — latency spikes; retry deadlines and backoff.
+//! * **Corrupt** (XOR one forwarded byte) — the frame checksum: the
+//!   receiver classifies a checksum mismatch, answers a retryable
+//!   `Frame` error, and the request is retried, never mis-executed.
+//! * **Truncate** (swallow a few bytes, then cut) — mid-frame
+//!   connection loss; reconnect-and-replay.
+//! * **Reset** — abrupt connection death between frames.
+//! * **Blackhole** (swallow everything, answer nothing) — a hung peer;
+//!   only the client's per-request deadline can save it, so enable this
+//!   one with a short deadline.
+
+use std::io::{Read, Write};
+use std::net::{
+    IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream,
+    ToSocketAddrs,
+};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Fault mix and schedule parameters; see the module docs for what
+/// each fault kind exercises.  Weights of 0 disable a kind.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Master seed; every connection-direction forks its own stream
+    /// from this, so one seed fixes the entire fault schedule.
+    pub seed: u64,
+    /// Bytes forwarded cleanly between faults, drawn uniformly from
+    /// `gap.0..=gap.1` per fault.
+    pub gap: (usize, usize),
+    /// Injected delay duration, drawn uniformly from
+    /// `delay_ms.0..=delay_ms.1`.
+    pub delay_ms: (u64, u64),
+    pub delay_weight: u32,
+    pub corrupt_weight: u32,
+    pub truncate_weight: u32,
+    pub reset_weight: u32,
+    pub blackhole_weight: u32,
+    /// Faults per connection-direction before it runs clean; the
+    /// progress guarantee (a retried connection eventually gets
+    /// through).
+    pub max_faults_per_conn: u32,
+}
+
+impl Default for ChaosConfig {
+    /// The chaos-smoke mix: delays, corruption, truncation, and resets
+    /// on, blackholes off (they are only survivable with a short
+    /// per-request deadline — opt in deliberately).
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0xC4A0_5EED,
+            gap: (192, 4096),
+            delay_ms: (1, 15),
+            delay_weight: 3,
+            corrupt_weight: 2,
+            truncate_weight: 1,
+            reset_weight: 1,
+            blackhole_weight: 0,
+            max_faults_per_conn: 2,
+        }
+    }
+}
+
+impl ChaosConfig {
+    fn weight_total(&self) -> u32 {
+        self.delay_weight
+            + self.corrupt_weight
+            + self.truncate_weight
+            + self.reset_weight
+            + self.blackhole_weight
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fault {
+    Delay,
+    Corrupt,
+    Truncate,
+    Reset,
+    Blackhole,
+}
+
+/// Injected-fault tallies (monotonic; read with [`ChaosProxy::stats`]).
+#[derive(Default)]
+struct Tallies {
+    connections: AtomicU64,
+    delays: AtomicU64,
+    corruptions: AtomicU64,
+    truncations: AtomicU64,
+    resets: AtomicU64,
+    blackholes: AtomicU64,
+}
+
+/// A point-in-time copy of the proxy's fault counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    pub connections: u64,
+    pub delays: u64,
+    pub corruptions: u64,
+    pub truncations: u64,
+    pub resets: u64,
+    pub blackholes: u64,
+}
+
+impl ChaosStats {
+    /// Total faults injected (connections are not faults).
+    pub fn faults(&self) -> u64 {
+        self.delays
+            + self.corruptions
+            + self.truncations
+            + self.resets
+            + self.blackholes
+    }
+}
+
+/// The deterministic fault schedule of one connection-direction.
+struct Schedule {
+    rng: Rng,
+    cfg: ChaosConfig,
+    /// Faults left before this direction runs clean.
+    remaining: u32,
+    /// Clean bytes to forward before the next fault fires.
+    until_next: usize,
+}
+
+impl Schedule {
+    /// `conn` is the proxy-wide connection index, `dir` 0 for
+    /// client-to-backend and 1 for backend-to-client — the only inputs
+    /// besides the seed, so equal seeds replay equal schedules.
+    fn new(cfg: &ChaosConfig, conn: u64, dir: u64) -> Schedule {
+        let mut rng =
+            Rng::new(cfg.seed ^ conn.wrapping_mul(0x9E37_79B9).wrapping_add(dir));
+        let until_next = draw_gap(&mut rng, cfg.gap);
+        Schedule {
+            rng,
+            cfg: cfg.clone(),
+            remaining: cfg.max_faults_per_conn,
+            until_next,
+        }
+    }
+
+    fn armed(&self) -> bool {
+        self.remaining > 0 && self.cfg.weight_total() > 0
+    }
+
+    /// Weighted draw of the next fault kind; also consumes one of the
+    /// per-connection fault slots and re-arms the byte gap.
+    fn draw_fault(&mut self) -> Fault {
+        let mut r = self.rng.below(self.cfg.weight_total() as usize) as u32;
+        let fault = [
+            (Fault::Delay, self.cfg.delay_weight),
+            (Fault::Corrupt, self.cfg.corrupt_weight),
+            (Fault::Truncate, self.cfg.truncate_weight),
+            (Fault::Reset, self.cfg.reset_weight),
+            (Fault::Blackhole, self.cfg.blackhole_weight),
+        ]
+        .into_iter()
+        .find_map(|(f, w)| {
+            if r < w {
+                Some(f)
+            } else {
+                r -= w;
+                None
+            }
+        })
+        .unwrap_or(Fault::Delay);
+        self.remaining -= 1;
+        self.until_next = draw_gap(&mut self.rng, self.cfg.gap);
+        fault
+    }
+}
+
+fn draw_gap(rng: &mut Rng, (lo, hi): (usize, usize)) -> usize {
+    let lo = lo.max(1);
+    let hi = hi.max(lo);
+    lo + rng.below(hi - lo + 1)
+}
+
+/// A seeded fault-injecting TCP proxy in front of one backend (see
+/// module docs).
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    backend: Arc<Mutex<SocketAddr>>,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    tallies: Arc<Tallies>,
+}
+
+impl ChaosProxy {
+    /// Bind the front at `front` (use `"127.0.0.1:0"` for an ephemeral
+    /// port) forwarding to `backend`, with faults drawn from `cfg`.
+    pub fn bind<A: ToSocketAddrs>(
+        front: &str,
+        backend: A,
+        cfg: ChaosConfig,
+    ) -> std::io::Result<ChaosProxy> {
+        let backend = backend
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "backend address resolves to nothing",
+                )
+            })?;
+        let listener = TcpListener::bind(front)?;
+        let addr = listener.local_addr()?;
+        let backend = Arc::new(Mutex::new(backend));
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let tallies = Arc::new(Tallies::default());
+        let (b, s, c, t) = (
+            Arc::clone(&backend),
+            Arc::clone(&stop),
+            Arc::clone(&conns),
+            Arc::clone(&tallies),
+        );
+        let accept = thread::Builder::new()
+            .name("chaos-accept".into())
+            .spawn(move || {
+                let mut conn_id: u64 = 0;
+                for incoming in listener.incoming() {
+                    if s.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(client) = incoming else { continue };
+                    let target = *b.lock().unwrap();
+                    // an unreachable backend looks like a refused/cut
+                    // connection to the client — exactly the failure a
+                    // killed server produces
+                    let Ok(server) = TcpStream::connect(target) else {
+                        let _ = client.shutdown(Shutdown::Both);
+                        continue;
+                    };
+                    let _ = client.set_nodelay(true);
+                    let _ = server.set_nodelay(true);
+                    t.connections.fetch_add(1, Ordering::SeqCst);
+                    spawn_pumps(client, server, conn_id, &cfg, &c, &t);
+                    conn_id += 1;
+                }
+            })?;
+        Ok(ChaosProxy {
+            addr,
+            backend,
+            stop,
+            accept: Some(accept),
+            conns,
+            tallies,
+        })
+    }
+
+    /// The stable front address clients connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Repoint the proxy at a new backend (e.g. a restarted server on a
+    /// fresh port); existing connections keep their old backend until
+    /// they die.
+    pub fn set_backend(&self, backend: SocketAddr) {
+        *self.backend.lock().unwrap() = backend;
+    }
+
+    /// Injected-fault counters so far.
+    pub fn stats(&self) -> ChaosStats {
+        ChaosStats {
+            connections: self.tallies.connections.load(Ordering::SeqCst),
+            delays: self.tallies.delays.load(Ordering::SeqCst),
+            corruptions: self.tallies.corruptions.load(Ordering::SeqCst),
+            truncations: self.tallies.truncations.load(Ordering::SeqCst),
+            resets: self.tallies.resets.load(Ordering::SeqCst),
+            blackholes: self.tallies.blackholes.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Stop accepting and sever every proxied connection.
+    pub fn shutdown(mut self) {
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
+        if let Some(h) = self.accept.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // wake the blocking accept (loopback-aim wildcard binds)
+            let mut target = self.addr;
+            if target.ip().is_unspecified() {
+                let loopback = match target.ip() {
+                    IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                    IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                };
+                target.set_ip(loopback);
+            }
+            let _ = TcpStream::connect(target);
+            let _ = h.join();
+        }
+        let streams: Vec<TcpStream> =
+            self.conns.lock().unwrap().drain(..).collect();
+        for s in streams {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+/// Spawn the two forwarding pumps of one proxied connection, each with
+/// its own deterministic schedule.
+fn spawn_pumps(
+    client: TcpStream,
+    server: TcpStream,
+    conn_id: u64,
+    cfg: &ChaosConfig,
+    conns: &Arc<Mutex<Vec<TcpStream>>>,
+    tallies: &Arc<Tallies>,
+) {
+    {
+        let mut g = conns.lock().unwrap();
+        if let Ok(c) = client.try_clone() {
+            g.push(c);
+        }
+        if let Ok(s) = server.try_clone() {
+            g.push(s);
+        }
+        // stale handles accumulate one pair per connection; keep the
+        // registry from growing without bound in long sweeps
+        if g.len() > 1024 {
+            g.drain(..g.len() - 1024);
+        }
+    }
+    let up = (client.try_clone(), server.try_clone());
+    if let (Ok(from), Ok(to)) = up {
+        let sched = Schedule::new(cfg, conn_id, 0);
+        let t = Arc::clone(tallies);
+        let _ = thread::Builder::new()
+            .name("chaos-up".into())
+            .spawn(move || pump(from, to, sched, t));
+    }
+    let sched = Schedule::new(cfg, conn_id, 1);
+    let t = Arc::clone(tallies);
+    let _ = thread::Builder::new()
+        .name("chaos-down".into())
+        .spawn(move || pump(server, client, sched, t));
+}
+
+/// Forward one direction, injecting the schedule's faults at their
+/// exact byte offsets.  Returning severs both streams (the pump owns
+/// clones of both sockets), so a fault that cuts one direction cuts the
+/// connection — half-open proxied connections are not a state the wire
+/// protocol can use anyway.
+fn pump(
+    mut from: TcpStream,
+    mut to: TcpStream,
+    mut sched: Schedule,
+    tallies: Arc<Tallies>,
+) {
+    let mut buf = [0u8; 8192];
+    loop {
+        if sched.armed() && sched.until_next == 0 {
+            match sched.draw_fault() {
+                Fault::Delay => {
+                    let (lo, hi) = sched.cfg.delay_ms;
+                    let hi = hi.max(lo);
+                    let ms = lo + sched.rng.below((hi - lo + 1) as usize) as u64;
+                    tallies.delays.fetch_add(1, Ordering::SeqCst);
+                    thread::sleep(Duration::from_millis(ms));
+                    continue;
+                }
+                Fault::Corrupt => {
+                    // XOR the next forwarded byte with a nonzero mask:
+                    // the payload checksum catches it downstream
+                    let mut b = [0u8; 1];
+                    match from.read(&mut b) {
+                        Ok(1) => {}
+                        _ => break,
+                    }
+                    b[0] ^= (1 + sched.rng.below(255)) as u8;
+                    tallies.corruptions.fetch_add(1, Ordering::SeqCst);
+                    if to.write_all(&b).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                Fault::Truncate => {
+                    // swallow a few bytes mid-stream, then cut: the
+                    // peer sees a frame that ends early
+                    let n = 1 + sched.rng.below(64);
+                    let mut sink = [0u8; 64];
+                    let _ = from.read(&mut sink[..n]);
+                    tallies.truncations.fetch_add(1, Ordering::SeqCst);
+                    break;
+                }
+                Fault::Reset => {
+                    tallies.resets.fetch_add(1, Ordering::SeqCst);
+                    break;
+                }
+                Fault::Blackhole => {
+                    // swallow everything and answer nothing: only the
+                    // client's per-request deadline gets it out
+                    tallies.blackholes.fetch_add(1, Ordering::SeqCst);
+                    let mut sink = [0u8; 8192];
+                    while matches!(from.read(&mut sink), Ok(n) if n > 0) {}
+                    break;
+                }
+            }
+        }
+        let take = if sched.armed() {
+            buf.len().min(sched.until_next)
+        } else {
+            buf.len()
+        };
+        let n = match from.read(&mut buf[..take]) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        if to.write_all(&buf[..n]).is_err() {
+            break;
+        }
+        if sched.armed() {
+            sched.until_next -= n;
+        }
+    }
+    let _ = from.shutdown(Shutdown::Both);
+    let _ = to.shutdown(Shutdown::Both);
+}

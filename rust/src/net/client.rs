@@ -5,28 +5,87 @@
 //! `Coordinator`-compatible adapter is
 //! [`Coordinator::remote`](crate::coordinator::Coordinator::remote)).
 //!
-//! One socket carries any number of in-flight requests: senders
-//! serialize frames under the writer lock (pushing their reply slot in
-//! the same critical section, so slot order equals frame order) and a
-//! dedicated reader thread matches responses FIFO.  A dead connection
-//! resolves every outstanding and future ticket with a classified
-//! `Remote:` execution error instead of hanging or panicking.
+//! One socket carries any number of in-flight requests: a manager
+//! thread owns the write half and the request queue, a per-connection
+//! reader thread matches responses FIFO, and user calls only enqueue.
+//!
+//! # Fault tolerance
+//!
+//! The client survives a flaky wire instead of reporting it.  Every
+//! request carries a [`RetryPolicy`] budget: retryable failures —
+//! transport errors, connection drops, and retryable classified server
+//! errors ([`ErrorKind::is_retryable`](super::proto::ErrorKind::is_retryable):
+//! framing, checksum corruption, version skew,
+//! [`ErrorKind::Overloaded`](super::proto::ErrorKind::Overloaded)
+//! shedding) — requeue the
+//! request with bounded exponential backoff (deterministic seeded
+//! jitter, `Overloaded` retry-after hints respected), while the manager
+//! redials the server.  Replay is safe because evaluations are pure
+//! (keyed by the same fingerprints the server caches use); after every
+//! reconnect a synthetic `Ping` handshake must succeed before *any*
+//! queued request — in particular a non-idempotent `RegisterSpec` — is
+//! replayed.  A request that exhausts its budget or per-request
+//! deadline resolves with a classified `Remote ... error` execution
+//! error; nothing ever hangs, and terminal server errors
+//! (`BadRequest` / `Internal`) are never retried.  [`RemoteEvalClient::stats`]
+//! overlays this client's `retries` / `reconnects` counters onto the
+//! server's snapshot.
 
 use std::collections::VecDeque;
 use std::io;
-use std::net::{Shutdown, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::StatsSnapshot;
 use crate::feedback::SystemFeedback;
 use crate::machine::MachineSpec;
 use crate::sim::ExecMode;
+use crate::util::rng::Rng;
 
 use super::proto::{
     self, Request, Response, Scenario, SpecRef, WireEvalRequest,
 };
+
+/// Retry discipline for one client: how long a request may take end to
+/// end, how many transmission attempts it gets, and how re-attempts
+/// back off.  [`RetryPolicy::default`] reads the budget from
+/// `MAPPEROPT_RETRY_BUDGET` (default 4, minimum 1).
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Per-request wall-clock deadline, enqueue to response.
+    pub deadline: Duration,
+    /// Maximum transmission attempts per request (>= 1; the first send
+    /// counts as one).
+    pub budget: u32,
+    /// First re-attempt delay; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Ceiling on any single backoff delay.
+    pub backoff_cap: Duration,
+    /// Seed for the jitter RNG — equal seeds give bit-identical retry
+    /// schedules, which the chaos tests rely on.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        let budget = std::env::var("MAPPEROPT_RETRY_BUDGET")
+            .ok()
+            .and_then(|v| v.parse::<u32>().ok())
+            .unwrap_or(4)
+            .max(1);
+        RetryPolicy {
+            deadline: Duration::from_secs(120),
+            budget,
+            backoff_base: Duration::from_millis(25),
+            backoff_cap: Duration::from_secs(1),
+            seed: 0x7E57_0BED_5EED_CAFE,
+        }
+    }
+}
 
 /// One awaited response slot (FIFO-matched by the reader thread).
 #[derive(Default)]
@@ -36,8 +95,8 @@ struct ReplySlot {
 }
 
 impl ReplySlot {
-    /// First fill wins (a send-side failure and the reader's drain can
-    /// race; both write errors, so either order is correct).
+    /// First fill wins (a retry path and a teardown drain can race;
+    /// both classify, so either order is correct).
     fn fill(&self, r: Result<Response, String>) {
         let mut g = self.done.lock().unwrap();
         if g.is_none() {
@@ -61,23 +120,45 @@ impl ReplySlot {
     }
 }
 
-struct ClientInner {
-    /// Write half; also the lock that orders `pending` pushes.
-    writer: Mutex<TcpStream>,
-    /// Outstanding slots in frame order (reader pops front per frame).
-    pending: Mutex<VecDeque<Arc<ReplySlot>>>,
-    /// Set once the connection is unusable; new sends fail fast.
-    dead: AtomicBool,
+/// One queued or in-flight request with its retry bookkeeping.  Lives
+/// in the manager's queue until written, then in the connection's
+/// `inflight` deque until answered; a failure path moves it back.
+struct Pending {
+    req: Request,
+    slot: Arc<ReplySlot>,
+    /// Transmission attempts so far (charged at write and at failed
+    /// dials — a server that cannot be reached burns budget too).
+    attempts: u32,
+    /// Absolute end-to-end deadline.
+    deadline: Instant,
+    /// Backoff gate: not re-sent before this instant.
+    not_before: Instant,
+    /// Last failure, echoed in the terminal classification.
+    last_err: String,
+    /// The post-reconnect `Ping` gate; its slot has no waiter.
+    handshake: bool,
 }
 
-impl ClientInner {
-    fn fail_all_pending(&self, msg: &str) {
-        let drained: Vec<Arc<ReplySlot>> =
-            self.pending.lock().unwrap().drain(..).collect();
-        for slot in drained {
-            slot.fill(Err(msg.to_string()));
-        }
-    }
+/// Reader-to-manager events (plus user submissions).
+enum Event {
+    Send(Pending),
+    /// A retryable classified response; `pending` was popped from the
+    /// in-flight deque and must be rescheduled.
+    Retry { pending: Pending, hint_ms: u64, reason: String },
+    /// The handshake `Ping` resolved (`ok` = got `Pong`).
+    HandshakeDone { epoch: u64, ok: bool, msg: String },
+    /// Connection `epoch` is unusable; the manager drains and redials.
+    ConnDead { epoch: u64, msg: String },
+    /// Client drop: fail everything, join, exit.
+    Shutdown,
+}
+
+/// State shared between user-facing handles and the manager.
+struct Shared {
+    /// Set on drop/teardown; new sends fail fast.
+    dead: AtomicBool,
+    retries: AtomicU64,
+    reconnects: AtomicU64,
 }
 
 /// Completion handle of one remote submission — the wire twin of
@@ -87,9 +168,10 @@ pub struct RemoteTicket {
 }
 
 impl RemoteTicket {
-    /// Block until the server answers (or the connection dies); every
-    /// non-feedback outcome is classified as an execution error, so
-    /// campaign code never sees a second error channel.
+    /// Block until the server answers (or the retry budget is
+    /// exhausted); every non-feedback outcome is classified as an
+    /// execution error, so campaign code never sees a second error
+    /// channel.
     pub fn wait(&self) -> SystemFeedback {
         feedback_of(self.slot.wait())
     }
@@ -107,7 +189,7 @@ impl RemoteTicket {
 fn feedback_of(r: Result<Response, String>) -> SystemFeedback {
     match r {
         Ok(Response::Feedback(fb)) => fb,
-        Ok(Response::Error { kind, msg }) => {
+        Ok(Response::Error { kind, msg, .. }) => {
             SystemFeedback::ExecutionError(format!("Remote {kind} error: {msg}"))
         }
         Ok(other) => SystemFeedback::ExecutionError(format!(
@@ -118,71 +200,104 @@ fn feedback_of(r: Result<Response, String>) -> SystemFeedback {
     }
 }
 
-/// A connection to a remote [`EvalServer`](super::EvalServer) (see
-/// module docs).
+/// A fault-tolerant connection to a remote
+/// [`EvalServer`](super::EvalServer) (see module docs).
 pub struct RemoteEvalClient {
-    inner: Arc<ClientInner>,
-    reader: Mutex<Option<thread::JoinHandle<()>>>,
+    /// Mutex-wrapped so the client is `Sync` on every supported
+    /// toolchain (`mpsc::Sender` itself only became `Sync` later).
+    tx: Mutex<mpsc::Sender<Event>>,
+    shared: Arc<Shared>,
+    policy: RetryPolicy,
+    manager: Mutex<Option<thread::JoinHandle<()>>>,
 }
 
 impl RemoteEvalClient {
-    /// Connect and start the response-matching reader thread.
+    /// Connect with [`RetryPolicy::default`] and start the manager and
+    /// reader threads.  The dial is eager: an unreachable address fails
+    /// here, not on first use.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<RemoteEvalClient> {
-        let stream = TcpStream::connect(addr)?;
-        let _ = stream.set_nodelay(true);
-        let read_half = stream.try_clone()?;
-        let inner = Arc::new(ClientInner {
-            writer: Mutex::new(stream),
-            pending: Mutex::new(VecDeque::new()),
-            dead: AtomicBool::new(false),
-        });
-        let rx_inner = Arc::clone(&inner);
-        let reader = thread::Builder::new()
-            .name("evalcli-read".into())
-            .spawn(move || reader_loop(read_half, rx_inner))?;
-        Ok(RemoteEvalClient { inner, reader: Mutex::new(Some(reader)) })
+        Self::connect_with(addr, RetryPolicy::default())
     }
 
-    /// Send one request; the returned slot resolves when its response
-    /// arrives (FIFO).
-    fn send(&self, req: &Request) -> Arc<ReplySlot> {
+    /// [`RemoteEvalClient::connect`] with an explicit [`RetryPolicy`].
+    pub fn connect_with<A: ToSocketAddrs>(
+        addr: A,
+        policy: RetryPolicy,
+    ) -> io::Result<RemoteEvalClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        // the resolved peer is what reconnects redial — resolution
+        // happens once, so retry behavior does not depend on DNS luck
+        let peer = stream.peer_addr()?;
+        let shared = Arc::new(Shared {
+            dead: AtomicBool::new(false),
+            retries: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+        });
+        let (tx, rx) = mpsc::channel::<Event>();
+        let mut mgr = Manager {
+            peer,
+            policy: policy.clone(),
+            rx,
+            tx: tx.clone(),
+            shared: Arc::clone(&shared),
+            queue: VecDeque::new(),
+            conn: None,
+            epoch: 0,
+            handshaking: false,
+            rng: Rng::new(policy.seed),
+            dial_fails: 0,
+            dial_not_before: Instant::now(),
+        };
+        mgr.install(stream, false);
+        let manager = thread::Builder::new()
+            .name("evalcli-mgr".into())
+            .spawn(move || mgr.run())?;
+        Ok(RemoteEvalClient {
+            tx: Mutex::new(tx),
+            shared,
+            policy,
+            manager: Mutex::new(Some(manager)),
+        })
+    }
+
+    /// Total re-transmissions this client has performed.
+    pub fn retries(&self) -> u64 {
+        self.shared.retries.load(Ordering::SeqCst)
+    }
+
+    /// Successful reconnect handshakes after the initial dial.
+    pub fn reconnects(&self) -> u64 {
+        self.shared.reconnects.load(Ordering::SeqCst)
+    }
+
+    /// Enqueue one request; the returned slot resolves when a response
+    /// arrives or the retry budget / deadline is exhausted.
+    fn send(&self, req: Request) -> Arc<ReplySlot> {
         let slot = Arc::new(ReplySlot::default());
-        if self.inner.dead.load(Ordering::SeqCst) {
+        if self.shared.dead.load(Ordering::SeqCst) {
             slot.fill(Err("connection to eval server is closed".into()));
             return slot;
         }
-        let payload = req.encode();
-        let mut w = self.inner.writer.lock().unwrap();
-        // push under the writer lock: slot order == frame order, and
-        // the slot is queued before the server can possibly answer
-        self.inner.pending.lock().unwrap().push_back(Arc::clone(&slot));
-        let sent = proto::write_frame(&mut *w, &payload);
-        if let Err(e) = sent {
-            // the server will never answer this frame, so retract the
-            // slot — it is still the newest entry (pushes are serialized
-            // by the writer lock we hold, and responses only exist for
-            // *written* requests) — or FIFO matching would hand the next
-            // response to this dead slot and hang its real owner
-            {
-                let mut pending = self.inner.pending.lock().unwrap();
-                if pending.back().is_some_and(|s| Arc::ptr_eq(s, &slot)) {
-                    pending.pop_back();
-                }
-            }
-            // a frame rejected by the size guard never touched the
-            // socket — the connection stays usable; anything else may
-            // have written a partial frame, which is unrecoverable
-            if e.kind() != io::ErrorKind::InvalidInput {
-                self.inner.dead.store(true, Ordering::SeqCst);
-            }
-            slot.fill(Err(format!("send failed: {e}")));
+        let now = Instant::now();
+        let pending = Pending {
+            req,
+            slot: Arc::clone(&slot),
+            attempts: 0,
+            deadline: now + self.policy.deadline,
+            not_before: now,
+            last_err: String::new(),
+            handshake: false,
+        };
+        let sent = self.tx.lock().unwrap().send(Event::Send(pending));
+        if sent.is_err() {
+            slot.fill(Err("connection to eval server is closed".into()));
         }
-        drop(w);
         slot
     }
 
     /// Send and block for the matched response.
-    fn request(&self, req: &Request) -> Result<Response, String> {
+    fn request(&self, req: Request) -> Result<Response, String> {
         self.send(req).wait()
     }
 
@@ -191,12 +306,12 @@ impl RemoteEvalClient {
     /// one place for every typed endpoint below.
     fn expect<T>(
         &self,
-        req: &Request,
+        req: Request,
         what: &'static str,
         extract: impl FnOnce(Response) -> Result<T, Response>,
     ) -> Result<T, String> {
         match self.request(req)? {
-            Response::Error { kind, msg } => Err(format!("{kind} error: {msg}")),
+            Response::Error { kind, msg, .. } => Err(format!("{kind} error: {msg}")),
             resp => extract(resp).map_err(|other| {
                 format!("expected {what}, got {}", other.kind_name())
             }),
@@ -205,7 +320,7 @@ impl RemoteEvalClient {
 
     fn expect_spec_info(
         &self,
-        req: &Request,
+        req: Request,
     ) -> Result<(u32, String, MachineSpec), String> {
         self.expect(req, "spec-info", |r| match r {
             Response::SpecInfo { id, name, spec } => Ok((id, name, spec)),
@@ -215,7 +330,7 @@ impl RemoteEvalClient {
 
     /// Liveness probe (also a cheap protocol handshake check).
     pub fn ping(&self) -> Result<(), String> {
-        self.expect(&Request::Ping, "pong", |r| match r {
+        self.expect(Request::Ping, "pong", |r| match r {
             Response::Pong => Ok(()),
             other => Err(other),
         })
@@ -224,7 +339,7 @@ impl RemoteEvalClient {
     /// Register (or alias) a machine spec in the server's registry;
     /// returns the server-side spec id.
     pub fn register_spec(&self, name: &str, spec: &MachineSpec) -> Result<u32, String> {
-        self.expect_spec_info(&Request::RegisterSpec {
+        self.expect_spec_info(Request::RegisterSpec {
             name: name.to_string(),
             spec: spec.clone(),
         })
@@ -233,7 +348,7 @@ impl RemoteEvalClient {
 
     /// Look up a registered spec by name: `(id, copy of the spec)`.
     pub fn spec(&self, name: &str) -> Result<(u32, MachineSpec), String> {
-        self.expect_spec_info(&Request::GetSpec { name: name.to_string() })
+        self.expect_spec_info(Request::GetSpec { name: name.to_string() })
             .map(|(id, _, spec)| (id, spec))
     }
 
@@ -247,7 +362,7 @@ impl RemoteEvalClient {
         mode: ExecMode,
         priority: u8,
     ) -> RemoteTicket {
-        let slot = self.send(&Request::Eval(WireEvalRequest {
+        let slot = self.send(Request::Eval(WireEvalRequest {
             spec,
             scenario,
             dsl,
@@ -270,18 +385,22 @@ impl RemoteEvalClient {
         self.submit(spec, scenario, dsl.to_string(), mode, priority).wait()
     }
 
-    /// Server-side [`StatsSnapshot`] (counters live with the service,
-    /// not the client).
+    /// Server-side [`StatsSnapshot`] with this client's `retries` /
+    /// `reconnects` counters overlaid (the server zero-fills them: the
+    /// client is the only party that can observe its own wire).
     pub fn stats(&self) -> Result<StatsSnapshot, String> {
-        self.expect(&Request::Stats, "stats", |r| match r {
+        let mut snap = self.expect(Request::Stats, "stats", |r| match r {
             Response::Stats(s) => Ok(s),
             other => Err(other),
-        })
+        })?;
+        snap.retries = self.retries();
+        snap.reconnects = self.reconnects();
+        Ok(snap)
     }
 
     /// The server's human-readable `summary()` block.
     pub fn summary(&self) -> Result<String, String> {
-        self.expect(&Request::Summary, "summary", |r| match r {
+        self.expect(Request::Summary, "summary", |r| match r {
             Response::Summary(s) => Ok(s),
             other => Err(other),
         })
@@ -289,24 +408,414 @@ impl RemoteEvalClient {
 }
 
 impl Drop for RemoteEvalClient {
+    /// Tear down without leaking: fail every queued and in-flight slot
+    /// (dropping tickets mid-flight never strands their waiters), close
+    /// the socket, and join the manager (which joins its reader).
     fn drop(&mut self) {
-        self.inner.dead.store(true, Ordering::SeqCst);
-        if let Ok(w) = self.inner.writer.lock() {
-            let _ = w.shutdown(Shutdown::Both);
-        }
-        if let Some(h) = self.reader.lock().unwrap().take() {
+        self.shared.dead.store(true, Ordering::SeqCst);
+        let _ = self.tx.lock().unwrap().send(Event::Shutdown);
+        if let Some(h) = self.manager.lock().unwrap().take() {
             let _ = h.join();
         }
     }
 }
 
-fn reader_loop(mut stream: TcpStream, inner: Arc<ClientInner>) {
+/// One live connection: the write half, the FIFO of written-and-
+/// unanswered requests, and the reader matching responses to it.
+struct Conn {
+    stream: TcpStream,
+    inflight: Arc<Mutex<VecDeque<Pending>>>,
+    reader: Option<thread::JoinHandle<()>>,
+    epoch: u64,
+}
+
+/// The manager thread: owns dialing, writing, retry scheduling, and
+/// teardown.  Single-threaded over all of it, so frame order always
+/// equals in-flight slot order and no lock ordering is needed.
+struct Manager {
+    peer: SocketAddr,
+    policy: RetryPolicy,
+    rx: mpsc::Receiver<Event>,
+    tx: mpsc::Sender<Event>,
+    shared: Arc<Shared>,
+    /// Requests waiting to be (re)written, each gated by `not_before`.
+    queue: VecDeque<Pending>,
+    conn: Option<Conn>,
+    /// Bumped per established connection; events from dead readers
+    /// carry their epoch and are ignored when stale.
+    epoch: u64,
+    /// True between a reconnect and its `Ping` handshake resolving; no
+    /// request is replayed while set.
+    handshaking: bool,
+    rng: Rng,
+    /// Consecutive failed dials (drives dial backoff; reset on
+    /// handshake success).
+    dial_fails: u32,
+    dial_not_before: Instant,
+}
+
+impl Manager {
+    fn run(mut self) {
+        loop {
+            self.expire();
+            self.redial();
+            self.pump();
+            let timeout = self.next_wakeup();
+            match self.rx.recv_timeout(timeout) {
+                Ok(Event::Shutdown) => break,
+                Ok(ev) => self.handle(ev),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        self.teardown();
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Send(p) => self.queue.push_back(p),
+            Event::Retry { mut pending, hint_ms, reason } => {
+                // server-classified retryable failure: back off at
+                // least as long as the server's retry-after hint
+                let backoff = self
+                    .backoff(pending.attempts)
+                    .max(Duration::from_millis(hint_ms));
+                pending.not_before = Instant::now() + backoff;
+                pending.last_err = reason;
+                self.queue.push_back(pending);
+            }
+            Event::HandshakeDone { epoch, ok, msg } => {
+                if self.conn.as_ref().map(|c| c.epoch) != Some(epoch) {
+                    return; // stale
+                }
+                if ok {
+                    self.handshaking = false;
+                    self.dial_fails = 0;
+                    self.shared.reconnects.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    self.kill_conn(&msg);
+                }
+            }
+            Event::ConnDead { epoch, msg } => {
+                if self.conn.as_ref().map(|c| c.epoch) == Some(epoch) {
+                    self.kill_conn(&msg);
+                }
+            }
+            Event::Shutdown => unreachable!("handled in run()"),
+        }
+    }
+
+    /// Deterministic half-jittered exponential backoff: half the capped
+    /// exponential delay is fixed, half is drawn from the seeded RNG.
+    fn backoff(&mut self, attempt: u32) -> Duration {
+        let base = (self.policy.backoff_base.as_millis() as u64).max(1);
+        let cap = (self.policy.backoff_cap.as_millis() as u64).max(base);
+        let full = base.saturating_mul(1u64 << attempt.min(16)).min(cap);
+        let jitter = self.rng.below(full as usize / 2 + 1) as u64;
+        Duration::from_millis(full / 2 + jitter)
+    }
+
+    /// Fail queued requests whose deadline passed, and sever the
+    /// connection if the oldest in-flight request is past its deadline
+    /// (the reader is blocked on the socket, so expiry must cut the
+    /// socket — the conn-death drain then classifies it).
+    fn expire(&mut self) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if now >= self.queue[i].deadline {
+                let p = self.queue.remove(i).unwrap();
+                fail(
+                    &p,
+                    &format!(
+                        "request deadline of {:?} exceeded after {} attempts",
+                        self.policy.deadline, p.attempts
+                    ),
+                );
+            } else {
+                i += 1;
+            }
+        }
+        let stalled = self.conn.as_ref().is_some_and(|c| {
+            c.inflight
+                .lock()
+                .unwrap()
+                .front()
+                .is_some_and(|p| now >= p.deadline)
+        });
+        if stalled {
+            self.kill_conn("request deadline exceeded awaiting a response");
+        }
+    }
+
+    /// Tear down the current connection and reschedule its in-flight
+    /// requests (in order, ahead of the queue) for replay.
+    fn kill_conn(&mut self, msg: &str) {
+        let Some(mut conn) = self.conn.take() else { return };
+        let _ = conn.stream.shutdown(Shutdown::Both);
+        if let Some(h) = conn.reader.take() {
+            let _ = h.join();
+        }
+        self.handshaking = false;
+        let drained: Vec<Pending> = {
+            let mut g = conn.inflight.lock().unwrap();
+            g.drain(..).collect()
+        };
+        for mut p in drained.into_iter().rev() {
+            if p.handshake {
+                continue; // the gate dies with its connection
+            }
+            p.last_err = msg.to_string();
+            p.not_before = Instant::now(); // replay is gated by redial
+            self.queue.push_front(p);
+        }
+        self.dial_fails = self.dial_fails.saturating_add(1);
+        let wait = self.backoff(self.dial_fails);
+        self.dial_not_before = Instant::now() + wait;
+    }
+
+    /// Dial the peer again if there is work and the dial backoff has
+    /// elapsed; a failed dial charges one attempt to every queued
+    /// request, so an unreachable server exhausts budgets instead of
+    /// retrying forever.
+    fn redial(&mut self) {
+        if self.conn.is_some()
+            || self.queue.is_empty()
+            || Instant::now() < self.dial_not_before
+        {
+            return;
+        }
+        match TcpStream::connect(self.peer) {
+            Ok(stream) => {
+                let _ = stream.set_nodelay(true);
+                self.install(stream, true);
+            }
+            Err(e) => {
+                let msg = format!("connection to eval server failed: {e}");
+                let mut i = 0;
+                while i < self.queue.len() {
+                    let p = &mut self.queue[i];
+                    p.attempts += 1;
+                    p.last_err.clone_from(&msg);
+                    if p.attempts >= self.policy.budget {
+                        let p = self.queue.remove(i).unwrap();
+                        fail(
+                            &p,
+                            &format!(
+                                "retry budget of {} attempts exhausted: {}",
+                                self.policy.budget, p.last_err
+                            ),
+                        );
+                    } else {
+                        i += 1;
+                    }
+                }
+                self.dial_fails = self.dial_fails.saturating_add(1);
+                let wait = self.backoff(self.dial_fails);
+                self.dial_not_before = Instant::now() + wait;
+            }
+        }
+    }
+
+    /// Adopt an established stream: spawn its reader and, on
+    /// reconnects, write the `Ping` handshake that gates replay.
+    fn install(&mut self, stream: TcpStream, reconnect: bool) {
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let inflight = Arc::new(Mutex::new(VecDeque::new()));
+        let read_half = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => {
+                self.dial_fails = self.dial_fails.saturating_add(1);
+                let wait = self.backoff(self.dial_fails);
+                self.dial_not_before = Instant::now() + wait;
+                return;
+            }
+        };
+        let rd_inflight = Arc::clone(&inflight);
+        let rd_tx = self.tx.clone();
+        let reader = thread::Builder::new()
+            .name("evalcli-read".into())
+            .spawn(move || reader_loop(read_half, rd_inflight, rd_tx, epoch));
+        let Ok(reader) = reader else { return };
+        let mut conn = Conn { stream, inflight, reader: Some(reader), epoch };
+        self.handshaking = false;
+        if reconnect {
+            // gate replay behind a fresh Ping: nothing — least of all a
+            // non-idempotent RegisterSpec — is re-sent until the server
+            // proves it is answering this connection
+            let now = Instant::now();
+            let gate = Pending {
+                req: Request::Ping,
+                slot: Arc::new(ReplySlot::default()),
+                attempts: 0,
+                deadline: now + self.policy.deadline,
+                not_before: now,
+                last_err: String::new(),
+                handshake: true,
+            };
+            let payload = gate.req.encode();
+            conn.inflight.lock().unwrap().push_back(gate);
+            self.handshaking = true;
+            if proto::write_frame(&mut conn.stream, &payload).is_err() {
+                self.conn = Some(conn);
+                self.kill_conn("connection to eval server failed during handshake");
+                return;
+            }
+        }
+        self.conn = Some(conn);
+    }
+
+    /// Write every eligible queued request to the live connection
+    /// (skipping backoff-gated entries), charging attempts and failing
+    /// budget-exhausted requests.
+    fn pump(&mut self) {
+        if self.handshaking {
+            return;
+        }
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.conn.is_none() {
+                return;
+            }
+            if self.queue[i].not_before > now {
+                i += 1;
+                continue;
+            }
+            let mut p = self.queue.remove(i).unwrap();
+            if p.attempts >= self.policy.budget {
+                fail(
+                    &p,
+                    &format!(
+                        "retry budget of {} attempts exhausted: {}",
+                        self.policy.budget, p.last_err
+                    ),
+                );
+                continue;
+            }
+            p.attempts += 1;
+            if p.attempts > 1 {
+                self.shared.retries.fetch_add(1, Ordering::SeqCst);
+            }
+            let payload = p.req.encode();
+            let conn = self.conn.as_mut().unwrap();
+            let slot = Arc::clone(&p.slot);
+            // queue the slot before the frame: the server cannot answer
+            // an unwritten request, so FIFO order is preserved
+            conn.inflight.lock().unwrap().push_back(p);
+            match proto::write_frame(&mut conn.stream, &payload) {
+                Ok(()) => {}
+                Err(e) if e.kind() == io::ErrorKind::InvalidInput => {
+                    // rejected by the frame size guard before touching
+                    // the socket: terminal for the request, harmless
+                    // for the connection — and never worth retrying
+                    let mut g = conn.inflight.lock().unwrap();
+                    if g.back().is_some_and(|q| Arc::ptr_eq(&q.slot, &slot)) {
+                        g.pop_back();
+                    }
+                    drop(g);
+                    slot.fill(Err(format!("send failed: {e}")));
+                }
+                Err(e) => {
+                    // a partial frame may be on the wire: the
+                    // connection is unrecoverable; the drain requeues
+                    // this request (attempt already charged)
+                    self.kill_conn(&format!("send failed: {e}"));
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Sleep until the nearest actionable instant: a backoff gate
+    /// expiring, a dial window opening, or an in-flight deadline.
+    fn next_wakeup(&self) -> Duration {
+        let now = Instant::now();
+        let mut next: Option<Instant> = None;
+        let mut consider = |t: Instant| {
+            next = Some(match next {
+                Some(n) if n <= t => n,
+                _ => t,
+            });
+        };
+        for p in &self.queue {
+            consider(p.not_before);
+            consider(p.deadline);
+        }
+        if self.conn.is_none() && !self.queue.is_empty() {
+            consider(self.dial_not_before);
+        }
+        if let Some(c) = &self.conn {
+            if let Some(front) = c.inflight.lock().unwrap().front() {
+                consider(front.deadline);
+            }
+        }
+        match next {
+            Some(t) => t.saturating_duration_since(now).min(Duration::from_secs(5)),
+            None => Duration::from_secs(5),
+        }
+    }
+
+    /// Final drain: every queued and in-flight slot resolves closed.
+    fn teardown(&mut self) {
+        self.shared.dead.store(true, Ordering::SeqCst);
+        if let Some(mut conn) = self.conn.take() {
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            if let Some(h) = conn.reader.take() {
+                let _ = h.join();
+            }
+            let drained: Vec<Pending> = {
+                let mut g = conn.inflight.lock().unwrap();
+                g.drain(..).collect()
+            };
+            for p in drained {
+                p.slot.fill(Err("connection to eval server is closed".into()));
+            }
+        }
+        for p in self.queue.drain(..) {
+            p.slot.fill(Err("connection to eval server is closed".into()));
+        }
+        // late events may still hold pendings (e.g. a Retry in the
+        // channel when Shutdown arrived); fail those waiters too
+        while let Ok(ev) = self.rx.try_recv() {
+            match ev {
+                Event::Send(p) | Event::Retry { pending: p, .. } => {
+                    p.slot.fill(Err("connection to eval server is closed".into()));
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Classify a terminal client-side failure into the slot.
+fn fail(p: &Pending, msg: &str) {
+    p.slot.fill(Err(msg.to_string()));
+}
+
+/// Per-connection reader: match responses FIFO against the in-flight
+/// deque, hand retryable classified errors back to the manager, and
+/// report connection death with a classified reason.
+fn reader_loop(
+    mut stream: TcpStream,
+    inflight: Arc<Mutex<VecDeque<Pending>>>,
+    tx: mpsc::Sender<Event>,
+    epoch: u64,
+) {
     let close_msg;
     loop {
-        let result = match proto::read_frame(&mut stream) {
-            Ok(Some(payload)) => {
-                Response::decode(&payload).map_err(|e| e.to_string())
-            }
+        let resp = match proto::read_frame(&mut stream) {
+            Ok(Some(payload)) => match Response::decode(&payload) {
+                Ok(r) => r,
+                Err(e) => {
+                    // an undecodable response means the stream can no
+                    // longer be trusted frame-for-frame; kill the
+                    // connection and let the drain replay everything
+                    close_msg = format!("connection to eval server failed: {e}");
+                    break;
+                }
+            },
             Ok(None) => {
                 close_msg = "connection to eval server is closed".to_string();
                 break;
@@ -316,26 +825,52 @@ fn reader_loop(mut stream: TcpStream, inner: Arc<ClientInner>) {
                 break;
             }
         };
-        let slot = inner.pending.lock().unwrap().pop_front();
-        match slot {
-            Some(s) => s.fill(result),
-            None => {
-                // a frame with no awaiting request: either the server
-                // refused us up front (e.g. connection-capacity errors
-                // are sent before any request — surface that message),
-                // or the stream is out of sync beyond repair; tear the
-                // connection down either way
-                close_msg = match result {
-                    Ok(Response::Error { kind, msg }) => {
-                        format!("eval server refused the connection ({kind}): {msg}")
-                    }
-                    _ => "eval server sent an unsolicited response".to_string(),
-                };
-                break;
+        let pending = inflight.lock().unwrap().pop_front();
+        let Some(pending) = pending else {
+            // a frame with no awaiting request: either the server
+            // refused us up front (connection-capacity errors are sent
+            // before any request — surface that message), or the stream
+            // is out of sync beyond repair; tear down either way
+            close_msg = match resp {
+                Response::Error { kind, msg, .. } => {
+                    format!("eval server refused the connection ({kind}): {msg}")
+                }
+                _ => "eval server sent an unsolicited response".to_string(),
+            };
+            break;
+        };
+        if pending.handshake {
+            let (ok, msg) = match &resp {
+                Response::Pong => (true, String::new()),
+                Response::Error { kind, msg, .. } => (
+                    false,
+                    format!("eval server refused the connection ({kind}): {msg}"),
+                ),
+                other => (
+                    false,
+                    format!(
+                        "Remote protocol error: expected feedback, got {}",
+                        other.kind_name()
+                    ),
+                ),
+            };
+            let _ = tx.send(Event::HandshakeDone { epoch, ok, msg });
+            continue;
+        }
+        match resp {
+            Response::Error { kind, msg, retry_after_ms } if kind.is_retryable() => {
+                // retryable classification (shedding, framing,
+                // corruption, version skew): reschedule instead of
+                // surfacing — the manager applies backoff and budget
+                let _ = tx.send(Event::Retry {
+                    pending,
+                    hint_ms: retry_after_ms,
+                    reason: format!("{kind} error: {msg}"),
+                });
             }
+            resp => pending.slot.fill(Ok(resp)),
         }
     }
-    inner.dead.store(true, Ordering::SeqCst);
     let _ = stream.shutdown(Shutdown::Both);
-    inner.fail_all_pending(&close_msg);
+    let _ = tx.send(Event::ConnDead { epoch, msg: close_msg });
 }

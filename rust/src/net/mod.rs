@@ -1,8 +1,10 @@
-//! Cross-process serving (the PR 5 wire layer): a versioned binary
-//! protocol, a threaded TCP server, and a remote client — so
-//! optimization campaigns can live in *other processes* (or other
-//! machines) and hammer one shared, warm-cached
-//! [`EvalService`](crate::coordinator::EvalService).
+//! Cross-process serving (the PR 5 wire layer, hardened in PR 7): a
+//! versioned binary protocol, a threaded TCP server, a fault-tolerant
+//! remote client, and a deterministic chaos proxy — so optimization
+//! campaigns can live in *other processes* (or other machines) and
+//! hammer one shared, warm-cached
+//! [`EvalService`](crate::coordinator::EvalService), even over a wire
+//! that drops, delays, corrupts, or truncates.
 //!
 //! Zero external dependencies: framing and the codec are hand-rolled
 //! over `std::net` / `std::io`, like the rest of the crate's
@@ -10,20 +12,26 @@
 //!
 //! # Frame format
 //!
-//! Every message travels in one length-prefixed frame:
+//! Every message travels in one length-prefixed, checksummed frame:
 //!
 //! ```text
-//! +----------------+------------------------------------------+
-//! | len: u32 LE    | payload (len bytes)                      |
-//! +----------------+------------------------------------------+
-//!                   payload = [version: u8][tag: u8][body...]
+//! +-------------+--------------------------------+---------------+
+//! | len: u32 LE | payload (len bytes)            | crc: u32 LE   |
+//! +-------------+--------------------------------+---------------+
+//!                payload = [version: u8][tag: u8][body...]
 //! ```
 //!
 //! * `len` counts the payload only (version byte included) and must be
-//!   in `1..=MAX_FRAME`; a length outside that range is an
-//!   unrecoverable framing error — the server answers a classified
-//!   [`proto::ErrorKind::Frame`] response and closes, since the stream
-//!   cannot be resynchronized.
+//!   in `1..=`[`proto::MAX_FRAME_LEN`]; a length outside that range —
+//!   including a hostile multi-gigabyte claim, which is rejected
+//!   *before* any allocation — is an unrecoverable framing error: the
+//!   server answers a classified [`proto::ErrorKind::Frame`] response
+//!   and closes, since the stream cannot be resynchronized.
+//! * `crc` is a FNV-1a-folded checksum of the payload; a mismatch
+//!   (bytes corrupted in transit) is likewise answered as a classified
+//!   `Frame` error and the connection closed — a corrupted request is
+//!   *never* executed, and the client's retry machinery replays it on a
+//!   fresh connection.
 //! * The **version byte** ([`proto::WIRE_VERSION`]) leads every
 //!   payload, *outside* the versioned body, so any future version can
 //!   still be skipped frame-by-frame: a version-skewed frame is
@@ -37,6 +45,41 @@
 //!   [`proto::DecodeError`]s, never panics — answered as classified
 //!   [`proto::ErrorKind::Decode`] responses, never connection aborts.
 //!
+//! # Error taxonomy
+//!
+//! Every wire failure is classified by [`proto::ErrorKind`], and the
+//! class decides who acts and how:
+//!
+//! | kind         | meaning                          | retryable? |
+//! |--------------|----------------------------------|------------|
+//! | `Frame`      | unframeable stream / bad checksum| yes — replay on a fresh connection |
+//! | `Version`    | wire version skew                | yes — a fleet mid-upgrade converges |
+//! | `Decode`     | undecodable payload              | yes — usually corruption that slipped framing |
+//! | `Overloaded` | request shed under load          | yes — after the `retry_after_ms` hint |
+//! | `BadRequest` | the request itself is invalid    | **no** — retrying cannot fix it |
+//! | `Internal`   | server-side invariant failure    | **no** — retrying hides bugs |
+//!
+//! *Retryable* ([`proto::ErrorKind::is_retryable`]) means the same
+//! request may legitimately succeed if re-sent; the
+//! [`client::RetryPolicy`] machinery requeues those transparently with
+//! bounded, seeded-jitter backoff until its budget or per-request
+//! deadline runs out, and only then surfaces a classified
+//! `Remote ... error` execution error.  Terminal kinds surface
+//! immediately.  `Overloaded` responses carry a `retry_after_ms` hint —
+//! the server's estimate of when queue pressure will clear, scaled by
+//! backlog depth — which the client honors as a backoff floor.
+//!
+//! # Fault tolerance
+//!
+//! The server protects itself (queue high-water shedding, per-
+//! connection in-flight caps, idle-connection reaping, graceful drain —
+//! see [`server`]); the client hides transient failure (reconnect and
+//! replay, budgets, deadlines — see [`client`]); and [`chaos`] proves
+//! the combination: a seeded in-process TCP proxy injects delays,
+//! resets, truncation, corruption, and blackholes on a deterministic
+//! byte-offset schedule, and the `chaos-smoke` driver asserts a
+//! campaign run through it is *bit-identical* to a clean local run.
+//!
 //! # Pipelining
 //!
 //! Responses are delivered strictly in request order per connection, so
@@ -47,10 +90,12 @@
 //! while the evaluations themselves proceed concurrently on the
 //! service's worker pool).
 
+pub mod chaos;
 pub mod client;
 pub mod proto;
 pub mod server;
 
-pub use client::{RemoteEvalClient, RemoteTicket};
+pub use chaos::{ChaosConfig, ChaosProxy, ChaosStats};
+pub use client::{RemoteEvalClient, RemoteTicket, RetryPolicy};
 pub use proto::{Scenario, SpecRef, WIRE_VERSION};
 pub use server::EvalServer;

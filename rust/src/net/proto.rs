@@ -20,13 +20,17 @@ use crate::machine::MachineSpec;
 use crate::sim::{CritEntry, ExecMode, PerfProfile};
 
 /// Protocol revision; bumped on any layout change.  Leads every payload
-/// so mismatched peers fail with a classified version error.
-pub const WIRE_VERSION: u8 = 1;
+/// so mismatched peers fail with a classified version error.  (v2 added
+/// the per-frame checksum trailer — see [`write_frame`].)
+pub const WIRE_VERSION: u8 = 2;
 
 /// Upper bound on one frame's payload (DSL mappers, profiles, and stats
 /// snapshots are all well under this; anything larger is a framing
-/// error, not a legitimate message).
-pub const MAX_FRAME: usize = 8 << 20;
+/// error, not a legitimate message).  [`read_frame`] enforces this
+/// *before* allocating, and grows the body buffer incrementally as
+/// bytes actually arrive, so a hostile length prefix can never OOM or
+/// abort the process.
+pub const MAX_FRAME_LEN: usize = 8 << 20;
 
 // ---------------------------------------------------------------------------
 // Errors
@@ -83,8 +87,9 @@ impl DecodeError {
 /// Classified error categories of [`Response::Error`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ErrorKind {
-    /// Unrecoverable framing (length prefix outside `1..=MAX_FRAME`);
-    /// the server answers once and closes the connection.
+    /// Unrecoverable framing (length prefix outside `1..=MAX_FRAME_LEN`
+    /// or a checksum mismatch); the server answers once and closes the
+    /// connection.
     Frame,
     /// Version-skewed frame; the connection keeps serving.
     Version,
@@ -95,6 +100,10 @@ pub enum ErrorKind {
     BadRequest,
     /// Server-side failure outside the evaluation path.
     Internal,
+    /// The server shed this request under load (queue high-water mark
+    /// or per-connection in-flight cap).  Retryable; carries a
+    /// retry-after hint in `Response::Error::retry_after_ms`.
+    Overloaded,
 }
 
 impl ErrorKind {
@@ -105,6 +114,7 @@ impl ErrorKind {
             ErrorKind::Decode => 2,
             ErrorKind::BadRequest => 3,
             ErrorKind::Internal => 4,
+            ErrorKind::Overloaded => 5,
         }
     }
 
@@ -115,6 +125,7 @@ impl ErrorKind {
             2 => Some(ErrorKind::Decode),
             3 => Some(ErrorKind::BadRequest),
             4 => Some(ErrorKind::Internal),
+            5 => Some(ErrorKind::Overloaded),
             _ => None,
         }
     }
@@ -126,7 +137,21 @@ impl ErrorKind {
             ErrorKind::Decode => "decode",
             ErrorKind::BadRequest => "bad-request",
             ErrorKind::Internal => "internal",
+            ErrorKind::Overloaded => "overloaded",
         }
+    }
+
+    /// Whether a client may transparently retry a request answered with
+    /// this kind.  Protocol-level failures (framing, version skew,
+    /// decode) are retryable because evals are pure and the bytes may
+    /// simply have been damaged in transit; `Overloaded` is explicitly
+    /// a "come back later" signal.  `BadRequest` / `Internal` are
+    /// terminal: resending identical bytes cannot change the answer.
+    pub fn is_retryable(self) -> bool {
+        matches!(
+            self,
+            ErrorKind::Frame | ErrorKind::Version | ErrorKind::Decode | ErrorKind::Overloaded
+        )
     }
 }
 
@@ -210,7 +235,14 @@ pub enum Response {
     /// A classified protocol- or request-level failure (evaluation
     /// failures travel as [`Response::Feedback`] carrying the usual
     /// compile/execution-error feedback, exactly like in-process).
-    Error { kind: ErrorKind, msg: String },
+    /// `retry_after_ms` is a server hint for [`ErrorKind::Overloaded`]
+    /// (how long to back off before resubmitting); `0` means no hint
+    /// and is elided on the wire so older decoders still parse.
+    Error {
+        kind: ErrorKind,
+        msg: String,
+        retry_after_ms: u64,
+    },
 }
 
 // ---------------------------------------------------------------------------
@@ -618,6 +650,10 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
         delta_evals,
         spliced_point_tasks,
         dirty_fallbacks,
+        shed_requests,
+        reaped_connections,
+        retries,
+        reconnects,
         specs,
         priorities,
     } = s;
@@ -653,11 +689,16 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
         e.u64(*max_depth);
         e.u64(*queued);
     }
-    // delta counters ride at the tail so pre-delta decoders fail with a
-    // clean Trailing error (and this decoder zero-fills their absence)
+    // delta counters (PR 6) and fault counters (PR 7) ride at the tail
+    // so pre-delta decoders fail with a clean Trailing error (and this
+    // decoder zero-fills their absence, field by field)
     e.u64(*delta_evals);
     e.u64(*spliced_point_tasks);
     e.u64(*dirty_fallbacks);
+    e.u64(*shed_requests);
+    e.u64(*reaped_connections);
+    e.u64(*retries);
+    e.u64(*reconnects);
 }
 
 fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
@@ -697,13 +738,20 @@ fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
             queued: d.u64()?,
         });
     }
-    // appended by the delta-eval revision; zero-fill when a pre-delta
-    // peer's payload ends here (old payloads must classify, not panic)
-    let (delta_evals, spliced_point_tasks, dirty_fallbacks) = if d.remaining() > 0 {
-        (d.u64()?, d.u64()?, d.u64()?)
-    } else {
-        (0, 0, 0)
+    // tail fields appended across revisions (delta counters, then the
+    // fault-tolerance counters); each zero-fills independently so any
+    // older peer's shorter payload — pre-delta or pre-fault — decodes
+    // cleanly instead of panicking
+    let mut tail = || -> Result<u64, DecodeError> {
+        if d.remaining() > 0 { d.u64() } else { Ok(0) }
     };
+    let delta_evals = tail()?;
+    let spliced_point_tasks = tail()?;
+    let dirty_fallbacks = tail()?;
+    let shed_requests = tail()?;
+    let reaped_connections = tail()?;
+    let retries = tail()?;
+    let reconnects = tail()?;
     Ok(StatsSnapshot {
         evals,
         cache_hits,
@@ -725,6 +773,10 @@ fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
         delta_evals,
         spliced_point_tasks,
         dirty_fallbacks,
+        shed_requests,
+        reaped_connections,
+        retries,
+        reconnects,
         specs,
         priorities,
     })
@@ -817,10 +869,15 @@ impl Response {
                 e.str(s);
                 e.buf
             }
-            Response::Error { kind, msg } => {
+            Response::Error { kind, msg, retry_after_ms } => {
                 let mut e = Enc::new(5);
                 e.u8(kind.code());
                 e.str(msg);
+                // hint rides at the tail, elided when absent, so the
+                // pre-overload decoder shape still parses this payload
+                if *retry_after_ms != 0 {
+                    e.u64(*retry_after_ms);
+                }
                 e.buf
             }
         }
@@ -842,7 +899,9 @@ impl Response {
             5 => {
                 let kind = ErrorKind::from_code(d.u8()?)
                     .ok_or(DecodeError::Invalid("error kind"))?;
-                Response::Error { kind, msg: d.str()? }
+                let msg = d.str()?;
+                let retry_after_ms = if d.remaining() > 0 { d.u64()? } else { 0 };
+                Response::Error { kind, msg, retry_after_ms }
             }
             t => return Err(DecodeError::UnknownTag("response", t)),
         };
@@ -868,9 +927,25 @@ impl Response {
 // Framing
 // ---------------------------------------------------------------------------
 
-/// Write one `len ++ payload` frame and flush.
+/// Fold of the FNV-1a hash of a frame payload — the 4-byte integrity
+/// trailer every frame carries so in-transit byte corruption is caught
+/// at the framing layer (a mismatch is an unrecoverable framing error:
+/// the damaged connection is torn down and the client's retry machinery
+/// replays, keeping trajectories bit-identical even on a flaky link).
+fn frame_checksum(payload: &[u8]) -> u32 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in payload {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0001_b3);
+    }
+    (h ^ (h >> 32)) as u32
+}
+
+/// Write one `len ++ payload ++ checksum` frame and flush.  `len`
+/// counts the payload only; the trailing `u32 LE` is
+/// [`frame_checksum`]` of the payload`.
 pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
-    if payload.is_empty() || payload.len() > MAX_FRAME {
+    if payload.is_empty() || payload.len() > MAX_FRAME_LEN {
         return Err(io::Error::new(
             io::ErrorKind::InvalidInput,
             format!("refusing to write a {}-byte frame", payload.len()),
@@ -878,14 +953,16 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
     }
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(payload)?;
+    w.write_all(&frame_checksum(payload).to_le_bytes())?;
     w.flush()
 }
 
 /// Read one frame payload.  `Ok(None)` is a clean end-of-stream (EOF at
 /// a frame boundary); `Err` with [`io::ErrorKind::InvalidData`] is an
-/// unrecoverable framing error (length prefix outside `1..=MAX_FRAME`,
-/// or EOF partway through the prefix — either way the stream cannot be
-/// resynchronized); other errors are transport failures.
+/// unrecoverable framing error (length prefix outside
+/// `1..=MAX_FRAME_LEN`, checksum mismatch, or EOF partway through the
+/// prefix — either way the stream cannot be resynchronized); other
+/// errors are transport failures.
 pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
     // read the length prefix byte-wise so an EOF *inside* it (a peer
     // dying mid-frame) is distinguishable from a clean close *before*
@@ -910,14 +987,29 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
         }
     }
     let n = u32::from_le_bytes(len) as usize;
-    if n == 0 || n > MAX_FRAME {
+    if n == 0 || n > MAX_FRAME_LEN {
         return Err(io::Error::new(
             io::ErrorKind::InvalidData,
-            format!("frame length {n} outside 1..={MAX_FRAME}"),
+            format!("frame length {n} outside 1..={MAX_FRAME_LEN}"),
         ));
     }
-    let mut buf = vec![0u8; n];
-    r.read_exact(&mut buf)?;
+    // grow the body buffer in bounded chunks as bytes actually arrive —
+    // a hostile length prefix costs nothing until real payload follows
+    const CHUNK: usize = 64 << 10;
+    let mut buf = Vec::with_capacity(n.min(CHUNK));
+    while buf.len() < n {
+        let start = buf.len();
+        buf.resize(n.min(start + CHUNK), 0);
+        r.read_exact(&mut buf[start..])?;
+    }
+    let mut sum = [0u8; 4];
+    r.read_exact(&mut sum)?;
+    if u32::from_le_bytes(sum) != frame_checksum(&buf) {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "frame checksum mismatch (payload corrupted in transit)",
+        ));
+    }
     Ok(Some(buf))
 }
 
@@ -1017,6 +1109,10 @@ mod tests {
             delta_evals: 4,
             spliced_point_tasks: 9000,
             dirty_fallbacks: 2,
+            shed_requests: 3,
+            reaped_connections: 1,
+            retries: 6,
+            reconnects: 2,
             specs: vec![SpecSnapshot {
                 name: "p100_cluster".into(),
                 evals: 10,
@@ -1034,7 +1130,43 @@ mod tests {
         roundtrip_resp(&Response::Error {
             kind: ErrorKind::BadRequest,
             msg: "unknown machine spec 'nope'".into(),
+            retry_after_ms: 0,
         });
+        roundtrip_resp(&Response::Error {
+            kind: ErrorKind::Overloaded,
+            msg: "queue at high-water mark (32 deep)".into(),
+            retry_after_ms: 75,
+        });
+    }
+
+    #[test]
+    fn overloaded_hint_is_elided_when_zero_and_retryability_is_classified() {
+        // a zero hint encodes to the pre-overload payload shape
+        let without = Response::Error {
+            kind: ErrorKind::Overloaded,
+            msg: "shed".into(),
+            retry_after_ms: 0,
+        };
+        let with = Response::Error {
+            kind: ErrorKind::Overloaded,
+            msg: "shed".into(),
+            retry_after_ms: 50,
+        };
+        assert_eq!(without.encode().len() + 8, with.encode().len());
+        assert_eq!(Response::decode(&without.encode()).unwrap(), without);
+        assert_eq!(ErrorKind::from_code(5), Some(ErrorKind::Overloaded));
+        assert_eq!(ErrorKind::Overloaded.name(), "overloaded");
+        for kind in [
+            ErrorKind::Frame,
+            ErrorKind::Version,
+            ErrorKind::Decode,
+            ErrorKind::Overloaded,
+        ] {
+            assert!(kind.is_retryable(), "{kind} should be retryable");
+        }
+        for kind in [ErrorKind::BadRequest, ErrorKind::Internal] {
+            assert!(!kind.is_retryable(), "{kind} should be terminal");
+        }
     }
 
     #[test]
@@ -1093,15 +1225,20 @@ mod tests {
     }
 
     #[test]
-    fn pre_delta_stats_payload_decodes_with_zeroed_delta_counters() {
-        // a pre-delta peer's Stats payload is exactly today's shape minus
-        // the three trailing u64s — it must classify cleanly, never panic
+    fn older_stats_payloads_decode_with_zeroed_tail_counters() {
+        // older peers' Stats payloads are exactly today's shape minus
+        // trailing u64s: pre-fault peers lack the last four, pre-delta
+        // peers lack all seven — both must decode cleanly, never panic
         let full = StatsSnapshot {
             evals: 11,
             cache_hits: 3,
             delta_evals: 5,
             spliced_point_tasks: 1234,
             dirty_fallbacks: 1,
+            shed_requests: 7,
+            reaped_connections: 2,
+            retries: 4,
+            reconnects: 1,
             priorities: vec![PrioritySnapshot {
                 priority: 128,
                 submitted: 9,
@@ -1111,31 +1248,53 @@ mod tests {
             ..StatsSnapshot::default()
         };
         let bytes = Response::Stats(full.clone()).encode();
-        let old = &bytes[..bytes.len() - 24];
-        match Response::decode(old).unwrap() {
-            Response::Stats(got) => {
-                assert_eq!(got.delta_evals, 0);
-                assert_eq!(got.spliced_point_tasks, 0);
-                assert_eq!(got.dirty_fallbacks, 0);
-                assert_eq!(
-                    got,
-                    StatsSnapshot {
-                        delta_evals: 0,
-                        spliced_point_tasks: 0,
-                        dirty_fallbacks: 0,
-                        ..full
-                    }
-                );
-            }
+        let pre_fault = &bytes[..bytes.len() - 32];
+        match Response::decode(pre_fault).unwrap() {
+            Response::Stats(got) => assert_eq!(
+                got,
+                StatsSnapshot {
+                    shed_requests: 0,
+                    reaped_connections: 0,
+                    retries: 0,
+                    reconnects: 0,
+                    ..full.clone()
+                }
+            ),
             other => panic!("wrong variant {}", other.kind_name()),
         }
-        // and truncating inside the trio still classifies, never panics
-        for cut in 1..24 {
-            let err = Response::decode(&bytes[..bytes.len() - cut]).unwrap_err();
-            assert!(
-                matches!(err, DecodeError::Truncated),
-                "cut {cut}: unexpected {err:?}"
-            );
+        let pre_delta = &bytes[..bytes.len() - 56];
+        match Response::decode(pre_delta).unwrap() {
+            Response::Stats(got) => assert_eq!(
+                got,
+                StatsSnapshot {
+                    delta_evals: 0,
+                    spliced_point_tasks: 0,
+                    dirty_fallbacks: 0,
+                    shed_requests: 0,
+                    reaped_connections: 0,
+                    retries: 0,
+                    reconnects: 0,
+                    ..full
+                }
+            ),
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+        // truncating inside any tail field still classifies (cuts on
+        // field boundaries decode with the shorter-payload zero-fill)
+        for cut in 1..56 {
+            let short = &bytes[..bytes.len() - cut];
+            if cut % 8 == 0 {
+                assert!(
+                    matches!(Response::decode(short), Ok(Response::Stats(_))),
+                    "cut {cut}: field-boundary cut should zero-fill"
+                );
+            } else {
+                let err = Response::decode(short).unwrap_err();
+                assert!(
+                    matches!(err, DecodeError::Truncated),
+                    "cut {cut}: unexpected {err:?}"
+                );
+            }
         }
     }
 
@@ -1155,9 +1314,34 @@ mod tests {
         zero.extend_from_slice(&payload);
         let err = read_frame(&mut zero.as_slice()).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
-        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        let huge = ((MAX_FRAME_LEN + 1) as u32).to_le_bytes();
         let err = read_frame(&mut huge.as_slice()).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // a hostile prefix claiming the maximum length costs no huge
+        // up-front allocation and fails when the body never arrives
+        let max_claim = (MAX_FRAME_LEN as u32).to_le_bytes();
+        assert!(read_frame(&mut max_claim.as_slice()).is_err());
         assert!(write_frame(&mut Vec::new(), &[]).is_err());
+    }
+
+    #[test]
+    fn corrupted_frames_fail_the_checksum_not_the_decoder() {
+        let payload = Request::GetSpec { name: "p100_cluster".into() }.encode();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &payload).unwrap();
+        // flip one payload byte: caught by the checksum trailer
+        let mut bent = wire.clone();
+        bent[4 + payload.len() / 2] ^= 0x40;
+        let err = read_frame(&mut bent.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("checksum"));
+        // flip one checksum byte: same classification
+        let mut tail = wire.clone();
+        let last = tail.len() - 1;
+        tail[last] ^= 0x01;
+        let err = read_frame(&mut tail.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // the pristine frame still reads back
+        assert_eq!(read_frame(&mut wire.as_slice()).unwrap().unwrap(), payload);
     }
 }

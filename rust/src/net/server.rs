@@ -6,29 +6,63 @@
 //! One thread accepts connections; each connection gets a reader thread
 //! (this one) plus a writer thread.  The reader decodes frames and
 //! turns them into replies *immediately* — synchronous requests resolve
-//! inline, evaluations become [`EvalTicket`]s submitted to the
-//! service's priority queue — and hands them to the writer in arrival
-//! order.  The writer waits each ticket and encodes the response, so
-//! responses keep request order (the client matches FIFO) while the
-//! evaluations themselves run concurrently on the service's worker
-//! pool, interleaved with every other client's.
+//! inline, evaluations become [`EvalTicket`]s admitted to the service's
+//! priority queue via the non-blocking
+//! [`EvalService::try_submit`](crate::coordinator::EvalService::try_submit)
+//! — and hands them to the writer in arrival order.  The writer waits
+//! each ticket and encodes the response, so responses keep request
+//! order (the client matches FIFO) while the evaluations themselves run
+//! concurrently on the service's worker pool, interleaved with every
+//! other client's.
 //!
-//! Fault containment: framing errors, version skew, undecodable
-//! payloads, unknown specs/apps, and worker panics are all answered as
-//! classified responses ([`proto::Response::Error`] or error-carrying
-//! feedback), never connection aborts — the only hard close is an
-//! unrecoverable length prefix, answered first.
+//! # Self-protection
+//!
+//! The serving path never queues or blocks without bound:
+//!
+//! * **Queue high-water shedding** — at the service's high-water mark,
+//!   lowest-priority work is shed with a classified
+//!   [`ErrorKind::Overloaded`] response carrying a retry-after hint
+//!   (see [`CacheConfig::queue_high_water`]); readers never block on a
+//!   full queue.
+//! * **Per-connection in-flight cap** — a connection may keep at most
+//!   [`MAX_CONN_IN_FLIGHT`] evaluations pending; excess submissions are
+//!   answered `Overloaded` immediately, so one client cannot pin the
+//!   writer behind an unbounded ticket backlog.
+//! * **Idle/read deadline** — a connection that sends nothing for
+//!   `MAPPEROPT_CONN_DEADLINE_S` seconds (default 300; `0` disables)
+//!   is reaped: counted in
+//!   [`ServiceStats::reaped_connections`](crate::coordinator::ServiceStats),
+//!   answered with a best-effort classified error, and closed — zombie
+//!   peers cannot hold threads and sockets forever.
+//! * **Graceful drain** — [`EvalServer::shutdown`] stops accepting,
+//!   half-closes every live connection (read side), lets the writers
+//!   answer all in-flight tickets, and joins the connection threads, so
+//!   restarts never strand a pending reply.  [`EvalServer::kill`] is
+//!   the abrupt variant (both sides severed, in-flight replies lost) —
+//!   what the fault-injection tests use to simulate a crash.
+//!
+//! Fault containment: framing errors (including checksum mismatches),
+//! version skew, undecodable payloads, unknown specs/apps, and worker
+//! panics are all answered as classified responses
+//! ([`proto::Response::Error`] or error-carrying feedback), never
+//! connection aborts — the only hard close is an unrecoverable frame,
+//! answered first.
+//!
+//! [`CacheConfig::queue_high_water`]: crate::coordinator::CacheConfig
 
+use std::collections::HashMap;
 use std::io;
 use std::net::{
     IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream,
 };
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
+use std::time::Duration;
 
 use crate::apps;
 use crate::coordinator::{EvalRequest, EvalService, EvalTicket};
+use crate::feedback::SystemFeedback;
 
 use super::proto::{
     self, ErrorKind, Request, Response, SpecRef, WireEvalRequest,
@@ -39,16 +73,6 @@ use super::proto::{
 enum Reply {
     Now(Response),
     Ticket(EvalTicket),
-}
-
-/// Releases one connection slot on drop — including when the
-/// connection handler panics, so a fault can never leak capacity.
-struct ConnSlot(Arc<AtomicUsize>);
-
-impl Drop for ConnSlot {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
-    }
 }
 
 /// Per-request budget on the simulated task graph a remote scenario may
@@ -78,15 +102,85 @@ const MAX_SPEC_NAME_BYTES: usize = 256;
 /// threads/fds under a reconnect storm.
 const MAX_CONNECTIONS: usize = 256;
 
+/// Evaluations one connection may keep pending at once; submissions
+/// past the cap are answered [`ErrorKind::Overloaded`] immediately
+/// (counted as shed), so a single pipelining client cannot build an
+/// unbounded ticket backlog behind its writer.
+pub const MAX_CONN_IN_FLIGHT: usize = 64;
+
+/// Idle/read deadline from `MAPPEROPT_CONN_DEADLINE_S` (seconds;
+/// default 300, `0` disables).
+fn conn_deadline() -> Option<Duration> {
+    let secs = std::env::var("MAPPEROPT_CONN_DEADLINE_S")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(300);
+    (secs > 0).then(|| Duration::from_secs(secs))
+}
+
+/// Live-connection registry: the accept loop registers every served
+/// stream (for drain/kill) and its thread handle (for join), and the
+/// per-connection guard unregisters on exit — including panicking
+/// exits, so a fault can never leak capacity.
+#[derive(Default)]
+struct ConnRegistry {
+    active: AtomicUsize,
+    next_id: AtomicUsize,
+    streams: Mutex<HashMap<usize, TcpStream>>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl ConnRegistry {
+    /// Half- or full-close every live connection.
+    fn sever(&self, how: Shutdown) {
+        let g = self.streams.lock().unwrap();
+        for s in g.values() {
+            let _ = s.shutdown(how);
+        }
+    }
+
+    /// Join every connection thread (called after the acceptor has
+    /// stopped, so no new handles appear concurrently).
+    fn join_all(&self) {
+        let handles: Vec<_> = {
+            let mut g = self.handles.lock().unwrap();
+            g.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Drop handles of connections that already exited, so a long-lived
+    /// server's handle list stays O(live connections).
+    fn prune_finished(&self) {
+        self.handles.lock().unwrap().retain(|h| !h.is_finished());
+    }
+}
+
+/// Releases one connection slot (and its stream registration) on drop.
+struct ConnSlot {
+    registry: Arc<ConnRegistry>,
+    id: usize,
+}
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.registry.streams.lock().unwrap().remove(&self.id);
+        self.registry.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// A TCP front over one shared [`EvalService`] (see module docs).
 /// Binding spawns the accept loop; [`EvalServer::join`] blocks for a
-/// serve-forever process, dropping (or [`EvalServer::shutdown`]) stops
-/// accepting and joins the acceptor.  Established connections run to
-/// client disconnect.
+/// serve-forever process.  [`EvalServer::shutdown`] (and plain drop)
+/// drains gracefully: stop accepting, answer in-flight work, close.
+/// [`EvalServer::kill`] severs every connection abruptly instead.
 pub struct EvalServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept: Option<thread::JoinHandle<()>>,
+    conns: Arc<ConnRegistry>,
 }
 
 impl EvalServer {
@@ -98,7 +192,9 @@ impl EvalServer {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop_flag = Arc::clone(&stop);
-        let conns = Arc::new(AtomicUsize::new(0));
+        let conns = Arc::new(ConnRegistry::default());
+        let registry = Arc::clone(&conns);
+        let deadline = conn_deadline();
         let accept = thread::Builder::new()
             .name("evalsrv-accept".into())
             .spawn(move || {
@@ -108,45 +204,57 @@ impl EvalServer {
                     }
                     match conn {
                         Ok(mut stream) => {
-                            if conns.load(Ordering::SeqCst) >= MAX_CONNECTIONS {
+                            registry.prune_finished();
+                            if registry.active.load(Ordering::SeqCst)
+                                >= MAX_CONNECTIONS
+                            {
                                 // classified refusal, then close
                                 let resp = Response::Error {
-                                    kind: ErrorKind::Internal,
+                                    kind: ErrorKind::Overloaded,
                                     msg: format!(
                                         "server at connection capacity \
                                          ({MAX_CONNECTIONS})"
                                     ),
+                                    retry_after_ms: 250,
                                 };
                                 let _ = proto::write_frame(&mut stream, &resp.encode());
                                 continue;
                             }
-                            conns.fetch_add(1, Ordering::SeqCst);
+                            registry.active.fetch_add(1, Ordering::SeqCst);
+                            let id = registry.next_id.fetch_add(1, Ordering::SeqCst);
+                            if let Ok(clone) = stream.try_clone() {
+                                registry.streams.lock().unwrap().insert(id, clone);
+                            }
                             let service = Arc::clone(&service);
-                            let slot = ConnSlot(Arc::clone(&conns));
+                            let slot =
+                                ConnSlot { registry: Arc::clone(&registry), id };
                             // on spawn failure the closure (stream +
                             // guard) is dropped, and the guard's Drop
                             // releases the reservation either way
-                            let _ = thread::Builder::new()
+                            let spawned = thread::Builder::new()
                                 .name("evalsrv-conn".into())
                                 .spawn(move || {
                                     // held for the connection's life:
                                     // released on return *and* on panic
                                     let _slot = slot;
-                                    handle_conn(stream, service);
+                                    handle_conn(stream, service, deadline);
                                 });
+                            if let Ok(h) = spawned {
+                                registry.handles.lock().unwrap().push(h);
+                            }
                         }
                         // transient accept errors (EMFILE, aborted
                         // handshakes) must not kill the server — but
                         // back off so a persistent error (fd
                         // exhaustion) cannot busy-spin this thread
                         Err(_) => {
-                            thread::sleep(std::time::Duration::from_millis(50));
+                            thread::sleep(Duration::from_millis(50));
                             continue;
                         }
                     }
                 }
             })?;
-        Ok(EvalServer { addr: local, stop, accept: Some(accept) })
+        Ok(EvalServer { addr: local, stop, accept: Some(accept), conns })
     }
 
     /// The bound address (resolves the ephemeral port of `":0"` binds).
@@ -161,9 +269,32 @@ impl EvalServer {
         }
     }
 
-    /// Stop accepting new connections and join the acceptor.
+    /// Graceful drain: stop accepting, half-close every live connection
+    /// (readers see a clean end-of-stream and stop taking requests),
+    /// let the writers answer everything already in flight, and join
+    /// the connection threads — a restart never strands a pending
+    /// ticket.
     pub fn shutdown(mut self) {
+        self.drain();
+    }
+
+    /// Abrupt stop: sever every live connection both ways (in-flight
+    /// replies are lost — clients observe a dead socket, exactly like a
+    /// crashed process) and stop accepting.  The fault-injection tests
+    /// use this to simulate a server crash; everything else should
+    /// prefer [`EvalServer::shutdown`].
+    pub fn kill(mut self) {
         self.stop_accepting();
+        self.conns.sever(Shutdown::Both);
+        self.conns.join_all();
+        self.accept = None;
+    }
+
+    fn drain(&mut self) {
+        self.stop_accepting();
+        // acceptor is joined: the registry is stable from here on
+        self.conns.sever(Shutdown::Read);
+        self.conns.join_all();
     }
 
     fn stop_accepting(&mut self) {
@@ -188,18 +319,27 @@ impl EvalServer {
 
 impl Drop for EvalServer {
     fn drop(&mut self) {
-        self.stop_accepting();
+        self.drain();
     }
 }
 
 /// Per-connection reader: decode frames, resolve or enqueue, preserve
 /// order through the writer channel.
-fn handle_conn(stream: TcpStream, service: Arc<EvalService>) {
+fn handle_conn(
+    stream: TcpStream,
+    service: Arc<EvalService>,
+    deadline: Option<Duration>,
+) {
     let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(deadline);
     let mut reader = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     };
+    // evaluations this connection has pending: inc'd by the reader when
+    // a ticket is queued, dec'd by the writer once its reply is sent
+    let in_flight = Arc::new(AtomicUsize::new(0));
+    let in_flight_w = Arc::clone(&in_flight);
     let (tx, rx) = mpsc::channel::<Reply>();
     let writer = thread::Builder::new()
         .name("evalsrv-write".into())
@@ -209,8 +349,23 @@ fn handle_conn(stream: TcpStream, service: Arc<EvalService>) {
                 let resp = match reply {
                     Reply::Now(r) => r,
                     // worker panics surface through the ticket as
-                    // classified execution-error feedback
-                    Reply::Ticket(t) => Response::Feedback(t.wait()),
+                    // classified execution-error feedback; shed tickets
+                    // become wire Overloaded errors with the hint
+                    Reply::Ticket(t) => {
+                        let fb = t.wait();
+                        in_flight_w.fetch_sub(1, Ordering::SeqCst);
+                        match t.shed_retry_after_ms() {
+                            Some(ms) => Response::Error {
+                                kind: ErrorKind::Overloaded,
+                                msg: match fb {
+                                    SystemFeedback::ExecutionError(m) => m,
+                                    _ => "request shed under load".into(),
+                                },
+                                retry_after_ms: ms,
+                            },
+                            None => Response::Feedback(fb),
+                        }
+                    }
                 };
                 if proto::write_frame(&mut out, &resp.encode()).is_err() {
                     // client gone: remaining queued replies are simply
@@ -227,26 +382,49 @@ fn handle_conn(stream: TcpStream, service: Arc<EvalService>) {
     loop {
         let payload = match proto::read_frame(&mut reader) {
             Ok(Some(p)) => p,
-            Ok(None) => break, // clean close
+            Ok(None) => break, // clean close (or graceful drain)
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                // idle past the read deadline: reap the zombie — count
+                // it, answer best-effort, close
+                service.note_reaped_connection();
+                let secs = deadline.map_or(0, |d| d.as_secs());
+                let _ = tx.send(Reply::Now(Response::Error {
+                    kind: ErrorKind::Internal,
+                    msg: format!(
+                        "connection idle past the {secs}s read deadline; closing"
+                    ),
+                    retry_after_ms: 0,
+                }));
+                break;
+            }
             Err(e) if e.kind() == io::ErrorKind::InvalidData => {
-                // unrecoverable framing: classify, answer, close
+                // unrecoverable framing (bad length or checksum):
+                // classify, answer, close
                 let _ = tx.send(Reply::Now(Response::Error {
                     kind: ErrorKind::Frame,
                     msg: e.to_string(),
+                    retry_after_ms: 0,
                 }));
                 break;
             }
             Err(_) => break, // transport failure
         };
         let reply = match Request::decode(&payload) {
-            Ok(req) => serve_request(req, &service),
+            Ok(req) => serve_request(req, &service, &in_flight),
             // version skew / undecodable payloads answer in place; the
             // length prefix already resynchronized the stream
             Err(e) => Reply::Now(Response::Error {
                 kind: e.wire_kind(),
                 msg: e.to_string(),
+                retry_after_ms: 0,
             }),
         };
+        if let Reply::Ticket(_) = &reply {
+            in_flight.fetch_add(1, Ordering::SeqCst);
+        }
         if tx.send(reply).is_err() {
             break;
         }
@@ -256,16 +434,43 @@ fn handle_conn(stream: TcpStream, service: Arc<EvalService>) {
 }
 
 fn bad_request(msg: String) -> Reply {
-    Reply::Now(Response::Error { kind: ErrorKind::BadRequest, msg })
+    Reply::Now(Response::Error {
+        kind: ErrorKind::BadRequest,
+        msg,
+        retry_after_ms: 0,
+    })
 }
 
-fn serve_request(req: Request, service: &Arc<EvalService>) -> Reply {
+fn serve_request(
+    req: Request,
+    service: &Arc<EvalService>,
+    in_flight: &AtomicUsize,
+) -> Reply {
     match req {
         Request::Ping => Reply::Now(Response::Pong),
-        Request::Eval(q) => match prepare_eval(q, service) {
-            Ok(req) => Reply::Ticket(service.submit(req)),
-            Err(reply) => reply,
-        },
+        Request::Eval(q) => {
+            if in_flight.load(Ordering::SeqCst) >= MAX_CONN_IN_FLIGHT {
+                // connection-level admission control: answered in place
+                // (counted as a shed submission), so one pipelining
+                // client cannot build an unbounded ticket backlog
+                service.note_shed_at_connection();
+                return Reply::Now(Response::Error {
+                    kind: ErrorKind::Overloaded,
+                    msg: format!(
+                        "connection has {MAX_CONN_IN_FLIGHT} evaluations in \
+                         flight; drain replies before submitting more"
+                    ),
+                    retry_after_ms: 25,
+                });
+            }
+            match prepare_eval(q, service) {
+                // non-blocking admission: at the queue's high-water
+                // mark the service sheds lowest-priority work and the
+                // ticket resolves as Overloaded (see the writer)
+                Ok(req) => Reply::Ticket(service.try_submit(req)),
+                Err(reply) => reply,
+            }
+        }
         Request::RegisterSpec { name, spec } => {
             if name.len() > MAX_SPEC_NAME_BYTES
                 || spec.name.len() > MAX_SPEC_NAME_BYTES

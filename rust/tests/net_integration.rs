@@ -2,15 +2,19 @@
 //! (bit-identical scores and trajectories through the wire protocol),
 //! cross-client cache sharing on the server, classified protocol-error
 //! handling (framing / version / decode / bad requests — never
-//! connection aborts), remote spec registration, pipelined tickets, and
-//! per-priority queue accounting over the wire.
+//! connection aborts), remote spec registration, pipelined tickets,
+//! per-priority queue accounting over the wire, and the fault paths:
+//! server crash + restart behind the chaos proxy (reconnect-and-replay,
+//! bit-identical), queue-saturation shedding with `Overloaded` retries,
+//! deadline expiry classification, and drop-order teardown.
 
 use std::io::Write;
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Duration;
 
-use mapperopt::coordinator::{Coordinator, EvalService};
+use mapperopt::coordinator::{CacheConfig, Coordinator, EvalService};
 use mapperopt::coordinator::{SearchAlgo, PRIORITY_NORMAL};
 use mapperopt::feedback::FeedbackConfig;
 use mapperopt::machine::MachineSpec;
@@ -18,7 +22,10 @@ use mapperopt::mapping::expert_dsl;
 use mapperopt::net::proto::{
     read_frame, write_frame, ErrorKind, Request, Response, WIRE_VERSION,
 };
-use mapperopt::net::{EvalServer, RemoteEvalClient, Scenario, SpecRef};
+use mapperopt::net::{
+    ChaosConfig, ChaosProxy, EvalServer, RemoteEvalClient, RetryPolicy,
+    Scenario, SpecRef,
+};
 use mapperopt::sim::ExecMode;
 
 const SER: ExecMode = ExecMode::Serialized;
@@ -314,7 +321,7 @@ fn protocol_errors_are_classified_and_never_abort_the_connection() {
     skewed[0] = WIRE_VERSION + 9;
     write_frame(&mut raw, &skewed).unwrap();
     match expect(&mut raw, "version skew") {
-        Response::Error { kind: ErrorKind::Version, msg } => {
+        Response::Error { kind: ErrorKind::Version, msg, .. } => {
             assert!(msg.contains("unsupported wire version"), "{msg}");
         }
         other => panic!("expected version error, got {other:?}"),
@@ -322,7 +329,7 @@ fn protocol_errors_are_classified_and_never_abort_the_connection() {
 
     write_frame(&mut raw, &[WIRE_VERSION, 0xFE, 1, 2, 3]).unwrap();
     match expect(&mut raw, "unknown tag") {
-        Response::Error { kind: ErrorKind::Decode, msg } => {
+        Response::Error { kind: ErrorKind::Decode, msg, .. } => {
             assert!(msg.contains("unknown request tag"), "{msg}");
         }
         other => panic!("expected decode error, got {other:?}"),
@@ -343,6 +350,255 @@ fn protocol_errors_are_classified_and_never_abort_the_connection() {
         read_frame(&mut raw).expect("clean close").is_none(),
         "server must close after an unrecoverable framing error"
     );
+
+    server.shutdown();
+}
+
+/// A faultless chaos proxy gives the client a stable front address;
+/// killing the server mid-session and restarting it on a *different*
+/// port (same warm service) must be invisible to the client beyond its
+/// `reconnects` counter: every post-crash evaluation is bit-identical
+/// to the in-process answer.
+#[test]
+fn server_kill_and_restart_is_transparent_to_the_client() {
+    let service = Arc::new(EvalService::new(3, 32));
+    let server = EvalServer::bind("127.0.0.1:0", Arc::clone(&service))
+        .expect("bind loopback");
+    let passthrough = ChaosConfig {
+        delay_weight: 0,
+        corrupt_weight: 0,
+        truncate_weight: 0,
+        reset_weight: 0,
+        blackhole_weight: 0,
+        ..ChaosConfig::default()
+    };
+    let proxy = ChaosProxy::bind("127.0.0.1:0", server.addr(), passthrough)
+        .expect("bind proxy");
+    let policy = RetryPolicy {
+        deadline: Duration::from_secs(30),
+        budget: 8,
+        backoff_base: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(100),
+        seed: 7,
+    };
+    let client = RemoteEvalClient::connect_with(proxy.addr(), policy)
+        .expect("connect through proxy");
+
+    let app = mapperopt::apps::by_name("circuit").unwrap();
+    let dsl = expert_dsl("circuit").unwrap();
+    let p100 = service.spec_id("p100_cluster").unwrap();
+    let want = service.evaluate(p100, &app, dsl, SER);
+
+    // phase 1: a clean exchange over the proxied connection
+    let fb = client.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario::named("circuit"),
+        dsl,
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert_eq!(fb, want, "pre-crash feedback must be bit-identical");
+
+    // phase 2: crash the server — established connections are severed
+    // abruptly, exactly what a killed process looks like on the wire
+    server.kill();
+
+    // phase 3: restart on a fresh port against the same warm service,
+    // and repoint the proxy (the client's front address never changes)
+    let server2 = EvalServer::bind("127.0.0.1:0", Arc::clone(&service))
+        .expect("rebind loopback");
+    proxy.set_backend(server2.addr());
+
+    // phase 4: the same client handle transparently redials and replays
+    let mappers = [
+        "Task * GPU;\nRegion * * GPU FBMEM;\n",
+        "Task * GPU;\nRegion * * GPU FBMEM;\nLayout * * * SOA C_order Align==128;\n",
+        "Task * CPU;\nRegion * * CPU SYSMEM;\n",
+    ];
+    for m in mappers {
+        let fb = client.evaluate(
+            SpecRef::Name("p100_cluster".into()),
+            Scenario::named("circuit"),
+            m,
+            SER,
+            PRIORITY_NORMAL,
+        );
+        let direct = service.evaluate(p100, &app, m, SER);
+        assert_eq!(fb, direct, "post-restart feedback must be bit-identical");
+    }
+    assert!(
+        client.reconnects() > 0,
+        "a killed server must show up as a reconnect, not a new client"
+    );
+
+    // the client overlays its wire counters onto fetched snapshots
+    let snap = client.stats().expect("stats after restart");
+    assert_eq!(snap.reconnects, client.reconnects());
+    assert_eq!(snap.retries, client.retries());
+
+    drop(client);
+    proxy.shutdown();
+    server2.shutdown();
+}
+
+/// Saturating a 1-worker service with `queue_high_water: 1` forces
+/// admission control to shed: clients see classified `Overloaded`
+/// responses, the retry machinery hides them, every request eventually
+/// lands bit-identically, and the shed accounting identity holds.
+#[test]
+fn saturated_server_sheds_and_clients_retry_through() {
+    let service = Arc::new(EvalService::with_cache_config(
+        1,
+        4,
+        CacheConfig { queue_high_water: 1, ..CacheConfig::default() },
+    ));
+    let server = EvalServer::bind("127.0.0.1:0", Arc::clone(&service))
+        .expect("bind loopback");
+    let addr = server.addr().to_string();
+    let policy = RetryPolicy {
+        deadline: Duration::from_secs(60),
+        budget: 64,
+        backoff_base: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(50),
+        seed: 11,
+    };
+    let client =
+        RemoteEvalClient::connect_with(&addr, policy).expect("connect");
+
+    // textually distinct mappers (distinct cache keys) pipelined fast
+    // enough to overwhelm a queue that admits one request at a time
+    let mappers: Vec<String> = (0..10)
+        .map(|i| {
+            format!(
+                "Task * GPU;\nRegion * * GPU FBMEM;{}\n",
+                "\n".repeat(i)
+            )
+        })
+        .collect();
+    let tickets: Vec<_> = mappers
+        .iter()
+        .map(|m| {
+            client.submit(
+                SpecRef::Name("p100_cluster".into()),
+                Scenario::named("circuit"),
+                m.clone(),
+                SER,
+                PRIORITY_NORMAL,
+            )
+        })
+        .collect();
+    for (i, t) in tickets.iter().enumerate() {
+        let fb = t.wait();
+        assert!(
+            !fb.is_error(),
+            "request {i} must survive shedding via retries: {}",
+            fb.line()
+        );
+    }
+
+    // the burst was heavy enough to shed, and the accounting identity
+    // from the service layer survives the wire: every submission is an
+    // eval, a cache hit, or a shed — nothing vanishes
+    let snap = service.snapshot();
+    assert!(snap.shed_requests > 0, "high-water mark must have shed");
+    assert_eq!(snap.submitted, snap.completed);
+    assert_eq!(
+        snap.evals + snap.cache_hits + snap.shed_requests,
+        snap.completed,
+        "evals + hits + shed must equal submissions"
+    );
+    assert!(
+        client.retries() > 0,
+        "shed responses must be retried, not surfaced"
+    );
+
+    // and each answer matches the in-process result bit-for-bit
+    let app = mapperopt::apps::by_name("circuit").unwrap();
+    let p100 = service.spec_id("p100_cluster").unwrap();
+    for (m, t) in mappers.iter().zip(&tickets) {
+        assert_eq!(t.wait(), service.evaluate(p100, &app, m, SER));
+    }
+
+    drop(client);
+    server.shutdown();
+}
+
+/// A blackholed connection (bytes vanish, no reset) cannot be detected
+/// by the transport — only the per-request deadline catches it, and it
+/// must classify as a deadline failure rather than hang.
+#[test]
+fn blackholed_wire_classifies_as_deadline_expiry() {
+    let (_service, server, _addr) = boot();
+    let blackhole = ChaosConfig {
+        gap: (1, 1),
+        delay_weight: 0,
+        corrupt_weight: 0,
+        truncate_weight: 0,
+        reset_weight: 0,
+        blackhole_weight: 1,
+        max_faults_per_conn: 1,
+        ..ChaosConfig::default()
+    };
+    let proxy = ChaosProxy::bind("127.0.0.1:0", server.addr(), blackhole)
+        .expect("bind proxy");
+    let policy = RetryPolicy {
+        deadline: Duration::from_millis(400),
+        budget: 2,
+        backoff_base: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(20),
+        seed: 3,
+    };
+    let client = RemoteEvalClient::connect_with(proxy.addr(), policy)
+        .expect("connect through proxy");
+    let err = client.ping().expect_err("a blackholed ping must not hang");
+    assert!(err.contains("deadline"), "want a deadline classification: {err}");
+    drop(client);
+    proxy.shutdown();
+    server.shutdown();
+}
+
+/// Teardown order must never hang or leak: dropping unawaited tickets
+/// then the client joins cleanly, and dropping the client first
+/// resolves surviving tickets instead of stranding them.
+#[test]
+fn drop_order_never_hangs_tickets_or_clients() {
+    let (_service, server, addr) = boot();
+
+    // tickets dropped before their responses arrive: the reader simply
+    // fills slots nobody reads, and the client must still join
+    let client = RemoteEvalClient::connect(&addr).expect("connect");
+    for i in 0..4 {
+        let t = client.submit(
+            SpecRef::Name("p100_cluster".into()),
+            Scenario::named("circuit"),
+            format!("Task * GPU;\nRegion * * GPU FBMEM;{}\n", "\n".repeat(i)),
+            SER,
+            PRIORITY_NORMAL,
+        );
+        drop(t);
+    }
+    drop(client);
+
+    // client dropped first: a surviving ticket must still resolve —
+    // either the response raced in before teardown, or the slot is
+    // failed with a classified closed-connection error
+    let client = RemoteEvalClient::connect(&addr).expect("reconnect");
+    let ticket = client.submit(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario::named("circuit"),
+        "Task * CPU;\nRegion * * CPU SYSMEM;\n".to_string(),
+        SER,
+        PRIORITY_NORMAL,
+    );
+    drop(client);
+    let fb = ticket.wait();
+    if fb.is_error() {
+        assert!(
+            fb.line().contains("closed"),
+            "a stranded ticket must classify the teardown: {}",
+            fb.line()
+        );
+    }
 
     server.shutdown();
 }

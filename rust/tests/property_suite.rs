@@ -16,8 +16,11 @@ use mapperopt::dsl::{MappingPolicy, TaskCtx};
 use mapperopt::feedback::SystemFeedback;
 use mapperopt::machine::{MachineSpec, MemKind, ProcKind, ProcSpace};
 use mapperopt::net::proto::{
-    DecodeError, Request, Response, Scenario, SpecRef, WireEvalRequest,
-    WIRE_VERSION,
+    read_frame, DecodeError, ErrorKind, Request, Response, Scenario, SpecRef,
+    WireEvalRequest, MAX_FRAME_LEN, WIRE_VERSION,
+};
+use mapperopt::net::{
+    ChaosConfig, ChaosProxy, EvalServer, RemoteEvalClient, RetryPolicy,
 };
 use mapperopt::optimizer::{agent::random_index_gene, AgentGenome, AppInfo, LayoutGene};
 use mapperopt::sim::{
@@ -672,6 +675,10 @@ fn rand_snapshot(rng: &mut Rng) -> StatsSnapshot {
         delta_evals: rng.below(100_000) as u64,
         spliced_point_tasks: rng.next_u64() >> 1,
         dirty_fallbacks: rng.below(100_000) as u64,
+        shed_requests: rng.below(100_000) as u64,
+        reaped_connections: rng.below(1000) as u64,
+        retries: rng.below(100_000) as u64,
+        reconnects: rng.below(1000) as u64,
         specs: (0..rng.below(4))
             .map(|_| SpecSnapshot {
                 name: rand_string(rng),
@@ -702,8 +709,18 @@ fn rand_response(rng: &mut Rng) -> Response {
         3 => Response::Stats(rand_snapshot(rng)),
         4 => Response::Summary(rand_string(rng)),
         _ => Response::Error {
-            kind: DecodeError::Truncated.wire_kind(),
+            kind: if rng.chance(0.5) {
+                ErrorKind::Overloaded
+            } else {
+                DecodeError::Truncated.wire_kind()
+            },
             msg: rand_string(rng),
+            // zero (hint elided on the wire) and nonzero both roundtrip
+            retry_after_ms: if rng.chance(0.5) {
+                0
+            } else {
+                rng.below(10_000) as u64
+            },
         },
     }
 }
@@ -779,7 +796,94 @@ fn property_wire_malformed_frames_classify_never_panic() {
         }
         let _ = Request::decode(&soup);
         let _ = Response::decode(&soup);
+
+        // hostile length prefixes — zero, just past the cap, or an
+        // absurd multi-gigabyte claim — classify as framing errors
+        // *before* any allocation, never panic or OOM
+        let claim: u32 = match rng.below(3) {
+            0 => 0,
+            1 => MAX_FRAME_LEN as u32 + 1 + rng.below(1 << 20) as u32,
+            _ => u32::MAX - rng.below(1 << 16) as u32,
+        };
+        let mut hostile = claim.to_le_bytes().to_vec();
+        hostile.extend((0..rng.below(16)).map(|_| rng.below(256) as u8));
+        let err = read_frame(&mut std::io::Cursor::new(hostile))
+            .expect_err("a hostile length prefix must classify");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
     });
+}
+
+/// The fault-tolerance triad, swept: for arbitrary seeded chaos
+/// schedules (delays, corruption, truncation, resets — every mix and
+/// density), a remote evaluation through the chaos proxy either
+/// succeeds bit-identically to the in-process answer or is a classified
+/// error — and with gaps wide enough for the progress guarantee, it
+/// always succeeds.  Scale with `MAPPEROPT_PROPTEST_CASES`.
+#[test]
+fn property_chaos_schedules_preserve_bit_identical_feedback() {
+    use mapperopt::coordinator::EvalService;
+    use mapperopt::mapping::expert_dsl;
+    use mapperopt::net::proto::Scenario as WireScenario;
+    use std::time::Duration;
+
+    let service = Arc::new(EvalService::new(2, 16));
+    let server = EvalServer::bind("127.0.0.1:0", Arc::clone(&service))
+        .expect("bind loopback");
+    let backend = server.addr();
+    let app = apps::by_name("circuit").unwrap();
+    let dsl = expert_dsl("circuit").unwrap();
+    let p100 = service.spec_id("p100_cluster").unwrap();
+    let want = service.evaluate(p100, &app, dsl, ExecMode::Serialized);
+    // the largest message either direction carries; sizing fault gaps
+    // off it keeps the progress guarantee honest (most connections get
+    // a clean window wide enough for a full exchange, so a bounded
+    // retry budget always converges)
+    let resp_len = Response::Feedback(want.clone()).encode().len();
+
+    check(0xC4A0, env_cases(8), |rng: &mut Rng| {
+        // gaps start at 512 so a request frame always clears the wire
+        // before the first fault can land, and most gaps clear a whole
+        // response too — a kill-fault mix cannot starve every retry
+        let cfg = ChaosConfig {
+            seed: rng.next_u64(),
+            gap: (512, 4 * resp_len.max(2048)),
+            delay_ms: (0, rng.below(4) as u64),
+            delay_weight: rng.below(3) as u32,
+            corrupt_weight: rng.below(3) as u32,
+            truncate_weight: rng.below(3) as u32,
+            reset_weight: rng.below(3) as u32,
+            blackhole_weight: 0,
+            max_faults_per_conn: 1 + rng.below(3) as u32,
+        };
+        let proxy = ChaosProxy::bind("127.0.0.1:0", backend, cfg.clone())
+            .expect("bind proxy");
+        let policy = RetryPolicy {
+            deadline: Duration::from_secs(60),
+            budget: 32,
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(50),
+            seed: rng.next_u64(),
+        };
+        let client = RemoteEvalClient::connect_with(proxy.addr(), policy)
+            .expect("connect through proxy");
+        for _ in 0..2 {
+            let fb = client.evaluate(
+                SpecRef::Name("p100_cluster".into()),
+                WireScenario::named("circuit"),
+                dsl,
+                ExecMode::Serialized,
+                mapperopt::coordinator::PRIORITY_NORMAL,
+            );
+            assert_eq!(
+                fb, want,
+                "feedback diverged under fault schedule {cfg:?}"
+            );
+        }
+        drop(client);
+        proxy.shutdown();
+    });
+
+    server.shutdown();
 }
 
 // ---------------------------------------------------------------------------
