@@ -9,11 +9,19 @@
 #                    sizes (CI keeps bench code from rotting); the
 #                    campaign sections print their JSON lines alongside
 #                    the human ones
-#   make bench-json  run the warm-vs-cold campaign benchmark and the
-#                    cold-vs-spliced delta campaign, writing the numbers
-#                    as JSON to BENCH_sched_scale.json and
-#                    BENCH_delta.json (the machine-readable trajectory
+#   make bench-json  run the warm-vs-cold campaign benchmark, the
+#                    cold-vs-spliced delta campaign, and the serving
+#                    loadtest at full scale, writing the numbers as JSON
+#                    to BENCH_sched_scale.json, BENCH_delta.json, and
+#                    BENCH_serve.json (the machine-readable trajectory
 #                    seeds)
+#   make loadtest-smoke
+#                    boot the multiplexed eval server in-process and
+#                    sustain a few hundred concurrent synthetic clients
+#                    for a short window — sized to fit a default 1024-fd
+#                    ulimit, health-gated on zero unclassified errors
+#                    (the full 1000+-client run lives in bench-json,
+#                    which raises the fd limit)
 #   make serve-smoke boot the TCP eval server on loopback, run two
 #                    concurrent remote campaigns against it, and assert
 #                    remote == in-process bit-identically (the example
@@ -31,7 +39,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 PROPTEST_CASES ?= 400
 
-.PHONY: build test verify test-props bench-smoke bench-json serve-smoke chaos-smoke fmt fmt-check clippy ci artifacts figures clean
+.PHONY: build test verify test-props bench-smoke bench-json serve-smoke chaos-smoke loadtest-smoke fmt fmt-check clippy ci artifacts figures clean
 
 build:
 	$(CARGO) build --release
@@ -53,12 +61,19 @@ bench-json:
 	$(CARGO) build --benches
 	$(CARGO) bench --bench sched_scale -- json | tee BENCH_sched_scale.json
 	$(CARGO) bench --bench delta_campaign -- json | tee BENCH_delta.json
+	ulimit -n 8192 2>/dev/null; MAPPEROPT_SERVE_DEADLINE_S=300 \
+		$(CARGO) run --release -- loadtest --clients 1000 --duration 8 --json \
+		| tee BENCH_serve.json
 
 serve-smoke:
 	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release --example e2e_remote
 
 chaos-smoke:
 	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release -- chaos-smoke
+
+loadtest-smoke:
+	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release -- loadtest \
+		--clients 200 --duration 3
 
 fmt:
 	$(CARGO) fmt --all

@@ -579,6 +579,12 @@ pub struct ServiceStats {
     pub shed_requests: AtomicUsize,
     /// Zombie connections reaped by the server's idle/read deadline.
     pub reaped_connections: AtomicUsize,
+    /// Dials refused at the server's connection capacity
+    /// (`ServerConfig::max_connections`): the acceptor answered
+    /// `Overloaded` and closed the stream without ever registering a
+    /// connection.  Unlike `shed_requests` these never reach the
+    /// request path, so they do not count as submitted/completed.
+    pub refused_connections: AtomicUsize,
     /// LRU evictions per cache (feedback / plan / policy / decision).
     pub evicted_feedback: AtomicUsize,
     pub evicted_plans: AtomicUsize,
@@ -719,6 +725,9 @@ pub struct StatsSnapshot {
     pub shed_requests: u64,
     /// Zombie connections reaped by the server's idle/read deadline.
     pub reaped_connections: u64,
+    /// Dials refused at the server's connection capacity (answered
+    /// `Overloaded` and closed before registering).
+    pub refused_connections: u64,
     /// Client-side: requests re-sent by the retry machinery.  The
     /// server encodes 0; [`RemoteEvalClient`] overlays its own counter
     /// into fetched snapshots.
@@ -1401,6 +1410,7 @@ impl EvalService {
             dirty_fallbacks: s.dirty_fallbacks.load(Ordering::Relaxed) as u64,
             shed_requests: s.shed_requests.load(Ordering::Relaxed) as u64,
             reaped_connections: s.reaped_connections.load(Ordering::Relaxed) as u64,
+            refused_connections: s.refused_connections.load(Ordering::Relaxed) as u64,
             // client-side counters: the service never retries or
             // reconnects, so these are 0 here and overlaid by
             // RemoteEvalClient::stats on fetched snapshots
@@ -1551,6 +1561,14 @@ impl EvalService {
         self.inner.stats.reaped_connections.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Bump the refused-dial counter (the server's acceptor at its
+    /// connection capacity; lives on [`ServiceStats`] so capacity
+    /// pressure is visible in [`StatsSnapshot`]s instead of silently
+    /// bouncing clients).
+    pub fn note_refused_connection(&self) {
+        self.inner.stats.refused_connections.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Account a request refused *before* reaching the queue (the
     /// server's per-connection in-flight cap) as a shed submission that
     /// completed instantly, so the
@@ -1615,7 +1633,8 @@ impl EvalService {
              caches: plan {} built / {} hits, policy {} compiled / {} hits, \
              decision {} hits\n\
              delta: {} spliced evals, {} point tasks replayed, {} fallbacks\n\
-             load: {} shed requests, {} reaped connections\n\
+             load: {} shed requests, {} reaped connections, \
+             {} refused connections\n\
              evictions: feedback {}, plan {}, policy {}, decision {}\n",
             s.coord.evals.load(Ordering::Relaxed),
             s.coord.cache_hits.load(Ordering::Relaxed),
@@ -1633,6 +1652,7 @@ impl EvalService {
             s.dirty_fallbacks.load(Ordering::Relaxed),
             s.shed_requests.load(Ordering::Relaxed),
             s.reaped_connections.load(Ordering::Relaxed),
+            s.refused_connections.load(Ordering::Relaxed),
             s.evicted_feedback.load(Ordering::Relaxed),
             s.evicted_plans.load(Ordering::Relaxed),
             s.evicted_policies.load(Ordering::Relaxed),

@@ -14,6 +14,10 @@
 //!   chaos-smoke               — run a remote campaign through the seeded
 //!                               fault-injecting chaos proxy and assert it
 //!                               is bit-identical to a clean local run
+//!   loadtest                  — drive thousands of synthetic campaign
+//!                               clients at an eval server (in-process by
+//!                               default, --addr for a remote one) and
+//!                               report throughput + p50/p99/p999 latency
 //!
 //! Common flags: --iters N --runs N --seed S --algo trace|opro
 //!               --feedback system|explain|full --workers N
@@ -39,7 +43,10 @@ use mapperopt::feedback::FeedbackConfig;
 use mapperopt::harness::{self, ExpParams};
 use mapperopt::machine::MachineSpec;
 use mapperopt::mapping::expert_dsl;
-use mapperopt::net::{ChaosConfig, ChaosProxy, EvalServer, RetryPolicy};
+use mapperopt::net::{
+    loadtest, ChaosConfig, ChaosProxy, EvalServer, LoadtestConfig, RetryPolicy,
+    ServerConfig,
+};
 use mapperopt::sim::ExecMode;
 use mapperopt::util::cli::Args;
 
@@ -60,6 +67,9 @@ fn main() -> ExitCode {
     }
     if cmd == "chaos-smoke" {
         return cmd_chaos_smoke(&args, workers);
+    }
+    if cmd == "loadtest" {
+        return cmd_loadtest(&args, workers);
     }
 
     let coord = match args.get("remote") {
@@ -139,18 +149,127 @@ fn main() -> ExitCode {
 
 fn usage() {
     println!(
-        "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite|serve|chaos-smoke>\n\
+        "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite|serve|chaos-smoke|loadtest>\n\
          flags: --app NAME --mapper FILE --algo trace|opro \
          --feedback system|explain|full|profile --iters N --runs N --seed S \
-         --workers N --remote HOST:PORT --addr HOST:PORT (serve)\n\
+         --workers N --remote HOST:PORT --addr HOST:PORT (serve/loadtest)\n\
+         loadtest: --clients N (1000) --duration SECS (10) --rate R (open loop; \
+         default closed) --pipeline K (1) --batch K (1) --distinct N (8) \
+         --generators N (auto) --json\n\
          env:   MAPPEROPT_RETRY_BUDGET    remote client transmission attempts per request (default 4)\n\
          \x20      MAPPEROPT_QUEUE_HIGH_WATER eval queue depth that starts shedding lowest-priority\n\
          \x20                                 work with Overloaded responses (default: queue capacity)\n\
-         \x20      MAPPEROPT_CONN_DEADLINE_S  server-side idle-connection reap deadline in seconds\n\
-         \x20                                 (default 300, 0 disables)\n\
-         \x20      MAPPEROPT_SERVE_DEADLINE_S chaos-smoke/serve-smoke self-kill deadline in seconds\n\
-         \x20                                 (default 180)"
+         \x20      MAPPEROPT_IO_THREADS       server I/O threads multiplexing all connections\n\
+         \x20                                 (default min(4, cores))\n\
+         \x20      MAPPEROPT_MAX_CONNECTIONS  server concurrent-connection cap; dials beyond it\n\
+         \x20                                 are counted and refused with Overloaded (default 4096)\n\
+         \x20      MAPPEROPT_CONN_DEADLINE_S  server-side idle-connection reap deadline in seconds,\n\
+         \x20                                 answered as a retryable Deadline error (default 300,\n\
+         \x20                                 0 disables)\n\
+         \x20      MAPPEROPT_WIRE_BATCH       client-side EvalBatch frame coalescing; 0 disables\n\
+         \x20                                 (default on, bit-identical either way)\n\
+         \x20      MAPPEROPT_SERVE_DEADLINE_S chaos-smoke/serve-smoke/loadtest self-kill deadline\n\
+         \x20                                 in seconds (default 180)"
     );
+}
+
+/// `mapperopt loadtest [--clients N] [--duration SECS] [--rate R]
+/// [--pipeline K] [--batch K] [--distinct N] [--addr HOST:PORT]
+/// [--json]`: the multiplexed-serving load harness (see
+/// `net::loadtest`).  Without `--addr` it boots an in-process server
+/// sized for the client count; `--json` prints one machine-readable
+/// object (the `BENCH_serve.json` line) instead of the human report.
+fn cmd_loadtest(args: &Args, workers: usize) -> ExitCode {
+    let deadline_s = std::env::var("MAPPEROPT_SERVE_DEADLINE_S")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(180);
+    std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_secs(deadline_s));
+        eprintln!("loadtest: exceeded the {deadline_s}s deadline; wedged");
+        std::process::exit(124);
+    });
+
+    let cfg = LoadtestConfig {
+        clients: args.usize("clients", 1000),
+        duration: Duration::from_secs(args.u64("duration", 10)),
+        rate: args.get("rate").and_then(|v| v.parse::<f64>().ok()),
+        pipeline: args.usize("pipeline", 1),
+        batch: args.usize("batch", 1),
+        distinct: args.usize("distinct", 8),
+        generators: args.usize("generators", 0),
+    };
+
+    // without --addr, boot an in-process server sized so the requested
+    // client count fits under the connection cap (the refusal path is
+    // exercised deliberately by pointing --clients above
+    // MAPPEROPT_MAX_CONNECTIONS at an external --addr server)
+    let (server, addr) = match args.get("addr") {
+        Some(a) => match a.parse() {
+            Ok(sa) => (None, sa),
+            Err(e) => {
+                eprintln!("loadtest: bad --addr {a}: {e}");
+                return ExitCode::from(2);
+            }
+        },
+        None => {
+            let service = service_for(workers);
+            let sc = ServerConfig {
+                max_connections: cfg.clients + 64,
+                ..ServerConfig::default()
+            };
+            match EvalServer::bind_with("127.0.0.1:0", service, sc) {
+                Ok(s) => {
+                    let a = s.addr();
+                    (Some(s), a)
+                }
+                Err(e) => {
+                    eprintln!("loadtest: cannot bind eval server: {e}");
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+
+    if !args.flag("json") {
+        println!(
+            "loadtest: {} clients, {:?} window, {} loop{}{}",
+            cfg.clients,
+            cfg.duration,
+            if cfg.rate.is_some() { "open" } else { "closed" },
+            cfg.rate.map(|r| format!(" @ {r} req/s")).unwrap_or_default(),
+            if cfg.batch > 1 {
+                format!(", batch {}", cfg.batch)
+            } else {
+                String::new()
+            },
+        );
+    }
+    let report = loadtest::run(addr, &cfg);
+    if let Some(s) = server {
+        s.shutdown();
+    }
+    if args.flag("json") {
+        println!("{}", report.json());
+    } else {
+        print!("{}", report.text());
+    }
+
+    // gate for CI: the run must actually have served load — every
+    // client answered (sheds are fine; they are the protection working)
+    // and nothing classified as a hard error
+    let healthy = report.completed > 0
+        && report.errors == 0
+        && report.connected >= cfg.clients - cfg.clients / 10;
+    if healthy {
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "loadtest: FAILED — {}/{} clients connected, {} completed, {} errors",
+            report.connected, cfg.clients, report.completed, report.errors
+        );
+        ExitCode::FAILURE
+    }
 }
 
 /// The process-wide service: explicit worker count (queue sized to

@@ -9,6 +9,25 @@
 //! thread owns the write half and the request queue, a per-connection
 //! reader thread matches responses FIFO, and user calls only enqueue.
 //!
+//! # Wire batching
+//!
+//! Evaluations that are adjacent in the send queue coalesce into one
+//! [`Request::EvalBatch`] frame (up to
+//! [`proto::MAX_BATCH_ITEMS`](super::proto::MAX_BATCH_ITEMS) items), so
+//! a proposer submitting K candidates pays one syscall round-trip
+//! instead of K — [`RemoteEvalClient::submit_batch`] guarantees the
+//! coalescing, and pipelined [`RemoteEvalClient::submit`] calls get it
+//! opportunistically.  The server answers per item; the reader unpacks
+//! the [`Response::FeedbackBatch`] back onto the individual tickets,
+//! re-scheduling *individually* shed items through the normal retry
+//! path, so batching is invisible to callers (and bit-identical to
+//! frame-per-eval submission).  A pre-batch server classifies the
+//! unknown tag as a retryable `Decode` error; the client then disables
+//! batching for the connection's lifetime and replays the items as
+//! single frames — new clients interoperate with old servers
+//! transparently.  `MAPPEROPT_WIRE_BATCH=0` (or
+//! [`RemoteEvalClient::set_wire_batching`]) turns coalescing off.
+//!
 //! # Fault tolerance
 //!
 //! The client survives a flaky wire instead of reporting it.  Every
@@ -47,7 +66,8 @@ use crate::sim::ExecMode;
 use crate::util::rng::Rng;
 
 use super::proto::{
-    self, Request, Response, Scenario, SpecRef, WireEvalRequest,
+    self, BatchItem, ErrorKind, Request, Response, Scenario, SpecRef,
+    WireEvalRequest,
 };
 
 /// Retry discipline for one client: how long a request may take end to
@@ -137,14 +157,41 @@ struct Pending {
     last_err: String,
     /// The post-reconnect `Ping` gate; its slot has no waiter.
     handshake: bool,
+    /// Whether this request may coalesce into an `EvalBatch` frame
+    /// (cleared when a specific batch attempt could not be framed, so
+    /// the replay goes out as a single frame).
+    batch_ok: bool,
+}
+
+/// One *frame* on the wire awaiting its answer: a single request, or a
+/// coalesced `EvalBatch` whose answer must be a `FeedbackBatch` of
+/// equal length.  The connection's in-flight deque holds these — FIFO
+/// matching is per frame, fan-out back to slots is per part.
+struct Written {
+    parts: Vec<Pending>,
+    /// True iff the frame was a `Request::EvalBatch`.
+    batch: bool,
 }
 
 /// Reader-to-manager events (plus user submissions).
 enum Event {
     Send(Pending),
+    /// An atomic multi-submission ([`RemoteEvalClient::submit_batch`]):
+    /// enqueued back-to-back so the pump coalesces them into one frame.
+    SendMany(Vec<Pending>),
     /// A retryable classified response; `pending` was popped from the
     /// in-flight deque and must be rescheduled.
     Retry { pending: Pending, hint_ms: u64, reason: String },
+    /// A whole batch frame failed retryably (e.g. a pre-batch server
+    /// classified the unknown tag as `Decode`): reschedule every part;
+    /// with `disable_batching` the replay — and everything after it —
+    /// goes out as single frames.
+    BatchFailed {
+        parts: Vec<Pending>,
+        hint_ms: u64,
+        reason: String,
+        disable_batching: bool,
+    },
     /// The handshake `Ping` resolved (`ok` = got `Pong`).
     HandshakeDone { epoch: u64, ok: bool, msg: String },
     /// Connection `epoch` is unusable; the manager drains and redials.
@@ -159,6 +206,12 @@ struct Shared {
     dead: AtomicBool,
     retries: AtomicU64,
     reconnects: AtomicU64,
+    /// `EvalBatch` frames written (telemetry; the differential tests
+    /// assert batching actually happened).
+    batched_frames: AtomicU64,
+    /// Live batching switch: env default, user override, or the
+    /// old-server fallback clearing it permanently.
+    batching: AtomicBool,
 }
 
 /// Completion handle of one remote submission — the wire twin of
@@ -229,10 +282,15 @@ impl RemoteEvalClient {
         // the resolved peer is what reconnects redial — resolution
         // happens once, so retry behavior does not depend on DNS luck
         let peer = stream.peer_addr()?;
+        let batching = std::env::var("MAPPEROPT_WIRE_BATCH")
+            .map(|v| v != "0")
+            .unwrap_or(true);
         let shared = Arc::new(Shared {
             dead: AtomicBool::new(false),
             retries: AtomicU64::new(0),
             reconnects: AtomicU64::new(0),
+            batched_frames: AtomicU64::new(0),
+            batching: AtomicBool::new(batching),
         });
         let (tx, rx) = mpsc::channel::<Event>();
         let mut mgr = Manager {
@@ -271,6 +329,18 @@ impl RemoteEvalClient {
         self.shared.reconnects.load(Ordering::SeqCst)
     }
 
+    /// `EvalBatch` frames this client has put on the wire.
+    pub fn batched_frames(&self) -> u64 {
+        self.shared.batched_frames.load(Ordering::SeqCst)
+    }
+
+    /// Turn wire batching on or off (default: on, unless
+    /// `MAPPEROPT_WIRE_BATCH=0`).  Purely a transport choice — results
+    /// are bit-identical either way.
+    pub fn set_wire_batching(&self, on: bool) {
+        self.shared.batching.store(on, Ordering::SeqCst);
+    }
+
     /// Enqueue one request; the returned slot resolves when a response
     /// arrives or the retry budget / deadline is exhausted.
     fn send(&self, req: Request) -> Arc<ReplySlot> {
@@ -288,6 +358,7 @@ impl RemoteEvalClient {
             not_before: now,
             last_err: String::new(),
             handshake: false,
+            batch_ok: true,
         };
         let sent = self.tx.lock().unwrap().send(Event::Send(pending));
         if sent.is_err() {
@@ -372,6 +443,44 @@ impl RemoteEvalClient {
         RemoteTicket { slot }
     }
 
+    /// Submit many evaluations at once, one ticket per item (in input
+    /// order).  The items are enqueued atomically, so with batching on
+    /// they travel as `EvalBatch` frames — one syscall round-trip per
+    /// [`proto::MAX_BATCH_ITEMS`](super::proto::MAX_BATCH_ITEMS) items —
+    /// while each item still sheds, retries, and resolves individually.
+    pub fn submit_batch(&self, reqs: Vec<WireEvalRequest>) -> Vec<RemoteTicket> {
+        let slots: Vec<Arc<ReplySlot>> =
+            reqs.iter().map(|_| Arc::new(ReplySlot::default())).collect();
+        if self.shared.dead.load(Ordering::SeqCst) {
+            for s in &slots {
+                s.fill(Err("connection to eval server is closed".into()));
+            }
+        } else if !reqs.is_empty() {
+            let now = Instant::now();
+            let parts: Vec<Pending> = reqs
+                .into_iter()
+                .zip(&slots)
+                .map(|(q, slot)| Pending {
+                    req: Request::Eval(q),
+                    slot: Arc::clone(slot),
+                    attempts: 0,
+                    deadline: now + self.policy.deadline,
+                    not_before: now,
+                    last_err: String::new(),
+                    handshake: false,
+                    batch_ok: true,
+                })
+                .collect();
+            let sent = self.tx.lock().unwrap().send(Event::SendMany(parts));
+            if sent.is_err() {
+                for s in &slots {
+                    s.fill(Err("connection to eval server is closed".into()));
+                }
+            }
+        }
+        slots.into_iter().map(|slot| RemoteTicket { slot }).collect()
+    }
+
     /// Synchronous evaluation through the server's shared caches (the
     /// remote mirror of `EvalService::evaluate`).
     pub fn evaluate(
@@ -424,7 +533,7 @@ impl Drop for RemoteEvalClient {
 /// unanswered requests, and the reader matching responses to it.
 struct Conn {
     stream: TcpStream,
-    inflight: Arc<Mutex<VecDeque<Pending>>>,
+    inflight: Arc<Mutex<VecDeque<Written>>>,
     reader: Option<thread::JoinHandle<()>>,
     epoch: u64,
 }
@@ -456,14 +565,25 @@ struct Manager {
 
 impl Manager {
     fn run(mut self) {
-        loop {
+        'main: loop {
             self.expire();
             self.redial();
             self.pump();
             let timeout = self.next_wakeup();
             match self.rx.recv_timeout(timeout) {
                 Ok(Event::Shutdown) => break,
-                Ok(ev) => self.handle(ev),
+                Ok(ev) => {
+                    self.handle(ev);
+                    // drain whatever else is queued before pumping, so
+                    // a burst of submissions coalesces into batch
+                    // frames instead of going out one frame per event
+                    while let Ok(ev) = self.rx.try_recv() {
+                        if matches!(ev, Event::Shutdown) {
+                            break 'main;
+                        }
+                        self.handle(ev);
+                    }
+                }
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => break,
             }
@@ -474,6 +594,23 @@ impl Manager {
     fn handle(&mut self, ev: Event) {
         match ev {
             Event::Send(p) => self.queue.push_back(p),
+            Event::SendMany(ps) => self.queue.extend(ps),
+            Event::BatchFailed { parts, hint_ms, reason, disable_batching } => {
+                if disable_batching {
+                    // a server that cannot decode the batch tag never
+                    // will: fall back to single frames for good
+                    self.shared.batching.store(false, Ordering::SeqCst);
+                }
+                let now = Instant::now();
+                for mut p in parts {
+                    let backoff = self
+                        .backoff(p.attempts)
+                        .max(Duration::from_millis(hint_ms));
+                    p.not_before = now + backoff;
+                    p.last_err.clone_from(&reason);
+                    self.queue.push_back(p);
+                }
+            }
             Event::Retry { mut pending, hint_ms, reason } => {
                 // server-classified retryable failure: back off at
                 // least as long as the server's retry-after hint
@@ -541,7 +678,7 @@ impl Manager {
                 .lock()
                 .unwrap()
                 .front()
-                .is_some_and(|p| now >= p.deadline)
+                .is_some_and(|w| w.parts.iter().any(|p| now >= p.deadline))
         });
         if stalled {
             self.kill_conn("request deadline exceeded awaiting a response");
@@ -557,17 +694,19 @@ impl Manager {
             let _ = h.join();
         }
         self.handshaking = false;
-        let drained: Vec<Pending> = {
+        let drained: Vec<Written> = {
             let mut g = conn.inflight.lock().unwrap();
             g.drain(..).collect()
         };
-        for mut p in drained.into_iter().rev() {
-            if p.handshake {
-                continue; // the gate dies with its connection
+        for w in drained.into_iter().rev() {
+            for mut p in w.parts.into_iter().rev() {
+                if p.handshake {
+                    continue; // the gate dies with its connection
+                }
+                p.last_err = msg.to_string();
+                p.not_before = Instant::now(); // replay is gated by redial
+                self.queue.push_front(p);
             }
-            p.last_err = msg.to_string();
-            p.not_before = Instant::now(); // replay is gated by redial
-            self.queue.push_front(p);
         }
         self.dial_fails = self.dial_fails.saturating_add(1);
         let wait = self.backoff(self.dial_fails);
@@ -653,9 +792,13 @@ impl Manager {
                 not_before: now,
                 last_err: String::new(),
                 handshake: true,
+                batch_ok: false,
             };
             let payload = gate.req.encode();
-            conn.inflight.lock().unwrap().push_back(gate);
+            conn.inflight
+                .lock()
+                .unwrap()
+                .push_back(Written { parts: vec![gate], batch: false });
             self.handshaking = true;
             if proto::write_frame(&mut conn.stream, &payload).is_err() {
                 self.conn = Some(conn);
@@ -668,12 +811,14 @@ impl Manager {
 
     /// Write every eligible queued request to the live connection
     /// (skipping backoff-gated entries), charging attempts and failing
-    /// budget-exhausted requests.
+    /// budget-exhausted requests.  Adjacent eligible evaluations
+    /// coalesce into one `EvalBatch` frame when batching is on.
     fn pump(&mut self) {
         if self.handshaking {
             return;
         }
         let now = Instant::now();
+        let batching = self.shared.batching.load(Ordering::SeqCst);
         let mut i = 0;
         while i < self.queue.len() {
             if self.conn.is_none() {
@@ -683,7 +828,7 @@ impl Manager {
                 i += 1;
                 continue;
             }
-            let mut p = self.queue.remove(i).unwrap();
+            let p = self.queue.remove(i).unwrap();
             if p.attempts >= self.policy.budget {
                 fail(
                     &p,
@@ -694,33 +839,101 @@ impl Manager {
                 );
                 continue;
             }
-            p.attempts += 1;
-            if p.attempts > 1 {
-                self.shared.retries.fetch_add(1, Ordering::SeqCst);
+            // coalesce the run of adjacent, eligible evals behind this
+            // one; a conservative size estimate keeps the combined
+            // frame far below MAX_FRAME_LEN
+            let mut parts = vec![p];
+            if batching && batchable(&parts[0]) {
+                let mut est = frame_estimate(&parts[0].req);
+                while parts.len() < proto::MAX_BATCH_ITEMS {
+                    let eligible = self.queue.get(i).is_some_and(|q| {
+                        batchable(q)
+                            && q.not_before <= now
+                            && est + frame_estimate(&q.req) <= (1 << 20)
+                    });
+                    if !eligible {
+                        break;
+                    }
+                    let q = self.queue.remove(i).unwrap();
+                    if q.attempts >= self.policy.budget {
+                        fail(
+                            &q,
+                            &format!(
+                                "retry budget of {} attempts exhausted: {}",
+                                self.policy.budget, q.last_err
+                            ),
+                        );
+                        continue;
+                    }
+                    est += frame_estimate(&q.req);
+                    parts.push(q);
+                }
             }
-            let payload = p.req.encode();
+            for p in &mut parts {
+                p.attempts += 1;
+                if p.attempts > 1 {
+                    self.shared.retries.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            let batch = parts.len() > 1;
+            let payload = if batch {
+                let items: Vec<WireEvalRequest> = parts
+                    .iter()
+                    .map(|p| match &p.req {
+                        Request::Eval(q) => q.clone(),
+                        _ => unreachable!("only evals coalesce"),
+                    })
+                    .collect();
+                Request::EvalBatch(items).encode()
+            } else {
+                parts[0].req.encode()
+            };
             let conn = self.conn.as_mut().unwrap();
-            let slot = Arc::clone(&p.slot);
-            // queue the slot before the frame: the server cannot answer
-            // an unwritten request, so FIFO order is preserved
-            conn.inflight.lock().unwrap().push_back(p);
+            let slots: Vec<Arc<ReplySlot>> =
+                parts.iter().map(|p| Arc::clone(&p.slot)).collect();
+            // queue the slots before the frame: the server cannot
+            // answer an unwritten request, so FIFO order is preserved
+            conn.inflight.lock().unwrap().push_back(Written { parts, batch });
             match proto::write_frame(&mut conn.stream, &payload) {
-                Ok(()) => {}
+                Ok(()) => {
+                    if batch {
+                        self.shared.batched_frames.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
                 Err(e) if e.kind() == io::ErrorKind::InvalidInput => {
                     // rejected by the frame size guard before touching
-                    // the socket: terminal for the request, harmless
-                    // for the connection — and never worth retrying
-                    let mut g = conn.inflight.lock().unwrap();
-                    if g.back().is_some_and(|q| Arc::ptr_eq(&q.slot, &slot)) {
-                        g.pop_back();
+                    // the socket: harmless for the connection.  A
+                    // single oversized request is terminal (retrying
+                    // cannot shrink it); an oversized *batch* replays
+                    // its parts as single frames instead
+                    let popped = {
+                        let mut g = conn.inflight.lock().unwrap();
+                        let ours = g.back().is_some_and(|w| {
+                            w.parts
+                                .first()
+                                .is_some_and(|q| Arc::ptr_eq(&q.slot, &slots[0]))
+                        });
+                        ours.then(|| g.pop_back()).flatten()
+                    };
+                    match popped {
+                        Some(w) if w.batch => {
+                            for mut q in w.parts.into_iter().rev() {
+                                q.batch_ok = false;
+                                q.last_err = format!("send failed: {e}");
+                                self.queue.insert(i, q);
+                            }
+                        }
+                        _ => {
+                            for s in &slots {
+                                s.fill(Err(format!("send failed: {e}")));
+                            }
+                        }
                     }
-                    drop(g);
-                    slot.fill(Err(format!("send failed: {e}")));
                 }
                 Err(e) => {
                     // a partial frame may be on the wire: the
                     // connection is unrecoverable; the drain requeues
-                    // this request (attempt already charged)
+                    // these requests (attempts already charged)
                     self.kill_conn(&format!("send failed: {e}"));
                     return;
                 }
@@ -748,7 +961,9 @@ impl Manager {
         }
         if let Some(c) = &self.conn {
             if let Some(front) = c.inflight.lock().unwrap().front() {
-                consider(front.deadline);
+                for p in &front.parts {
+                    consider(p.deadline);
+                }
             }
         }
         match next {
@@ -765,12 +980,14 @@ impl Manager {
             if let Some(h) = conn.reader.take() {
                 let _ = h.join();
             }
-            let drained: Vec<Pending> = {
+            let drained: Vec<Written> = {
                 let mut g = conn.inflight.lock().unwrap();
                 g.drain(..).collect()
             };
-            for p in drained {
-                p.slot.fill(Err("connection to eval server is closed".into()));
+            for w in drained {
+                for p in w.parts {
+                    p.slot.fill(Err("connection to eval server is closed".into()));
+                }
             }
         }
         for p in self.queue.drain(..) {
@@ -783,6 +1000,12 @@ impl Manager {
                 Event::Send(p) | Event::Retry { pending: p, .. } => {
                     p.slot.fill(Err("connection to eval server is closed".into()));
                 }
+                Event::SendMany(ps) | Event::BatchFailed { parts: ps, .. } => {
+                    for p in ps {
+                        p.slot
+                            .fill(Err("connection to eval server is closed".into()));
+                    }
+                }
                 _ => {}
             }
         }
@@ -794,12 +1017,58 @@ fn fail(p: &Pending, msg: &str) {
     p.slot.fill(Err(msg.to_string()));
 }
 
+/// Whether a pending request may ride in an `EvalBatch` frame.
+fn batchable(p: &Pending) -> bool {
+    p.batch_ok && !p.handshake && matches!(p.req, Request::Eval(_))
+}
+
+/// Conservative over-estimate of one eval's encoded size, for keeping a
+/// coalesced frame far below `MAX_FRAME_LEN` without encoding twice.
+fn frame_estimate(req: &Request) -> usize {
+    match req {
+        Request::Eval(q) => {
+            let spec = match &q.spec {
+                SpecRef::Name(n) => n.len(),
+                SpecRef::Id(_) => 4,
+            };
+            let scenario = q.scenario.app.len()
+                + q.scenario.params.iter().map(|(k, _)| k.len() + 16).sum::<usize>();
+            q.dsl.len() + spec + scenario + 64
+        }
+        _ => 64,
+    }
+}
+
+/// Fan a batch frame's answer back out to its parts: feedback fills,
+/// retryable per-item errors (shedding, mid-batch cap hits) reschedule
+/// through the manager, terminal per-item errors classify in place.
+fn settle_batch(parts: Vec<Pending>, items: Vec<BatchItem>, tx: &mpsc::Sender<Event>) {
+    for (part, item) in parts.into_iter().zip(items) {
+        match item {
+            BatchItem::Feedback(fb) => {
+                part.slot.fill(Ok(Response::Feedback(fb)));
+            }
+            BatchItem::Error { kind, msg, retry_after_ms } if kind.is_retryable() => {
+                let _ = tx.send(Event::Retry {
+                    pending: part,
+                    hint_ms: retry_after_ms,
+                    reason: format!("{kind} error: {msg}"),
+                });
+            }
+            BatchItem::Error { kind, msg, retry_after_ms } => {
+                part.slot.fill(Ok(Response::Error { kind, msg, retry_after_ms }));
+            }
+        }
+    }
+}
+
 /// Per-connection reader: match responses FIFO against the in-flight
-/// deque, hand retryable classified errors back to the manager, and
-/// report connection death with a classified reason.
+/// deque (one entry per *frame*), hand retryable classified errors back
+/// to the manager, and report connection death with a classified
+/// reason.
 fn reader_loop(
     mut stream: TcpStream,
-    inflight: Arc<Mutex<VecDeque<Pending>>>,
+    inflight: Arc<Mutex<VecDeque<Written>>>,
     tx: mpsc::Sender<Event>,
     epoch: u64,
 ) {
@@ -825,12 +1094,14 @@ fn reader_loop(
                 break;
             }
         };
-        let pending = inflight.lock().unwrap().pop_front();
-        let Some(pending) = pending else {
+        let written = inflight.lock().unwrap().pop_front();
+        let Some(written) = written else {
             // a frame with no awaiting request: either the server
             // refused us up front (connection-capacity errors are sent
-            // before any request — surface that message), or the stream
-            // is out of sync beyond repair; tear down either way
+            // before any request — surface that message), it reaped an
+            // idle connection (a retryable `Deadline` — redialed on the
+            // next send), or the stream is out of sync beyond repair;
+            // tear down either way
             close_msg = match resp {
                 Response::Error { kind, msg, .. } => {
                     format!("eval server refused the connection ({kind}): {msg}")
@@ -839,6 +1110,66 @@ fn reader_loop(
             };
             break;
         };
+        if written.batch {
+            match resp {
+                Response::FeedbackBatch(items)
+                    if items.len() == written.parts.len() =>
+                {
+                    settle_batch(written.parts, items, &tx);
+                }
+                Response::Error { kind, msg, retry_after_ms }
+                    if kind.is_retryable() =>
+                {
+                    // the whole frame failed.  A `Decode` / `Version`
+                    // answer means the server predates batch frames
+                    // (the unknown-tag rule): fall back to single
+                    // frames for good.  Anything else (framing,
+                    // whole-connection shedding) just replays.
+                    let disable = matches!(
+                        kind,
+                        ErrorKind::Decode | ErrorKind::Version
+                    );
+                    let _ = tx.send(Event::BatchFailed {
+                        parts: written.parts,
+                        hint_ms: retry_after_ms,
+                        reason: format!("{kind} error: {msg}"),
+                        disable_batching: disable,
+                    });
+                }
+                Response::Error { kind, msg, .. } => {
+                    for part in written.parts {
+                        part.slot.fill(Ok(Response::Error {
+                            kind,
+                            msg: msg.clone(),
+                            retry_after_ms: 0,
+                        }));
+                    }
+                }
+                other => {
+                    // a batch answered with the wrong shape (length
+                    // mismatch or a non-batch variant): FIFO alignment
+                    // is gone — requeue the parts and sever
+                    let _ = tx.send(Event::BatchFailed {
+                        parts: written.parts,
+                        hint_ms: 0,
+                        reason: format!(
+                            "batch answered with {}",
+                            other.kind_name()
+                        ),
+                        disable_batching: false,
+                    });
+                    close_msg =
+                        "eval server misanswered a batch frame".to_string();
+                    break;
+                }
+            }
+            continue;
+        }
+        let pending = written
+            .parts
+            .into_iter()
+            .next()
+            .expect("a non-batch frame carries exactly one request");
         if pending.handshake {
             let (ok, msg) = match &resp {
                 Response::Pong => (true, String::new()),

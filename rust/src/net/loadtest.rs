@@ -1,0 +1,596 @@
+//! `mapperopt loadtest` — a synthetic-client load generator for the
+//! multiplexed [`EvalServer`](super::EvalServer).
+//!
+//! The harness answers one question: how many concurrent campaign
+//! clients can one server process sustain, and at what latency?  It
+//! spins up thousands of *synthetic* clients — each one a real TCP
+//! connection speaking the real wire protocol, but multiplexed in
+//! batches onto a few generator threads with the same
+//! nonblocking-socket technique the server itself uses, so the
+//! generator can drive far more connections than it has threads (the
+//! old thread-per-connection client model could never have generated
+//! this load from one process).
+//!
+//! Two driving modes:
+//!
+//! * **closed loop** (default): every client keeps `pipeline` requests
+//!   in flight and sends the next the moment one completes — measures
+//!   sustainable throughput under full back-to-back load;
+//! * **open loop** (`--rate R`): clients submit at a fixed aggregate
+//!   rate regardless of completions — measures latency at a controlled
+//!   arrival rate, the number an SLO conversation actually needs
+//!   (closed-loop latency self-throttles and flatters the server).
+//!
+//! Clients cycle a small set of `--distinct` mapper variants, so after
+//! one warmup evaluation per variant the server answers from its
+//! feedback cache and the measurement stresses the *serving* path —
+//! framing, admission, multiplexing — not the simulator.  `--batch K`
+//! coalesces each client's submissions into `EvalBatch` frames of K
+//! items, exercising the batch wire path under load.
+//!
+//! The report carries client-observed throughput and p50/p99/p999
+//! latency plus the server's own [`StatsSnapshot`] (shed / refused /
+//! reaped counters), and serializes to one JSON object for
+//! `BENCH_serve.json`.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{StatsSnapshot, PRIORITY_NORMAL};
+use crate::sim::ExecMode;
+use crate::util::stats::percentile_sorted;
+
+use super::client::RemoteEvalClient;
+use super::proto::{
+    self, BatchItem, ErrorKind, FrameStep, Request, Response, Scenario, SpecRef,
+    WireEvalRequest,
+};
+
+/// Knobs of one loadtest run (see module docs; defaults match
+/// `mapperopt loadtest` with no flags).
+#[derive(Debug, Clone)]
+pub struct LoadtestConfig {
+    /// Concurrent synthetic clients (one TCP connection each).
+    pub clients: usize,
+    /// Measurement window (excludes the per-variant warmup).
+    pub duration: Duration,
+    /// `Some(r)`: open loop at `r` aggregate requests/s; `None`: closed
+    /// loop.
+    pub rate: Option<f64>,
+    /// Closed-loop in-flight frames per client.
+    pub pipeline: usize,
+    /// Items per `EvalBatch` frame (`<= 1` sends single `Eval` frames).
+    pub batch: usize,
+    /// Distinct mapper variants cycled (distinct cache entries).
+    pub distinct: usize,
+    /// Generator threads (`0` = `min(8, cores)`).
+    pub generators: usize,
+}
+
+impl Default for LoadtestConfig {
+    fn default() -> LoadtestConfig {
+        LoadtestConfig {
+            clients: 1000,
+            duration: Duration::from_secs(10),
+            rate: None,
+            pipeline: 1,
+            batch: 1,
+            distinct: 8,
+            generators: 0,
+        }
+    }
+}
+
+/// What one run measured, across all generator threads.
+#[derive(Debug, Clone, Default)]
+pub struct LoadtestReport {
+    pub clients: usize,
+    /// Clients whose dial + first response round-trip succeeded.
+    pub connected: usize,
+    /// Dials that never established (connect error / EMFILE).
+    pub dial_failures: u64,
+    /// Evaluations answered with feedback.
+    pub completed: u64,
+    /// Items answered `Overloaded` (queue or in-flight shedding).
+    pub shed: u64,
+    /// Connections refused at the server's connection capacity.
+    pub refused: u64,
+    /// Items answered with any other classified error.
+    pub errors: u64,
+    /// Connections that died mid-run (EOF, reset, reap).
+    pub conn_deaths: u64,
+    /// Measurement window actually elapsed, seconds.
+    pub elapsed_s: f64,
+    /// Completed evaluations per second over the window.
+    pub throughput: f64,
+    /// Client-observed frame latencies, milliseconds.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    /// The server's own counters, fetched after the run.
+    pub server: Option<StatsSnapshot>,
+}
+
+impl LoadtestReport {
+    /// Human-readable multi-line summary.
+    pub fn text(&self) -> String {
+        let mut s = format!(
+            "loadtest: {}/{} clients connected ({} dial failures)\n\
+             {:.1} evals/s over {:.1}s — {} completed, {} shed, {} refused \
+             dials, {} errors, {} connection deaths\n\
+             latency p50 {:.2} ms  p99 {:.2} ms  p99.9 {:.2} ms\n",
+            self.connected,
+            self.clients,
+            self.dial_failures,
+            self.throughput,
+            self.elapsed_s,
+            self.completed,
+            self.shed,
+            self.refused,
+            self.errors,
+            self.conn_deaths,
+            self.p50_ms,
+            self.p99_ms,
+            self.p999_ms,
+        );
+        if let Some(sv) = &self.server {
+            s.push_str(&format!(
+                "server: {} evals, {} cache hits, {} shed, {} refused \
+                 connections, {} reaped connections\n",
+                sv.evals,
+                sv.cache_hits,
+                sv.shed_requests,
+                sv.refused_connections,
+                sv.reaped_connections,
+            ));
+        }
+        s
+    }
+
+    /// One JSON object (the `BENCH_serve.json` line).
+    pub fn json(&self) -> String {
+        let (sv_shed, sv_refused, sv_reaped, sv_evals, sv_hits) = self
+            .server
+            .as_ref()
+            .map(|s| {
+                (
+                    s.shed_requests,
+                    s.refused_connections,
+                    s.reaped_connections,
+                    s.evals,
+                    s.cache_hits,
+                )
+            })
+            .unwrap_or_default();
+        format!(
+            "{{\"bench\":\"serve_loadtest\",\"clients\":{},\"connected\":{},\
+             \"dial_failures\":{},\"completed\":{},\"shed\":{},\"refused\":{},\
+             \"errors\":{},\"conn_deaths\":{},\"elapsed_s\":{:.3},\
+             \"throughput\":{:.1},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\
+             \"p999_ms\":{:.3},\"server_evals\":{},\"server_cache_hits\":{},\
+             \"server_shed\":{},\"server_refused_connections\":{},\
+             \"server_reaped_connections\":{}}}",
+            self.clients,
+            self.connected,
+            self.dial_failures,
+            self.completed,
+            self.shed,
+            self.refused,
+            self.errors,
+            self.conn_deaths,
+            self.elapsed_s,
+            self.throughput,
+            self.p50_ms,
+            self.p99_ms,
+            self.p999_ms,
+            sv_evals,
+            sv_hits,
+            sv_shed,
+            sv_refused,
+            sv_reaped,
+        )
+    }
+}
+
+/// The `--distinct` mapper variants: tiny circuit scenarios differing
+/// only in piece count, so each is its own cache entry but every
+/// evaluation is milliseconds even cold.
+fn variants(distinct: usize) -> Vec<WireEvalRequest> {
+    let dsl = crate::mapping::expert_dsl("circuit").expect("circuit expert mapper");
+    (0..distinct.max(1))
+        .map(|i| WireEvalRequest {
+            spec: SpecRef::Name("p100_cluster".into()),
+            scenario: Scenario {
+                app: "circuit".into(),
+                params: vec![
+                    ("pieces".into(), 2 + i as i64),
+                    ("wires".into(), 256),
+                    ("private_nodes".into(), 128),
+                    ("shared_nodes".into(), 32),
+                    ("steps".into(), 2),
+                ],
+            },
+            dsl: dsl.to_string(),
+            mode: ExecMode::Serialized,
+            priority: PRIORITY_NORMAL,
+        })
+        .collect()
+}
+
+/// Pre-encode the wire frames the clients replay: one frame per
+/// variant (single mode) or per variant-aligned chunk (batch mode).
+/// Returns `(frame bytes, evals per frame)` pairs.
+fn encode_frames(cfg: &LoadtestConfig) -> Vec<(Vec<u8>, u32)> {
+    let vars = variants(cfg.distinct);
+    let batch = cfg.batch.clamp(1, proto::MAX_BATCH_ITEMS);
+    let mut frames = Vec::new();
+    if batch <= 1 {
+        for v in &vars {
+            let mut buf = Vec::new();
+            proto::write_frame(&mut buf, &Request::Eval(v.clone()).encode())
+                .expect("loadtest frames are tiny");
+            frames.push((buf, 1));
+        }
+    } else {
+        // chunk the variant cycle so every batch still spreads over the
+        // distinct set (rotating the start keeps chunks unequal)
+        for start in 0..vars.len() {
+            let items: Vec<WireEvalRequest> = (0..batch)
+                .map(|j| vars[(start + j) % vars.len()].clone())
+                .collect();
+            let mut buf = Vec::new();
+            proto::write_frame(&mut buf, &Request::EvalBatch(items).encode())
+                .expect("loadtest frames are tiny");
+            frames.push((buf, batch as u32));
+        }
+    }
+    frames
+}
+
+/// One synthetic client: a nonblocking connection replaying pre-encoded
+/// frames and matching responses FIFO.
+struct SynthClient {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Send instant and eval count of each in-flight frame.
+    pending: VecDeque<(Instant, u32)>,
+    /// Cursor into the pre-encoded frame cycle.
+    frame_idx: usize,
+    /// Open-loop: next permitted send instant.
+    next_send: Instant,
+    /// Whether any response ever arrived (drives `connected`).
+    answered: bool,
+    dead: bool,
+    refused: bool,
+}
+
+/// Counters one generator thread accumulates (merged at the end).
+#[derive(Default)]
+struct GenTally {
+    connected: u64,
+    dial_failures: u64,
+    completed: u64,
+    shed: u64,
+    refused: u64,
+    errors: u64,
+    conn_deaths: u64,
+    latencies_ms: Vec<f64>,
+}
+
+/// Drive `n_clients` synthetic clients until `stop_at`, then drain
+/// briefly and report.
+#[allow(clippy::too_many_arguments)]
+fn generator(
+    addr: SocketAddr,
+    n_clients: usize,
+    frames: Vec<(Vec<u8>, u32)>,
+    pipeline: usize,
+    send_interval: Option<Duration>,
+    stop_at: Instant,
+    offset: usize,
+) -> GenTally {
+    let mut tally = GenTally::default();
+    let mut conns: Vec<SynthClient> = Vec::with_capacity(n_clients);
+    for i in 0..n_clients {
+        // a brief retry absorbs accept-backlog overflow during the
+        // thundering-herd ramp; a persistent failure is counted
+        let mut dialed = None;
+        for attempt in 0..3 {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    dialed = Some(s);
+                    break;
+                }
+                Err(_) if attempt + 1 < 3 => {
+                    thread::sleep(Duration::from_millis(10 << attempt));
+                }
+                Err(_) => {}
+            }
+        }
+        let Some(stream) = dialed else {
+            tally.dial_failures += 1;
+            continue;
+        };
+        let _ = stream.set_nodelay(true);
+        if stream.set_nonblocking(true).is_err() {
+            tally.dial_failures += 1;
+            continue;
+        }
+        let now = Instant::now();
+        conns.push(SynthClient {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: VecDeque::new(),
+            // stagger cursors so clients do not lock-step on one cache
+            // entry, and stagger open-loop phases across the window
+            frame_idx: (offset + i) % frames.len(),
+            next_send: now
+                + send_interval
+                    .map(|iv| iv.mul_f64(i as f64 / n_clients.max(1) as f64))
+                    .unwrap_or(Duration::ZERO),
+            answered: false,
+            dead: false,
+            refused: false,
+        });
+    }
+
+    let mut idle_spins: u32 = 0;
+    loop {
+        let now = Instant::now();
+        let sending = now < stop_at;
+        let mut progressed = false;
+        let mut all_quiet = true;
+        for c in conns.iter_mut() {
+            if c.dead {
+                continue;
+            }
+            // enqueue new frames per the driving mode
+            if sending {
+                let want = match send_interval {
+                    // open loop: one frame per elapsed interval
+                    Some(iv) => {
+                        if now >= c.next_send {
+                            c.next_send += iv;
+                            1
+                        } else {
+                            0
+                        }
+                    }
+                    // closed loop: top the pipeline back up
+                    None => pipeline.saturating_sub(c.pending.len()),
+                };
+                for _ in 0..want {
+                    let (bytes, items) = &frames[c.frame_idx % frames.len()];
+                    c.frame_idx += 1;
+                    c.wbuf.extend_from_slice(bytes);
+                    c.pending.push_back((Instant::now(), *items));
+                    progressed = true;
+                }
+            }
+            // flush
+            while c.wpos < c.wbuf.len() {
+                match c.stream.write(&c.wbuf[c.wpos..]) {
+                    Ok(0) => {
+                        c.dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.wpos += n;
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.dead = true;
+                        break;
+                    }
+                }
+            }
+            if c.wpos == c.wbuf.len() {
+                c.wbuf.clear();
+                c.wpos = 0;
+            }
+            // read + match responses
+            let mut tmp = [0u8; 16 << 10];
+            while !c.dead {
+                match c.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        c.dead = true;
+                    }
+                    Ok(n) => {
+                        c.rbuf.extend_from_slice(&tmp[..n]);
+                        progressed = true;
+                        continue;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.dead = true;
+                    }
+                }
+                break;
+            }
+            loop {
+                match proto::frame_step(&c.rbuf) {
+                    FrameStep::Incomplete => break,
+                    FrameStep::Corrupt(_) => {
+                        c.dead = true;
+                        break;
+                    }
+                    FrameStep::Frame { payload, consumed } => {
+                        c.rbuf.drain(..consumed);
+                        progressed = true;
+                        settle(c, &payload, &mut tally);
+                    }
+                }
+            }
+            if c.dead {
+                if c.refused {
+                    tally.refused += 1;
+                } else {
+                    tally.conn_deaths += 1;
+                }
+            }
+            if !c.pending.is_empty() {
+                all_quiet = false;
+            }
+        }
+        if !sending && all_quiet {
+            break;
+        }
+        if !sending && now > stop_at + Duration::from_secs(2) {
+            break; // drain grace expired; leftover pendings are lost
+        }
+        if progressed {
+            idle_spins = 0;
+        } else {
+            idle_spins = idle_spins.saturating_add(1);
+            if idle_spins <= 3 {
+                thread::yield_now();
+            } else {
+                thread::sleep(Duration::from_micros(
+                    (50 * idle_spins as u64).min(500),
+                ));
+            }
+        }
+    }
+    tally.connected = conns.iter().filter(|c| c.answered).count() as u64;
+    tally
+}
+
+/// Classify one response frame against the client's pending FIFO.
+fn settle(c: &mut SynthClient, payload: &[u8], tally: &mut GenTally) {
+    let resp = match Response::decode(payload) {
+        Ok(r) => r,
+        Err(_) => {
+            c.dead = true;
+            return;
+        }
+    };
+    let Some((sent_at, items)) = c.pending.pop_front() else {
+        // a response with nothing in flight: the server refused the
+        // dial at its connection cap (sent before reading anything) or
+        // reaped us idle — either way this connection is over
+        if let Response::Error { kind, msg, .. } = &resp {
+            if *kind == ErrorKind::Overloaded && msg.contains("connection capacity")
+            {
+                c.refused = true;
+            }
+        }
+        c.dead = true;
+        return;
+    };
+    c.answered = true;
+    let ms = sent_at.elapsed().as_secs_f64() * 1e3;
+    tally.latencies_ms.push(ms);
+    match resp {
+        Response::Feedback(_) => tally.completed += 1,
+        Response::FeedbackBatch(batch) => {
+            for item in batch {
+                match item {
+                    BatchItem::Feedback(_) => tally.completed += 1,
+                    BatchItem::Error { kind: ErrorKind::Overloaded, .. } => {
+                        tally.shed += 1
+                    }
+                    BatchItem::Error { .. } => tally.errors += 1,
+                }
+            }
+        }
+        Response::Error { kind: ErrorKind::Overloaded, .. } => {
+            tally.shed += u64::from(items);
+        }
+        Response::Error { .. } => tally.errors += u64::from(items),
+        _ => tally.errors += u64::from(items),
+    }
+}
+
+/// Run the loadtest against a bound server address.  The caller owns
+/// the server (in-process or remote); this only generates load and
+/// fetches a final [`StatsSnapshot`] through a regular client.
+pub fn run(addr: SocketAddr, cfg: &LoadtestConfig) -> LoadtestReport {
+    let frames = encode_frames(cfg);
+
+    // warm the per-variant cache entries through a regular client, so
+    // the measured window exercises serving, not first-touch simulation
+    let warm = RemoteEvalClient::connect(addr).ok();
+    if let Some(client) = &warm {
+        for v in variants(cfg.distinct) {
+            let _ = client.evaluate(v.spec, v.scenario, &v.dsl, v.mode, v.priority);
+        }
+    }
+
+    let gens = if cfg.generators > 0 {
+        cfg.generators
+    } else {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+    }
+    .min(cfg.clients.max(1));
+    let per_client_interval = cfg.rate.map(|r| {
+        Duration::from_secs_f64(cfg.clients.max(1) as f64 / r.max(0.001))
+    });
+    let started = Instant::now();
+    let stop_at = started + cfg.duration;
+
+    let mut handles = Vec::with_capacity(gens);
+    for g in 0..gens {
+        // spread the client count as evenly as integer division allows
+        let n = cfg.clients / gens + usize::from(g < cfg.clients % gens);
+        let frames = frames.clone();
+        let pipeline = cfg.pipeline.max(1);
+        handles.push(
+            thread::Builder::new()
+                .name(format!("loadgen-{g}"))
+                .spawn(move || {
+                    generator(
+                        addr,
+                        n,
+                        frames,
+                        pipeline,
+                        per_client_interval,
+                        stop_at,
+                        g * 7919, // co-prime stagger across generators
+                    )
+                })
+                .expect("spawn load generator"),
+        );
+    }
+    let mut tally = GenTally::default();
+    for h in handles {
+        let t = h.join().expect("load generator panicked");
+        tally.connected += t.connected;
+        tally.dial_failures += t.dial_failures;
+        tally.completed += t.completed;
+        tally.shed += t.shed;
+        tally.refused += t.refused;
+        tally.errors += t.errors;
+        tally.conn_deaths += t.conn_deaths;
+        tally.latencies_ms.extend(t.latencies_ms);
+    }
+    let elapsed = started.elapsed().as_secs_f64();
+
+    tally.latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let server = warm.and_then(|c| c.stats().ok());
+    LoadtestReport {
+        clients: cfg.clients,
+        connected: tally.connected as usize,
+        dial_failures: tally.dial_failures,
+        completed: tally.completed,
+        shed: tally.shed,
+        refused: tally.refused,
+        errors: tally.errors,
+        conn_deaths: tally.conn_deaths,
+        elapsed_s: elapsed,
+        throughput: tally.completed as f64 / elapsed.max(1e-9),
+        p50_ms: percentile_sorted(&tally.latencies_ms, 50.0),
+        p99_ms: percentile_sorted(&tally.latencies_ms, 99.0),
+        p999_ms: percentile_sorted(&tally.latencies_ms, 99.9),
+        server,
+    }
+}

@@ -1,14 +1,15 @@
-//! Cross-process serving (the PR 5 wire layer, hardened in PR 7): a
-//! versioned binary protocol, a threaded TCP server, a fault-tolerant
-//! remote client, and a deterministic chaos proxy — so optimization
-//! campaigns can live in *other processes* (or other machines) and
-//! hammer one shared, warm-cached
+//! Cross-process serving (the PR 5 wire layer, hardened in PR 7,
+//! multiplexed in PR 8): a versioned binary protocol with batch frames,
+//! a fixed-pool multiplexed TCP server, a fault-tolerant batching
+//! client, a deterministic chaos proxy, and a synthetic-client loadtest
+//! harness — so optimization campaigns can live in *other processes*
+//! (or other machines) and hammer one shared, warm-cached
 //! [`EvalService`](crate::coordinator::EvalService), even over a wire
 //! that drops, delays, corrupts, or truncates.
 //!
-//! Zero external dependencies: framing and the codec are hand-rolled
-//! over `std::net` / `std::io`, like the rest of the crate's
-//! clap/criterion/proptest stand-ins.
+//! Zero external dependencies: framing, the codec, and the readiness
+//! loops are hand-rolled over `std::net` / `std::io`, like the rest of
+//! the crate's clap/criterion/proptest stand-ins.
 //!
 //! # Frame format
 //!
@@ -44,6 +45,20 @@
 //!   non-UTF-8, or unknown-tag payloads produce
 //!   [`proto::DecodeError`]s, never panics — answered as classified
 //!   [`proto::ErrorKind::Decode`] responses, never connection aborts.
+//! * Servers parse incrementally with [`proto::frame_step`], so a
+//!   frame arriving in arbitrary fragments never blocks an I/O thread.
+//!
+//! # Batch frames
+//!
+//! [`proto::Request::EvalBatch`] / [`proto::Response::FeedbackBatch`]
+//! carry up to [`proto::MAX_BATCH_ITEMS`] evaluations per frame — one
+//! syscall round-trip for a whole proposal batch.  Items are admitted,
+//! shed, and answered *individually* (a [`proto::BatchItem`] each), so
+//! a bad or shed item never poisons its batch-mates, and results are
+//! bit-identical to frame-per-eval submission.  The tags are new:
+//! pre-batch decoders classify them as retryable `Decode` errors per
+//! the unknown-tag rule, which the client uses to fall back to single
+//! frames automatically ([`client`] module docs).
 //!
 //! # Error taxonomy
 //!
@@ -56,6 +71,7 @@
 //! | `Version`    | wire version skew                | yes — a fleet mid-upgrade converges |
 //! | `Decode`     | undecodable payload              | yes — usually corruption that slipped framing |
 //! | `Overloaded` | request shed under load          | yes — after the `retry_after_ms` hint |
+//! | `Deadline`   | connection reaped while idle     | yes — reconnect and resume |
 //! | `BadRequest` | the request itself is invalid    | **no** — retrying cannot fix it |
 //! | `Internal`   | server-side invariant failure    | **no** — retrying hides bugs |
 //!
@@ -69,12 +85,26 @@
 //! the server's estimate of when queue pressure will clear, scaled by
 //! backlog depth — which the client honors as a backoff floor.
 //!
+//! # The multiplexed server
+//!
+//! [`server::EvalServer`] drives all connections from a small fixed
+//! pool of I/O threads over nonblocking sockets ([`server`] module docs
+//! have the full slab lifecycle).  Connection cost is a slab entry, not
+//! two OS threads, so thousands of concurrent campaign clients are
+//! routine; [`loadtest`] is the harness that proves it.  Sizing knobs,
+//! all env-tunable: `MAPPEROPT_IO_THREADS` (pool size, default
+//! `min(4, cores)`), `MAPPEROPT_MAX_CONNECTIONS` (connection cap,
+//! default 4096, refusals counted and classified),
+//! `MAPPEROPT_CONN_DEADLINE_S` (idle reap, answered as retryable
+//! `Deadline`).
+//!
 //! # Fault tolerance
 //!
 //! The server protects itself (queue high-water shedding, per-
-//! connection in-flight caps, idle-connection reaping, graceful drain —
-//! see [`server`]); the client hides transient failure (reconnect and
-//! replay, budgets, deadlines — see [`client`]); and [`chaos`] proves
+//! connection in-flight caps, counted connection-capacity refusals,
+//! idle-connection reaping, graceful drain — see [`server`]); the
+//! client hides transient failure (reconnect and replay, budgets,
+//! deadlines, batch fallback — see [`client`]); and [`chaos`] proves
 //! the combination: a seeded in-process TCP proxy injects delays,
 //! resets, truncation, corruption, and blackholes on a deterministic
 //! byte-offset schedule, and the `chaos-smoke` driver asserts a
@@ -84,18 +114,20 @@
 //!
 //! Responses are delivered strictly in request order per connection, so
 //! a client may keep many requests in flight on one socket (the
-//! [`client::RemoteEvalClient`] reader thread matches responses FIFO,
-//! and the [`server::EvalServer`] per-connection writer resolves
+//! [`client::RemoteEvalClient`] reader thread matches response frames
+//! FIFO, and the server's per-connection reply FIFO resolves
 //! [`EvalTicket`](crate::coordinator::EvalTicket)s in arrival order
 //! while the evaluations themselves proceed concurrently on the
 //! service's worker pool).
 
 pub mod chaos;
 pub mod client;
+pub mod loadtest;
 pub mod proto;
 pub mod server;
 
 pub use chaos::{ChaosConfig, ChaosProxy, ChaosStats};
 pub use client::{RemoteEvalClient, RemoteTicket, RetryPolicy};
-pub use proto::{Scenario, SpecRef, WIRE_VERSION};
-pub use server::EvalServer;
+pub use loadtest::{LoadtestConfig, LoadtestReport};
+pub use proto::{Scenario, SpecRef, WireEvalRequest, WIRE_VERSION};
+pub use server::{EvalServer, ServerConfig};

@@ -32,6 +32,13 @@ pub const WIRE_VERSION: u8 = 2;
 /// abort the process.
 pub const MAX_FRAME_LEN: usize = 8 << 20;
 
+/// Upper bound on the item count of one [`Request::EvalBatch`] /
+/// [`Response::FeedbackBatch`] frame.  Checked *before* any
+/// per-item allocation, so a hostile count prefix claiming millions of
+/// entries fails as a classified decode error instead of reserving
+/// memory; [`MAX_FRAME_LEN`] independently bounds the total bytes.
+pub const MAX_BATCH_ITEMS: usize = 1024;
+
 // ---------------------------------------------------------------------------
 // Errors
 // ---------------------------------------------------------------------------
@@ -104,6 +111,14 @@ pub enum ErrorKind {
     /// or per-connection in-flight cap).  Retryable; carries a
     /// retry-after hint in `Response::Error::retry_after_ms`.
     Overloaded,
+    /// The server reaped this connection at its idle deadline (no
+    /// request activity for `MAPPEROPT_CONN_DEADLINE_S`).  The
+    /// connection itself is gone, but the *campaign* is healthy — a
+    /// slow-thinking optimizer between proposals is normal — so this is
+    /// retryable: the client reconnects and resumes.  Rides at the code
+    /// tail so pre-deadline decoders classify it as a plain decode
+    /// failure (also retryable) instead of panicking.
+    Deadline,
 }
 
 impl ErrorKind {
@@ -115,6 +130,7 @@ impl ErrorKind {
             ErrorKind::BadRequest => 3,
             ErrorKind::Internal => 4,
             ErrorKind::Overloaded => 5,
+            ErrorKind::Deadline => 6,
         }
     }
 
@@ -126,6 +142,7 @@ impl ErrorKind {
             3 => Some(ErrorKind::BadRequest),
             4 => Some(ErrorKind::Internal),
             5 => Some(ErrorKind::Overloaded),
+            6 => Some(ErrorKind::Deadline),
             _ => None,
         }
     }
@@ -138,6 +155,7 @@ impl ErrorKind {
             ErrorKind::BadRequest => "bad-request",
             ErrorKind::Internal => "internal",
             ErrorKind::Overloaded => "overloaded",
+            ErrorKind::Deadline => "deadline",
         }
     }
 
@@ -145,12 +163,17 @@ impl ErrorKind {
     /// this kind.  Protocol-level failures (framing, version skew,
     /// decode) are retryable because evals are pure and the bytes may
     /// simply have been damaged in transit; `Overloaded` is explicitly
-    /// a "come back later" signal.  `BadRequest` / `Internal` are
+    /// a "come back later" signal and `Deadline` an idle-connection
+    /// reap (reconnect and resume).  `BadRequest` / `Internal` are
     /// terminal: resending identical bytes cannot change the answer.
     pub fn is_retryable(self) -> bool {
         matches!(
             self,
-            ErrorKind::Frame | ErrorKind::Version | ErrorKind::Decode | ErrorKind::Overloaded
+            ErrorKind::Frame
+                | ErrorKind::Version
+                | ErrorKind::Decode
+                | ErrorKind::Overloaded
+                | ErrorKind::Deadline
         )
     }
 }
@@ -222,6 +245,31 @@ pub enum Request {
     /// The human-readable `summary()` block; answered with
     /// [`Response::Summary`].
     Summary,
+    /// Evaluate `1..=MAX_BATCH_ITEMS` mappers in one frame (one
+    /// syscall round-trip for a grounded proposer's K candidates);
+    /// answered with one [`Response::FeedbackBatch`] of equal length.
+    /// A new tag: pre-batch peers classify it as a decode error and
+    /// keep serving, so batching clients can fall back to
+    /// frame-per-eval transparently.
+    EvalBatch(Vec<WireEvalRequest>),
+}
+
+/// One entry of a [`Response::FeedbackBatch`], positionally matching
+/// the [`Request::EvalBatch`] item it answers.  Items fail
+/// *independently*: a shed or malformed candidate becomes a classified
+/// per-item error (which the client may retry individually if
+/// [`ErrorKind::is_retryable`]) without poisoning its batch-mates.
+/// Unlike the top-level [`Response::Error`], the `retry_after_ms` hint
+/// is always encoded — an item is not at the payload tail, so eliding
+/// it would make the following items unparseable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchItem {
+    Feedback(SystemFeedback),
+    Error {
+        kind: ErrorKind,
+        msg: String,
+        retry_after_ms: u64,
+    },
 }
 
 /// Server-to-client messages, delivered strictly in request order.
@@ -243,6 +291,9 @@ pub enum Response {
         msg: String,
         retry_after_ms: u64,
     },
+    /// The answers to one [`Request::EvalBatch`], in item order and of
+    /// equal length.  A new tag, like `EvalBatch`.
+    FeedbackBatch(Vec<BatchItem>),
 }
 
 // ---------------------------------------------------------------------------
@@ -628,6 +679,70 @@ fn dec_feedback(d: &mut Dec<'_>) -> Result<SystemFeedback, DecodeError> {
     }
 }
 
+fn enc_eval_req(e: &mut Enc, q: &WireEvalRequest) {
+    let WireEvalRequest { spec, scenario, dsl, mode, priority } = q;
+    enc_spec_ref(e, spec);
+    enc_scenario(e, scenario);
+    e.str(dsl);
+    enc_mode(e, *mode);
+    e.u8(*priority);
+}
+
+fn dec_eval_req(d: &mut Dec<'_>) -> Result<WireEvalRequest, DecodeError> {
+    Ok(WireEvalRequest {
+        spec: dec_spec_ref(d)?,
+        scenario: dec_scenario(d)?,
+        dsl: d.str()?,
+        mode: dec_mode(d)?,
+        priority: d.u8()?,
+    })
+}
+
+/// Decode and validate a batch item count: empty batches and counts
+/// over [`MAX_BATCH_ITEMS`] are rejected here, *before* any per-item
+/// allocation, so a hostile count prefix cannot reserve memory.
+fn dec_batch_len(d: &mut Dec<'_>) -> Result<usize, DecodeError> {
+    let n = d.u32()? as usize;
+    if n == 0 {
+        return Err(DecodeError::Invalid("empty batch"));
+    }
+    if n > MAX_BATCH_ITEMS {
+        return Err(DecodeError::Invalid("batch item count"));
+    }
+    Ok(n)
+}
+
+fn enc_batch_item(e: &mut Enc, item: &BatchItem) {
+    match item {
+        BatchItem::Feedback(fb) => {
+            e.u8(0);
+            enc_feedback(e, fb);
+        }
+        BatchItem::Error { kind, msg, retry_after_ms } => {
+            e.u8(1);
+            e.u8(kind.code());
+            e.str(msg);
+            // always encoded (never elided like the top-level Error
+            // hint): mid-payload fields cannot be optional
+            e.u64(*retry_after_ms);
+        }
+    }
+}
+
+fn dec_batch_item(d: &mut Dec<'_>) -> Result<BatchItem, DecodeError> {
+    match d.u8()? {
+        0 => Ok(BatchItem::Feedback(dec_feedback(d)?)),
+        1 => {
+            let kind =
+                ErrorKind::from_code(d.u8()?).ok_or(DecodeError::Invalid("error kind"))?;
+            let msg = d.str()?;
+            let retry_after_ms = d.u64()?;
+            Ok(BatchItem::Error { kind, msg, retry_after_ms })
+        }
+        t => Err(DecodeError::UnknownTag("batch item", t)),
+    }
+}
+
 fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
     let StatsSnapshot {
         evals,
@@ -652,6 +767,7 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
         dirty_fallbacks,
         shed_requests,
         reaped_connections,
+        refused_connections,
         retries,
         reconnects,
         specs,
@@ -689,9 +805,10 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
         e.u64(*max_depth);
         e.u64(*queued);
     }
-    // delta counters (PR 6) and fault counters (PR 7) ride at the tail
-    // so pre-delta decoders fail with a clean Trailing error (and this
-    // decoder zero-fills their absence, field by field)
+    // delta counters (PR 6), fault counters (PR 7), and the admission
+    // counter (PR 8) ride at the tail so pre-delta decoders fail with a
+    // clean Trailing error (and this decoder zero-fills their absence,
+    // field by field)
     e.u64(*delta_evals);
     e.u64(*spliced_point_tasks);
     e.u64(*dirty_fallbacks);
@@ -699,6 +816,7 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
     e.u64(*reaped_connections);
     e.u64(*retries);
     e.u64(*reconnects);
+    e.u64(*refused_connections);
 }
 
 fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
@@ -752,6 +870,7 @@ fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
     let reaped_connections = tail()?;
     let retries = tail()?;
     let reconnects = tail()?;
+    let refused_connections = tail()?;
     Ok(StatsSnapshot {
         evals,
         cache_hits,
@@ -775,6 +894,7 @@ fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
         dirty_fallbacks,
         shed_requests,
         reaped_connections,
+        refused_connections,
         retries,
         reconnects,
         specs,
@@ -793,11 +913,7 @@ impl Request {
             Request::Ping => Enc::new(0).buf,
             Request::Eval(q) => {
                 let mut e = Enc::new(1);
-                enc_spec_ref(&mut e, &q.spec);
-                enc_scenario(&mut e, &q.scenario);
-                e.str(&q.dsl);
-                enc_mode(&mut e, q.mode);
-                e.u8(q.priority);
+                enc_eval_req(&mut e, q);
                 e.buf
             }
             Request::RegisterSpec { name, spec } => {
@@ -813,6 +929,14 @@ impl Request {
             }
             Request::Stats => Enc::new(4).buf,
             Request::Summary => Enc::new(5).buf,
+            Request::EvalBatch(items) => {
+                let mut e = Enc::new(6);
+                e.u32(items.len() as u32);
+                for q in items {
+                    enc_eval_req(&mut e, q);
+                }
+                e.buf
+            }
         }
     }
 
@@ -821,13 +945,7 @@ impl Request {
         let (tag, mut d) = Dec::new(payload)?;
         let req = match tag {
             0 => Request::Ping,
-            1 => Request::Eval(WireEvalRequest {
-                spec: dec_spec_ref(&mut d)?,
-                scenario: dec_scenario(&mut d)?,
-                dsl: d.str()?,
-                mode: dec_mode(&mut d)?,
-                priority: d.u8()?,
-            }),
+            1 => Request::Eval(dec_eval_req(&mut d)?),
             2 => Request::RegisterSpec {
                 name: d.str()?,
                 spec: dec_machine_spec(&mut d)?,
@@ -835,6 +953,14 @@ impl Request {
             3 => Request::GetSpec { name: d.str()? },
             4 => Request::Stats,
             5 => Request::Summary,
+            6 => {
+                let n = dec_batch_len(&mut d)?;
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    items.push(dec_eval_req(&mut d)?);
+                }
+                Request::EvalBatch(items)
+            }
             t => return Err(DecodeError::UnknownTag("request", t)),
         };
         d.finish()?;
@@ -880,6 +1006,14 @@ impl Response {
                 }
                 e.buf
             }
+            Response::FeedbackBatch(items) => {
+                let mut e = Enc::new(6);
+                e.u32(items.len() as u32);
+                for item in items {
+                    enc_batch_item(&mut e, item);
+                }
+                e.buf
+            }
         }
     }
 
@@ -903,6 +1037,14 @@ impl Response {
                 let retry_after_ms = if d.remaining() > 0 { d.u64()? } else { 0 };
                 Response::Error { kind, msg, retry_after_ms }
             }
+            6 => {
+                let n = dec_batch_len(&mut d)?;
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    items.push(dec_batch_item(&mut d)?);
+                }
+                Response::FeedbackBatch(items)
+            }
             t => return Err(DecodeError::UnknownTag("response", t)),
         };
         d.finish()?;
@@ -919,6 +1061,7 @@ impl Response {
             Response::Stats(_) => "stats",
             Response::Summary(_) => "summary",
             Response::Error { .. } => "error",
+            Response::FeedbackBatch(_) => "feedback-batch",
         }
     }
 }
@@ -1013,6 +1156,54 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
     Ok(Some(buf))
 }
 
+/// One step of the incremental frame parser: what a buffer of bytes
+/// read so far from a nonblocking socket amounts to.  This is
+/// [`read_frame`]'s pull-based twin for the multiplexed server, which
+/// cannot block a shared I/O thread waiting for one connection's
+/// missing bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameStep {
+    /// The buffer does not yet hold a whole frame; read more bytes and
+    /// call again.
+    Incomplete,
+    /// One whole frame.  `consumed` is the total encoded size (length
+    /// prefix + payload + checksum trailer) to drain from the front of
+    /// the buffer before the next step.
+    Frame { payload: Vec<u8>, consumed: usize },
+    /// Unrecoverable framing damage (length prefix outside
+    /// `1..=MAX_FRAME_LEN` or a checksum mismatch) — the stream cannot
+    /// be resynchronized, mirroring [`read_frame`]'s `InvalidData`.
+    Corrupt(String),
+}
+
+/// Parse at most one frame from the front of `buf` (bytes accumulated
+/// from a nonblocking read).  Never consumes on its own: on
+/// [`FrameStep::Frame`] the caller drains `consumed` bytes and may call
+/// again — several pipelined frames can sit in one buffer.  A hostile
+/// length prefix is rejected from the 4 prefix bytes alone, before any
+/// payload is buffered or copied.
+pub fn frame_step(buf: &[u8]) -> FrameStep {
+    if buf.len() < 4 {
+        return FrameStep::Incomplete;
+    }
+    let n = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if n == 0 || n > MAX_FRAME_LEN {
+        return FrameStep::Corrupt(format!("frame length {n} outside 1..={MAX_FRAME_LEN}"));
+    }
+    let total = 4 + n + 4;
+    if buf.len() < total {
+        return FrameStep::Incomplete;
+    }
+    let payload = &buf[4..4 + n];
+    let sum = u32::from_le_bytes(buf[4 + n..total].try_into().unwrap());
+    if sum != frame_checksum(payload) {
+        return FrameStep::Corrupt(
+            "frame checksum mismatch (payload corrupted in transit)".to_string(),
+        );
+    }
+    FrameStep::Frame { payload: payload.to_vec(), consumed: total }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1076,6 +1267,25 @@ mod tests {
         roundtrip_req(&Request::GetSpec { name: "small".into() });
         roundtrip_req(&Request::Stats);
         roundtrip_req(&Request::Summary);
+        roundtrip_req(&Request::EvalBatch(vec![
+            WireEvalRequest {
+                spec: SpecRef::Id(1),
+                scenario: Scenario::named("circuit"),
+                dsl: "Task * GPU;\n".into(),
+                mode: ExecMode::Serialized,
+                priority: 128,
+            },
+            WireEvalRequest {
+                spec: SpecRef::Name("p100_cluster".into()),
+                scenario: Scenario {
+                    app: "stencil3d".into(),
+                    params: vec![("px".into(), 4)],
+                },
+                dsl: "Region * * GPU FBMEM;\n".into(),
+                mode: ExecMode::OutOfOrder,
+                priority: 255,
+            },
+        ]));
     }
 
     #[test]
@@ -1111,6 +1321,7 @@ mod tests {
             dirty_fallbacks: 2,
             shed_requests: 3,
             reaped_connections: 1,
+            refused_connections: 5,
             retries: 6,
             reconnects: 2,
             specs: vec![SpecSnapshot {
@@ -1137,6 +1348,31 @@ mod tests {
             msg: "queue at high-water mark (32 deep)".into(),
             retry_after_ms: 75,
         });
+        roundtrip_resp(&Response::Error {
+            kind: ErrorKind::Deadline,
+            msg: "idle past the 300s connection deadline".into(),
+            retry_after_ms: 0,
+        });
+        roundtrip_resp(&Response::FeedbackBatch(vec![
+            BatchItem::Feedback(SystemFeedback::Performance {
+                line: "Performance Metric: Execution time is 0.0300s.".into(),
+                value: 33.0,
+                profile: Some(sample_profile()),
+            }),
+            BatchItem::Error {
+                kind: ErrorKind::Overloaded,
+                msg: "shed at the per-connection in-flight cap".into(),
+                retry_after_ms: 25,
+            },
+            BatchItem::Feedback(SystemFeedback::CompileError("mgpu not found".into())),
+            // unlike the top-level Error, a zero hint must roundtrip
+            // mid-payload without being elided
+            BatchItem::Error {
+                kind: ErrorKind::BadRequest,
+                msg: "unknown app 'nope'".into(),
+                retry_after_ms: 0,
+            },
+        ]));
     }
 
     #[test]
@@ -1156,11 +1392,14 @@ mod tests {
         assert_eq!(Response::decode(&without.encode()).unwrap(), without);
         assert_eq!(ErrorKind::from_code(5), Some(ErrorKind::Overloaded));
         assert_eq!(ErrorKind::Overloaded.name(), "overloaded");
+        assert_eq!(ErrorKind::from_code(6), Some(ErrorKind::Deadline));
+        assert_eq!(ErrorKind::Deadline.name(), "deadline");
         for kind in [
             ErrorKind::Frame,
             ErrorKind::Version,
             ErrorKind::Decode,
             ErrorKind::Overloaded,
+            ErrorKind::Deadline,
         ] {
             assert!(kind.is_retryable(), "{kind} should be retryable");
         }
@@ -1227,8 +1466,9 @@ mod tests {
     #[test]
     fn older_stats_payloads_decode_with_zeroed_tail_counters() {
         // older peers' Stats payloads are exactly today's shape minus
-        // trailing u64s: pre-fault peers lack the last four, pre-delta
-        // peers lack all seven — both must decode cleanly, never panic
+        // trailing u64s: pre-admission peers lack the last one,
+        // pre-fault peers the last five, pre-delta peers all eight —
+        // every shape must decode cleanly, never panic
         let full = StatsSnapshot {
             evals: 11,
             cache_hits: 3,
@@ -1237,6 +1477,7 @@ mod tests {
             dirty_fallbacks: 1,
             shed_requests: 7,
             reaped_connections: 2,
+            refused_connections: 3,
             retries: 4,
             reconnects: 1,
             priorities: vec![PrioritySnapshot {
@@ -1248,13 +1489,22 @@ mod tests {
             ..StatsSnapshot::default()
         };
         let bytes = Response::Stats(full.clone()).encode();
-        let pre_fault = &bytes[..bytes.len() - 32];
+        let pre_admission = &bytes[..bytes.len() - 8];
+        match Response::decode(pre_admission).unwrap() {
+            Response::Stats(got) => assert_eq!(
+                got,
+                StatsSnapshot { refused_connections: 0, ..full.clone() }
+            ),
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+        let pre_fault = &bytes[..bytes.len() - 40];
         match Response::decode(pre_fault).unwrap() {
             Response::Stats(got) => assert_eq!(
                 got,
                 StatsSnapshot {
                     shed_requests: 0,
                     reaped_connections: 0,
+                    refused_connections: 0,
                     retries: 0,
                     reconnects: 0,
                     ..full.clone()
@@ -1262,7 +1512,7 @@ mod tests {
             ),
             other => panic!("wrong variant {}", other.kind_name()),
         }
-        let pre_delta = &bytes[..bytes.len() - 56];
+        let pre_delta = &bytes[..bytes.len() - 64];
         match Response::decode(pre_delta).unwrap() {
             Response::Stats(got) => assert_eq!(
                 got,
@@ -1272,6 +1522,7 @@ mod tests {
                     dirty_fallbacks: 0,
                     shed_requests: 0,
                     reaped_connections: 0,
+                    refused_connections: 0,
                     retries: 0,
                     reconnects: 0,
                     ..full
@@ -1281,7 +1532,7 @@ mod tests {
         }
         // truncating inside any tail field still classifies (cuts on
         // field boundaries decode with the shorter-payload zero-fill)
-        for cut in 1..56 {
+        for cut in 1..64 {
             let short = &bytes[..bytes.len() - cut];
             if cut % 8 == 0 {
                 assert!(
@@ -1343,5 +1594,107 @@ mod tests {
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
         // the pristine frame still reads back
         assert_eq!(read_frame(&mut wire.as_slice()).unwrap().unwrap(), payload);
+    }
+
+    #[test]
+    fn batch_bounds_are_enforced_before_allocation() {
+        // an empty batch is semantically impossible, both directions
+        let empty_req: Vec<u8> = vec![WIRE_VERSION, 6, 0, 0, 0, 0];
+        assert_eq!(
+            Request::decode(&empty_req).unwrap_err(),
+            DecodeError::Invalid("empty batch")
+        );
+        let empty_resp: Vec<u8> = vec![WIRE_VERSION, 6, 0, 0, 0, 0];
+        assert_eq!(
+            Response::decode(&empty_resp).unwrap_err(),
+            DecodeError::Invalid("empty batch")
+        );
+        // a hostile count prefix claiming u32::MAX items must be
+        // rejected from the 6 header bytes alone — if this path ever
+        // allocated per-item first, the test box would feel it
+        let mut huge = vec![WIRE_VERSION, 6];
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(
+            Request::decode(&huge).unwrap_err(),
+            DecodeError::Invalid("batch item count")
+        );
+        assert_eq!(
+            Response::decode(&huge).unwrap_err(),
+            DecodeError::Invalid("batch item count")
+        );
+        // one past the cap is rejected; the cap itself would read items
+        let mut over = vec![WIRE_VERSION, 6];
+        over.extend_from_slice(&((MAX_BATCH_ITEMS + 1) as u32).to_le_bytes());
+        assert_eq!(
+            Request::decode(&over).unwrap_err(),
+            DecodeError::Invalid("batch item count")
+        );
+        // a plausible count whose items never arrive is a truncation
+        let mut cut = vec![WIRE_VERSION, 6];
+        cut.extend_from_slice(&2u32.to_le_bytes());
+        assert_eq!(Request::decode(&cut).unwrap_err(), DecodeError::Truncated);
+        // count mismatch (extra encoded item) is trailing garbage
+        let two = Request::EvalBatch(vec![
+            WireEvalRequest {
+                spec: SpecRef::Id(0),
+                scenario: Scenario::named("circuit"),
+                dsl: String::new(),
+                mode: ExecMode::Serialized,
+                priority: 128,
+            };
+            2
+        ]);
+        let mut bytes = two.encode();
+        bytes[2..6].copy_from_slice(&1u32.to_le_bytes());
+        assert!(matches!(
+            Request::decode(&bytes).unwrap_err(),
+            DecodeError::Trailing(_)
+        ));
+    }
+
+    #[test]
+    fn frame_step_parses_incrementally_and_matches_read_frame() {
+        let a = Request::Stats.encode();
+        let b = Request::GetSpec { name: "p100_cluster".into() }.encode();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &a).unwrap();
+        write_frame(&mut wire, &b).unwrap();
+        // every strict prefix of the first frame is Incomplete
+        let first_len = 4 + a.len() + 4;
+        for cut in 0..first_len {
+            assert_eq!(
+                frame_step(&wire[..cut]),
+                FrameStep::Incomplete,
+                "prefix of {cut} bytes"
+            );
+        }
+        // the whole buffer yields frame one, then (after draining
+        // `consumed`) frame two, then Incomplete on the empty rest
+        match frame_step(&wire) {
+            FrameStep::Frame { payload, consumed } => {
+                assert_eq!(payload, a);
+                assert_eq!(consumed, first_len);
+                match frame_step(&wire[consumed..]) {
+                    FrameStep::Frame { payload, consumed } => {
+                        assert_eq!(payload, b);
+                        assert_eq!(consumed, 4 + b.len() + 4);
+                    }
+                    other => panic!("second step: {other:?}"),
+                }
+            }
+            other => panic!("first step: {other:?}"),
+        }
+        assert_eq!(frame_step(&[]), FrameStep::Incomplete);
+        // the same corruptions read_frame rejects are Corrupt here
+        let zero = 0u32.to_le_bytes();
+        assert!(matches!(frame_step(&zero), FrameStep::Corrupt(_)));
+        let huge = ((MAX_FRAME_LEN + 1) as u32).to_le_bytes();
+        assert!(matches!(frame_step(&huge), FrameStep::Corrupt(_)));
+        let mut bent = wire.clone();
+        bent[4 + a.len() / 2] ^= 0x40;
+        match frame_step(&bent) {
+            FrameStep::Corrupt(msg) => assert!(msg.contains("checksum")),
+            other => panic!("corrupted step: {other:?}"),
+        }
     }
 }

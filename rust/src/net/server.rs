@@ -1,19 +1,53 @@
-//! The threaded TCP eval server: drains decoded requests into one
-//! shared [`EvalService`], so remote clients hit the same feedback /
-//! plan / policy / decision caches and in-flight deduplication as
-//! local ones.
+//! The multiplexed TCP eval server: a small fixed pool of I/O threads
+//! drives thousands of nonblocking connections into one shared
+//! [`EvalService`], so remote clients hit the same feedback / plan /
+//! policy / decision caches and in-flight deduplication as local ones —
+//! at O(pool) threads instead of the old O(2·connections).
 //!
-//! One thread accepts connections; each connection gets a reader thread
-//! (this one) plus a writer thread.  The reader decodes frames and
-//! turns them into replies *immediately* — synchronous requests resolve
-//! inline, evaluations become [`EvalTicket`]s admitted to the service's
-//! priority queue via the non-blocking
-//! [`EvalService::try_submit`](crate::coordinator::EvalService::try_submit)
-//! — and hands them to the writer in arrival order.  The writer waits
-//! each ticket and encodes the response, so responses keep request
-//! order (the client matches FIFO) while the evaluations themselves run
-//! concurrently on the service's worker pool, interleaved with every
-//! other client's.
+//! # Architecture
+//!
+//! One **acceptor** thread blocks on `accept`.  Each accepted stream is
+//! made nonblocking and handed round-robin to one of
+//! [`ServerConfig::io_threads`] **I/O threads** (env
+//! `MAPPEROPT_IO_THREADS`; default `min(4, cores)`).  An I/O thread
+//! owns a *slab* of per-connection state ([`ConnState`]): free slots
+//! are recycled through a free list, so slot indices are stable while a
+//! connection lives and O(1) to reuse when it dies.  Per connection the
+//! slab holds:
+//!
+//! * an **incremental frame decoder** — bytes accumulate in a read
+//!   buffer and [`proto::frame_step`] peels off whole frames as they
+//!   complete; a partial frame never blocks the thread, it just waits
+//!   for more bytes;
+//! * a **pending-reply FIFO** — synchronous requests resolve to
+//!   [`Reply::Now`] immediately, evaluations become
+//!   [`EvalTicket`]s admitted via the non-blocking
+//!   [`EvalService::try_submit`](crate::coordinator::EvalService::try_submit),
+//!   and batch frames become one [`Reply::Batch`] of per-item slots.
+//!   The FIFO head is polled each scan; replies encode strictly in
+//!   request order (the client matches FIFO) while the evaluations
+//!   themselves run concurrently on the service's worker pool;
+//! * an **in-flight count** whose accounting is a drop-guard *owned by
+//!   the reply entry* ([`InFlightGuard`]): any teardown path that drops
+//!   a queued reply — write error, reap, kill — releases its units, so
+//!   a recycled slab slot always starts at zero;
+//! * an **idle deadline** (`last_read` / write-progress stamps) driving
+//!   the reaping rules below.
+//!
+//! The readiness loop is std-only: each scan try-reads, resolves ready
+//! replies, and try-writes every live connection; when a full scan
+//! makes no progress the thread backs off adaptively (yield, then
+//! microsleeps capped at 500µs) so an idle server costs ~nothing and a
+//! busy one never sleeps.
+//!
+//! # Batch frames
+//!
+//! [`Request::EvalBatch`] carries up to
+//! [`proto::MAX_BATCH_ITEMS`](super::proto::MAX_BATCH_ITEMS) mappers in
+//! one frame; the server admits each item independently (per-item
+//! shedding, per-item bad-request classification) and answers one
+//! [`Response::FeedbackBatch`] of equal length once every item
+//! resolves.  One syscall round-trip per proposal batch instead of K.
 //!
 //! # Self-protection
 //!
@@ -22,24 +56,38 @@
 //! * **Queue high-water shedding** — at the service's high-water mark,
 //!   lowest-priority work is shed with a classified
 //!   [`ErrorKind::Overloaded`] response carrying a retry-after hint
-//!   (see [`CacheConfig::queue_high_water`]); readers never block on a
-//!   full queue.
+//!   (see [`CacheConfig::queue_high_water`]).
 //! * **Per-connection in-flight cap** — a connection may keep at most
-//!   [`MAX_CONN_IN_FLIGHT`] evaluations pending; excess submissions are
-//!   answered `Overloaded` immediately, so one client cannot pin the
-//!   writer behind an unbounded ticket backlog.
-//! * **Idle/read deadline** — a connection that sends nothing for
-//!   `MAPPEROPT_CONN_DEADLINE_S` seconds (default 300; `0` disables)
-//!   is reaped: counted in
+//!   [`MAX_CONN_IN_FLIGHT`] evaluations pending; excess submissions
+//!   (batch items included) are answered `Overloaded` immediately and
+//!   counted as shed.
+//! * **Connection capacity** — beyond
+//!   [`ServerConfig::max_connections`] concurrent connections (env
+//!   `MAPPEROPT_MAX_CONNECTIONS`, default 4096) the acceptor answers a
+//!   classified `Overloaded` refusal, **counts it** in
+//!   [`ServiceStats::refused_connections`](crate::coordinator::ServiceStats),
+//!   and closes the refused stream explicitly — refusals are visible in
+//!   `Stats` and never leak a half-open socket.
+//! * **Idle/read deadline** — a connection with nothing pending that
+//!   sends no bytes for `MAPPEROPT_CONN_DEADLINE_S` seconds (default
+//!   300; `0` disables) is reaped: counted in
 //!   [`ServiceStats::reaped_connections`](crate::coordinator::ServiceStats),
-//!   answered with a best-effort classified error, and closed — zombie
-//!   peers cannot hold threads and sockets forever.
+//!   answered with a *retryable* [`ErrorKind::Deadline`] error, and
+//!   closed — a reconnecting client resumes transparently.  A
+//!   connection that stops draining its replies (write backlog with no
+//!   socket progress for the same deadline) is reaped hard; one with
+//!   evaluations still in flight is never reaped, however slow the
+//!   eval.
+//! * **Write backlog bound** — while a connection holds more than
+//!   [`MAX_WRITE_BACKLOG`] encoded-but-unsent bytes, the server stops
+//!   reading from it (natural TCP backpressure) instead of buffering
+//!   without bound.
 //! * **Graceful drain** — [`EvalServer::shutdown`] stops accepting,
-//!   half-closes every live connection (read side), lets the writers
-//!   answer all in-flight tickets, and joins the connection threads, so
-//!   restarts never strand a pending reply.  [`EvalServer::kill`] is
-//!   the abrupt variant (both sides severed, in-flight replies lost) —
-//!   what the fault-injection tests use to simulate a crash.
+//!   stops reading new requests, answers everything already in flight,
+//!   flushes, and joins the I/O pool, so restarts never strand a
+//!   pending reply.  [`EvalServer::kill`] severs every connection
+//!   abruptly instead (what the fault-injection tests use to simulate a
+//!   crash).
 //!
 //! Fault containment: framing errors (including checksum mismatches),
 //! version skew, undecodable payloads, unknown specs/apps, and worker
@@ -50,30 +98,24 @@
 //!
 //! [`CacheConfig::queue_high_water`]: crate::coordinator::CacheConfig
 
-use std::collections::HashMap;
-use std::io;
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
 use std::net::{
     IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream,
 };
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::apps;
 use crate::coordinator::{EvalRequest, EvalService, EvalTicket};
 use crate::feedback::SystemFeedback;
 
 use super::proto::{
-    self, ErrorKind, Request, Response, SpecRef, WireEvalRequest,
+    self, BatchItem, ErrorKind, FrameStep, Request, Response, SpecRef,
+    WireEvalRequest,
 };
-
-/// One queued reply: either ready now (sync requests, protocol errors)
-/// or a ticket the writer resolves in order.
-enum Reply {
-    Now(Response),
-    Ticket(EvalTicket),
-}
 
 /// Per-request budget on the simulated task graph a remote scenario may
 /// ask for: `apps::scenario`'s per-parameter bounds keep the arithmetic
@@ -96,17 +138,34 @@ const MAX_REGISTERED_SPECS: usize = 1024;
 /// cap above still admits gigabytes of hostile name bytes.
 const MAX_SPEC_NAME_BYTES: usize = 256;
 
-/// Each connection costs two OS threads (reader + writer) and a cloned
-/// socket; beyond this many concurrent connections the server answers a
-/// classified capacity error and closes instead of exhausting
-/// threads/fds under a reconnect storm.
-const MAX_CONNECTIONS: usize = 256;
+/// Default [`ServerConfig::max_connections`].  A connection now costs a
+/// slab entry and a socket, not two OS threads, so the cap exists to
+/// bound fds/memory under a reconnect storm — not thread count — and
+/// sits far above the old thread-per-connection limit of 256.
+pub const DEFAULT_MAX_CONNECTIONS: usize = 4096;
 
 /// Evaluations one connection may keep pending at once; submissions
 /// past the cap are answered [`ErrorKind::Overloaded`] immediately
 /// (counted as shed), so a single pipelining client cannot build an
-/// unbounded ticket backlog behind its writer.
+/// unbounded ticket backlog on its reply FIFO.
 pub const MAX_CONN_IN_FLIGHT: usize = 64;
+
+/// Replies (of any kind) one connection may have queued before the
+/// server stops *parsing* its buffered bytes — a second backpressure
+/// layer behind the in-flight cap, bounding FIFO growth from
+/// zero-cost requests (pings, stats) pipelined faster than the socket
+/// drains.
+const MAX_PENDING_REPLIES: usize = 2 * MAX_CONN_IN_FLIGHT;
+
+/// Encoded-but-unsent reply bytes beyond which the server stops
+/// reading from a connection until its socket drains (see module
+/// docs); one frame can exceed this transiently, so the bound is
+/// checked before parsing, not after encoding.
+const MAX_WRITE_BACKLOG: usize = 1 << 20;
+
+/// Bytes one connection may read per scan, so a firehose peer cannot
+/// starve its slab-mates on the shared I/O thread.
+const READ_BUDGET_PER_SCAN: usize = 64 << 10;
 
 /// Idle/read deadline from `MAPPEROPT_CONN_DEADLINE_S` (seconds;
 /// default 300, `0` disables).
@@ -118,130 +177,580 @@ fn conn_deadline() -> Option<Duration> {
     (secs > 0).then(|| Duration::from_secs(secs))
 }
 
-/// Live-connection registry: the accept loop registers every served
-/// stream (for drain/kill) and its thread handle (for join), and the
-/// per-connection guard unregisters on exit — including panicking
-/// exits, so a fault can never leak capacity.
-#[derive(Default)]
-struct ConnRegistry {
-    active: AtomicUsize,
-    next_id: AtomicUsize,
-    streams: Mutex<HashMap<usize, TcpStream>>,
-    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|v| v.parse::<usize>().ok())
 }
 
-impl ConnRegistry {
-    /// Half- or full-close every live connection.
-    fn sever(&self, how: Shutdown) {
-        let g = self.streams.lock().unwrap();
-        for s in g.values() {
-            let _ = s.shutdown(how);
+/// Tuning knobs of one [`EvalServer`].  [`Default`] reads the env (the
+/// CLI path); tests pass explicit values via [`EvalServer::bind_with`]
+/// so they never race on process-global env state.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Size of the I/O thread pool multiplexing all connections (env
+    /// `MAPPEROPT_IO_THREADS`; default `min(4, cores)`, min 1).
+    pub io_threads: usize,
+    /// Concurrent-connection cap; dials beyond it are refused with a
+    /// classified `Overloaded` response, counted, and closed (env
+    /// `MAPPEROPT_MAX_CONNECTIONS`; default
+    /// [`DEFAULT_MAX_CONNECTIONS`]).
+    pub max_connections: usize,
+    /// Idle/read deadline (env `MAPPEROPT_CONN_DEADLINE_S`, seconds;
+    /// default 300; `None` disables reaping).
+    pub conn_deadline: Option<Duration>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        let cores = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ServerConfig {
+            io_threads: env_usize("MAPPEROPT_IO_THREADS")
+                .unwrap_or_else(|| cores.min(4))
+                .max(1),
+            max_connections: env_usize("MAPPEROPT_MAX_CONNECTIONS")
+                .unwrap_or(DEFAULT_MAX_CONNECTIONS)
+                .max(1),
+            conn_deadline: conn_deadline(),
         }
     }
+}
 
-    /// Join every connection thread (called after the acceptor has
-    /// stopped, so no new handles appear concurrently).
-    fn join_all(&self) {
-        let handles: Vec<_> = {
-            let mut g = self.handles.lock().unwrap();
-            g.drain(..).collect()
-        };
-        for h in handles {
-            let _ = h.join();
-        }
-    }
+// ---------------------------------------------------------------------------
+// Per-connection state
+// ---------------------------------------------------------------------------
 
-    /// Drop handles of connections that already exited, so a long-lived
-    /// server's handle list stays O(live connections).
-    fn prune_finished(&self) {
-        self.handles.lock().unwrap().retain(|h| !h.is_finished());
+/// One unit of a connection's in-flight evaluation accounting,
+/// increment-on-acquire / decrement-on-drop.  The guard is owned by the
+/// reply-FIFO entry it accounts for, so *every* teardown path — reply
+/// encoded, write error, reap, kill, slab slot dropped wholesale —
+/// releases the unit exactly once.  Under slab reuse this is what
+/// guarantees a recycled slot starts at zero (the old
+/// thread-per-connection server leaked increments on teardown races and
+/// got away with it only because the counter died with the threads).
+struct InFlightGuard(Arc<AtomicUsize>);
+
+impl InFlightGuard {
+    fn acquire(counter: &Arc<AtomicUsize>) -> InFlightGuard {
+        counter.fetch_add(1, Ordering::SeqCst);
+        InFlightGuard(Arc::clone(counter))
     }
 }
 
-/// Releases one connection slot (and its stream registration) on drop.
-struct ConnSlot {
-    registry: Arc<ConnRegistry>,
-    id: usize,
-}
-
-impl Drop for ConnSlot {
+impl Drop for InFlightGuard {
     fn drop(&mut self) {
-        self.registry.streams.lock().unwrap().remove(&self.id);
-        self.registry.active.fetch_sub(1, Ordering::SeqCst);
+        self.0.fetch_sub(1, Ordering::SeqCst);
     }
 }
+
+/// One item of a [`Reply::Batch`]: resolved at admission (shed,
+/// bad-request) or pending on a service ticket.
+enum BatchSlot {
+    Done(BatchItem),
+    Ticket { ticket: EvalTicket, guard: InFlightGuard },
+}
+
+impl BatchSlot {
+    fn ready(&self) -> bool {
+        match self {
+            BatchSlot::Done(_) => true,
+            BatchSlot::Ticket { ticket, .. } => ticket.is_done(),
+        }
+    }
+}
+
+/// One queued reply: ready now (sync requests, protocol errors), a
+/// ticket resolving on the worker pool, or a batch of per-item slots
+/// answered as one frame.
+enum Reply {
+    Now(Response),
+    Ticket { ticket: EvalTicket, guard: InFlightGuard },
+    Batch(Vec<BatchSlot>),
+}
+
+impl Reply {
+    /// Whether this reply can be encoded without blocking.
+    fn ready(&self) -> bool {
+        match self {
+            Reply::Now(_) => true,
+            Reply::Ticket { ticket, .. } => ticket.is_done(),
+            Reply::Batch(slots) => slots.iter().all(BatchSlot::ready),
+        }
+    }
+
+    /// Consume into the wire response (call only when [`Reply::ready`];
+    /// the `wait`s below then return without blocking).  The in-flight
+    /// guards release here — the accounting unit lives exactly as long
+    /// as the queued reply.
+    fn into_response(self) -> Response {
+        match self {
+            Reply::Now(r) => r,
+            Reply::Ticket { ticket, guard } => {
+                let resp = ticket_response(&ticket);
+                drop(guard);
+                resp
+            }
+            Reply::Batch(slots) => Response::FeedbackBatch(
+                slots
+                    .into_iter()
+                    .map(|s| match s {
+                        BatchSlot::Done(item) => item,
+                        BatchSlot::Ticket { ticket, guard } => {
+                            let item = ticket_item(&ticket);
+                            drop(guard);
+                            item
+                        }
+                    })
+                    .collect(),
+            ),
+        }
+    }
+}
+
+/// Worker panics surface through the ticket as classified
+/// execution-error feedback; shed tickets become wire `Overloaded`
+/// errors carrying the service's retry-after hint.
+fn ticket_response(t: &EvalTicket) -> Response {
+    let fb = t.wait();
+    match t.shed_retry_after_ms() {
+        Some(ms) => Response::Error {
+            kind: ErrorKind::Overloaded,
+            msg: match fb {
+                SystemFeedback::ExecutionError(m) => m,
+                _ => "request shed under load".into(),
+            },
+            retry_after_ms: ms,
+        },
+        None => Response::Feedback(fb),
+    }
+}
+
+/// [`ticket_response`] for one batch item (per-item shedding: a shed
+/// candidate does not poison its batch-mates).
+fn ticket_item(t: &EvalTicket) -> BatchItem {
+    let fb = t.wait();
+    match t.shed_retry_after_ms() {
+        Some(ms) => BatchItem::Error {
+            kind: ErrorKind::Overloaded,
+            msg: match fb {
+                SystemFeedback::ExecutionError(m) => m,
+                _ => "request shed under load".into(),
+            },
+            retry_after_ms: ms,
+        },
+        None => BatchItem::Feedback(fb),
+    }
+}
+
+/// Slab-resident state of one multiplexed connection (see module docs).
+struct ConnState {
+    stream: TcpStream,
+    /// Bytes read but not yet parsed into frames.
+    rbuf: Vec<u8>,
+    /// Encoded replies not yet written; `wpos` is the flush cursor.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Replies in request order; the head is polled each scan.
+    fifo: VecDeque<Reply>,
+    /// Evaluations pending on this connection (see [`InFlightGuard`]).
+    in_flight: Arc<AtomicUsize>,
+    last_read: Instant,
+    /// Last instant the socket accepted bytes while a backlog existed.
+    last_write_progress: Instant,
+    /// No more requests will be read (EOF, drain, reap, fatal frame);
+    /// pending replies still flush before the close.
+    read_closed: bool,
+    /// Tear down now; queued replies are dropped (guards release).
+    dead: bool,
+}
+
+impl ConnState {
+    fn adopt(stream: TcpStream) -> ConnState {
+        let now = Instant::now();
+        ConnState {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            fifo: VecDeque::new(),
+            in_flight: Arc::new(AtomicUsize::new(0)),
+            last_read: now,
+            last_write_progress: now,
+            read_closed: false,
+            dead: false,
+        }
+    }
+
+    fn backlog(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// The connection has nothing left to do and can be closed.
+    fn finished(&self) -> bool {
+        self.dead || (self.read_closed && self.fifo.is_empty() && self.backlog() == 0)
+    }
+
+    /// One readiness scan: read what's there, resolve what's ready,
+    /// write what fits, enforce deadlines.  Returns whether any
+    /// progress was made (drives the pool's adaptive backoff).
+    fn pump(
+        &mut self,
+        service: &Arc<EvalService>,
+        deadline: Option<Duration>,
+    ) -> bool {
+        let mut progressed = false;
+        if !self.read_closed && self.backlog() < MAX_WRITE_BACKLOG {
+            progressed |= self.pump_read(service);
+        }
+        progressed |= self.pump_resolve();
+        progressed |= self.pump_write();
+        self.check_deadline(service, deadline);
+        progressed
+    }
+
+    /// Drain readable bytes (bounded per scan) and parse whole frames
+    /// into queued replies.
+    fn pump_read(&mut self, service: &Arc<EvalService>) -> bool {
+        let mut progressed = false;
+        let mut tmp = [0u8; 16 << 10];
+        let mut budget = READ_BUDGET_PER_SCAN;
+        while budget > 0 {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    // clean close (or graceful drain): serve what was
+                    // already buffered, then flush and finish
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&tmp[..n]);
+                    self.last_read = Instant::now();
+                    progressed = true;
+                    budget = budget.saturating_sub(n);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return true;
+                }
+            }
+        }
+        // peel off every complete frame (up to the reply backpressure
+        // bound); a trailing partial frame just waits for more bytes
+        while self.fifo.len() < MAX_PENDING_REPLIES {
+            match proto::frame_step(&self.rbuf) {
+                FrameStep::Incomplete => break,
+                FrameStep::Frame { payload, consumed } => {
+                    self.rbuf.drain(..consumed);
+                    let reply = match Request::decode(&payload) {
+                        Ok(req) => serve_request(req, service, &self.in_flight),
+                        // version skew / undecodable payloads answer in
+                        // place; the length prefix already
+                        // resynchronized the stream
+                        Err(e) => Reply::Now(Response::Error {
+                            kind: e.wire_kind(),
+                            msg: e.to_string(),
+                            retry_after_ms: 0,
+                        }),
+                    };
+                    self.fifo.push_back(reply);
+                    progressed = true;
+                }
+                FrameStep::Corrupt(msg) => {
+                    // unrecoverable framing (bad length or checksum):
+                    // classify, answer, close after the flush
+                    self.fifo.push_back(Reply::Now(Response::Error {
+                        kind: ErrorKind::Frame,
+                        msg,
+                        retry_after_ms: 0,
+                    }));
+                    self.rbuf.clear();
+                    self.read_closed = true;
+                    progressed = true;
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+
+    /// Encode every ready reply at the FIFO head, preserving request
+    /// order (an unready head blocks later-but-ready replies — that is
+    /// the ordering contract, not a bug).
+    fn pump_resolve(&mut self) -> bool {
+        let mut progressed = false;
+        while self.fifo.front().is_some_and(Reply::ready) {
+            let reply = self.fifo.pop_front().expect("checked front");
+            let resp = reply.into_response();
+            if proto::write_frame(&mut self.wbuf, &resp.encode()).is_err() {
+                // unencodable reply (oversized frame): the stream can
+                // no longer stay in sync — tear down
+                self.dead = true;
+                return true;
+            }
+            progressed = true;
+        }
+        progressed
+    }
+
+    /// Flush the write buffer as far as the socket allows.
+    fn pump_write(&mut self) -> bool {
+        let mut progressed = false;
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    self.last_write_progress = Instant::now();
+                    progressed = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > (64 << 10) {
+            // partial flush of a large backlog: compact so the buffer
+            // tracks unsent bytes, not all bytes ever encoded
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        progressed
+    }
+
+    /// Reaping rules (see module docs): idle connections get a polite,
+    /// *retryable* [`ErrorKind::Deadline`] answer; connections that
+    /// stop draining their replies are closed hard; connections with
+    /// evaluations in flight are never reaped.
+    fn check_deadline(&mut self, service: &Arc<EvalService>, deadline: Option<Duration>) {
+        let Some(d) = deadline else { return };
+        if self.dead {
+            return;
+        }
+        if self.backlog() > 0 {
+            // replies exist but the peer is not taking them
+            if self.last_write_progress.elapsed() > d {
+                service.note_reaped_connection();
+                self.dead = true;
+            }
+            return;
+        }
+        if self.read_closed || !self.fifo.is_empty() {
+            return;
+        }
+        if self.last_read.elapsed() > d {
+            service.note_reaped_connection();
+            let secs = d.as_secs();
+            self.fifo.push_back(Reply::Now(Response::Error {
+                kind: ErrorKind::Deadline,
+                msg: format!(
+                    "connection idle past the {secs}s read deadline; \
+                     reconnect and resume"
+                ),
+                retry_after_ms: 0,
+            }));
+            self.read_closed = true;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The I/O pool
+// ---------------------------------------------------------------------------
+
+const STATE_RUNNING: u8 = 0;
+const STATE_DRAIN: u8 = 1;
+const STATE_KILL: u8 = 2;
+
+/// State shared by the acceptor and the I/O pool.
+struct ServerShared {
+    /// Live + handed-off connections (the acceptor reserves before the
+    /// I/O thread adopts; the I/O thread releases on close).
+    active: AtomicUsize,
+    /// `STATE_RUNNING` / `STATE_DRAIN` / `STATE_KILL`.
+    state: AtomicU8,
+    /// One hand-off queue per I/O thread (acceptor round-robins).
+    inboxes: Vec<Mutex<Vec<TcpStream>>>,
+}
+
+fn io_loop(
+    idx: usize,
+    shared: Arc<ServerShared>,
+    service: Arc<EvalService>,
+    deadline: Option<Duration>,
+) {
+    let mut slab: Vec<Option<ConnState>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut idle_spins: u32 = 0;
+    loop {
+        let state = shared.state.load(Ordering::SeqCst);
+        let incoming: Vec<TcpStream> = {
+            let mut q = shared.inboxes[idx].lock().unwrap();
+            std::mem::take(&mut *q)
+        };
+        let mut progressed = !incoming.is_empty();
+        for stream in incoming {
+            if state == STATE_KILL {
+                let _ = stream.shutdown(Shutdown::Both);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            let conn = ConnState::adopt(stream);
+            match free.pop() {
+                Some(i) => slab[i] = Some(conn),
+                None => slab.push(Some(conn)),
+            }
+        }
+        for slot in 0..slab.len() {
+            let finished = {
+                let Some(conn) = slab[slot].as_mut() else { continue };
+                match state {
+                    STATE_KILL => conn.dead = true,
+                    STATE_DRAIN => conn.read_closed = true,
+                    _ => {}
+                }
+                if !conn.dead {
+                    progressed |= conn.pump(&service, deadline);
+                }
+                conn.finished()
+            };
+            if finished {
+                if let Some(conn) = slab[slot].take() {
+                    let _ = conn.stream.shutdown(Shutdown::Both);
+                    // dropping the state here drops any queued replies,
+                    // whose guards release their in-flight units
+                }
+                free.push(slot);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+                progressed = true;
+            }
+        }
+        if state != STATE_RUNNING
+            && slab.iter().all(Option::is_none)
+            && shared.inboxes[idx].lock().unwrap().is_empty()
+        {
+            break;
+        }
+        if progressed {
+            idle_spins = 0;
+        } else {
+            // adaptive backoff: yield first, then microsleeps ramping
+            // to 500µs — idle costs ~nothing, activity is picked up
+            // within half a millisecond
+            idle_spins = idle_spins.saturating_add(1);
+            if idle_spins <= 3 {
+                thread::yield_now();
+            } else {
+                let us = (50 * idle_spins as u64).min(500);
+                thread::sleep(Duration::from_micros(us));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The server front
+// ---------------------------------------------------------------------------
 
 /// A TCP front over one shared [`EvalService`] (see module docs).
-/// Binding spawns the accept loop; [`EvalServer::join`] blocks for a
-/// serve-forever process.  [`EvalServer::shutdown`] (and plain drop)
-/// drains gracefully: stop accepting, answer in-flight work, close.
-/// [`EvalServer::kill`] severs every connection abruptly instead.
+/// Binding spawns the acceptor and the I/O pool; [`EvalServer::join`]
+/// blocks for a serve-forever process.  [`EvalServer::shutdown`] (and
+/// plain drop) drains gracefully: stop accepting, answer in-flight
+/// work, close.  [`EvalServer::kill`] severs every connection abruptly
+/// instead.
 pub struct EvalServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept: Option<thread::JoinHandle<()>>,
-    conns: Arc<ConnRegistry>,
+    io: Vec<thread::JoinHandle<()>>,
+    shared: Arc<ServerShared>,
 }
 
 impl EvalServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port)
-    /// and start accepting; every connection is served against
-    /// `service`.
+    /// with env-derived [`ServerConfig`] defaults.
     pub fn bind(addr: &str, service: Arc<EvalService>) -> io::Result<EvalServer> {
+        EvalServer::bind_with(addr, service, ServerConfig::default())
+    }
+
+    /// [`EvalServer::bind`] with explicit knobs (tests pin the
+    /// connection cap / deadline here instead of racing on env vars).
+    pub fn bind_with(
+        addr: &str,
+        service: Arc<EvalService>,
+        config: ServerConfig,
+    ) -> io::Result<EvalServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop_flag = Arc::clone(&stop);
-        let conns = Arc::new(ConnRegistry::default());
-        let registry = Arc::clone(&conns);
-        let deadline = conn_deadline();
+        let io_threads = config.io_threads.max(1);
+        let max_connections = config.max_connections.max(1);
+        let deadline = config.conn_deadline;
+        let shared = Arc::new(ServerShared {
+            active: AtomicUsize::new(0),
+            state: AtomicU8::new(STATE_RUNNING),
+            inboxes: (0..io_threads).map(|_| Mutex::new(Vec::new())).collect(),
+        });
+        let mut io = Vec::with_capacity(io_threads);
+        for i in 0..io_threads {
+            let shared = Arc::clone(&shared);
+            let service = Arc::clone(&service);
+            io.push(
+                thread::Builder::new()
+                    .name(format!("evalsrv-io-{i}"))
+                    .spawn(move || io_loop(i, shared, service, deadline))?,
+            );
+        }
+        let accept_shared = Arc::clone(&shared);
         let accept = thread::Builder::new()
             .name("evalsrv-accept".into())
             .spawn(move || {
+                let mut next = 0usize;
                 for conn in listener.incoming() {
                     if stop_flag.load(Ordering::SeqCst) {
                         break;
                     }
                     match conn {
                         Ok(mut stream) => {
-                            registry.prune_finished();
-                            if registry.active.load(Ordering::SeqCst)
-                                >= MAX_CONNECTIONS
-                            {
-                                // classified refusal, then close
+                            // reserve a slot; over capacity: classified
+                            // refusal — counted, answered, and the
+                            // stream closed *explicitly* (never left
+                            // half-open for the peer to time out on)
+                            let prev =
+                                accept_shared.active.fetch_add(1, Ordering::SeqCst);
+                            if prev >= max_connections {
+                                accept_shared.active.fetch_sub(1, Ordering::SeqCst);
+                                service.note_refused_connection();
                                 let resp = Response::Error {
                                     kind: ErrorKind::Overloaded,
                                     msg: format!(
                                         "server at connection capacity \
-                                         ({MAX_CONNECTIONS})"
+                                         ({max_connections})"
                                     ),
                                     retry_after_ms: 250,
                                 };
-                                let _ = proto::write_frame(&mut stream, &resp.encode());
+                                let _ =
+                                    proto::write_frame(&mut stream, &resp.encode());
+                                let _ = stream.shutdown(Shutdown::Both);
                                 continue;
                             }
-                            registry.active.fetch_add(1, Ordering::SeqCst);
-                            let id = registry.next_id.fetch_add(1, Ordering::SeqCst);
-                            if let Ok(clone) = stream.try_clone() {
-                                registry.streams.lock().unwrap().insert(id, clone);
+                            let _ = stream.set_nodelay(true);
+                            if stream.set_nonblocking(true).is_err() {
+                                accept_shared.active.fetch_sub(1, Ordering::SeqCst);
+                                continue;
                             }
-                            let service = Arc::clone(&service);
-                            let slot =
-                                ConnSlot { registry: Arc::clone(&registry), id };
-                            // on spawn failure the closure (stream +
-                            // guard) is dropped, and the guard's Drop
-                            // releases the reservation either way
-                            let spawned = thread::Builder::new()
-                                .name("evalsrv-conn".into())
-                                .spawn(move || {
-                                    // held for the connection's life:
-                                    // released on return *and* on panic
-                                    let _slot = slot;
-                                    handle_conn(stream, service, deadline);
-                                });
-                            if let Ok(h) = spawned {
-                                registry.handles.lock().unwrap().push(h);
-                            }
+                            let inbox = next % accept_shared.inboxes.len();
+                            next = next.wrapping_add(1);
+                            accept_shared.inboxes[inbox].lock().unwrap().push(stream);
                         }
                         // transient accept errors (EMFILE, aborted
                         // handshakes) must not kill the server — but
@@ -254,7 +763,7 @@ impl EvalServer {
                     }
                 }
             })?;
-        Ok(EvalServer { addr: local, stop, accept: Some(accept), conns })
+        Ok(EvalServer { addr: local, stop, accept: Some(accept), io, shared })
     }
 
     /// The bound address (resolves the ephemeral port of `":0"` binds).
@@ -262,18 +771,19 @@ impl EvalServer {
         self.addr
     }
 
-    /// Block until the accept loop exits (the serve-forever CLI path).
+    /// Block until the I/O pool exits (the serve-forever CLI path).
     pub fn join(mut self) {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+        for h in self.io.drain(..) {
+            let _ = h.join();
+        }
     }
 
-    /// Graceful drain: stop accepting, half-close every live connection
-    /// (readers see a clean end-of-stream and stop taking requests),
-    /// let the writers answer everything already in flight, and join
-    /// the connection threads — a restart never strands a pending
-    /// ticket.
+    /// Graceful drain: stop accepting, stop reading new requests, let
+    /// the pool answer everything already in flight, flush, and join —
+    /// a restart never strands a pending ticket.
     pub fn shutdown(mut self) {
         self.drain();
     }
@@ -285,16 +795,24 @@ impl EvalServer {
     /// prefer [`EvalServer::shutdown`].
     pub fn kill(mut self) {
         self.stop_accepting();
-        self.conns.sever(Shutdown::Both);
-        self.conns.join_all();
-        self.accept = None;
+        self.shared.state.store(STATE_KILL, Ordering::SeqCst);
+        for h in self.io.drain(..) {
+            let _ = h.join();
+        }
     }
 
     fn drain(&mut self) {
         self.stop_accepting();
-        // acceptor is joined: the registry is stable from here on
-        self.conns.sever(Shutdown::Read);
-        self.conns.join_all();
+        // never downgrade a kill in progress
+        let _ = self.shared.state.compare_exchange(
+            STATE_RUNNING,
+            STATE_DRAIN,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+        for h in self.io.drain(..) {
+            let _ = h.join();
+        }
     }
 
     fn stop_accepting(&mut self) {
@@ -323,115 +841,9 @@ impl Drop for EvalServer {
     }
 }
 
-/// Per-connection reader: decode frames, resolve or enqueue, preserve
-/// order through the writer channel.
-fn handle_conn(
-    stream: TcpStream,
-    service: Arc<EvalService>,
-    deadline: Option<Duration>,
-) {
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(deadline);
-    let mut reader = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    // evaluations this connection has pending: inc'd by the reader when
-    // a ticket is queued, dec'd by the writer once its reply is sent
-    let in_flight = Arc::new(AtomicUsize::new(0));
-    let in_flight_w = Arc::clone(&in_flight);
-    let (tx, rx) = mpsc::channel::<Reply>();
-    let writer = thread::Builder::new()
-        .name("evalsrv-write".into())
-        .spawn(move || {
-            let mut out = stream;
-            for reply in rx {
-                let resp = match reply {
-                    Reply::Now(r) => r,
-                    // worker panics surface through the ticket as
-                    // classified execution-error feedback; shed tickets
-                    // become wire Overloaded errors with the hint
-                    Reply::Ticket(t) => {
-                        let fb = t.wait();
-                        in_flight_w.fetch_sub(1, Ordering::SeqCst);
-                        match t.shed_retry_after_ms() {
-                            Some(ms) => Response::Error {
-                                kind: ErrorKind::Overloaded,
-                                msg: match fb {
-                                    SystemFeedback::ExecutionError(m) => m,
-                                    _ => "request shed under load".into(),
-                                },
-                                retry_after_ms: ms,
-                            },
-                            None => Response::Feedback(fb),
-                        }
-                    }
-                };
-                if proto::write_frame(&mut out, &resp.encode()).is_err() {
-                    // client gone: remaining queued replies are simply
-                    // dropped — pending evaluations still complete on
-                    // the service's workers, their tickets just have no
-                    // reader anymore
-                    break;
-                }
-            }
-            let _ = out.shutdown(Shutdown::Both);
-        });
-    let Ok(writer) = writer else { return };
-
-    loop {
-        let payload = match proto::read_frame(&mut reader) {
-            Ok(Some(p)) => p,
-            Ok(None) => break, // clean close (or graceful drain)
-            Err(e)
-                if e.kind() == io::ErrorKind::WouldBlock
-                    || e.kind() == io::ErrorKind::TimedOut =>
-            {
-                // idle past the read deadline: reap the zombie — count
-                // it, answer best-effort, close
-                service.note_reaped_connection();
-                let secs = deadline.map_or(0, |d| d.as_secs());
-                let _ = tx.send(Reply::Now(Response::Error {
-                    kind: ErrorKind::Internal,
-                    msg: format!(
-                        "connection idle past the {secs}s read deadline; closing"
-                    ),
-                    retry_after_ms: 0,
-                }));
-                break;
-            }
-            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
-                // unrecoverable framing (bad length or checksum):
-                // classify, answer, close
-                let _ = tx.send(Reply::Now(Response::Error {
-                    kind: ErrorKind::Frame,
-                    msg: e.to_string(),
-                    retry_after_ms: 0,
-                }));
-                break;
-            }
-            Err(_) => break, // transport failure
-        };
-        let reply = match Request::decode(&payload) {
-            Ok(req) => serve_request(req, &service, &in_flight),
-            // version skew / undecodable payloads answer in place; the
-            // length prefix already resynchronized the stream
-            Err(e) => Reply::Now(Response::Error {
-                kind: e.wire_kind(),
-                msg: e.to_string(),
-                retry_after_ms: 0,
-            }),
-        };
-        if let Reply::Ticket(_) = &reply {
-            in_flight.fetch_add(1, Ordering::SeqCst);
-        }
-        if tx.send(reply).is_err() {
-            break;
-        }
-    }
-    drop(tx);
-    let _ = writer.join();
-}
+// ---------------------------------------------------------------------------
+// Request dispatch
+// ---------------------------------------------------------------------------
 
 fn bad_request(msg: String) -> Reply {
     Reply::Now(Response::Error {
@@ -441,10 +853,19 @@ fn bad_request(msg: String) -> Reply {
     })
 }
 
+/// Answer for an eval submitted past [`MAX_CONN_IN_FLIGHT`] (counted as
+/// a shed submission at the service).
+fn conn_cap_msg() -> String {
+    format!(
+        "connection has {MAX_CONN_IN_FLIGHT} evaluations in \
+         flight; drain replies before submitting more"
+    )
+}
+
 fn serve_request(
     req: Request,
     service: &Arc<EvalService>,
-    in_flight: &AtomicUsize,
+    in_flight: &Arc<AtomicUsize>,
 ) -> Reply {
     match req {
         Request::Ping => Reply::Now(Response::Pong),
@@ -456,20 +877,50 @@ fn serve_request(
                 service.note_shed_at_connection();
                 return Reply::Now(Response::Error {
                     kind: ErrorKind::Overloaded,
-                    msg: format!(
-                        "connection has {MAX_CONN_IN_FLIGHT} evaluations in \
-                         flight; drain replies before submitting more"
-                    ),
+                    msg: conn_cap_msg(),
                     retry_after_ms: 25,
                 });
             }
             match prepare_eval(q, service) {
                 // non-blocking admission: at the queue's high-water
                 // mark the service sheds lowest-priority work and the
-                // ticket resolves as Overloaded (see the writer)
-                Ok(req) => Reply::Ticket(service.try_submit(req)),
-                Err(reply) => reply,
+                // ticket resolves as Overloaded
+                Ok(req) => Reply::Ticket {
+                    guard: InFlightGuard::acquire(in_flight),
+                    ticket: service.try_submit(req),
+                },
+                Err(msg) => bad_request(msg),
             }
+        }
+        Request::EvalBatch(items) => {
+            // per-item admission: each candidate passes the in-flight
+            // cap, bad-request validation, and queue shedding on its
+            // own, so one bad/unlucky item cannot poison the batch
+            let slots = items
+                .into_iter()
+                .map(|q| {
+                    if in_flight.load(Ordering::SeqCst) >= MAX_CONN_IN_FLIGHT {
+                        service.note_shed_at_connection();
+                        return BatchSlot::Done(BatchItem::Error {
+                            kind: ErrorKind::Overloaded,
+                            msg: conn_cap_msg(),
+                            retry_after_ms: 25,
+                        });
+                    }
+                    match prepare_eval(q, service) {
+                        Ok(req) => BatchSlot::Ticket {
+                            guard: InFlightGuard::acquire(in_flight),
+                            ticket: service.try_submit(req),
+                        },
+                        Err(msg) => BatchSlot::Done(BatchItem::Error {
+                            kind: ErrorKind::BadRequest,
+                            msg,
+                            retry_after_ms: 0,
+                        }),
+                    }
+                })
+                .collect();
+            Reply::Batch(slots)
         }
         Request::RegisterSpec { name, spec } => {
             if name.len() > MAX_SPEC_NAME_BYTES
@@ -513,21 +964,22 @@ fn spec_info(service: &EvalService, id: crate::coordinator::SpecId) -> Response 
 
 /// Resolve the wire request into a service request: spec ref against
 /// the registry, scenario into a concrete [`App`](crate::apps::App).
+/// Errors are bad-request messages (the caller wraps them for the
+/// single or batch reply shape).
 fn prepare_eval(
     q: WireEvalRequest,
     service: &Arc<EvalService>,
-) -> Result<EvalRequest, Reply> {
+) -> Result<EvalRequest, String> {
     let spec_id = match &q.spec {
         SpecRef::Id(i) => service
             .registry()
             .by_index(*i as usize)
-            .ok_or_else(|| bad_request(format!("unknown machine spec id {i}")))?,
+            .ok_or_else(|| format!("unknown machine spec id {i}"))?,
         SpecRef::Name(n) => service
             .spec_id(n)
-            .ok_or_else(|| bad_request(format!("unknown machine spec '{n}'")))?,
+            .ok_or_else(|| format!("unknown machine spec '{n}'"))?,
     };
-    let app = apps::scenario(&q.scenario.app, &q.scenario.params)
-        .map_err(bad_request)?;
+    let app = apps::scenario(&q.scenario.app, &q.scenario.params)?;
     // budget the graph before any engine materializes it, summing every
     // step's launches — launch structure can vary per step (Solomonik
     // adds its reduce launch only on the last one), so pricing step 0
@@ -538,11 +990,11 @@ fn prepare_eval(
         let per_step: i64 = app.launches(step).iter().map(|l| l.num_points()).sum();
         total = total.saturating_add(per_step);
         if total > MAX_REQUEST_POINT_TASKS {
-            return Err(bad_request(format!(
+            return Err(format!(
                 "scenario '{}' describes over {total} point tasks, over the \
                  per-request budget of {MAX_REQUEST_POINT_TASKS}",
                 q.scenario.app
-            )));
+            ));
         }
     }
     Ok(EvalRequest {
@@ -552,4 +1004,121 @@ fn prepare_eval(
         mode: q.mode,
         priority: q.priority,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ExecMode;
+    use super::super::proto::Scenario;
+
+    fn service() -> Arc<EvalService> {
+        Arc::new(EvalService::new(2, 16))
+    }
+
+    fn wire_eval() -> WireEvalRequest {
+        WireEvalRequest {
+            spec: SpecRef::Name("p100_cluster".into()),
+            scenario: Scenario::named("circuit"),
+            dsl: crate::mapping::expert_dsl("circuit").unwrap().into(),
+            mode: ExecMode::Serialized,
+            priority: 128,
+        }
+    }
+
+    #[test]
+    fn in_flight_accounting_is_a_drop_guard_owned_by_the_reply() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let g = InFlightGuard::acquire(&counter);
+            assert_eq!(counter.load(Ordering::SeqCst), 1);
+            drop(g);
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+
+        // a reply FIFO torn down with queued work (the client vanished)
+        // releases every unit — single tickets and batch slots alike
+        let svc = service();
+        let mut fifo: VecDeque<Reply> = VecDeque::new();
+        fifo.push_back(serve_request(
+            Request::Eval(wire_eval()),
+            &svc,
+            &counter,
+        ));
+        fifo.push_back(serve_request(
+            Request::EvalBatch(vec![wire_eval(), wire_eval()]),
+            &svc,
+            &counter,
+        ));
+        assert_eq!(
+            counter.load(Ordering::SeqCst),
+            3,
+            "one single + two batch items in flight"
+        );
+        drop(fifo);
+        assert_eq!(
+            counter.load(Ordering::SeqCst),
+            0,
+            "teardown with queued replies must release every unit"
+        );
+
+        // slab-slot reuse: a recycled slot's accounting starts at zero
+        // and the first acquisition on it counts from there
+        let g = InFlightGuard::acquire(&counter);
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        drop(g);
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn resolved_replies_release_their_units_too() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let svc = service();
+        let reply = serve_request(Request::Eval(wire_eval()), &svc, &counter);
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        // wait out the ticket, then consume the reply the way the
+        // write path does
+        if let Reply::Ticket { ticket, .. } = &reply {
+            let _ = ticket.wait();
+        }
+        assert!(reply.ready());
+        match reply.into_response() {
+            Response::Feedback(fb) => assert!(fb.score() > 0.0),
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn per_connection_cap_applies_per_batch_item() {
+        let svc = service();
+        let counter = Arc::new(AtomicUsize::new(MAX_CONN_IN_FLIGHT));
+        match serve_request(Request::Eval(wire_eval()), &svc, &counter) {
+            Reply::Now(Response::Error { kind, retry_after_ms, .. }) => {
+                assert_eq!(kind, ErrorKind::Overloaded);
+                assert!(retry_after_ms > 0, "shed must carry a hint");
+            }
+            _ => panic!("eval over the cap must be answered in place"),
+        }
+        match serve_request(
+            Request::EvalBatch(vec![wire_eval(), wire_eval()]),
+            &svc,
+            &counter,
+        ) {
+            Reply::Batch(slots) => {
+                assert_eq!(slots.len(), 2);
+                for s in &slots {
+                    match s {
+                        BatchSlot::Done(BatchItem::Error { kind, .. }) => {
+                            assert_eq!(*kind, ErrorKind::Overloaded);
+                        }
+                        _ => panic!("batch items over the cap must shed"),
+                    }
+                }
+            }
+            _ => panic!("a batch request must answer as a batch"),
+        }
+        // refusals never touch the accounting
+        assert_eq!(counter.load(Ordering::SeqCst), MAX_CONN_IN_FLIGHT);
+    }
 }

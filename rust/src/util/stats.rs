@@ -53,6 +53,17 @@ pub fn mean_trajectory(series: &[Vec<f64>]) -> Vec<f64> {
         .collect()
 }
 
+/// Percentile by nearest-rank on a **pre-sorted** slice (`p` in
+/// `0.0..=100.0`); 0.0 for an empty slice.  The caller sorts once and
+/// reads many percentiles — what the loadtest latency report does.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// Running maximum ("best so far") of a trajectory.
 pub fn best_so_far(xs: &[f64]) -> Vec<f64> {
     let mut best = f64::NEG_INFINITY;
@@ -99,6 +110,17 @@ mod tests {
             best_so_far(&[1.0, 0.5, 2.0, 1.5]),
             vec![1.0, 1.0, 2.0, 2.0]
         );
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&xs, 50.0), 50.0);
+        assert_eq!(percentile_sorted(&xs, 99.0), 99.0);
+        assert_eq!(percentile_sorted(&xs, 99.9), 100.0);
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+        assert_eq!(percentile_sorted(&[7.0], 99.9), 7.0);
     }
 
     #[test]

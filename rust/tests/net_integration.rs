@@ -24,7 +24,7 @@ use mapperopt::net::proto::{
 };
 use mapperopt::net::{
     ChaosConfig, ChaosProxy, EvalServer, RemoteEvalClient, RetryPolicy,
-    Scenario, SpecRef,
+    Scenario, ServerConfig, SpecRef, WireEvalRequest,
 };
 use mapperopt::sim::ExecMode;
 
@@ -600,5 +600,227 @@ fn drop_order_never_hangs_tickets_or_clients() {
         );
     }
 
+    server.shutdown();
+}
+
+/// Satellite regression: dials past `max_connections` are answered with
+/// a classified `Overloaded` refusal, the stream is actually shut down
+/// (no half-open leak), the refusal is *counted* — and refusals never
+/// masquerade as request work in the accounting identity.
+#[test]
+fn connection_capacity_refusals_are_counted_classified_and_closed() {
+    let service = Arc::new(EvalService::new(2, 16));
+    let server = EvalServer::bind_with(
+        "127.0.0.1:0",
+        Arc::clone(&service),
+        ServerConfig { io_threads: 2, max_connections: 4, conn_deadline: None },
+    )
+    .expect("bind loopback");
+    let addr = server.addr().to_string();
+
+    // Fill the cap with live connections.  A served ping proves the
+    // acceptor's reservation happened (reserve precedes adoption), so
+    // after four pings the fifth dial *must* be over cap.
+    let mut held = Vec::new();
+    for i in 0..4 {
+        let mut s = TcpStream::connect(&addr).expect("dial under cap");
+        write_frame(&mut s, &Request::Ping.encode()).expect("ping");
+        let payload = read_frame(&mut s).expect("read").expect("open");
+        assert_eq!(Response::decode(&payload).expect("decode"), Response::Pong, "conn {i}");
+        held.push(s);
+    }
+
+    let mut extra = TcpStream::connect(&addr).expect("dial over cap");
+    let payload = read_frame(&mut extra)
+        .expect("refusal frame readable")
+        .expect("refusal frame, not silent close");
+    match Response::decode(&payload).expect("decode refusal") {
+        Response::Error { kind, msg, retry_after_ms } => {
+            assert_eq!(kind, ErrorKind::Overloaded, "refusals are retryable shed");
+            assert!(msg.contains("connection capacity"), "unclassified refusal: {msg}");
+            assert!(retry_after_ms > 0, "refusal must carry a backoff hint");
+        }
+        other => panic!("expected a refusal error, got {other:?}"),
+    }
+    assert!(
+        read_frame(&mut extra).expect("clean close").is_none(),
+        "the refused stream must be explicitly shut down"
+    );
+
+    let snap = service.snapshot();
+    assert_eq!(snap.refused_connections, 1, "the refusal must be counted");
+    // refused dials never reach the request path: the work identity is
+    // untouched (nothing submitted, nothing completed, nothing shed)
+    assert_eq!(snap.submitted, 0);
+    assert_eq!(snap.shed_requests, 0);
+    assert!(
+        service.summary().contains("1 refused connections"),
+        "summary must surface refusals:\n{}",
+        service.summary()
+    );
+
+    // the held connections were never disturbed by the refusal
+    for s in held.iter_mut() {
+        write_frame(s, &Request::Ping.encode()).expect("ping survivor");
+        let payload = read_frame(s).expect("read").expect("open");
+        assert_eq!(Response::decode(&payload).expect("decode"), Response::Pong);
+    }
+
+    // once capacity frees up, the count rides the wire Stats tail too
+    drop(held);
+    let mut probe = None;
+    for _ in 0..100 {
+        match RemoteEvalClient::connect(&addr) {
+            Ok(c) => match c.stats() {
+                Ok(s) => {
+                    probe = Some(s);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            },
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    let snap = probe.expect("a post-refusal probe connects once slots free");
+    assert_eq!(snap.refused_connections, 1, "refusals must survive the wire");
+
+    server.shutdown();
+}
+
+/// Satellite regression: idle connections past the deadline are
+/// answered with a *retryable* `Deadline` error before the close (so
+/// clients reconnect-and-resume instead of failing the campaign), and
+/// the reap is counted.
+#[test]
+fn idle_reaped_connections_answer_retryable_deadline_and_clients_resume() {
+    let service = Arc::new(EvalService::new(2, 16));
+    let server = EvalServer::bind_with(
+        "127.0.0.1:0",
+        Arc::clone(&service),
+        ServerConfig {
+            io_threads: 1,
+            max_connections: 64,
+            conn_deadline: Some(Duration::from_millis(150)),
+        },
+    )
+    .expect("bind loopback");
+    let addr = server.addr().to_string();
+
+    // raw wire: an idle connection gets a classified farewell frame
+    let mut raw = TcpStream::connect(&addr).expect("dial");
+    let payload = read_frame(&mut raw)
+        .expect("reap frame readable")
+        .expect("reap frame, not silent close");
+    match Response::decode(&payload).expect("decode reap") {
+        Response::Error { kind, msg, .. } => {
+            assert_eq!(kind, ErrorKind::Deadline, "reap must classify as Deadline");
+            assert!(kind.is_retryable(), "Deadline must be retryable, not fatal");
+            assert!(msg.contains("idle"), "reap message must explain itself: {msg}");
+        }
+        other => panic!("expected a deadline error, got {other:?}"),
+    }
+    assert!(read_frame(&mut raw).expect("clean close").is_none());
+    assert!(service.snapshot().reaped_connections >= 1, "the reap must be counted");
+
+    // high-level: a client parked past the deadline (an agent thinking
+    // between proposals) resumes transparently on its next evaluation
+    let client = RemoteEvalClient::connect(&addr).expect("connect");
+    let dsl = expert_dsl("circuit").expect("expert dsl");
+    let fb1 = client.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario::named("circuit"),
+        &dsl,
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert!(!fb1.is_error(), "warm evaluation failed: {}", fb1.line());
+
+    std::thread::sleep(Duration::from_millis(500)); // well past the deadline
+
+    let fb2 = client.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario::named("circuit"),
+        &dsl,
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert_eq!(fb1, fb2, "post-reap resume must be bit-identical (server cache)");
+    assert!(
+        client.reconnects() >= 1,
+        "the reap must surface as a reconnect, not an error"
+    );
+
+    drop(client);
+    server.shutdown();
+}
+
+/// Satellite differential: a batch of evaluations submitted as one
+/// `EvalBatch` wire frame resolves bit-identically to the same work
+/// sent frame-per-eval — batching is an I/O shape, never a semantic.
+#[test]
+fn batched_and_single_frame_submissions_are_bit_identical() {
+    let (_service, server, addr) = boot();
+
+    let batched = RemoteEvalClient::connect(&addr).expect("connect batching client");
+    let single = RemoteEvalClient::connect(&addr).expect("connect single client");
+    single.set_wire_batching(false);
+
+    let reqs: Vec<WireEvalRequest> = (0..6)
+        .map(|i| WireEvalRequest {
+            spec: SpecRef::Name("p100_cluster".into()),
+            scenario: Scenario::named("circuit"),
+            dsl: format!("Task * GPU;\nRegion * * GPU FBMEM;{}\n", "\n".repeat(i)),
+            mode: SER,
+            priority: PRIORITY_NORMAL,
+        })
+        .collect();
+
+    // one atomic submission — with batching on this coalesces on the wire
+    let tickets = batched.submit_batch(reqs.clone());
+    let batch_fbs: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+    assert!(
+        batched.batched_frames() >= 1,
+        "the batch path must actually be exercised"
+    );
+
+    // the same work, one frame per eval, on the batching-disabled client
+    for (q, fb_a) in reqs.iter().zip(&batch_fbs) {
+        assert!(!fb_a.is_error(), "batched item failed: {}", fb_a.line());
+        let fb_b = single.evaluate(
+            q.spec.clone(),
+            q.scenario.clone(),
+            &q.dsl,
+            q.mode,
+            q.priority,
+        );
+        assert_eq!(*fb_a, fb_b, "batched vs single-frame feedback diverged");
+        assert_eq!(
+            fb_a.score().to_bits(),
+            fb_b.score().to_bits(),
+            "scores must match to the bit"
+        );
+    }
+    assert_eq!(
+        single.batched_frames(),
+        0,
+        "the opted-out client must stay on single frames"
+    );
+
+    // and a full campaign through the default (batching-on) remote
+    // coordinator still reproduces the in-process trajectory
+    let local = Coordinator::new(MachineSpec::p100_cluster());
+    let want = local
+        .run_many("cannon", SearchAlgo::Trace, FeedbackConfig::FULL, 9, 1, 4)
+        .expect("local campaign");
+    let remote = Coordinator::remote(&addr, "p100_cluster", SER)
+        .expect("remote coordinator")
+        .run_many("cannon", SearchAlgo::Trace, FeedbackConfig::FULL, 9, 1, 4)
+        .expect("remote campaign");
+    for (r, l) in remote.iter().zip(&want) {
+        assert_eq!(r.trajectory(), l.trajectory(), "campaign trajectory diverged");
+    }
+
+    drop(batched);
+    drop(single);
     server.shutdown();
 }

@@ -16,8 +16,8 @@ use mapperopt::dsl::{MappingPolicy, TaskCtx};
 use mapperopt::feedback::SystemFeedback;
 use mapperopt::machine::{MachineSpec, MemKind, ProcKind, ProcSpace};
 use mapperopt::net::proto::{
-    read_frame, DecodeError, ErrorKind, Request, Response, Scenario, SpecRef,
-    WireEvalRequest, MAX_FRAME_LEN, WIRE_VERSION,
+    read_frame, BatchItem, DecodeError, ErrorKind, Request, Response, Scenario,
+    SpecRef, WireEvalRequest, MAX_BATCH_ITEMS, MAX_FRAME_LEN, WIRE_VERSION,
 };
 use mapperopt::net::{
     ChaosConfig, ChaosProxy, EvalServer, RemoteEvalClient, RetryPolicy,
@@ -624,32 +624,38 @@ fn rand_machine_spec(rng: &mut Rng) -> MachineSpec {
     m
 }
 
+fn rand_eval(rng: &mut Rng) -> WireEvalRequest {
+    WireEvalRequest {
+        spec: if rng.chance(0.5) {
+            SpecRef::Id(rng.below(1000) as u32)
+        } else {
+            SpecRef::Name(rand_string(rng))
+        },
+        scenario: Scenario {
+            app: rand_string(rng),
+            params: (0..rng.below(4))
+                .map(|_| (rand_string(rng), rng.range(-(1i64 << 40), 1i64 << 40)))
+                .collect(),
+        },
+        dsl: rand_string(rng),
+        mode: rand_mode(rng),
+        priority: rng.below(256) as u8,
+    }
+}
+
 fn rand_request(rng: &mut Rng) -> Request {
-    match rng.below(6) {
+    match rng.below(7) {
         0 => Request::Ping,
-        1 => Request::Eval(WireEvalRequest {
-            spec: if rng.chance(0.5) {
-                SpecRef::Id(rng.below(1000) as u32)
-            } else {
-                SpecRef::Name(rand_string(rng))
-            },
-            scenario: Scenario {
-                app: rand_string(rng),
-                params: (0..rng.below(4))
-                    .map(|_| (rand_string(rng), rng.range(-(1i64 << 40), 1i64 << 40)))
-                    .collect(),
-            },
-            dsl: rand_string(rng),
-            mode: rand_mode(rng),
-            priority: rng.below(256) as u8,
-        }),
+        1 => Request::Eval(rand_eval(rng)),
         2 => Request::RegisterSpec {
             name: rand_string(rng),
             spec: rand_machine_spec(rng),
         },
         3 => Request::GetSpec { name: rand_string(rng) },
         4 => Request::Stats,
-        _ => Request::Summary,
+        5 => Request::Summary,
+        // never empty: empty batches are rejected by the codec itself
+        _ => Request::EvalBatch((0..1 + rng.below(5)).map(|_| rand_eval(rng)).collect()),
     }
 }
 
@@ -677,6 +683,7 @@ fn rand_snapshot(rng: &mut Rng) -> StatsSnapshot {
         dirty_fallbacks: rng.below(100_000) as u64,
         shed_requests: rng.below(100_000) as u64,
         reaped_connections: rng.below(1000) as u64,
+        refused_connections: rng.below(1000) as u64,
         retries: rng.below(100_000) as u64,
         reconnects: rng.below(1000) as u64,
         specs: (0..rng.below(4))
@@ -697,10 +704,33 @@ fn rand_snapshot(rng: &mut Rng) -> StatsSnapshot {
     }
 }
 
+fn rand_batch_item(rng: &mut Rng) -> BatchItem {
+    if rng.chance(0.5) {
+        BatchItem::Feedback(rand_feedback(rng))
+    } else {
+        BatchItem::Error {
+            kind: if rng.chance(0.5) {
+                ErrorKind::Overloaded
+            } else {
+                ErrorKind::BadRequest
+            },
+            msg: rand_string(rng),
+            retry_after_ms: if rng.chance(0.5) {
+                0
+            } else {
+                rng.below(10_000) as u64
+            },
+        }
+    }
+}
+
 fn rand_response(rng: &mut Rng) -> Response {
-    match rng.below(6) {
+    match rng.below(7) {
         0 => Response::Pong,
         1 => Response::Feedback(rand_feedback(rng)),
+        6 => Response::FeedbackBatch(
+            (0..1 + rng.below(5)).map(|_| rand_batch_item(rng)).collect(),
+        ),
         2 => Response::SpecInfo {
             id: rng.below(1000) as u32,
             name: rand_string(rng),
@@ -810,6 +840,47 @@ fn property_wire_malformed_frames_classify_never_panic() {
         let err = read_frame(&mut std::io::Cursor::new(hostile))
             .expect_err("a hostile length prefix must classify");
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+    });
+}
+
+/// Batch frames are bounded before allocation: a hostile item-count
+/// prefix — zero, just past `MAX_BATCH_ITEMS`, or a multi-gigabyte
+/// claim — classifies as a decode error without the decoder ever
+/// reserving item storage, in both wire directions; and within-range
+/// counts that overrun the actual payload classify as truncation.
+#[test]
+fn property_wire_batch_counts_are_bounded_before_allocation() {
+    check(0xBA7C, env_cases(200), |rng: &mut Rng| {
+        let hostile: u32 = match rng.below(3) {
+            0 => 0,
+            1 => MAX_BATCH_ITEMS as u32 + 1 + rng.below(1 << 16) as u32,
+            _ => u32::MAX - rng.below(1 << 16) as u32,
+        };
+
+        // the count is the u32 right after [version][tag], either way
+        let mut req = Request::EvalBatch(vec![rand_eval(rng)]).encode();
+        req[2..6].copy_from_slice(&hostile.to_le_bytes());
+        match Request::decode(&req) {
+            Err(DecodeError::Invalid(_)) => {}
+            other => panic!("hostile request batch count {hostile}: {other:?}"),
+        }
+
+        let mut resp = Response::FeedbackBatch(vec![rand_batch_item(rng)]).encode();
+        resp[2..6].copy_from_slice(&hostile.to_le_bytes());
+        match Response::decode(&resp) {
+            Err(DecodeError::Invalid(_)) => {}
+            other => panic!("hostile response batch count {hostile}: {other:?}"),
+        }
+
+        // in-range overclaims run out of payload mid-item: truncation,
+        // never a panic or a partial decode
+        let claim = (2 + rng.below(MAX_BATCH_ITEMS - 1)) as u32;
+        let mut short = Request::EvalBatch(vec![rand_eval(rng)]).encode();
+        short[2..6].copy_from_slice(&claim.to_le_bytes());
+        match Request::decode(&short) {
+            Err(DecodeError::Truncated) => {}
+            other => panic!("overclaimed batch count {claim}: {other:?}"),
+        }
     });
 }
 
