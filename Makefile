@@ -22,6 +22,12 @@
 #                    ulimit, health-gated on zero unclassified errors
 #                    (the full 1000+-client run lives in bench-json,
 #                    which raises the fd limit)
+#   make fleet-smoke boot 2 in-process eval shards behind the
+#                    cache-affinity router and sustain 200 synthetic
+#                    clients through the front for a short window,
+#                    health-gated like loadtest-smoke (the full
+#                    {1,2,4}-shard scaling sweep lives in bench-json
+#                    as BENCH_fleet.json)
 #   make serve-smoke boot the TCP eval server on loopback, run two
 #                    concurrent remote campaigns against it, and assert
 #                    remote == in-process bit-identically (the example
@@ -39,7 +45,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 PROPTEST_CASES ?= 400
 
-.PHONY: build test verify test-props bench-smoke bench-json serve-smoke chaos-smoke loadtest-smoke fmt fmt-check clippy ci artifacts figures clean
+.PHONY: build test verify test-props bench-smoke bench-json serve-smoke chaos-smoke loadtest-smoke fleet-smoke fmt fmt-check clippy ci artifacts figures clean
 
 build:
 	$(CARGO) build --release
@@ -64,6 +70,9 @@ bench-json:
 	ulimit -n 8192 2>/dev/null; MAPPEROPT_SERVE_DEADLINE_S=300 \
 		$(CARGO) run --release -- loadtest --clients 1000 --duration 8 --json \
 		| tee BENCH_serve.json
+	ulimit -n 8192 2>/dev/null; MAPPEROPT_SERVE_DEADLINE_S=420 \
+		$(CARGO) run --release -- loadtest --router --shards 1,2,4 \
+		--clients 1000 --duration 8 --json | tee BENCH_fleet.json
 
 serve-smoke:
 	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release --example e2e_remote
@@ -74,6 +83,10 @@ chaos-smoke:
 loadtest-smoke:
 	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release -- loadtest \
 		--clients 200 --duration 3
+
+fleet-smoke:
+	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release -- loadtest \
+		--router --shards 2 --clients 200 --duration 3
 
 fmt:
 	$(CARGO) fmt --all

@@ -55,8 +55,9 @@ use crate::sim::{resolve_decisions, EvalPlan, ExecMode, PerfProfile};
 
 pub use service::{
     CacheConfig, Campaign, EvalRequest, EvalService, EvalTicket,
-    PriorityCounters, PrioritySnapshot, ServiceStats, SpecCounters, SpecId,
-    SpecRegistry, SpecSnapshot, StatsSnapshot, PRIORITY_NORMAL,
+    PriorityCounters, PrioritySnapshot, ServiceStats, ShardContribution,
+    ShardSnapshot, SpecCounters, SpecId, SpecRegistry, SpecSnapshot,
+    StatsSnapshot, PRIORITY_NORMAL, SHARD_DEAD, SHARD_DRAINING, SHARD_UP,
 };
 
 /// Which search algorithm to run (Section 5's two optimizers).

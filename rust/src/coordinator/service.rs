@@ -690,6 +690,59 @@ pub struct PrioritySnapshot {
     pub queued: u64,
 }
 
+/// [`ShardSnapshot::state`]: the shard is routable.
+pub const SHARD_UP: u8 = 0;
+/// [`ShardSnapshot::state`]: leaving — no new work, in-flight settling.
+pub const SHARD_DRAINING: u8 = 1;
+/// [`ShardSnapshot::state`]: unreachable; its ring keys re-routed.
+pub const SHARD_DEAD: u8 = 2;
+
+/// One fleet member's counters in an aggregated [`StatsSnapshot`] (the
+/// per-shard tail a router appends so fleet-level sums never hide which
+/// shard is cold, draining, or shedding).  A single server's snapshot
+/// carries an empty shard list.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ShardSnapshot {
+    /// The shard's backend address (fleet-unique).
+    pub addr: String,
+    /// [`SHARD_UP`] / [`SHARD_DRAINING`] / [`SHARD_DEAD`].
+    pub state: u8,
+    /// Evaluation items the router dispatched to this shard (router-side
+    /// count; includes work later re-routed off a dead shard).
+    pub routed: u64,
+    pub evals: u64,
+    pub cache_hits: u64,
+    pub decision_hits: u64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed_requests: u64,
+    pub max_queue_depth: u64,
+}
+
+impl ShardSnapshot {
+    /// Cache hit rate of this shard alone (see
+    /// [`StatsSnapshot::cache_hit_rate`]).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let denom = self.evals + self.cache_hits;
+        if denom == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / denom as f64
+        }
+    }
+}
+
+/// One member's contribution to [`StatsSnapshot::aggregate_fleet`]:
+/// the router-side identity/counters plus the snapshot fetched from
+/// the shard itself (default/zeroed when the shard is unreachable).
+#[derive(Debug, Clone, Default)]
+pub struct ShardContribution {
+    pub addr: String,
+    pub state: u8,
+    pub routed: u64,
+    pub snapshot: StatsSnapshot,
+}
+
 /// Plain-data snapshot of [`ServiceStats`] (every counter loaded once),
 /// taken by [`EvalService::snapshot`] — what the wire protocol ships to
 /// remote clients, and a convenient local view for tests.
@@ -741,6 +794,115 @@ pub struct StatsSnapshot {
     pub specs: Vec<SpecSnapshot>,
     /// Per-priority counters, ascending priority.
     pub priorities: Vec<PrioritySnapshot>,
+    /// Fleet tail: per-shard counters when this snapshot is a router's
+    /// aggregate ([`StatsSnapshot::aggregate_fleet`]); empty for a
+    /// single server.  Rides at the end of the wire payload under the
+    /// zero-fill decode rule, like every tail section before it.
+    pub shards: Vec<ShardSnapshot>,
+}
+
+impl StatsSnapshot {
+    /// Fraction of completed evaluations served from a cache:
+    /// `cache_hits / (evals + cache_hits)` (sheds excluded — they never
+    /// reached either path).  `0.0` when nothing completed.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let denom = self.evals + self.cache_hits;
+        if denom == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / denom as f64
+        }
+    }
+
+    /// Fold per-shard snapshots into one fleet snapshot: every counter
+    /// is a saturating sum of the members', per-spec and per-priority
+    /// sections merge by key (first-seen spec order / ascending
+    /// priority), `max_queue_depth` is the fleet-wide *max* (sums would
+    /// fabricate a depth no queue ever had), `batch_occupancy` is the
+    /// evals-weighted mean, and the members themselves are preserved in
+    /// the [`StatsSnapshot::shards`] tail — so the sum-of-shards
+    /// identities (`fleet.evals == Σ shard.evals`, …) hold by
+    /// construction and stay checkable from the tail alone.
+    pub fn aggregate_fleet(parts: &[ShardContribution]) -> StatsSnapshot {
+        let mut out = StatsSnapshot::default();
+        let mut occupancy_weighted = 0.0f64;
+        let mut occupancy_weight = 0u64;
+        let mut prio_by_level: Vec<PrioritySnapshot> = Vec::new();
+        for part in parts {
+            let s = &part.snapshot;
+            out.evals = out.evals.saturating_add(s.evals);
+            out.cache_hits = out.cache_hits.saturating_add(s.cache_hits);
+            out.decision_hits = out.decision_hits.saturating_add(s.decision_hits);
+            out.point_tasks = out.point_tasks.saturating_add(s.point_tasks);
+            out.eval_ns = out.eval_ns.saturating_add(s.eval_ns);
+            out.submitted = out.submitted.saturating_add(s.submitted);
+            out.completed = out.completed.saturating_add(s.completed);
+            out.plan_builds = out.plan_builds.saturating_add(s.plan_builds);
+            out.plan_hits = out.plan_hits.saturating_add(s.plan_hits);
+            out.policy_compiles =
+                out.policy_compiles.saturating_add(s.policy_compiles);
+            out.policy_hits = out.policy_hits.saturating_add(s.policy_hits);
+            out.evicted_feedback =
+                out.evicted_feedback.saturating_add(s.evicted_feedback);
+            out.evicted_plans = out.evicted_plans.saturating_add(s.evicted_plans);
+            out.evicted_policies =
+                out.evicted_policies.saturating_add(s.evicted_policies);
+            out.evicted_decisions =
+                out.evicted_decisions.saturating_add(s.evicted_decisions);
+            out.max_queue_depth = out.max_queue_depth.max(s.max_queue_depth);
+            out.delta_evals = out.delta_evals.saturating_add(s.delta_evals);
+            out.spliced_point_tasks =
+                out.spliced_point_tasks.saturating_add(s.spliced_point_tasks);
+            out.dirty_fallbacks =
+                out.dirty_fallbacks.saturating_add(s.dirty_fallbacks);
+            out.shed_requests = out.shed_requests.saturating_add(s.shed_requests);
+            out.reaped_connections =
+                out.reaped_connections.saturating_add(s.reaped_connections);
+            out.refused_connections =
+                out.refused_connections.saturating_add(s.refused_connections);
+            out.retries = out.retries.saturating_add(s.retries);
+            out.reconnects = out.reconnects.saturating_add(s.reconnects);
+            occupancy_weighted += s.batch_occupancy * s.evals as f64;
+            occupancy_weight = occupancy_weight.saturating_add(s.evals);
+            for sp in &s.specs {
+                match out.specs.iter_mut().find(|o| o.name == sp.name) {
+                    Some(o) => {
+                        o.evals = o.evals.saturating_add(sp.evals);
+                        o.cache_hits = o.cache_hits.saturating_add(sp.cache_hits);
+                    }
+                    None => out.specs.push(sp.clone()),
+                }
+            }
+            for p in &s.priorities {
+                match prio_by_level.iter_mut().find(|o| o.priority == p.priority) {
+                    Some(o) => {
+                        o.submitted = o.submitted.saturating_add(p.submitted);
+                        o.queued = o.queued.saturating_add(p.queued);
+                        o.max_depth = o.max_depth.max(p.max_depth);
+                    }
+                    None => prio_by_level.push(p.clone()),
+                }
+            }
+            out.shards.push(ShardSnapshot {
+                addr: part.addr.clone(),
+                state: part.state,
+                routed: part.routed,
+                evals: s.evals,
+                cache_hits: s.cache_hits,
+                decision_hits: s.decision_hits,
+                submitted: s.submitted,
+                completed: s.completed,
+                shed_requests: s.shed_requests,
+                max_queue_depth: s.max_queue_depth,
+            });
+        }
+        if occupancy_weight > 0 {
+            out.batch_occupancy = occupancy_weighted / occupancy_weight as f64;
+        }
+        prio_by_level.sort_by_key(|p| p.priority);
+        out.priorities = prio_by_level;
+        out
+    }
 }
 
 /// One optimization campaign batch: `runs` seeded repetitions of an
@@ -1418,6 +1580,9 @@ impl EvalService {
             reconnects: 0,
             specs,
             priorities,
+            // a single server is not a fleet; routers fill this tail
+            // via StatsSnapshot::aggregate_fleet
+            shards: Vec::new(),
         }
     }
 

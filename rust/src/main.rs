@@ -11,6 +11,8 @@
 //!   bench-suite               — quick end-to-end status of all benchmarks
 //!   serve --addr HOST:PORT    — put the eval service behind a TCP
 //!                               listener (the wire protocol of net/)
+//!   route --shards A,B,...    — front N `serve` shards behind one
+//!                               address with the cache-affinity router
 //!   chaos-smoke               — run a remote campaign through the seeded
 //!                               fault-injecting chaos proxy and assert it
 //!                               is bit-identical to a clean local run
@@ -44,8 +46,8 @@ use mapperopt::harness::{self, ExpParams};
 use mapperopt::machine::MachineSpec;
 use mapperopt::mapping::expert_dsl;
 use mapperopt::net::{
-    loadtest, ChaosConfig, ChaosProxy, EvalServer, LoadtestConfig, RetryPolicy,
-    ServerConfig,
+    loadtest, ChaosConfig, ChaosProxy, EvalRouter, EvalServer, LoadtestConfig,
+    RetryPolicy, ServerConfig,
 };
 use mapperopt::sim::ExecMode;
 use mapperopt::util::cli::Args;
@@ -64,6 +66,9 @@ fn main() -> ExitCode {
 
     if cmd == "serve" {
         return cmd_serve(&args, workers);
+    }
+    if cmd == "route" {
+        return cmd_route(&args);
     }
     if cmd == "chaos-smoke" {
         return cmd_chaos_smoke(&args, workers);
@@ -149,13 +154,16 @@ fn main() -> ExitCode {
 
 fn usage() {
     println!(
-        "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite|serve|chaos-smoke|loadtest>\n\
+        "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite|serve|route|chaos-smoke|loadtest>\n\
          flags: --app NAME --mapper FILE --algo trace|opro \
          --feedback system|explain|full|profile --iters N --runs N --seed S \
-         --workers N --remote HOST:PORT --addr HOST:PORT (serve/loadtest)\n\
+         --workers N --remote HOST:PORT --addr HOST:PORT (serve/route/loadtest)\n\
+         route: --shards A,B,... (comma-separated serve addresses; each is \
+         ping-probed) --addr HOST:PORT (front, default 127.0.0.1:9378)\n\
          loadtest: --clients N (1000) --duration SECS (10) --rate R (open loop; \
          default closed) --pipeline K (1) --batch K (1) --distinct N (8) \
-         --generators N (auto) --json\n\
+         --generators N (auto) --json --router (fleet sweep; --shards 1,2,4 \
+         shard *counts*, in-process)\n\
          env:   MAPPEROPT_RETRY_BUDGET    remote client transmission attempts per request (default 4)\n\
          \x20      MAPPEROPT_QUEUE_HIGH_WATER eval queue depth that starts shedding lowest-priority\n\
          \x20                                 work with Overloaded responses (default: queue capacity)\n\
@@ -169,7 +177,10 @@ fn usage() {
          \x20      MAPPEROPT_WIRE_BATCH       client-side EvalBatch frame coalescing; 0 disables\n\
          \x20                                 (default on, bit-identical either way)\n\
          \x20      MAPPEROPT_SERVE_DEADLINE_S chaos-smoke/serve-smoke/loadtest self-kill deadline\n\
-         \x20                                 in seconds (default 180)"
+         \x20                                 in seconds (default 180)\n\
+         \x20      MAPPEROPT_SHARDS           default --shards list for `route` (comma-separated\n\
+         \x20                                 serve addresses)\n\
+         \x20      MAPPEROPT_ROUTER_ADDR      default front address for `route` (127.0.0.1:9378)"
     );
 }
 
@@ -199,6 +210,48 @@ fn cmd_loadtest(args: &Args, workers: usize) -> ExitCode {
         distinct: args.usize("distinct", 8),
         generators: args.usize("generators", 0),
     };
+
+    // --router: the fleet sweep — boot in-process shard fleets of each
+    // requested size behind an EvalRouter and drive the identical load
+    // at each (plus a bare-server baseline); see net::loadtest::run_fleet
+    if args.flag("router") {
+        let counts: Vec<usize> = args
+            .get("shards")
+            .map(String::as_str)
+            .unwrap_or("1,2,4")
+            .split(',')
+            .filter_map(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .collect();
+        if counts.is_empty() {
+            eprintln!("loadtest: --shards wants a comma-separated count list");
+            return ExitCode::from(2);
+        }
+        if !args.flag("json") {
+            println!(
+                "loadtest: fleet sweep over {counts:?} shard(s), {} clients, \
+                 {:?} window each",
+                cfg.clients, cfg.duration
+            );
+        }
+        let fleet = match loadtest::run_fleet(&counts, &cfg, workers) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("loadtest: fleet sweep failed to boot: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        if args.flag("json") {
+            println!("{}", fleet.json());
+        } else {
+            print!("{}", fleet.text());
+        }
+        if fleet.healthy() {
+            return ExitCode::SUCCESS;
+        }
+        eprintln!("loadtest: FAILED — a sweep point served no healthy load");
+        return ExitCode::FAILURE;
+    }
 
     // without --addr, boot an in-process server sized so the requested
     // client count fits under the connection cap (the refusal path is
@@ -301,6 +354,55 @@ fn cmd_serve(args: &Args, workers: usize) -> ExitCode {
         }
         Err(e) => {
             eprintln!("cannot bind {addr}: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// `mapperopt route --shards A,B,... [--addr HOST:PORT]`: front N
+/// running `serve` shards behind one address with the cache-affinity
+/// [`EvalRouter`] (see `net::router`).  `--shards` (or
+/// `MAPPEROPT_SHARDS`) is a comma-separated list of shard addresses,
+/// each probed at bind; `--addr` (or `MAPPEROPT_ROUTER_ADDR`) is the
+/// front address, default `127.0.0.1:9378`.
+fn cmd_route(args: &Args) -> ExitCode {
+    let env_shards = std::env::var("MAPPEROPT_SHARDS").ok();
+    let shards: Vec<String> = args
+        .get("shards")
+        .map(String::as_str)
+        .or(env_shards.as_deref())
+        .unwrap_or("")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    if shards.is_empty() {
+        eprintln!(
+            "route: no shards — pass --shards A,B,... or set MAPPEROPT_SHARDS"
+        );
+        return ExitCode::from(2);
+    }
+    let env_addr = std::env::var("MAPPEROPT_ROUTER_ADDR").ok();
+    let addr = args
+        .get("addr")
+        .map(String::as_str)
+        .or(env_addr.as_deref())
+        .unwrap_or("127.0.0.1:9378");
+    match EvalRouter::bind(addr, &shards) {
+        Ok(router) => {
+            println!(
+                "eval router listening on {} fronting {} shard(s): {} \
+                 (Ctrl-C to stop)",
+                router.addr(),
+                shards.len(),
+                shards.join(", ")
+            );
+            router.join();
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("cannot front the fleet on {addr}: {e}");
             ExitCode::from(2)
         }
     }

@@ -49,6 +49,19 @@
 //! (`BadRequest` / `Internal`) are never retried.  [`RemoteEvalClient::stats`]
 //! overlays this client's `retries` / `reconnects` counters onto the
 //! server's snapshot.
+//!
+//! # Fleet fronts
+//!
+//! The client neither knows nor cares whether [`RemoteEvalClient::peer`]
+//! is a single [`EvalServer`](super::EvalServer) or an
+//! [`EvalRouter`](super::EvalRouter) fronting a sharded fleet — the
+//! wire protocol is identical.  The fleet properties ride on machinery
+//! this module already has: a shard dying mid-request surfaces as a
+//! retryable `Overloaded` answer (the router's failover), which the
+//! retry path replays onto the re-formed ring exactly like a shed; and
+//! `stats()` against a router returns the *fleet-aggregate* snapshot,
+//! per-shard contributions included in
+//! [`StatsSnapshot::shards`](crate::coordinator::StatsSnapshot).
 
 use std::collections::VecDeque;
 use std::io;
@@ -261,6 +274,7 @@ pub struct RemoteEvalClient {
     tx: Mutex<mpsc::Sender<Event>>,
     shared: Arc<Shared>,
     policy: RetryPolicy,
+    peer: SocketAddr,
     manager: Mutex<Option<thread::JoinHandle<()>>>,
 }
 
@@ -315,8 +329,15 @@ impl RemoteEvalClient {
             tx: Mutex::new(tx),
             shared,
             policy,
+            peer,
             manager: Mutex::new(Some(manager)),
         })
+    }
+
+    /// The resolved address this client dials (and redials) — a single
+    /// server or a fleet's router front, indistinguishably.
+    pub fn peer(&self) -> SocketAddr {
+        self.peer
     }
 
     /// Total re-transmissions this client has performed.

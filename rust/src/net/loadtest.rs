@@ -32,14 +32,25 @@
 //! latency plus the server's own [`StatsSnapshot`] (shed / refused /
 //! reaped counters), and serializes to one JSON object for
 //! `BENCH_serve.json`.
+//!
+//! `--router` switches to the **fleet sweep** ([`run_fleet`]): for each
+//! shard count it boots that many in-process `EvalServer` shards plus
+//! an [`EvalRouter`](super::EvalRouter) front, drives the same client
+//! load through the router, and reports per-point throughput, tail
+//! latency, and fleet-aggregate cache hit rate (plus per-shard routed
+//! counts from the stats tail) — the near-linear-scaling evidence of
+//! `BENCH_fleet.json`.  A `shards = 1, via_router = false` baseline
+//! point drives one bare server with the identical load so the scaling
+//! ratio has a denominator.
 
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{StatsSnapshot, PRIORITY_NORMAL};
+use crate::coordinator::{EvalService, StatsSnapshot, PRIORITY_NORMAL};
 use crate::sim::ExecMode;
 use crate::util::stats::percentile_sorted;
 
@@ -48,6 +59,8 @@ use super::proto::{
     self, BatchItem, ErrorKind, FrameStep, Request, Response, Scenario, SpecRef,
     WireEvalRequest,
 };
+use super::router::EvalRouter;
+use super::server::{EvalServer, ServerConfig};
 
 /// Knobs of one loadtest run (see module docs; defaults match
 /// `mapperopt loadtest` with no flags).
@@ -593,4 +606,228 @@ pub fn run(addr: SocketAddr, cfg: &LoadtestConfig) -> LoadtestReport {
         p999_ms: percentile_sorted(&tally.latencies_ms, 99.9),
         server,
     }
+}
+
+/// One point of the fleet sweep: the same client load driven at a
+/// baseline bare server (`via_router = false`) or at an
+/// [`EvalRouter`] fronting `shards` in-process shards.
+#[derive(Debug, Clone)]
+pub struct FleetPoint {
+    pub shards: usize,
+    pub via_router: bool,
+    /// In-flight requests the router failed over off dead shards
+    /// (zero in a healthy sweep).
+    pub rerouted: u64,
+    pub report: LoadtestReport,
+}
+
+impl FleetPoint {
+    fn label(&self) -> String {
+        if self.via_router {
+            format!("router x{}", self.shards)
+        } else {
+            "single server (no router)".to_string()
+        }
+    }
+
+    /// Fleet-aggregate cache hit rate (router points aggregate the
+    /// shard snapshots; the baseline is the server's own).
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.report.server.as_ref().map(StatsSnapshot::cache_hit_rate).unwrap_or(0.0)
+    }
+
+    fn json(&self) -> String {
+        let mut per_shard = String::new();
+        if let Some(sv) = &self.report.server {
+            for (i, sh) in sv.shards.iter().enumerate() {
+                if i > 0 {
+                    per_shard.push(',');
+                }
+                per_shard.push_str(&format!(
+                    "{{\"addr\":\"{}\",\"state\":{},\"routed\":{},\
+                     \"evals\":{},\"cache_hits\":{},\"hit_rate\":{:.4}}}",
+                    sh.addr,
+                    sh.state,
+                    sh.routed,
+                    sh.evals,
+                    sh.cache_hits,
+                    sh.cache_hit_rate(),
+                ));
+            }
+        }
+        let (evals, hits) = self
+            .report
+            .server
+            .as_ref()
+            .map(|s| (s.evals, s.cache_hits))
+            .unwrap_or_default();
+        format!(
+            "{{\"shards\":{},\"via_router\":{},\"clients\":{},\
+             \"completed\":{},\"shed\":{},\"errors\":{},\"rerouted\":{},\
+             \"elapsed_s\":{:.3},\"throughput\":{:.1},\"p50_ms\":{:.3},\
+             \"p99_ms\":{:.3},\"p999_ms\":{:.3},\"fleet_evals\":{},\
+             \"fleet_cache_hits\":{},\"fleet_cache_hit_rate\":{:.4},\
+             \"per_shard\":[{}]}}",
+            self.shards,
+            self.via_router,
+            self.report.clients,
+            self.report.completed,
+            self.report.shed,
+            self.report.errors,
+            self.rerouted,
+            self.report.elapsed_s,
+            self.report.throughput,
+            self.report.p50_ms,
+            self.report.p99_ms,
+            self.report.p999_ms,
+            evals,
+            hits,
+            self.cache_hit_rate(),
+            per_shard,
+        )
+    }
+}
+
+/// The whole sweep (the `BENCH_fleet.json` object).
+#[derive(Debug, Clone, Default)]
+pub struct FleetReport {
+    pub points: Vec<FleetPoint>,
+}
+
+impl FleetReport {
+    /// Human-readable sweep table with per-shard routing balance.
+    pub fn text(&self) -> String {
+        let base = self
+            .points
+            .iter()
+            .find(|p| !p.via_router)
+            .map(|p| p.report.throughput)
+            .unwrap_or(0.0);
+        let mut s = String::from(
+            "fleet sweep (same client load per point):\n",
+        );
+        for p in &self.points {
+            let scale = if base > 0.0 {
+                format!(" ({:.2}x baseline)", p.report.throughput / base)
+            } else {
+                String::new()
+            };
+            s.push_str(&format!(
+                "  {:26} {:>9.1} evals/s{}  p50 {:.2} ms  p99 {:.2} ms  \
+                 p99.9 {:.2} ms  hit rate {:.1}%  rerouted {}\n",
+                p.label(),
+                p.report.throughput,
+                scale,
+                p.report.p50_ms,
+                p.report.p99_ms,
+                p.report.p999_ms,
+                100.0 * p.cache_hit_rate(),
+                p.rerouted,
+            ));
+            if let Some(sv) = &p.report.server {
+                for sh in &sv.shards {
+                    s.push_str(&format!(
+                        "      shard {:21} routed {:>7}  evals {:>7}  \
+                         hit rate {:.1}%\n",
+                        sh.addr,
+                        sh.routed,
+                        sh.evals,
+                        100.0 * sh.cache_hit_rate(),
+                    ));
+                }
+            }
+        }
+        s
+    }
+
+    /// One JSON object (the `BENCH_fleet.json` line).
+    pub fn json(&self) -> String {
+        let points: Vec<String> =
+            self.points.iter().map(FleetPoint::json).collect();
+        format!(
+            "{{\"bench\":\"fleet_loadtest\",\"points\":[{}]}}",
+            points.join(",")
+        )
+    }
+
+    /// CI gate: every point actually served its load (no hard errors,
+    /// nearly all clients connected, something completed).
+    pub fn healthy(&self) -> bool {
+        !self.points.is_empty()
+            && self.points.iter().all(|p| {
+                p.report.completed > 0
+                    && p.report.errors == 0
+                    && p.report.connected
+                        >= p.report.clients - p.report.clients / 10
+            })
+    }
+}
+
+/// Boot one in-process shard sized for the sweep's client count.
+fn boot_shard(
+    workers: usize,
+    max_connections: usize,
+) -> io::Result<EvalServer> {
+    let service = Arc::new(if workers > 0 {
+        EvalService::new(workers, 8 * workers)
+    } else {
+        EvalService::with_defaults()
+    });
+    EvalServer::bind_with(
+        "127.0.0.1:0",
+        service,
+        ServerConfig { max_connections, ..ServerConfig::default() },
+    )
+}
+
+/// The fleet sweep: a bare-server baseline point, then one router
+/// point per entry of `shard_counts` — identical client load each
+/// time, fresh shards each point (no cross-point cache warmth).
+/// `workers` sizes each shard's eval pool (`0` = host default).
+pub fn run_fleet(
+    shard_counts: &[usize],
+    cfg: &LoadtestConfig,
+    workers: usize,
+) -> io::Result<FleetReport> {
+    let conn_cap = cfg.clients + 64;
+    let mut points = Vec::new();
+
+    // the denominator: one bare server, no router hop
+    {
+        let server = boot_shard(workers, conn_cap)?;
+        let report = run(server.addr(), cfg);
+        server.shutdown();
+        points.push(FleetPoint {
+            shards: 1,
+            via_router: false,
+            rerouted: 0,
+            report,
+        });
+    }
+
+    for &n in shard_counts {
+        let n = n.max(1);
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            // each router backend lane funnels through the shard's
+            // regular connection admission, so the shard cap only
+            // needs the router's own connections plus slack
+            shards.push(boot_shard(workers, conn_cap)?);
+        }
+        let addrs: Vec<String> =
+            shards.iter().map(|s| s.addr().to_string()).collect();
+        let router = EvalRouter::bind_with(
+            "127.0.0.1:0",
+            &addrs,
+            ServerConfig { max_connections: conn_cap, ..ServerConfig::default() },
+        )?;
+        let report = run(router.addr(), cfg);
+        let rerouted = router.rerouted();
+        router.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+        points.push(FleetPoint { shards: n, via_router: true, rerouted, report });
+    }
+    Ok(FleetReport { points })
 }

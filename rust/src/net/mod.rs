@@ -119,15 +119,61 @@
 //! [`EvalTicket`](crate::coordinator::EvalTicket)s in arrival order
 //! while the evaluations themselves proceed concurrently on the
 //! service's worker pool).
+//!
+//! # The sharded fleet (PR 9)
+//!
+//! [`router::EvalRouter`] fronts N `EvalServer` shards behind one
+//! address speaking the *same* wire protocol, so a campaign scales
+//! past one server without clients changing a line:
+//!
+//! * **Cache-affinity routing.** Each eval's semantic identity (spec
+//!   ref, scenario, DSL, mode — *not* priority) is hashed with the
+//!   shared FNV-1a primitive ([`router::affinity_key`]) onto a
+//!   consistent-hash ring ([`router::HashRing`],
+//!   [`router::RING_VNODES`] virtual nodes per shard).  The eval cache
+//!   key and the routing key bind the same fields, so identical and
+//!   re-submitted mappers always land on the shard already warm for
+//!   them — fleet-aggregate hit rates stay within a few points of a
+//!   single server's — and a membership change moves ~1/N of the
+//!   keyspace, never a full reshuffle.
+//! * **Replicated registries.** `RegisterSpec` fans out to every live
+//!   shard and answers only on unanimous ack;
+//!   [`router::EvalRouter::join_shard`] replays the acked log into a
+//!   joiner before it takes traffic.  Spec *ids* stay aligned because
+//!   shards preregister built-ins in the same order and router-mediated
+//!   registrations apply fleet-wide; concurrent registrations racing on
+//!   different front connections could still skew ids — clients that
+//!   must survive that pin [`SpecRef::Name`] refs.
+//! * **Membership & failover.** Shards are `up` / `draining` / `dead`
+//!   ([`crate::coordinator::ShardSnapshot`] states).
+//!   [`router::EvalRouter::leave_shard`] drains gracefully (no new
+//!   work, in-flight settles).  A severed backend link answers its
+//!   in-flight requests with *retryable* `Overloaded` errors, so the
+//!   client's existing [`client::RetryPolicy`] replays them onto the
+//!   rebuilt ring — failover rides the same path as overload and
+//!   chaos, and purity keeps the replayed answers bit-identical.
+//! * **Fleet observability.** `Stats` aggregates per-shard snapshots
+//!   ([`StatsSnapshot::aggregate_fleet`](crate::coordinator::StatsSnapshot::aggregate_fleet)):
+//!   counters sum, and per-shard rates travel in the snapshot's fleet
+//!   tail under the zero-fill decode rule (older payloads decode with
+//!   an empty shard list).  `Summary` concatenates per-shard blocks.
+//!
+//! Capacity note: each shard is reached through
+//! `io_threads x BACKEND_LANES` router connections, each subject to the
+//! server's per-connection in-flight cap — the funnel bound is
+//! `io_threads * 4 *` [`server::MAX_CONN_IN_FLIGHT`] concurrent evals
+//! per shard, far above what the loadtest needs.
 
 pub mod chaos;
 pub mod client;
 pub mod loadtest;
 pub mod proto;
+pub mod router;
 pub mod server;
 
 pub use chaos::{ChaosConfig, ChaosProxy, ChaosStats};
 pub use client::{RemoteEvalClient, RemoteTicket, RetryPolicy};
 pub use loadtest::{LoadtestConfig, LoadtestReport};
 pub use proto::{Scenario, SpecRef, WireEvalRequest, WIRE_VERSION};
+pub use router::{affinity_key, EvalRouter, HashRing, RING_VNODES};
 pub use server::{EvalServer, ServerConfig};

@@ -14,7 +14,9 @@
 use std::fmt;
 use std::io::{self, Read, Write};
 
-use crate::coordinator::{PrioritySnapshot, SpecSnapshot, StatsSnapshot};
+use crate::coordinator::{
+    PrioritySnapshot, ShardSnapshot, SpecSnapshot, StatsSnapshot,
+};
 use crate::feedback::SystemFeedback;
 use crate::machine::MachineSpec;
 use crate::sim::{CritEntry, ExecMode, PerfProfile};
@@ -772,6 +774,7 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
         reconnects,
         specs,
         priorities,
+        shards,
     } = s;
     e.u64(*evals);
     e.u64(*cache_hits);
@@ -817,6 +820,39 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
     e.u64(*retries);
     e.u64(*reconnects);
     e.u64(*refused_connections);
+    // the fleet tail (PR 9): per-shard sections of a router-aggregated
+    // snapshot, after every scalar tail field.  Elided entirely when
+    // empty, so a single server's snapshot stays byte-identical with
+    // pre-fleet peers; when present, a pre-fleet decoder fails with a
+    // clean Trailing error and this decoder zero-fills its absence.
+    if shards.is_empty() {
+        return;
+    }
+    e.u32(shards.len() as u32);
+    for sh in shards {
+        let ShardSnapshot {
+            addr,
+            state,
+            routed,
+            evals,
+            cache_hits,
+            decision_hits,
+            submitted,
+            completed,
+            shed_requests,
+            max_queue_depth,
+        } = sh;
+        e.str(addr);
+        e.u8(*state);
+        e.u64(*routed);
+        e.u64(*evals);
+        e.u64(*cache_hits);
+        e.u64(*decision_hits);
+        e.u64(*submitted);
+        e.u64(*completed);
+        e.u64(*shed_requests);
+        e.u64(*max_queue_depth);
+    }
 }
 
 fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
@@ -871,6 +907,28 @@ fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
     let retries = tail()?;
     let reconnects = tail()?;
     let refused_connections = tail()?;
+    // the fleet tail: a pre-fleet payload simply ends here (no shard
+    // section, zero-fill rule → empty fleet); once the section is
+    // present it decodes totally, so truncation inside it still errors
+    let mut shards = Vec::new();
+    if d.remaining() > 0 {
+        let nshards = d.u32()? as usize;
+        shards.reserve(nshards.min(1024));
+        for _ in 0..nshards {
+            shards.push(ShardSnapshot {
+                addr: d.str()?,
+                state: d.u8()?,
+                routed: d.u64()?,
+                evals: d.u64()?,
+                cache_hits: d.u64()?,
+                decision_hits: d.u64()?,
+                submitted: d.u64()?,
+                completed: d.u64()?,
+                shed_requests: d.u64()?,
+                max_queue_depth: d.u64()?,
+            });
+        }
+    }
     Ok(StatsSnapshot {
         evals,
         cache_hits,
@@ -899,6 +957,7 @@ fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
         reconnects,
         specs,
         priorities,
+        shards,
     })
 }
 
@@ -1547,6 +1606,88 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn fleet_shard_tail_roundtrips_and_follows_the_tail_rules() {
+        let fleet = StatsSnapshot {
+            evals: 40,
+            cache_hits: 60,
+            submitted: 100,
+            completed: 100,
+            shards: vec![
+                ShardSnapshot {
+                    addr: "127.0.0.1:9401".into(),
+                    state: 0,
+                    routed: 61,
+                    evals: 25,
+                    cache_hits: 35,
+                    decision_hits: 4,
+                    submitted: 60,
+                    completed: 60,
+                    shed_requests: 1,
+                    max_queue_depth: 7,
+                },
+                ShardSnapshot {
+                    addr: "127.0.0.1:9402".into(),
+                    state: 2,
+                    routed: 40,
+                    evals: 15,
+                    cache_hits: 25,
+                    decision_hits: 0,
+                    submitted: 40,
+                    completed: 40,
+                    shed_requests: 0,
+                    max_queue_depth: 3,
+                },
+            ],
+            ..StatsSnapshot::default()
+        };
+        roundtrip_resp(&Response::Stats(fleet.clone()));
+
+        // the empty fleet is elided: a single server's snapshot is
+        // byte-identical to a pre-fleet peer's, so the tail-cut rules
+        // of the test above keep holding for non-fleet payloads
+        let single = StatsSnapshot { shards: Vec::new(), ..fleet.clone() };
+        let single_bytes = Response::Stats(single.clone()).encode();
+        let mut refetched = match Response::decode(&single_bytes).unwrap() {
+            Response::Stats(s) => s,
+            other => panic!("wrong variant {}", other.kind_name()),
+        };
+        assert_eq!(refetched, single);
+        refetched.shards = fleet.shards.clone();
+        assert!(
+            Response::Stats(refetched).encode().len() > single_bytes.len(),
+            "a populated fleet tail must extend the payload"
+        );
+
+        // a pre-fleet decoder's view of this payload ends before the
+        // shard section, so cutting the whole section off must decode
+        // to the same snapshot with an empty fleet (the zero-fill rule)
+        let bytes = Response::Stats(fleet.clone()).encode();
+        let section = bytes.len() - single_bytes.len();
+        match Response::decode(&bytes[..bytes.len() - section]).unwrap() {
+            Response::Stats(got) => assert_eq!(got, single),
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+
+        // truncation *inside* the shard section is corruption, not an
+        // older peer: it must classify as Truncated, never zero-fill
+        for cut in 1..section {
+            let err = Response::decode(&bytes[..bytes.len() - cut]).unwrap_err();
+            assert!(
+                matches!(err, DecodeError::Truncated),
+                "cut {cut}: unexpected {err:?}"
+            );
+        }
+
+        // bytes after the shard section violate the total-decode rule
+        let mut trailing = bytes.clone();
+        trailing.push(0xAB);
+        assert!(matches!(
+            Response::decode(&trailing).unwrap_err(),
+            DecodeError::Trailing(1)
+        ));
     }
 
     #[test]

@@ -1,0 +1,1703 @@
+//! The sharded eval fabric: an [`EvalRouter`] speaks the existing wire
+//! protocol on a front address and shards evaluation traffic across N
+//! backend [`EvalServer`](super::EvalServer)s, so a fleet scales
+//! throughput without diluting the caches that dominate ms/eval.
+//!
+//! # Cache-affinity routing
+//!
+//! Every eval frame is hashed to a 64-bit **affinity key**
+//! ([`affinity_key`]) over its semantic identity — spec reference,
+//! scenario (app + params), DSL source, and execution mode, but *not*
+//! priority — with the shared FNV-1a primitive
+//! ([`crate::util::hash`]).  The key lands on a consistent-hash ring
+//! ([`HashRing`], [`RING_VNODES`] virtual nodes per shard), so
+//! identical and re-submitted mappers always reach the shard whose
+//! decision/plan/policy/feedback caches are already warm for them, and
+//! a membership change moves only ~1/N of the keyspace instead of
+//! reshuffling everything.  Batch frames are split into per-shard
+//! sub-batches and re-joined in item order.
+//!
+//! # Replicated spec registries
+//!
+//! `RegisterSpec` fans out to every live shard and answers only when
+//! all acked (any shard's refusal is the answer).  Acked registrations
+//! are appended to a replay log, which [`EvalRouter::join_shard`]
+//! replays into a joining shard before it takes ring traffic — so any
+//! shard can serve any spec the fleet has seen.  Spec *ids* stay
+//! aligned across shards as long as registrations flow through the
+//! router (the shards preregister the built-in specs in the same
+//! order); clients that must survive id skew can pin
+//! [`SpecRef::Name`] refs instead.
+//!
+//! # Fleet membership
+//!
+//! A shard is `up` (routable), `draining` (no new work; in-flight
+//! settling — [`EvalRouter::leave_shard`]), or `dead` (unreachable).
+//! Death is detected on the backend link: a severed connection fails
+//! its in-flight requests with a *retryable*
+//! [`ErrorKind::Overloaded`] answer, the shard leaves the ring, and
+//! the client's own [`RetryPolicy`](super::RetryPolicy) replays the
+//! request — which now hashes onto a live shard.  Re-routing therefore
+//! reuses the retry path that already exists for overload and chaos,
+//! and evaluation purity makes the replayed answer bit-identical.
+//!
+//! # Fleet observability
+//!
+//! `Ping` answers router-side.  `Stats` fans out and folds the
+//! per-shard snapshots through
+//! [`StatsSnapshot::aggregate_fleet`] — counters sum, per-shard rates
+//! ride in the snapshot's fleet tail under the zero-fill decode rule —
+//! and `Summary` concatenates per-shard blocks under a fleet header.
+//!
+//! # Limits
+//!
+//! The router multiplexes its front exactly like the server (same I/O
+//! pool, slab, deadlines, and backpressure bounds) and funnels backend
+//! traffic through `io_threads x` [`BACKEND_LANES`] connections per
+//! shard, so one shard can hold at most
+//! `io_threads * BACKEND_LANES * MAX_CONN_IN_FLIGHT` router-submitted
+//! evaluations before its own connection-level shedding answers — a
+//! bound the fleet loadtest stays well under.
+
+use std::cell::RefCell;
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{
+    IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream,
+    ToSocketAddrs,
+};
+use std::rc::Rc;
+use std::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    ShardContribution, StatsSnapshot, SHARD_DEAD, SHARD_DRAINING, SHARD_UP,
+};
+use crate::machine::MachineSpec;
+use crate::sim::ExecMode;
+use crate::util::hash::{fnv1a, Fnv1a};
+
+use super::proto::{
+    self, BatchItem, ErrorKind, FrameStep, Request, Response, SpecRef,
+    WireEvalRequest,
+};
+use super::server::{
+    ServerConfig, MAX_PENDING_REPLIES, MAX_WRITE_BACKLOG, READ_BUDGET_PER_SCAN,
+};
+
+/// Virtual nodes per shard on the consistent-hash ring: enough that a
+/// fleet of a handful of shards splits the keyspace within a few
+/// percent of evenly, cheap enough that ring rebuilds (membership
+/// changes only) stay microseconds.
+pub const RING_VNODES: usize = 64;
+
+/// Backend connections each I/O thread keeps per shard.  One would
+/// serialize a whole thread's traffic behind a single connection's
+/// [`MAX_CONN_IN_FLIGHT`](super::server::MAX_CONN_IN_FLIGHT) cap; a
+/// few lanes multiply the funnel without meaningfully raising fd
+/// count.
+const BACKEND_LANES: usize = 4;
+
+/// Dial timeout for backend connections (a dead shard on loopback
+/// refuses instantly; a blackholed one must not stall the I/O thread).
+const DIAL_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Read timeout for the blocking probe / spec-replay connections.
+const PROBE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Replicated-registration replay log cap — mirrors the per-shard
+/// registry bound, so the log can never admit more than a shard would.
+const MAX_REPLICATED_SPECS: usize = 1024;
+
+/// Retry-after hint on re-routed (dead-shard) answers: the ring has
+/// already been rebuilt, so the client's replay can land almost
+/// immediately.
+const REROUTE_RETRY_MS: u64 = 50;
+
+/// Retry-after hint when the fleet has no live shard at all.
+const NO_SHARD_RETRY_MS: u64 = 250;
+
+// ---------------------------------------------------------------------------
+// Affinity hashing
+// ---------------------------------------------------------------------------
+
+fn mode_code(mode: &ExecMode) -> u8 {
+    match mode {
+        ExecMode::BulkSync => 0,
+        ExecMode::Serialized => 1,
+        ExecMode::OutOfOrder => 2,
+    }
+}
+
+/// The 64-bit cache-affinity key of one eval request: FNV-1a over its
+/// semantic identity (spec ref, scenario, DSL, mode) with
+/// length-prefixed fields, so adjacent fields cannot alias.  Priority
+/// is deliberately excluded — the same mapper probed at a different
+/// priority must still hit the shard that already evaluated it.
+pub fn affinity_key(q: &WireEvalRequest) -> u64 {
+    let mut h = Fnv1a::new();
+    match &q.spec {
+        SpecRef::Id(i) => {
+            h.eat_field(b"id");
+            h.eat_field(&i.to_le_bytes());
+        }
+        SpecRef::Name(n) => {
+            h.eat_field(b"name");
+            h.eat_field(n.as_bytes());
+        }
+    }
+    h.eat_field(q.scenario.app.as_bytes());
+    for (k, v) in &q.scenario.params {
+        h.eat_field(k.as_bytes());
+        h.eat_field(&v.to_le_bytes());
+    }
+    h.eat_field(q.dsl.as_bytes());
+    h.eat_field(&[mode_code(&q.mode)]);
+    h.finish()
+}
+
+/// A consistent-hash ring over shard addresses.  Each shard
+/// contributes `vnodes` ring points at
+/// `fnv1a([addr, vnode_index])` — a function of the shard alone, so a
+/// membership change only re-owns the arcs adjacent to the points that
+/// appeared or vanished (~1/N of the keyspace), never the whole ring.
+pub struct HashRing {
+    /// `(ring point, index into the build-time node slice)`, sorted.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// Build the ring over `nodes` (order-insensitive: ties between
+    /// colliding points break on the node string, so any permutation
+    /// of the same membership routes identically).
+    pub fn build(nodes: &[&str], vnodes: usize) -> HashRing {
+        let mut points = Vec::with_capacity(nodes.len() * vnodes);
+        for (idx, node) in nodes.iter().enumerate() {
+            for v in 0..vnodes as u64 {
+                points.push((
+                    fnv1a(&[node.as_bytes(), &v.to_le_bytes()]),
+                    idx,
+                ));
+            }
+        }
+        points.sort_by(|a, b| {
+            a.0.cmp(&b.0).then_with(|| nodes[a.1].cmp(nodes[b.1]))
+        });
+        HashRing { points }
+    }
+
+    /// The node owning `key`: the first ring point at or after it,
+    /// wrapping at the top.  `None` on an empty ring.
+    pub fn route(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let i = self.points.partition_point(|p| p.0 < key);
+        let i = if i == self.points.len() { 0 } else { i };
+        Some(self.points[i].1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet membership
+// ---------------------------------------------------------------------------
+
+/// Router-side state of one fleet member.
+struct ShardState {
+    /// The address string clients/opers name the shard by (also the
+    /// ring-hash identity and the `addr` of its stats tail entry).
+    name: String,
+    addr: SocketAddr,
+    /// [`SHARD_UP`] / [`SHARD_DRAINING`] / [`SHARD_DEAD`].
+    state: AtomicU8,
+    /// Eval items dispatched to this shard (router-side count).
+    routed: AtomicU64,
+    /// Backend frames awaiting an answer (drain waits on zero).
+    inflight: AtomicU64,
+}
+
+impl ShardState {
+    fn new(name: String, addr: SocketAddr) -> ShardState {
+        ShardState {
+            name,
+            addr,
+            state: AtomicU8::new(SHARD_UP),
+            routed: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Mark a shard unreachable (terminal until an explicit
+/// [`EvalRouter::join_shard`]) and force every I/O thread to rebuild
+/// its ring.
+fn mark_dead(shard: &ShardState, shared: &RouterShared) {
+    if shard.state.swap(SHARD_DEAD, Ordering::SeqCst) != SHARD_DEAD {
+        shared.version.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// One unit of a shard's in-flight accounting, owned by the backend
+/// FIFO entry it accounts for — every resolution path (answered,
+/// failed over, torn down) releases it exactly once.
+struct InflightGuard(Arc<ShardState>);
+
+impl InflightGuard {
+    fn acquire(shard: &Arc<ShardState>) -> InflightGuard {
+        shard.inflight.fetch_add(1, Ordering::SeqCst);
+        InflightGuard(Arc::clone(shard))
+    }
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reply plumbing (single-threaded per I/O thread, hence Rc)
+// ---------------------------------------------------------------------------
+
+/// A front reply waiting on one backend response.
+type RSlot = Rc<RefCell<Option<Response>>>;
+/// One item of a scattered batch waiting on its sub-batch.
+type ISlot = Rc<RefCell<Option<BatchItem>>>;
+
+fn rslot() -> RSlot {
+    Rc::new(RefCell::new(None))
+}
+
+fn islot() -> ISlot {
+    Rc::new(RefCell::new(None))
+}
+
+/// Where a backend response lands.
+enum Dest {
+    Single(RSlot),
+    /// The slots of one per-shard sub-batch, in sub-batch item order.
+    SubBatch(Vec<ISlot>),
+}
+
+impl Dest {
+    fn items(&self) -> u64 {
+        match self {
+            Dest::Single(_) => 1,
+            Dest::SubBatch(slots) => slots.len() as u64,
+        }
+    }
+
+    /// The shard died with this request in flight: answer *retryably*
+    /// so the client's `RetryPolicy` replays onto the rebuilt ring.
+    fn fail(&self, shard: &str) {
+        let msg =
+            format!("shard {shard} unreachable; request re-routed on retry");
+        match self {
+            Dest::Single(slot) => {
+                *slot.borrow_mut() = Some(Response::Error {
+                    kind: ErrorKind::Overloaded,
+                    msg,
+                    retry_after_ms: REROUTE_RETRY_MS,
+                });
+            }
+            Dest::SubBatch(slots) => {
+                for s in slots {
+                    *s.borrow_mut() = Some(BatchItem::Error {
+                        kind: ErrorKind::Overloaded,
+                        msg: msg.clone(),
+                        retry_after_ms: REROUTE_RETRY_MS,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Route one backend response into its destination.
+    fn fill(self, resp: Response) {
+        match self {
+            Dest::Single(slot) => *slot.borrow_mut() = Some(resp),
+            Dest::SubBatch(slots) => match resp {
+                Response::FeedbackBatch(items)
+                    if items.len() == slots.len() =>
+                {
+                    for (slot, item) in slots.iter().zip(items) {
+                        *slot.borrow_mut() = Some(item);
+                    }
+                }
+                Response::Error { kind, msg, retry_after_ms } => {
+                    // a top-level error answers every scattered item
+                    // (retryable kinds stay retryable per item)
+                    for s in &slots {
+                        *s.borrow_mut() = Some(BatchItem::Error {
+                            kind,
+                            msg: msg.clone(),
+                            retry_after_ms,
+                        });
+                    }
+                }
+                other => {
+                    let msg = format!(
+                        "shard answered a sub-batch with {}",
+                        other.kind_name()
+                    );
+                    for s in &slots {
+                        *s.borrow_mut() = Some(BatchItem::Error {
+                            kind: ErrorKind::Internal,
+                            msg: msg.clone(),
+                            retry_after_ms: 0,
+                        });
+                    }
+                }
+            },
+        }
+    }
+}
+
+/// What a completed fan-out resolves into.
+enum FanKind {
+    /// All-shard registration; on unanimous ack the pair is appended
+    /// to the replay log for future joiners.
+    Register { name: String, spec: MachineSpec },
+    /// Fleet stats aggregation.
+    Stats,
+    /// Fleet summary concatenation.
+    Summary,
+}
+
+/// One queued front reply.
+enum FReply {
+    Now(Response),
+    /// A forwarded request waiting on one shard.
+    Slot(RSlot),
+    /// A scattered batch, slots in original item order.
+    Batch(Vec<ISlot>),
+    /// A fan-out over the fleet, one slot per member.
+    Fan { kind: FanKind, parts: Vec<(Arc<ShardState>, RSlot)> },
+}
+
+impl FReply {
+    fn ready(&self) -> bool {
+        match self {
+            FReply::Now(_) => true,
+            FReply::Slot(slot) => slot.borrow().is_some(),
+            FReply::Batch(slots) => {
+                slots.iter().all(|s| s.borrow().is_some())
+            }
+            FReply::Fan { parts, .. } => {
+                parts.iter().all(|(_, s)| s.borrow().is_some())
+            }
+        }
+    }
+
+    /// Consume into the wire response (call only when [`FReply::ready`]).
+    fn into_response(self, shared: &RouterShared) -> Response {
+        match self {
+            FReply::Now(r) => r,
+            FReply::Slot(slot) => {
+                slot.borrow_mut().take().expect("slot ready")
+            }
+            FReply::Batch(slots) => Response::FeedbackBatch(
+                slots
+                    .iter()
+                    .map(|s| s.borrow_mut().take().expect("item ready"))
+                    .collect(),
+            ),
+            FReply::Fan { kind, parts } => resolve_fan(kind, parts, shared),
+        }
+    }
+}
+
+fn state_label(state: u8) -> &'static str {
+    match state {
+        SHARD_UP => "up",
+        SHARD_DRAINING => "draining",
+        _ => "dead",
+    }
+}
+
+fn resolve_fan(
+    kind: FanKind,
+    parts: Vec<(Arc<ShardState>, RSlot)>,
+    shared: &RouterShared,
+) -> Response {
+    match kind {
+        FanKind::Register { name, spec } => {
+            let mut first: Option<Response> = None;
+            for (_, slot) in &parts {
+                let resp = slot.borrow_mut().take().expect("fan slot ready");
+                match resp {
+                    Response::Error { .. } => return resp,
+                    r => {
+                        if first.is_none() {
+                            first = Some(r);
+                        }
+                    }
+                }
+            }
+            // unanimous ack: remember the pair so joining shards can
+            // be replayed up to date (re-registrations update in
+            // place — the shards deduplicate by fingerprint anyway)
+            let mut log = shared.spec_log.lock().unwrap();
+            if let Some(entry) = log.iter_mut().find(|(n, _)| *n == name) {
+                entry.1 = spec;
+            } else if log.len() < MAX_REPLICATED_SPECS {
+                log.push((name, spec));
+            }
+            first.unwrap_or(Response::Error {
+                kind: ErrorKind::Internal,
+                msg: "registration fan-out resolved with no parts".into(),
+                retry_after_ms: 0,
+            })
+        }
+        FanKind::Stats => {
+            let contribs: Vec<ShardContribution> = parts
+                .iter()
+                .map(|(shard, slot)| {
+                    let resp =
+                        slot.borrow_mut().take().expect("fan slot ready");
+                    ShardContribution {
+                        addr: shard.name.clone(),
+                        state: shard.state.load(Ordering::SeqCst),
+                        routed: shard.routed.load(Ordering::SeqCst),
+                        // an unreachable shard contributes zeroed
+                        // counters — visible as a dead tail entry
+                        snapshot: match resp {
+                            Response::Stats(s) => s,
+                            _ => StatsSnapshot::default(),
+                        },
+                    }
+                })
+                .collect();
+            Response::Stats(StatsSnapshot::aggregate_fleet(&contribs))
+        }
+        FanKind::Summary => {
+            let mut text = format!("fleet: {} shard(s)\n", parts.len());
+            for (shard, slot) in &parts {
+                let resp = slot.borrow_mut().take().expect("fan slot ready");
+                let state = state_label(shard.state.load(Ordering::SeqCst));
+                let routed = shard.routed.load(Ordering::SeqCst);
+                text.push_str(&format!(
+                    "-- shard {} [{state}] routed={routed} --\n",
+                    shard.name
+                ));
+                match resp {
+                    Response::Summary(s) => {
+                        text.push_str(&s);
+                        if !s.ends_with('\n') {
+                            text.push('\n');
+                        }
+                    }
+                    Response::Error { msg, .. } => {
+                        text.push_str(&format!("(unreachable: {msg})\n"));
+                    }
+                    other => {
+                        text.push_str(&format!(
+                            "(unexpected {} reply)\n",
+                            other.kind_name()
+                        ));
+                    }
+                }
+            }
+            Response::Summary(text)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend links
+// ---------------------------------------------------------------------------
+
+/// One entry of a backend connection's reply FIFO.
+struct Pending {
+    dest: Dest,
+    _guard: InflightGuard,
+}
+
+/// One nonblocking connection from an I/O thread to a shard.
+struct Backend {
+    shard: Arc<ShardState>,
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    fifo: VecDeque<Pending>,
+    /// Close once idle (clean EOF / shard-side reap with nothing
+    /// pending) — the next dispatch simply redials.
+    quiet_close: bool,
+    /// Severed with work pending: fail over and mark the shard dead.
+    dead: bool,
+}
+
+impl Backend {
+    fn new(shard: Arc<ShardState>, stream: TcpStream) -> Backend {
+        Backend {
+            shard,
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            fifo: VecDeque::new(),
+            quiet_close: false,
+            dead: false,
+        }
+    }
+
+    fn backlog(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    fn pump(&mut self) -> bool {
+        let mut progressed = self.pump_write();
+        progressed |= self.pump_read();
+        progressed
+    }
+
+    fn pump_write(&mut self) -> bool {
+        let mut progressed = false;
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > (64 << 10) {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        progressed
+    }
+
+    fn pump_read(&mut self) -> bool {
+        let mut progressed = false;
+        let mut tmp = [0u8; 16 << 10];
+        let mut budget = READ_BUDGET_PER_SCAN;
+        while budget > 0 {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    // EOF with work pending is a death (the shard never
+                    // reaps a connection with evals in flight); idle
+                    // EOF is a routine shard-side close
+                    if self.fifo.is_empty() {
+                        self.quiet_close = true;
+                    } else {
+                        self.dead = true;
+                    }
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&tmp[..n]);
+                    progressed = true;
+                    budget = budget.saturating_sub(n);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    if self.fifo.is_empty() {
+                        self.quiet_close = true;
+                    } else {
+                        self.dead = true;
+                    }
+                    break;
+                }
+            }
+        }
+        while !self.dead {
+            match proto::frame_step(&self.rbuf) {
+                FrameStep::Incomplete => break,
+                FrameStep::Frame { payload, consumed } => {
+                    self.rbuf.drain(..consumed);
+                    progressed = true;
+                    match Response::decode(&payload) {
+                        Ok(resp) => match self.fifo.pop_front() {
+                            Some(p) => p.dest.fill(resp),
+                            None => {
+                                // unsolicited frame (e.g. an idle-reap
+                                // notice): nothing is owed — close and
+                                // let the next dispatch redial
+                                self.quiet_close = true;
+                                break;
+                            }
+                        },
+                        Err(_) => {
+                            // an undecodable *response* means the link
+                            // lost protocol sync — fail over
+                            self.dead = true;
+                        }
+                    }
+                }
+                FrameStep::Corrupt(_) => {
+                    self.dead = true;
+                }
+            }
+        }
+        progressed
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread routing context
+// ---------------------------------------------------------------------------
+
+struct ThreadCtx {
+    shared: Arc<RouterShared>,
+    backends: HashMap<(String, usize), Backend>,
+    /// Cached membership (all states), refreshed on version change.
+    members: Vec<Arc<ShardState>>,
+    /// The routable (`up`) members the ring indexes into.
+    ring_members: Vec<Arc<ShardState>>,
+    ring: HashRing,
+    seen: u64,
+    /// Round-robin lane selector (see [`BACKEND_LANES`]).
+    rr: usize,
+}
+
+impl ThreadCtx {
+    fn new(shared: Arc<RouterShared>) -> ThreadCtx {
+        ThreadCtx {
+            shared,
+            backends: HashMap::new(),
+            members: Vec::new(),
+            ring_members: Vec::new(),
+            ring: HashRing::build(&[], RING_VNODES),
+            seen: 0,
+            rr: 0,
+        }
+    }
+
+    /// Re-snapshot membership and rebuild the ring iff the fleet
+    /// version moved (membership or state change).
+    fn refresh(&mut self) {
+        let v = self.shared.version.load(Ordering::SeqCst);
+        if v == self.seen {
+            return;
+        }
+        self.seen = v;
+        self.members = self.shared.members.lock().unwrap().clone();
+        self.ring_members = self
+            .members
+            .iter()
+            .filter(|s| s.state.load(Ordering::SeqCst) == SHARD_UP)
+            .cloned()
+            .collect();
+        let names: Vec<&str> =
+            self.ring_members.iter().map(|s| s.name.as_str()).collect();
+        self.ring = HashRing::build(&names, RING_VNODES);
+    }
+
+    fn route_eval(&self, q: &WireEvalRequest) -> Option<Arc<ShardState>> {
+        let idx = self.ring.route(affinity_key(q))?;
+        Some(Arc::clone(&self.ring_members[idx]))
+    }
+
+    /// Forward one encoded request to `shard`, registering `dest` for
+    /// its answer.  A failed dial answers `dest` retryably and marks
+    /// the shard dead (the caller's ring rebuilds before any retry).
+    fn enqueue(&mut self, shard: &Arc<ShardState>, payload: &[u8], dest: Dest) {
+        self.rr = self.rr.wrapping_add(1);
+        let key = (shard.name.clone(), self.rr % BACKEND_LANES);
+        let b = match self.backends.entry(key) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => match dial(shard) {
+                Ok(stream) => {
+                    v.insert(Backend::new(Arc::clone(shard), stream))
+                }
+                Err(_) => {
+                    mark_dead(shard, &self.shared);
+                    self.shared
+                        .rerouted
+                        .fetch_add(dest.items(), Ordering::SeqCst);
+                    dest.fail(&shard.name);
+                    return;
+                }
+            },
+        };
+        if proto::write_frame(&mut b.wbuf, payload).is_err() {
+            // a re-encoded request cannot exceed the frame cap its
+            // original fit under; stay safe anyway
+            dest.fail(&shard.name);
+            return;
+        }
+        b.fifo.push_back(Pending {
+            dest,
+            _guard: InflightGuard::acquire(shard),
+        });
+    }
+
+    /// Drive every backend link; severed links fail their pending work
+    /// over to the retry path.
+    fn pump_backends(&mut self) -> bool {
+        let shared = Arc::clone(&self.shared);
+        let mut progressed = false;
+        self.backends.retain(|_, b| {
+            progressed |= b.pump();
+            if b.dead {
+                fail_backend(b, &shared);
+                let _ = b.stream.shutdown(Shutdown::Both);
+                progressed = true;
+                return false;
+            }
+            if b.quiet_close && b.fifo.is_empty() && b.backlog() == 0 {
+                let _ = b.stream.shutdown(Shutdown::Both);
+                progressed = true;
+                return false;
+            }
+            true
+        });
+        progressed
+    }
+
+    fn live_members(&self) -> Vec<Arc<ShardState>> {
+        self.members
+            .iter()
+            .filter(|s| s.state.load(Ordering::SeqCst) != SHARD_DEAD)
+            .cloned()
+            .collect()
+    }
+
+    fn dispatch(&mut self, req: Request) -> FReply {
+        match req {
+            Request::Ping => FReply::Now(Response::Pong),
+            Request::Eval(q) => {
+                let Some(shard) = self.route_eval(&q) else {
+                    return FReply::Now(no_live_shards());
+                };
+                shard.routed.fetch_add(1, Ordering::SeqCst);
+                let slot = rslot();
+                let payload = Request::Eval(q).encode();
+                self.enqueue(&shard, &payload, Dest::Single(Rc::clone(&slot)));
+                FReply::Slot(slot)
+            }
+            Request::EvalBatch(items) => self.dispatch_batch(items),
+            Request::RegisterSpec { name, spec } => {
+                let targets = self.live_members();
+                if targets.is_empty() {
+                    return FReply::Now(no_live_shards());
+                }
+                let payload = Request::RegisterSpec {
+                    name: name.clone(),
+                    spec: spec.clone(),
+                }
+                .encode();
+                let mut parts = Vec::with_capacity(targets.len());
+                for shard in targets {
+                    let slot = rslot();
+                    self.enqueue(
+                        &shard,
+                        &payload,
+                        Dest::Single(Rc::clone(&slot)),
+                    );
+                    parts.push((shard, slot));
+                }
+                FReply::Fan { kind: FanKind::Register { name, spec }, parts }
+            }
+            Request::GetSpec { name } => {
+                let Some(shard) = self.live_members().into_iter().next()
+                else {
+                    return FReply::Now(no_live_shards());
+                };
+                let slot = rslot();
+                let payload = Request::GetSpec { name }.encode();
+                self.enqueue(&shard, &payload, Dest::Single(Rc::clone(&slot)));
+                FReply::Slot(slot)
+            }
+            Request::Stats => self.dispatch_fan(FanKind::Stats),
+            Request::Summary => self.dispatch_fan(FanKind::Summary),
+        }
+    }
+
+    /// Scatter a batch into per-shard sub-batches (original per-shard
+    /// item order preserved) and gather one equal-length reply.
+    fn dispatch_batch(&mut self, items: Vec<WireEvalRequest>) -> FReply {
+        let mut slots: Vec<ISlot> = Vec::with_capacity(items.len());
+        let mut groups: Vec<(
+            Arc<ShardState>,
+            Vec<WireEvalRequest>,
+            Vec<ISlot>,
+        )> = Vec::new();
+        for q in items {
+            let slot = islot();
+            slots.push(Rc::clone(&slot));
+            match self.route_eval(&q) {
+                Some(shard) => {
+                    match groups
+                        .iter_mut()
+                        .find(|g| Arc::ptr_eq(&g.0, &shard))
+                    {
+                        Some(g) => {
+                            g.1.push(q);
+                            g.2.push(slot);
+                        }
+                        None => groups.push((shard, vec![q], vec![slot])),
+                    }
+                }
+                None => {
+                    *slot.borrow_mut() = Some(BatchItem::Error {
+                        kind: ErrorKind::Overloaded,
+                        msg: "no live shards in the fleet".into(),
+                        retry_after_ms: NO_SHARD_RETRY_MS,
+                    });
+                }
+            }
+        }
+        for (shard, sub, sub_slots) in groups {
+            shard.routed.fetch_add(sub.len() as u64, Ordering::SeqCst);
+            let payload = Request::EvalBatch(sub).encode();
+            self.enqueue(&shard, &payload, Dest::SubBatch(sub_slots));
+        }
+        FReply::Batch(slots)
+    }
+
+    /// Fan a stats/summary probe over *every* member; dead members get
+    /// a pre-failed slot so the aggregate still lists them.
+    fn dispatch_fan(&mut self, kind: FanKind) -> FReply {
+        if self.members.is_empty() {
+            return FReply::Now(match kind {
+                FanKind::Stats => {
+                    Response::Stats(StatsSnapshot::aggregate_fleet(&[]))
+                }
+                _ => Response::Summary("fleet: 0 shard(s)\n".to_string()),
+            });
+        }
+        let payload = match kind {
+            FanKind::Stats => Request::Stats.encode(),
+            _ => Request::Summary.encode(),
+        };
+        let members = self.members.clone();
+        let mut parts = Vec::with_capacity(members.len());
+        for shard in members {
+            let slot = rslot();
+            if shard.state.load(Ordering::SeqCst) == SHARD_DEAD {
+                *slot.borrow_mut() = Some(Response::Error {
+                    kind: ErrorKind::Overloaded,
+                    msg: format!("shard {} is dead", shard.name),
+                    retry_after_ms: 0,
+                });
+            } else {
+                self.enqueue(&shard, &payload, Dest::Single(Rc::clone(&slot)));
+            }
+            parts.push((shard, slot));
+        }
+        FReply::Fan { kind, parts }
+    }
+}
+
+fn no_live_shards() -> Response {
+    Response::Error {
+        kind: ErrorKind::Overloaded,
+        msg: "no live shards in the fleet".into(),
+        retry_after_ms: NO_SHARD_RETRY_MS,
+    }
+}
+
+fn fail_backend(b: &mut Backend, shared: &RouterShared) {
+    if b.fifo.is_empty() {
+        return;
+    }
+    mark_dead(&b.shard, shared);
+    let mut items = 0u64;
+    while let Some(p) = b.fifo.pop_front() {
+        items += p.dest.items();
+        p.dest.fail(&b.shard.name);
+    }
+    shared.rerouted.fetch_add(items, Ordering::SeqCst);
+}
+
+fn dial(shard: &ShardState) -> io::Result<TcpStream> {
+    let stream = TcpStream::connect_timeout(&shard.addr, DIAL_TIMEOUT)?;
+    let _ = stream.set_nodelay(true);
+    stream.set_nonblocking(true)?;
+    Ok(stream)
+}
+
+// ---------------------------------------------------------------------------
+// Front connections (mirrors the server's slab pump)
+// ---------------------------------------------------------------------------
+
+struct FrontConn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    fifo: VecDeque<FReply>,
+    last_read: Instant,
+    last_write_progress: Instant,
+    read_closed: bool,
+    dead: bool,
+}
+
+impl FrontConn {
+    fn adopt(stream: TcpStream) -> FrontConn {
+        let now = Instant::now();
+        FrontConn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            fifo: VecDeque::new(),
+            last_read: now,
+            last_write_progress: now,
+            read_closed: false,
+            dead: false,
+        }
+    }
+
+    fn backlog(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    fn finished(&self) -> bool {
+        self.dead
+            || (self.read_closed
+                && self.fifo.is_empty()
+                && self.backlog() == 0)
+    }
+
+    /// Read, frame, and dispatch buffered requests (the first half of
+    /// a scan; backend pumping and reply egress run after).
+    fn pump_ingress(&mut self, ctx: &mut ThreadCtx) -> bool {
+        if self.read_closed || self.backlog() >= MAX_WRITE_BACKLOG {
+            return false;
+        }
+        let mut progressed = false;
+        let mut tmp = [0u8; 16 << 10];
+        let mut budget = READ_BUDGET_PER_SCAN;
+        while budget > 0 {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&tmp[..n]);
+                    self.last_read = Instant::now();
+                    progressed = true;
+                    budget = budget.saturating_sub(n);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return true;
+                }
+            }
+        }
+        while self.fifo.len() < MAX_PENDING_REPLIES {
+            match proto::frame_step(&self.rbuf) {
+                FrameStep::Incomplete => break,
+                FrameStep::Frame { payload, consumed } => {
+                    self.rbuf.drain(..consumed);
+                    let reply = match Request::decode(&payload) {
+                        Ok(req) => ctx.dispatch(req),
+                        Err(e) => FReply::Now(Response::Error {
+                            kind: e.wire_kind(),
+                            msg: e.to_string(),
+                            retry_after_ms: 0,
+                        }),
+                    };
+                    self.fifo.push_back(reply);
+                    progressed = true;
+                }
+                FrameStep::Corrupt(msg) => {
+                    self.fifo.push_back(FReply::Now(Response::Error {
+                        kind: ErrorKind::Frame,
+                        msg,
+                        retry_after_ms: 0,
+                    }));
+                    self.rbuf.clear();
+                    self.read_closed = true;
+                    progressed = true;
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+
+    /// Encode ready replies in request order and flush (the second
+    /// half of a scan).
+    fn pump_egress(
+        &mut self,
+        shared: &RouterShared,
+        deadline: Option<Duration>,
+    ) -> bool {
+        let mut progressed = false;
+        while self.fifo.front().is_some_and(FReply::ready) {
+            let reply = self.fifo.pop_front().expect("checked front");
+            let resp = reply.into_response(shared);
+            if proto::write_frame(&mut self.wbuf, &resp.encode()).is_err() {
+                self.dead = true;
+                return true;
+            }
+            progressed = true;
+        }
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    self.last_write_progress = Instant::now();
+                    progressed = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > (64 << 10) {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        self.check_deadline(shared, deadline);
+        progressed
+    }
+
+    /// Same reaping rules as the server: idle fronts get a polite
+    /// retryable `Deadline` answer; stalled writers are closed hard;
+    /// fronts with replies pending are never reaped.
+    fn check_deadline(
+        &mut self,
+        shared: &RouterShared,
+        deadline: Option<Duration>,
+    ) {
+        let Some(d) = deadline else { return };
+        if self.dead {
+            return;
+        }
+        if self.backlog() > 0 {
+            if self.last_write_progress.elapsed() > d {
+                shared.reaped.fetch_add(1, Ordering::SeqCst);
+                self.dead = true;
+            }
+            return;
+        }
+        if self.read_closed || !self.fifo.is_empty() {
+            return;
+        }
+        if self.last_read.elapsed() > d {
+            shared.reaped.fetch_add(1, Ordering::SeqCst);
+            let secs = d.as_secs();
+            self.fifo.push_back(FReply::Now(Response::Error {
+                kind: ErrorKind::Deadline,
+                msg: format!(
+                    "connection idle past the router's {secs}s read \
+                     deadline; reconnect and resume"
+                ),
+                retry_after_ms: 0,
+            }));
+            self.read_closed = true;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The I/O pool
+// ---------------------------------------------------------------------------
+
+const STATE_RUNNING: u8 = 0;
+const STATE_DRAIN: u8 = 1;
+const STATE_KILL: u8 = 2;
+
+struct RouterShared {
+    active: AtomicUsize,
+    state: AtomicU8,
+    inboxes: Vec<Mutex<Vec<TcpStream>>>,
+    /// The fleet, any state; guarded so join/leave and the snapshots
+    /// the I/O threads take stay consistent.
+    members: Mutex<Vec<Arc<ShardState>>>,
+    /// Bumped on every membership/state change; threads rebuild their
+    /// ring when it moves.
+    version: AtomicU64,
+    /// Unanimously-acked registrations, replayed into joining shards.
+    spec_log: Mutex<Vec<(String, MachineSpec)>>,
+    /// In-flight requests failed over off dead shards (each answered
+    /// retryably, replayed by the client onto the rebuilt ring).
+    rerouted: AtomicU64,
+    /// Front connections reaped at the idle deadline.
+    reaped: AtomicU64,
+    /// Front connections refused at the connection cap.
+    refused: AtomicU64,
+}
+
+fn io_loop(idx: usize, shared: Arc<RouterShared>, deadline: Option<Duration>) {
+    let mut ctx = ThreadCtx::new(Arc::clone(&shared));
+    let mut slab: Vec<Option<FrontConn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut idle_spins: u32 = 0;
+    loop {
+        let state = shared.state.load(Ordering::SeqCst);
+        ctx.refresh();
+        let incoming: Vec<TcpStream> = {
+            let mut q = shared.inboxes[idx].lock().unwrap();
+            std::mem::take(&mut *q)
+        };
+        let mut progressed = !incoming.is_empty();
+        for stream in incoming {
+            if state == STATE_KILL {
+                let _ = stream.shutdown(Shutdown::Both);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            let conn = FrontConn::adopt(stream);
+            match free.pop() {
+                Some(i) => slab[i] = Some(conn),
+                None => slab.push(Some(conn)),
+            }
+        }
+        for slot in 0..slab.len() {
+            let Some(conn) = slab[slot].as_mut() else { continue };
+            match state {
+                STATE_KILL => conn.dead = true,
+                STATE_DRAIN => conn.read_closed = true,
+                _ => {}
+            }
+            if !conn.dead {
+                progressed |= conn.pump_ingress(&mut ctx);
+            }
+        }
+        progressed |= ctx.pump_backends();
+        for slot in 0..slab.len() {
+            let finished = {
+                let Some(conn) = slab[slot].as_mut() else { continue };
+                if !conn.dead {
+                    progressed |= conn.pump_egress(&shared, deadline);
+                }
+                conn.finished()
+            };
+            if finished {
+                if let Some(conn) = slab[slot].take() {
+                    let _ = conn.stream.shutdown(Shutdown::Both);
+                }
+                free.push(slot);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+                progressed = true;
+            }
+        }
+        if state != STATE_RUNNING
+            && slab.iter().all(Option::is_none)
+            && shared.inboxes[idx].lock().unwrap().is_empty()
+        {
+            break;
+        }
+        if progressed {
+            idle_spins = 0;
+        } else {
+            idle_spins = idle_spins.saturating_add(1);
+            if idle_spins <= 3 {
+                thread::yield_now();
+            } else {
+                let us = (50 * idle_spins as u64).min(500);
+                thread::sleep(Duration::from_micros(us));
+            }
+        }
+    }
+    // graceful exits already resolved every pending entry (front
+    // connections only finish once their replies filled); sever
+    // whatever links remain
+    for (_, b) in ctx.backends.drain() {
+        let _ = b.stream.shutdown(Shutdown::Both);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The router front
+// ---------------------------------------------------------------------------
+
+fn invalid_data(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn resolve(addr: &str) -> io::Result<SocketAddr> {
+    addr.to_socket_addrs()?.next().ok_or_else(|| {
+        io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("shard address '{addr}' resolves to nothing"),
+        )
+    })
+}
+
+/// A blocking liveness probe: dial, ping, expect pong.
+fn probe(addr: &SocketAddr) -> io::Result<()> {
+    let mut stream = TcpStream::connect_timeout(addr, DIAL_TIMEOUT)?;
+    stream.set_read_timeout(Some(PROBE_TIMEOUT))?;
+    let _ = stream.set_nodelay(true);
+    proto::write_frame(&mut stream, &Request::Ping.encode())?;
+    match proto::read_frame(&mut stream)? {
+        Some(payload) => match Response::decode(&payload) {
+            Ok(Response::Pong) => Ok(()),
+            Ok(other) => Err(invalid_data(format!(
+                "expected Pong, shard answered {}",
+                other.kind_name()
+            ))),
+            Err(e) => Err(invalid_data(e.to_string())),
+        },
+        None => Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "shard closed the probe connection before answering",
+        )),
+    }
+}
+
+/// The sharded-fleet front (see module docs).  Binds like an
+/// [`EvalServer`](super::EvalServer) — same wire protocol, same knobs
+/// — but forwards evaluation work across its shards.
+pub struct EvalRouter {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+    io: Vec<thread::JoinHandle<()>>,
+    shared: Arc<RouterShared>,
+}
+
+impl EvalRouter {
+    /// Bind `addr` fronting `shards` (backend `EvalServer` addresses)
+    /// with env-derived [`ServerConfig`] defaults.  Every initial
+    /// shard must pass a ping probe — a misconfigured fleet fails at
+    /// bind, not on the first routed eval.
+    pub fn bind(addr: &str, shards: &[String]) -> io::Result<EvalRouter> {
+        EvalRouter::bind_with(addr, shards, ServerConfig::default())
+    }
+
+    /// [`EvalRouter::bind`] with explicit knobs.
+    pub fn bind_with(
+        addr: &str,
+        shards: &[String],
+        config: ServerConfig,
+    ) -> io::Result<EvalRouter> {
+        let mut members: Vec<Arc<ShardState>> =
+            Vec::with_capacity(shards.len());
+        for s in shards {
+            if members.iter().any(|m| m.name == *s) {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("duplicate shard address {s}"),
+                ));
+            }
+            let sa = resolve(s)?;
+            probe(&sa).map_err(|e| {
+                io::Error::new(
+                    e.kind(),
+                    format!("shard {s} failed its ping probe: {e}"),
+                )
+            })?;
+            members.push(Arc::new(ShardState::new(s.clone(), sa)));
+        }
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let io_threads = config.io_threads.max(1);
+        let max_connections = config.max_connections.max(1);
+        let deadline = config.conn_deadline;
+        let shared = Arc::new(RouterShared {
+            active: AtomicUsize::new(0),
+            state: AtomicU8::new(STATE_RUNNING),
+            inboxes: (0..io_threads).map(|_| Mutex::new(Vec::new())).collect(),
+            members: Mutex::new(members),
+            version: AtomicU64::new(1),
+            spec_log: Mutex::new(Vec::new()),
+            rerouted: AtomicU64::new(0),
+            reaped: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
+        });
+        let mut io = Vec::with_capacity(io_threads);
+        for i in 0..io_threads {
+            let shared = Arc::clone(&shared);
+            io.push(
+                thread::Builder::new()
+                    .name(format!("evalrtr-io-{i}"))
+                    .spawn(move || io_loop(i, shared, deadline))?,
+            );
+        }
+        let accept_shared = Arc::clone(&shared);
+        let accept = thread::Builder::new()
+            .name("evalrtr-accept".into())
+            .spawn(move || {
+                let mut next = 0usize;
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(mut stream) => {
+                            let prev = accept_shared
+                                .active
+                                .fetch_add(1, Ordering::SeqCst);
+                            if prev >= max_connections {
+                                accept_shared
+                                    .active
+                                    .fetch_sub(1, Ordering::SeqCst);
+                                accept_shared
+                                    .refused
+                                    .fetch_add(1, Ordering::SeqCst);
+                                let resp = Response::Error {
+                                    kind: ErrorKind::Overloaded,
+                                    msg: format!(
+                                        "router at connection capacity \
+                                         ({max_connections})"
+                                    ),
+                                    retry_after_ms: 250,
+                                };
+                                let _ = proto::write_frame(
+                                    &mut stream,
+                                    &resp.encode(),
+                                );
+                                let _ = stream.shutdown(Shutdown::Both);
+                                continue;
+                            }
+                            let _ = stream.set_nodelay(true);
+                            if stream.set_nonblocking(true).is_err() {
+                                accept_shared
+                                    .active
+                                    .fetch_sub(1, Ordering::SeqCst);
+                                continue;
+                            }
+                            let inbox = next % accept_shared.inboxes.len();
+                            next = next.wrapping_add(1);
+                            accept_shared.inboxes[inbox]
+                                .lock()
+                                .unwrap()
+                                .push(stream);
+                        }
+                        Err(_) => {
+                            thread::sleep(Duration::from_millis(50));
+                            continue;
+                        }
+                    }
+                }
+            })?;
+        Ok(EvalRouter { addr: local, stop, accept: Some(accept), io, shared })
+    }
+
+    /// The bound front address (resolves ephemeral `":0"` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// In-flight requests failed over off dead shards so far (each was
+    /// answered retryably and replayed by its client).
+    pub fn rerouted(&self) -> u64 {
+        self.shared.rerouted.load(Ordering::SeqCst)
+    }
+
+    /// Front connections refused at the connection cap.
+    pub fn refused(&self) -> u64 {
+        self.shared.refused.load(Ordering::SeqCst)
+    }
+
+    /// `(addr, state)` of every member, in membership order (states
+    /// are the `SHARD_*` constants).
+    pub fn shard_states(&self) -> Vec<(String, u8)> {
+        self.shared
+            .members
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|m| (m.name.clone(), m.state.load(Ordering::SeqCst)))
+            .collect()
+    }
+
+    /// Add a shard at runtime: probe it, replay the replicated spec
+    /// log into it, then admit it to the ring (a dead member with the
+    /// same address is replaced).  Until this returns the shard takes
+    /// no traffic, so a half-replayed joiner can never serve.
+    pub fn join_shard(&self, addr: &str) -> io::Result<()> {
+        let sa = resolve(addr)?;
+        {
+            let members = self.shared.members.lock().unwrap();
+            if members.iter().any(|m| {
+                m.name == addr
+                    && m.state.load(Ordering::SeqCst) != SHARD_DEAD
+            }) {
+                return Err(io::Error::new(
+                    io::ErrorKind::AlreadyExists,
+                    format!("shard {addr} is already a fleet member"),
+                ));
+            }
+        }
+        probe(&sa)?;
+        let log = self.shared.spec_log.lock().unwrap().clone();
+        if !log.is_empty() {
+            let mut stream = TcpStream::connect_timeout(&sa, DIAL_TIMEOUT)?;
+            stream.set_read_timeout(Some(PROBE_TIMEOUT))?;
+            let _ = stream.set_nodelay(true);
+            for (name, spec) in log {
+                let req = Request::RegisterSpec { name: name.clone(), spec };
+                proto::write_frame(&mut stream, &req.encode())?;
+                match proto::read_frame(&mut stream)? {
+                    Some(p) => match Response::decode(&p) {
+                        Ok(Response::SpecInfo { .. }) => {}
+                        Ok(Response::Error { msg, .. }) => {
+                            return Err(invalid_data(format!(
+                                "shard {addr} refused replayed spec \
+                                 '{name}': {msg}"
+                            )));
+                        }
+                        Ok(other) => {
+                            return Err(invalid_data(format!(
+                                "spec replay to {addr} answered {}",
+                                other.kind_name()
+                            )));
+                        }
+                        Err(e) => return Err(invalid_data(e.to_string())),
+                    },
+                    None => {
+                        return Err(io::Error::new(
+                            io::ErrorKind::UnexpectedEof,
+                            format!(
+                                "shard {addr} closed during spec replay"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        let mut members = self.shared.members.lock().unwrap();
+        members.retain(|m| m.name != addr);
+        members.push(Arc::new(ShardState::new(addr.to_string(), sa)));
+        drop(members);
+        self.shared.version.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Gracefully remove a shard: stop routing new work to it
+    /// (`draining`), wait for its in-flight requests to settle, then
+    /// detach it.  Times out leaving the shard draining (retryable);
+    /// its settled work was still answered.
+    pub fn leave_shard(
+        &self,
+        addr: &str,
+        timeout: Duration,
+    ) -> io::Result<()> {
+        let shard = {
+            let members = self.shared.members.lock().unwrap();
+            members
+                .iter()
+                .find(|m| {
+                    m.name == addr
+                        && m.state.load(Ordering::SeqCst) != SHARD_DEAD
+                })
+                .cloned()
+        };
+        let Some(shard) = shard else {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("shard {addr} is not a live fleet member"),
+            ));
+        };
+        if shard
+            .state
+            .compare_exchange(
+                SHARD_UP,
+                SHARD_DRAINING,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+            .is_ok()
+        {
+            self.shared.version.fetch_add(1, Ordering::SeqCst);
+        }
+        let start = Instant::now();
+        while shard.inflight.load(Ordering::SeqCst) > 0 {
+            if start.elapsed() > timeout {
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    format!(
+                        "shard {addr} still has in-flight work after \
+                         {timeout:?}; left draining"
+                    ),
+                ));
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        let mut members = self.shared.members.lock().unwrap();
+        members.retain(|m| !Arc::ptr_eq(m, &shard));
+        drop(members);
+        self.shared.version.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Block until the I/O pool exits (the route-forever CLI path).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.io.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful drain: stop accepting, answer everything in flight
+    /// (backend links included), flush, join.
+    pub fn shutdown(mut self) {
+        self.drain();
+    }
+
+    /// Abrupt stop: sever every front and backend connection.
+    pub fn kill(mut self) {
+        self.stop_accepting();
+        self.shared.state.store(STATE_KILL, Ordering::SeqCst);
+        for h in self.io.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn drain(&mut self) {
+        self.stop_accepting();
+        let _ = self.shared.state.compare_exchange(
+            STATE_RUNNING,
+            STATE_DRAIN,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+        for h in self.io.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn stop_accepting(&mut self) {
+        if let Some(h) = self.accept.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            let mut target = self.addr;
+            if target.ip().is_unspecified() {
+                let loopback = match target.ip() {
+                    IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                    IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                };
+                target.set_ip(loopback);
+            }
+            let _ = TcpStream::connect(target);
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EvalRouter {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::proto::Scenario;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ring_moves_only_the_removed_shards_keys() {
+        let nodes3 = ["127.0.0.1:7001", "127.0.0.1:7002", "127.0.0.1:7003"];
+        let nodes2 = [nodes3[0], nodes3[1]];
+        let r3 = HashRing::build(&nodes3, RING_VNODES);
+        let r2 = HashRing::build(&nodes2, RING_VNODES);
+        assert_eq!(r3.len(), 3 * RING_VNODES);
+        assert!(!r3.is_empty());
+        let mut rng = Rng::new(0x51A2);
+        let (mut moved, mut total) = (0u32, 0u32);
+        for _ in 0..10_000 {
+            let key = rng.next_u64();
+            let from = nodes3[r3.route(key).unwrap()];
+            let to = nodes2[r2.route(key).unwrap()];
+            total += 1;
+            if from == nodes3[2] {
+                moved += 1;
+            } else {
+                assert_eq!(
+                    from, to,
+                    "a key not on the removed shard must not move"
+                );
+            }
+        }
+        // ~1/3 of the keyspace belonged to the removed shard; losing
+        // it must never reshuffle the survivors
+        assert!(moved > 0, "the removed shard owned nothing");
+        assert!(
+            (moved as f64) < 0.5 * total as f64,
+            "{moved}/{total} keys moved — that is a reshuffle"
+        );
+
+        // membership order cannot matter
+        let shuffled = ["127.0.0.1:7003", "127.0.0.1:7001", "127.0.0.1:7002"];
+        let rs = HashRing::build(&shuffled, RING_VNODES);
+        for _ in 0..1_000 {
+            let key = rng.next_u64();
+            assert_eq!(
+                nodes3[r3.route(key).unwrap()],
+                shuffled[rs.route(key).unwrap()],
+            );
+        }
+
+        assert_eq!(HashRing::build(&[], RING_VNODES).route(42), None);
+    }
+
+    #[test]
+    fn affinity_key_binds_semantics_not_priority() {
+        let base = WireEvalRequest {
+            spec: SpecRef::Id(0),
+            scenario: Scenario::named("circuit"),
+            dsl: "task * region * : place = ANY;".into(),
+            mode: ExecMode::Serialized,
+            priority: 128,
+        };
+        assert_eq!(affinity_key(&base), affinity_key(&base.clone()));
+
+        // the same mapper at a different priority must land on the
+        // same warm shard
+        let mut hot = base.clone();
+        hot.priority = 255;
+        assert_eq!(affinity_key(&base), affinity_key(&hot));
+
+        let mut dsl = base.clone();
+        dsl.dsl.push(' ');
+        assert_ne!(affinity_key(&base), affinity_key(&dsl));
+
+        let mut mode = base.clone();
+        mode.mode = ExecMode::OutOfOrder;
+        assert_ne!(affinity_key(&base), affinity_key(&mode));
+
+        let mut scen = base.clone();
+        scen.scenario.params.push(("pieces".into(), 4));
+        assert_ne!(affinity_key(&base), affinity_key(&scen));
+
+        // spec refs are tagged: Id(0) and Name("0") cannot alias
+        let mut named = base.clone();
+        named.spec = SpecRef::Name("0".into());
+        assert_ne!(affinity_key(&base), affinity_key(&named));
+    }
+}

@@ -155,17 +155,17 @@ pub const MAX_CONN_IN_FLIGHT: usize = 64;
 /// layer behind the in-flight cap, bounding FIFO growth from
 /// zero-cost requests (pings, stats) pipelined faster than the socket
 /// drains.
-const MAX_PENDING_REPLIES: usize = 2 * MAX_CONN_IN_FLIGHT;
+pub(crate) const MAX_PENDING_REPLIES: usize = 2 * MAX_CONN_IN_FLIGHT;
 
 /// Encoded-but-unsent reply bytes beyond which the server stops
 /// reading from a connection until its socket drains (see module
 /// docs); one frame can exceed this transiently, so the bound is
 /// checked before parsing, not after encoding.
-const MAX_WRITE_BACKLOG: usize = 1 << 20;
+pub(crate) const MAX_WRITE_BACKLOG: usize = 1 << 20;
 
 /// Bytes one connection may read per scan, so a firehose peer cannot
 /// starve its slab-mates on the shared I/O thread.
-const READ_BUDGET_PER_SCAN: usize = 64 << 10;
+pub(crate) const READ_BUDGET_PER_SCAN: usize = 64 << 10;
 
 /// Idle/read deadline from `MAPPEROPT_CONN_DEADLINE_S` (seconds;
 /// default 300, `0` disables).

@@ -7,6 +7,12 @@
 //! server crash + restart behind the chaos proxy (reconnect-and-replay,
 //! bit-identical), queue-saturation shedding with `Overloaded` retries,
 //! deadline expiry classification, and drop-order teardown.
+//!
+//! PR 9 adds the sharded-fleet differentials: a campaign through a
+//! 3-shard `EvalRouter` bit-identical to single-server (surviving a
+//! shard kill mid-session via the retry/re-route path), fleet Stats
+//! sum-of-shards identities, replicated spec registration with
+//! join-time log replay, and graceful shard draining.
 
 use std::io::Write;
 use std::net::TcpStream;
@@ -15,7 +21,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use mapperopt::coordinator::{CacheConfig, Coordinator, EvalService};
-use mapperopt::coordinator::{SearchAlgo, PRIORITY_NORMAL};
+use mapperopt::coordinator::{SearchAlgo, PRIORITY_NORMAL, SHARD_DEAD, SHARD_UP};
 use mapperopt::feedback::FeedbackConfig;
 use mapperopt::machine::MachineSpec;
 use mapperopt::mapping::expert_dsl;
@@ -23,8 +29,9 @@ use mapperopt::net::proto::{
     read_frame, write_frame, ErrorKind, Request, Response, WIRE_VERSION,
 };
 use mapperopt::net::{
-    ChaosConfig, ChaosProxy, EvalServer, RemoteEvalClient, RetryPolicy,
-    Scenario, ServerConfig, SpecRef, WireEvalRequest,
+    affinity_key, ChaosConfig, ChaosProxy, EvalRouter, EvalServer, HashRing,
+    RemoteEvalClient, RetryPolicy, Scenario, ServerConfig, SpecRef,
+    WireEvalRequest, RING_VNODES,
 };
 use mapperopt::sim::ExecMode;
 
@@ -823,4 +830,292 @@ fn batched_and_single_frame_submissions_are_bit_identical() {
     drop(batched);
     drop(single);
     server.shutdown();
+}
+
+/// Boot an N-shard fleet: per-shard services/servers plus a router
+/// fronting them all.
+fn boot_fleet(
+    n: usize,
+) -> (Vec<Arc<EvalService>>, Vec<EvalServer>, Vec<String>, EvalRouter) {
+    let mut services = Vec::with_capacity(n);
+    let mut servers = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let service = Arc::new(EvalService::new(2, 16));
+        let server = EvalServer::bind("127.0.0.1:0", Arc::clone(&service))
+            .expect("bind shard");
+        addrs.push(server.addr().to_string());
+        services.push(service);
+        servers.push(server);
+    }
+    let router = EvalRouter::bind("127.0.0.1:0", &addrs).expect("bind router");
+    (services, servers, addrs, router)
+}
+
+/// The tentpole differential: the same seeded campaign through a
+/// 3-shard router is bit-identical to the in-process run; killing one
+/// shard mid-session is hidden by the retry/re-route path (and the
+/// post-kill campaign is *still* bit-identical); and the fleet Stats
+/// snapshot obeys the sum-of-shards identities.
+#[test]
+fn routed_campaign_is_bit_identical_and_survives_a_shard_kill() {
+    let (_services, mut servers, addrs, router) = boot_fleet(3);
+    let front = router.addr().to_string();
+
+    // in-process reference (separate service, same spec + seeds)
+    let local = Coordinator::new(MachineSpec::p100_cluster());
+    let reference = local
+        .run_many("cannon", SearchAlgo::Trace, FeedbackConfig::FULL, 5, 2, 4)
+        .expect("local campaign");
+
+    let routed = Coordinator::remote(&front, "p100_cluster", SER)
+        .expect("connect through the router")
+        .run_many("cannon", SearchAlgo::Trace, FeedbackConfig::FULL, 5, 2, 4)
+        .expect("routed campaign");
+    for (r, l) in routed.iter().zip(&reference) {
+        assert_eq!(
+            r.trajectory(),
+            l.trajectory(),
+            "routed trajectory diverged from in-process"
+        );
+        assert_eq!(
+            r.best.as_ref().map(|(_, s)| s.to_bits()),
+            l.best.as_ref().map(|(_, s)| s.to_bits()),
+            "best scores must be bit-identical through the fleet"
+        );
+    }
+
+    // pick the victim *by the routing function*: the shard that owns
+    // the probe request's affinity key (the test ring mirrors the
+    // router's — same names, same order, same vnodes)
+    let probe = WireEvalRequest {
+        spec: SpecRef::Name("p100_cluster".into()),
+        scenario: Scenario::named("circuit"),
+        dsl: "Task * GPU;\nRegion * * GPU FBMEM;\n".into(),
+        mode: SER,
+        priority: PRIORITY_NORMAL,
+    };
+    let names: Vec<&str> = addrs.iter().map(String::as_str).collect();
+    let ring = HashRing::build(&names, RING_VNODES);
+    let victim = ring.route(affinity_key(&probe)).expect("3-shard ring");
+
+    // kill the owning shard, then submit the request that hashes to it:
+    // the router must answer retryably, the client must replay, and the
+    // replay must land on a live shard with a bit-identical answer
+    servers.remove(victim).kill();
+    let client = RemoteEvalClient::connect_with(
+        &front,
+        RetryPolicy {
+            deadline: Duration::from_secs(30),
+            budget: 16,
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(100),
+            seed: 13,
+        },
+    )
+    .expect("connect");
+    let fb = client.evaluate(
+        probe.spec.clone(),
+        probe.scenario.clone(),
+        &probe.dsl,
+        probe.mode,
+        probe.priority,
+    );
+    assert!(!fb.is_error(), "failover eval failed: {}", fb.line());
+    let app = mapperopt::apps::by_name("circuit").unwrap();
+    let check = Coordinator::new(MachineSpec::p100_cluster());
+    assert_eq!(
+        fb,
+        check.evaluate(&app, &probe.dsl),
+        "the re-routed answer must be bit-identical (evals are pure)"
+    );
+    assert!(client.retries() > 0, "the failover must ride the retry path");
+    assert!(router.rerouted() > 0, "the router must count the re-route");
+    let states = router.shard_states();
+    assert_eq!(states.len(), 3);
+    assert_eq!(
+        states.iter().filter(|(_, s)| *s == SHARD_DEAD).count(),
+        1,
+        "exactly the killed shard must be dead: {states:?}"
+    );
+
+    // post-kill, a whole campaign on the surviving shards must still be
+    // bit-identical to the in-process reference
+    let survived = Coordinator::remote(&front, "p100_cluster", SER)
+        .expect("reconnect through the router")
+        .run_many("cannon", SearchAlgo::Trace, FeedbackConfig::FULL, 5, 2, 4)
+        .expect("post-kill campaign");
+    for (r, l) in survived.iter().zip(&reference) {
+        assert_eq!(r.trajectory(), l.trajectory(), "post-kill divergence");
+    }
+
+    // fleet Stats: the tail lists every member, the dead one zeroed,
+    // and the aggregate counters are exactly the sum of the shard tail
+    let snap = client.stats().expect("fleet stats");
+    assert_eq!(snap.shards.len(), 3, "every member must appear in the tail");
+    let dead = snap.shards.iter().find(|s| s.state == SHARD_DEAD);
+    let dead = dead.expect("the killed shard must be flagged in the tail");
+    assert_eq!(dead.evals, 0, "a dead shard contributes zeroed counters");
+    let sums = snap.shards.iter().fold([0u64; 5], |mut acc, s| {
+        acc[0] += s.evals;
+        acc[1] += s.cache_hits;
+        acc[2] += s.submitted;
+        acc[3] += s.completed;
+        acc[4] += s.shed_requests;
+        acc
+    });
+    let totals = [
+        ("evals", snap.evals, sums[0]),
+        ("cache_hits", snap.cache_hits, sums[1]),
+        ("submitted", snap.submitted, sums[2]),
+        ("completed", snap.completed, sums[3]),
+        ("shed", snap.shed_requests, sums[4]),
+    ];
+    for (field, total, sum) in totals {
+        assert_eq!(sum, total, "fleet {field} must equal the sum of shards");
+    }
+
+    // the fleet summary names every shard block
+    let summary = client.summary().expect("fleet summary");
+    assert!(summary.contains("fleet: 3 shard(s)"), "{summary}");
+    for a in &addrs {
+        assert!(summary.contains(a.as_str()), "missing shard {a}:\n{summary}");
+    }
+
+    drop(client);
+    router.shutdown();
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+/// Replicated registries: a spec registered through the router lands on
+/// *every* shard (same id — the shards preregister built-ins in the
+/// same order), and `join_shard` replays the registration log into a
+/// joiner before it takes traffic.
+#[test]
+fn register_spec_replicates_to_all_shards_and_join_replays_the_log() {
+    let (services, servers, addrs, router) = boot_fleet(2);
+    let front = router.addr().to_string();
+    let client = RemoteEvalClient::connect(&front).expect("connect");
+
+    let mut wide = MachineSpec::p100_cluster();
+    wide.name = "4x2".into();
+    wide.nodes = 4;
+    wide.gpus_per_node = 2;
+    let wide_id = client.register_spec("4x2", &wide).expect("register via router");
+
+    // unanimous replication, aligned ids
+    for (i, service) in services.iter().enumerate() {
+        assert_eq!(
+            service.spec_id("4x2").map(|id| id.index() as u32),
+            Some(wide_id),
+            "shard {i} ({}) missed the replicated registration",
+            addrs[i]
+        );
+    }
+
+    // the replicated spec is evaluable through the router by id —
+    // whichever shard the key lands on has it under that id
+    let dsl = expert_dsl("circuit").unwrap();
+    let fb = client.evaluate(
+        SpecRef::Id(wide_id),
+        Scenario::named("circuit"),
+        dsl,
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert!(!fb.is_error(), "replicated spec not evaluable: {}", fb.line());
+
+    // a later joiner gets the log replayed before taking traffic
+    let joiner_service = Arc::new(EvalService::new(2, 16));
+    let joiner = EvalServer::bind("127.0.0.1:0", Arc::clone(&joiner_service))
+        .expect("bind joiner");
+    let joiner_addr = joiner.addr().to_string();
+    assert!(joiner_service.spec_id("4x2").is_none(), "not yet replayed");
+    router.join_shard(&joiner_addr).expect("join");
+    assert_eq!(
+        joiner_service.spec_id("4x2").map(|id| id.index() as u32),
+        Some(wide_id),
+        "join_shard must replay the registration log"
+    );
+    let states = router.shard_states();
+    assert_eq!(states.len(), 3);
+    assert!(states.iter().all(|(_, s)| *s == SHARD_UP), "{states:?}");
+
+    // double-joining a live member is refused
+    let err = router.join_shard(&joiner_addr).expect_err("already a member");
+    assert_eq!(err.kind(), std::io::ErrorKind::AlreadyExists);
+
+    drop(client);
+    router.shutdown();
+    joiner.shutdown();
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+/// Graceful membership: `leave_shard` drains a member (its in-flight
+/// work settles, nothing is dropped) and the remaining fleet keeps
+/// serving; leaving an unknown member is a classified error.
+#[test]
+fn leave_shard_drains_gracefully_and_the_fleet_keeps_serving() {
+    let (_services, servers, addrs, router) = boot_fleet(2);
+    let front = router.addr().to_string();
+    let client = RemoteEvalClient::connect(&front).expect("connect");
+
+    // traffic across both shards first
+    let dsl = expert_dsl("circuit").unwrap();
+    for i in 0..4 {
+        let fb = client.evaluate(
+            SpecRef::Name("p100_cluster".into()),
+            Scenario {
+                app: "circuit".into(),
+                params: vec![("pieces".into(), 2 + i)],
+            },
+            dsl,
+            SER,
+            PRIORITY_NORMAL,
+        );
+        assert!(!fb.is_error(), "pre-drain eval failed: {}", fb.line());
+    }
+
+    assert_eq!(
+        router
+            .leave_shard("127.0.0.1:1", Duration::from_secs(1))
+            .expect_err("unknown member")
+            .kind(),
+        std::io::ErrorKind::NotFound
+    );
+
+    router
+        .leave_shard(&addrs[0], Duration::from_secs(10))
+        .expect("drain the first shard");
+    let states = router.shard_states();
+    assert_eq!(states.len(), 1, "the drained member must detach: {states:?}");
+    assert_eq!(states[0].0, addrs[1]);
+
+    // the surviving shard serves everything (bit-identically: purity)
+    let app = mapperopt::apps::by_name("circuit").unwrap();
+    let check = Coordinator::new(MachineSpec::p100_cluster());
+    let fb = client.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario::named("circuit"),
+        dsl,
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert_eq!(fb, check.evaluate(&app, dsl), "post-drain eval diverged");
+
+    // the fleet tail now lists exactly the survivor
+    let snap = client.stats().expect("post-drain stats");
+    assert_eq!(snap.shards.len(), 1, "{:?}", snap.shards);
+    assert_eq!(snap.shards[0].addr, addrs[1]);
+    assert_eq!(snap.shards[0].state, SHARD_UP);
+
+    drop(client);
+    router.shutdown();
+    for s in servers {
+        s.shutdown();
+    }
 }

@@ -11,7 +11,9 @@ use mapperopt::apps::{
     self, task_dag, task_dag_with_gate_fanin, Access, App, DepMode, Launch,
     Metric, RegionDecl, RegionReq, TaskDag, TaskDecl,
 };
-use mapperopt::coordinator::{PrioritySnapshot, SpecSnapshot, StatsSnapshot};
+use mapperopt::coordinator::{
+    PrioritySnapshot, ShardSnapshot, SpecSnapshot, StatsSnapshot,
+};
 use mapperopt::dsl::{MappingPolicy, TaskCtx};
 use mapperopt::feedback::SystemFeedback;
 use mapperopt::machine::{MachineSpec, MemKind, ProcKind, ProcSpace};
@@ -20,7 +22,8 @@ use mapperopt::net::proto::{
     SpecRef, WireEvalRequest, MAX_BATCH_ITEMS, MAX_FRAME_LEN, WIRE_VERSION,
 };
 use mapperopt::net::{
-    ChaosConfig, ChaosProxy, EvalServer, RemoteEvalClient, RetryPolicy,
+    ChaosConfig, ChaosProxy, EvalServer, HashRing, RemoteEvalClient,
+    RetryPolicy, RING_VNODES,
 };
 use mapperopt::optimizer::{agent::random_index_gene, AgentGenome, AppInfo, LayoutGene};
 use mapperopt::sim::{
@@ -701,6 +704,20 @@ fn rand_snapshot(rng: &mut Rng) -> StatsSnapshot {
                 queued: rng.below(1000) as u64,
             })
             .collect(),
+        shards: (0..rng.below(4))
+            .map(|_| ShardSnapshot {
+                addr: rand_string(rng),
+                state: rng.below(3) as u8,
+                routed: rng.below(100_000) as u64,
+                evals: rng.below(100_000) as u64,
+                cache_hits: rng.below(100_000) as u64,
+                decision_hits: rng.below(1000) as u64,
+                submitted: rng.below(100_000) as u64,
+                completed: rng.below(100_000) as u64,
+                shed_requests: rng.below(1000) as u64,
+                max_queue_depth: rng.below(1000) as u64,
+            })
+            .collect(),
     }
 }
 
@@ -772,6 +789,144 @@ fn property_wire_codec_roundtrips_bit_identically() {
             assert_eq!(bytes[0], WIRE_VERSION);
             assert_eq!(Response::decode(&bytes).unwrap(), resp, "response roundtrip");
         }
+    });
+}
+
+/// Fleet-stats wire tail follows the established tail rules for
+/// arbitrary snapshots: cutting the whole shard section off decodes to
+/// the same snapshot with an empty fleet (the zero-fill view an older
+/// peer would produce), any cut *inside* the section classifies as
+/// truncation, bytes past it classify as trailing, and an empty fleet
+/// is elided so single-server snapshots stay byte-identical with
+/// pre-fleet peers.
+#[test]
+fn property_fleet_stats_tail_zero_fill_and_trailing() {
+    check(0xF1EE7, env_cases(200), |rng: &mut Rng| {
+        let mut snap = rand_snapshot(rng);
+        if snap.shards.is_empty() {
+            snap.shards.push(ShardSnapshot {
+                addr: rand_string(rng),
+                state: rng.below(3) as u8,
+                routed: rng.below(100_000) as u64,
+                ..ShardSnapshot::default()
+            });
+        }
+        let bytes = Response::Stats(snap.clone()).encode();
+
+        let single = StatsSnapshot { shards: Vec::new(), ..snap.clone() };
+        let single_bytes = Response::Stats(single.clone()).encode();
+        let section = bytes.len() - single_bytes.len();
+        assert!(section > 0, "a populated fleet tail must extend the payload");
+
+        // zero-fill: a pre-fleet peer's view (section cut at its start)
+        match Response::decode(&bytes[..bytes.len() - section]).unwrap() {
+            Response::Stats(got) => assert_eq!(got, single),
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+
+        // truncation inside the section is corruption, never zero-fill
+        let cut = 1 + rng.below(section);
+        if cut < section {
+            let err = Response::decode(&bytes[..bytes.len() - cut]).unwrap_err();
+            assert!(
+                matches!(err, DecodeError::Truncated),
+                "cut {cut}/{section}: unexpected {err:?}"
+            );
+        }
+
+        // bytes past the section violate the total-decode rule
+        let extra = 1 + rng.below(8);
+        let mut trailing = bytes.clone();
+        trailing.extend((0..extra).map(|_| rng.below(256) as u8));
+        match Response::decode(&trailing).unwrap_err() {
+            DecodeError::Trailing(n) => assert_eq!(n, extra),
+            // random trailing bytes may be swallowed into the section
+            // only if they extend a *shorter* claimed shard count --
+            // impossible here: the count is already fully consumed
+            other => panic!("trailing bytes produced {other:?}"),
+        }
+    });
+}
+
+/// Consistent-hash routing is stable under membership churn: for a
+/// random fleet and a random join or leave, every key either keeps its
+/// owner or (join) moves to the *new* member / (leave) moves off the
+/// *departed* member — never a third-party reshuffle — and the moved
+/// fraction stays a minority share, not a rebuild.  Build order never
+/// matters.
+#[test]
+fn property_ring_membership_churn_moves_only_the_affected_keys() {
+    check(0x4146, env_cases(60), |rng: &mut Rng| {
+        let n = 2 + rng.below(6); // 2..=7 shards
+        let nodes: Vec<String> =
+            (0..n).map(|i| format!("10.0.0.{}:94{:02}", i + 1, i)).collect();
+        let names: Vec<&str> = nodes.iter().map(String::as_str).collect();
+        let ring = HashRing::build(&names, RING_VNODES);
+
+        // a shuffled build of the same membership routes identically
+        let mut shuffled = names.clone();
+        for i in (1..shuffled.len()).rev() {
+            shuffled.swap(i, rng.below(i + 1));
+        }
+        let ring_shuffled = HashRing::build(&shuffled, RING_VNODES);
+
+        // churn: drop one member (leave) or add a fresh one (join)
+        let leaving = rng.chance(0.5);
+        let victim = rng.below(n);
+        let churned: Vec<&str> = if leaving {
+            names
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != victim)
+                .map(|(_, s)| *s)
+                .collect()
+        } else {
+            let mut v = names.clone();
+            v.push("10.0.1.99:9499");
+            v
+        };
+        let ring_churned = HashRing::build(&churned, RING_VNODES);
+
+        let keys = 2_000;
+        let mut moved = 0u32;
+        for _ in 0..keys {
+            let key = rng.next_u64();
+            let before = names[ring.route(key).unwrap()];
+            assert_eq!(
+                before,
+                shuffled[ring_shuffled.route(key).unwrap()],
+                "membership order changed the routing"
+            );
+            let after = churned[ring_churned.route(key).unwrap()];
+            if before == after {
+                continue;
+            }
+            moved += 1;
+            if leaving {
+                assert_eq!(
+                    before, names[victim],
+                    "a key moved off a shard that did not leave"
+                );
+            } else {
+                assert_eq!(
+                    after, "10.0.1.99:9499",
+                    "a key moved to a shard that did not just join"
+                );
+            }
+        }
+        // the affected member owns ~1/N (leave) or ~1/(N+1) (join) of
+        // the keyspace; give the vnode variance 2x slack — anything
+        // beyond that is a reshuffle, which consistent hashing forbids
+        let expected = if leaving {
+            keys as f64 / n as f64
+        } else {
+            keys as f64 / (n as f64 + 1.0)
+        };
+        assert!(moved > 0, "the affected member owned no keys at all");
+        assert!(
+            (moved as f64) < 2.0 * expected + 50.0,
+            "{moved}/{keys} keys moved across {n} shards — reshuffle"
+        );
     });
 }
 
