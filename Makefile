@@ -36,6 +36,11 @@
 #                    proxy (delays, corruption, truncation, resets) and
 #                    assert it is bit-identical to a clean local run
 #                    with retries and reconnects actually exercised
+#                    (on failure the server's flight recorder is dumped)
+#   make trace-smoke run a traced remote campaign through a 2-shard
+#                    routed fleet and assert tracing is inert
+#                    (bit-identical to untraced) with a flight-recorder
+#                    span covering every traced evaluation
 #   make artifacts   AOT-lower the python task bodies to artifacts/*.hlo.txt
 #                    (needed only for the PJRT runtime path; tests skip
 #                    cleanly when artifacts/ is absent)
@@ -45,7 +50,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 PROPTEST_CASES ?= 400
 
-.PHONY: build test verify test-props bench-smoke bench-json serve-smoke chaos-smoke loadtest-smoke fleet-smoke fmt fmt-check clippy ci artifacts figures clean
+.PHONY: build test verify test-props bench-smoke bench-json serve-smoke chaos-smoke loadtest-smoke fleet-smoke trace-smoke fmt fmt-check clippy ci artifacts figures clean
 
 build:
 	$(CARGO) build --release
@@ -87,6 +92,9 @@ loadtest-smoke:
 fleet-smoke:
 	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release -- loadtest \
 		--router --shards 2 --clients 200 --duration 3
+
+trace-smoke:
+	MAPPEROPT_SERVE_DEADLINE_S=300 $(CARGO) run --release -- trace-smoke
 
 fmt:
 	$(CARGO) fmt --all

@@ -63,6 +63,11 @@ use crate::apps::{self, App};
 use crate::dsl::MappingPolicy;
 use crate::feedback::{FeedbackConfig, SystemFeedback};
 use crate::machine::MachineSpec;
+use crate::obs::{
+    fmt_ns, merge_stage_hists, CachePath, EvalTelemetry, SpanBuilder,
+    SpanRecord, Stage, StageHistSnapshot, Telemetry, SPAN_ERROR, SPAN_OK,
+    SPAN_SHED,
+};
 use crate::sim::{
     execute_plan, execute_plan_delta, execute_plan_recorded, resolve_decisions,
     DeltaOutcome, EvalPlan, ExecMode, Executor, ResolvedDecisions,
@@ -318,6 +323,10 @@ pub struct EvalRequest {
     /// see the priority ring in the queue).  Requests of equal priority
     /// stay FIFO.
     pub priority: u8,
+    /// Client-stamped trace id (0 = untraced).  Inert: it tags the
+    /// span record and the feedback's telemetry rider but never enters
+    /// cache keys, scheduling, or the evaluation itself.
+    pub trace_id: u64,
 }
 
 impl EvalRequest {
@@ -334,12 +343,19 @@ impl EvalRequest {
             dsl: dsl.into(),
             mode,
             priority: PRIORITY_NORMAL,
+            trace_id: 0,
         }
     }
 
     /// Builder-style priority override.
     pub fn with_priority(mut self, priority: u8) -> EvalRequest {
         self.priority = priority;
+        self
+    }
+
+    /// Builder-style trace-id stamp (see `trace_id`).
+    pub fn with_trace(mut self, trace_id: u64) -> EvalRequest {
+        self.trace_id = trace_id;
         self
     }
 }
@@ -799,6 +815,12 @@ pub struct StatsSnapshot {
     /// single server.  Rides at the end of the wire payload under the
     /// zero-fill decode rule, like every tail section before it.
     pub shards: Vec<ShardSnapshot>,
+    /// Per-stage latency histograms (only stages that recorded at least
+    /// one sample).  Rides after the shard section under the same
+    /// zero-fill tail rule; [`StatsSnapshot::aggregate_fleet`] merges
+    /// them bucket-wise across members, so a fleet histogram equals the
+    /// histogram of the concatenated per-shard samples.
+    pub stage_hists: Vec<StageHistSnapshot>,
 }
 
 impl StatsSnapshot {
@@ -862,6 +884,7 @@ impl StatsSnapshot {
                 out.refused_connections.saturating_add(s.refused_connections);
             out.retries = out.retries.saturating_add(s.retries);
             out.reconnects = out.reconnects.saturating_add(s.reconnects);
+            merge_stage_hists(&mut out.stage_hists, &s.stage_hists);
             occupancy_weighted += s.batch_occupancy * s.evals as f64;
             occupancy_weight = occupancy_weight.saturating_add(s.evals);
             for sp in &s.specs {
@@ -944,6 +967,9 @@ struct Job {
     req: EvalRequest,
     app_fp: u64,
     slot: Arc<TicketSlot>,
+    /// When the job entered the queue (the queue-wait stage start and
+    /// the span epoch of the shard-side trace).
+    enqueued: Instant,
 }
 
 struct JobQueue {
@@ -1005,6 +1031,35 @@ struct Inner {
     high_water: usize,
     /// Worker-pool size (used to size fair-share batches).
     pool_size: usize,
+    /// Stage-latency histograms, cache-path counters, and the flight
+    /// recorder (shared with the server fronting this service).
+    obs: Arc<Telemetry>,
+}
+
+/// Per-evaluation observation the leader path fills in: which cache
+/// path served the request and the stage timings along the way.  Plain
+/// data, collected on the stack and folded into [`Telemetry`] *after*
+/// the evaluation resolves — observation never holds a lock or touches
+/// the caches, so it cannot perturb results.
+struct EvalObs {
+    path: CachePath,
+    /// Pure simulation time of this serving (0 for cache hits).
+    sim_ns: u64,
+    /// `(stage, start instant, duration)` in observation order.
+    stages: Vec<(Stage, Instant, u64)>,
+}
+
+impl EvalObs {
+    fn new() -> EvalObs {
+        EvalObs { path: CachePath::Unknown, sim_ns: 0, stages: Vec::new() }
+    }
+
+    /// Close a stage opened at `started` (duration = elapsed since).
+    fn note(&mut self, stage: Stage, started: Instant) -> u64 {
+        let dur_ns = started.elapsed().as_nanos() as u64;
+        self.stages.push((stage, started, dur_ns));
+        dur_ns
+    }
 }
 
 /// How the leader path produced a feedback: a fresh simulation (or
@@ -1058,6 +1113,7 @@ impl Inner {
     /// per-spec and service-wide stats.  No lock is held across
     /// compilation or simulation, so a panicking evaluation cannot
     /// poison any cache.
+    #[allow(clippy::too_many_arguments)]
     fn evaluate(
         &self,
         spec_id: SpecId,
@@ -1065,13 +1121,17 @@ impl Inner {
         app: &App,
         dsl: &str,
         mode: ExecMode,
+        obs: &mut EvalObs,
     ) -> SystemFeedback {
+        let t_in = Instant::now();
         let entry = self.registry.entry(spec_id);
         let key = eval_key(app_fp, dsl, entry.fp, mode);
         let hit = self.cache.lock().unwrap().get(&key).cloned();
         if let Some(fb) = hit {
             self.stats.coord.cache_hits.fetch_add(1, Ordering::Relaxed);
             self.stats.note_spec(spec_id, true);
+            obs.path = CachePath::Hit;
+            obs.note(Stage::CacheHit, t_in);
             return fb;
         }
         // become the leader for this key, or join a running evaluation
@@ -1087,6 +1147,8 @@ impl Inner {
                 if let Some(fb) = hit {
                     self.stats.coord.cache_hits.fetch_add(1, Ordering::Relaxed);
                     self.stats.note_spec(spec_id, true);
+                    obs.path = CachePath::Hit;
+                    obs.note(Stage::CacheHit, t_in);
                     return fb;
                 }
                 inf.insert(key, Arc::clone(&slot));
@@ -1099,13 +1161,15 @@ impl Inner {
             let fb = leader.wait();
             self.stats.coord.cache_hits.fetch_add(1, Ordering::Relaxed);
             self.stats.note_spec(spec_id, true);
+            obs.path = CachePath::Follower;
+            obs.note(Stage::CacheHit, t_in);
             return fb;
         }
         let _guard = InFlightGuard { inner: self, key, slot: Arc::clone(&slot) };
         let t0 = Instant::now();
         let mut panic_count =
             PanicEvalCount { stats: &self.stats, spec_id, armed: true };
-        let served = self.evaluate_semantic(app_fp, app, dsl, mode, &entry);
+        let served = self.evaluate_semantic(app_fp, app, dsl, mode, &entry, obs);
         panic_count.armed = false;
         let fb = match served {
             Served::Decision(fb) => {
@@ -1210,15 +1274,23 @@ impl Inner {
         dsl: &str,
         mode: ExecMode,
         entry: &SpecEntry,
+        obs: &mut EvalObs,
     ) -> Served {
+        let t_sem = Instant::now();
         let policy = match self.policy_for(dsl, entry) {
             Ok(p) => p,
-            Err(ce) => return Served::Fresh(SystemFeedback::CompileError(ce)),
+            Err(ce) => {
+                // compile errors classify as cold: nothing was cached
+                obs.path = CachePath::Cold;
+                obs.note(Stage::CacheCold, t_sem);
+                return Served::Fresh(SystemFeedback::CompileError(ce));
+            }
         };
         let Some(dep) = mode.dep_mode() else {
             // bulk-sync has no DAG plan; run the legacy loop directly —
             // through the thread's reusable arena, so even the legacy
             // engine allocates nothing structurally in steady state
+            let t_sim = Instant::now();
             let fb = ARENA.with(|a| {
                 let mut arena = a.borrow_mut();
                 match Executor::with_mode(&entry.spec, mode)
@@ -1228,6 +1300,9 @@ impl Inner {
                     Err(xe) => SystemFeedback::ExecutionError(xe.to_string()),
                 }
             });
+            obs.sim_ns = obs.note(Stage::ExecutePlan, t_sim);
+            obs.path = CachePath::Cold;
+            obs.note(Stage::CacheCold, t_sem);
             return Served::Fresh(fb);
         };
         let plan = self.plan_for(app_fp, app, mode, dep);
@@ -1241,7 +1316,10 @@ impl Inner {
                 }
             })
         };
-        match resolve_decisions(&plan, app, &policy, &entry.spec) {
+        let t_resolve = Instant::now();
+        let resolution = resolve_decisions(&plan, app, &policy, &entry.spec);
+        obs.note(Stage::ResolveDecisions, t_resolve);
+        match resolution {
             Ok(resolved) => {
                 let dkey = fnv1a(&[
                     &app_fp.to_le_bytes(),
@@ -1260,6 +1338,8 @@ impl Inner {
                             .unwrap()
                             .insert((app_fp, entry.fp, mode), Arc::clone(s));
                     }
+                    obs.path = CachePath::Decision;
+                    obs.note(Stage::CacheDecisionHit, t_sem);
                     return Served::Decision(e.fb);
                 }
                 let resolved = Arc::new(resolved);
@@ -1276,6 +1356,7 @@ impl Inner {
                     .cloned();
                 let mut spliced: Option<SystemFeedback> = None;
                 if let Some(snap) = incumbent {
+                    let t_delta = Instant::now();
                     let outcome = ARENA.with(|a| {
                         let mut arena = a.borrow_mut();
                         execute_plan_delta(
@@ -1296,6 +1377,11 @@ impl Inner {
                             self.stats
                                 .spliced_point_tasks
                                 .fetch_add(replayed, Ordering::Relaxed);
+                            obs.sim_ns = obs
+                                .sim_ns
+                                .saturating_add(obs.note(Stage::ExecutePlan, t_delta));
+                            obs.path = CachePath::Splice;
+                            obs.note(Stage::CacheSplice, t_sem);
                             spliced = Some(SystemFeedback::from_metrics(&metrics));
                         }
                         DeltaOutcome::Fallback(_) => {
@@ -1308,6 +1394,7 @@ impl Inner {
                     // next delta still diffs against the accepted base
                     Some(fb) => (fb, None),
                     None => {
+                        let t_sim = Instant::now();
                         let (res, snap) = ARENA.with(|a| {
                             let mut arena = a.borrow_mut();
                             execute_plan_recorded(
@@ -1319,6 +1406,11 @@ impl Inner {
                                 &mut arena,
                             )
                         });
+                        obs.sim_ns = obs
+                            .sim_ns
+                            .saturating_add(obs.note(Stage::ExecutePlan, t_sim));
+                        obs.path = CachePath::Cold;
+                        obs.note(Stage::CacheCold, t_sem);
                         let fb = match res {
                             Ok(m) => SystemFeedback::from_metrics(&m),
                             Err(xe) => {
@@ -1348,8 +1440,71 @@ impl Inner {
             // a resolution error is not necessarily the evaluation's
             // outcome (the legacy engines interleave checks with
             // simulation); replay cold for bit-identical classification
-            Err(_) => Served::Fresh(simulate(None)),
+            Err(_) => {
+                let t_sim = Instant::now();
+                let fb = simulate(None);
+                obs.sim_ns = obs
+                    .sim_ns
+                    .saturating_add(obs.note(Stage::ExecutePlan, t_sim));
+                obs.path = CachePath::Cold;
+                obs.note(Stage::CacheCold, t_sem);
+                Served::Fresh(fb)
+            }
         }
+    }
+
+    /// [`Self::evaluate`] plus the telemetry fold: stage histograms,
+    /// cache-path counters, the per-eval telemetry rider on the
+    /// returned feedback, and (for traced / errored / slow requests) a
+    /// finished span in the flight recorder.  `t0` is the span epoch —
+    /// the enqueue instant on the worker path, the call instant on the
+    /// synchronous path — and `queue_ns` the already-measured queue
+    /// wait (0 when the request never queued).  Observation is strictly
+    /// after-the-fact, so this wrapper cannot change any result.
+    #[allow(clippy::too_many_arguments)]
+    fn evaluate_observed(
+        &self,
+        spec_id: SpecId,
+        app_fp: u64,
+        app: &App,
+        dsl: &str,
+        mode: ExecMode,
+        trace_id: u64,
+        t0: Instant,
+        queue_ns: u64,
+    ) -> SystemFeedback {
+        let mut obs = EvalObs::new();
+        let mut fb = self.evaluate(spec_id, app_fp, app, dsl, mode, &mut obs);
+        if queue_ns > 0 {
+            self.obs.stages.record(Stage::QueueWait, queue_ns);
+        }
+        for &(stage, _, dur_ns) in &obs.stages {
+            self.obs.stages.record(stage, dur_ns);
+        }
+        self.obs.note_path(obs.path);
+        fb.set_telemetry(EvalTelemetry {
+            queue_ns,
+            cache_path: obs.path as u8,
+            sim_ns: obs.sim_ns,
+        });
+        let outcome = match &fb {
+            SystemFeedback::Performance { .. } => SPAN_OK,
+            _ => SPAN_ERROR,
+        };
+        let total_ns = t0.elapsed().as_nanos() as u64;
+        if self.obs.keep_span(trace_id, outcome, total_ns) {
+            let mut span = SpanBuilder::begin_at(trace_id, t0);
+            if queue_ns > 0 {
+                span.stage(Stage::QueueWait, t0, queue_ns);
+            }
+            for &(stage, started, dur_ns) in &obs.stages {
+                span.stage(stage, started, dur_ns);
+            }
+            span.cache_path(obs.path);
+            span.outcome(outcome);
+            self.obs.recorder.push(span.finish());
+        }
+        fb
     }
 }
 
@@ -1391,20 +1546,30 @@ fn worker_loop(inner: &Inner) {
             batch
         };
         for job in batch {
+            let queue_ns = job.enqueued.elapsed().as_nanos() as u64;
             let fb = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                inner.evaluate(
+                inner.evaluate_observed(
                     job.req.spec_id,
                     job.app_fp,
                     &job.req.app,
                     &job.req.dsl,
                     job.req.mode,
+                    job.req.trace_id,
+                    job.enqueued,
+                    queue_ns,
                 )
             }))
             .unwrap_or_else(|p| {
-                SystemFeedback::ExecutionError(format!(
+                // a panicking evaluation still leaves a forensic span
+                let fb = SystemFeedback::ExecutionError(format!(
                     "Internal: evaluation worker panicked: {}",
                     panic_message(&*p)
-                ))
+                ));
+                let mut span = SpanBuilder::begin_at(job.req.trace_id, job.enqueued);
+                span.stage(Stage::QueueWait, job.enqueued, queue_ns);
+                span.outcome(SPAN_ERROR);
+                inner.obs.recorder.push(span.finish());
+                fb
             });
             job.slot.fill(fb);
             inner.stats.completed.fetch_add(1, Ordering::Relaxed);
@@ -1458,6 +1623,7 @@ impl EvalService {
             capacity,
             high_water,
             pool_size: workers.max(1),
+            obs: Arc::new(Telemetry::from_env()),
         });
         inner.registry.register("p100_cluster", MachineSpec::p100_cluster());
         inner.registry.register("small", MachineSpec::small());
@@ -1583,7 +1749,22 @@ impl EvalService {
             // a single server is not a fleet; routers fill this tail
             // via StatsSnapshot::aggregate_fleet
             shards: Vec::new(),
+            stage_hists: self.inner.obs.stages.snapshots(),
         }
+    }
+
+    /// This service's telemetry hub (stage histograms, cache-path
+    /// counters, flight recorder).  The server fronting the service
+    /// records its admission / reply-write stages here too, so one
+    /// snapshot covers the whole shard.
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.inner.obs
+    }
+
+    /// Copy of the flight-recorder ring, oldest span first (what the
+    /// `TraceDump` wire frame ships).
+    pub fn trace_dump(&self) -> Vec<SpanRecord> {
+        self.inner.obs.recorder.dump()
     }
 
     /// Entries in the shared cross-campaign (text-level) cache.
@@ -1621,7 +1802,16 @@ impl EvalService {
         dsl: &str,
         mode: ExecMode,
     ) -> SystemFeedback {
-        self.inner.evaluate(spec_id, app_fingerprint(app), app, dsl, mode)
+        self.inner.evaluate_observed(
+            spec_id,
+            app_fingerprint(app),
+            app,
+            dsl,
+            mode,
+            0,
+            Instant::now(),
+            0,
+        )
     }
 
     /// Enqueue a request; blocks while the queue is at capacity.
@@ -1639,7 +1829,10 @@ impl EvalService {
             while q.jobs.len() >= self.inner.capacity && !q.closed {
                 q = self.inner.not_full.wait(q).unwrap();
             }
-            q.jobs.push(priority, Job { req, app_fp, slot: Arc::clone(&slot) });
+            q.jobs.push(
+                priority,
+                Job { req, app_fp, slot: Arc::clone(&slot), enqueued: Instant::now() },
+            );
             self.inner.stats.note_depth(q.jobs.len());
             self.inner.stats.note_priority(priority, q.jobs.depth_of(priority));
             self.inner.not_empty.notify_one();
@@ -1665,6 +1858,7 @@ impl EvalService {
         self.ensure_workers();
         let app_fp = app_fingerprint(&req.app);
         let priority = req.priority;
+        let trace_id = req.trace_id;
         let slot = Arc::new(TicketSlot::default());
         let mut victim: Option<Job> = None;
         let mut hint = 0u64;
@@ -1686,7 +1880,15 @@ impl EvalService {
                     // outranked: evict the newest lowest-priority job
                     victim = q.jobs.shed_lowest();
                 }
-                q.jobs.push(priority, Job { req, app_fp, slot: Arc::clone(&slot) });
+                q.jobs.push(
+                    priority,
+                    Job {
+                        req,
+                        app_fp,
+                        slot: Arc::clone(&slot),
+                        enqueued: Instant::now(),
+                    },
+                );
                 self.inner.stats.note_depth(q.jobs.len());
                 self.inner.stats.note_priority(priority, q.jobs.depth_of(priority));
                 self.inner.not_empty.notify_one();
@@ -1696,18 +1898,20 @@ impl EvalService {
         self.inner.stats.submitted.fetch_add(1, Ordering::Relaxed);
         if !queued {
             self.inner.stats.note_priority(priority, 0);
-            self.shed_resolve(&slot, hint);
+            self.shed_resolve(&slot, hint, trace_id);
         }
         if let Some(job) = victim {
-            self.shed_resolve(&job.slot, hint);
+            self.shed_resolve(&job.slot, hint, job.req.trace_id);
         }
         EvalTicket { slot }
     }
 
     /// Resolve a shed request: mark the ticket, fill it with the
     /// classified error, and keep the submission accounting balanced
-    /// (a shed request completes without an eval or a cache hit).
-    fn shed_resolve(&self, slot: &TicketSlot, hint_ms: u64) {
+    /// (a shed request completes without an eval or a cache hit).  The
+    /// shed also lands in the telemetry: a path counter bump and a
+    /// flight-recorder span (sheds are always forensic).
+    fn shed_resolve(&self, slot: &TicketSlot, hint_ms: u64, trace_id: u64) {
         let hint_ms = hint_ms.max(1);
         slot.shed.store(hint_ms, Ordering::Relaxed);
         slot.fill(SystemFeedback::ExecutionError(format!(
@@ -1717,6 +1921,11 @@ impl EvalService {
         )));
         self.inner.stats.shed_requests.fetch_add(1, Ordering::Relaxed);
         self.inner.stats.completed.fetch_add(1, Ordering::Relaxed);
+        self.inner.obs.note_path(CachePath::Shed);
+        let mut span = SpanBuilder::begin(trace_id);
+        span.cache_path(CachePath::Shed);
+        span.outcome(SPAN_SHED);
+        self.inner.obs.recorder.push(span.finish());
     }
 
     /// Bump the zombie-connection reap counter (the server's idle/read
@@ -1783,6 +1992,7 @@ impl EvalService {
                     dsl: src.to_string(),
                     mode: c.mode,
                     priority: c.priority,
+                    trace_id: 0,
                 })
                 .wait()
             }
@@ -1838,6 +2048,28 @@ impl EvalService {
                 "  priority {:>3}       submitted {:>5}  max depth {:>3}\n",
                 priority, c.submitted, c.max_depth,
             ));
+        }
+        let hists = self.inner.obs.stages.snapshots();
+        if !hists.is_empty() {
+            out.push_str("stages:");
+            for h in &hists {
+                out.push_str(&format!(
+                    " {} p50 {} / p99 {} (n={})",
+                    Stage::name_of(h.stage),
+                    fmt_ns(h.hist.percentile(50.0)),
+                    fmt_ns(h.hist.percentile(99.0)),
+                    h.hist.count(),
+                ));
+            }
+            out.push('\n');
+        }
+        let paths = self.inner.obs.path_counts();
+        if !paths.is_empty() {
+            out.push_str("paths:");
+            for (p, n) in paths {
+                out.push_str(&format!(" {} {n}", p.name()));
+            }
+            out.push('\n');
         }
         out
     }
@@ -2406,5 +2638,78 @@ mod tests {
         assert_eq!(snap.dirty_fallbacks, 0);
         let summary = warm.summary();
         assert!(summary.contains("delta:"), "{summary}");
+        // the splice path classifies in the telemetry too
+        assert!(summary.contains(" splice "), "{summary}");
+    }
+
+    #[test]
+    fn telemetry_rides_feedback_without_affecting_equality() {
+        let s = service();
+        let p100 = s.spec_id("p100_cluster").unwrap();
+        let app = apps::by_name("circuit").unwrap();
+        let dsl = expert_dsl("circuit").unwrap();
+        let cold = s.evaluate(p100, &app, dsl, ExecMode::Serialized);
+        let t = cold.telemetry().expect("performance feedback carries telemetry");
+        assert_eq!(t.path(), CachePath::Cold);
+        assert!(t.sim_ns > 0, "a cold eval simulates");
+        assert_eq!(t.queue_ns, 0, "the synchronous path never queues");
+        let hit = s.evaluate(p100, &app, dsl, ExecMode::Serialized);
+        assert_eq!(cold, hit, "telemetry must not enter feedback equality");
+        assert_eq!(hit.telemetry().unwrap().path(), CachePath::Hit);
+        assert_eq!(hit.telemetry().unwrap().sim_ns, 0);
+        // stage histograms surface in snapshot and summary
+        let snap = s.snapshot();
+        let stages: Vec<u8> = snap.stage_hists.iter().map(|h| h.stage).collect();
+        assert!(stages.contains(&(Stage::CacheCold as u8)), "{stages:?}");
+        assert!(stages.contains(&(Stage::CacheHit as u8)), "{stages:?}");
+        assert!(stages.contains(&(Stage::ExecutePlan as u8)), "{stages:?}");
+        let summary = s.summary();
+        assert!(summary.contains("stages:"), "{summary}");
+        assert!(summary.contains("paths:"), "{summary}");
+        assert!(summary.contains(" cold 1"), "{summary}");
+        assert!(summary.contains(" hit 1"), "{summary}");
+    }
+
+    #[test]
+    fn traced_submissions_land_spans_in_the_flight_recorder() {
+        let s = service();
+        let p100 = s.spec_id("p100_cluster").unwrap();
+        let app = Arc::new(apps::by_name("circuit").unwrap());
+        let dsl = expert_dsl("circuit").unwrap();
+        let fb = s
+            .submit(
+                EvalRequest::new(p100, Arc::clone(&app), dsl, ExecMode::Serialized)
+                    .with_trace(0xAB),
+            )
+            .wait();
+        let t = fb.telemetry().expect("queued eval carries telemetry");
+        assert!(t.queue_ns > 0, "queued requests record their wait");
+        let spans = s.trace_dump();
+        let span = spans
+            .iter()
+            .find(|sp| sp.trace_id == 0xAB)
+            .expect("traced request must land a span");
+        assert_eq!(span.outcome, crate::obs::SPAN_OK);
+        assert_eq!(span.cache_path, CachePath::Cold as u8);
+        let stage_sum: u64 = span.stages.iter().map(|st| st.dur_ns).sum();
+        assert!(
+            stage_sum <= span.total_ns,
+            "stage durations ({stage_sum}) exceed wall time ({})",
+            span.total_ns
+        );
+        assert!(
+            span.stages.iter().any(|st| st.stage == Stage::QueueWait as u8),
+            "{span:?}"
+        );
+        // an untraced, fast, successful request stays out of the ring
+        let before = s.trace_dump().len();
+        s.submit(EvalRequest::new(p100, app, dsl, ExecMode::Serialized)).wait();
+        assert_eq!(s.trace_dump().len(), before, "untraced hit must not record");
+        // queue wait surfaces in the wire snapshot
+        let snap = s.snapshot();
+        assert!(snap
+            .stage_hists
+            .iter()
+            .any(|h| h.stage == Stage::QueueWait as u8));
     }
 }

@@ -5,15 +5,54 @@
 //! [`FeedbackConfig::profile`] — richer-than-scalar signals for the
 //! optimizer's credit assignment.
 
+use crate::obs::EvalTelemetry;
 use crate::sim::{Metrics, PerfProfile};
 
 /// The three system-feedback categories of Section 4.2.  Performance
-/// feedback optionally carries the engine's critical-path profile.
-#[derive(Debug, Clone, PartialEq)]
+/// feedback optionally carries the engine's critical-path profile, plus
+/// a per-eval fabric-telemetry rider (`{queue_ns, cache_path, sim_ns}`)
+/// describing how *this serving* of the request went — so an optimizer
+/// can tell a slow mapper from a congested fabric.
+///
+/// Telemetry is **excluded from equality** (see the manual
+/// [`PartialEq`]): two evaluations of the same mapper are the same
+/// result no matter which cache path or queue depth served them, which
+/// is also what keeps tracing inert for cache-consistency assertions.
+#[derive(Debug, Clone)]
 pub enum SystemFeedback {
     CompileError(String),
     ExecutionError(String),
-    Performance { line: String, value: f64, profile: Option<PerfProfile> },
+    Performance {
+        line: String,
+        value: f64,
+        profile: Option<PerfProfile>,
+        /// Fabric telemetry of the serving that produced this value
+        /// (`None` off the serving path or from older peers).
+        telemetry: Option<EvalTelemetry>,
+    },
+}
+
+impl PartialEq for SystemFeedback {
+    fn eq(&self, other: &SystemFeedback) -> bool {
+        match (self, other) {
+            (SystemFeedback::CompileError(a), SystemFeedback::CompileError(b)) => {
+                a == b
+            }
+            (
+                SystemFeedback::ExecutionError(a),
+                SystemFeedback::ExecutionError(b),
+            ) => a == b,
+            (
+                SystemFeedback::Performance {
+                    line: la, value: va, profile: pa, ..
+                },
+                SystemFeedback::Performance {
+                    line: lb, value: vb, profile: pb, ..
+                },
+            ) => la == lb && va == vb && pa == pb,
+            _ => false,
+        }
+    }
 }
 
 impl SystemFeedback {
@@ -22,6 +61,24 @@ impl SystemFeedback {
             line: m.feedback_line(),
             value: m.throughput,
             profile: m.profile.clone(),
+            telemetry: None,
+        }
+    }
+
+    /// The fabric-telemetry rider, when the serving path attached one.
+    pub fn telemetry(&self) -> Option<&EvalTelemetry> {
+        match self {
+            SystemFeedback::Performance { telemetry, .. } => telemetry.as_ref(),
+            _ => None,
+        }
+    }
+
+    /// Attach (or overwrite) the fabric telemetry of this serving.
+    /// No-op on error feedback, which carries its classification in the
+    /// message instead.
+    pub fn set_telemetry(&mut self, t: EvalTelemetry) {
+        if let SystemFeedback::Performance { telemetry, .. } = self {
+            *telemetry = Some(t);
         }
     }
 
@@ -286,6 +343,7 @@ mod tests {
                 line: "Performance Metric: Execution time is 0.03s.".into(),
                 value: 33.0,
                 profile: None,
+                telemetry: None,
             },
             FeedbackConfig::FULL,
         );
@@ -299,6 +357,7 @@ mod tests {
                 line: "Performance Metric: Achieved throughput = 4877 GFLOPS".into(),
                 value: 4877.0,
                 profile: None,
+                telemetry: None,
             },
             FeedbackConfig::FULL,
         );
@@ -327,6 +386,7 @@ mod tests {
                 mean_slack_s: 0.0011,
                 zero_slack_tasks: 40,
             }),
+            telemetry: None,
         }
     }
 
@@ -360,6 +420,7 @@ mod tests {
                 line: "Performance Metric: Execution time is 0.03s.".into(),
                 value: 33.0,
                 profile: None,
+                telemetry: None,
             },
             FeedbackConfig::PROFILE,
         );

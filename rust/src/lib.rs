@@ -26,6 +26,7 @@ pub mod harness;
 pub mod machine;
 pub mod mapping;
 pub mod net;
+pub mod obs;
 pub mod optimizer;
 pub mod runtime;
 pub mod sim;

@@ -20,6 +20,14 @@
 //!                               clients at an eval server (in-process by
 //!                               default, --addr for a remote one) and
 //!                               report throughput + p50/p99/p999 latency
+//!   top --remote HOST:PORT    — fetch a live stats snapshot from a
+//!                               `serve` or `route` front and render the
+//!                               per-stage latency breakdown (obs::hist)
+//!   trace-smoke               — run a traced remote campaign through a
+//!                               2-shard routed fleet, assert tracing is
+//!                               inert (bit-identical to untraced) and
+//!                               that the flight recorder captured a
+//!                               span for every traced evaluation
 //!
 //! Common flags: --iters N --runs N --seed S --algo trace|opro
 //!               --feedback system|explain|full --workers N
@@ -27,6 +35,10 @@
 //!               against a `serve` process instead of in-process;
 //!               `ablation` excepted — it registers its own sweep
 //!               shapes in a dedicated service)
+//!               --trace (with --remote: stamp every evaluation with a
+//!               trace id so the fleet's flight recorders capture its
+//!               full request lifecycle; provably inert — traffic and
+//!               scores are unchanged)
 //!
 //! Without `--remote`, every evaluation flows through one process-wide
 //! [`EvalService`] (the serving layer) and the CLI's coordinator is a
@@ -47,8 +59,9 @@ use mapperopt::machine::MachineSpec;
 use mapperopt::mapping::expert_dsl;
 use mapperopt::net::{
     loadtest, ChaosConfig, ChaosProxy, EvalRouter, EvalServer, LoadtestConfig,
-    RetryPolicy, ServerConfig,
+    RemoteEvalClient, RetryPolicy, ServerConfig,
 };
+use mapperopt::obs::{fmt_ns, FlightRecorder, SpanRecord, Stage, SPAN_OK};
 use mapperopt::sim::ExecMode;
 use mapperopt::util::cli::Args;
 
@@ -76,6 +89,12 @@ fn main() -> ExitCode {
     if cmd == "loadtest" {
         return cmd_loadtest(&args, workers);
     }
+    if cmd == "top" {
+        return cmd_top(&args);
+    }
+    if cmd == "trace-smoke" {
+        return cmd_trace_smoke(&args, workers);
+    }
 
     let coord = match args.get("remote") {
         Some(addr) => {
@@ -93,6 +112,20 @@ fn main() -> ExitCode {
             Coordinator::on_service(service, spec_id, ExecMode::Serialized)
         }
     };
+
+    // --trace: stamp every remote evaluation with a client trace id so
+    // the fleet's flight recorders capture its full request lifecycle
+    // (dump with `mapperopt top --remote ADDR` or Request::TraceDump);
+    // inert — the traffic shape and every score are unchanged
+    if args.flag("trace") {
+        match coord.remote_client() {
+            Some(client) => client.set_tracing(true),
+            None => eprintln!(
+                "--trace needs --remote (in-process evaluations have no wire \
+                 to trace); ignoring"
+            ),
+        }
+    }
 
     match cmd {
         "table1" => {
@@ -154,16 +187,19 @@ fn main() -> ExitCode {
 
 fn usage() {
     println!(
-        "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite|serve|route|chaos-smoke|loadtest>\n\
+        "usage: mapperopt <table1|table3|fig6|fig7|fig8|ablation|all|run|optimize|bench-suite|serve|route|chaos-smoke|loadtest|top|trace-smoke>\n\
          flags: --app NAME --mapper FILE --algo trace|opro \
          --feedback system|explain|full|profile --iters N --runs N --seed S \
-         --workers N --remote HOST:PORT --addr HOST:PORT (serve/route/loadtest)\n\
+         --workers N --remote HOST:PORT --addr HOST:PORT (serve/route/loadtest) \
+         --trace (with --remote: trace-id-stamp every evaluation; inert)\n\
          route: --shards A,B,... (comma-separated serve addresses; each is \
          ping-probed) --addr HOST:PORT (front, default 127.0.0.1:9378)\n\
          loadtest: --clients N (1000) --duration SECS (10) --rate R (open loop; \
          default closed) --pipeline K (1) --batch K (1) --distinct N (8) \
          --generators N (auto) --json --router (fleet sweep; --shards 1,2,4 \
          shard *counts*, in-process)\n\
+         top: --remote HOST:PORT (serve or route front) --watch SECS (refresh \
+         loop; default one-shot) — live per-stage latency breakdown\n\
          env:   MAPPEROPT_RETRY_BUDGET    remote client transmission attempts per request (default 4)\n\
          \x20      MAPPEROPT_QUEUE_HIGH_WATER eval queue depth that starts shedding lowest-priority\n\
          \x20                                 work with Overloaded responses (default: queue capacity)\n\
@@ -180,7 +216,13 @@ fn usage() {
          \x20                                 in seconds (default 180)\n\
          \x20      MAPPEROPT_SHARDS           default --shards list for `route` (comma-separated\n\
          \x20                                 serve addresses)\n\
-         \x20      MAPPEROPT_ROUTER_ADDR      default front address for `route` (127.0.0.1:9378)"
+         \x20      MAPPEROPT_ROUTER_ADDR      default front address for `route` (127.0.0.1:9378)\n\
+         \x20      MAPPEROPT_TRACE            client-side: stamp every request with a trace id\n\
+         \x20                                 (same switch as --trace; inert; 0/empty disables)\n\
+         \x20      MAPPEROPT_TRACE_RING       flight-recorder ring capacity in spans per process\n\
+         \x20                                 (default 1024, 0 disables recording)\n\
+         \x20      MAPPEROPT_TRACE_SLOW_MS    untraced requests slower than this are still\n\
+         \x20                                 recorded as forensic spans (default 1000, 0 disables)"
     );
 }
 
@@ -408,6 +450,77 @@ fn cmd_route(args: &Args) -> ExitCode {
     }
 }
 
+/// `mapperopt top --remote HOST:PORT [--watch SECS]`: fetch a live
+/// stats snapshot from a `serve` shard or `route` front and render the
+/// per-stage latency breakdown riding its histogram tail (count /
+/// p50 / p99 / max per [`Stage`]).  Against a router front the
+/// snapshot is the fleet aggregate — shard histograms merged
+/// bucket-wise by `StatsSnapshot::aggregate_fleet`, the router's own
+/// route/upstream stages on top.  `--watch SECS` refreshes in a loop
+/// until killed; the default is one shot.
+fn cmd_top(args: &Args) -> ExitCode {
+    let Some(addr) = args.get("remote").or_else(|| args.get("addr")) else {
+        eprintln!("top: which server? pass --remote HOST:PORT");
+        return ExitCode::from(2);
+    };
+    let client = match RemoteEvalClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("top: cannot connect to {addr}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let watch = args.u64("watch", 0);
+    loop {
+        let snap = match client.stats() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("top: stats fetch failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        println!(
+            "{addr}: {} evals ({} cache hits, {} decision), {} completed, \
+             {} shed",
+            snap.evals,
+            snap.cache_hits,
+            snap.decision_hits,
+            snap.completed,
+            snap.shed_requests
+        );
+        if snap.stage_hists.is_empty() {
+            println!("  (no stage latency yet — nothing served since boot)");
+        } else {
+            println!(
+                "  {:<10} {:>10} {:>9} {:>9} {:>9}",
+                "stage", "count", "p50", "p99", "max"
+            );
+            for sh in &snap.stage_hists {
+                println!(
+                    "  {:<10} {:>10} {:>9} {:>9} {:>9}",
+                    Stage::name_of(sh.stage),
+                    sh.hist.count(),
+                    fmt_ns(sh.hist.percentile(50.0)),
+                    fmt_ns(sh.hist.percentile(99.0)),
+                    fmt_ns(sh.hist.max()),
+                );
+            }
+        }
+        if watch == 0 {
+            return ExitCode::SUCCESS;
+        }
+        std::thread::sleep(Duration::from_secs(watch));
+        println!();
+    }
+}
+
+/// Dump a flight recorder onto stderr next to a smoke-test failure:
+/// the forensic spans (errors, sheds, slow requests, traced ids) the
+/// serving side retained around the failure window.
+fn print_flight_recorder(label: &str, spans: &[SpanRecord]) {
+    eprint!("{label}: {}", FlightRecorder::render(spans));
+}
+
 /// `mapperopt chaos-smoke`: the fault-tolerance acceptance drive.  Runs
 /// one seeded campaign clean and in-process, then the same campaign
 /// through a [`ChaosProxy`] injecting delays, corruption, truncation,
@@ -512,6 +625,7 @@ fn cmd_chaos_smoke(args: &Args, workers: usize) -> ExitCode {
                 chaotic.len(),
                 reference.len()
             );
+            print_flight_recorder("chaos-smoke", &service.trace_dump());
             return ExitCode::FAILURE;
         }
         for (c, l) in chaotic.iter().zip(&reference) {
@@ -525,6 +639,7 @@ fn cmd_chaos_smoke(args: &Args, workers: usize) -> ExitCode {
                     c.trajectory(),
                     l.trajectory()
                 );
+                print_flight_recorder("chaos-smoke", &service.trace_dump());
                 return ExitCode::FAILURE;
             }
         }
@@ -560,11 +675,200 @@ fn cmd_chaos_smoke(args: &Args, workers: usize) -> ExitCode {
             "chaos-smoke: FAILED — expected retries > 0 and reconnects > 0, \
              got {retries} retries / {reconnects} reconnects ({faults} faults)"
         );
+        print_flight_recorder("chaos-smoke", &service.trace_dump());
         return ExitCode::FAILURE;
     }
     println!(
         "chaos-smoke: OK — remote-under-faults == clean local, bit-identical; \
          {retries} retries, {reconnects} reconnects, {faults} faults injected"
+    );
+    ExitCode::SUCCESS
+}
+
+/// `mapperopt trace-smoke`: the observability acceptance drive.  Boots
+/// two in-process eval shards behind the cache-affinity router, runs
+/// one seeded campaign untraced through the front and then the
+/// identical campaign traced, and requires:
+///
+///  (a) **inertness** — traced trajectories and best scores are
+///      bit-identical to the untraced pass (a trace id changes no
+///      routing decision, no cache key, no score);
+///  (b) **coverage** — the fleet's flight recorders (fetched with one
+///      `Request::TraceDump` fanned out by the router) hold a span for
+///      every trace id the traced campaign stamped: ids are issued
+///      contiguously from 1, so the distinct ids recovered must be
+///      exactly `1..=N` — a gap is a lost span;
+///  (c) **consistency** — every span carries at least one stage and
+///      its per-stage durations sum to at most the recorded wall time,
+///      and no traced span resolved with a non-OK outcome.
+///
+/// A watchdog thread enforces `MAPPEROPT_SERVE_DEADLINE_S` (default
+/// 180s) so a wedged run fails CI instead of hanging it.
+fn cmd_trace_smoke(args: &Args, workers: usize) -> ExitCode {
+    let deadline_s = std::env::var("MAPPEROPT_SERVE_DEADLINE_S")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(180);
+    std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_secs(deadline_s));
+        eprintln!("trace-smoke: exceeded the {deadline_s}s deadline; wedged");
+        std::process::exit(124);
+    });
+
+    let (app, algo, cfg) = ("cannon", SearchAlgo::Trace, FeedbackConfig::FULL);
+    let base_seed = args.u64("seed", 7);
+    let runs = args.usize("runs", 2);
+    let iters = args.usize("iters", 6);
+
+    // two shards behind the router, all in-process on loopback
+    let mut servers = Vec::new();
+    let mut shard_addrs = Vec::new();
+    for _ in 0..2 {
+        match EvalServer::bind("127.0.0.1:0", service_for(workers)) {
+            Ok(s) => {
+                shard_addrs.push(s.addr().to_string());
+                servers.push(s);
+            }
+            Err(e) => {
+                eprintln!("trace-smoke: cannot bind eval shard: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let router = match EvalRouter::bind("127.0.0.1:0", &shard_addrs) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("trace-smoke: cannot bind router: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let front = router.addr().to_string();
+    println!(
+        "trace-smoke: 2 shards behind {front} ({app}, {runs} runs x {iters} \
+         iters), untraced reference first"
+    );
+
+    let reference = {
+        let coord =
+            match Coordinator::remote(&front, "p100_cluster", ExecMode::Serialized)
+            {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("trace-smoke: cannot connect untraced: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+        match coord.run_many(app, algo, cfg, base_seed, runs, iters) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("trace-smoke: untraced campaign failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    };
+
+    // the traced pass: a fresh client (its trace-id sequence starts at
+    // 1), the identical campaign, every request stamped
+    let coord =
+        match Coordinator::remote(&front, "p100_cluster", ExecMode::Serialized) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("trace-smoke: cannot connect traced: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+    let client = Arc::clone(coord.remote_client().expect("remote backend"));
+    client.set_tracing(true);
+    let traced = match coord.run_many(app, algo, cfg, base_seed, runs, iters) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("trace-smoke: traced campaign failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    // (a) inertness: bit-identical to the untraced pass
+    if traced.len() != reference.len() {
+        eprintln!(
+            "trace-smoke: FAILED — {} traced runs came back, expected {}",
+            traced.len(),
+            reference.len()
+        );
+        return ExitCode::FAILURE;
+    }
+    for (t, r) in traced.iter().zip(&reference) {
+        let same_best = t.best.as_ref().map(|(_, s)| s.to_bits())
+            == r.best.as_ref().map(|(_, s)| s.to_bits());
+        if t.trajectory() != r.trajectory() || !same_best {
+            eprintln!(
+                "trace-smoke: FAILED — tracing is not inert; seed {} \
+                 diverged:\n  traced:   {:?}\n  untraced: {:?}",
+                t.seed,
+                t.trajectory(),
+                r.trajectory()
+            );
+            return ExitCode::FAILURE;
+        }
+    }
+
+    // (b) + (c): pull every flight recorder through the front and audit
+    let spans = match client.trace_dump() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("trace-smoke: trace dump fetch failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut lows: Vec<u64> = spans
+        .iter()
+        .filter(|s| s.trace_id != 0)
+        .map(|s| s.trace_id & 0xffff_ffff)
+        .collect();
+    lows.sort_unstable();
+    lows.dedup();
+    let issued = lows.last().copied().unwrap_or(0);
+    if issued < runs as u64
+        || lows.len() as u64 != issued
+        || lows.first() != Some(&1)
+    {
+        eprintln!(
+            "trace-smoke: FAILED — {} distinct traced span ids recovered but \
+             ids 1..={issued} were issued (a gap is a lost span)",
+            lows.len()
+        );
+        print_flight_recorder("trace-smoke", &spans);
+        return ExitCode::FAILURE;
+    }
+    for s in &spans {
+        let stage_sum: u64 =
+            s.stages.iter().fold(0, |a, x| a.saturating_add(x.dur_ns));
+        if stage_sum > s.total_ns || (s.trace_id != 0 && s.stages.is_empty()) {
+            eprintln!(
+                "trace-smoke: FAILED — inconsistent span (stage sum \
+                 {stage_sum}ns vs wall {}ns):\n  {}",
+                s.total_ns,
+                s.render()
+            );
+            return ExitCode::FAILURE;
+        }
+        if s.trace_id != 0 && s.outcome != SPAN_OK {
+            eprintln!(
+                "trace-smoke: FAILED — traced span resolved non-OK:\n  {}",
+                s.render()
+            );
+            return ExitCode::FAILURE;
+        }
+    }
+
+    drop(coord);
+    router.shutdown();
+    for s in servers {
+        s.shutdown();
+    }
+    println!(
+        "trace-smoke: OK — traced == untraced bit-identical; {} spans cover \
+         all {issued} traced evaluations across the fleet's recorders",
+        spans.len()
     );
     ExitCode::SUCCESS
 }

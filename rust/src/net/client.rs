@@ -75,6 +75,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::StatsSnapshot;
 use crate::feedback::SystemFeedback;
 use crate::machine::MachineSpec;
+use crate::obs::{merge_stage_hists, SpanRecord, Stage, StageSet, TraceIdGen};
 use crate::sim::ExecMode;
 use crate::util::rng::Rng;
 
@@ -125,14 +126,27 @@ impl Default for RetryPolicy {
 struct ReplySlot {
     done: Mutex<Option<Result<Response, String>>>,
     cv: Condvar,
+    /// When armed, the first fill records one `ClientSend` sample —
+    /// submission to resolution, retries and reconnects included — into
+    /// the client's stage set.  Armed for evaluations only.
+    obs: Mutex<Option<(Instant, Arc<StageSet>)>>,
 }
 
 impl ReplySlot {
+    /// Arm the `ClientSend` measurement (before the request is
+    /// enqueued, so the sample covers the full client-side path).
+    fn observe(&self, started: Instant, stages: Arc<StageSet>) {
+        *self.obs.lock().unwrap() = Some((started, stages));
+    }
+
     /// First fill wins (a retry path and a teardown drain can race;
     /// both classify, so either order is correct).
     fn fill(&self, r: Result<Response, String>) {
         let mut g = self.done.lock().unwrap();
         if g.is_none() {
+            if let Some((t0, stages)) = self.obs.lock().unwrap().take() {
+                stages.record_since(Stage::ClientSend, t0);
+            }
             *g = Some(r);
             self.cv.notify_all();
         }
@@ -225,6 +239,15 @@ struct Shared {
     /// Live batching switch: env default, user override, or the
     /// old-server fallback clearing it permanently.
     batching: AtomicBool,
+    /// Live tracing switch ([`RemoteEvalClient::set_tracing`]): when
+    /// set, evaluations are stamped with ids from `trace_ids` and their
+    /// replies carry the server's per-eval telemetry rider.
+    tracing: AtomicBool,
+    trace_ids: TraceIdGen,
+    /// Client-side stage samples (`ClientSend`: submission to
+    /// resolution); overlaid onto [`RemoteEvalClient::stats`] the same
+    /// way the retry counters are.
+    stages: Arc<StageSet>,
 }
 
 /// Completion handle of one remote submission — the wire twin of
@@ -299,12 +322,18 @@ impl RemoteEvalClient {
         let batching = std::env::var("MAPPEROPT_WIRE_BATCH")
             .map(|v| v != "0")
             .unwrap_or(true);
+        let tracing = std::env::var("MAPPEROPT_TRACE")
+            .map(|v| v != "0" && !v.is_empty())
+            .unwrap_or(false);
         let shared = Arc::new(Shared {
             dead: AtomicBool::new(false),
             retries: AtomicU64::new(0),
             reconnects: AtomicU64::new(0),
             batched_frames: AtomicU64::new(0),
             batching: AtomicBool::new(batching),
+            tracing: AtomicBool::new(tracing),
+            trace_ids: TraceIdGen::new(),
+            stages: Arc::new(StageSet::new()),
         });
         let (tx, rx) = mpsc::channel::<Event>();
         let mut mgr = Manager {
@@ -362,10 +391,38 @@ impl RemoteEvalClient {
         self.shared.batching.store(on, Ordering::SeqCst);
     }
 
+    /// Turn request tracing on or off (default: off, unless
+    /// `MAPPEROPT_TRACE=1`).  Traced evaluations carry a client-stamped
+    /// trace id on the wire; the server records a span per traced eval
+    /// (dumpable via [`RemoteEvalClient::trace_dump`]) and returns the
+    /// per-eval telemetry rider on the reply.  Tracing is *inert*:
+    /// evaluation results are bit-identical either way.
+    pub fn set_tracing(&self, on: bool) {
+        self.shared.tracing.store(on, Ordering::SeqCst);
+    }
+
+    /// Whether evaluations are currently stamped with trace ids.
+    pub fn tracing(&self) -> bool {
+        self.shared.tracing.load(Ordering::SeqCst)
+    }
+
+    /// A fresh trace id when tracing is on, else 0 (= untraced on the
+    /// wire).
+    fn next_trace_id(&self) -> u64 {
+        if self.tracing() {
+            self.shared.trace_ids.next()
+        } else {
+            0
+        }
+    }
+
     /// Enqueue one request; the returned slot resolves when a response
     /// arrives or the retry budget / deadline is exhausted.
     fn send(&self, req: Request) -> Arc<ReplySlot> {
         let slot = Arc::new(ReplySlot::default());
+        if matches!(req, Request::Eval(_)) {
+            slot.observe(Instant::now(), Arc::clone(&self.shared.stages));
+        }
         if self.shared.dead.load(Ordering::SeqCst) {
             slot.fill(Err("connection to eval server is closed".into()));
             return slot;
@@ -460,6 +517,7 @@ impl RemoteEvalClient {
             dsl,
             mode,
             priority,
+            trace_id: self.next_trace_id(),
         }));
         RemoteTicket { slot }
     }
@@ -469,9 +527,22 @@ impl RemoteEvalClient {
     /// they travel as `EvalBatch` frames — one syscall round-trip per
     /// [`proto::MAX_BATCH_ITEMS`](super::proto::MAX_BATCH_ITEMS) items —
     /// while each item still sheds, retries, and resolves individually.
-    pub fn submit_batch(&self, reqs: Vec<WireEvalRequest>) -> Vec<RemoteTicket> {
-        let slots: Vec<Arc<ReplySlot>> =
-            reqs.iter().map(|_| Arc::new(ReplySlot::default())).collect();
+    pub fn submit_batch(&self, mut reqs: Vec<WireEvalRequest>) -> Vec<RemoteTicket> {
+        // stamp unstamped items when tracing is on (caller-provided ids
+        // are kept, so a campaign can correlate its own way)
+        for q in &mut reqs {
+            if q.trace_id == 0 {
+                q.trace_id = self.next_trace_id();
+            }
+        }
+        let slots: Vec<Arc<ReplySlot>> = reqs
+            .iter()
+            .map(|_| {
+                let slot = Arc::new(ReplySlot::default());
+                slot.observe(Instant::now(), Arc::clone(&self.shared.stages));
+                slot
+            })
+            .collect();
         if self.shared.dead.load(Ordering::SeqCst) {
             for s in &slots {
                 s.fill(Err("connection to eval server is closed".into()));
@@ -516,8 +587,9 @@ impl RemoteEvalClient {
     }
 
     /// Server-side [`StatsSnapshot`] with this client's `retries` /
-    /// `reconnects` counters overlaid (the server zero-fills them: the
-    /// client is the only party that can observe its own wire).
+    /// `reconnects` counters and `client` stage histogram overlaid (the
+    /// server zero-fills them: the client is the only party that can
+    /// observe its own wire).
     pub fn stats(&self) -> Result<StatsSnapshot, String> {
         let mut snap = self.expect(Request::Stats, "stats", |r| match r {
             Response::Stats(s) => Ok(s),
@@ -525,7 +597,19 @@ impl RemoteEvalClient {
         })?;
         snap.retries = self.retries();
         snap.reconnects = self.reconnects();
+        merge_stage_hists(&mut snap.stage_hists, &self.shared.stages.snapshots());
         Ok(snap)
+    }
+
+    /// Drain the server's flight recorder: the spans of recently
+    /// completed traced (or slow, or failed) evaluations, oldest first.
+    /// Against a router front this returns every shard's spans followed
+    /// by the router's own.
+    pub fn trace_dump(&self) -> Result<Vec<SpanRecord>, String> {
+        self.expect(Request::TraceDump, "trace-dump", |r| match r {
+            Response::TraceDump(spans) => Ok(spans),
+            other => Err(other),
+        })
     }
 
     /// The server's human-readable `summary()` block.

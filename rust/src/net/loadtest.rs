@@ -51,6 +51,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{EvalService, StatsSnapshot, PRIORITY_NORMAL};
+use crate::obs::{fmt_ns, SpanRecord, Stage};
 use crate::sim::ExecMode;
 use crate::util::stats::percentile_sorted;
 
@@ -127,6 +128,42 @@ pub struct LoadtestReport {
     pub server: Option<StatsSnapshot>,
 }
 
+/// `stage n p50 p99` fragments of a snapshot's histogram tail (the
+/// server-side answer to "where did the time go" next to the
+/// client-observed percentiles above it).
+fn stage_text(snap: &StatsSnapshot) -> String {
+    snap.stage_hists
+        .iter()
+        .map(|h| {
+            format!(
+                "{} n={} p50 {} p99 {}",
+                Stage::name_of(h.stage),
+                h.hist.count(),
+                fmt_ns(h.hist.percentile(50.0)),
+                fmt_ns(h.hist.percentile(99.0)),
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+/// The same histogram tail as JSON array elements.
+fn stage_json(snap: &StatsSnapshot) -> String {
+    snap.stage_hists
+        .iter()
+        .map(|h| {
+            format!(
+                "{{\"stage\":\"{}\",\"count\":{},\"p50_ns\":{},\"p99_ns\":{}}}",
+                Stage::name_of(h.stage),
+                h.hist.count(),
+                h.hist.percentile(50.0),
+                h.hist.percentile(99.0),
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
 impl LoadtestReport {
     /// Human-readable multi-line summary.
     pub fn text(&self) -> String {
@@ -159,6 +196,9 @@ impl LoadtestReport {
                 sv.refused_connections,
                 sv.reaped_connections,
             ));
+            if !sv.stage_hists.is_empty() {
+                s.push_str(&format!("server stages: {}\n", stage_text(sv)));
+            }
         }
         s
     }
@@ -178,6 +218,8 @@ impl LoadtestReport {
                 )
             })
             .unwrap_or_default();
+        let stages =
+            self.server.as_ref().map(stage_json).unwrap_or_default();
         format!(
             "{{\"bench\":\"serve_loadtest\",\"clients\":{},\"connected\":{},\
              \"dial_failures\":{},\"completed\":{},\"shed\":{},\"refused\":{},\
@@ -185,7 +227,7 @@ impl LoadtestReport {
              \"throughput\":{:.1},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\
              \"p999_ms\":{:.3},\"server_evals\":{},\"server_cache_hits\":{},\
              \"server_shed\":{},\"server_refused_connections\":{},\
-             \"server_reaped_connections\":{}}}",
+             \"server_reaped_connections\":{},\"server_stages\":[{}]}}",
             self.clients,
             self.connected,
             self.dial_failures,
@@ -204,6 +246,7 @@ impl LoadtestReport {
             sv_shed,
             sv_refused,
             sv_reaped,
+            stages,
         )
     }
 }
@@ -229,6 +272,7 @@ fn variants(distinct: usize) -> Vec<WireEvalRequest> {
             dsl: dsl.to_string(),
             mode: ExecMode::Serialized,
             priority: PRIORITY_NORMAL,
+            trace_id: 0,
         })
         .collect()
 }
@@ -619,6 +663,29 @@ pub struct FleetPoint {
     /// (zero in a healthy sweep).
     pub rerouted: u64,
     pub report: LoadtestReport,
+    /// Rendered flight-recorder spans fetched from the front when the
+    /// point finished unhealthy (empty otherwise) — the forensic trail
+    /// a failed `fleet-smoke` prints.
+    pub forensics: Vec<String>,
+}
+
+/// Whether one measured point actually served its load (the per-point
+/// half of [`FleetReport::healthy`]; an unhealthy point gets its
+/// flight recorder pulled before the fleet is torn down).
+fn point_healthy(r: &LoadtestReport) -> bool {
+    r.completed > 0
+        && r.errors == 0
+        && r.connected >= r.clients - r.clients / 10
+}
+
+/// Pull and render the front's flight-recorder spans (best effort: an
+/// unreachable front just yields no forensics).
+fn fetch_forensics(addr: SocketAddr) -> Vec<String> {
+    RemoteEvalClient::connect(addr)
+        .ok()
+        .and_then(|c| c.trace_dump().ok())
+        .map(|spans| spans.iter().map(SpanRecord::render).collect())
+        .unwrap_or_default()
 }
 
 impl FleetPoint {
@@ -661,13 +728,19 @@ impl FleetPoint {
             .as_ref()
             .map(|s| (s.evals, s.cache_hits))
             .unwrap_or_default();
+        let stages = self
+            .report
+            .server
+            .as_ref()
+            .map(stage_json)
+            .unwrap_or_default();
         format!(
             "{{\"shards\":{},\"via_router\":{},\"clients\":{},\
              \"completed\":{},\"shed\":{},\"errors\":{},\"rerouted\":{},\
              \"elapsed_s\":{:.3},\"throughput\":{:.1},\"p50_ms\":{:.3},\
              \"p99_ms\":{:.3},\"p999_ms\":{:.3},\"fleet_evals\":{},\
              \"fleet_cache_hits\":{},\"fleet_cache_hit_rate\":{:.4},\
-             \"per_shard\":[{}]}}",
+             \"stages\":[{stages}],\"per_shard\":[{}]}}",
             self.shards,
             self.via_router,
             self.report.clients,
@@ -735,6 +808,18 @@ impl FleetReport {
                         100.0 * sh.cache_hit_rate(),
                     ));
                 }
+                if !sv.stage_hists.is_empty() {
+                    s.push_str(&format!(
+                        "      stages: {}\n",
+                        stage_text(sv)
+                    ));
+                }
+            }
+            if !p.forensics.is_empty() {
+                s.push_str("      flight recorder:\n");
+                for line in &p.forensics {
+                    s.push_str(&format!("        {line}\n"));
+                }
             }
         }
         s
@@ -754,12 +839,7 @@ impl FleetReport {
     /// nearly all clients connected, something completed).
     pub fn healthy(&self) -> bool {
         !self.points.is_empty()
-            && self.points.iter().all(|p| {
-                p.report.completed > 0
-                    && p.report.errors == 0
-                    && p.report.connected
-                        >= p.report.clients - p.report.clients / 10
-            })
+            && self.points.iter().all(|p| point_healthy(&p.report))
     }
 }
 
@@ -796,12 +876,18 @@ pub fn run_fleet(
     {
         let server = boot_shard(workers, conn_cap)?;
         let report = run(server.addr(), cfg);
+        let forensics = if point_healthy(&report) {
+            Vec::new()
+        } else {
+            fetch_forensics(server.addr())
+        };
         server.shutdown();
         points.push(FleetPoint {
             shards: 1,
             via_router: false,
             rerouted: 0,
             report,
+            forensics,
         });
     }
 
@@ -823,11 +909,24 @@ pub fn run_fleet(
         )?;
         let report = run(router.addr(), cfg);
         let rerouted = router.rerouted();
+        let forensics = if point_healthy(&report) {
+            Vec::new()
+        } else {
+            // the router front answers TraceDump with every shard's
+            // spans plus its own — pull while the fleet is still up
+            fetch_forensics(router.addr())
+        };
         router.shutdown();
         for s in shards {
             s.shutdown();
         }
-        points.push(FleetPoint { shards: n, via_router: true, rerouted, report });
+        points.push(FleetPoint {
+            shards: n,
+            via_router: true,
+            rerouted,
+            report,
+            forensics,
+        });
     }
     Ok(FleetReport { points })
 }

@@ -163,6 +163,48 @@
 //! server's per-connection in-flight cap — the funnel bound is
 //! `io_threads * 4 *` [`server::MAX_CONN_IN_FLIGHT`] concurrent evals
 //! per shard, far above what the loadtest needs.
+//!
+//! # Telemetry & tracing (PR 10)
+//!
+//! The [`crate::obs`] layer threads through every serving hop —
+//! always-on histograms, opt-in tracing, failure-window forensics —
+//! without perturbing a single score:
+//!
+//! * **Stage histograms.** Every layer records its pipeline stages
+//!   into lock-cheap log2-bucket histograms
+//!   ([`crate::obs::Hist`], one relaxed `fetch_add` per sample):
+//!   the client its submit→reply wall time (`client`), the router its
+//!   routing decision (`route`) and backend round-trip (`upstream`),
+//!   the server its admission and reply-write work (`admit`/`write`),
+//!   and the service its queue wait, cache paths, decision resolve,
+//!   and simulation (`queue`/`hit`/`decision`/`splice`/`cold`/
+//!   `resolve`/`sim`).  Snapshots ride the `Stats` payload as a
+//!   trailing histogram section under the same zero-fill decode rule
+//!   as the fleet tail — old peers truncate it cleanly, and
+//!   single-server histogram-free snapshots stay byte-identical with
+//!   older encoders.  Fleet aggregation merges bucket-wise (exact:
+//!   merging per-shard histograms equals histogramming the
+//!   concatenated samples), and `mapperopt top --remote ADDR` renders
+//!   the live per-stage breakdown.
+//! * **Request tracing.** A client with tracing on (`--trace` /
+//!   `MAPPEROPT_TRACE`) stamps each eval with a nonzero trace id
+//!   carried as a trailing optional wire field — untraced traffic
+//!   stays byte-identical to the pre-trace wire, and the id is
+//!   provably inert (it is outside the affinity key and every cache
+//!   key).  Traced replies carry a per-eval
+//!   [`crate::obs::EvalTelemetry`] rider
+//!   (`{queue_ns, cache_path, sim_ns}`) into
+//!   [`SystemFeedback`](crate::feedback::SystemFeedback), and the
+//!   serving side records a per-request span
+//!   ([`crate::obs::SpanRecord`]) of stage start/duration pairs.
+//! * **The flight recorder.** Each process keeps a bounded ring
+//!   ([`crate::obs::FlightRecorder`], `MAPPEROPT_TRACE_RING` spans) of
+//!   the spans worth keeping: traced requests, every error/shed, and
+//!   untraced requests slower than `MAPPEROPT_TRACE_SLOW_MS`.
+//!   [`proto::Request::TraceDump`] fetches it over the wire — the
+//!   router fans the dump out and concatenates shard spans ahead of
+//!   its own — and the smoke drivers print it automatically on
+//!   failure, so a red CI run carries its own forensics.
 
 pub mod chaos;
 pub mod client;

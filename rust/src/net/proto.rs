@@ -19,6 +19,9 @@ use crate::coordinator::{
 };
 use crate::feedback::SystemFeedback;
 use crate::machine::MachineSpec;
+use crate::obs::{
+    EvalTelemetry, HistSnapshot, SpanRecord, StageHistSnapshot, StageSpan, BUCKETS,
+};
 use crate::sim::{CritEntry, ExecMode, PerfProfile};
 
 /// Protocol revision; bumped on any layout change.  Leads every payload
@@ -226,6 +229,13 @@ pub struct WireEvalRequest {
     /// Scheduling priority, higher first
     /// ([`crate::coordinator::PRIORITY_NORMAL`] default).
     pub priority: u8,
+    /// Client-stamped trace id; `0` means untraced.  Inert: it tags the
+    /// span record and telemetry rider but never enters cache keys or
+    /// scheduling.  Rides the wire as a *trailing optional* field (the
+    /// Stats-tail zero-fill rule): elided when zero on a single `Eval`,
+    /// and as a trailing id array on `EvalBatch` elided when all zero —
+    /// so untraced traffic stays byte-identical to pre-trace peers.
+    pub trace_id: u64,
 }
 
 /// Client-to-server messages.
@@ -254,6 +264,13 @@ pub enum Request {
     /// keep serving, so batching clients can fall back to
     /// frame-per-eval transparently.
     EvalBatch(Vec<WireEvalRequest>),
+    /// Dump the peer's flight recorder (recent
+    /// [`SpanRecord`]s, oldest first); answered with
+    /// [`Response::TraceDump`].  The router answers with its shards'
+    /// dumps concatenated ahead of its own.  A new tag, like
+    /// `EvalBatch`: pre-trace peers classify it as a decode error and
+    /// keep serving.
+    TraceDump,
 }
 
 /// One entry of a [`Response::FeedbackBatch`], positionally matching
@@ -296,6 +313,9 @@ pub enum Response {
     /// The answers to one [`Request::EvalBatch`], in item order and of
     /// equal length.  A new tag, like `EvalBatch`.
     FeedbackBatch(Vec<BatchItem>),
+    /// The peer's flight-recorder contents, oldest first (the answer to
+    /// [`Request::TraceDump`]).  A new tag, like `EvalBatch`.
+    TraceDump(Vec<SpanRecord>),
 }
 
 // ---------------------------------------------------------------------------
@@ -652,7 +672,10 @@ fn enc_feedback(e: &mut Enc, fb: &SystemFeedback) {
             e.u8(1);
             e.str(msg);
         }
-        SystemFeedback::Performance { line, value, profile } => {
+        SystemFeedback::Performance { line, value, profile, telemetry: _ } => {
+            // telemetry is *not* body material: feedback sits
+            // mid-payload in batches, so the rider travels as the
+            // Feedback payload tail / the FeedbackBatch trailing array
             e.u8(2);
             e.str(line);
             e.f64(*value);
@@ -675,14 +698,74 @@ fn dec_feedback(d: &mut Dec<'_>) -> Result<SystemFeedback, DecodeError> {
             let line = d.str()?;
             let value = d.f64()?;
             let profile = if d.bool()? { Some(dec_profile(d)?) } else { None };
-            Ok(SystemFeedback::Performance { line, value, profile })
+            // the top-level decoder re-attaches a telemetry tail
+            Ok(SystemFeedback::Performance { line, value, profile, telemetry: None })
         }
         t => Err(DecodeError::UnknownTag("feedback", t)),
     }
 }
 
+/// The fixed 17-byte telemetry rider of a traced feedback: queue wait,
+/// cache-path code, and simulation time of *this* serving.
+fn enc_telemetry(e: &mut Enc, t: &EvalTelemetry) {
+    let EvalTelemetry { queue_ns, cache_path, sim_ns } = t;
+    e.u64(*queue_ns);
+    e.u8(*cache_path);
+    e.u64(*sim_ns);
+}
+
+fn dec_telemetry(d: &mut Dec<'_>) -> Result<EvalTelemetry, DecodeError> {
+    Ok(EvalTelemetry {
+        queue_ns: d.u64()?,
+        cache_path: d.u8()?,
+        sim_ns: d.u64()?,
+    })
+}
+
+/// One flight-recorder span on the wire: identity, outcome, wall time,
+/// then its stage list (count-prefixed; mid-payload, so never elided).
+fn enc_span(e: &mut Enc, s: &SpanRecord) {
+    let SpanRecord { trace_id, cache_path, outcome, total_ns, stages } = s;
+    e.u64(*trace_id);
+    e.u8(*cache_path);
+    e.u8(*outcome);
+    e.u64(*total_ns);
+    e.u32(stages.len() as u32);
+    for st in stages {
+        let StageSpan { stage, start_ns, dur_ns } = st;
+        e.u8(*stage);
+        e.u64(*start_ns);
+        e.u64(*dur_ns);
+    }
+}
+
+fn dec_span(d: &mut Dec<'_>) -> Result<SpanRecord, DecodeError> {
+    let trace_id = d.u64()?;
+    let cache_path = d.u8()?;
+    let outcome = d.u8()?;
+    let total_ns = d.u64()?;
+    let n = d.u32()? as usize;
+    // a span passes through a bounded pipeline; a count beyond any real
+    // stage list is hostile and rejected before allocation
+    if n > MAX_BATCH_ITEMS {
+        return Err(DecodeError::Invalid("span stage count"));
+    }
+    let mut stages = Vec::with_capacity(n);
+    for _ in 0..n {
+        stages.push(StageSpan {
+            stage: d.u8()?,
+            start_ns: d.u64()?,
+            dur_ns: d.u64()?,
+        });
+    }
+    Ok(SpanRecord { trace_id, cache_path, outcome, total_ns, stages })
+}
+
 fn enc_eval_req(e: &mut Enc, q: &WireEvalRequest) {
-    let WireEvalRequest { spec, scenario, dsl, mode, priority } = q;
+    // trace_id is *not* body material: it rides the payload tail of a
+    // single Eval (elided when 0) or the trailing id array of an
+    // EvalBatch, because mid-payload fields cannot be optional
+    let WireEvalRequest { spec, scenario, dsl, mode, priority, trace_id: _ } = q;
     enc_spec_ref(e, spec);
     enc_scenario(e, scenario);
     e.str(dsl);
@@ -697,6 +780,9 @@ fn dec_eval_req(d: &mut Dec<'_>) -> Result<WireEvalRequest, DecodeError> {
         dsl: d.str()?,
         mode: dec_mode(d)?,
         priority: d.u8()?,
+        // zero-filled here; the top-level decoder overwrites it from
+        // the payload tail when the client stamped one
+        trace_id: 0,
     })
 }
 
@@ -775,6 +861,7 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
         specs,
         priorities,
         shards,
+        stage_hists,
     } = s;
     e.u64(*evals);
     e.u64(*cache_hits);
@@ -825,7 +912,12 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
     // empty, so a single server's snapshot stays byte-identical with
     // pre-fleet peers; when present, a pre-fleet decoder fails with a
     // clean Trailing error and this decoder zero-fills its absence.
-    if shards.is_empty() {
+    // The histogram tail (PR 10) sits *after* the shard section, so a
+    // snapshot carrying histograms must encode the shard count even
+    // when zero — the shard section is no longer at the tail once
+    // something follows it.  Both empty → both elided (byte-identical
+    // to the PR 9 shape).
+    if shards.is_empty() && stage_hists.is_empty() {
         return;
     }
     e.u32(shards.len() as u32);
@@ -852,6 +944,22 @@ fn enc_snapshot(e: &mut Enc, s: &StatsSnapshot) {
         e.u64(*completed);
         e.u64(*shed_requests);
         e.u64(*max_queue_depth);
+    }
+    // the histogram tail (PR 10): per-stage latency histograms, elided
+    // when empty so histogram-free fleet snapshots stay byte-identical
+    // with PR 9 peers (which then fail with a clean Trailing error on
+    // histogram-bearing payloads, per the tail rule)
+    if stage_hists.is_empty() {
+        return;
+    }
+    e.u32(stage_hists.len() as u32);
+    for h in stage_hists {
+        let StageHistSnapshot { stage, hist } = h;
+        e.u8(*stage);
+        e.u32(hist.buckets.len() as u32);
+        for b in &hist.buckets {
+            e.u64(*b);
+        }
     }
 }
 
@@ -911,6 +1019,7 @@ fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
     // section, zero-fill rule → empty fleet); once the section is
     // present it decodes totally, so truncation inside it still errors
     let mut shards = Vec::new();
+    let mut stage_hists = Vec::new();
     if d.remaining() > 0 {
         let nshards = d.u32()? as usize;
         shards.reserve(nshards.min(1024));
@@ -927,6 +1036,28 @@ fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
                 shed_requests: d.u64()?,
                 max_queue_depth: d.u64()?,
             });
+        }
+        // the histogram tail: a pre-histogram payload ends after its
+        // shard entries (zero-fill rule → no histograms); once the
+        // section starts it decodes totally
+        if d.remaining() > 0 {
+            let nh = d.u32()? as usize;
+            stage_hists.reserve(nh.min(256));
+            for _ in 0..nh {
+                let stage = d.u8()?;
+                let nb = d.u32()? as usize;
+                // buckets are log2 of a u64, hard-capped by layout;
+                // anything wider is hostile, not a newer peer
+                if nb > BUCKETS {
+                    return Err(DecodeError::Invalid("histogram bucket count"));
+                }
+                let mut buckets = Vec::with_capacity(nb);
+                for _ in 0..nb {
+                    buckets.push(d.u64()?);
+                }
+                stage_hists
+                    .push(StageHistSnapshot { stage, hist: HistSnapshot { buckets } });
+            }
         }
     }
     Ok(StatsSnapshot {
@@ -958,6 +1089,7 @@ fn dec_snapshot(d: &mut Dec<'_>) -> Result<StatsSnapshot, DecodeError> {
         specs,
         priorities,
         shards,
+        stage_hists,
     })
 }
 
@@ -973,6 +1105,12 @@ impl Request {
             Request::Eval(q) => {
                 let mut e = Enc::new(1);
                 enc_eval_req(&mut e, q);
+                // trace id at the payload tail, elided when untraced:
+                // untraced frames stay byte-identical to pre-trace
+                // peers, which classify traced ones as clean Trailing
+                if q.trace_id != 0 {
+                    e.u64(q.trace_id);
+                }
                 e.buf
             }
             Request::RegisterSpec { name, spec } => {
@@ -994,8 +1132,17 @@ impl Request {
                 for q in items {
                     enc_eval_req(&mut e, q);
                 }
+                // per-item trace ids as one trailing array (items are
+                // mid-payload, so their own tails cannot be optional);
+                // elided when every item is untraced
+                if items.iter().any(|q| q.trace_id != 0) {
+                    for q in items {
+                        e.u64(q.trace_id);
+                    }
+                }
                 e.buf
             }
+            Request::TraceDump => Enc::new(7).buf,
         }
     }
 
@@ -1004,7 +1151,13 @@ impl Request {
         let (tag, mut d) = Dec::new(payload)?;
         let req = match tag {
             0 => Request::Ping,
-            1 => Request::Eval(dec_eval_req(&mut d)?),
+            1 => {
+                let mut q = dec_eval_req(&mut d)?;
+                if d.remaining() > 0 {
+                    q.trace_id = d.u64()?;
+                }
+                Request::Eval(q)
+            }
             2 => Request::RegisterSpec {
                 name: d.str()?,
                 spec: dec_machine_spec(&mut d)?,
@@ -1018,8 +1171,16 @@ impl Request {
                 for _ in 0..n {
                     items.push(dec_eval_req(&mut d)?);
                 }
+                // trailing trace-id array (zero-fill rule: absent on
+                // pre-trace and untraced payloads)
+                if d.remaining() > 0 {
+                    for q in &mut items {
+                        q.trace_id = d.u64()?;
+                    }
+                }
                 Request::EvalBatch(items)
             }
+            7 => Request::TraceDump,
             t => return Err(DecodeError::UnknownTag("request", t)),
         };
         d.finish()?;
@@ -1035,6 +1196,12 @@ impl Response {
             Response::Feedback(fb) => {
                 let mut e = Enc::new(1);
                 enc_feedback(&mut e, fb);
+                // telemetry rider at the payload tail, elided when the
+                // serving path attached none — rider-free frames stay
+                // byte-identical to pre-trace peers
+                if let Some(t) = fb.telemetry() {
+                    enc_telemetry(&mut e, t);
+                }
                 e.buf
             }
             Response::SpecInfo { id, name, spec } => {
@@ -1071,6 +1238,34 @@ impl Response {
                 for item in items {
                     enc_batch_item(&mut e, item);
                 }
+                // per-item telemetry riders as one trailing array
+                // (presence byte + fixed rider), elided when no item
+                // carries one
+                let any = items.iter().any(|i| {
+                    matches!(i, BatchItem::Feedback(fb) if fb.telemetry().is_some())
+                });
+                if any {
+                    for item in items {
+                        match item {
+                            BatchItem::Feedback(fb) => match fb.telemetry() {
+                                Some(t) => {
+                                    e.u8(1);
+                                    enc_telemetry(&mut e, t);
+                                }
+                                None => e.u8(0),
+                            },
+                            BatchItem::Error { .. } => e.u8(0),
+                        }
+                    }
+                }
+                e.buf
+            }
+            Response::TraceDump(spans) => {
+                let mut e = Enc::new(7);
+                e.u32(spans.len() as u32);
+                for s in spans {
+                    enc_span(&mut e, s);
+                }
                 e.buf
             }
         }
@@ -1081,7 +1276,14 @@ impl Response {
         let (tag, mut d) = Dec::new(payload)?;
         let resp = match tag {
             0 => Response::Pong,
-            1 => Response::Feedback(dec_feedback(&mut d)?),
+            1 => {
+                let mut fb = dec_feedback(&mut d)?;
+                if d.remaining() > 0 {
+                    let t = dec_telemetry(&mut d)?;
+                    fb.set_telemetry(t);
+                }
+                Response::Feedback(fb)
+            }
             2 => Response::SpecInfo {
                 id: d.u32()?,
                 name: d.str()?,
@@ -1102,7 +1304,27 @@ impl Response {
                 for _ in 0..n {
                     items.push(dec_batch_item(&mut d)?);
                 }
+                // trailing telemetry array (zero-fill rule: absent on
+                // pre-trace and rider-free payloads)
+                if d.remaining() > 0 {
+                    for item in &mut items {
+                        if d.u8()? == 1 {
+                            let t = dec_telemetry(&mut d)?;
+                            if let BatchItem::Feedback(fb) = item {
+                                fb.set_telemetry(t);
+                            }
+                        }
+                    }
+                }
                 Response::FeedbackBatch(items)
+            }
+            7 => {
+                let n = d.u32()? as usize;
+                let mut spans = Vec::with_capacity(n.min(MAX_BATCH_ITEMS));
+                for _ in 0..n {
+                    spans.push(dec_span(&mut d)?);
+                }
+                Response::TraceDump(spans)
             }
             t => return Err(DecodeError::UnknownTag("response", t)),
         };
@@ -1121,6 +1343,7 @@ impl Response {
             Response::Summary(_) => "summary",
             Response::Error { .. } => "error",
             Response::FeedbackBatch(_) => "feedback-batch",
+            Response::TraceDump(_) => "trace-dump",
         }
     }
 }
@@ -1311,6 +1534,7 @@ mod tests {
             dsl: "Task * GPU;\nRegion * * GPU FBMEM;\n".into(),
             mode: ExecMode::OutOfOrder,
             priority: 200,
+            trace_id: 0,
         }));
         roundtrip_req(&Request::Eval(WireEvalRequest {
             spec: SpecRef::Id(3),
@@ -1318,7 +1542,9 @@ mod tests {
             dsl: String::new(),
             mode: ExecMode::BulkSync,
             priority: 0,
+            trace_id: 0xDEAD_BEEF_0000_0001,
         }));
+        roundtrip_req(&Request::TraceDump);
         roundtrip_req(&Request::RegisterSpec {
             name: "wide".into(),
             spec: MachineSpec::small(),
@@ -1333,6 +1559,7 @@ mod tests {
                 dsl: "Task * GPU;\n".into(),
                 mode: ExecMode::Serialized,
                 priority: 128,
+                trace_id: 0,
             },
             WireEvalRequest {
                 spec: SpecRef::Name("p100_cluster".into()),
@@ -1343,6 +1570,7 @@ mod tests {
                 dsl: "Region * * GPU FBMEM;\n".into(),
                 mode: ExecMode::OutOfOrder,
                 priority: 255,
+                trace_id: 7,
             },
         ]));
     }
@@ -1360,11 +1588,17 @@ mod tests {
             line: "Performance Metric: Achieved throughput = 4877 GFLOPS".into(),
             value: 4877.25,
             profile: None,
+            telemetry: None,
         }));
         roundtrip_resp(&Response::Feedback(SystemFeedback::Performance {
             line: "Performance Metric: Execution time is 0.0300s.".into(),
             value: 33.0,
             profile: Some(sample_profile()),
+            telemetry: Some(EvalTelemetry {
+                queue_ns: 12_345,
+                cache_path: 5,
+                sim_ns: 987_654,
+            }),
         }));
         roundtrip_resp(&Response::SpecInfo {
             id: 1,
@@ -1417,6 +1651,7 @@ mod tests {
                 line: "Performance Metric: Execution time is 0.0300s.".into(),
                 value: 33.0,
                 profile: Some(sample_profile()),
+                telemetry: None,
             }),
             BatchItem::Error {
                 kind: ErrorKind::Overloaded,
@@ -1476,6 +1711,7 @@ mod tests {
                 line: "Performance Metric: Execution time is 0.0300s.".into(),
                 value,
                 profile: None,
+                telemetry: None,
             };
             let bytes = Response::Feedback(fb.clone()).encode();
             match Response::decode(&bytes).unwrap() {
@@ -1782,6 +2018,7 @@ mod tests {
                 dsl: String::new(),
                 mode: ExecMode::Serialized,
                 priority: 128,
+                trace_id: 0,
             };
             2
         ]);
@@ -1837,5 +2074,274 @@ mod tests {
             FrameStep::Corrupt(msg) => assert!(msg.contains("checksum")),
             other => panic!("corrupted step: {other:?}"),
         }
+    }
+
+    #[test]
+    fn eval_trace_id_rides_the_tail_elided_when_zero() {
+        let untraced = Request::Eval(WireEvalRequest {
+            spec: SpecRef::Id(1),
+            scenario: Scenario::named("circuit"),
+            dsl: "Task * GPU;\n".into(),
+            mode: ExecMode::Serialized,
+            priority: 128,
+            trace_id: 0,
+        });
+        let traced = match &untraced {
+            Request::Eval(q) => {
+                Request::Eval(WireEvalRequest { trace_id: 0xCAFE, ..q.clone() })
+            }
+            _ => unreachable!(),
+        };
+        let u = untraced.encode();
+        let t = traced.encode();
+        assert_eq!(u.len() + 8, t.len(), "trace id is exactly one trailing u64");
+        assert_eq!(Request::decode(&u).unwrap(), untraced);
+        assert_eq!(Request::decode(&t).unwrap(), traced);
+        // a pre-trace decoder's view of the traced payload is the id
+        // cut off: zero-fill back to untraced
+        assert_eq!(Request::decode(&t[..t.len() - 8]).unwrap(), untraced);
+        // truncation inside the tail classifies, never zero-fills
+        for cut in 1..8 {
+            assert_eq!(
+                Request::decode(&t[..t.len() - cut]).unwrap_err(),
+                DecodeError::Truncated,
+                "cut {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_trace_ids_ride_a_trailing_array() {
+        let mk = |trace_id: u64| WireEvalRequest {
+            spec: SpecRef::Id(0),
+            scenario: Scenario::named("circuit"),
+            dsl: String::new(),
+            mode: ExecMode::Serialized,
+            priority: 128,
+            trace_id,
+        };
+        let plain = Request::EvalBatch(vec![mk(0), mk(0), mk(0)]);
+        let traced = Request::EvalBatch(vec![mk(5), mk(0), mk(9)]);
+        let p = plain.encode();
+        let t = traced.encode();
+        assert_eq!(p.len() + 3 * 8, t.len(), "one trailing u64 per item, or none");
+        assert_eq!(Request::decode(&t).unwrap(), traced);
+        // the array is all-or-nothing: cutting it zero-fills every id
+        assert_eq!(Request::decode(&t[..t.len() - 24]).unwrap(), plain);
+        // cuts inside it classify
+        for cut in [1usize, 8, 16, 23] {
+            assert_eq!(
+                Request::decode(&t[..t.len() - cut]).unwrap_err(),
+                DecodeError::Truncated,
+                "cut {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn feedback_telemetry_rides_the_tail() {
+        let telemetry =
+            EvalTelemetry { queue_ns: 77, cache_path: 4, sim_ns: 123_456 };
+        let mut fb = SystemFeedback::Performance {
+            line: "Performance Metric: Execution time is 0.0300s.".into(),
+            value: 33.0,
+            profile: None,
+            telemetry: None,
+        };
+        let bare = Response::Feedback(fb.clone()).encode();
+        fb.set_telemetry(telemetry);
+        let bytes = Response::Feedback(fb.clone()).encode();
+        assert_eq!(bare.len() + 17, bytes.len(), "rider is 17 trailing bytes");
+        match Response::decode(&bytes).unwrap() {
+            Response::Feedback(got) => {
+                assert_eq!(got.telemetry(), Some(&telemetry))
+            }
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+        // a pre-trace decoder's view: rider cut off → telemetry None
+        match Response::decode(&bytes[..bytes.len() - 17]).unwrap() {
+            Response::Feedback(got) => assert_eq!(got.telemetry(), None),
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+        for cut in 1..17 {
+            assert!(
+                matches!(
+                    Response::decode(&bytes[..bytes.len() - cut]).unwrap_err(),
+                    DecodeError::Truncated
+                ),
+                "cut {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_telemetry_rides_a_trailing_presence_array() {
+        let telemetry =
+            EvalTelemetry { queue_ns: 9, cache_path: 1, sim_ns: 0 };
+        let mut perf = SystemFeedback::Performance {
+            line: "Performance Metric: Execution time is 0.0300s.".into(),
+            value: 33.0,
+            profile: None,
+            telemetry: None,
+        };
+        let err_item = BatchItem::Error {
+            kind: ErrorKind::Overloaded,
+            msg: "shed".into(),
+            retry_after_ms: 10,
+        };
+        let bare = Response::FeedbackBatch(vec![
+            BatchItem::Feedback(perf.clone()),
+            err_item.clone(),
+            BatchItem::Feedback(SystemFeedback::CompileError("mgpu not found".into())),
+        ]);
+        let bare_bytes = bare.encode();
+        perf.set_telemetry(telemetry);
+        let traced = Response::FeedbackBatch(vec![
+            BatchItem::Feedback(perf),
+            err_item,
+            BatchItem::Feedback(SystemFeedback::CompileError("mgpu not found".into())),
+        ]);
+        let traced_bytes = traced.encode();
+        // one presence byte per item plus the single 17-byte rider
+        assert_eq!(bare_bytes.len() + 3 + 17, traced_bytes.len());
+        match Response::decode(&traced_bytes).unwrap() {
+            Response::FeedbackBatch(items) => {
+                assert_eq!(items.len(), 3);
+                match &items[0] {
+                    BatchItem::Feedback(got) => {
+                        assert_eq!(got.telemetry(), Some(&telemetry))
+                    }
+                    other => panic!("wrong item {other:?}"),
+                }
+                match &items[2] {
+                    BatchItem::Feedback(got) => assert_eq!(got.telemetry(), None),
+                    other => panic!("wrong item {other:?}"),
+                }
+            }
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+        // a pre-trace decoder's view: array cut off → no riders
+        let cut = &traced_bytes[..traced_bytes.len() - (3 + 17)];
+        match Response::decode(cut).unwrap() {
+            Response::FeedbackBatch(items) => {
+                for item in &items {
+                    if let BatchItem::Feedback(fb) = item {
+                        assert_eq!(fb.telemetry(), None);
+                    }
+                }
+            }
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+    }
+
+    #[test]
+    fn trace_dump_roundtrips_and_guards_hostile_counts() {
+        roundtrip_resp(&Response::TraceDump(Vec::new()));
+        roundtrip_resp(&Response::TraceDump(vec![
+            SpanRecord::default(),
+            SpanRecord {
+                trace_id: 0xAB,
+                cache_path: 5,
+                outcome: 1,
+                total_ns: 1_000_000,
+                stages: vec![
+                    StageSpan { stage: 3, start_ns: 0, dur_ns: 500 },
+                    StageSpan { stage: 10, start_ns: 600, dur_ns: 900_000 },
+                ],
+            },
+        ]));
+        // a hostile per-span stage count fails before allocation
+        let mut hostile = vec![WIRE_VERSION, 7];
+        hostile.extend_from_slice(&1u32.to_le_bytes()); // one span
+        hostile.extend_from_slice(&[0u8; 8]); // trace_id
+        hostile.push(0); // cache_path
+        hostile.push(0); // outcome
+        hostile.extend_from_slice(&[0u8; 8]); // total_ns
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes()); // stage count
+        assert_eq!(
+            Response::decode(&hostile).unwrap_err(),
+            DecodeError::Invalid("span stage count")
+        );
+    }
+
+    #[test]
+    fn stats_histogram_tail_roundtrips_and_follows_the_tail_rules() {
+        let hists = vec![
+            StageHistSnapshot {
+                stage: 3,
+                hist: HistSnapshot::of_samples(&[100, 2_000]),
+            },
+            StageHistSnapshot {
+                stage: 10,
+                hist: HistSnapshot::of_samples(&[1_000_000]),
+            },
+        ];
+        // histograms without a fleet: the shard count is still encoded
+        // (zero) because the hist section follows it
+        let solo = StatsSnapshot {
+            evals: 3,
+            stage_hists: hists.clone(),
+            ..StatsSnapshot::default()
+        };
+        roundtrip_resp(&Response::Stats(solo.clone()));
+        // and riding behind a populated fleet tail
+        let fleet = StatsSnapshot {
+            shards: vec![ShardSnapshot {
+                addr: "127.0.0.1:9401".into(),
+                state: 0,
+                routed: 3,
+                evals: 3,
+                cache_hits: 0,
+                decision_hits: 0,
+                submitted: 3,
+                completed: 3,
+                shed_requests: 0,
+                max_queue_depth: 1,
+            }],
+            ..solo.clone()
+        };
+        roundtrip_resp(&Response::Stats(fleet.clone()));
+
+        // a pre-histogram decoder's view ends after the shard entries:
+        // cutting the hist section decodes to the histogram-free twin
+        let bytes = Response::Stats(fleet.clone()).encode();
+        let histless = StatsSnapshot { stage_hists: Vec::new(), ..fleet.clone() };
+        let histless_bytes = Response::Stats(histless.clone()).encode();
+        let section = bytes.len() - histless_bytes.len();
+        match Response::decode(&bytes[..bytes.len() - section]).unwrap() {
+            Response::Stats(got) => assert_eq!(got, histless),
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+        // truncation inside the hist section is corruption, not an
+        // older peer: it must classify, never zero-fill
+        for cut in 1..section {
+            assert!(
+                matches!(
+                    Response::decode(&bytes[..bytes.len() - cut]).unwrap_err(),
+                    DecodeError::Truncated
+                ),
+                "cut {cut}"
+            );
+        }
+
+        // both sections empty → both elided: byte-identical to the
+        // pre-fleet payload shape
+        let none = StatsSnapshot { evals: 3, ..StatsSnapshot::default() };
+        let none_bytes = Response::Stats(none.clone()).encode();
+        let solo_bytes = Response::Stats(solo.clone()).encode();
+        assert!(solo_bytes.len() > none_bytes.len() + 8, "count words + entries");
+        assert_eq!(Response::decode(&none_bytes).unwrap(), Response::Stats(none));
+
+        // a hostile bucket count wider than the layout is rejected
+        // (solo's tail starts where none's payload ends: shard count,
+        // hist count, first stage byte, then the bucket count)
+        let mut hostile = solo_bytes.clone();
+        let off = none_bytes.len() + 4 + 4 + 1;
+        hostile[off..off + 4]
+            .copy_from_slice(&((BUCKETS + 1) as u32).to_le_bytes());
+        assert_eq!(
+            Response::decode(&hostile).unwrap_err(),
+            DecodeError::Invalid("histogram bucket count")
+        );
     }
 }

@@ -48,6 +48,12 @@
 //! [`StatsSnapshot::aggregate_fleet`] — counters sum, per-shard rates
 //! ride in the snapshot's fleet tail under the zero-fill decode rule —
 //! and `Summary` concatenates per-shard blocks under a fleet header.
+//! The router keeps its own [`Telemetry`]: `route` (frame dispatch) and
+//! `upstream` (backend round-trip) stage histograms merged into the
+//! fleet `Stats` aggregate, plus a flight recorder that lands a
+//! `rerouted` span for every traced request bounced off a dead shard.
+//! `TraceDump` fans out too, answering every shard's spans concatenated
+//! ahead of the router's own.
 //!
 //! # Limits
 //!
@@ -79,6 +85,9 @@ use crate::coordinator::{
     ShardContribution, StatsSnapshot, SHARD_DEAD, SHARD_DRAINING, SHARD_UP,
 };
 use crate::machine::MachineSpec;
+use crate::obs::{
+    merge_stage_hists, SpanBuilder, Stage, Telemetry, SPAN_REROUTED,
+};
 use crate::sim::ExecMode;
 use crate::util::hash::{fnv1a, Fnv1a};
 
@@ -375,6 +384,9 @@ enum FanKind {
     Stats,
     /// Fleet summary concatenation.
     Summary,
+    /// Fleet flight-recorder dump: every shard's spans concatenated in
+    /// membership order, the router's own appended last.
+    TraceDump,
 }
 
 /// One queued front reply.
@@ -481,7 +493,14 @@ fn resolve_fan(
                     }
                 })
                 .collect();
-            Response::Stats(StatsSnapshot::aggregate_fleet(&contribs))
+            let mut snap = StatsSnapshot::aggregate_fleet(&contribs);
+            // the router's own stages (route, upstream) join the
+            // fleet-wide histogram set the shards contributed
+            merge_stage_hists(
+                &mut snap.stage_hists,
+                &shared.obs.stages.snapshots(),
+            );
+            Response::Stats(snap)
         }
         FanKind::Summary => {
             let mut text = format!("fleet: {} shard(s)\n", parts.len());
@@ -513,6 +532,18 @@ fn resolve_fan(
             }
             Response::Summary(text)
         }
+        FanKind::TraceDump => {
+            let mut spans = Vec::new();
+            for (_, slot) in &parts {
+                let resp = slot.borrow_mut().take().expect("fan slot ready");
+                // dead / misbehaving shards simply contribute nothing
+                if let Response::TraceDump(s) = resp {
+                    spans.extend(s);
+                }
+            }
+            spans.extend(shared.obs.recorder.dump());
+            Response::TraceDump(spans)
+        }
     }
 }
 
@@ -523,6 +554,12 @@ fn resolve_fan(
 /// One entry of a backend connection's reply FIFO.
 struct Pending {
     dest: Dest,
+    /// The nonzero trace ids riding this frame (empty when untraced) —
+    /// a dead-shard bounce lands one `rerouted` span per id.
+    ids: Vec<u64>,
+    /// When the frame was queued on the backend link (the `upstream`
+    /// histogram sample is queue→answer).
+    sent: Instant,
     _guard: InflightGuard,
 }
 
@@ -559,9 +596,9 @@ impl Backend {
         self.wbuf.len() - self.wpos
     }
 
-    fn pump(&mut self) -> bool {
+    fn pump(&mut self, obs: &Telemetry) -> bool {
         let mut progressed = self.pump_write();
-        progressed |= self.pump_read();
+        progressed |= self.pump_read(obs);
         progressed
     }
 
@@ -595,7 +632,7 @@ impl Backend {
         progressed
     }
 
-    fn pump_read(&mut self) -> bool {
+    fn pump_read(&mut self, obs: &Telemetry) -> bool {
         let mut progressed = false;
         let mut tmp = [0u8; 16 << 10];
         let mut budget = READ_BUDGET_PER_SCAN;
@@ -637,7 +674,11 @@ impl Backend {
                     progressed = true;
                     match Response::decode(&payload) {
                         Ok(resp) => match self.fifo.pop_front() {
-                            Some(p) => p.dest.fill(resp),
+                            Some(p) => {
+                                obs.stages
+                                    .record_since(Stage::RouterUpstream, p.sent);
+                                p.dest.fill(resp);
+                            }
                             None => {
                                 // unsolicited frame (e.g. an idle-reap
                                 // notice): nothing is owed — close and
@@ -720,7 +761,15 @@ impl ThreadCtx {
     /// Forward one encoded request to `shard`, registering `dest` for
     /// its answer.  A failed dial answers `dest` retryably and marks
     /// the shard dead (the caller's ring rebuilds before any retry).
-    fn enqueue(&mut self, shard: &Arc<ShardState>, payload: &[u8], dest: Dest) {
+    /// `ids` are the frame's nonzero trace ids (empty for untraced or
+    /// non-eval frames); a failover lands one `rerouted` span per id.
+    fn enqueue(
+        &mut self,
+        shard: &Arc<ShardState>,
+        payload: &[u8],
+        dest: Dest,
+        ids: Vec<u64>,
+    ) {
         self.rr = self.rr.wrapping_add(1);
         let key = (shard.name.clone(), self.rr % BACKEND_LANES);
         let b = match self.backends.entry(key) {
@@ -734,6 +783,7 @@ impl ThreadCtx {
                     self.shared
                         .rerouted
                         .fetch_add(dest.items(), Ordering::SeqCst);
+                    note_rerouted(&self.shared.obs, &ids, Instant::now());
                     dest.fail(&shard.name);
                     return;
                 }
@@ -742,11 +792,14 @@ impl ThreadCtx {
         if proto::write_frame(&mut b.wbuf, payload).is_err() {
             // a re-encoded request cannot exceed the frame cap its
             // original fit under; stay safe anyway
+            note_rerouted(&self.shared.obs, &ids, Instant::now());
             dest.fail(&shard.name);
             return;
         }
         b.fifo.push_back(Pending {
             dest,
+            ids,
+            sent: Instant::now(),
             _guard: InflightGuard::acquire(shard),
         });
     }
@@ -757,7 +810,7 @@ impl ThreadCtx {
         let shared = Arc::clone(&self.shared);
         let mut progressed = false;
         self.backends.retain(|_, b| {
-            progressed |= b.pump();
+            progressed |= b.pump(&shared.obs);
             if b.dead {
                 fail_backend(b, &shared);
                 let _ = b.stream.shutdown(Shutdown::Both);
@@ -791,8 +844,14 @@ impl ThreadCtx {
                 };
                 shard.routed.fetch_add(1, Ordering::SeqCst);
                 let slot = rslot();
+                let ids = if q.trace_id != 0 { vec![q.trace_id] } else { vec![] };
                 let payload = Request::Eval(q).encode();
-                self.enqueue(&shard, &payload, Dest::Single(Rc::clone(&slot)));
+                self.enqueue(
+                    &shard,
+                    &payload,
+                    Dest::Single(Rc::clone(&slot)),
+                    ids,
+                );
                 FReply::Slot(slot)
             }
             Request::EvalBatch(items) => self.dispatch_batch(items),
@@ -813,6 +872,7 @@ impl ThreadCtx {
                         &shard,
                         &payload,
                         Dest::Single(Rc::clone(&slot)),
+                        Vec::new(),
                     );
                     parts.push((shard, slot));
                 }
@@ -825,11 +885,17 @@ impl ThreadCtx {
                 };
                 let slot = rslot();
                 let payload = Request::GetSpec { name }.encode();
-                self.enqueue(&shard, &payload, Dest::Single(Rc::clone(&slot)));
+                self.enqueue(
+                    &shard,
+                    &payload,
+                    Dest::Single(Rc::clone(&slot)),
+                    Vec::new(),
+                );
                 FReply::Slot(slot)
             }
             Request::Stats => self.dispatch_fan(FanKind::Stats),
             Request::Summary => self.dispatch_fan(FanKind::Summary),
+            Request::TraceDump => self.dispatch_fan(FanKind::TraceDump),
         }
     }
 
@@ -869,8 +935,13 @@ impl ThreadCtx {
         }
         for (shard, sub, sub_slots) in groups {
             shard.routed.fetch_add(sub.len() as u64, Ordering::SeqCst);
+            let ids: Vec<u64> = sub
+                .iter()
+                .map(|q| q.trace_id)
+                .filter(|&t| t != 0)
+                .collect();
             let payload = Request::EvalBatch(sub).encode();
-            self.enqueue(&shard, &payload, Dest::SubBatch(sub_slots));
+            self.enqueue(&shard, &payload, Dest::SubBatch(sub_slots), ids);
         }
         FReply::Batch(slots)
     }
@@ -881,13 +952,22 @@ impl ThreadCtx {
         if self.members.is_empty() {
             return FReply::Now(match kind {
                 FanKind::Stats => {
-                    Response::Stats(StatsSnapshot::aggregate_fleet(&[]))
+                    let mut snap = StatsSnapshot::aggregate_fleet(&[]);
+                    merge_stage_hists(
+                        &mut snap.stage_hists,
+                        &self.shared.obs.stages.snapshots(),
+                    );
+                    Response::Stats(snap)
+                }
+                FanKind::TraceDump => {
+                    Response::TraceDump(self.shared.obs.recorder.dump())
                 }
                 _ => Response::Summary("fleet: 0 shard(s)\n".to_string()),
             });
         }
         let payload = match kind {
             FanKind::Stats => Request::Stats.encode(),
+            FanKind::TraceDump => Request::TraceDump.encode(),
             _ => Request::Summary.encode(),
         };
         let members = self.members.clone();
@@ -901,7 +981,12 @@ impl ThreadCtx {
                     retry_after_ms: 0,
                 });
             } else {
-                self.enqueue(&shard, &payload, Dest::Single(Rc::clone(&slot)));
+                self.enqueue(
+                    &shard,
+                    &payload,
+                    Dest::Single(Rc::clone(&slot)),
+                    Vec::new(),
+                );
             }
             parts.push((shard, slot));
         }
@@ -925,9 +1010,23 @@ fn fail_backend(b: &mut Backend, shared: &RouterShared) {
     let mut items = 0u64;
     while let Some(p) = b.fifo.pop_front() {
         items += p.dest.items();
+        note_rerouted(&shared.obs, &p.ids, p.sent);
         p.dest.fail(&b.shard.name);
     }
     shared.rerouted.fetch_add(items, Ordering::SeqCst);
+}
+
+/// Land one `rerouted` span per traced id that was just failed over —
+/// the forensic trail of a dead-shard bounce (the client's retry will
+/// open a fresh span on the surviving shard).
+fn note_rerouted(obs: &Telemetry, ids: &[u64], sent: Instant) {
+    for &id in ids {
+        let mut span = SpanBuilder::begin_at(id, sent);
+        let waited = sent.elapsed().as_nanos() as u64;
+        span.stage(Stage::RouterUpstream, sent, waited);
+        span.outcome(SPAN_REROUTED);
+        obs.recorder.push(span.finish());
+    }
 }
 
 fn dial(shard: &ShardState) -> io::Result<TcpStream> {
@@ -1015,7 +1114,15 @@ impl FrontConn {
                 FrameStep::Frame { payload, consumed } => {
                     self.rbuf.drain(..consumed);
                     let reply = match Request::decode(&payload) {
-                        Ok(req) => ctx.dispatch(req),
+                        Ok(req) => {
+                            let t_route = Instant::now();
+                            let r = ctx.dispatch(req);
+                            ctx.shared
+                                .obs
+                                .stages
+                                .record_since(Stage::RouterRoute, t_route);
+                            r
+                        }
                         Err(e) => FReply::Now(Response::Error {
                             kind: e.wire_kind(),
                             msg: e.to_string(),
@@ -1153,6 +1260,10 @@ struct RouterShared {
     reaped: AtomicU64,
     /// Front connections refused at the connection cap.
     refused: AtomicU64,
+    /// The router's own telemetry: `route` / `upstream` stage
+    /// histograms and the reroute flight recorder (distinct from the
+    /// shards' — the fleet `Stats` / `TraceDump` answers combine both).
+    obs: Telemetry,
 }
 
 fn io_loop(idx: usize, shared: Arc<RouterShared>, deadline: Option<Duration>) {
@@ -1335,6 +1446,7 @@ impl EvalRouter {
             rerouted: AtomicU64::new(0),
             reaped: AtomicU64::new(0),
             refused: AtomicU64::new(0),
+            obs: Telemetry::from_env(),
         });
         let mut io = Vec::with_capacity(io_threads);
         for i in 0..io_threads {
@@ -1674,6 +1786,7 @@ mod tests {
             dsl: "task * region * : place = ANY;".into(),
             mode: ExecMode::Serialized,
             priority: 128,
+            trace_id: 0,
         };
         assert_eq!(affinity_key(&base), affinity_key(&base.clone()));
 
@@ -1682,6 +1795,12 @@ mod tests {
         let mut hot = base.clone();
         hot.priority = 255;
         assert_eq!(affinity_key(&base), affinity_key(&hot));
+
+        // tracing is inert: a stamped id must not change routing (a
+        // traced re-submission has to reach the same warm shard)
+        let mut traced = base.clone();
+        traced.trace_id = 0xDEAD_BEEF;
+        assert_eq!(affinity_key(&base), affinity_key(&traced));
 
         let mut dsl = base.clone();
         dsl.dsl.push(' ');

@@ -111,6 +111,7 @@ use std::time::{Duration, Instant};
 use crate::apps;
 use crate::coordinator::{EvalRequest, EvalService, EvalTicket};
 use crate::feedback::SystemFeedback;
+use crate::obs::Stage;
 
 use super::proto::{
     self, BatchItem, ErrorKind, FrameStep, Request, Response, SpecRef,
@@ -245,7 +246,7 @@ impl Drop for InFlightGuard {
 /// bad-request) or pending on a service ticket.
 enum BatchSlot {
     Done(BatchItem),
-    Ticket { ticket: EvalTicket, guard: InFlightGuard },
+    Ticket { ticket: EvalTicket, guard: InFlightGuard, traced: bool },
 }
 
 impl BatchSlot {
@@ -262,7 +263,7 @@ impl BatchSlot {
 /// answered as one frame.
 enum Reply {
     Now(Response),
-    Ticket { ticket: EvalTicket, guard: InFlightGuard },
+    Ticket { ticket: EvalTicket, guard: InFlightGuard, traced: bool },
     Batch(Vec<BatchSlot>),
 }
 
@@ -283,8 +284,8 @@ impl Reply {
     fn into_response(self) -> Response {
         match self {
             Reply::Now(r) => r,
-            Reply::Ticket { ticket, guard } => {
-                let resp = ticket_response(&ticket);
+            Reply::Ticket { ticket, guard, traced } => {
+                let resp = ticket_response(&ticket, traced);
                 drop(guard);
                 resp
             }
@@ -293,8 +294,8 @@ impl Reply {
                     .into_iter()
                     .map(|s| match s {
                         BatchSlot::Done(item) => item,
-                        BatchSlot::Ticket { ticket, guard } => {
-                            let item = ticket_item(&ticket);
+                        BatchSlot::Ticket { ticket, guard, traced } => {
+                            let item = ticket_item(&ticket, traced);
                             drop(guard);
                             item
                         }
@@ -305,11 +306,22 @@ impl Reply {
     }
 }
 
+/// The telemetry rider travels only on traced replies: untraced frames
+/// must stay byte-identical to what pre-trace peers expect, so a client
+/// that never opted in never sees the trailing rider.
+fn strip_untraced_telemetry(fb: &mut SystemFeedback, traced: bool) {
+    if !traced {
+        if let SystemFeedback::Performance { telemetry, .. } = fb {
+            *telemetry = None;
+        }
+    }
+}
+
 /// Worker panics surface through the ticket as classified
 /// execution-error feedback; shed tickets become wire `Overloaded`
 /// errors carrying the service's retry-after hint.
-fn ticket_response(t: &EvalTicket) -> Response {
-    let fb = t.wait();
+fn ticket_response(t: &EvalTicket, traced: bool) -> Response {
+    let mut fb = t.wait();
     match t.shed_retry_after_ms() {
         Some(ms) => Response::Error {
             kind: ErrorKind::Overloaded,
@@ -319,14 +331,17 @@ fn ticket_response(t: &EvalTicket) -> Response {
             },
             retry_after_ms: ms,
         },
-        None => Response::Feedback(fb),
+        None => {
+            strip_untraced_telemetry(&mut fb, traced);
+            Response::Feedback(fb)
+        }
     }
 }
 
 /// [`ticket_response`] for one batch item (per-item shedding: a shed
 /// candidate does not poison its batch-mates).
-fn ticket_item(t: &EvalTicket) -> BatchItem {
-    let fb = t.wait();
+fn ticket_item(t: &EvalTicket, traced: bool) -> BatchItem {
+    let mut fb = t.wait();
     match t.shed_retry_after_ms() {
         Some(ms) => BatchItem::Error {
             kind: ErrorKind::Overloaded,
@@ -336,7 +351,10 @@ fn ticket_item(t: &EvalTicket) -> BatchItem {
             },
             retry_after_ms: ms,
         },
-        None => BatchItem::Feedback(fb),
+        None => {
+            strip_untraced_telemetry(&mut fb, traced);
+            BatchItem::Feedback(fb)
+        }
     }
 }
 
@@ -352,6 +370,14 @@ struct ConnState {
     fifo: VecDeque<Reply>,
     /// Evaluations pending on this connection (see [`InFlightGuard`]).
     in_flight: Arc<AtomicUsize>,
+    /// Monotonic byte counters over the write buffer's whole life
+    /// (they survive compaction, unlike `wpos`), plus the encode
+    /// stamps they resolve: when `flushed_total` passes a mark's
+    /// offset, that reply has fully left the buffer and its
+    /// encode→drain latency lands in the `ReplyWrite` histogram.
+    encoded_total: u64,
+    flushed_total: u64,
+    write_marks: VecDeque<(u64, Instant)>,
     last_read: Instant,
     /// Last instant the socket accepted bytes while a backlog existed.
     last_write_progress: Instant,
@@ -372,6 +398,9 @@ impl ConnState {
             wpos: 0,
             fifo: VecDeque::new(),
             in_flight: Arc::new(AtomicUsize::new(0)),
+            encoded_total: 0,
+            flushed_total: 0,
+            write_marks: VecDeque::new(),
             last_read: now,
             last_write_progress: now,
             read_closed: false,
@@ -401,7 +430,7 @@ impl ConnState {
             progressed |= self.pump_read(service);
         }
         progressed |= self.pump_resolve();
-        progressed |= self.pump_write();
+        progressed |= self.pump_write(service);
         self.check_deadline(service, deadline);
         progressed
     }
@@ -441,6 +470,7 @@ impl ConnState {
                 FrameStep::Incomplete => break,
                 FrameStep::Frame { payload, consumed } => {
                     self.rbuf.drain(..consumed);
+                    let t_admit = Instant::now();
                     let reply = match Request::decode(&payload) {
                         Ok(req) => serve_request(req, service, &self.in_flight),
                         // version skew / undecodable payloads answer in
@@ -452,6 +482,13 @@ impl ConnState {
                             retry_after_ms: 0,
                         }),
                     };
+                    // dispatch overhead: frame decode → admitted / shed
+                    // / answered (evaluation time is not in here — the
+                    // reply is a ticket by now)
+                    service
+                        .telemetry()
+                        .stages
+                        .record_since(Stage::Admission, t_admit);
                     self.fifo.push_back(reply);
                     progressed = true;
                 }
@@ -481,19 +518,22 @@ impl ConnState {
         while self.fifo.front().is_some_and(Reply::ready) {
             let reply = self.fifo.pop_front().expect("checked front");
             let resp = reply.into_response();
+            let before = self.wbuf.len();
             if proto::write_frame(&mut self.wbuf, &resp.encode()).is_err() {
                 // unencodable reply (oversized frame): the stream can
                 // no longer stay in sync — tear down
                 self.dead = true;
                 return true;
             }
+            self.encoded_total += (self.wbuf.len() - before) as u64;
+            self.write_marks.push_back((self.encoded_total, Instant::now()));
             progressed = true;
         }
         progressed
     }
 
     /// Flush the write buffer as far as the socket allows.
-    fn pump_write(&mut self) -> bool {
+    fn pump_write(&mut self, service: &Arc<EvalService>) -> bool {
         let mut progressed = false;
         while self.wpos < self.wbuf.len() {
             match self.stream.write(&self.wbuf[self.wpos..]) {
@@ -503,6 +543,7 @@ impl ConnState {
                 }
                 Ok(n) => {
                     self.wpos += n;
+                    self.flushed_total += n as u64;
                     self.last_write_progress = Instant::now();
                     progressed = true;
                 }
@@ -522,6 +563,16 @@ impl ConnState {
             // tracks unsent bytes, not all bytes ever encoded
             self.wbuf.drain(..self.wpos);
             self.wpos = 0;
+        }
+        // every reply whose last byte just left the buffer closes its
+        // encode→drain measurement
+        while self
+            .write_marks
+            .front()
+            .is_some_and(|(off, _)| *off <= self.flushed_total)
+        {
+            let (_, stamped) = self.write_marks.pop_front().expect("checked front");
+            service.telemetry().stages.record_since(Stage::ReplyWrite, stamped);
         }
         progressed
     }
@@ -881,6 +932,7 @@ fn serve_request(
                     retry_after_ms: 25,
                 });
             }
+            let traced = q.trace_id != 0;
             match prepare_eval(q, service) {
                 // non-blocking admission: at the queue's high-water
                 // mark the service sheds lowest-priority work and the
@@ -888,6 +940,7 @@ fn serve_request(
                 Ok(req) => Reply::Ticket {
                     guard: InFlightGuard::acquire(in_flight),
                     ticket: service.try_submit(req),
+                    traced,
                 },
                 Err(msg) => bad_request(msg),
             }
@@ -907,10 +960,12 @@ fn serve_request(
                             retry_after_ms: 25,
                         });
                     }
+                    let traced = q.trace_id != 0;
                     match prepare_eval(q, service) {
                         Ok(req) => BatchSlot::Ticket {
                             guard: InFlightGuard::acquire(in_flight),
                             ticket: service.try_submit(req),
+                            traced,
                         },
                         Err(msg) => BatchSlot::Done(BatchItem::Error {
                             kind: ErrorKind::BadRequest,
@@ -951,6 +1006,9 @@ fn serve_request(
         },
         Request::Stats => Reply::Now(Response::Stats(service.snapshot())),
         Request::Summary => Reply::Now(Response::Summary(service.summary())),
+        Request::TraceDump => {
+            Reply::Now(Response::TraceDump(service.trace_dump()))
+        }
     }
 }
 
@@ -1003,6 +1061,7 @@ fn prepare_eval(
         dsl: q.dsl,
         mode: q.mode,
         priority: q.priority,
+        trace_id: q.trace_id,
     })
 }
 
@@ -1023,7 +1082,48 @@ mod tests {
             dsl: crate::mapping::expert_dsl("circuit").unwrap().into(),
             mode: ExecMode::Serialized,
             priority: 128,
+            trace_id: 0,
         }
+    }
+
+    #[test]
+    fn trace_dump_requests_answer_in_place_and_untraced_replies_lose_the_rider() {
+        let svc = service();
+        let counter = Arc::new(AtomicUsize::new(0));
+        match serve_request(Request::TraceDump, &svc, &counter) {
+            Reply::Now(Response::TraceDump(spans)) => {
+                assert!(spans.is_empty(), "fresh service has no spans")
+            }
+            _ => panic!("trace dump must answer in place"),
+        }
+        // untraced eval: telemetry stripped before the wire
+        let reply = serve_request(Request::Eval(wire_eval()), &svc, &counter);
+        if let Reply::Ticket { ticket, .. } = &reply {
+            let _ = ticket.wait();
+        }
+        match reply.into_response() {
+            Response::Feedback(fb) => {
+                assert!(fb.telemetry().is_none(), "untraced reply keeps no rider")
+            }
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+        // traced eval: the rider survives and a span lands in the ring
+        let traced = WireEvalRequest { trace_id: 0xBEEF, ..wire_eval() };
+        let reply = serve_request(Request::Eval(traced), &svc, &counter);
+        if let Reply::Ticket { ticket, .. } = &reply {
+            let _ = ticket.wait();
+        }
+        match reply.into_response() {
+            Response::Feedback(fb) => {
+                assert!(fb.telemetry().is_some(), "traced reply carries the rider")
+            }
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+        let spans = svc.trace_dump();
+        assert!(
+            spans.iter().any(|s| s.trace_id == 0xBEEF),
+            "traced request must land a span"
+        );
     }
 
     #[test]

@@ -1,0 +1,435 @@
+//! Mergeable log2-bucket latency histograms with atomic buckets.
+//!
+//! A sample of `v` nanoseconds lands in bucket `⌊log2 v⌋ + 1` (bucket 0
+//! holds exact zeros), so bucket `i ≥ 1` covers `[2^(i-1), 2^i - 1]` and
+//! recording is one relaxed `fetch_add` — cheap enough for every
+//! request on the serving hot path.  Snapshots are plain `Vec<u64>`
+//! bucket counts that merge by element-wise addition (what
+//! `StatsSnapshot::aggregate_fleet` does across shards) and extract
+//! percentiles with the same nearest-rank rule as
+//! [`percentile_sorted`](crate::util::stats::percentile_sorted): the
+//! returned value is the containing bucket's upper bound, so it agrees
+//! with the exact sample percentile to within one bucket width.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: `2^(BUCKETS-2) - 1` ns (≈ 1.6 days) saturates the last
+/// bucket, far beyond any request latency this fabric serves.
+pub const BUCKETS: usize = 48;
+
+/// Bucket index of a nanosecond sample.
+#[inline]
+fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ((64 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Upper bound (inclusive) of a bucket — what percentile extraction
+/// reports for ranks landing in it.
+#[inline]
+fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// One lock-free latency histogram (counts only; the log2 bucket layout
+/// above).  Recording never blocks and tolerates any thread count.
+pub struct Hist {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Hist { buckets: [ZERO; BUCKETS] }
+    }
+
+    /// Record one sample of `ns` nanoseconds.
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Plain-data copy (trailing zero buckets trimmed, so empty
+    /// histograms snapshot to an empty `Vec` and stay off the wire).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        while buckets.last() == Some(&0) {
+            buckets.pop();
+        }
+        HistSnapshot { buckets }
+    }
+}
+
+/// Plain-data histogram: bucket counts in the [`Hist`] layout, possibly
+/// trimmed of trailing zeros.  This is what rides the `Stats` wire tail
+/// and what fleets merge.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    /// Build the histogram of a raw sample set (tests and local
+    /// conversions; the serving path records into [`Hist`] directly).
+    pub fn of_samples(samples: &[u64]) -> HistSnapshot {
+        let mut buckets = vec![0u64; BUCKETS];
+        for &s in samples {
+            buckets[bucket_of(s)] += 1;
+        }
+        while buckets.last() == Some(&0) {
+            buckets.pop();
+        }
+        HistSnapshot { buckets }
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().fold(0u64, |a, &b| a.saturating_add(b))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Element-wise bucket addition (shorter operand zero-extends).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if other.buckets.len() > self.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a = a.saturating_add(*b);
+        }
+    }
+
+    /// Nearest-rank percentile (`p` in 0..=100), reported as the
+    /// containing bucket's inclusive upper bound; `0` when empty.  The
+    /// rank rule matches `percentile_sorted`, so on the same samples
+    /// the two agree to within one bucket width.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * n as f64).ceil() as u64;
+        let rank = rank.clamp(1, n);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen = seen.saturating_add(c);
+            if seen >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(self.buckets.len().saturating_sub(1))
+    }
+
+    /// Upper bound of the highest non-empty bucket (an upper estimate
+    /// of the maximum sample); `0` when empty.
+    pub fn max(&self) -> u64 {
+        self.buckets
+            .iter()
+            .rposition(|&c| c != 0)
+            .map_or(0, bucket_upper)
+    }
+}
+
+/// A pipeline stage with a recorded latency histogram.  Codes are wire
+/// stable: they ride the `Stats` histogram tail and `TraceDump` span
+/// records, and unknown codes pass through undecoded (forward
+/// compatibility), so variants must never be renumbered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Client: submit → reply available (includes retries and the wire).
+    ClientSend = 0,
+    /// Router: routing decision (ring lookup + dispatch bookkeeping).
+    RouterRoute = 1,
+    /// Router: backend send → upstream reply.
+    RouterUpstream = 2,
+    /// Shard: job enqueue → worker pop.
+    QueueWait = 3,
+    /// Server: request decode → admitted / shed (dispatch overhead).
+    Admission = 4,
+    /// Serving time of a text-level feedback-cache hit.
+    CacheHit = 5,
+    /// Serving time of a semantic decision-cache hit.
+    CacheDecisionHit = 6,
+    /// Serving time of a delta-spliced evaluation.
+    CacheSplice = 7,
+    /// Serving time of a cold (full simulation) evaluation.
+    CacheCold = 8,
+    /// `resolve_decisions` alone.
+    ResolveDecisions = 9,
+    /// Plan execution alone (full, spliced, or legacy engine).
+    ExecutePlan = 10,
+    /// Server: reply encoded → write buffer drained.
+    ReplyWrite = 11,
+}
+
+impl Stage {
+    pub const COUNT: usize = 12;
+
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::ClientSend,
+        Stage::RouterRoute,
+        Stage::RouterUpstream,
+        Stage::QueueWait,
+        Stage::Admission,
+        Stage::CacheHit,
+        Stage::CacheDecisionHit,
+        Stage::CacheSplice,
+        Stage::CacheCold,
+        Stage::ResolveDecisions,
+        Stage::ExecutePlan,
+        Stage::ReplyWrite,
+    ];
+
+    pub fn from_code(code: u8) -> Option<Stage> {
+        Stage::ALL.get(code as usize).copied()
+    }
+
+    /// Short render name (the `top` / summary tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::ClientSend => "client",
+            Stage::RouterRoute => "route",
+            Stage::RouterUpstream => "upstream",
+            Stage::QueueWait => "queue",
+            Stage::Admission => "admit",
+            Stage::CacheHit => "hit",
+            Stage::CacheDecisionHit => "decision",
+            Stage::CacheSplice => "splice",
+            Stage::CacheCold => "cold",
+            Stage::ResolveDecisions => "resolve",
+            Stage::ExecutePlan => "sim",
+            Stage::ReplyWrite => "write",
+        }
+    }
+
+    /// Render name of a raw (possibly future) stage code.
+    pub fn name_of(code: u8) -> String {
+        match Stage::from_code(code) {
+            Some(s) => s.name().to_string(),
+            None => format!("stage{code}"),
+        }
+    }
+}
+
+/// One stage's histogram in a `StatsSnapshot` (and its wire tail).
+/// `stage` stays a raw code so snapshots from newer peers with more
+/// stages aggregate and render instead of failing to decode.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct StageHistSnapshot {
+    pub stage: u8,
+    pub hist: HistSnapshot,
+}
+
+/// Merge `from` into `to` by stage code (element-wise bucket addition;
+/// unseen stages append).  Keeps codes sorted for stable rendering.
+pub fn merge_stage_hists(to: &mut Vec<StageHistSnapshot>, from: &[StageHistSnapshot]) {
+    for f in from {
+        match to.iter_mut().find(|t| t.stage == f.stage) {
+            Some(t) => t.hist.merge(&f.hist),
+            None => to.push(f.clone()),
+        }
+    }
+    to.sort_by_key(|t| t.stage);
+}
+
+/// The full per-stage histogram set of one process.
+pub struct StageSet {
+    hists: [Hist; Stage::COUNT],
+}
+
+impl Default for StageSet {
+    fn default() -> StageSet {
+        StageSet::new()
+    }
+}
+
+impl StageSet {
+    pub fn new() -> StageSet {
+        StageSet { hists: std::array::from_fn(|_| Hist::new()) }
+    }
+
+    /// Record one `ns` sample on `stage`.
+    #[inline]
+    pub fn record(&self, stage: Stage, ns: u64) {
+        self.hists[stage as usize].record(ns);
+    }
+
+    /// Record the elapsed time of `since` on `stage`, returning the
+    /// measured nanoseconds (for reuse in span records).
+    #[inline]
+    pub fn record_since(&self, stage: Stage, since: std::time::Instant) -> u64 {
+        let ns = since.elapsed().as_nanos() as u64;
+        self.record(stage, ns);
+        ns
+    }
+
+    /// Snapshots of every stage that recorded at least one sample, in
+    /// stage-code order (empty stages stay off the wire).
+    pub fn snapshots(&self) -> Vec<StageHistSnapshot> {
+        Stage::ALL
+            .iter()
+            .filter_map(|&s| {
+                let hist = self.hists[s as usize].snapshot();
+                (!hist.is_empty())
+                    .then(|| StageHistSnapshot { stage: s as u8, hist })
+            })
+            .collect()
+    }
+}
+
+/// Human-friendly nanosecond rendering (`978ns`, `12.4µs`, `3.1ms`,
+/// `2.50s`) for summaries and the `top` table.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile_sorted;
+
+    #[test]
+    fn buckets_cover_the_u64_range_in_log2_steps() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        // every bucket's upper bound maps back into that bucket
+        for i in 1..BUCKETS - 1 {
+            assert_eq!(bucket_of(bucket_upper(i)), i, "bucket {i}");
+            assert_eq!(bucket_of(bucket_upper(i) + 1), i + 1);
+        }
+    }
+
+    #[test]
+    fn snapshot_trims_trailing_zeros_and_merges_elementwise() {
+        let h = Hist::new();
+        assert!(h.snapshot().is_empty());
+        h.record(0);
+        h.record(5);
+        h.record(5);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.buckets.len(), bucket_of(5) + 1, "trailing zeros trimmed");
+        let mut m = HistSnapshot::default();
+        m.merge(&s);
+        m.merge(&s);
+        assert_eq!(m.count(), 6);
+        assert_eq!(m.buckets[bucket_of(5)], 4);
+    }
+
+    #[test]
+    fn percentiles_track_percentile_sorted_within_one_bucket() {
+        // deterministic LCG over a latency-like spread (ns .. seconds)
+        let mut x = 0x1234_5678_9abc_def0u64;
+        let mut samples: Vec<u64> = (0..4096)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (x >> 33) % 2_000_000_000
+            })
+            .collect();
+        let hist = HistSnapshot::of_samples(&samples);
+        samples.sort_unstable();
+        let sorted: Vec<f64> = samples.iter().map(|&s| s as f64).collect();
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            let exact = percentile_sorted(&sorted, p) as u64;
+            let est = hist.percentile(p);
+            assert_eq!(
+                bucket_of(exact),
+                bucket_of(est),
+                "p{p}: exact {exact} and estimate {est} must share a bucket"
+            );
+            assert!(est >= exact, "upper-bound estimate (p{p}: {est} < {exact})");
+            let width = 1u64 << (bucket_of(exact).saturating_sub(1));
+            assert!(est - exact < width, "p{p}: off by ≥ one bucket width");
+        }
+    }
+
+    #[test]
+    fn merged_histograms_equal_the_histogram_of_concatenated_samples() {
+        let a: Vec<u64> = (0..500).map(|i| i * 37).collect();
+        let b: Vec<u64> = (0..300).map(|i| i * 911 + 5).collect();
+        let mut merged = HistSnapshot::of_samples(&a);
+        merged.merge(&HistSnapshot::of_samples(&b));
+        let mut all = a.clone();
+        all.extend_from_slice(&b);
+        assert_eq!(merged, HistSnapshot::of_samples(&all));
+    }
+
+    #[test]
+    fn stage_set_snapshots_only_recorded_stages() {
+        let s = StageSet::new();
+        assert!(s.snapshots().is_empty());
+        s.record(Stage::QueueWait, 100);
+        s.record(Stage::ExecutePlan, 1_000_000);
+        let snaps = s.snapshots();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].stage, Stage::QueueWait as u8);
+        assert_eq!(snaps[1].stage, Stage::ExecutePlan as u8);
+        assert_eq!(snaps[1].hist.count(), 1);
+    }
+
+    #[test]
+    fn merge_stage_hists_adds_by_code_and_sorts() {
+        let mut to = vec![StageHistSnapshot {
+            stage: 8,
+            hist: HistSnapshot::of_samples(&[10]),
+        }];
+        let from = vec![
+            StageHistSnapshot { stage: 3, hist: HistSnapshot::of_samples(&[7]) },
+            StageHistSnapshot { stage: 8, hist: HistSnapshot::of_samples(&[9]) },
+        ];
+        merge_stage_hists(&mut to, &from);
+        assert_eq!(to.len(), 2);
+        assert_eq!(to[0].stage, 3);
+        assert_eq!(to[1].stage, 8);
+        assert_eq!(to[1].hist.count(), 2);
+    }
+
+    #[test]
+    fn stage_codes_roundtrip_and_name() {
+        for s in Stage::ALL {
+            assert_eq!(Stage::from_code(s as u8), Some(s));
+        }
+        assert_eq!(Stage::from_code(Stage::COUNT as u8), None);
+        assert_eq!(Stage::name_of(3), "queue");
+        assert_eq!(Stage::name_of(200), "stage200");
+    }
+
+    #[test]
+    fn fmt_ns_picks_sane_units() {
+        assert_eq!(fmt_ns(999), "999ns");
+        assert_eq!(fmt_ns(1_500), "1.5µs");
+        assert_eq!(fmt_ns(2_500_000), "2.5ms");
+        assert_eq!(fmt_ns(1_500_000_000), "1.50s");
+    }
+}

@@ -1,0 +1,107 @@
+//! Observability: stage-latency histograms, request-lifecycle tracing,
+//! and a bounded flight recorder — std-only, shared by every layer of
+//! the serving path.
+//!
+//! The paper's thesis is that *attributable* feedback beats a scalar
+//! score; this module applies the same idea to the serving fabric
+//! itself.  [`ServiceStats`](crate::coordinator::ServiceStats) says how
+//! *much* work happened; `obs` says *where the time went*:
+//!
+//! * [`hist`] — mergeable log2-bucket latency histograms with atomic
+//!   buckets (one relaxed `fetch_add` per sample, no lock on the hot
+//!   path), recorded per pipeline [`Stage`]: client send→reply, router
+//!   route + upstream, shard queue wait, admission, each cache path
+//!   (feedback-hit / decision-hit / splice / cold), decision
+//!   resolution, plan execution, and reply write.  Percentile
+//!   extraction follows the same nearest-rank rule as
+//!   [`crate::util::stats::percentile_sorted`], so histogram p50/p99
+//!   agree with exact sample percentiles to within one bucket width.
+//! * [`trace`] — client-stamped trace ids ride the wire as trailing
+//!   optional fields (the Stats-tail zero-fill rule, so untraced
+//!   traffic is byte-identical to older peers) and produce per-request
+//!   [`SpanRecord`]s: monotonic stage timestamps relative to the span
+//!   start, the cache-path outcome, and the serving wall time.
+//!   Tracing is *inert*: ids and spans never influence evaluation,
+//!   caching, or scheduling, so traced campaigns are bit-identical to
+//!   untraced ones.
+//! * [`recorder`] — a bounded ring buffer of recent spans (traced,
+//!   errored, shed, rerouted, or slow requests), dumpable over the wire
+//!   via `Request::TraceDump` and printed automatically when
+//!   `chaos-smoke` / `fleet-smoke` fail, so injected-fault runs leave a
+//!   forensic trail instead of just a final score.
+
+pub mod hist;
+pub mod recorder;
+pub mod trace;
+
+pub use hist::{
+    fmt_ns, merge_stage_hists, Hist, HistSnapshot, Stage, StageHistSnapshot,
+    StageSet, BUCKETS,
+};
+pub use recorder::FlightRecorder;
+pub use trace::{
+    CachePath, EvalTelemetry, SpanBuilder, SpanRecord, StageSpan, TraceIdGen,
+    SPAN_ERROR, SPAN_OK, SPAN_REROUTED, SPAN_SHED,
+};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One process's telemetry hub: the per-stage histogram set, cache-path
+/// counters, and the flight recorder.  The [`EvalService`] owns one
+/// (shared with the server that fronts it); the router owns its own.
+///
+/// [`EvalService`]: crate::coordinator::EvalService
+pub struct Telemetry {
+    pub stages: StageSet,
+    pub recorder: FlightRecorder,
+    /// Cache-path outcome counters, indexed by [`CachePath`] code.
+    paths: [AtomicU64; CachePath::COUNT],
+    /// Untraced requests slower than this still land in the recorder
+    /// (`MAPPEROPT_TRACE_SLOW_MS`, default 1000; `0` disables).
+    pub slow_ns: u64,
+}
+
+impl Telemetry {
+    /// Telemetry with the recorder ring and slow threshold read from
+    /// `MAPPEROPT_TRACE_RING` / `MAPPEROPT_TRACE_SLOW_MS`.
+    pub fn from_env() -> Telemetry {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        let slow_ms = std::env::var("MAPPEROPT_TRACE_SLOW_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(1000);
+        Telemetry {
+            stages: StageSet::new(),
+            recorder: FlightRecorder::from_env(),
+            paths: [ZERO; CachePath::COUNT],
+            slow_ns: slow_ms.saturating_mul(1_000_000),
+        }
+    }
+
+    /// Count one serving outcome on `path`.
+    pub fn note_path(&self, path: CachePath) {
+        self.paths[path as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(path, count)` for every cache path seen at least once.
+    pub fn path_counts(&self) -> Vec<(CachePath, u64)> {
+        CachePath::ALL
+            .iter()
+            .filter_map(|&p| {
+                match self.paths[p as usize].load(Ordering::Relaxed) {
+                    0 => None,
+                    n => Some((p, n)),
+                }
+            })
+            .collect()
+    }
+
+    /// Should a finished span with this outcome / wall time be kept?
+    /// Traced spans always; otherwise only errored / shed / rerouted /
+    /// slow ones (the forensic set).
+    pub fn keep_span(&self, trace_id: u64, outcome: u8, total_ns: u64) -> bool {
+        trace_id != 0
+            || outcome != SPAN_OK
+            || (self.slow_ns != 0 && total_ns >= self.slow_ns)
+    }
+}

@@ -1,0 +1,139 @@
+//! The flight recorder: a bounded ring buffer of recent
+//! [`SpanRecord`]s.
+//!
+//! Traced requests always land here; untraced ones only when they end
+//! badly (error / shed / rerouted) or slowly — the forensic set.  The
+//! ring is bounded (`MAPPEROPT_TRACE_RING`, default 1024 spans; `0`
+//! disables recording entirely), drops the *oldest* span under
+//! pressure, and counts what it dropped, so a long chaos run keeps the
+//! most recent evidence without unbounded memory.
+//!
+//! Dump paths: the `Request::TraceDump` wire frame (served by shard and
+//! router alike; the router concatenates its shards' dumps with its
+//! own), and the automatic dump `chaos-smoke` / `fleet-smoke` print on
+//! assertion failure.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::trace::SpanRecord;
+
+/// Default ring capacity (spans).
+pub const DEFAULT_RING: usize = 1024;
+
+/// Bounded ring of recent spans; see module docs.
+pub struct FlightRecorder {
+    cap: usize,
+    ring: Mutex<VecDeque<SpanRecord>>,
+    dropped: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            cap,
+            ring: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Capacity from `MAPPEROPT_TRACE_RING` (default [`DEFAULT_RING`]).
+    pub fn from_env() -> FlightRecorder {
+        let cap = std::env::var("MAPPEROPT_TRACE_RING")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_RING);
+        FlightRecorder::new(cap)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans evicted to make room (not spans filtered before push).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Append a span, evicting the oldest at capacity.  No-op when the
+    /// ring is disabled (`cap == 0`).
+    pub fn push(&self, span: SpanRecord) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut g = self.ring.lock().unwrap();
+        if g.len() >= self.cap {
+            g.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        g.push_back(span);
+    }
+
+    /// Copy of the ring, oldest first (what `TraceDump` ships).
+    pub fn dump(&self) -> Vec<SpanRecord> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Human-readable dump block (the smoke-failure forensic trail).
+    pub fn render(spans: &[SpanRecord]) -> String {
+        if spans.is_empty() {
+            return "flight recorder: no spans recorded\n".to_string();
+        }
+        let mut out = format!("flight recorder: {} span(s)\n", spans.len());
+        for s in spans {
+            out.push_str("  ");
+            out.push_str(&s.render());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64) -> SpanRecord {
+        SpanRecord { trace_id: id, ..SpanRecord::default() }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_drops_oldest() {
+        let r = FlightRecorder::new(3);
+        for i in 1..=5 {
+            r.push(span(i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let ids: Vec<u64> = r.dump().iter().map(|s| s.trace_id).collect();
+        assert_eq!(ids, vec![3, 4, 5], "oldest spans evicted first");
+    }
+
+    #[test]
+    fn zero_capacity_disables_recording() {
+        let r = FlightRecorder::new(0);
+        r.push(span(1));
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn render_is_one_line_per_span() {
+        let r = FlightRecorder::new(8);
+        assert!(FlightRecorder::render(&r.dump()).contains("no spans"));
+        r.push(span(7));
+        r.push(span(8));
+        let text = FlightRecorder::render(&r.dump());
+        assert!(text.contains("2 span(s)"), "{text}");
+        assert_eq!(text.lines().count(), 3, "{text}");
+    }
+}

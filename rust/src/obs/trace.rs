@@ -1,0 +1,324 @@
+//! Request-lifecycle tracing: client-stamped ids, per-request span
+//! records, and the per-eval telemetry rider.
+//!
+//! A trace id is stamped once, client-side, and propagated unchanged
+//! through router and shard as a *trailing optional* wire field (elided
+//! when zero, so untraced traffic is byte-identical to older peers).
+//! Every layer that observes the request appends stage timings relative
+//! to its own span start — timestamps are monotonic `Instant` deltas,
+//! never wall clocks — and the finished [`SpanRecord`] lands in the
+//! layer's [`FlightRecorder`](super::FlightRecorder).
+//!
+//! Tracing is **inert** by construction: ids never enter cache keys,
+//! scheduling decisions, or feedback values, so a traced campaign is
+//! bit-identical to an untraced one (a property test holds this).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::hist::Stage;
+
+/// Span outcome: the request served normally.
+pub const SPAN_OK: u8 = 0;
+/// Span outcome: the request resolved with a classified error.
+pub const SPAN_ERROR: u8 = 1;
+/// Span outcome: admission control shed the request.
+pub const SPAN_SHED: u8 = 2;
+/// Span outcome: the router re-routed or bounced it off a dead shard.
+pub const SPAN_REROUTED: u8 = 3;
+
+pub fn outcome_name(outcome: u8) -> &'static str {
+    match outcome {
+        SPAN_OK => "ok",
+        SPAN_ERROR => "error",
+        SPAN_SHED => "shed",
+        SPAN_REROUTED => "rerouted",
+        _ => "unknown",
+    }
+}
+
+/// Which serving path answered an evaluation.  Codes are wire stable
+/// (they ride span records and the telemetry tail of traced feedback).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum CachePath {
+    /// Not classified (non-eval requests, or decoded from older peers).
+    Unknown = 0,
+    /// Text-level feedback-cache hit.
+    Hit = 1,
+    /// Joined a concurrent identical in-flight evaluation.
+    Follower = 2,
+    /// Semantic decision-cache hit.
+    Decision = 3,
+    /// Delta splice against the incumbent recording.
+    Splice = 4,
+    /// Cold: full simulation (or compile / resolution error).
+    Cold = 5,
+    /// Shed by admission control before evaluating.
+    Shed = 6,
+}
+
+impl CachePath {
+    pub const COUNT: usize = 7;
+
+    pub const ALL: [CachePath; CachePath::COUNT] = [
+        CachePath::Unknown,
+        CachePath::Hit,
+        CachePath::Follower,
+        CachePath::Decision,
+        CachePath::Splice,
+        CachePath::Cold,
+        CachePath::Shed,
+    ];
+
+    pub fn from_code(code: u8) -> CachePath {
+        CachePath::ALL.get(code as usize).copied().unwrap_or(CachePath::Unknown)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CachePath::Unknown => "unknown",
+            CachePath::Hit => "hit",
+            CachePath::Follower => "follower",
+            CachePath::Decision => "decision",
+            CachePath::Splice => "splice",
+            CachePath::Cold => "cold",
+            CachePath::Shed => "shed",
+        }
+    }
+}
+
+/// Per-eval fabric telemetry riding inside
+/// [`SystemFeedback`](crate::feedback::SystemFeedback): where the
+/// serving time went for *this* serving of the request, so an optimizer
+/// (or a human) can tell "the mapper is slow" from "the fabric was
+/// congested".  Never part of feedback equality or caching — two
+/// evaluations of the same mapper are the same result regardless of
+/// queue depth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EvalTelemetry {
+    /// Time queued before a worker picked the job up (0 on synchronous
+    /// and cache-hit paths).
+    pub queue_ns: u64,
+    /// Which serving path answered (a [`CachePath`] code).
+    pub cache_path: u8,
+    /// Pure simulation time of this serving (0 when answered from
+    /// cache).
+    pub sim_ns: u64,
+}
+
+impl EvalTelemetry {
+    pub fn path(&self) -> CachePath {
+        CachePath::from_code(self.cache_path)
+    }
+}
+
+/// One stage's timing inside a [`SpanRecord`]: offset from the span
+/// start and duration, both monotonic nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageSpan {
+    /// Raw [`Stage`] code (kept raw for forward compatibility).
+    pub stage: u8,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// One request's recorded lifecycle: which stages it passed through,
+/// which cache path answered it, how it ended, and the serving wall
+/// time.  Stage durations are disjoint measurements of the same span,
+/// so they sum to at most `total_ns` (modulo measurement jitter).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SpanRecord {
+    /// Client-stamped id (0 for untraced forensic spans).
+    pub trace_id: u64,
+    /// A [`CachePath`] code.
+    pub cache_path: u8,
+    /// One of [`SPAN_OK`] / [`SPAN_ERROR`] / [`SPAN_SHED`] /
+    /// [`SPAN_REROUTED`].
+    pub outcome: u8,
+    /// Span wall time (first observation → resolution).
+    pub total_ns: u64,
+    pub stages: Vec<StageSpan>,
+}
+
+impl SpanRecord {
+    /// One-line render (the flight-recorder dump format).
+    pub fn render(&self) -> String {
+        use super::hist::fmt_ns;
+        let mut line = format!(
+            "trace {:016x} {:<8} path {:<8} total {:>9}",
+            self.trace_id,
+            outcome_name(self.outcome),
+            CachePath::from_code(self.cache_path).name(),
+            fmt_ns(self.total_ns),
+        );
+        for s in &self.stages {
+            line.push_str(&format!(
+                "  {}@+{}/{}",
+                Stage::name_of(s.stage),
+                fmt_ns(s.start_ns),
+                fmt_ns(s.dur_ns),
+            ));
+        }
+        line
+    }
+}
+
+/// Builds one [`SpanRecord`] against a monotonic span epoch.  Stage
+/// offsets are computed from the builder's `t0`, so timestamps are
+/// monotone regardless of which thread observes which stage.
+pub struct SpanBuilder {
+    trace_id: u64,
+    t0: Instant,
+    cache_path: CachePath,
+    outcome: u8,
+    stages: Vec<StageSpan>,
+}
+
+impl SpanBuilder {
+    /// Open a span now; `trace_id` may be 0 (forensic-only span).
+    pub fn begin(trace_id: u64) -> SpanBuilder {
+        SpanBuilder::begin_at(trace_id, Instant::now())
+    }
+
+    /// Open a span whose epoch is an already-taken instant (e.g. the
+    /// moment the request was enqueued), so earlier stages measured
+    /// against that instant stay inside the span's wall time.
+    pub fn begin_at(trace_id: u64, t0: Instant) -> SpanBuilder {
+        SpanBuilder {
+            trace_id,
+            t0,
+            cache_path: CachePath::Unknown,
+            outcome: SPAN_OK,
+            stages: Vec::new(),
+        }
+    }
+
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
+    /// The span epoch (lets callers measure a stage that started at
+    /// span open).
+    pub fn t0(&self) -> Instant {
+        self.t0
+    }
+
+    /// Record a stage that started at `started` (clamped to the span
+    /// epoch) and ran `dur_ns`.
+    pub fn stage(&mut self, stage: Stage, started: Instant, dur_ns: u64) {
+        let start_ns = started.saturating_duration_since(self.t0).as_nanos() as u64;
+        self.stages.push(StageSpan { stage: stage as u8, start_ns, dur_ns });
+    }
+
+    /// Record a stage that started `start_ns` after the span epoch.
+    pub fn stage_at(&mut self, stage: Stage, start_ns: u64, dur_ns: u64) {
+        self.stages.push(StageSpan { stage: stage as u8, start_ns, dur_ns });
+    }
+
+    pub fn cache_path(&mut self, path: CachePath) {
+        self.cache_path = path;
+    }
+
+    pub fn outcome(&mut self, outcome: u8) {
+        self.outcome = outcome;
+    }
+
+    /// Close the span: total wall time is the elapsed monotonic time
+    /// since the span epoch, raised to the stage-duration sum if
+    /// measurement jitter ever put a stage past it — so per-stage
+    /// durations always sum to within the recorded wall time.
+    pub fn finish(self) -> SpanRecord {
+        let stage_sum =
+            self.stages.iter().fold(0u64, |a, s| a.saturating_add(s.dur_ns));
+        let total_ns = (self.t0.elapsed().as_nanos() as u64).max(stage_sum);
+        SpanRecord {
+            trace_id: self.trace_id,
+            cache_path: self.cache_path as u8,
+            outcome: self.outcome,
+            total_ns,
+            stages: self.stages,
+        }
+    }
+}
+
+/// Client-side trace-id allocator: process-unique high bits, one
+/// atomic counter for the low bits, never yields 0 (0 means untraced
+/// on the wire).
+pub struct TraceIdGen {
+    hi: u64,
+    seq: AtomicU64,
+}
+
+impl Default for TraceIdGen {
+    fn default() -> TraceIdGen {
+        TraceIdGen::new()
+    }
+}
+
+impl TraceIdGen {
+    pub fn new() -> TraceIdGen {
+        TraceIdGen {
+            hi: (std::process::id() as u64) << 32,
+            seq: AtomicU64::new(1),
+        }
+    }
+
+    /// Next id; nonzero by construction.
+    pub fn next(&self) -> u64 {
+        let low = self.seq.fetch_add(1, Ordering::Relaxed) & 0xffff_ffff;
+        (self.hi | low).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_path_codes_roundtrip() {
+        for p in CachePath::ALL {
+            assert_eq!(CachePath::from_code(p as u8), p);
+        }
+        assert_eq!(CachePath::from_code(200), CachePath::Unknown);
+    }
+
+    #[test]
+    fn span_builder_produces_monotone_offsets_within_total() {
+        let mut b = SpanBuilder::begin(42);
+        let t0 = b.t0();
+        b.stage(Stage::QueueWait, t0, 100);
+        b.stage_at(Stage::ExecutePlan, 150, 300);
+        b.cache_path(CachePath::Cold);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let span = b.finish();
+        assert_eq!(span.trace_id, 42);
+        assert_eq!(span.cache_path, CachePath::Cold as u8);
+        assert_eq!(span.outcome, SPAN_OK);
+        assert_eq!(span.stages.len(), 2);
+        assert!(span.stages[0].start_ns <= span.stages[1].start_ns);
+        assert!(span.total_ns >= 1_000_000, "slept ≥ 1ms");
+        let render = span.render();
+        assert!(render.contains("path cold"), "{render}");
+        assert!(render.contains("queue@"), "{render}");
+    }
+
+    #[test]
+    fn stage_started_before_the_epoch_clamps_to_zero() {
+        let early = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let mut b = SpanBuilder::begin(1);
+        b.stage(Stage::Admission, early, 10);
+        let span = b.finish();
+        assert_eq!(span.stages[0].start_ns, 0);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let g = TraceIdGen::new();
+        let a = g.next();
+        let b = g.next();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+}

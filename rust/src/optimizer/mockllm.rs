@@ -516,6 +516,7 @@ mod tests {
             line: "Performance Metric: Execution time is 0.5s.".into(),
             value: 2.0,
             profile: None,
+            telemetry: None,
         };
         let fb = enhance(&sys, FeedbackConfig::FULL);
         MockLlm::default().update(&mut g, &info, &fb.text(), &mut Rng::new(7));

@@ -139,6 +139,7 @@ mod tests {
             line: "Performance Metric: Execution time is 1s.".into(),
             value: 1.0,
             profile: None,
+            telemetry: None,
         };
         for _ in 0..20 {
             opt.step(&eval);

@@ -779,6 +779,7 @@ fn batched_and_single_frame_submissions_are_bit_identical() {
             dsl: format!("Task * GPU;\nRegion * * GPU FBMEM;{}\n", "\n".repeat(i)),
             mode: SER,
             priority: PRIORITY_NORMAL,
+            trace_id: 0,
         })
         .collect();
 
@@ -894,6 +895,7 @@ fn routed_campaign_is_bit_identical_and_survives_a_shard_kill() {
         dsl: "Task * GPU;\nRegion * * GPU FBMEM;\n".into(),
         mode: SER,
         priority: PRIORITY_NORMAL,
+        trace_id: 0,
     };
     let names: Vec<&str> = addrs.iter().map(String::as_str).collect();
     let ring = HashRing::build(&names, RING_VNODES);
@@ -1118,4 +1120,65 @@ fn leave_shard_drains_gracefully_and_the_fleet_keeps_serving() {
     for s in servers {
         s.shutdown();
     }
+}
+
+/// PR 10: the request-lifecycle tracing loop over the real wire.  A
+/// tracing client's evaluation answers bit-identically to an untraced
+/// sibling's, comes back carrying the per-eval telemetry rider, and
+/// lands a span in the server's flight recorder — fetched with
+/// `Request::TraceDump` over the same connection — whose per-stage
+/// durations fit inside its recorded wall time and whose serving path
+/// agrees with the rider.  The untraced sibling's replies stay
+/// rider-free, and the server's stats snapshot grows the per-stage
+/// histogram tail once traffic has flowed.
+#[test]
+fn traced_evals_ride_telemetry_and_land_flight_recorder_spans() {
+    let (_service, server, addr) = boot();
+
+    let traced = RemoteEvalClient::connect(&addr).expect("connect traced");
+    traced.set_tracing(true);
+    let untraced = RemoteEvalClient::connect(&addr).expect("connect untraced");
+    let dsl = expert_dsl("circuit").unwrap();
+
+    let fb = traced.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario::named("circuit"),
+        dsl,
+        SER,
+        PRIORITY_NORMAL,
+    );
+    let telemetry = fb.telemetry().expect("traced reply carries the rider");
+    let fb2 = untraced.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario::named("circuit"),
+        dsl,
+        SER,
+        PRIORITY_NORMAL,
+    );
+    assert_eq!(fb2, fb, "tracing must not change the answer");
+    assert!(fb2.telemetry().is_none(), "untraced reply keeps no rider");
+
+    let spans = traced.trace_dump().expect("trace dump over the wire");
+    let span = spans
+        .iter()
+        .find(|s| s.trace_id != 0)
+        .expect("the traced eval must land a span in the ring");
+    assert!(!span.stages.is_empty(), "a span names its stages");
+    let sum: u64 = span.stages.iter().map(|st| st.dur_ns).sum();
+    assert!(
+        sum <= span.total_ns,
+        "stage durations ({sum}ns) must fit the wall time ({}ns)",
+        span.total_ns
+    );
+    assert_eq!(
+        span.cache_path, telemetry.cache_path,
+        "rider and span must agree on the serving path"
+    );
+
+    let snap = traced.stats().expect("stats");
+    assert!(!snap.stage_hists.is_empty(), "stats grow the histogram tail");
+
+    drop(traced);
+    drop(untraced);
+    server.shutdown();
 }

@@ -12,7 +12,8 @@ use mapperopt::apps::{
     Metric, RegionDecl, RegionReq, TaskDag, TaskDecl,
 };
 use mapperopt::coordinator::{
-    PrioritySnapshot, ShardSnapshot, SpecSnapshot, StatsSnapshot,
+    PrioritySnapshot, ShardContribution, ShardSnapshot, SpecSnapshot,
+    StatsSnapshot,
 };
 use mapperopt::dsl::{MappingPolicy, TaskCtx};
 use mapperopt::feedback::SystemFeedback;
@@ -25,6 +26,9 @@ use mapperopt::net::{
     ChaosConfig, ChaosProxy, EvalServer, HashRing, RemoteEvalClient,
     RetryPolicy, RING_VNODES,
 };
+use mapperopt::obs::{
+    EvalTelemetry, HistSnapshot, SpanRecord, Stage, StageHistSnapshot, StageSpan,
+};
 use mapperopt::optimizer::{agent::random_index_gene, AgentGenome, AppInfo, LayoutGene};
 use mapperopt::sim::{
     execute_plan, execute_plan_delta, execute_plan_recorded, resolve_decisions,
@@ -33,6 +37,7 @@ use mapperopt::sim::{
 };
 use mapperopt::util::proptest::{check, env_cases};
 use mapperopt::util::rng::Rng;
+use mapperopt::util::stats::percentile_sorted;
 
 fn spec() -> MachineSpec {
     MachineSpec::p100_cluster()
@@ -603,12 +608,59 @@ fn rand_feedback(rng: &mut Rng) -> SystemFeedback {
             line: rand_string(rng),
             value: rand_f64(rng),
             profile: None,
+            telemetry: None,
         },
         _ => SystemFeedback::Performance {
             line: rand_string(rng),
             value: rand_f64(rng),
             profile: Some(rand_profile(rng)),
+            telemetry: rand_telemetry(rng),
         },
+    }
+}
+
+fn rand_telemetry(rng: &mut Rng) -> Option<EvalTelemetry> {
+    if rng.chance(0.5) {
+        None
+    } else {
+        Some(EvalTelemetry {
+            queue_ns: rng.next_u64() >> 1,
+            // raw codes, including ones this build does not know: the
+            // field is a pass-through u8 on the wire
+            cache_path: rng.below(16) as u8,
+            sim_ns: rng.next_u64() >> 1,
+        })
+    }
+}
+
+fn rand_hists(rng: &mut Rng) -> Vec<StageHistSnapshot> {
+    (0..rng.below(4))
+        .map(|_| StageHistSnapshot {
+            stage: rng.below(16) as u8,
+            hist: HistSnapshot {
+                // nonzero bucket counts so the trailing-trim invariant
+                // of locally-built snapshots is matched
+                buckets: (0..rng.below(12))
+                    .map(|_| 1 + (rng.next_u64() >> 1))
+                    .collect(),
+            },
+        })
+        .collect()
+}
+
+fn rand_span(rng: &mut Rng) -> SpanRecord {
+    SpanRecord {
+        trace_id: if rng.chance(0.3) { 0 } else { rng.next_u64() },
+        cache_path: rng.below(16) as u8,
+        outcome: rng.below(4) as u8,
+        total_ns: rng.next_u64() >> 1,
+        stages: (0..rng.below(5))
+            .map(|_| StageSpan {
+                stage: rng.below(16) as u8,
+                start_ns: rng.next_u64() >> 1,
+                dur_ns: rng.next_u64() >> 1,
+            })
+            .collect(),
     }
 }
 
@@ -643,11 +695,14 @@ fn rand_eval(rng: &mut Rng) -> WireEvalRequest {
         dsl: rand_string(rng),
         mode: rand_mode(rng),
         priority: rng.below(256) as u8,
+        // 0 (untraced; the field is elided on the wire) and arbitrary
+        // nonzero ids both roundtrip
+        trace_id: if rng.chance(0.5) { 0 } else { rng.next_u64() },
     }
 }
 
 fn rand_request(rng: &mut Rng) -> Request {
-    match rng.below(7) {
+    match rng.below(8) {
         0 => Request::Ping,
         1 => Request::Eval(rand_eval(rng)),
         2 => Request::RegisterSpec {
@@ -657,6 +712,7 @@ fn rand_request(rng: &mut Rng) -> Request {
         3 => Request::GetSpec { name: rand_string(rng) },
         4 => Request::Stats,
         5 => Request::Summary,
+        6 => Request::TraceDump,
         // never empty: empty batches are rejected by the codec itself
         _ => Request::EvalBatch((0..1 + rng.below(5)).map(|_| rand_eval(rng)).collect()),
     }
@@ -718,6 +774,7 @@ fn rand_snapshot(rng: &mut Rng) -> StatsSnapshot {
                 max_queue_depth: rng.below(1000) as u64,
             })
             .collect(),
+        stage_hists: rand_hists(rng),
     }
 }
 
@@ -742,7 +799,10 @@ fn rand_batch_item(rng: &mut Rng) -> BatchItem {
 }
 
 fn rand_response(rng: &mut Rng) -> Response {
-    match rng.below(7) {
+    match rng.below(8) {
+        7 => Response::TraceDump(
+            (0..rng.below(5)).map(|_| rand_span(rng)).collect(),
+        ),
         0 => Response::Pong,
         1 => Response::Feedback(rand_feedback(rng)),
         6 => Response::FeedbackBatch(
@@ -803,6 +863,11 @@ fn property_wire_codec_roundtrips_bit_identically() {
 fn property_fleet_stats_tail_zero_fill_and_trailing() {
     check(0xF1EE7, env_cases(200), |rng: &mut Rng| {
         let mut snap = rand_snapshot(rng);
+        // the histogram tail (PR 10) sits *after* the shard section;
+        // keep it empty here so the cut arithmetic below isolates the
+        // shard section exactly (the histogram tail has its own
+        // cut/zero-fill property next to it)
+        snap.stage_hists.clear();
         if snap.shards.is_empty() {
             snap.shards.push(ShardSnapshot {
                 addr: rand_string(rng),
@@ -834,18 +899,225 @@ fn property_fleet_stats_tail_zero_fill_and_trailing() {
             );
         }
 
-        // bytes past the section violate the total-decode rule
+        // bytes past the shard section land in the histogram tail slot
+        // (PR 10): random garbage there parses as a *claimed* histogram
+        // section and dies inside it (Truncated/Invalid), or — when it
+        // happens to spell a well-formed tail — decodes to extra
+        // histograms on the same snapshot.  What it must never do is
+        // silently change any field the original snapshot carried.
         let extra = 1 + rng.below(8);
         let mut trailing = bytes.clone();
         trailing.extend((0..extra).map(|_| rng.below(256) as u8));
-        match Response::decode(&trailing).unwrap_err() {
-            DecodeError::Trailing(n) => assert_eq!(n, extra),
-            // random trailing bytes may be swallowed into the section
-            // only if they extend a *shorter* claimed shard count --
-            // impossible here: the count is already fully consumed
+        match Response::decode(&trailing) {
+            Err(
+                DecodeError::Truncated
+                | DecodeError::Trailing(_)
+                | DecodeError::Invalid(_),
+            ) => {}
+            Ok(Response::Stats(got)) => {
+                let histless =
+                    StatsSnapshot { stage_hists: Vec::new(), ..got.clone() };
+                assert_eq!(
+                    histless, snap,
+                    "garbage tail changed a non-histogram field"
+                );
+            }
             other => panic!("trailing bytes produced {other:?}"),
         }
     });
+}
+
+/// The histogram tail (PR 10) obeys the same tail rules as the shard
+/// section it follows: cutting it off at its start decodes to the same
+/// snapshot with no histograms (the zero-fill view a PR 9 peer
+/// produces), any cut *inside* it classifies as truncation, and a
+/// snapshot with neither shards nor histograms elides both sections so
+/// single-server snapshots stay byte-identical with older peers.
+#[test]
+fn property_stats_hist_tail_zero_fill_and_cut() {
+    check(0x0B5E7, env_cases(200), |rng: &mut Rng| {
+        let mut snap = rand_snapshot(rng);
+        // a populated shard section in front keeps the hist section the
+        // sole tail, so the cut arithmetic isolates it exactly
+        if snap.shards.is_empty() {
+            snap.shards.push(ShardSnapshot {
+                addr: rand_string(rng),
+                state: rng.below(3) as u8,
+                ..ShardSnapshot::default()
+            });
+        }
+        if snap.stage_hists.is_empty() {
+            snap.stage_hists = rand_hists(rng);
+            snap.stage_hists.push(StageHistSnapshot {
+                stage: rng.below(12) as u8,
+                hist: HistSnapshot::of_samples(&[1 + (rng.next_u64() >> 16)]),
+            });
+        }
+        let bytes = Response::Stats(snap.clone()).encode();
+
+        let histless =
+            StatsSnapshot { stage_hists: Vec::new(), ..snap.clone() };
+        let histless_bytes = Response::Stats(histless.clone()).encode();
+        let section = bytes.len() - histless_bytes.len();
+        assert!(section > 0, "a populated hist tail must extend the payload");
+        assert_eq!(
+            &bytes[..histless_bytes.len()],
+            &histless_bytes[..],
+            "the hist tail must be a pure suffix"
+        );
+
+        // zero-fill: a pre-histogram peer's view (tail cut at its start)
+        match Response::decode(&bytes[..bytes.len() - section]).unwrap() {
+            Response::Stats(got) => assert_eq!(got, histless),
+            other => panic!("wrong variant {}", other.kind_name()),
+        }
+
+        // truncation inside the section is corruption, never zero-fill
+        let cut = 1 + rng.below(section);
+        if cut < section {
+            let err = Response::decode(&bytes[..bytes.len() - cut]).unwrap_err();
+            assert!(
+                matches!(err, DecodeError::Truncated),
+                "cut {cut}/{section}: unexpected {err:?}"
+            );
+        }
+    });
+}
+
+/// The log2-bucket histogram percentile uses the same nearest-rank
+/// rule as `percentile_sorted` and reports the containing bucket's
+/// inclusive upper bound — so on identical samples the two agree to
+/// within one bucket width: `exact <= hist <= 2*exact + 1`.
+#[test]
+fn property_hist_percentile_within_one_bucket_of_exact() {
+    check(0x9C71, env_cases(150), |rng: &mut Rng| {
+        let n = 1 + rng.below(300);
+        // keep samples under 2^46 so the top clamp bucket (whose upper
+        // bound under-reports) stays out of play
+        let shift = 18 + rng.below(40);
+        let samples: Vec<u64> =
+            (0..n).map(|_| rng.next_u64() >> shift).collect();
+        let h = HistSnapshot::of_samples(&samples);
+        assert_eq!(h.count(), n as u64);
+        let mut sorted: Vec<f64> = samples.iter().map(|&s| s as f64).collect();
+        sorted.sort_by(f64::total_cmp);
+        for p in [0.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            let exact = percentile_sorted(&sorted, p);
+            let got = h.percentile(p) as f64;
+            assert!(
+                exact <= got && got <= 2.0 * exact + 1.0,
+                "p{p}: exact {exact} vs hist {got} (n={n})"
+            );
+        }
+    });
+}
+
+/// Fleet aggregation of stage histograms is exact: bucket-wise merging
+/// of per-shard histograms equals histogramming the concatenated
+/// samples directly — no count or resolution is lost in transit, for
+/// any shard count and any sample magnitudes (clamp bucket included).
+#[test]
+fn property_fleet_hist_merge_equals_concatenated_samples() {
+    check(0xF7EE, env_cases(150), |rng: &mut Rng| {
+        let stages = [Stage::QueueWait, Stage::ExecutePlan, Stage::ClientSend];
+        let k = 1 + rng.below(4);
+        let mut all: Vec<Vec<u64>> = vec![Vec::new(); stages.len()];
+        let parts: Vec<ShardContribution> = (0..k)
+            .map(|_| {
+                let mut snapshot = StatsSnapshot::default();
+                for (si, st) in stages.iter().enumerate() {
+                    let samples: Vec<u64> = (0..rng.below(40))
+                        .map(|_| rng.next_u64() >> (1 + rng.below(60)))
+                        .collect();
+                    all[si].extend_from_slice(&samples);
+                    if !samples.is_empty() {
+                        snapshot.stage_hists.push(StageHistSnapshot {
+                            stage: *st as u8,
+                            hist: HistSnapshot::of_samples(&samples),
+                        });
+                    }
+                }
+                ShardContribution { snapshot, ..ShardContribution::default() }
+            })
+            .collect();
+        let fleet = StatsSnapshot::aggregate_fleet(&parts);
+        for (si, st) in stages.iter().enumerate() {
+            let want = HistSnapshot::of_samples(&all[si]);
+            let got = fleet
+                .stage_hists
+                .iter()
+                .find(|h| h.stage == *st as u8)
+                .map(|h| h.hist.clone())
+                .unwrap_or_default();
+            assert_eq!(got, want, "stage {} merge drift", st.name());
+            assert_eq!(got.count(), all[si].len() as u64);
+        }
+    });
+}
+
+/// Tracing is inert.  On the wire: a traced eval's encoding is the
+/// untraced encoding plus exactly the 8-byte id tail, so an old
+/// decoder's truncating view of a traced request *is* the untraced
+/// request (zero-fill), and ids roundtrip losslessly.  End-to-end: the
+/// same evaluation answered through a tracing client and an untraced
+/// one returns bit-identical feedback.
+#[test]
+fn property_tracing_is_inert() {
+    use mapperopt::coordinator::{EvalService, PRIORITY_NORMAL};
+    use mapperopt::mapping::expert_dsl;
+
+    let service = Arc::new(EvalService::new(2, 16));
+    let server = EvalServer::bind("127.0.0.1:0", Arc::clone(&service))
+        .expect("bind loopback");
+    let dsl = expert_dsl("circuit").unwrap();
+    let untraced = RemoteEvalClient::connect(server.addr()).expect("connect");
+    let traced = RemoteEvalClient::connect(server.addr()).expect("connect");
+    traced.set_tracing(true);
+    let want = untraced.evaluate(
+        SpecRef::Name("p100_cluster".into()),
+        Scenario::named("circuit"),
+        dsl,
+        ExecMode::Serialized,
+        PRIORITY_NORMAL,
+    );
+
+    check(0x7AC3, env_cases(40), |rng: &mut Rng| {
+        // wire-level: the trace id is a pure tail field
+        let mut q = rand_eval(rng);
+        q.trace_id = 0;
+        let plain = Request::Eval(q.clone()).encode();
+        q.trace_id = 1 + (rng.next_u64() >> 1);
+        let stamped = Request::Eval(q.clone()).encode();
+        assert_eq!(stamped.len(), plain.len() + 8, "the id tail is 8 bytes");
+        assert_eq!(&stamped[..plain.len()], &plain[..], "prefix must match");
+        assert_eq!(
+            Request::decode(&stamped).unwrap(),
+            Request::Eval(q.clone()),
+            "id roundtrip"
+        );
+        // an old decoder's (truncating) view of the traced bytes is
+        // exactly the untraced request
+        let mut q0 = q.clone();
+        q0.trace_id = 0;
+        assert_eq!(
+            Request::decode(&stamped[..plain.len()]).unwrap(),
+            Request::Eval(q0),
+            "zero-fill view"
+        );
+        // end-to-end: a trace id changes no answer
+        let fb = traced.evaluate(
+            SpecRef::Name("p100_cluster".into()),
+            Scenario::named("circuit"),
+            dsl,
+            ExecMode::Serialized,
+            PRIORITY_NORMAL,
+        );
+        assert_eq!(fb, want, "a trace id changed the answer");
+    });
+
+    drop(traced);
+    drop(untraced);
+    server.shutdown();
 }
 
 /// Consistent-hash routing is stable under membership churn: for a

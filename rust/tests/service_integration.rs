@@ -146,6 +146,7 @@ fn shared_cache_stress_accounting() {
                         dsl: dsl.clone(),
                         mode: SER,
                         priority: PRIORITY_NORMAL,
+                        trace_id: 0,
                     });
                     let fb = if i % 2 == 0 {
                         ticket.wait()
